@@ -1,0 +1,227 @@
+"""AOT compile path: lower the L1/L2 graphs once to HLO *text* artifacts.
+
+Run by ``make artifacts``; Python never executes at Rust runtime. Interchange
+format is HLO text (NOT a serialized HloModuleProto): jax >= 0.5 emits protos
+with 64-bit instruction ids which xla_extension 0.5.1 (the version behind the
+published ``xla`` 0.1.6 crate) rejects; the text parser reassigns ids and
+round-trips cleanly.
+
+Emitted per preset (see PRESETS):
+
+  gate          softmax(A @ Wg) over a rank's (S_r, H) tokens -> (S_r, E)
+  ffn_block     fused per-tile expert FFN: (C_buf, H) -> (C_buf, H)
+  gemm0_tile    t1: relu(A@W1+b1), one (bM, H)x(H, bN) tile
+  gemm1_tile    t2: A@W2+b2, one (bM, D)x(D, bN) tile
+  combine_tile  t3: acc + scale*x, one (bM, H) tile
+  moe_layer     monolithic full-layer reference over all ranks' tokens
+
+plus ``manifest.json`` describing shapes so the Rust ArtifactStore can load
+and type-check everything without re-deriving config math.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import combine as combine_k
+from .kernels import ffn as ffn_k
+from .kernels import gate as gate_k
+from .kernels.ref import expert_capacity
+from . import model
+
+F32 = jnp.float32
+
+
+# Preset configs. `default` is the e2e/integration config; `tiny` keeps CI
+# and pytest fast; `perf` is the larger shape the perf pass measures.
+PRESETS = {
+    "tiny": dict(h=64, d=128, e=8, k=2, bm=32, bn=32, ranks=2, s_rank=128, cf=1.0),
+    "default": dict(h=256, d=512, e=16, k=2, bm=128, bn=64, ranks=4, s_rank=512, cf=1.0),
+    "perf": dict(h=512, d=1024, e=16, k=2, bm=128, bn=64, ranks=4, s_rank=1024, cf=1.0),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def build_preset(name: str, cfg: dict, out_dir: str) -> dict:
+    h, d, e, k = cfg["h"], cfg["d"], cfg["e"], cfg["k"]
+    bm, bn, ranks, s_rank = cfg["bm"], cfg["bn"], cfg["ranks"], cfg["s_rank"]
+    cap = expert_capacity(s_rank, e, k, cfg["cf"], bm)
+    s_total = ranks * s_rank
+    c_buf = ranks * cap  # rows an expert owner stages per local expert
+
+    entries = {}
+
+    def emit(art_name, lowered, inputs, outputs):
+        fname = f"{name}_{art_name}.hlo.txt"
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries[art_name] = {
+            "file": fname,
+            "inputs": [[n, list(s)] for n, s in inputs],
+            "outputs": [[n, list(s)] for n, s in outputs],
+        }
+        print(f"  {fname:40s} {len(text):>9} chars")
+
+    # gate over one rank's tokens
+    emit(
+        "gate",
+        jax.jit(lambda a, wg: gate_k.gate_scores(a, wg, bm=bm)).lower(
+            spec(s_rank, h), spec(h, e)
+        ),
+        [("a", (s_rank, h)), ("wg", (h, e))],
+        [("scores", (s_rank, e))],
+    )
+
+    # fused FFN over one local expert's staged buffer (all peers' tiles)
+    emit(
+        "ffn_block",
+        jax.jit(
+            lambda x, w1, b1, w2, b2: ffn_k.ffn_block(x, w1, b1, w2, b2, bm=bm)
+        ).lower(spec(c_buf, h), spec(h, d), spec(d), spec(d, h), spec(h)),
+        [("x", (c_buf, h)), ("w1", (h, d)), ("b1", (d,)), ("w2", (d, h)), ("b2", (h,))],
+        [("y", (c_buf, h))],
+    )
+
+    # single-tile fused FFN (the paper's per-tile task unit)
+    emit(
+        "ffn_tile",
+        jax.jit(
+            lambda x, w1, b1, w2, b2: ffn_k.ffn_block(x, w1, b1, w2, b2, bm=bm)
+        ).lower(spec(bm, h), spec(h, d), spec(d), spec(d, h), spec(h)),
+        [("x", (bm, h)), ("w1", (h, d)), ("b1", (d,)), ("w2", (d, h)), ("b2", (h,))],
+        [("y", (bm, h))],
+    )
+
+    # split-mode tiles (GEMM0 / GEMM1 chain)
+    emit(
+        "gemm0_tile",
+        jax.jit(lambda x, w, b: ffn_k.gemm0(x, w, b, bm=bm, bn=bn)).lower(
+            spec(bm, h), spec(h, bn), spec(bn)
+        ),
+        [("x", (bm, h)), ("w1c", (h, bn)), ("b1c", (bn,))],
+        [("y", (bm, bn))],
+    )
+    emit(
+        "gemm1_tile",
+        jax.jit(lambda x, w, b: ffn_k.gemm1(x, w, b, bm=bm, bn=bn)).lower(
+            spec(bm, d), spec(d, bn), spec(bn)
+        ),
+        [("h", (bm, d)), ("w2c", (d, bn)), ("b2c", (bn,))],
+        [("y", (bm, bn))],
+    )
+
+    emit(
+        "combine_tile",
+        jax.jit(lambda acc, x, s: combine_k.combine(acc, x, s, bm=bm)).lower(
+            spec(bm, h), spec(bm, h), spec(bm, 1)
+        ),
+        [("acc", (bm, h)), ("x", (bm, h)), ("scale", (bm, 1))],
+        [("y", (bm, h))],
+    )
+
+    # training step (paper §5 future work): MoE + readout, MSE, SGD.
+    # Differentiable jnp formulation; batch = one rank's tokens.
+    from . import train as train_mod
+
+    bsz = s_rank
+    cap_b = expert_capacity(bsz, e, k, cfg["cf"], bm)
+    step = lambda wg_, w1_, b1_, w2_, b2_, hw_, hb_, x_, y_: train_mod.train_step_flat(
+        (wg_, w1_, b1_, w2_, b2_, hw_, hb_), x_, y_,
+        h=h, d=d, e=e, k=k, capacity=cap_b, lr=0.05,
+    )
+    emit(
+        "train_step",
+        jax.jit(step).lower(
+            spec(h, e), spec(e, h, d), spec(e, d), spec(e, d, h), spec(e, h),
+            spec(h, 1), spec(1), spec(bsz, h), spec(bsz, 1),
+        ),
+        [
+            ("wg", (h, e)), ("w1", (e, h, d)), ("b1", (e, d)),
+            ("w2", (e, d, h)), ("b2", (e, h)), ("head_w", (h, 1)), ("head_b", (1,)),
+            ("x", (bsz, h)), ("y", (bsz, 1)),
+        ],
+        [
+            ("loss", (1,)), ("wg", (h, e)), ("w1", (e, h, d)), ("b1", (e, d)),
+            ("w2", (e, d, h)), ("b2", (e, h)), ("head_w", (h, 1)), ("head_b", (1,)),
+        ],
+    )
+
+    # monolithic reference layer over every rank's tokens
+    emit(
+        "moe_layer",
+        jax.jit(
+            lambda a, wg, w1, b1, w2, b2: model.moe_layer(
+                a, wg, w1, b1, w2, b2, k=k, capacity=cap, s_rank=s_rank, bm=bm
+            )
+        ).lower(
+            spec(s_total, h),
+            spec(h, e),
+            spec(e, h, d),
+            spec(e, d),
+            spec(e, d, h),
+            spec(e, h),
+        ),
+        [
+            ("a", (s_total, h)),
+            ("wg", (h, e)),
+            ("w1", (e, h, d)),
+            ("b1", (e, d)),
+            ("w2", (e, d, h)),
+            ("b2", (e, h)),
+        ],
+        [("out", (s_total, h))],
+    )
+
+    return {
+        "config": {
+            "h": h, "d": d, "e": e, "k": k, "bm": bm, "bn": bn,
+            "ranks": ranks, "s_rank": s_rank, "s_total": s_total,
+            "capacity": cap, "capacity_factor": cfg["cf"],
+        },
+        "artifacts": entries,
+    }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument(
+        "--presets", default="tiny,default", help="comma list or 'all'"
+    )
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = list(PRESETS) if args.presets == "all" else args.presets.split(",")
+
+    manifest = {"format": 1, "presets": {}}
+    for name in names:
+        print(f"preset {name}: {PRESETS[name]}")
+        manifest["presets"][name] = build_preset(name, PRESETS[name], args.out_dir)
+
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

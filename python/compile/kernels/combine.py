@@ -1,0 +1,40 @@
+"""L1 Pallas kernel: the expert-combine task t3 (paper §3.1).
+
+  t3 = (M, hadamard, id):  C <- A ⊙ S + C
+
+i.e. a scale-and-accumulate of an expert-output tile into the token output
+matrix, where S broadcasts a per-token combine weight g/C_i across the
+embedding dimension. One grid step handles one (bM, H) tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(acc_ref, x_ref, scale_ref, out_ref):
+    out_ref[...] = acc_ref[...] + x_ref[...] * scale_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def combine(acc: jax.Array, x: jax.Array, scale: jax.Array, bm: int = 128):
+    """acc + scale * x with acc, x: (M, H); scale: (M, 1) -> (M, H) f32."""
+    m, h = acc.shape
+    assert x.shape == (m, h) and scale.shape == (m, 1)
+    assert m % bm == 0, f"M={m} not a multiple of bm={bm}"
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, h), jnp.float32),
+        interpret=True,
+    )(acc.astype(jnp.float32), x.astype(jnp.float32), scale.astype(jnp.float32))

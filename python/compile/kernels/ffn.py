@@ -1,0 +1,108 @@
+"""L1 Pallas kernels: expert FFN GEMMs with fused epilogues.
+
+These are the paper's Processor compute tasks (§3.1):
+
+  t1 = (M, ·, relu):   C1 <- relu(A @ W1 + b1)      — ``gemm0``
+  t2 = (M, ·, id):     C2 <- C1 @ W2 + b2           — ``gemm1``
+  fused FFN block:     C  <- relu(A@W1+b1)@W2 + b2  — ``ffn_block``
+
+Tiling follows the paper's (bM, bN) = (128, 64) task granularity: ``gemm0``
+and ``gemm1`` produce one (bM, bN) output tile per grid step with the full
+K dimension VMEM-resident (K = H or D; at the default config a tile's VMEM
+footprint is (bM*K + K*bN + bM*bN) * 4B — see DESIGN.md §9). ``ffn_block``
+is the fused per-tile task used by the coordinator's ``fused`` task-graph
+mode: one grid step per (bM, H) token tile, both weight matrices resident.
+
+Epilogues (activation, bias add) are applied to the accumulator registers
+before the single write-back — this is exactly the paper's fused-task
+formulation F_t(A,B,C,D) = phi(A*B + D).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_epilogue_kernel(x_ref, w_ref, b_ref, out_ref, *, activation: str):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    out_ref[...] = acc
+
+
+def _tiled_gemm(x, w, b, bm: int, bn: int, activation: str):
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2, f"K mismatch {kdim} vs {k2}"
+    assert m % bm == 0 and n % bn == 0, f"({m},{n}) not tileable by ({bm},{bn})"
+    kernel = functools.partial(_gemm_epilogue_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, kdim), lambda i, j: (i, 0)),
+            pl.BlockSpec((kdim, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32), b.reshape(1, -1).astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def gemm0(x: jax.Array, w1: jax.Array, b1: jax.Array, bm: int = 128, bn: int = 64):
+    """Task t1: relu(x @ W1 + b1). x: (M, H), W1: (H, D) -> (M, D)."""
+    return _tiled_gemm(x, w1, b1, bm, bn, "relu")
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def gemm1(h: jax.Array, w2: jax.Array, b2: jax.Array, bm: int = 128, bn: int = 64):
+    """Task t2: h @ W2 + b2. h: (M, D), W2: (D, H) -> (M, H)."""
+    return _tiled_gemm(h, w2, b2, bm, bn, "identity")
+
+
+def _ffn_block_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, out_ref):
+    h = jnp.dot(x_ref[...], w1_ref[...], preferred_element_type=jnp.float32)
+    h = jnp.maximum(h + b1_ref[...], 0.0)
+    y = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    out_ref[...] = y + b2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def ffn_block(x, w1, b1, w2, b2, bm: int = 128):
+    """Fused per-tile FFN: relu(x@W1+b1)@W2+b2 over (bm, H) token tiles.
+
+    x: (M, H); W1: (H, D); W2: (D, H). M must be a multiple of bm. The
+    intermediate (bm, D) activation never leaves VMEM — the two MXU matmuls
+    and both epilogues fuse into one task, which is the coordinator's
+    ``fused`` task-graph mode unit of work.
+    """
+    m, hdim = x.shape
+    _, d = w1.shape
+    assert m % bm == 0, f"M={m} not a multiple of bm={bm}"
+    return pl.pallas_call(
+        _ffn_block_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, hdim), lambda i: (i, 0)),
+            pl.BlockSpec((hdim, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, hdim), lambda i: (0, 0)),
+            pl.BlockSpec((1, hdim), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, hdim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, hdim), jnp.float32),
+        interpret=True,
+    )(
+        x.astype(jnp.float32),
+        w1.astype(jnp.float32),
+        b1.reshape(1, -1).astype(jnp.float32),
+        w2.astype(jnp.float32),
+        b2.reshape(1, -1).astype(jnp.float32),
+    )

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: the paper's FusedGate (Algorithm 1, line 1).
+
+Computes gate scores G_phi = softmax(A @ Wg) tile-by-tile over the sequence
+dimension. The top-k selection and routing-table construction (T_phi) happen
+at L2/L3 where the dynamic shapes live; the hot arithmetic — the (bM, H) x
+(H, E) logit GEMM fused with a row softmax epilogue — is this kernel.
+
+TPU mapping (DESIGN.md §2): one grid step loads a (bM, H) token tile and the
+full (H, E) gate matrix into VMEM, runs the MXU matmul, applies the softmax
+epilogue in-register, and writes the (bM, E) score tile. Gate weights are
+tiny (H*E floats), so keeping them VMEM-resident across grid steps is the
+right schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gate_kernel(a_ref, wg_ref, out_ref):
+    """One (bM, H) tile -> (bM, E) softmax scores."""
+    logits = jnp.dot(a_ref[...], wg_ref[...], preferred_element_type=jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    out_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def gate_scores(a: jax.Array, wg: jax.Array, bm: int = 128) -> jax.Array:
+    """softmax(A @ Wg) with A: (S, H), Wg: (H, E) -> (S, E) f32.
+
+    S must be a multiple of bm (callers pad the token matrix; see the
+    in-place padding discussion in the paper §3.2.1).
+    """
+    s, h = a.shape
+    h2, e = wg.shape
+    assert h == h2, f"H mismatch {h} vs {h2}"
+    assert s % bm == 0, f"S={s} not a multiple of bm={bm}"
+    return pl.pallas_call(
+        _gate_kernel,
+        grid=(s // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, h), lambda i: (i, 0)),
+            pl.BlockSpec((h, e), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, e), jnp.float32),
+        interpret=True,  # CPU-PJRT execution; Mosaic lowering is TPU-only
+    )(a.astype(jnp.float32), wg.astype(jnp.float32))
+
+
+def topk_route(scores: jax.Array, k: int):
+    """Top-k expert selection from gate scores (ties -> lower index).
+
+    Build-time helper used by the L2 graph; returns (indices (S,k) i32,
+    weights (S,k) f32).
+
+    Implemented as k rounds of argmax+mask rather than ``jax.lax.top_k``:
+    the TopK HLO op carries a ``largest=`` attribute that the pinned
+    xla_extension 0.5.1 text parser rejects, while argmax lowers to plain
+    reduce ops that round-trip cleanly. ``jnp.argmax`` returns the first
+    (lowest-index) maximum, matching lax.top_k tie-breaking.
+    """
+    s, e = scores.shape
+    masked = scores
+    idxs, ws = [], []
+    for _ in range(k):
+        idx = jnp.argmax(masked, axis=-1)
+        w = jnp.take_along_axis(masked, idx[:, None], axis=-1)[:, 0]
+        idxs.append(idx.astype(jnp.int32))
+        ws.append(w.astype(jnp.float32))
+        masked = masked.at[jnp.arange(s), idx].set(-jnp.inf)
+    return jnp.stack(idxs, axis=-1), jnp.stack(ws, axis=-1)

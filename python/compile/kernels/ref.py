@@ -1,0 +1,152 @@
+"""Pure-jnp / numpy reference oracle for every FlashDMoE compute operator.
+
+This module is the single source of numerical truth shared by
+
+  * the Pallas kernels (L1)  — pytest asserts kernel == ref,
+  * the JAX model graph (L2) — pytest asserts model == ref_moe_forward,
+  * the Rust coordinator (L3) — the monolithic ``moe_layer`` HLO artifact
+    (built from the L2 graph) is executed via PJRT and compared against the
+    distributed Rust forward pass.
+
+Numerics contract (DESIGN.md §4):
+
+  * gate: row softmax over E logits (max-subtracted, f32), top-k by score,
+    ties broken toward the lower expert index (== ``jax.lax.top_k``).
+  * combine: h_i = sum_k (g_ik / C_i) * h_i^k with C_i = sum_k g_ik over the
+    token's top-k *regardless of drops*; dropped experts contribute zero.
+  * capacity: per (source rank, expert); slot order = token index order;
+    a routed pair is dropped when its slot index >= capacity.
+  * FFN: relu(x @ W1 + b1) @ W2 + b2, all f32.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def softmax(x: np.ndarray) -> np.ndarray:
+    """Row softmax, numerically stable, f32."""
+    x = x.astype(np.float32)
+    m = x.max(axis=-1, keepdims=True)
+    e = np.exp(x - m)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def ref_gate(a: np.ndarray, wg: np.ndarray) -> np.ndarray:
+    """Gate scores G_phi in R^{S x E}: softmax(A @ Wg)."""
+    logits = a.astype(np.float32) @ wg.astype(np.float32)
+    return softmax(logits)
+
+
+def ref_topk(scores: np.ndarray, k: int):
+    """Top-k experts per token by score, ties -> lower expert index.
+
+    Returns (indices, weights), both (S, k). Matches jax.lax.top_k ordering
+    (descending value, ascending index among equals).
+    """
+    # argsort on index-ordered array with a stable sort gives exactly
+    # lax.top_k tie-breaking.
+    order = np.argsort(-scores, axis=-1, kind="stable")
+    idx = order[:, :k]
+    w = np.take_along_axis(scores, idx, axis=-1)
+    return idx.astype(np.int32), w.astype(np.float32)
+
+
+def ref_ffn(x: np.ndarray, w1, b1, w2, b2) -> np.ndarray:
+    """Position-wise expert FFN: relu(x@W1+b1)@W2+b2 (paper eq. 1)."""
+    h = np.maximum(x.astype(np.float32) @ w1.astype(np.float32) + b1, 0.0)
+    return h @ w2.astype(np.float32) + b2
+
+
+def ref_gemm0(x: np.ndarray, w1, b1) -> np.ndarray:
+    """First FFN GEMM with fused ReLU epilogue (task t1)."""
+    return np.maximum(x.astype(np.float32) @ w1.astype(np.float32) + b1, 0.0)
+
+
+def ref_gemm1(h: np.ndarray, w2, b2) -> np.ndarray:
+    """Second FFN GEMM with identity epilogue (task t2)."""
+    return h.astype(np.float32) @ w2.astype(np.float32) + b2
+
+
+def ref_combine(acc: np.ndarray, x: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    """Expert-combine task t3: acc + scale * x (Hadamard-accumulate)."""
+    return acc.astype(np.float32) + scale.astype(np.float32) * x.astype(np.float32)
+
+
+def expert_capacity(s_rank: int, n_experts: int, k: int, factor: float, bm: int) -> int:
+    """Aligned per-(source rank, expert) capacity (paper §3.2.1).
+
+    raw = ceil(S_r * k / E * factor), then upscaled to max(raw, bM) and
+    rounded up to a multiple of bM so remote tile reads are aligned.
+    """
+    raw = math.ceil(s_rank * k / n_experts * factor)
+    cap = max(raw, bm)
+    return ((cap + bm - 1) // bm) * bm
+
+
+def ref_route(scores: np.ndarray, k: int, capacity: int, s_rank: int):
+    """Routing tables for all tokens, capacity applied per (source rank, expert).
+
+    Args:
+      scores: (S_total, E) gate scores; tokens [r*s_rank, (r+1)*s_rank) belong
+        to source rank r.
+      capacity: aligned per-(rank, expert) capacity.
+
+    Returns:
+      idx:  (S_total, k) int32 expert ids.
+      w:    (S_total, k) f32 raw gate weights.
+      slot: (S_total, k) int32 slot within the (rank, expert) buffer, or -1
+        when the pair was dropped (over capacity).
+    """
+    s_total, _ = scores.shape
+    idx, w = ref_topk(scores, k)
+    slot = np.full((s_total, k), -1, dtype=np.int32)
+    n_ranks = s_total // s_rank
+    for r in range(n_ranks):
+        counts: dict[int, int] = {}
+        for i in range(r * s_rank, (r + 1) * s_rank):
+            for j in range(k):
+                e = int(idx[i, j])
+                c = counts.get(e, 0)
+                if c < capacity:
+                    slot[i, j] = c
+                    counts[e] = c + 1
+    return idx, w, slot
+
+
+def ref_moe_forward(
+    a: np.ndarray,
+    wg: np.ndarray,
+    w1: np.ndarray,
+    b1: np.ndarray,
+    w2: np.ndarray,
+    b2: np.ndarray,
+    k: int,
+    capacity: int,
+    s_rank: int | None = None,
+) -> np.ndarray:
+    """Full MoE layer oracle (gate -> route/drop -> expert FFN -> combine).
+
+    a: (S_total, H); wg: (H, E); w1: (E, H, D); b1: (E, D); w2: (E, D, H);
+    b2: (E, H). capacity is per (source rank, expert); s_rank defaults to
+    S_total (single rank).
+    """
+    s_total, h = a.shape
+    if s_rank is None:
+        s_rank = s_total
+    scores = ref_gate(a, wg)
+    idx, w, slot = ref_route(scores, k, capacity, s_rank)
+
+    out = np.zeros((s_total, h), dtype=np.float32)
+    # Per-token denominator over the full top-k (drops included).
+    denom = w.sum(axis=-1)
+    for i in range(s_total):
+        for j in range(k):
+            if slot[i, j] < 0:
+                continue  # dropped: contributes zero
+            e = int(idx[i, j])
+            y = ref_ffn(a[i : i + 1], w1[e], b1[e], w2[e], b2[e])
+            out[i] += (w[i, j] / denom[i]) * y[0]
+    return out

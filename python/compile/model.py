@@ -1,0 +1,113 @@
+"""L2: the MoE layer compute graph in JAX, composed from the L1 Pallas kernels.
+
+This is the *monolithic* (single-device) formulation of the layer — the same
+math the distributed Rust coordinator computes across ranks. It exists for
+two reasons:
+
+  1. AOT artifact ``moe_layer``: the Rust integration tests execute it via
+     PJRT and assert the distributed forward pass produces identical output.
+  2. Build-time validation: pytest asserts this graph matches the numpy
+     oracle in ``kernels.ref``.
+
+All shapes are static (token dropping is expressed with masked scatters, as
+in GShard), so the graph lowers cleanly to HLO text.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import combine as combine_k
+from .kernels import ffn as ffn_k
+from .kernels import gate as gate_k
+
+
+def route_slots(idx: jax.Array, n_experts: int, capacity: int):
+    """Slot index within the per-(rank, expert) buffer for each (token, k) pair.
+
+    idx: (S_r, k) expert ids for one source rank's tokens. Slot order is
+    token-major / k-minor arrival order (== the Rust gate and the numpy
+    oracle). Returns (S_r, k) i32 slots; values >= capacity mean *dropped*.
+    """
+    s_r, k = idx.shape
+    flat = idx.reshape(-1)  # (S_r*k,) in arrival order
+    onehot = jax.nn.one_hot(flat, n_experts, dtype=jnp.int32)  # (S_r*k, E)
+    # exclusive prefix count of earlier pairs routed to the same expert
+    before = jnp.cumsum(onehot, axis=0) - onehot
+    slots = jnp.take_along_axis(before, flat[:, None], axis=1)[:, 0]
+    return slots.reshape(s_r, k)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "capacity", "s_rank", "bm")
+)
+def moe_layer(
+    a: jax.Array,
+    wg: jax.Array,
+    w1: jax.Array,
+    b1: jax.Array,
+    w2: jax.Array,
+    b2: jax.Array,
+    *,
+    k: int,
+    capacity: int,
+    s_rank: int,
+    bm: int = 128,
+) -> jax.Array:
+    """Full MoE layer forward (gate -> dispatch -> expert FFN -> combine).
+
+    a: (S_total, H) with tokens [r*s_rank, (r+1)*s_rank) belonging to source
+    rank r (capacity applies per (rank, expert), mirroring the symmetric
+    tensor layout's per-peer expert cells). Weights: wg (H, E); w1 (E, H, D);
+    b1 (E, D); w2 (E, D, H); b2 (E, H). Returns (S_total, H) f32.
+    """
+    s_total, h = a.shape
+    e_total = wg.shape[1]
+    assert s_total % s_rank == 0
+    n_ranks = s_total // s_rank
+
+    # ---- gate (L1 kernel) + top-k routing --------------------------------
+    scores = gate_k.gate_scores(a, wg, bm=bm)  # (S_total, E)
+    idx, w = gate_k.topk_route(scores, k)  # (S_total, k)
+    denom = jnp.sum(w, axis=-1, keepdims=True)  # combine normalizer, drops incl.
+
+    # ---- per-rank capacity slotting ---------------------------------------
+    slots = jnp.concatenate(
+        [
+            route_slots(idx[r * s_rank : (r + 1) * s_rank], e_total, capacity)
+            for r in range(n_ranks)
+        ],
+        axis=0,
+    )  # (S_total, k)
+    kept = slots < capacity
+
+    # ---- dispatch: scatter tokens into (E, n_ranks*capacity, H) -----------
+    rank_of = jnp.repeat(jnp.arange(n_ranks), s_rank)[:, None]  # (S_total, 1)
+    buf_rows = e_total * n_ranks * capacity
+    flat_pos = idx * (n_ranks * capacity) + rank_of * capacity + slots
+    flat_pos = jnp.where(kept, flat_pos, buf_rows)  # OOB -> dropped by scatter
+    expert_in = (
+        jnp.zeros((buf_rows, h), jnp.float32)
+        .at[flat_pos.reshape(-1)]
+        .set(jnp.repeat(a, k, axis=0), mode="drop")
+    ).reshape(e_total, n_ranks * capacity, h)
+
+    # ---- expert FFN (L1 fused kernel), one call per local expert ----------
+    expert_out = jnp.stack(
+        [
+            ffn_k.ffn_block(expert_in[e], w1[e], b1[e], w2[e], b2[e], bm=bm)
+            for e in range(e_total)
+        ]
+    ).reshape(buf_rows, h)
+
+    # ---- combine: gather back + weighted accumulate (L1 kernel) -----------
+    out = jnp.zeros((s_total, h), jnp.float32)
+    for j in range(k):
+        rows = jnp.where(kept[:, j], flat_pos[:, j], 0)
+        gathered = expert_out[rows]  # (S_total, H)
+        scale = jnp.where(kept[:, j], w[:, j] / denom[:, 0], 0.0)[:, None]
+        out = combine_k.combine(out, gathered, scale, bm=bm)
+    return out

@@ -1,0 +1,109 @@
+"""L2 extension: training support (the paper's §5 future-work item).
+
+FlashDMoE is inference-only; the paper names backward-pass fusion as future
+work. We provide the build-time half: a differentiable MoE formulation and
+an AOT-compiled ``train_step`` artifact (MoE layer + linear readout, MSE
+loss, SGD) that the Rust runtime executes for the end-to-end training
+example (`examples/train_loop.rs`), logging the loss curve recorded in
+EXPERIMENTS.md.
+
+The differentiable graph uses the pure-jnp formulation (`moe_layer_jnp`)
+rather than the Pallas kernels: interpret-mode Pallas is not reliably
+differentiable, and the two formulations are asserted equal by pytest, so
+gradients are taken through identical math.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .model import route_slots
+
+
+def moe_layer_jnp(a, wg, w1, b1, w2, b2, *, k: int, capacity: int):
+    """Differentiable single-shard MoE layer (same math as model.moe_layer
+    with s_rank == S; see DESIGN.md §4 for the shared numerics contract)."""
+    s, h = a.shape
+    e = wg.shape[1]
+    scores = jax.nn.softmax(a @ wg, axis=-1)
+    # iterative arg-max top-k (ties -> lower index), matching gate.topk_route
+    masked = scores
+    idxs, ws = [], []
+    for _ in range(k):
+        idx = jnp.argmax(masked, axis=-1)
+        w = jnp.take_along_axis(masked, idx[:, None], axis=-1)[:, 0]
+        idxs.append(idx.astype(jnp.int32))
+        ws.append(w)
+        masked = masked.at[jnp.arange(s), idx].set(-jnp.inf)
+    idx = jnp.stack(idxs, axis=-1)  # (S, k)
+    w = jnp.stack(ws, axis=-1)
+    denom = jnp.sum(w, axis=-1, keepdims=True)
+
+    slots = route_slots(idx, e, capacity)
+    kept = slots < capacity
+    buf_rows = e * capacity
+    flat_pos = idx * capacity + slots
+    flat_pos = jnp.where(kept, flat_pos, buf_rows)
+    expert_in = (
+        jnp.zeros((buf_rows, h), jnp.float32)
+        .at[flat_pos.reshape(-1)]
+        .set(jnp.repeat(a, k, axis=0), mode="drop")
+    ).reshape(e, capacity, h)
+
+    hidden = jax.nn.relu(jnp.einsum("ech,ehd->ecd", expert_in, w1) + b1[:, None, :])
+    expert_out = (jnp.einsum("ecd,edh->ech", hidden, w2) + b2[:, None, :]).reshape(
+        buf_rows, h
+    )
+
+    out = jnp.zeros((s, h), jnp.float32)
+    for j in range(k):
+        rows = jnp.where(kept[:, j], flat_pos[:, j], 0)
+        gathered = expert_out[rows]
+        scale = jnp.where(kept[:, j], w[:, j] / denom[:, 0], 0.0)[:, None]
+        out = out + scale * gathered
+    return out
+
+
+def init_params(rng_key, h: int, d: int, e: int):
+    """MoE layer + linear readout parameters (pytree as a flat dict)."""
+    ks = jax.random.split(rng_key, 7)
+    s = 0.1
+    return {
+        "wg": jax.random.normal(ks[0], (h, e)) * 1.0,
+        "w1": jax.random.normal(ks[1], (e, h, d)) * s,
+        "b1": jnp.zeros((e, d)),
+        "w2": jax.random.normal(ks[2], (e, d, h)) * s,
+        "b2": jnp.zeros((e, h)),
+        "head_w": jax.random.normal(ks[3], (h, 1)) * s,
+        "head_b": jnp.zeros((1,)),
+    }
+
+
+PARAM_ORDER = ["wg", "w1", "b1", "w2", "b2", "head_w", "head_b"]
+
+
+def loss_fn(params, x, y, *, k: int, capacity: int):
+    h = moe_layer_jnp(
+        x, params["wg"], params["w1"], params["b1"], params["w2"], params["b2"],
+        k=k, capacity=capacity,
+    )
+    pred = h @ params["head_w"] + params["head_b"]
+    return jnp.mean((pred - y) ** 2)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "capacity", "lr"))
+def train_step(params, x, y, *, k: int, capacity: int, lr: float):
+    """One SGD step; returns (loss, updated params)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y, k=k, capacity=capacity)
+    new = {name: params[name] - lr * grads[name] for name in params}
+    return loss, new
+
+
+def train_step_flat(flat_params, x, y, *, h, d, e, k, capacity, lr):
+    """Flat-argument wrapper for AOT lowering (PJRT takes positional args)."""
+    params = dict(zip(PARAM_ORDER, flat_params))
+    loss, new = train_step(params, x, y, k=k, capacity=capacity, lr=lr)
+    return (loss,) + tuple(new[name] for name in PARAM_ORDER)

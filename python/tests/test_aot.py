@@ -1,0 +1,73 @@
+"""AOT path: manifest consistency and HLO-text artifact sanity.
+
+Builds the tiny preset into a temp dir (fast), then checks that every
+artifact exists, is plain-parsable HLO text, and that manifest shapes obey
+the config math the Rust side relies on.
+"""
+
+import json
+import math
+import os
+
+import pytest
+
+from compile import aot
+from compile.kernels.ref import expert_capacity
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    entry = aot.build_preset("tiny", aot.PRESETS["tiny"], str(out))
+    return str(out), entry
+
+
+def test_all_artifacts_written(built):
+    out, entry = built
+    expected = {
+        "gate", "ffn_block", "ffn_tile", "gemm0_tile",
+        "gemm1_tile", "combine_tile", "moe_layer", "train_step",
+    }
+    assert set(entry["artifacts"]) == expected
+    for art in entry["artifacts"].values():
+        path = os.path.join(out, art["file"])
+        assert os.path.getsize(path) > 1000
+        head = open(path).read(200)
+        assert head.startswith("HloModule"), head
+
+
+def test_manifest_config_math(built):
+    _, entry = built
+    cfg = entry["config"]
+    assert cfg["s_total"] == cfg["ranks"] * cfg["s_rank"]
+    assert cfg["capacity"] == expert_capacity(
+        cfg["s_rank"], cfg["e"], cfg["k"], cfg["capacity_factor"], cfg["bm"]
+    )
+    assert cfg["capacity"] % cfg["bm"] == 0
+    arts = entry["artifacts"]
+    h, d, e, bm, bn = cfg["h"], cfg["d"], cfg["e"], cfg["bm"], cfg["bn"]
+    c_buf = cfg["ranks"] * cfg["capacity"]
+    assert arts["gate"]["inputs"][0][1] == [cfg["s_rank"], h]
+    assert arts["gate"]["outputs"][0][1] == [cfg["s_rank"], e]
+    assert arts["ffn_block"]["inputs"][0][1] == [c_buf, h]
+    assert arts["ffn_tile"]["inputs"][0][1] == [bm, h]
+    assert arts["gemm0_tile"]["outputs"][0][1] == [bm, bn]
+    assert arts["gemm1_tile"]["inputs"][0][1] == [bm, d]
+    assert arts["combine_tile"]["outputs"][0][1] == [bm, h]
+    assert arts["moe_layer"]["inputs"][0][1] == [cfg["s_total"], h]
+    assert arts["moe_layer"]["outputs"][0][1] == [cfg["s_total"], h]
+
+
+def test_hlo_text_has_no_64bit_id_problem(built):
+    """Interchange must be text (parser reassigns ids) — never a proto dump."""
+    out, entry = built
+    path = os.path.join(out, entry["artifacts"]["moe_layer"]["file"])
+    text = open(path).read()
+    assert "ENTRY" in text and "ROOT" in text
+
+
+def test_presets_are_tileable():
+    for name, cfg in aot.PRESETS.items():
+        assert cfg["s_rank"] % cfg["bm"] == 0, name
+        assert cfg["d"] % cfg["bn"] == 0, name
+        assert cfg["h"] % cfg["bn"] == 0, name

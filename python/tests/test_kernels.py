@@ -1,0 +1,145 @@
+"""L1 correctness: every Pallas kernel vs the pure-numpy oracle.
+
+Hypothesis sweeps shapes (and value distributions); each kernel must match
+``ref.py`` to f32 tolerance across the sweep.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import combine as combine_k
+from compile.kernels import ffn as ffn_k
+from compile.kernels import gate as gate_k
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rnd(rng, *shape, scale=1.0):
+    return (rng.normal(size=shape) * scale).astype(np.float32)
+
+
+@given(
+    tiles=st.integers(1, 4),
+    bm=st.sampled_from([8, 16, 32]),
+    h=st.sampled_from([8, 32, 64]),
+    e=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_gate_scores_matches_ref(tiles, bm, h, e, seed):
+    rng = np.random.default_rng(seed)
+    a, wg = rnd(rng, tiles * bm, h), rnd(rng, h, e)
+    got = np.asarray(gate_k.gate_scores(jnp.array(a), jnp.array(wg), bm=bm))
+    np.testing.assert_allclose(got, ref.ref_gate(a, wg), rtol=1e-5, atol=1e-5)
+    # scores are a row distribution
+    np.testing.assert_allclose(got.sum(axis=-1), 1.0, rtol=1e-5)
+
+
+@given(
+    mt=st.integers(1, 3),
+    nt=st.integers(1, 3),
+    bm=st.sampled_from([8, 32]),
+    bn=st.sampled_from([8, 32]),
+    kdim=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_gemm0_matches_ref(mt, nt, bm, bn, kdim, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rnd(rng, mt * bm, kdim), rnd(rng, kdim, nt * bn), rnd(rng, nt * bn)
+    got = np.asarray(ffn_k.gemm0(jnp.array(x), jnp.array(w), jnp.array(b), bm=bm, bn=bn))
+    np.testing.assert_allclose(got, ref.ref_gemm0(x, w, b), rtol=1e-4, atol=1e-4)
+    assert (got >= 0).all(), "relu epilogue must clamp"
+
+
+@given(
+    mt=st.integers(1, 3),
+    bm=st.sampled_from([8, 32]),
+    bn=st.sampled_from([8, 32]),
+    kdim=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_gemm1_matches_ref(mt, bm, bn, kdim, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rnd(rng, mt * bm, kdim), rnd(rng, kdim, bn), rnd(rng, bn)
+    got = np.asarray(ffn_k.gemm1(jnp.array(x), jnp.array(w), jnp.array(b), bm=bm, bn=bn))
+    np.testing.assert_allclose(got, ref.ref_gemm1(x, w, b), rtol=1e-4, atol=1e-4)
+
+
+@given(
+    mt=st.integers(1, 4),
+    bm=st.sampled_from([8, 32]),
+    h=st.sampled_from([16, 64]),
+    d=st.sampled_from([16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_ffn_block_matches_ref(mt, bm, h, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, mt * bm, h)
+    w1, b1, w2, b2 = rnd(rng, h, d), rnd(rng, d), rnd(rng, d, h), rnd(rng, h)
+    got = np.asarray(
+        ffn_k.ffn_block(*map(jnp.array, (x, w1, b1, w2, b2)), bm=bm)
+    )
+    np.testing.assert_allclose(got, ref.ref_ffn(x, w1, b1, w2, b2), rtol=1e-3, atol=1e-3)
+
+
+@given(
+    mt=st.integers(1, 4),
+    bm=st.sampled_from([8, 32]),
+    h=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_combine_matches_ref(mt, bm, h, seed):
+    rng = np.random.default_rng(seed)
+    acc, x, s = rnd(rng, mt * bm, h), rnd(rng, mt * bm, h), rnd(rng, mt * bm, 1)
+    got = np.asarray(combine_k.combine(*map(jnp.array, (acc, x, s)), bm=bm))
+    np.testing.assert_allclose(got, ref.ref_combine(acc, x, s), rtol=1e-5, atol=1e-6)
+
+
+def test_combine_zero_scale_is_identity():
+    rng = np.random.default_rng(0)
+    acc, x = rnd(rng, 32, 16), rnd(rng, 32, 16)
+    s = np.zeros((32, 1), np.float32)
+    got = np.asarray(combine_k.combine(*map(jnp.array, (acc, x, s)), bm=32))
+    np.testing.assert_array_equal(got, acc)
+
+
+def test_ffn_block_equals_split_gemms():
+    """Fused task mode must equal the paper's split GEMM0->GEMM1 chain."""
+    rng = np.random.default_rng(3)
+    x = rnd(rng, 64, 32)
+    w1, b1, w2, b2 = rnd(rng, 32, 48), rnd(rng, 48), rnd(rng, 48, 32), rnd(rng, 32)
+    fused = np.asarray(ffn_k.ffn_block(*map(jnp.array, (x, w1, b1, w2, b2)), bm=32))
+    h = ffn_k.gemm0(jnp.array(x), jnp.array(w1), jnp.array(b1), bm=32, bn=16)
+    split = np.asarray(ffn_k.gemm1(h, jnp.array(w2), jnp.array(b2), bm=32, bn=16))
+    np.testing.assert_allclose(fused, split, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    s=st.sampled_from([16, 64]),
+    e=st.sampled_from([4, 8]),
+    k=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_topk_matches_ref(s, e, k, seed):
+    rng = np.random.default_rng(seed)
+    scores = ref.ref_gate(rnd(rng, s, 16), rnd(rng, 16, e))
+    idx, w = gate_k.topk_route(jnp.array(scores), k)
+    ridx, rw = ref.ref_topk(scores, k)
+    np.testing.assert_array_equal(np.asarray(idx), ridx)
+    np.testing.assert_allclose(np.asarray(w), rw, rtol=1e-6)
+
+
+def test_topk_tie_break_lower_index():
+    scores = np.array([[0.25, 0.25, 0.25, 0.25]], np.float32)
+    idx, _ = gate_k.topk_route(jnp.array(scores), 2)
+    assert list(np.asarray(idx)[0]) == [0, 1]
+    ridx, _ = ref.ref_topk(scores, 2)
+    assert list(ridx[0]) == [0, 1]

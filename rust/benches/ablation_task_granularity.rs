@@ -1,0 +1,75 @@
+//! Ablation (DESIGN.md design-choice): fused per-tile FFN tasks vs the
+//! paper's split GEMM0→GEMM1 chain, and processor-count scaling, on the
+//! *real* coordinator. Also ablates payload-efficient dispatch by
+//! comparing wire rows against the padded bulk-sync baseline.
+
+use std::sync::Arc;
+
+use flashdmoe::config::Config;
+use flashdmoe::coordinator::{baseline, DistributedMoE, TaskGraphMode};
+use flashdmoe::expert::{generate_tokens, ModelParams};
+use flashdmoe::runtime::{ComputeBackend, NativeBackend};
+use flashdmoe::util::stats::{fmt_time, summarize, Table};
+
+fn run_mode(cfg: &Config, mode: TaskGraphMode, passes: usize) -> (f64, u32, usize) {
+    let params = Arc::new(ModelParams::generate(cfg, 5));
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(cfg));
+    let inputs: Vec<Vec<f32>> =
+        (0..cfg.system.ranks).map(|r| generate_tokens(cfg, 5, r)).collect();
+    let moe = DistributedMoE::new(cfg.clone(), params, backend, mode).unwrap();
+    let _ = moe.forward(&inputs).unwrap();
+    let mut times = Vec::new();
+    let mut tasks = 0;
+    let mut depth = 0;
+    for _ in 0..passes {
+        let r = moe.forward(&inputs).unwrap();
+        times.push(r.metrics.wall_secs);
+        tasks = r.metrics.ranks.iter().map(|x| x.total_tasks()).sum();
+        depth = r.metrics.ranks.iter().map(|x| x.max_queue_depth).max().unwrap();
+    }
+    (summarize(&times).p50, tasks, depth)
+}
+
+fn main() {
+    let passes: usize = std::env::var("PASSES").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+
+    println!("## Ablation A — task granularity (fused tile-FFN vs split GEMM chain)\n");
+    let mut t = Table::new(&["preset", "mode", "p50 latency", "tasks", "max queue depth"]);
+    for preset in ["tiny", "default"] {
+        let cfg = Config::preset(preset).unwrap();
+        for (name, mode) in [("fused", TaskGraphMode::Fused), ("split", TaskGraphMode::Split)] {
+            let (p50, tasks, depth) = run_mode(&cfg, mode, passes);
+            t.row(&[preset.into(), name.into(), fmt_time(p50), tasks.to_string(), depth.to_string()]);
+        }
+    }
+    println!("{}", t.render());
+
+    println!("\n## Ablation B — processor actors per rank (work-conserving scheduler scaling)\n");
+    let mut t = Table::new(&["processors", "p50 latency"]);
+    for procs in [1usize, 2, 4, 8] {
+        let mut cfg = Config::preset("default").unwrap();
+        cfg.set("processors", &procs.to_string()).unwrap();
+        let (p50, _, _) = run_mode(&cfg, TaskGraphMode::Fused, passes);
+        t.row(&[procs.to_string(), fmt_time(p50)]);
+    }
+    println!("{}", t.render());
+
+    println!("\n## Ablation C — payload efficiency (valid rows vs padded rows on the wire)\n");
+    let cfg = Config::preset("default").unwrap();
+    let params = Arc::new(ModelParams::generate(&cfg, 5));
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+    let inputs: Vec<Vec<f32>> =
+        (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, 5, r)).collect();
+    let moe =
+        DistributedMoE::new(cfg.clone(), params.clone(), backend.clone(), TaskGraphMode::Fused)
+            .unwrap();
+    let flash = moe.forward(&inputs).unwrap();
+    let base = baseline::forward_sequential(&cfg, &params, &backend, &inputs).unwrap();
+    let flash_rows: usize = flash.metrics.ranks.iter().map(|r| r.sent_rows).sum();
+    println!(
+        "flash ships {flash_rows} rows; padded bulk-sync ships {} ({} valid) -> {:.1}% of padded traffic avoided",
+        base.metrics.sent_rows,
+        base.metrics.valid_rows,
+        (1.0 - flash_rows as f64 / base.metrics.sent_rows as f64) * 100.0
+    );
+}

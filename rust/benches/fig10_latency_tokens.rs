@@ -1,0 +1,9 @@
+//! Fig 10 — forward latency vs tokens/GPU at 4 and 8 GPUs, E=64,
+//! FlashDMoE (fp32) vs fp16 baselines on the calibrated simulator.
+fn main() {
+    let (text, pts) = flashdmoe::harness::fig10(42).unwrap();
+    println!("{text}");
+    let f = |e: &str| pts.iter().filter(|p| p.engine == e && p.x == 16384.0).map(|p| p.latency).fold(f64::MAX, f64::min);
+    println!("speedup at 16K tokens: {:.2}x over Megatron-TE, {:.2}x over FasterMoE (paper: 4.6x / 2.6x at 4 GPUs, up to 6.4x at 8)",
+        f("Megatron-TE") / f("FlashDMoE"), f("FasterMoE") / f("FlashDMoE"));
+}

@@ -1,0 +1,6 @@
+//! Fig 5a / Fig 11 — SM utilization during the forward pass
+//! (T=8K, E=64, 2 GPUs), Nsight-style "SM active" metric.
+fn main() {
+    let (text, _) = flashdmoe::harness::fig11(42).unwrap();
+    println!("{text}");
+}

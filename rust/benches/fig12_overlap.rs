@@ -1,0 +1,6 @@
+//! Fig 12 — overlap efficiency O_e = T(2)/T(N) under weak scaling
+//! (fixed 8K tokens/GPU, E=64).
+fn main() {
+    let (text, _) = flashdmoe::harness::fig12(42).unwrap();
+    println!("{text}");
+}

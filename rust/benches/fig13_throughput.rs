@@ -1,0 +1,8 @@
+//! Fig 13 — throughput (MTokens/s) vs GPU count, T=16K/GPU, E=64.
+fn main() {
+    let (text, pts) = flashdmoe::harness::fig13(42).unwrap();
+    println!("{text}");
+    let flash8 = pts.iter().find(|p| p.engine == "FlashDMoE" && p.x == 8.0).unwrap();
+    println!("FlashDMoE at 8 GPUs: {:.1} MTok/s (paper: 17.7 MTok/s on real H100s)",
+        16384.0 * 8.0 / flash8.latency / 1e6);
+}

@@ -1,0 +1,6 @@
+//! Fig 14 — forward latency vs total expert count (T=16K/GPU) at 4 and
+//! 8 GPUs: flash stays flat, launch-bound baselines grow superlinearly.
+fn main() {
+    let (text, _) = flashdmoe::harness::fig14(42).unwrap();
+    println!("{text}");
+}

@@ -1,0 +1,6 @@
+//! Fig 17 — multi-node latency + Maximal Incast Volume; reproduces the
+//! paper's >2048-token incast failure mode.
+fn main() {
+    let (text, _) = flashdmoe::harness::fig17(42).unwrap();
+    println!("{text}");
+}

@@ -1,0 +1,6 @@
+//! Fig 18 — FP16 vs FP32: wire bytes and the shared-memory instruction
+//! model behind the paper's observed 2x smem instruction count.
+fn main() {
+    let (text, _) = flashdmoe::harness::fig18(42).unwrap();
+    println!("{text}");
+}

@@ -1,0 +1,72 @@
+//! Microbench: tile-level compute on both backends — the calibration
+//! source for the simulator's cost model and the §Perf L3 hot-path
+//! baseline. Prints GFLOP/s per tile shape for the native blocked GEMM
+//! and (when artifacts exist) the XLA/PJRT Pallas kernels.
+
+use std::time::Instant;
+
+use flashdmoe::config::Config;
+use flashdmoe::expert::ExpertParams;
+use flashdmoe::runtime::{ArtifactStore, ComputeBackend, NativeBackend, XlaBackend};
+use flashdmoe::util::prng::Rng;
+use flashdmoe::util::stats::{fmt_time, Table};
+
+fn bench_backend(name: &str, cfg: &Config, be: &dyn ComputeBackend, iters: usize, t: &mut Table) {
+    let m = &cfg.model;
+    let mut rng = Rng::new(1);
+    let ex = ExpertParams {
+        w1: rng.normal_vec(m.h * m.d, 0.1),
+        b1: rng.normal_vec(m.d, 0.1),
+        w2: rng.normal_vec(m.d * m.h, 0.1),
+        b2: rng.normal_vec(m.h, 0.1),
+    };
+    let x = rng.normal_vec(m.bm * m.h, 1.0);
+    let mut out = vec![0.0f32; m.bm * m.h];
+    let mut scratch = vec![0.0f32; m.bm * m.d];
+
+    be.ffn_tile(&x, &ex, 0, &mut out, &mut scratch).unwrap(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        be.ffn_tile(&x, &ex, 0, &mut out, &mut scratch).unwrap();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let gflops = m.ffn_flops(m.bm) / per / 1e9;
+
+    // gate
+    let s = cfg.system.s_rank;
+    let a = rng.normal_vec(s * m.h, 1.0);
+    let wg = rng.normal_vec(m.h * m.e, 1.0);
+    be.gate_scores(&a, &wg, s).unwrap();
+    let t1 = Instant::now();
+    for _ in 0..iters {
+        be.gate_scores(&a, &wg, s).unwrap();
+    }
+    let gate = t1.elapsed().as_secs_f64() / iters as f64;
+
+    t.row(&[
+        name.to_string(),
+        format!("{}x{}x{}", m.bm, m.h, m.d),
+        fmt_time(per),
+        format!("{gflops:.2}"),
+        fmt_time(gate),
+    ]);
+}
+
+fn main() {
+    let iters: usize = std::env::var("ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(30);
+    let mut t = Table::new(&["backend", "tile (bM,H,D)", "ffn_tile", "GFLOP/s", "gate"]);
+    for preset in ["tiny", "default", "perf"] {
+        let cfg = Config::preset(preset).unwrap();
+        let native = NativeBackend::from_config(&cfg);
+        bench_backend(&format!("native/{preset}"), &cfg, &native, iters, &mut t);
+        let dir = ArtifactStore::default_dir();
+        if preset != "perf" && ArtifactStore::available(&dir) {
+            if let Ok(store) = ArtifactStore::load(&dir, preset) {
+                let xla = XlaBackend::new(store);
+                bench_backend(&format!("xla/{preset}"), &cfg, &xla, iters, &mut t);
+            }
+        }
+    }
+    println!("## Microbench — tile compute per backend (calibration source)\n");
+    println!("{}", t.render());
+}

@@ -1,0 +1,8 @@
+//! Table 1 — kernel launches per single MoE layer pass (2 ranks, 32 local
+//! experts). FlashDMoE = 1 persistent kernel; baselines modeled per
+//! `Baseline::launch_model`, calibrated against the paper's Nsight counts.
+fn main() {
+    let (text, rows) = flashdmoe::harness::table1();
+    println!("{text}");
+    assert_eq!(rows[0].1, 1, "flash must be a single launch");
+}

@@ -1,0 +1,12 @@
+//! Table 2 / Fig 15 — straggler delay within synchronous AllToAll
+//! (commercial VM vs supercomputer jitter profiles).
+fn main() {
+    let (text, reports) = flashdmoe::harness::table2(42);
+    println!("{text}");
+    for r in &reports {
+        println!(
+            "{}: mean {:.2}x, max {:.2}x over {} steps",
+            r.platform.name, r.summary.mean, r.summary.max, r.summary.n
+        );
+    }
+}

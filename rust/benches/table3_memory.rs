@@ -1,0 +1,8 @@
+//! Table 3 — memory overhead of the symmetric tensor L + bookkeeping
+//! (paper convention: token = 4KB, bM = 128, world = 8).
+fn main() {
+    let (text, reports) = flashdmoe::harness::table3();
+    println!("{text}");
+    let worst = reports.iter().map(|r| r.total()).fold(0.0, f64::max);
+    println!("worst-case total: {:.2} MB (paper worst: 514.54 MB)", worst / (1024.0 * 1024.0));
+}

@@ -1,0 +1,399 @@
+//! Configuration system: model shapes, parallelism topology, and the
+//! hardware cost model used by the discrete-event simulator.
+//!
+//! Configs come from presets (matching the paper's testbeds and the AOT
+//! manifest presets), from `KEY=VALUE` config files, or from CLI overrides.
+//! Everything downstream (gate, layout, coordinator, sim, benches) consumes
+//! these structs — there is a single source of shape/capacity math.
+
+use anyhow::{bail, Context, Result};
+
+/// Model-side configuration (mirrors `python/compile/aot.py::PRESETS`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Token embedding dimension H.
+    pub h: usize,
+    /// FFN intermediate dimension D.
+    pub d: usize,
+    /// Total number of experts E across all ranks.
+    pub e: usize,
+    /// Top-k routing fan-out.
+    pub k: usize,
+    /// Tile height bM (the paper fixes 128).
+    pub bm: usize,
+    /// Tile width bN (the paper fixes 64).
+    pub bn: usize,
+    /// Expert capacity factor f.
+    pub capacity_factor: f64,
+}
+
+/// System-side configuration: topology + actor resources.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemConfig {
+    /// Expert-parallel world size P (number of ranks).
+    pub ranks: usize,
+    /// Number of nodes the ranks are spread over (ranks % nodes == 0).
+    pub nodes: usize,
+    /// Tokens per rank S_r.
+    pub s_rank: usize,
+    /// Processor actors (worker threads / "SM" slots) per rank.
+    pub processors: usize,
+}
+
+/// Hardware cost model for the simulator, calibrated by `flashdmoe
+/// calibrate` (see `sim::calibrate`). All times in seconds, bandwidth in
+/// bytes/s.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostModel {
+    /// Per-kernel-launch CPU->GPU overhead (the paper's Table 1 killer).
+    pub launch_overhead: f64,
+    /// Effective FLOP/s of one processor slot (per-"SM" throughput).
+    pub flops_per_processor: f64,
+    /// Intra-node (NVLink-class) unidirectional bandwidth.
+    pub intra_bw: f64,
+    /// Intra-node transfer latency per message.
+    pub intra_lat: f64,
+    /// Inter-node (NIC) unidirectional bandwidth.
+    pub inter_bw: f64,
+    /// Inter-node latency per message.
+    pub inter_lat: f64,
+    /// NIC receive buffer capacity (bytes) for incast modeling (Fig 17).
+    pub nic_buffer: f64,
+    /// Straggler jitter: lognormal sigma applied to collective kernels.
+    pub jitter_sigma: f64,
+    /// Fixed host sync cost of a bulk-synchronous collective barrier.
+    pub barrier_cost: f64,
+    /// Bytes per scalar element (4 = fp32, 2 = fp16).
+    pub elem_bytes: f64,
+}
+
+impl CostModel {
+    /// H100-NVLink-flavoured defaults (single node). Absolute values are
+    /// placeholders until `calibrate` replaces `flops_per_processor`; the
+    /// *ratios* (launch overhead vs transfer vs flops) drive the figures.
+    pub fn h100_nvlink() -> Self {
+        Self {
+            // framework-level kernel-launch gap (CUDA launch + framework
+            // dispatcher + inter-op CPU stall, as seen in the paper's
+            // Fig 5 CUDA-API traces; the flash engine pays it exactly once)
+            launch_overhead: 100e-6,
+            // ~0.4 TFLOP/s fp32 per SM-analog (H100: 132 SMs, ~53 TFLOP/s
+            // aggregate fp32 without sparsity); replaced by `calibrate` for
+            // measured-mode comparisons.
+            flops_per_processor: 4.0e11,
+            intra_bw: 300e9,
+            intra_lat: 2e-6,
+            inter_bw: 25e9,
+            inter_lat: 5e-6,
+            nic_buffer: 64.0 * 1024.0 * 1024.0,
+            jitter_sigma: 0.05,
+            barrier_cost: 10e-6,
+            elem_bytes: 4.0,
+        }
+    }
+
+    /// Commercial-VM flavour: much heavier jitter (paper Table 2: p95 11.4x).
+    pub fn commercial_vm() -> Self {
+        Self { jitter_sigma: 0.9, barrier_cost: 30e-6, ..Self::h100_nvlink() }
+    }
+
+    /// Supercomputer flavour: tightly tuned against software jitter.
+    pub fn supercomputer() -> Self {
+        Self { jitter_sigma: 0.025, ..Self::h100_nvlink() }
+    }
+
+    pub fn with_fp16(mut self) -> Self {
+        self.elem_bytes = 2.0;
+        self
+    }
+}
+
+/// The complete experiment configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    pub model: ModelConfig,
+    pub system: SystemConfig,
+    pub cost: CostModel,
+}
+
+impl ModelConfig {
+    /// Aligned per-(source rank, expert) capacity (paper §3.2.1):
+    /// `roundup(max(ceil(S_r·k/E·f), bM), bM)`.
+    pub fn capacity(&self, s_rank: usize) -> usize {
+        let raw = (s_rank as f64 * self.k as f64 / self.e as f64 * self.capacity_factor).ceil()
+            as usize;
+        let cap = raw.max(self.bm);
+        cap.div_ceil(self.bm) * self.bm
+    }
+
+    /// Tiles per (rank, expert) capacity buffer.
+    pub fn tiles_per_capacity(&self, s_rank: usize) -> usize {
+        self.capacity(s_rank) / self.bm
+    }
+
+    /// FLOPs of one expert-FFN application to `rows` tokens (2 GEMMs).
+    pub fn ffn_flops(&self, rows: usize) -> f64 {
+        2.0 * rows as f64 * self.h as f64 * self.d as f64 * 2.0
+    }
+
+    /// FLOPs of the gate logit GEMM for `rows` tokens.
+    pub fn gate_flops(&self, rows: usize) -> f64 {
+        2.0 * rows as f64 * self.h as f64 * self.e as f64
+    }
+
+    /// Bytes of one (bM, H) token tile at `elem_bytes` per scalar.
+    pub fn tile_bytes(&self, elem_bytes: f64) -> f64 {
+        self.bm as f64 * self.h as f64 * elem_bytes
+    }
+
+    /// VMEM footprint estimate (bytes) for the fused FFN tile kernel: the
+    /// (bM, H) input, both weight matrices, the (bM, D) intermediate and
+    /// the (bM, H) output resident. This is the L1 perf-profile number
+    /// recorded in DESIGN.md §9.
+    pub fn ffn_tile_vmem_bytes(&self) -> usize {
+        4 * (self.bm * self.h * 2 + self.h * self.d + self.d * self.h + self.bm * self.d)
+    }
+}
+
+impl SystemConfig {
+    /// Total tokens across ranks.
+    pub fn s_total(&self) -> usize {
+        self.ranks * self.s_rank
+    }
+
+    /// Ranks per node.
+    pub fn ranks_per_node(&self) -> usize {
+        self.ranks / self.nodes
+    }
+
+    /// True if two ranks share a node.
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        a / self.ranks_per_node() == b / self.ranks_per_node()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.ranks == 0 || self.nodes == 0 {
+            bail!("ranks/nodes must be positive");
+        }
+        if self.ranks % self.nodes != 0 {
+            bail!("ranks ({}) must divide evenly over nodes ({})", self.ranks, self.nodes);
+        }
+        if self.processors == 0 {
+            bail!("need at least one processor actor per rank");
+        }
+        Ok(())
+    }
+}
+
+impl Config {
+    /// Named presets. `tiny`/`default`/`perf` match the AOT manifest; the
+    /// `paper_*` presets mirror the paper's evaluation testbeds (sim-only).
+    pub fn preset(name: &str) -> Result<Config> {
+        let cfg = match name {
+            "tiny" => Config {
+                model: ModelConfig { h: 64, d: 128, e: 8, k: 2, bm: 32, bn: 32, capacity_factor: 1.0 },
+                system: SystemConfig { ranks: 2, nodes: 1, s_rank: 128, processors: 4 },
+                cost: CostModel::h100_nvlink(),
+            },
+            "default" => Config {
+                model: ModelConfig { h: 256, d: 512, e: 16, k: 2, bm: 128, bn: 64, capacity_factor: 1.0 },
+                system: SystemConfig { ranks: 4, nodes: 1, s_rank: 512, processors: 4 },
+                cost: CostModel::h100_nvlink(),
+            },
+            "perf" => Config {
+                model: ModelConfig { h: 512, d: 1024, e: 16, k: 2, bm: 128, bn: 64, capacity_factor: 1.0 },
+                system: SystemConfig { ranks: 4, nodes: 1, s_rank: 1024, processors: 4 },
+                cost: CostModel::h100_nvlink(),
+            },
+            // Paper §4: 8xH100, E up to 128, T up to 16K, H=2048, D=2048.
+            "paper_h100x8" => Config {
+                model: ModelConfig { h: 2048, d: 2048, e: 64, k: 2, bm: 128, bn: 64, capacity_factor: 1.0 },
+                system: SystemConfig { ranks: 8, nodes: 1, s_rank: 8192, processors: 132 },
+                cost: CostModel::h100_nvlink(),
+            },
+            // Paper Fig 5/11: 2xA100 NVLink, E=64, T=8K.
+            "paper_a100x2" => Config {
+                model: ModelConfig { h: 2048, d: 2048, e: 64, k: 2, bm: 128, bn: 64, capacity_factor: 1.0 },
+                system: SystemConfig { ranks: 2, nodes: 1, s_rank: 8192, processors: 108 },
+                cost: CostModel::h100_nvlink(),
+            },
+            // Paper §F: 4 nodes x 4 A100, 1 local expert, 25 GB/s NIC.
+            // nic_buffer is sized so the observed incast failure appears
+            // past 2048 tokens/GPU (Fig 17's non-termination).
+            "paper_multinode" => Config {
+                model: ModelConfig { h: 1024, d: 4096, e: 16, k: 2, bm: 128, bn: 64, capacity_factor: 1.0 },
+                system: SystemConfig { ranks: 16, nodes: 4, s_rank: 1024, processors: 108 },
+                cost: CostModel { nic_buffer: 32.0 * 1024.0 * 1024.0, ..CostModel::h100_nvlink() },
+            },
+            other => bail!("unknown preset '{other}' (try tiny/default/perf/paper_h100x8/paper_a100x2/paper_multinode)"),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.system.validate()?;
+        let m = &self.model;
+        if m.e % self.system.ranks != 0 {
+            bail!("experts ({}) must divide evenly over ranks ({})", m.e, self.system.ranks);
+        }
+        if self.system.s_rank % m.bm != 0 {
+            bail!("s_rank ({}) must be a multiple of bM ({})", self.system.s_rank, m.bm);
+        }
+        if m.d % m.bn != 0 || m.h % m.bn != 0 {
+            bail!("D ({}) and H ({}) must be multiples of bN ({})", m.d, m.h, m.bn);
+        }
+        if m.k == 0 || m.k > m.e {
+            bail!("k ({}) must be in 1..=E ({})", m.k, m.e);
+        }
+        Ok(())
+    }
+
+    /// Local experts per rank.
+    pub fn local_experts(&self) -> usize {
+        self.model.e / self.system.ranks
+    }
+
+    /// Owning rank of global expert `e`.
+    pub fn owner_of(&self, e: usize) -> usize {
+        e / self.local_experts()
+    }
+
+    /// Apply a `key=value` override (used by the CLI and config files).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let u = || value.parse::<usize>().with_context(|| format!("{key}={value}: not an integer"));
+        let f = || value.parse::<f64>().with_context(|| format!("{key}={value}: not a number"));
+        match key {
+            "h" => self.model.h = u()?,
+            "d" => self.model.d = u()?,
+            "e" | "experts" => self.model.e = u()?,
+            "k" | "topk" => self.model.k = u()?,
+            "bm" => self.model.bm = u()?,
+            "bn" => self.model.bn = u()?,
+            "capacity_factor" => self.model.capacity_factor = f()?,
+            "ranks" => self.system.ranks = u()?,
+            "nodes" => self.system.nodes = u()?,
+            "s_rank" | "tokens" => self.system.s_rank = u()?,
+            "processors" => self.system.processors = u()?,
+            "launch_overhead" => self.cost.launch_overhead = f()?,
+            "flops_per_processor" => self.cost.flops_per_processor = f()?,
+            "intra_bw" => self.cost.intra_bw = f()?,
+            "inter_bw" => self.cost.inter_bw = f()?,
+            "nic_buffer" => self.cost.nic_buffer = f()?,
+            "jitter_sigma" => self.cost.jitter_sigma = f()?,
+            "barrier_cost" => self.cost.barrier_cost = f()?,
+            "elem_bytes" => self.cost.elem_bytes = f()?,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Load `KEY=VALUE` lines ('#' comments allowed) over a preset base.
+    pub fn from_file(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let mut preset = "default".to_string();
+        for line in text.lines() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if let Some(v) = line.strip_prefix("preset=") {
+                preset = v.trim().to_string();
+            }
+        }
+        let mut cfg = Config::preset(&preset)?;
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || line.starts_with("preset=") {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("{path}:{}: expected KEY=VALUE", ln + 1))?;
+            cfg.set(k.trim(), v.trim())?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for p in ["tiny", "default", "perf", "paper_h100x8", "paper_a100x2", "paper_multinode"] {
+            Config::preset(p).unwrap();
+        }
+        assert!(Config::preset("nope").is_err());
+    }
+
+    #[test]
+    fn capacity_matches_python_math() {
+        // mirrors python expert_capacity(512, 16, 2, 1.0, 128) == 128
+        let cfg = Config::preset("default").unwrap();
+        assert_eq!(cfg.model.capacity(512), 128);
+        // tiny: ceil(128*2/8) = 32 -> max(32,32)=32
+        let tiny = Config::preset("tiny").unwrap();
+        assert_eq!(tiny.model.capacity(128), 32);
+    }
+
+    #[test]
+    fn capacity_is_aligned_and_at_least_bm() {
+        let m = ModelConfig { h: 8, d: 8, e: 64, k: 2, bm: 128, bn: 8, capacity_factor: 1.0 };
+        // tiny load: raw capacity would be 1, must clamp to bM
+        assert_eq!(m.capacity(16), 128);
+        // big load: stays aligned
+        let c = m.capacity(16384);
+        assert_eq!(c % 128, 0);
+        assert!(c >= 16384 * 2 / 64);
+    }
+
+    #[test]
+    fn table3_capacity_rows() {
+        // Paper Table 3 `max(bM, EC)` column (T tokens spread over 8 GPUs
+        // is not how they count — EC is per total tokens/E there; verify the
+        // alignment rule reproduces the max(bM, EC) column for T=4K..16K).
+        let mk = |e| ModelConfig { h: 2048, d: 2048, e, k: 1, bm: 128, bn: 64, capacity_factor: 1.0 };
+        assert_eq!(mk(16).capacity(4096), 256);
+        assert_eq!(mk(32).capacity(4096), 128);
+        assert_eq!(mk(64).capacity(4096), 128); // EC=64 -> clamp to bM
+        assert_eq!(mk(16).capacity(16384), 1024);
+    }
+
+    #[test]
+    fn owner_and_locality() {
+        let cfg = Config::preset("default").unwrap(); // 16 experts / 4 ranks
+        assert_eq!(cfg.local_experts(), 4);
+        assert_eq!(cfg.owner_of(0), 0);
+        assert_eq!(cfg.owner_of(5), 1);
+        assert_eq!(cfg.owner_of(15), 3);
+    }
+
+    #[test]
+    fn overrides_and_validation() {
+        let mut cfg = Config::preset("default").unwrap();
+        cfg.set("tokens", "1024").unwrap();
+        assert_eq!(cfg.system.s_rank, 1024);
+        cfg.set("e", "17").unwrap();
+        assert!(cfg.validate().is_err(), "17 experts over 4 ranks must fail");
+        assert!(cfg.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn multinode_topology() {
+        let cfg = Config::preset("paper_multinode").unwrap();
+        assert_eq!(cfg.system.ranks_per_node(), 4);
+        assert!(cfg.system.same_node(0, 3));
+        assert!(!cfg.system.same_node(3, 4));
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir().join("flashdmoe_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("exp.cfg");
+        std::fs::write(&p, "preset=tiny\ntokens=256 # more tokens\nranks=2\n").unwrap();
+        let cfg = Config::from_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.system.s_rank, 256);
+        assert_eq!(cfg.model.h, 64);
+    }
+}

@@ -1,0 +1,221 @@
+//! Real-execution bulk-synchronous baseline (the Megatron/DeepSpeed shape
+//! the paper compares against): the same gate/routing/expert math as the
+//! flash coordinator, but structured as a sequence of "kernel launches"
+//! separated by global barriers, with *padded* all-to-all payloads.
+//!
+//! Phases (each barrier-delimited, each counted as kernel launches):
+//!   1. gate (1 launch/rank)
+//!   2. dispatch AllToAll — every active (rank, expert) pair ships its full
+//!      capacity buffer, padding included (no payload efficiency)
+//!   3. expert FFN — one grouped-GEMM launch per local expert
+//!   4. combine AllToAll — full capacity buffers back
+//!   5. combine/scale (1 launch/rank)
+//!
+//! Numerics are identical to the flash path (same routing contract), which
+//! `rust/tests/integration.rs` asserts; the point of this module is a
+//! measured apples-to-apples latency/launch-count/payload comparison on
+//! the same substrate, and a second numeric witness for the coordinator.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+
+use anyhow::{Context, Result};
+
+use crate::config::Config;
+use crate::expert::ModelParams;
+use crate::gate::{dispatch_plan, route_from_scores};
+use crate::runtime::ComputeBackend;
+
+/// Metrics of one bulk-synchronous pass.
+#[derive(Clone, Debug, Default)]
+pub struct BaselineMetrics {
+    pub wall_secs: f64,
+    /// Logical kernel launches across all ranks (Table 1's comparison).
+    pub launches: usize,
+    /// Rows shipped over the (emulated) wire, padding included.
+    pub sent_rows: usize,
+    /// Valid rows among them.
+    pub valid_rows: usize,
+    /// Time spent inside barriers (exposed, non-overlapped communication).
+    pub barrier_secs: f64,
+}
+
+/// Output of the baseline forward.
+pub struct BaselineResult {
+    pub outputs: Vec<Vec<f32>>,
+    pub metrics: BaselineMetrics,
+}
+
+/// Bulk-synchronous MoE forward over the same substrate as the flash path.
+pub fn forward_sequential(
+    cfg: &Config,
+    params: &Arc<ModelParams>,
+    backend: &Arc<dyn ComputeBackend>,
+    inputs: &[Vec<f32>],
+) -> Result<BaselineResult> {
+    let ranks = cfg.system.ranks;
+    anyhow::ensure!(inputs.len() == ranks);
+    let m = cfg.model.clone();
+    let (s_rank, h, d) = (cfg.system.s_rank, cfg.model.h, cfg.model.d);
+    let capacity = cfg.model.capacity(s_rank);
+    let e_local = cfg.local_experts();
+
+    let barrier = Barrier::new(ranks);
+    let launches = AtomicUsize::new(0);
+    let sent_rows = AtomicUsize::new(0);
+    let valid_rows = AtomicUsize::new(0);
+    let barrier_nanos = AtomicU64::new(0);
+
+    // Exchange buffers: expert_in[owner][src][e_loc] is a (capacity, H)
+    // padded slab — the bulk-synchronous AllToAll always ships all of it.
+    let expert_in: Vec<Vec<Vec<std::sync::Mutex<Vec<f32>>>>> = (0..ranks)
+        .map(|_| {
+            (0..ranks)
+                .map(|_| (0..e_local).map(|_| std::sync::Mutex::new(vec![0.0f32; capacity * h])).collect())
+                .collect()
+        })
+        .collect();
+    let combine_back: Vec<Vec<Vec<std::sync::Mutex<Vec<f32>>>>> = (0..ranks)
+        .map(|_| {
+            (0..ranks)
+                .map(|_| (0..e_local).map(|_| std::sync::Mutex::new(vec![0.0f32; capacity * h])).collect())
+                .collect()
+        })
+        .collect();
+
+    let sync = |nanos: &AtomicU64| {
+        let t = std::time::Instant::now();
+        barrier.wait();
+        nanos.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    };
+
+    let t0 = std::time::Instant::now();
+    let outputs: Vec<Vec<f32>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..ranks)
+            .map(|rank| {
+                let a = &inputs[rank];
+                let expert_in = &expert_in;
+                let combine_back = &combine_back;
+                let launches = &launches;
+                let sent_rows = &sent_rows;
+                let valid_rows = &valid_rows;
+                let barrier_nanos = &barrier_nanos;
+                let m = &m;
+                let backend = backend.clone();
+                let params = params.clone();
+                let cfg = cfg.clone();
+                scope.spawn(move || -> Result<Vec<f32>> {
+                    // phase 1: gate (one launch)
+                    let scores = backend.gate_scores(a, &params.wg, s_rank)?;
+                    launches.fetch_add(1, Ordering::Relaxed);
+                    let routing = route_from_scores(scores, s_rank, m, capacity);
+                    let plan = dispatch_plan(&routing, m.bm, |e| cfg.owner_of(e));
+                    sync(barrier_nanos);
+
+                    // phase 2: padded dispatch AllToAll — ships every active
+                    // (expert) capacity slab in full (one "launch" per peer,
+                    // the collective's chunked sends)
+                    let mut active = vec![false; m.e];
+                    for t in &plan.tiles {
+                        active[t.expert as usize] = true;
+                    }
+                    for ex in 0..m.e {
+                        if !active[ex] {
+                            continue;
+                        }
+                        let owner = cfg.owner_of(ex);
+                        let e_loc = ex - owner * e_local;
+                        let mut slab = expert_in[owner][rank][e_loc].lock().unwrap();
+                        slab.fill(0.0);
+                        for t in plan.tiles.iter().filter(|t| t.expert as usize == ex) {
+                            for (row, &tok) in t.tokens.iter().enumerate() {
+                                let slot = t.tile as usize * m.bm + row;
+                                slab[slot * h..(slot + 1) * h]
+                                    .copy_from_slice(&a[tok as usize * h..(tok as usize + 1) * h]);
+                            }
+                            valid_rows.fetch_add(t.rows as usize, Ordering::Relaxed);
+                        }
+                        sent_rows.fetch_add(capacity, Ordering::Relaxed);
+                    }
+                    launches.fetch_add(ranks, Ordering::Relaxed); // NCCL send/recv chunks
+                    sync(barrier_nanos);
+
+                    // phase 3: expert FFN — one grouped launch per local
+                    // expert over the full padded (ranks*capacity, H) buffer
+                    let mut scratch = vec![0.0f32; m.bm * d];
+                    let mut expert_out: Vec<Vec<f32>> = Vec::with_capacity(e_local);
+                    for e_loc in 0..e_local {
+                        let global_e = rank * e_local + e_loc;
+                        let mut out = vec![0.0f32; ranks * capacity * h];
+                        for src in 0..ranks {
+                            let slab = expert_in[rank][src][e_loc].lock().unwrap();
+                            for tile in 0..capacity / m.bm {
+                                let x = &slab[tile * m.bm * h..(tile + 1) * m.bm * h];
+                                let dst = &mut out[(src * capacity + tile * m.bm) * h
+                                    ..(src * capacity + (tile + 1) * m.bm) * h];
+                                backend.ffn_tile(
+                                    x,
+                                    &params.experts[global_e],
+                                    global_e,
+                                    dst,
+                                    &mut scratch,
+                                )?;
+                            }
+                        }
+                        expert_out.push(out);
+                        launches.fetch_add(1, Ordering::Relaxed);
+                    }
+                    sync(barrier_nanos);
+
+                    // phase 4: padded combine AllToAll back to sources
+                    for e_loc in 0..e_local {
+                        for src in 0..ranks {
+                            let mut slab = combine_back[src][rank][e_loc].lock().unwrap();
+                            slab.copy_from_slice(
+                                &expert_out[e_loc][src * capacity * h..(src + 1) * capacity * h],
+                            );
+                            sent_rows.fetch_add(capacity, Ordering::Relaxed);
+                        }
+                    }
+                    launches.fetch_add(ranks, Ordering::Relaxed);
+                    sync(barrier_nanos);
+
+                    // phase 5: combine/scale (one launch)
+                    let mut out = vec![0.0f32; s_rank * h];
+                    for t in &plan.tiles {
+                        let owner = cfg.owner_of(t.expert as usize);
+                        let e_loc = t.expert as usize - owner * e_local;
+                        let slab = combine_back[rank][owner][e_loc].lock().unwrap();
+                        for (row, (&tok, &w)) in t.tokens.iter().zip(&t.weights).enumerate() {
+                            let slot = t.tile as usize * m.bm + row;
+                            let src = &slab[slot * h..(slot + 1) * h];
+                            let dst = &mut out[tok as usize * h..(tok as usize + 1) * h];
+                            for (o, &v) in dst.iter_mut().zip(src) {
+                                *o += w * v;
+                            }
+                        }
+                    }
+                    launches.fetch_add(1, Ordering::Relaxed);
+                    Ok(out)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|hd| hd.join().expect("baseline rank panicked"))
+            .collect::<Result<Vec<_>>>()
+    })
+    .context("baseline forward")?;
+
+    Ok(BaselineResult {
+        outputs,
+        metrics: BaselineMetrics {
+            wall_secs: t0.elapsed().as_secs_f64(),
+            launches: launches.load(Ordering::Relaxed),
+            sent_rows: sent_rows.load(Ordering::Relaxed),
+            valid_rows: valid_rows.load(Ordering::Relaxed),
+            barrier_secs: barrier_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+                / cfg.system.ranks as f64,
+        },
+    })
+}

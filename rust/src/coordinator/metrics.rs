@@ -1,0 +1,116 @@
+//! Per-rank and per-pass metrics: the measured analogs of the paper's
+//! evaluation quantities (SM utilization, latency, payload efficiency).
+
+/// Metrics for one rank over one forward pass.
+#[derive(Clone, Debug, Default)]
+pub struct RankMetrics {
+    /// Sum of processor task-execution time (seconds) across workers.
+    pub busy_secs: f64,
+    /// Rank wall time for the pass.
+    pub wall_secs: f64,
+    /// Processor workers on this rank.
+    pub processors: usize,
+    /// Tasks executed, by kind.
+    pub ffn_tasks: u32,
+    pub gemm_tasks: u32,
+    pub combine_tasks: u32,
+    /// Dispatch tiles this rank sent.
+    pub tiles_sent: usize,
+    /// Valid rows sent vs rows a padded implementation would send.
+    pub sent_rows: usize,
+    pub padded_rows: usize,
+    /// Over-capacity (token, expert) pairs dropped by the gate.
+    pub dropped: usize,
+    /// One-sided bytes received, split by locality.
+    pub bytes_in_local: u64,
+    pub bytes_in_remote: u64,
+    /// Peak ready-queue depth (scheduling pressure).
+    pub max_queue_depth: usize,
+}
+
+impl RankMetrics {
+    /// Processor-utilization analog of the paper's SM utilization: the
+    /// fraction of processor-seconds spent executing tasks.
+    pub fn utilization(&self) -> f64 {
+        if self.wall_secs == 0.0 || self.processors == 0 {
+            return 0.0;
+        }
+        (self.busy_secs / (self.wall_secs * self.processors as f64)).min(1.0)
+    }
+
+    pub fn total_tasks(&self) -> u32 {
+        self.ffn_tasks + self.gemm_tasks + self.combine_tasks
+    }
+
+    /// Fraction of padded dispatch traffic avoided (payload efficiency).
+    pub fn payload_savings(&self) -> f64 {
+        if self.padded_rows == 0 {
+            return 0.0;
+        }
+        1.0 - self.sent_rows as f64 / self.padded_rows as f64
+    }
+}
+
+/// Metrics for one whole forward pass.
+#[derive(Clone, Debug, Default)]
+pub struct PassMetrics {
+    /// End-to-end wall time (max over ranks; the paper's forward latency).
+    pub wall_secs: f64,
+    pub ranks: Vec<RankMetrics>,
+}
+
+impl PassMetrics {
+    /// Mean processor utilization across ranks.
+    pub fn utilization(&self) -> f64 {
+        if self.ranks.is_empty() {
+            return 0.0;
+        }
+        self.ranks.iter().map(|r| r.utilization()).sum::<f64>() / self.ranks.len() as f64
+    }
+
+    /// Tokens/s over the pass (throughput, Fig 13's metric).
+    pub fn throughput(&self, total_tokens: usize) -> f64 {
+        if self.wall_secs == 0.0 {
+            return 0.0;
+        }
+        total_tokens as f64 / self.wall_secs
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.ranks.iter().map(|r| r.bytes_in_local + r.bytes_in_remote).sum()
+    }
+
+    pub fn total_dropped(&self) -> usize {
+        self.ranks.iter().map(|r| r.dropped).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_bounds() {
+        let m = RankMetrics {
+            busy_secs: 2.0,
+            wall_secs: 1.0,
+            processors: 4,
+            ..Default::default()
+        };
+        assert!((m.utilization() - 0.5).abs() < 1e-12);
+        let idle = RankMetrics { wall_secs: 1.0, processors: 4, ..Default::default() };
+        assert_eq!(idle.utilization(), 0.0);
+    }
+
+    #[test]
+    fn payload_savings() {
+        let m = RankMetrics { sent_rows: 25, padded_rows: 100, ..Default::default() };
+        assert!((m.payload_savings() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pass_throughput() {
+        let p = PassMetrics { wall_secs: 0.5, ranks: vec![] };
+        assert_eq!(p.throughput(1000), 2000.0);
+    }
+}

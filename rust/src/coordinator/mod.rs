@@ -1,0 +1,27 @@
+//! The L3 coordinator — the paper's system contribution.
+//!
+//! Each rank runs a "persistent kernel": one OS/subscriber/scheduler
+//! context plus N processor workers that stay resident for the whole MoE
+//! operator. Actors exchange tile-granular task descriptors through a
+//! work-conserving ready queue; ranks exchange tiles through the
+//! write-conflict-free symmetric heap with one-sided put+signal
+//! (`crate::fabric`). There is no bulk-synchronous collective anywhere on
+//! the data path — the only barrier is the initial "kernel launch".
+//!
+//! Module map (mirrors Fig. 6):
+//! * [`scheduler`] — the ready queue + interrupt plumbing (Alg. 3).
+//! * [`rank`]      — one rank's actor group: subscriber decode loop
+//!   (Alg. 4), processor execution loop (Alg. 2), dispatch (Alg. 1).
+//! * [`moe`]       — the public `DistributedMoE` operator API.
+//! * [`baseline`]  — a real-execution bulk-synchronous baseline
+//!   (Megatron/DeepSpeed-shaped) over the same substrate, for measured
+//!   comparisons and numeric cross-checks.
+//! * [`metrics`]   — per-rank busy/idle accounting (SM-utilization analog).
+
+pub mod baseline;
+pub mod metrics;
+pub mod moe;
+pub mod rank;
+pub mod scheduler;
+
+pub use moe::{DistributedMoE, ForwardResult, TaskGraphMode};

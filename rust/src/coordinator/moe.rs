@@ -1,0 +1,106 @@
+//! The public `DistributedMoE` operator: the API a downstream framework
+//! embeds. One call = one fused MoE layer forward across all ranks.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::expert::ModelParams;
+use crate::fabric::SymmetricHeap;
+use crate::layout::LayoutDims;
+use crate::runtime::ComputeBackend;
+
+use super::metrics::PassMetrics;
+use super::rank::{run_rank, ClusterShared, RankOutput};
+
+pub use super::rank::TaskGraphMode;
+
+/// Result of one distributed forward pass.
+pub struct ForwardResult {
+    /// Per-rank output matrices (S_r, H), row-major.
+    pub outputs: Vec<Vec<f32>>,
+    pub metrics: PassMetrics,
+}
+
+/// The distributed MoE operator. Construct once (weights uploaded /
+/// sliced, symmetric heap allocated), call [`forward`] per layer pass.
+///
+/// Ranks are threads in this in-process fabric; every data movement goes
+/// through the write-conflict-free symmetric heap exactly as the paper's
+/// kernel moves tiles through NVSHMEM symmetric memory.
+pub struct DistributedMoE {
+    cfg: Config,
+    params: Arc<ModelParams>,
+    heap: Arc<SymmetricHeap>,
+    backend: Arc<dyn ComputeBackend>,
+    mode: TaskGraphMode,
+}
+
+impl DistributedMoE {
+    pub fn new(
+        cfg: Config,
+        params: Arc<ModelParams>,
+        backend: Arc<dyn ComputeBackend>,
+        mode: TaskGraphMode,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let dims = LayoutDims::from_config(&cfg);
+        let heap = Arc::new(SymmetricHeap::new(dims, cfg.system.ranks_per_node()));
+        Ok(Self { cfg, params, heap, backend, mode })
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    pub fn params(&self) -> &ModelParams {
+        &self.params
+    }
+
+    /// Bytes of the symmetric tensor L per rank (Table 3's Size(L)).
+    pub fn heap_bytes_per_rank(&self) -> f64 {
+        LayoutDims::from_config(&self.cfg).bytes(4.0)
+    }
+
+    /// One fused forward pass. `inputs[r]` is rank r's (S_r, H) tokens.
+    pub fn forward(&self, inputs: &[Vec<f32>]) -> Result<ForwardResult> {
+        anyhow::ensure!(
+            inputs.len() == self.cfg.system.ranks,
+            "need {} rank inputs, got {}",
+            self.cfg.system.ranks,
+            inputs.len()
+        );
+        self.heap.reset();
+        let shared = ClusterShared::new(
+            self.cfg.clone(),
+            self.params.clone(),
+            self.heap.clone(),
+            self.backend.clone(),
+            self.mode,
+        );
+        let t0 = std::time::Instant::now();
+        let rank_outputs: Vec<RankOutput> = std::thread::scope(|scope| {
+            let handles: Vec<_> = inputs
+                .iter()
+                .enumerate()
+                .map(|(r, a)| {
+                    let shared = &shared;
+                    scope.spawn(move || run_rank(shared, r, a))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rank thread panicked"))
+                .collect::<Result<Vec<_>>>()
+        })?;
+        let wall = t0.elapsed().as_secs_f64();
+        let mut outputs = Vec::with_capacity(rank_outputs.len());
+        let mut metrics = PassMetrics { wall_secs: wall, ranks: Vec::new() };
+        for ro in rank_outputs {
+            outputs.push(ro.out);
+            metrics.ranks.push(ro.metrics);
+        }
+        Ok(ForwardResult { outputs, metrics })
+    }
+}

@@ -1,0 +1,594 @@
+//! One rank's persistent "kernel": dispatch (Alg. 1), the Subscriber
+//! decode loop (Alg. 4), and the Processor execution loop (Alg. 2).
+//!
+//! A rank thread gates its own tokens, announces + dispatches tiles with
+//! one-sided put+signal, then becomes the OS/subscriber context: it polls
+//! the symmetric heap's signal flags, decodes arriving packets into task
+//! descriptors, feeds the work-conserving ready queue, and interrupts the
+//! processors once the self-correcting task bound is met. Processor
+//! worker threads execute FFN/GEMM/Combine tasks via the configured
+//! [`ComputeBackend`] and write combine packets straight back to the
+//! originating rank — no collective, no host round-trip.
+
+use std::cell::UnsafeCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::Config;
+use crate::expert::ModelParams;
+use crate::fabric::{decode_rows, SymmetricHeap, FLAG_EMPTY};
+use crate::gate::{dispatch_plan, route_from_scores};
+use crate::layout::{Coord, LayoutDims};
+use crate::runtime::ComputeBackend;
+use crate::task::{DependencyTable, Task, TaskType};
+
+use super::metrics::RankMetrics;
+use super::scheduler::TaskQueue;
+
+/// Task-graph granularity (DESIGN.md §6): `Fused` runs one FFN task per
+/// tile (both GEMMs fused, the Pallas `ffn_tile` unit); `Split` runs the
+/// paper's GEMM0→GEMM1 chain with per-block dependency latches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskGraphMode {
+    Fused,
+    Split,
+}
+
+/// State shared by every rank for one forward pass.
+pub struct ClusterShared {
+    pub cfg: Config,
+    pub capacity: usize,
+    pub dims: LayoutDims,
+    pub params: Arc<ModelParams>,
+    pub heap: Arc<SymmetricHeap>,
+    pub backend: Arc<dyn ComputeBackend>,
+    pub mode: TaskGraphMode,
+    /// Dispatch tiles destined to each rank (accumulated by sources).
+    pub expected_dispatch: Vec<AtomicU32>,
+    /// Sources that have finished announcing.
+    pub announced: AtomicU32,
+    /// The single "kernel launch" barrier.
+    pub start: Barrier,
+}
+
+impl ClusterShared {
+    pub fn new(
+        cfg: Config,
+        params: Arc<ModelParams>,
+        heap: Arc<SymmetricHeap>,
+        backend: Arc<dyn ComputeBackend>,
+        mode: TaskGraphMode,
+    ) -> Self {
+        let capacity = cfg.model.capacity(cfg.system.s_rank);
+        let dims = LayoutDims::from_config(&cfg);
+        let ranks = cfg.system.ranks;
+        Self {
+            cfg,
+            capacity,
+            dims,
+            params,
+            heap,
+            backend,
+            mode,
+            expected_dispatch: (0..ranks).map(|_| AtomicU32::new(0)).collect(),
+            announced: AtomicU32::new(0),
+            start: Barrier::new(ranks),
+        }
+    }
+}
+
+/// Column-sliced weights for split-mode GEMM tasks: `w1c[e][col]` is the
+/// (H, bN) stripe of local expert `e`'s W1, row-major.
+struct WeightSlices {
+    w1c: Vec<Vec<Vec<f32>>>,
+    b1c: Vec<Vec<Vec<f32>>>,
+    w2c: Vec<Vec<Vec<f32>>>,
+    b2c: Vec<Vec<Vec<f32>>>,
+}
+
+fn slice_cols(w: &[f32], rows: usize, cols: usize, bn: usize) -> Vec<Vec<f32>> {
+    (0..cols / bn)
+        .map(|c| {
+            let mut out = vec![0.0f32; rows * bn];
+            for r in 0..rows {
+                out[r * bn..(r + 1) * bn].copy_from_slice(&w[r * cols + c * bn..r * cols + c * bn + bn]);
+            }
+            out
+        })
+        .collect()
+}
+
+impl WeightSlices {
+    fn build(shared: &ClusterShared, rank: usize) -> Self {
+        let m = &shared.cfg.model;
+        let e_local = shared.cfg.local_experts();
+        let mut w1c = Vec::new();
+        let mut b1c = Vec::new();
+        let mut w2c = Vec::new();
+        let mut b2c = Vec::new();
+        for el in 0..e_local {
+            let ex = &shared.params.experts[rank * e_local + el];
+            w1c.push(slice_cols(&ex.w1, m.h, m.d, m.bn));
+            b1c.push(ex.b1.chunks(m.bn).map(|c| c.to_vec()).collect());
+            w2c.push(slice_cols(&ex.w2, m.d, m.h, m.bn));
+            b2c.push(ex.b2.chunks(m.bn).map(|c| c.to_vec()).collect());
+        }
+        Self { w1c, b1c, w2c, b2c }
+    }
+}
+
+/// Rank-local staging for split-mode intermediates. Concurrent GEMM tasks
+/// write disjoint column stripes of one block, so raw interior mutability
+/// is sound (same disjointness argument as the symmetric heap).
+struct Staging {
+    data: UnsafeCell<Vec<f32>>,
+    stride: usize,
+}
+
+unsafe impl Sync for Staging {}
+
+impl Staging {
+    fn new(blocks: usize, stride: usize) -> Self {
+        Self { data: UnsafeCell::new(vec![0.0f32; blocks * stride]), stride }
+    }
+
+    /// Write a (bm, bn) tile into columns [col*bn, …) of `block`.
+    /// SAFETY: distinct (block, col) pairs touch disjoint elements.
+    fn write_stripe(&self, block: usize, bm: usize, width: usize, col: usize, bn: usize, tile: &[f32]) {
+        unsafe {
+            let base = (*self.data.get()).as_mut_ptr().add(block * self.stride);
+            for r in 0..bm {
+                std::ptr::copy_nonoverlapping(
+                    tile.as_ptr().add(r * bn),
+                    base.add(r * width + col * bn),
+                    bn,
+                );
+            }
+        }
+    }
+
+    /// Read a whole block. Caller must have synchronized with all writers
+    /// (dependency latch release + queue handoff establish happens-before).
+    fn read_block(&self, block: usize) -> &[f32] {
+        unsafe {
+            let v = &*self.data.get();
+            &v[block * self.stride..(block + 1) * self.stride]
+        }
+    }
+}
+
+/// Pass-lifetime counters driving the self-correcting task bound.
+struct PassCounters {
+    ffn_decoded: AtomicU32,
+    ffn_completed: AtomicU32,
+    combine_decoded: AtomicU32,
+    combine_completed: AtomicU32,
+    gemm_tasks: AtomicU32,
+    busy_nanos: AtomicU64,
+}
+
+impl PassCounters {
+    fn new() -> Self {
+        Self {
+            ffn_decoded: AtomicU32::new(0),
+            ffn_completed: AtomicU32::new(0),
+            combine_decoded: AtomicU32::new(0),
+            combine_completed: AtomicU32::new(0),
+            gemm_tasks: AtomicU32::new(0),
+            busy_nanos: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Everything a processor worker needs (shared immutably per pass).
+struct RankCtx<'a> {
+    shared: &'a ClusterShared,
+    rank: usize,
+    queue: TaskQueue,
+    counters: PassCounters,
+    /// T_phi lookup: (global expert, tile) -> (tokens, combine weights).
+    tphi: HashMap<(u32, u32), (Vec<u32>, Vec<f32>)>,
+    slices: Option<WeightSlices>,
+    mid: Option<Staging>,
+    out_stage: Option<Staging>,
+    g0_latch: Option<DependencyTable>,
+    g1_latch: Option<DependencyTable>,
+    /// Valid rows per split-mode block (indexed by block id).
+    block_rows: Vec<AtomicU32>,
+}
+
+impl<'a> RankCtx<'a> {
+    fn block_id(&self, peer: usize, e_loc: usize, tile: usize) -> usize {
+        let d = &self.shared.dims;
+        (peer * d.e_local + e_loc) * d.tiles_per_expert() + tile
+    }
+}
+
+/// The result of one rank's forward pass.
+pub struct RankOutput {
+    pub out: Vec<f32>,
+    pub metrics: RankMetrics,
+}
+
+/// Run one rank's full persistent-kernel pass over its (S_r, H) tokens.
+pub fn run_rank(shared: &ClusterShared, rank: usize, a: &[f32]) -> Result<RankOutput> {
+    let cfg = &shared.cfg;
+    let (s_rank, h) = (cfg.system.s_rank, cfg.model.h);
+    let e_local = cfg.local_experts();
+    anyhow::ensure!(a.len() == s_rank * h, "rank {rank}: bad input length");
+
+    // ---- "kernel launch" ---------------------------------------------------
+    shared.start.wait();
+    let t0 = Instant::now();
+
+    // ---- FusedGate (Alg. 1 line 1) ------------------------------------------
+    let scores = shared
+        .backend
+        .gate_scores(a, &shared.params.wg, s_rank)
+        .context("gate")?;
+    let routing = route_from_scores(scores, s_rank, &cfg.model, shared.capacity);
+    let plan = dispatch_plan(&routing, cfg.model.bm, |e| cfg.owner_of(e));
+
+    // ---- announce expected dispatch-tile counts ------------------------------
+    let mut per_dst = vec![0u32; cfg.system.ranks];
+    for t in &plan.tiles {
+        per_dst[t.dst as usize] += 1;
+    }
+    for (dst, n) in per_dst.iter().enumerate() {
+        if *n > 0 {
+            shared.expected_dispatch[dst].fetch_add(*n, Ordering::AcqRel);
+        }
+    }
+    shared.announced.fetch_add(1, Ordering::AcqRel);
+
+    // ---- build T_phi and the pass context ------------------------------------
+    let mut tphi = HashMap::with_capacity(plan.tiles.len());
+    for t in &plan.tiles {
+        tphi.insert((t.expert, t.tile), (t.tokens.clone(), t.weights.clone()));
+    }
+    let m = &cfg.model;
+    let d_cols = (m.d / m.bn) as u32;
+    let h_cols = (m.h / m.bn) as u32;
+    let blocks = cfg.system.ranks * e_local * shared.dims.tiles_per_expert();
+    let ctx = RankCtx {
+        shared,
+        rank,
+        queue: TaskQueue::new(),
+        counters: PassCounters::new(),
+        tphi,
+        slices: (shared.mode == TaskGraphMode::Split).then(|| WeightSlices::build(shared, rank)),
+        mid: (shared.mode == TaskGraphMode::Split).then(|| Staging::new(blocks, m.bm * m.d)),
+        out_stage: (shared.mode == TaskGraphMode::Split).then(|| Staging::new(blocks, m.bm * m.h)),
+        g0_latch: (shared.mode == TaskGraphMode::Split).then(|| DependencyTable::new(blocks, d_cols)),
+        g1_latch: (shared.mode == TaskGraphMode::Split).then(|| DependencyTable::new(blocks, h_cols)),
+        block_rows: (0..blocks).map(|_| AtomicU32::new(0)).collect(),
+    };
+
+    // ---- dispatch (payload-efficient, one-sided) ------------------------------
+    let mut pack = vec![0.0f32; m.bm * h];
+    for t in &plan.tiles {
+        for (row, &tok) in t.tokens.iter().enumerate() {
+            pack[row * h..(row + 1) * h].copy_from_slice(&a[tok as usize * h..(tok as usize + 1) * h]);
+        }
+        let e_loc = t.expert as usize - cfg.owner_of(t.expert as usize) * e_local;
+        let coord = Coord { p: rank, r: 0, b: 1, e: e_loc, c: t.tile as usize * m.bm };
+        shared
+            .heap
+            .put_signal(rank, t.dst as usize, coord, &pack[..t.rows as usize * h])
+            .context("dispatch put")?;
+    }
+    let my_expected_combine = plan.tiles.len() as u32;
+
+    // ---- actor phase: processors + subscriber ---------------------------------
+    let processors = cfg.system.processors;
+    let partials: Vec<Vec<f32>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(processors);
+        for _ in 0..processors {
+            handles.push(scope.spawn(|| processor_loop(&ctx)));
+        }
+        subscriber_loop(&ctx, my_expected_combine);
+        handles
+            .into_iter()
+            .map(|hd| hd.join().expect("processor panicked"))
+            .collect::<Result<Vec<_>>>()
+    })?;
+
+    // ---- reduce processor partials into the output ----------------------------
+    let mut out = vec![0.0f32; s_rank * h];
+    for p in &partials {
+        for (o, v) in out.iter_mut().zip(p) {
+            *o += *v;
+        }
+    }
+
+    let wall = t0.elapsed().as_secs_f64();
+    let (bytes_in_local, bytes_in_remote) = shared.heap.bytes_in(rank);
+    let c = &ctx.counters;
+    let metrics = RankMetrics {
+        busy_secs: c.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        wall_secs: wall,
+        processors,
+        ffn_tasks: c.ffn_completed.load(Ordering::Relaxed),
+        gemm_tasks: c.gemm_tasks.load(Ordering::Relaxed),
+        combine_tasks: c.combine_completed.load(Ordering::Relaxed),
+        tiles_sent: plan.tiles.len(),
+        sent_rows: plan.sent_rows,
+        padded_rows: plan.padded_rows,
+        dropped: routing.dropped,
+        bytes_in_local,
+        bytes_in_remote,
+        max_queue_depth: ctx.queue.max_depth(),
+    };
+    Ok(RankOutput { out, metrics })
+}
+
+/// Subscriber actor (Alg. 4): sweep flags, decode packets into tasks, feed
+/// the scheduler, interrupt once the self-correcting bound is met.
+/// Watchdog: if no flag progress and no task completion for this long the
+/// pass is wedged (protocol bug / lost signal) — fail loudly with a
+/// progress diagnostic instead of hanging the process.
+const WATCHDOG: std::time::Duration = std::time::Duration::from_secs(120);
+
+fn subscriber_loop(ctx: &RankCtx, my_expected_combine: u32) {
+    let shared = ctx.shared;
+    let dims = &shared.dims;
+    let ranks = shared.cfg.system.ranks;
+    let mut visited = vec![false; dims.num_flags()];
+    let mut seen_dispatch = 0u32;
+    let mut seen_combine = 0u32;
+    let mut seq = 0u32;
+    let mut idle_spins = 0u32;
+    let mut last_progress = Instant::now();
+    loop {
+        let mut progressed = false;
+        for peer in 0..ranks {
+            for e_loc in 0..dims.e_local {
+                for tile in 0..dims.tiles_per_expert() {
+                    // round 0: dispatch packets (token tiles for my experts)
+                    let f0 = dims.flag_index(peer, 0, e_loc, tile);
+                    if !visited[f0] {
+                        let flag = shared.heap.poll(ctx.rank, f0);
+                        if flag != FLAG_EMPTY {
+                            visited[f0] = true;
+                            progressed = true;
+                            seen_dispatch += 1;
+                            decode_dispatch(ctx, peer, e_loc, tile, decode_rows(flag), &mut seq);
+                        }
+                    }
+                    // round 1: combine packets (results for my tokens)
+                    let f1 = dims.flag_index(peer, 1, e_loc, tile);
+                    if !visited[f1] {
+                        let flag = shared.heap.poll(ctx.rank, f1);
+                        if flag != FLAG_EMPTY {
+                            visited[f1] = true;
+                            progressed = true;
+                            seen_combine += 1;
+                            ctx.counters.combine_decoded.fetch_add(1, Ordering::Relaxed);
+                            ctx.queue.push(Task {
+                                task_type: TaskType::Combine,
+                                peer: peer as u32,
+                                expert: e_loc as u32,
+                                tile: tile as u32,
+                                col: 0,
+                                rows: decode_rows(flag) as u32,
+                                seq: next_seq(&mut seq),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        // self-correcting task bound: all sources announced, all announced
+        // dispatches decoded and executed, all my combines decoded and applied.
+        if shared.announced.load(Ordering::Acquire) as usize == ranks {
+            let expected = shared.expected_dispatch[ctx.rank].load(Ordering::Acquire);
+            let c = &ctx.counters;
+            if seen_dispatch == expected
+                && seen_combine == my_expected_combine
+                && c.ffn_completed.load(Ordering::Acquire) == c.ffn_decoded.load(Ordering::Acquire)
+                && c.combine_completed.load(Ordering::Acquire)
+                    == c.combine_decoded.load(Ordering::Acquire)
+            {
+                ctx.queue.stop_all();
+                return;
+            }
+        }
+        if progressed {
+            idle_spins = 0;
+            last_progress = Instant::now();
+        } else {
+            idle_spins += 1;
+            if idle_spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+            if idle_spins % 4096 == 0 && last_progress.elapsed() > WATCHDOG {
+                let c = &ctx.counters;
+                ctx.queue.stop_all();
+                panic!(
+                    "rank {} wedged (watchdog {}s): announced {}/{ranks}, \
+                     dispatch {seen_dispatch}/{}, combine {seen_combine}/{my_expected_combine}, \
+                     ffn {}/{}, combine-exec {}/{}",
+                    ctx.rank,
+                    WATCHDOG.as_secs(),
+                    shared.announced.load(Ordering::Acquire),
+                    shared.expected_dispatch[ctx.rank].load(Ordering::Acquire),
+                    c.ffn_completed.load(Ordering::Acquire),
+                    c.ffn_decoded.load(Ordering::Acquire),
+                    c.combine_completed.load(Ordering::Acquire),
+                    c.combine_decoded.load(Ordering::Acquire),
+                );
+            }
+        }
+    }
+}
+
+fn next_seq(seq: &mut u32) -> u32 {
+    *seq += 1;
+    *seq
+}
+
+/// Decode one dispatch packet into task descriptors (Alg. 4 line 18).
+fn decode_dispatch(ctx: &RankCtx, peer: usize, e_loc: usize, tile: usize, rows: usize, seq: &mut u32) {
+    let m = &ctx.shared.cfg.model;
+    ctx.counters.ffn_decoded.fetch_add(1, Ordering::Relaxed);
+    match ctx.shared.mode {
+        TaskGraphMode::Fused => {
+            ctx.queue.push(Task {
+                task_type: TaskType::FusedFfn,
+                peer: peer as u32,
+                expert: e_loc as u32,
+                tile: tile as u32,
+                col: 0,
+                rows: rows as u32,
+                seq: next_seq(seq),
+            });
+        }
+        TaskGraphMode::Split => {
+            let block = ctx.block_id(peer, e_loc, tile);
+            ctx.block_rows[block].store(rows as u32, Ordering::Release);
+            let tasks: Vec<Task> = (0..(m.d / m.bn) as u32)
+                .map(|col| Task {
+                    task_type: TaskType::Gemm0,
+                    peer: peer as u32,
+                    expert: e_loc as u32,
+                    tile: tile as u32,
+                    col,
+                    rows: rows as u32,
+                    seq: next_seq(seq),
+                })
+                .collect();
+            ctx.queue.push_batch(tasks);
+        }
+    }
+}
+
+/// Processor actor (Alg. 2): pop → execute → notify, until interrupted.
+/// Returns this worker's partial output accumulator.
+fn processor_loop(ctx: &RankCtx) -> Result<Vec<f32>> {
+    let shared = ctx.shared;
+    let m = &shared.cfg.model;
+    let (s_rank, h, d) = (shared.cfg.system.s_rank, m.h, m.d);
+    let mut partial = vec![0.0f32; s_rank * h];
+    let mut scratch = vec![0.0f32; m.bm * d.max(h)];
+    let mut tile_out = vec![0.0f32; m.bm * h.max(m.bn)];
+    while let Some(task) = ctx.queue.pop() {
+        let t0 = Instant::now();
+        execute_task(ctx, &task, &mut partial, &mut scratch, &mut tile_out)
+            .with_context(|| format!("rank {} task {task:?}", ctx.rank))?;
+        ctx.counters
+            .busy_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+    Ok(partial)
+}
+
+fn execute_task(
+    ctx: &RankCtx,
+    task: &Task,
+    partial: &mut [f32],
+    scratch: &mut [f32],
+    tile_out: &mut [f32],
+) -> Result<()> {
+    let shared = ctx.shared;
+    let m = &shared.cfg.model;
+    let (h, bm, bn) = (m.h, m.bm, m.bn);
+    let e_local = shared.cfg.local_experts();
+    let (peer, e_loc, tile) = (task.peer as usize, task.expert as usize, task.tile as usize);
+    match task.task_type {
+        TaskType::FusedFfn => {
+            let coord = Coord { p: peer, r: 0, b: 1, e: e_loc, c: tile * bm };
+            let x = shared.heap.read(ctx.rank, coord, bm);
+            let global_e = ctx.rank * e_local + e_loc;
+            shared.backend.ffn_tile(
+                x,
+                &shared.params.experts[global_e],
+                global_e,
+                &mut tile_out[..bm * h],
+                scratch,
+            )?;
+            // one-sided combine write-back to the originating rank
+            let back = Coord { p: ctx.rank, r: 1, b: 1, e: e_loc, c: tile * bm };
+            shared
+                .heap
+                .put_signal(ctx.rank, peer, back, &tile_out[..task.rows as usize * h])?;
+            ctx.counters.ffn_completed.fetch_add(1, Ordering::Release);
+        }
+        TaskType::Gemm0 => {
+            let col = task.col as usize;
+            let coord = Coord { p: peer, r: 0, b: 1, e: e_loc, c: tile * bm };
+            let x = shared.heap.read(ctx.rank, coord, bm);
+            let sl = ctx.slices.as_ref().unwrap();
+            shared.backend.gemm0_tile(
+                x,
+                &sl.w1c[e_loc][col],
+                &sl.b1c[e_loc][col],
+                &mut tile_out[..bm * bn],
+            )?;
+            let block = ctx.block_id(peer, e_loc, tile);
+            ctx.mid.as_ref().unwrap().write_stripe(block, bm, m.d, col, bn, &tile_out[..bm * bn]);
+            ctx.counters.gemm_tasks.fetch_add(1, Ordering::Relaxed);
+            if ctx.g0_latch.as_ref().unwrap().complete_one(block) {
+                // full (bM, D) intermediate ready -> unlock the GEMM1 chain
+                let tasks: Vec<Task> = (0..(m.h / bn) as u32)
+                    .map(|c2| Task {
+                        task_type: TaskType::Gemm1,
+                        col: c2,
+                        seq: task.seq,
+                        ..*task
+                    })
+                    .collect();
+                ctx.queue.push_batch(tasks);
+            }
+        }
+        TaskType::Gemm1 => {
+            let col = task.col as usize;
+            let block = ctx.block_id(peer, e_loc, tile);
+            let mid = ctx.mid.as_ref().unwrap().read_block(block);
+            let sl = ctx.slices.as_ref().unwrap();
+            shared.backend.gemm1_tile(
+                mid,
+                &sl.w2c[e_loc][col],
+                &sl.b2c[e_loc][col],
+                &mut tile_out[..bm * bn],
+            )?;
+            let out_stage = ctx.out_stage.as_ref().unwrap();
+            out_stage.write_stripe(block, bm, h, col, bn, &tile_out[..bm * bn]);
+            ctx.counters.gemm_tasks.fetch_add(1, Ordering::Relaxed);
+            if ctx.g1_latch.as_ref().unwrap().complete_one(block) {
+                // full (bM, H) output tile ready -> combine write-back
+                let rows = ctx.block_rows[block].load(Ordering::Acquire) as usize;
+                let y = out_stage.read_block(block);
+                let back = Coord { p: ctx.rank, r: 1, b: 1, e: e_loc, c: tile * bm };
+                shared.heap.put_signal(ctx.rank, peer, back, &y[..rows * h])?;
+                ctx.counters.ffn_completed.fetch_add(1, Ordering::Release);
+            }
+        }
+        TaskType::Combine => {
+            // `peer` is the expert-owner rank; e_loc indexes its experts.
+            let rows = task.rows as usize;
+            let coord = Coord { p: peer, r: 1, b: 1, e: e_loc, c: tile * bm };
+            let y = shared.heap.read(ctx.rank, coord, rows);
+            let global_e = (peer * e_local + e_loc) as u32;
+            let (tokens, weights) = ctx
+                .tphi
+                .get(&(global_e, task.tile))
+                .ok_or_else(|| anyhow!("combine for unknown tile (e={global_e}, t={tile})"))?;
+            anyhow::ensure!(tokens.len() == rows, "combine row mismatch");
+            for (row, (&tok, &w)) in tokens.iter().zip(weights).enumerate() {
+                let dstrow = &mut partial[tok as usize * h..(tok as usize + 1) * h];
+                let src = &y[row * h..(row + 1) * h];
+                for (o, &v) in dstrow.iter_mut().zip(src) {
+                    *o += w * v;
+                }
+            }
+            ctx.counters.combine_completed.fetch_add(1, Ordering::Release);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,142 @@
+//! Expert parameter store: deterministic initialization and per-rank
+//! ownership of the 3-D expert weight tensor X ∈ R^{E×H×D} (plus the
+//! second GEMM's weights and biases, and the shared gate matrix).
+//!
+//! Weights are generated from a seeded PRNG stream keyed by expert id so
+//! any rank (or the monolithic PJRT reference) can reproduce any expert's
+//! parameters without communication — the multi-rank coordinator and the
+//! single-shot oracle see bit-identical weights.
+
+use crate::config::Config;
+use crate::util::prng::Rng;
+
+/// Parameters of a single expert FFN.
+#[derive(Clone, Debug)]
+pub struct ExpertParams {
+    pub w1: Vec<f32>, // (H, D) row-major
+    pub b1: Vec<f32>, // (D,)
+    pub w2: Vec<f32>, // (D, H) row-major
+    pub b2: Vec<f32>, // (H,)
+}
+
+/// All model parameters; `experts[e]` is global expert e.
+#[derive(Clone, Debug)]
+pub struct ModelParams {
+    pub wg: Vec<f32>, // (H, E) row-major
+    pub experts: Vec<ExpertParams>,
+    pub h: usize,
+    pub d: usize,
+}
+
+/// Weight init scale (≈ Xavier for the default shapes; the exact value is
+/// irrelevant to correctness, it only keeps activations O(1)).
+const INIT_STD: f32 = 0.1;
+
+impl ModelParams {
+    /// Deterministically generate all parameters from `seed`.
+    pub fn generate(cfg: &Config, seed: u64) -> Self {
+        let (h, d, e) = (cfg.model.h, cfg.model.d, cfg.model.e);
+        let base = Rng::new(seed);
+        let mut gate_rng = base.fork(0xFFFF_0000);
+        let wg = gate_rng.normal_vec(h * e, 1.0);
+        let experts = (0..e)
+            .map(|ex| {
+                let mut r = base.fork(ex as u64 + 1);
+                ExpertParams {
+                    w1: r.normal_vec(h * d, INIT_STD),
+                    b1: r.normal_vec(d, INIT_STD),
+                    w2: r.normal_vec(d * h, INIT_STD),
+                    b2: r.normal_vec(h, INIT_STD),
+                }
+            })
+            .collect();
+        Self { wg, experts, h, d }
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.experts.len()
+    }
+
+    /// Pack expert weights into the (E,H,D)/(E,D)/(E,D,H)/(E,H) flat
+    /// tensors the monolithic `moe_layer` artifact takes as parameters.
+    pub fn pack_for_artifact(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut w1 = Vec::with_capacity(self.experts.len() * self.h * self.d);
+        let mut b1 = Vec::with_capacity(self.experts.len() * self.d);
+        let mut w2 = Vec::with_capacity(self.experts.len() * self.d * self.h);
+        let mut b2 = Vec::with_capacity(self.experts.len() * self.h);
+        for ex in &self.experts {
+            w1.extend_from_slice(&ex.w1);
+            b1.extend_from_slice(&ex.b1);
+            w2.extend_from_slice(&ex.w2);
+            b2.extend_from_slice(&ex.b2);
+        }
+        (w1, b1, w2, b2)
+    }
+
+    /// Parameter count (for README/Table-4-style reporting).
+    pub fn num_params(&self) -> usize {
+        self.wg.len()
+            + self
+                .experts
+                .iter()
+                .map(|e| e.w1.len() + e.b1.len() + e.w2.len() + e.b2.len())
+                .sum::<usize>()
+    }
+}
+
+/// Generate one rank's token matrix (S_r, H), keyed by rank so every rank
+/// draws an independent, reproducible sequence.
+pub fn generate_tokens(cfg: &Config, seed: u64, rank: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed).fork(0xAAAA_0000 + rank as u64);
+    rng.normal_vec(cfg.system.s_rank * cfg.model.h, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn generation_is_deterministic_and_expert_keyed() {
+        let cfg = Config::preset("tiny").unwrap();
+        let a = ModelParams::generate(&cfg, 7);
+        let b = ModelParams::generate(&cfg, 7);
+        assert_eq!(a.wg, b.wg);
+        assert_eq!(a.experts[3].w1, b.experts[3].w1);
+        let c = ModelParams::generate(&cfg, 8);
+        assert_ne!(a.experts[0].w1, c.experts[0].w1);
+        // experts differ from each other
+        assert_ne!(a.experts[0].w1, a.experts[1].w1);
+    }
+
+    #[test]
+    fn packing_layout_is_expert_major() {
+        let cfg = Config::preset("tiny").unwrap();
+        let p = ModelParams::generate(&cfg, 1);
+        let (w1, b1, w2, b2) = p.pack_for_artifact();
+        let (h, d, e) = (p.h, p.d, p.num_experts());
+        assert_eq!(w1.len(), e * h * d);
+        assert_eq!(b1.len(), e * d);
+        assert_eq!(w2.len(), e * d * h);
+        assert_eq!(b2.len(), e * h);
+        assert_eq!(&w1[2 * h * d..2 * h * d + 5], &p.experts[2].w1[..5]);
+    }
+
+    #[test]
+    fn token_streams_are_rank_keyed() {
+        let cfg = Config::preset("tiny").unwrap();
+        let t0 = generate_tokens(&cfg, 3, 0);
+        let t1 = generate_tokens(&cfg, 3, 1);
+        assert_eq!(t0.len(), cfg.system.s_rank * cfg.model.h);
+        assert_ne!(t0, t1);
+        assert_eq!(t0, generate_tokens(&cfg, 3, 0));
+    }
+
+    #[test]
+    fn param_count_matches_closed_form() {
+        let cfg = Config::preset("tiny").unwrap();
+        let p = ModelParams::generate(&cfg, 1);
+        let (h, d, e) = (cfg.model.h, cfg.model.d, cfg.model.e);
+        assert_eq!(p.num_params(), h * e + e * (h * d + d + d * h + h));
+    }
+}

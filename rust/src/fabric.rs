@@ -1,0 +1,281 @@
+//! The simulated multi-GPU fabric: a PGAS symmetric heap with one-sided,
+//! device-initiated transfers (NVSHMEM `putmem_signal` semantics).
+//!
+//! Every rank owns an identical heap: the symmetric tensor `L` (tile data)
+//! plus an array of signal flags. A transfer is `put_signal(src, dst, …)`:
+//! copy the payload into the destination's inbox cell, then release-store
+//! the flag — the destination's Subscriber observes the flag with an
+//! acquire load and may then read the payload (the release/acquire pair is
+//! the `nvshmem_fence` analog in Alg. 4's "Enforce memory consistency
+//! before consuming packet").
+//!
+//! Safety: concurrent raw writes into a shared buffer are sound only
+//! because the paper's Theorem 3.1 applies — `put_signal` *enforces* the
+//! Definition C.2 validity rules at runtime (returning an error on any
+//! forged coordinate), and valid writes from distinct sources are
+//! write-write conflict-free by construction. The property test in
+//! `rust/tests/properties.rs` fuzzes exactly this argument.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::layout::{Coord, LayoutDims, Write};
+
+/// Signal flag encoding: 0 = empty; otherwise `rows + 1` valid rows are
+/// present in the guarded tile (the signal carries the payload-efficiency
+/// metadata, like the paper's packet headers).
+pub const FLAG_EMPTY: u64 = 0;
+
+pub fn encode_rows(rows: usize) -> u64 {
+    rows as u64 + 1
+}
+
+pub fn decode_rows(flag: u64) -> usize {
+    debug_assert_ne!(flag, FLAG_EMPTY);
+    (flag - 1) as usize
+}
+
+/// One rank's symmetric heap segment.
+struct RankHeap {
+    /// The symmetric tensor L (f32 elements).
+    data: UnsafeCell<Vec<f32>>,
+    /// One signal flag per (peer, round, local expert, tile).
+    flags: Vec<AtomicU64>,
+    /// Transfer accounting (bytes received), split by locality.
+    bytes_in_local: AtomicU64,
+    bytes_in_remote: AtomicU64,
+    puts_in: AtomicU64,
+}
+
+/// The whole-fabric symmetric heap. Shared by all rank threads via `Arc`.
+pub struct SymmetricHeap {
+    dims: LayoutDims,
+    ranks: Vec<RankHeap>,
+    /// ranks per node, for intra/inter accounting.
+    ranks_per_node: usize,
+}
+
+// SAFETY: `data` is only mutated through `put_signal`, which enforces the
+// Definition C.2 validity rules; valid writes from distinct sources target
+// disjoint memory (Theorem 3.1, proved in layout.rs and property-tested),
+// and same-source writes are ordered by that source's program order.
+// Readers synchronize through the release-store / acquire-load flag pair.
+unsafe impl Sync for SymmetricHeap {}
+unsafe impl Send for SymmetricHeap {}
+
+impl SymmetricHeap {
+    pub fn new(dims: LayoutDims, ranks_per_node: usize) -> Self {
+        let ranks = (0..dims.p)
+            .map(|_| RankHeap {
+                data: UnsafeCell::new(vec![0.0f32; dims.elems()]),
+                flags: (0..dims.num_flags()).map(|_| AtomicU64::new(FLAG_EMPTY)).collect(),
+                bytes_in_local: AtomicU64::new(0),
+                bytes_in_remote: AtomicU64::new(0),
+                puts_in: AtomicU64::new(0),
+            })
+            .collect();
+        Self { dims, ranks, ranks_per_node }
+    }
+
+    pub fn dims(&self) -> &LayoutDims {
+        &self.dims
+    }
+
+    /// One-sided put + signal: copy `payload` (rows × H) into rank `dst`'s
+    /// cell at `coord` (rows starting at `coord.c`), then release-store
+    /// `encode_rows(rows)` into the destination flag for
+    /// `(coord.p, coord.r, coord.e, tile)`.
+    ///
+    /// Enforces Definition C.2; forged coordinates are rejected, which is
+    /// what makes the unsafe interior sound.
+    pub fn put_signal(
+        &self,
+        src: usize,
+        dst: usize,
+        coord: Coord,
+        payload: &[f32],
+    ) -> Result<()> {
+        let h = self.dims.h;
+        if payload.is_empty() || payload.len() % h != 0 {
+            bail!("payload must be a positive multiple of H={h} floats");
+        }
+        let rows = payload.len() / h;
+        let w = Write { src, dst, coord, rows };
+        if !crate::layout::write_is_valid(&w, &self.dims) {
+            bail!("invalid one-sided write (Definition C.2): {w:?}");
+        }
+        if coord.c % self.dims.bm != 0 {
+            bail!("tile writes must start at a bM-aligned slot, got c={}", coord.c);
+        }
+        let target = &self.ranks[dst];
+        let off = self.dims.offset(coord);
+        // SAFETY: bounds checked by write_is_valid + offset debug assert;
+        // disjointness across concurrent writers by Theorem 3.1.
+        unsafe {
+            let base = (*target.data.get()).as_mut_ptr().add(off);
+            std::ptr::copy_nonoverlapping(payload.as_ptr(), base, payload.len());
+        }
+        // accounting
+        let bytes = (payload.len() * 4) as u64;
+        if src / self.ranks_per_node == dst / self.ranks_per_node {
+            target.bytes_in_local.fetch_add(bytes, Ordering::Relaxed);
+        } else {
+            target.bytes_in_remote.fetch_add(bytes, Ordering::Relaxed);
+        }
+        target.puts_in.fetch_add(1, Ordering::Relaxed);
+        // signal delivery: release pairs with the subscriber's acquire
+        let tile = coord.c / self.dims.bm;
+        let fidx = self.dims.flag_index(coord.p, coord.r, coord.e, tile);
+        target.flags[fidx].store(encode_rows(rows), Ordering::Release);
+        Ok(())
+    }
+
+    /// Acquire-load a flag on `rank`.
+    pub fn poll(&self, rank: usize, flag_idx: usize) -> u64 {
+        self.ranks[rank].flags[flag_idx].load(Ordering::Acquire)
+    }
+
+    /// Read `rows` rows at `coord` on `rank`. Caller must have observed the
+    /// guarding flag via [`poll`] (acquire) before reading — that ordering
+    /// is what makes this data race-free.
+    pub fn read(&self, rank: usize, coord: Coord, rows: usize) -> &[f32] {
+        let off = self.dims.offset(coord);
+        let len = rows * self.dims.h;
+        // SAFETY: the release/acquire flag protocol orders this read after
+        // the producer's copy; the region is never rewritten within a layer
+        // pass (slots are owned by one (src, round) pair).
+        unsafe {
+            let v = &*self.ranks[rank].data.get();
+            &v[off..off + len]
+        }
+    }
+
+    /// Zero all flags and counters (between forward passes). Data cells
+    /// need no clearing: in-place padding means stale rows are never read
+    /// (the signal's row count gates consumption).
+    pub fn reset(&self) {
+        for r in &self.ranks {
+            for f in &r.flags {
+                f.store(FLAG_EMPTY, Ordering::Release);
+            }
+            r.bytes_in_local.store(0, Ordering::Relaxed);
+            r.bytes_in_remote.store(0, Ordering::Relaxed);
+            r.puts_in.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// (local, remote) bytes received by `rank` since the last reset.
+    pub fn bytes_in(&self, rank: usize) -> (u64, u64) {
+        (
+            self.ranks[rank].bytes_in_local.load(Ordering::Relaxed),
+            self.ranks[rank].bytes_in_remote.load(Ordering::Relaxed),
+        )
+    }
+
+    /// One-sided messages received by `rank` since the last reset.
+    pub fn puts_in(&self, rank: usize) -> u64 {
+        self.ranks[rank].puts_in.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes moved across the fabric since the last reset.
+    pub fn total_bytes(&self) -> u64 {
+        (0..self.dims.p)
+            .map(|r| {
+                let (l, rm) = self.bytes_in(r);
+                l + rm
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn heap() -> SymmetricHeap {
+        SymmetricHeap::new(LayoutDims { p: 2, e_local: 2, c: 8, h: 4, bm: 4 }, 2)
+    }
+
+    #[test]
+    fn put_then_poll_then_read_roundtrips() {
+        let h = heap();
+        let coord = Coord { p: 0, r: 0, b: 1, e: 1, c: 4 };
+        let payload: Vec<f32> = (0..8).map(|i| i as f32).collect(); // 2 rows
+        h.put_signal(0, 1, coord, &payload).unwrap();
+        let fidx = h.dims().flag_index(0, 0, 1, 1);
+        let flag = h.poll(1, fidx);
+        assert_eq!(decode_rows(flag), 2);
+        assert_eq!(h.read(1, coord, 2), &payload[..]);
+    }
+
+    #[test]
+    fn forged_coordinates_rejected() {
+        let h = heap();
+        // src 0 claiming peer slot 1 (forged p)
+        let bad = Coord { p: 1, r: 0, b: 1, e: 0, c: 0 };
+        assert!(h.put_signal(0, 1, bad, &[0.0; 4]).is_err());
+        // staging write to another rank (b=0, src != dst)
+        let stage = Coord { p: 0, r: 0, b: 0, e: 0, c: 0 };
+        assert!(h.put_signal(0, 1, stage, &[0.0; 4]).is_err());
+        // unaligned tile start
+        let unaligned = Coord { p: 0, r: 0, b: 1, e: 0, c: 2 };
+        assert!(h.put_signal(0, 1, unaligned, &[0.0; 4]).is_err());
+        // ragged payload
+        let good = Coord { p: 0, r: 0, b: 1, e: 0, c: 0 };
+        assert!(h.put_signal(0, 1, good, &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn concurrent_puts_from_distinct_sources_are_race_free() {
+        let dims = LayoutDims { p: 8, e_local: 2, c: 16, h: 8, bm: 4 };
+        let h = Arc::new(SymmetricHeap::new(dims, 8));
+        let mut handles = Vec::new();
+        for src in 0..8usize {
+            let h = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for e in 0..2 {
+                    for t in 0..4 {
+                        let coord = Coord { p: src, r: 0, b: 1, e, c: t * 4 };
+                        let val = (src * 100 + e * 10 + t) as f32;
+                        h.put_signal(src, 0, coord, &vec![val; 4 * 8]).unwrap();
+                    }
+                }
+            }));
+        }
+        for hd in handles {
+            hd.join().unwrap();
+        }
+        // every cell holds its writer's value
+        for src in 0..8usize {
+            for e in 0..2 {
+                for t in 0..4 {
+                    let coord = Coord { p: src, r: 0, b: 1, e, c: t * 4 };
+                    let fidx = h.dims().flag_index(src, 0, e, t);
+                    assert_eq!(decode_rows(h.poll(0, fidx)), 4);
+                    let want = (src * 100 + e * 10 + t) as f32;
+                    assert!(h.read(0, coord, 4).iter().all(|&v| v == want));
+                }
+            }
+        }
+        assert_eq!(h.puts_in(0), 8 * 2 * 4);
+    }
+
+    #[test]
+    fn locality_accounting_splits_intra_inter() {
+        // 4 ranks, 2 per node
+        let dims = LayoutDims { p: 4, e_local: 1, c: 4, h: 2, bm: 4 };
+        let h = SymmetricHeap::new(dims, 2);
+        let c = |p| Coord { p, r: 0, b: 1, e: 0, c: 0 };
+        h.put_signal(1, 0, c(1), &vec![0.0; 8]).unwrap(); // same node (0,1)
+        h.put_signal(2, 0, c(2), &vec![0.0; 8]).unwrap(); // cross node
+        let (local, remote) = h.bytes_in(0);
+        assert_eq!(local, 32);
+        assert_eq!(remote, 32);
+        h.reset();
+        assert_eq!(h.bytes_in(0), (0, 0));
+        assert_eq!(h.poll(0, h.dims().flag_index(1, 0, 0, 0)), FLAG_EMPTY);
+    }
+}

@@ -1,0 +1,373 @@
+//! Gate: softmax top-k routing and the paper's routing tables.
+//!
+//! Produces `G_phi` (affinity scores, S×E) and `T_phi` (the routing table:
+//! per (expert, capacity-slot) → (token, combine weight)), plus the
+//! *payload-efficient dispatch plan* — the per-destination list of
+//! non-empty tiles that actually travel (paper §1.1 "payload-efficient
+//! communication": null-padded capacity slots never hit the wire).
+//!
+//! Numerics follow the contract in DESIGN.md §4 exactly (softmax with max
+//! subtraction, ties to the lower expert index, token-order slot
+//! assignment, drops beyond aligned capacity) so the Rust routing agrees
+//! bit-for-tolerance with `ref.py` and the AOT `moe_layer` artifact.
+
+use crate::config::ModelConfig;
+
+/// One routed (token, expert) pair.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Route {
+    /// Token index within the source rank's sequence.
+    pub token: u32,
+    /// Global expert id.
+    pub expert: u32,
+    /// Slot within the (source rank, expert) capacity buffer.
+    pub slot: u32,
+    /// Raw gate score g_{i,e}.
+    pub weight: f32,
+    /// Normalized combine weight g / C_i (drops included in C_i).
+    pub combine_weight: f32,
+}
+
+/// Routing output for one rank's tokens.
+#[derive(Clone, Debug)]
+pub struct Routing {
+    /// Gate scores G_phi, row-major (S, E).
+    pub scores: Vec<f32>,
+    /// Top-k expert ids per token, row-major (S, k).
+    pub topk_idx: Vec<u32>,
+    /// Top-k raw weights per token, row-major (S, k).
+    pub topk_w: Vec<f32>,
+    /// Kept (non-dropped) routes, in token-major / k-minor arrival order.
+    pub routes: Vec<Route>,
+    /// Number of dropped (over-capacity) pairs.
+    pub dropped: usize,
+    /// Tokens routed to each expert (kept only), length E.
+    pub expert_load: Vec<u32>,
+    pub s: usize,
+    pub e: usize,
+    pub k: usize,
+    pub capacity: usize,
+}
+
+/// Row softmax with max subtraction over logits (S, E), in place.
+pub fn softmax_rows(logits: &mut [f32], e: usize) {
+    debug_assert_eq!(logits.len() % e, 0);
+    for row in logits.chunks_mut(e) {
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Top-k per row: descending score, ties broken toward the lower index
+/// (matches `jax.lax.top_k`). Returns (indices, weights) both (S, k).
+pub fn topk_rows(scores: &[f32], e: usize, k: usize) -> (Vec<u32>, Vec<f32>) {
+    let s = scores.len() / e;
+    let mut idx = Vec::with_capacity(s * k);
+    let mut w = Vec::with_capacity(s * k);
+    let mut order: Vec<u32> = Vec::with_capacity(e);
+    for row in scores.chunks(e) {
+        order.clear();
+        order.extend(0..e as u32);
+        // stable selection of the k best: full sort is fine, E <= 128
+        order.sort_by(|&a, &b| {
+            row[b as usize]
+                .partial_cmp(&row[a as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        for j in 0..k {
+            idx.push(order[j]);
+            w.push(row[order[j] as usize]);
+        }
+    }
+    (idx, w)
+}
+
+/// Full gate for one rank: logits = A·Wg (row-major A: (S,H), Wg: (H,E)),
+/// softmax, top-k, capacity slotting and drop accounting.
+///
+/// When the caller already has scores (e.g. computed by the AOT gate
+/// artifact on the PJRT runtime), use [`route_from_scores`] instead.
+pub fn gate_and_route(
+    a: &[f32],
+    wg: &[f32],
+    s: usize,
+    model: &ModelConfig,
+    capacity: usize,
+) -> Routing {
+    let (h, e) = (model.h, model.e);
+    debug_assert_eq!(a.len(), s * h);
+    debug_assert_eq!(wg.len(), h * e);
+    let mut logits = vec![0.0f32; s * e];
+    // (S,H)x(H,E): E is small; simple loop ordering ikj for locality
+    for i in 0..s {
+        let ai = &a[i * h..(i + 1) * h];
+        let li = &mut logits[i * e..(i + 1) * e];
+        for (kk, &av) in ai.iter().enumerate() {
+            let wrow = &wg[kk * e..(kk + 1) * e];
+            for j in 0..e {
+                li[j] += av * wrow[j];
+            }
+        }
+    }
+    softmax_rows(&mut logits, e);
+    route_from_scores(logits, s, model, capacity)
+}
+
+/// Routing from precomputed softmax scores (S, E).
+pub fn route_from_scores(
+    scores: Vec<f32>,
+    s: usize,
+    model: &ModelConfig,
+    capacity: usize,
+) -> Routing {
+    let (e, k) = (model.e, model.k);
+    let (topk_idx, topk_w) = topk_rows(&scores, e, k);
+    let mut counts = vec![0u32; e];
+    let mut routes = Vec::with_capacity(s * k);
+    let mut dropped = 0usize;
+    for i in 0..s {
+        let denom: f32 = topk_w[i * k..(i + 1) * k].iter().sum();
+        for j in 0..k {
+            let expert = topk_idx[i * k + j];
+            let weight = topk_w[i * k + j];
+            let c = counts[expert as usize];
+            if (c as usize) < capacity {
+                counts[expert as usize] = c + 1;
+                routes.push(Route {
+                    token: i as u32,
+                    expert,
+                    slot: c,
+                    weight,
+                    combine_weight: weight / denom,
+                });
+            } else {
+                dropped += 1;
+            }
+        }
+    }
+    Routing {
+        scores,
+        topk_idx,
+        topk_w,
+        routes,
+        dropped,
+        expert_load: counts,
+        s,
+        e,
+        k,
+        capacity,
+    }
+}
+
+/// A contiguous tile of capacity slots destined for one expert — the unit
+/// of payload-efficient dispatch. Only tiles with `rows > 0` travel.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DispatchTile {
+    /// Global expert id.
+    pub expert: u32,
+    /// Destination rank (owner of `expert`).
+    pub dst: u32,
+    /// Tile index within the (rank, expert) capacity buffer (slot / bM).
+    pub tile: u32,
+    /// Valid rows in this tile (1..=bM); the rest is *in-place* padding on
+    /// the receiver — it never hits the wire.
+    pub rows: u32,
+    /// Token ids (within the source rank) occupying rows 0..rows.
+    pub tokens: Vec<u32>,
+    /// Normalized combine weight g/C_i per row (the T_phi payload the
+    /// combine round applies when this tile's result returns).
+    pub weights: Vec<f32>,
+}
+
+/// The per-rank dispatch plan: the exact set of tiles that travel.
+#[derive(Clone, Debug)]
+pub struct DispatchPlan {
+    pub tiles: Vec<DispatchTile>,
+    /// Bytes that would travel under padded (capacity-sized) dispatch.
+    pub padded_rows: usize,
+    /// Valid rows actually sent.
+    pub sent_rows: usize,
+}
+
+impl DispatchPlan {
+    /// Payload efficiency: fraction of padded traffic avoided.
+    pub fn savings(&self) -> f64 {
+        if self.padded_rows == 0 {
+            return 0.0;
+        }
+        1.0 - self.sent_rows as f64 / self.padded_rows as f64
+    }
+}
+
+/// Build the dispatch plan from a routing table. `owner_of(e)` maps a
+/// global expert to its owning rank; `bm` is the tile height; `active_only`
+/// payload efficiency means experts with zero routed tokens produce no
+/// traffic at all.
+pub fn dispatch_plan(
+    routing: &Routing,
+    bm: usize,
+    owner_of: impl Fn(usize) -> usize,
+) -> DispatchPlan {
+    let e = routing.e;
+    let tiles_per_expert = routing.capacity / bm;
+    let mut tiles: Vec<DispatchTile> = Vec::new();
+    // group routes by (expert, tile); routes are already slot-ordered per
+    // expert because slots are assigned in arrival order.
+    let mut by_expert: Vec<Vec<&Route>> = vec![Vec::new(); e];
+    for r in &routing.routes {
+        by_expert[r.expert as usize].push(r);
+    }
+    let mut sent_rows = 0usize;
+    for (ex, rs) in by_expert.iter().enumerate() {
+        if rs.is_empty() {
+            continue; // payload efficiency: inactive expert, no traffic
+        }
+        for t in 0..tiles_per_expert {
+            let lo = (t * bm) as u32;
+            let hi = ((t + 1) * bm) as u32;
+            let in_tile: Vec<&&Route> = rs.iter().filter(|r| r.slot >= lo && r.slot < hi).collect();
+            if in_tile.is_empty() {
+                continue;
+            }
+            let tokens: Vec<u32> = in_tile.iter().map(|r| r.token).collect();
+            let weights: Vec<f32> = in_tile.iter().map(|r| r.combine_weight).collect();
+            sent_rows += tokens.len();
+            tiles.push(DispatchTile {
+                expert: ex as u32,
+                dst: owner_of(ex) as u32,
+                tile: t as u32,
+                rows: tokens.len() as u32,
+                tokens,
+                weights,
+            });
+        }
+    }
+    let active_experts = by_expert.iter().filter(|v| !v.is_empty()).count();
+    DispatchPlan {
+        tiles,
+        padded_rows: active_experts * routing.capacity,
+        sent_rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn model(e: usize, k: usize, bm: usize) -> ModelConfig {
+        ModelConfig { h: 16, d: 32, e, k, bm, bn: 8, capacity_factor: 1.0 }
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let mut x = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut x, 3);
+        for row in x.chunks(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!(row.windows(2).all(|w| w[0] <= w[1]), "monotone logits stay ordered");
+        }
+    }
+
+    #[test]
+    fn topk_tie_breaks_low_index() {
+        let scores = vec![0.25f32; 4];
+        let (idx, w) = topk_rows(&scores, 4, 2);
+        assert_eq!(idx, vec![0, 1]);
+        assert_eq!(w, vec![0.25, 0.25]);
+    }
+
+    #[test]
+    fn topk_orders_descending() {
+        let scores = vec![0.1, 0.5, 0.2, 0.2];
+        let (idx, _) = topk_rows(&scores, 4, 3);
+        assert_eq!(idx, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn slots_are_arrival_ordered_and_capacity_respected() {
+        let m = model(2, 1, 4);
+        // all tokens to expert 0 via extreme scores
+        let s = 10;
+        let mut scores = Vec::new();
+        for _ in 0..s {
+            scores.extend([0.9f32, 0.1]);
+        }
+        let routing = route_from_scores(scores, s, &m, 4);
+        assert_eq!(routing.routes.len(), 4, "capacity 4 keeps 4");
+        assert_eq!(routing.dropped, 6);
+        for (i, r) in routing.routes.iter().enumerate() {
+            assert_eq!(r.slot as usize, i);
+            assert_eq!(r.token as usize, i, "first-come tokens keep slots");
+        }
+    }
+
+    #[test]
+    fn combine_weights_normalize_over_full_topk() {
+        let m = model(4, 2, 64);
+        let scores = vec![0.4f32, 0.3, 0.2, 0.1];
+        let routing = route_from_scores(scores, 1, &m, 64);
+        let total: f32 = routing.routes.iter().map(|r| r.combine_weight).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+        assert!((routing.routes[0].combine_weight - 0.4 / 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gate_and_route_matches_manual_softmax() {
+        let m = model(4, 2, 8);
+        let mut rng = Rng::new(5);
+        let s = 8;
+        let a = rng.normal_vec(s * m.h, 1.0);
+        let wg = rng.normal_vec(m.h * m.e, 1.0);
+        let r = gate_and_route(&a, &wg, s, &m, 8);
+        // every row of scores sums to 1
+        for row in r.scores.chunks(m.e) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        }
+        assert_eq!(r.routes.len() + r.dropped, s * m.k);
+    }
+
+    #[test]
+    fn dispatch_plan_is_payload_efficient() {
+        let m = model(4, 1, 4);
+        // tokens 0..3 -> expert 0; token 4 -> expert 2; expert 1,3 inactive
+        let mut scores = Vec::new();
+        for _ in 0..4 {
+            scores.extend([0.7f32, 0.1, 0.1, 0.1]);
+        }
+        scores.extend([0.1f32, 0.1, 0.7, 0.1]);
+        let routing = route_from_scores(scores, 5, &m, 8);
+        let plan = dispatch_plan(&routing, 4, |e| e % 2);
+        // expert0: tile0 full (4 rows); expert2: tile0 1 row. 2 tiles total.
+        assert_eq!(plan.tiles.len(), 2);
+        assert_eq!(plan.sent_rows, 5);
+        assert_eq!(plan.padded_rows, 16, "2 active experts x capacity 8");
+        assert!(plan.savings() > 0.6);
+        assert!(plan.tiles.iter().all(|t| t.rows > 0));
+        // inactive experts generate zero traffic
+        assert!(plan.tiles.iter().all(|t| t.expert != 1 && t.expert != 3));
+    }
+
+    #[test]
+    fn dispatch_tiles_cover_all_kept_routes_once() {
+        let m = model(8, 2, 4);
+        let mut rng = Rng::new(9);
+        let s = 64;
+        let a = rng.normal_vec(s * m.h, 1.0);
+        let wg = rng.normal_vec(m.h * m.e, 1.0);
+        let routing = gate_and_route(&a, &wg, s, &m, 8);
+        let plan = dispatch_plan(&routing, 4, |e| e / 4);
+        let covered: usize = plan.tiles.iter().map(|t| t.tokens.len()).sum();
+        assert_eq!(covered, routing.routes.len());
+    }
+}

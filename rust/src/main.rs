@@ -1,0 +1,309 @@
+//! `flashdmoe` — the launcher CLI.
+//!
+//! Subcommands:
+//!   run        one distributed forward pass (real execution, multi-rank)
+//!   baseline   bulk-synchronous forward on the same substrate
+//!   sim        simulate a forward pass under any engine
+//!   figures    regenerate every paper table/figure (same as cargo bench)
+//!   straggler  Table 2 straggler study
+//!   calibrate  measure tile-GEMM cost and report implied FLOP/s
+//!   inspect    print config, layout and memory accounting
+//!
+//! Examples:
+//!   flashdmoe run --preset default --backend xla --mode fused
+//!   flashdmoe sim --engine fastermoe --ranks 8 --tokens 16384 --experts 64
+//!   flashdmoe figures
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use flashdmoe::config::Config;
+use flashdmoe::coordinator::{baseline, DistributedMoE, TaskGraphMode};
+use flashdmoe::expert::{generate_tokens, ModelParams};
+use flashdmoe::harness;
+use flashdmoe::runtime::{ArtifactStore, ComputeBackend, NativeBackend, XlaBackend};
+use flashdmoe::sim::calibrate::apply_native_calibration;
+use flashdmoe::sim::engines::{simulate, Engine};
+use flashdmoe::util::args::Args;
+use flashdmoe::util::stats::{fmt_bytes, fmt_time};
+use flashdmoe::workload::{cluster_workload, Skew};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "flashdmoe <run|baseline|sim|figures|straggler|calibrate|inspect> [options]\n\
+     run `flashdmoe <cmd> --help` for per-command options"
+        .to_string()
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "run" => cmd_run(rest),
+        "baseline" => cmd_baseline(rest),
+        "sim" => cmd_sim(rest),
+        "figures" => cmd_figures(rest),
+        "straggler" => cmd_straggler(rest),
+        "calibrate" => cmd_calibrate(rest),
+        "inspect" => cmd_inspect(rest),
+        other => bail!("unknown command '{other}'\n{}", usage()),
+    }
+}
+
+fn load_config(a: &Args) -> Result<Config> {
+    let mut cfg = match a.get("config").as_str() {
+        "" => Config::preset(&a.get("preset"))?,
+        path => Config::from_file(path)?,
+    };
+    for kv in a.positionals() {
+        if let Some((k, v)) = kv.split_once('=') {
+            cfg.set(k, v)?;
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn make_backend(cfg: &Config, which: &str, preset: &str) -> Result<Arc<dyn ComputeBackend>> {
+    match which {
+        "native" => Ok(Arc::new(NativeBackend::from_config(cfg))),
+        "xla" => {
+            let dir = ArtifactStore::default_dir();
+            let store = ArtifactStore::load(&dir, preset)?;
+            Ok(Arc::new(XlaBackend::new(store)))
+        }
+        other => bail!("unknown backend '{other}' (native|xla)"),
+    }
+}
+
+fn cmd_run(argv: &[String]) -> Result<()> {
+    let a = Args::new("flashdmoe run", "one distributed MoE forward pass (real execution)")
+        .opt("preset", "default", "config preset (tiny/default/perf)")
+        .opt("config", "", "KEY=VALUE config file (overrides preset)")
+        .opt("backend", "native", "compute backend: native | xla")
+        .opt("mode", "fused", "task graph: fused | split")
+        .opt("passes", "3", "forward passes to run")
+        .opt("seed", "42", "weights/tokens seed")
+        .flag("verify", "cross-check against the monolithic PJRT reference")
+        .parse(argv)?;
+    let cfg = load_config(&a)?;
+    let preset = a.get("preset");
+    let backend = make_backend(&cfg, &a.get("backend"), &preset)?;
+    let mode = match a.get("mode").as_str() {
+        "fused" => TaskGraphMode::Fused,
+        "split" => TaskGraphMode::Split,
+        m => bail!("unknown mode '{m}'"),
+    };
+    let seed = a.get_usize("seed")? as u64;
+    let params = Arc::new(ModelParams::generate(&cfg, seed));
+    println!(
+        "model: H={} D={} E={} k={} | {} params | ranks={} s_rank={} procs/rank={}",
+        cfg.model.h,
+        cfg.model.d,
+        cfg.model.e,
+        cfg.model.k,
+        params.num_params(),
+        cfg.system.ranks,
+        cfg.system.s_rank,
+        cfg.system.processors
+    );
+    let moe = DistributedMoE::new(cfg.clone(), params.clone(), backend, mode)?;
+    println!("symmetric heap: {} per rank", fmt_bytes(moe.heap_bytes_per_rank()));
+    let inputs: Vec<Vec<f32>> =
+        (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, seed, r)).collect();
+
+    for pass in 0..a.get_usize("passes")? {
+        let res = moe.forward(&inputs)?;
+        let m = &res.metrics;
+        println!(
+            "pass {pass}: {} | util {:.1}% | tasks {} | payload saved {:.1}% | dropped {}",
+            fmt_time(m.wall_secs),
+            m.utilization() * 100.0,
+            m.ranks.iter().map(|r| r.total_tasks()).sum::<u32>(),
+            m.ranks.iter().map(|r| r.payload_savings()).sum::<f64>() / m.ranks.len() as f64
+                * 100.0,
+            m.total_dropped(),
+        );
+    }
+
+    if a.get_bool("verify") {
+        let dir = ArtifactStore::default_dir();
+        let store = ArtifactStore::load(&dir, &preset)?;
+        let mut a_all = Vec::new();
+        for r in &inputs {
+            a_all.extend_from_slice(r);
+        }
+        let want = store.run_moe_layer(&a_all, &params)?;
+        let res = moe.forward(&inputs)?;
+        let got: Vec<f32> = res.outputs.concat();
+        let err = flashdmoe::util::stats::max_abs_diff(&got, &want);
+        println!("verify vs monolithic PJRT reference: max |Δ| = {err:.2e}");
+        anyhow::ensure!(err < 1e-3, "distributed forward diverged from reference");
+    }
+    Ok(())
+}
+
+fn cmd_baseline(argv: &[String]) -> Result<()> {
+    let a = Args::new("flashdmoe baseline", "bulk-synchronous forward (real execution)")
+        .opt("preset", "default", "config preset")
+        .opt("config", "", "config file")
+        .opt("backend", "native", "native | xla")
+        .opt("seed", "42", "seed")
+        .parse(argv)?;
+    let cfg = load_config(&a)?;
+    let backend = make_backend(&cfg, &a.get("backend"), &a.get("preset"))?;
+    let seed = a.get_usize("seed")? as u64;
+    let params = Arc::new(ModelParams::generate(&cfg, seed));
+    let inputs: Vec<Vec<f32>> =
+        (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, seed, r)).collect();
+    let res = baseline::forward_sequential(&cfg, &params, &backend, &inputs)?;
+    let m = &res.metrics;
+    println!(
+        "bulk-sync pass: {} | {} launches | {}/{} valid rows shipped | {} in barriers",
+        fmt_time(m.wall_secs),
+        m.launches,
+        m.valid_rows,
+        m.sent_rows,
+        fmt_time(m.barrier_secs)
+    );
+    Ok(())
+}
+
+fn cmd_sim(argv: &[String]) -> Result<()> {
+    let a = Args::new("flashdmoe sim", "simulate one forward pass under any engine")
+        .opt("engine", "flash", "flash|fastermoe|comet|megatron-cutlass|megatron-te|deepspeed|deepep")
+        .opt("ranks", "8", "world size")
+        .opt("tokens", "8192", "tokens per rank")
+        .opt("experts", "64", "total experts")
+        .opt("skew", "zipf", "uniform|zipf|hot")
+        .opt("seed", "42", "seed")
+        .parse(argv)?;
+    let engine = Engine::parse(&a.get("engine"))
+        .ok_or_else(|| anyhow::anyhow!("unknown engine '{}'", a.get("engine")))?;
+    let cfg = harness::paper_config(
+        a.get_usize("ranks")?,
+        a.get_usize("tokens")?,
+        a.get_usize("experts")?,
+    )?;
+    let skew = Skew::parse(&a.get("skew")).ok_or_else(|| anyhow::anyhow!("bad skew"))?;
+    let seed = a.get_usize("seed")? as u64;
+    let wl = cluster_workload(&cfg, skew, seed);
+    let r = simulate(&cfg, &wl, engine, seed)?;
+    println!(
+        "{}: latency {} | util {:.1}% | {} launches/rank | {} on wire | MIV {}{}",
+        r.engine,
+        fmt_time(r.latency),
+        r.utilization * 100.0,
+        r.launches_per_rank,
+        fmt_bytes(r.bytes_on_wire),
+        fmt_bytes(r.max_incast),
+        if r.incast_overflow { " (OVERFLOW)" } else { "" }
+    );
+    Ok(())
+}
+
+fn cmd_figures(argv: &[String]) -> Result<()> {
+    let a = Args::new("flashdmoe figures", "regenerate every paper table/figure")
+        .opt("seed", "42", "seed")
+        .parse(argv)?;
+    let seed = a.get_usize("seed")? as u64;
+    let (t1, _) = harness::table1();
+    println!("{t1}");
+    let (t2, _) = harness::table2(seed);
+    println!("{t2}");
+    let (t3, _) = harness::table3();
+    println!("{t3}");
+    for f in [
+        harness::fig10(seed)?,
+        harness::fig11(seed)?,
+        harness::fig12(seed)?,
+        harness::fig13(seed)?,
+        harness::fig14(seed)?,
+        harness::fig17(seed)?,
+        harness::fig18(seed)?,
+    ] {
+        println!("{}", f.0);
+    }
+    Ok(())
+}
+
+fn cmd_straggler(argv: &[String]) -> Result<()> {
+    let a = Args::new("flashdmoe straggler", "Table 2 straggler delay study")
+        .opt("seed", "42", "seed")
+        .parse(argv)?;
+    let (text, reports) = harness::table2(a.get_usize("seed")? as u64);
+    println!("{text}");
+    for r in &reports {
+        println!(
+            "{}: implied idle fraction at p95 = {:.0}%",
+            r.platform.name,
+            flashdmoe::sim::straggler::idle_fraction(r.summary.p95) * 100.0
+        );
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(argv: &[String]) -> Result<()> {
+    let a = Args::new("flashdmoe calibrate", "measure tile cost, report implied FLOP/s")
+        .opt("preset", "default", "config preset")
+        .opt("iters", "20", "tile iterations")
+        .parse(argv)?;
+    let mut cfg = Config::preset(&a.get("preset"))?;
+    let cal = apply_native_calibration(&mut cfg, a.get_usize("iters")?)?;
+    println!(
+        "backend={} ffn_tile={} implied={:.2} GFLOP/s/processor gate={}",
+        cal.backend,
+        fmt_time(cal.ffn_tile_secs),
+        cal.flops_per_processor / 1e9,
+        fmt_time(cal.gate_secs)
+    );
+    Ok(())
+}
+
+fn cmd_inspect(argv: &[String]) -> Result<()> {
+    let a = Args::new("flashdmoe inspect", "print config, layout and memory accounting")
+        .opt("preset", "default", "config preset")
+        .opt("config", "", "config file")
+        .parse(argv)?;
+    let cfg = load_config(&a)?;
+    let dims = flashdmoe::layout::LayoutDims::from_config(&cfg);
+    println!("{cfg:#?}");
+    println!(
+        "layout: P={} E_local={} C={} H={} | L = {} | {} flags | {} tiles/expert",
+        dims.p,
+        dims.e_local,
+        dims.c,
+        dims.h,
+        fmt_bytes(dims.bytes(cfg.cost.elem_bytes)),
+        dims.num_flags(),
+        dims.tiles_per_expert()
+    );
+    println!(
+        "L1 ffn_tile VMEM estimate: {} (vs ~16 MiB/core budget)",
+        fmt_bytes(cfg.model.ffn_tile_vmem_bytes() as f64)
+    );
+    let rep = flashdmoe::layout::memory_report(
+        cfg.system.s_total(),
+        cfg.model.e,
+        &cfg.model,
+        cfg.system.ranks,
+    );
+    println!(
+        "memory: Size(L)={} bookkeeping={} total={}",
+        fmt_bytes(rep.size_l),
+        fmt_bytes(rep.bookkeeping),
+        fmt_bytes(rep.total())
+    );
+    Ok(())
+}

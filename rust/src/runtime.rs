@@ -1,0 +1,473 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them from the
+//! Rust hot path, plus the interchangeable native backend.
+//!
+//! Python runs only at `make artifacts` time; this module gives the L3
+//! coordinator a [`ComputeBackend`] with two implementations:
+//!
+//! * [`XlaBackend`] — compiles `artifacts/<preset>_*.hlo.txt` once on a
+//!   PJRT CPU client and executes the L1 Pallas kernels per task. Expert
+//!   weights are uploaded into cached [`xla::Literal`]s at construction so
+//!   the per-task cost is one input copy + one execution.
+//! * [`NativeBackend`] — the in-process blocked GEMM (`crate::gemm`),
+//!   used by tests, the baselines, and anywhere artifacts are absent.
+//!
+//! Both backends implement identical math; `rust/tests/runtime_xla.rs`
+//! asserts agreement to f32 tolerance.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::Config;
+use crate::expert::{ExpertParams, ModelParams};
+use crate::gemm;
+use crate::util::json::Json;
+
+/// Shape/metadata of one compiled artifact (from `manifest.json`).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<(String, Vec<usize>)>,
+}
+
+/// One compiled HLO module on the PJRT client.
+///
+/// SAFETY(Send/Sync): the PJRT CPU client is thread-safe per the PJRT API
+/// contract (executions may be issued concurrently from multiple threads);
+/// the wrapper only exposes `&self` execution.
+pub struct CompiledKernel {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+unsafe impl Send for CompiledKernel {}
+unsafe impl Sync for CompiledKernel {}
+
+impl CompiledKernel {
+    /// Execute with f32 inputs; returns the flattened f32 outputs of the
+    /// 1-tuple result (artifacts are lowered with `return_tuple=True`).
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, (name, dims)) in inputs.iter().zip(&self.meta.inputs) {
+            literals.push(make_literal(data, dims).with_context(|| {
+                format!("{}: building literal for input '{name}'", self.meta.name)
+            })?);
+        }
+        self.run_literals(&literals)
+    }
+
+    /// Execute with pre-built literals (lets callers cache weight uploads).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<f32>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(literals)
+            .with_context(|| format!("executing {}", self.meta.name))?;
+        let lit = result[0][0].to_literal_sync()?;
+        let out = lit.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute a multi-output artifact; returns each tuple element's f32s
+    /// (e.g. `train_step`: loss + updated parameters).
+    pub fn run_literals_tuple(&self, literals: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(literals)
+            .with_context(|| format!("executing {}", self.meta.name))?;
+        let lit = result[0][0].to_literal_sync()?;
+        lit.to_tuple()?.into_iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+}
+
+/// Build an f32 literal from a slice + dims.
+pub fn make_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("literal shape {dims:?} needs {n} elems, got {}", data.len());
+    }
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// Loads `manifest.json`, compiles one preset's artifacts on a PJRT CPU
+/// client, and hands out [`CompiledKernel`]s.
+pub struct ArtifactStore {
+    pub preset: String,
+    pub config: Config,
+    kernels: HashMap<String, CompiledKernel>,
+    /// Wall time spent compiling all artifacts (reported by the CLI).
+    pub compile_secs: f64,
+}
+
+impl ArtifactStore {
+    /// Default on-disk location (relative to the repo root / CWD).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("FLASHDMOE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// True if artifacts have been built (used to skip XLA tests cleanly).
+    pub fn available(dir: &Path) -> bool {
+        dir.join("manifest.json").exists()
+    }
+
+    pub fn load(dir: &Path, preset: &str) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Json::parse(&text)?;
+        let entry = manifest
+            .get("presets")?
+            .opt(preset)
+            .ok_or_else(|| anyhow!("preset '{preset}' not in manifest"))?;
+
+        // shape config from the manifest is authoritative
+        let c = entry.get("config")?;
+        let mut config = Config::preset(preset).unwrap_or(Config::preset("default")?);
+        for key in ["h", "d", "e", "k", "bm", "bn"] {
+            config.set(key, &format!("{}", c.get(key)?.as_usize()?))?;
+        }
+        config.set("ranks", &format!("{}", c.get("ranks")?.as_usize()?))?;
+        config.set("s_rank", &format!("{}", c.get("s_rank")?.as_usize()?))?;
+        config.validate()?;
+        let manifest_cap = c.get("capacity")?.as_usize()?;
+        let computed = config.model.capacity(config.system.s_rank);
+        if manifest_cap != computed {
+            bail!("capacity mismatch: manifest {manifest_cap} vs config math {computed}");
+        }
+
+        let client = xla::PjRtClient::cpu()?;
+        let start = std::time::Instant::now();
+        let mut kernels = HashMap::new();
+        for (name, art) in entry.get("artifacts")?.as_obj()? {
+            let parse_io = |key: &str| -> Result<Vec<(String, Vec<usize>)>> {
+                art.get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|io| {
+                        let pair = io.as_arr()?;
+                        Ok((pair[0].as_str()?.to_string(), pair[1].as_shape()?))
+                    })
+                    .collect()
+            };
+            let meta = ArtifactMeta {
+                name: name.clone(),
+                file: art.get("file")?.as_str()?.to_string(),
+                inputs: parse_io("inputs")?,
+                outputs: parse_io("outputs")?,
+            };
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", meta.name))?;
+            kernels.insert(name.clone(), CompiledKernel { exe, meta });
+        }
+        Ok(Self {
+            preset: preset.to_string(),
+            config,
+            kernels,
+            compile_secs: start.elapsed().as_secs_f64(),
+        })
+    }
+
+    pub fn kernel(&self, name: &str) -> Result<&CompiledKernel> {
+        self.kernels
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))
+    }
+
+    pub fn kernel_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.kernels.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Execute the monolithic `moe_layer` reference over all ranks' tokens.
+    pub fn run_moe_layer(&self, a: &[f32], params: &ModelParams) -> Result<Vec<f32>> {
+        let k = self.kernel("moe_layer")?;
+        let (w1, b1, w2, b2) = params.pack_for_artifact();
+        k.run(&[a, &params.wg, &w1, &b1, &w2, &b2])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ComputeBackend
+// ---------------------------------------------------------------------------
+
+/// Tile-granular compute interface consumed by Processor actors. `scratch`
+/// is caller-owned working memory (>= bm*d floats) so the hot path stays
+/// allocation-free on the native backend.
+pub trait ComputeBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// softmax(A·Wg) for one rank's (s, H) tokens -> (s, E) scores.
+    fn gate_scores(&self, a: &[f32], wg: &[f32], s: usize) -> Result<Vec<f32>>;
+
+    /// Fused FFN over one (bm, H) tile of expert `ex`.
+    fn ffn_tile(
+        &self,
+        x: &[f32],
+        ex: &ExpertParams,
+        expert_id: usize,
+        out: &mut [f32],
+        scratch: &mut [f32],
+    ) -> Result<()>;
+
+    /// Split-mode GEMM0: relu(x·W1[:, col] + b1[col]) over one (bm, bn) tile.
+    fn gemm0_tile(&self, x: &[f32], w1c: &[f32], b1c: &[f32], out: &mut [f32]) -> Result<()>;
+
+    /// Split-mode GEMM1: h·W2[:, col] + b2[col] over one (bm, bn) tile.
+    fn gemm1_tile(&self, h: &[f32], w2c: &[f32], b2c: &[f32], out: &mut [f32]) -> Result<()>;
+}
+
+/// Pure-Rust backend over `crate::gemm`.
+pub struct NativeBackend {
+    pub h: usize,
+    pub d: usize,
+    pub e: usize,
+    pub bm: usize,
+    pub bn: usize,
+}
+
+impl NativeBackend {
+    pub fn from_config(cfg: &Config) -> Self {
+        Self { h: cfg.model.h, d: cfg.model.d, e: cfg.model.e, bm: cfg.model.bm, bn: cfg.model.bn }
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn gate_scores(&self, a: &[f32], wg: &[f32], s: usize) -> Result<Vec<f32>> {
+        let mut logits = vec![0.0f32; s * self.e];
+        gemm::gemm_bias(a, wg, None, &mut logits, s, self.h, self.e, gemm::Epilogue::Identity);
+        crate::gate::softmax_rows(&mut logits, self.e);
+        Ok(logits)
+    }
+
+    fn ffn_tile(
+        &self,
+        x: &[f32],
+        ex: &ExpertParams,
+        _expert_id: usize,
+        out: &mut [f32],
+        scratch: &mut [f32],
+    ) -> Result<()> {
+        gemm::ffn(x, &ex.w1, &ex.b1, &ex.w2, &ex.b2, out, scratch, self.bm, self.h, self.d);
+        Ok(())
+    }
+
+    fn gemm0_tile(&self, x: &[f32], w1c: &[f32], b1c: &[f32], out: &mut [f32]) -> Result<()> {
+        gemm::gemm_bias(x, w1c, Some(b1c), out, self.bm, self.h, self.bn, gemm::Epilogue::Relu);
+        Ok(())
+    }
+
+    fn gemm1_tile(&self, h: &[f32], w2c: &[f32], b2c: &[f32], out: &mut [f32]) -> Result<()> {
+        gemm::gemm_bias(h, w2c, Some(b2c), out, self.bm, self.d, self.bn, gemm::Epilogue::Identity);
+        Ok(())
+    }
+}
+
+/// XLA/PJRT backend executing the AOT Pallas kernels. Expert weight
+/// literals are uploaded once at construction (keyed by expert id).
+pub struct XlaBackend {
+    store: ArtifactStore,
+    /// Cached per-expert weight literals for `ffn_tile`: [w1, b1, w2, b2].
+    weight_cache: Mutex<HashMap<usize, std::sync::Arc<Vec<xla::Literal>>>>,
+    h: usize,
+    d: usize,
+    bm: usize,
+    #[allow(dead_code)]
+    bn: usize,
+}
+
+// SAFETY: see CompiledKernel; Literal reads are immutable post-upload.
+unsafe impl Send for XlaBackend {}
+unsafe impl Sync for XlaBackend {}
+
+impl XlaBackend {
+    pub fn new(store: ArtifactStore) -> Self {
+        let m = &store.config.model;
+        let (h, d, bm, bn) = (m.h, m.d, m.bm, m.bn);
+        Self { store, weight_cache: Mutex::new(HashMap::new()), h, d, bm, bn }
+    }
+
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    /// Pre-upload all expert weights (call once before timing).
+    pub fn warm_weights(&self, params: &ModelParams) -> Result<()> {
+        for e in 0..params.num_experts() {
+            self.cached_weights(e, &params.experts[e])?;
+        }
+        Ok(())
+    }
+
+    fn cached_weights(
+        &self,
+        expert_id: usize,
+        ex: &ExpertParams,
+    ) -> Result<std::sync::Arc<Vec<xla::Literal>>> {
+        let mut cache = self.weight_cache.lock().unwrap();
+        if let Some(l) = cache.get(&expert_id) {
+            return Ok(l.clone());
+        }
+        let lits = std::sync::Arc::new(vec![
+            make_literal(&ex.w1, &[self.h, self.d])?,
+            make_literal(&ex.b1, &[self.d])?,
+            make_literal(&ex.w2, &[self.d, self.h])?,
+            make_literal(&ex.b2, &[self.h])?,
+        ]);
+        cache.insert(expert_id, lits.clone());
+        Ok(lits)
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn gate_scores(&self, a: &[f32], wg: &[f32], s: usize) -> Result<Vec<f32>> {
+        let k = self.store.kernel("gate")?;
+        let expect = k.meta.inputs[0].1[0];
+        if s != expect {
+            bail!("gate artifact is shape-specialized to S={expect}, got {s}");
+        }
+        k.run(&[a, wg])
+    }
+
+    fn ffn_tile(
+        &self,
+        x: &[f32],
+        ex: &ExpertParams,
+        expert_id: usize,
+        out: &mut [f32],
+        _scratch: &mut [f32],
+    ) -> Result<()> {
+        let k = self.store.kernel("ffn_tile")?;
+        let weights = self.cached_weights(expert_id, ex)?;
+        let mut lits = Vec::with_capacity(5);
+        lits.push(make_literal(x, &[self.bm, self.h])?);
+        for w in weights.iter() {
+            lits.push(w.clone());
+        }
+        let y = k.run_literals(&lits)?;
+        out.copy_from_slice(&y);
+        Ok(())
+    }
+
+    fn gemm0_tile(&self, x: &[f32], w1c: &[f32], b1c: &[f32], out: &mut [f32]) -> Result<()> {
+        let k = self.store.kernel("gemm0_tile")?;
+        let y = k.run(&[x, w1c, b1c])?;
+        out.copy_from_slice(&y);
+        Ok(())
+    }
+
+    fn gemm1_tile(&self, h: &[f32], w2c: &[f32], b2c: &[f32], out: &mut [f32]) -> Result<()> {
+        let k = self.store.kernel("gemm1_tile")?;
+        let y = k.run(&[h, w2c, b2c])?;
+        out.copy_from_slice(&y);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::stats::max_abs_diff;
+
+    #[test]
+    fn native_gate_matches_gate_module() {
+        let cfg = Config::preset("tiny").unwrap();
+        let be = NativeBackend::from_config(&cfg);
+        let mut rng = Rng::new(1);
+        let s = 16;
+        let a = rng.normal_vec(s * cfg.model.h, 1.0);
+        let wg = rng.normal_vec(cfg.model.h * cfg.model.e, 1.0);
+        let scores = be.gate_scores(&a, &wg, s).unwrap();
+        let routing = crate::gate::gate_and_route(&a, &wg, s, &cfg.model, 32);
+        assert!(max_abs_diff(&scores, &routing.scores) < 1e-5);
+    }
+
+    #[test]
+    fn native_ffn_tile_matches_split_tiles() {
+        let cfg = Config::preset("tiny").unwrap();
+        let m = &cfg.model;
+        let be = NativeBackend::from_config(&cfg);
+        let mut rng = Rng::new(2);
+        let ex = ExpertParams {
+            w1: rng.normal_vec(m.h * m.d, 0.1),
+            b1: rng.normal_vec(m.d, 0.1),
+            w2: rng.normal_vec(m.d * m.h, 0.1),
+            b2: rng.normal_vec(m.h, 0.1),
+        };
+        let x = rng.normal_vec(m.bm * m.h, 1.0);
+        let mut fused = vec![0.0; m.bm * m.h];
+        let mut scratch = vec![0.0; m.bm * m.d];
+        be.ffn_tile(&x, &ex, 0, &mut fused, &mut scratch).unwrap();
+
+        // split path: all gemm0 column tiles, then all gemm1 column tiles
+        let mut mid = vec![0.0; m.bm * m.d];
+        for col in 0..m.d / m.bn {
+            // slice W1 columns [col*bn, (col+1)*bn) out of row-major (h, d)
+            let mut w1c = vec![0.0; m.h * m.bn];
+            for r in 0..m.h {
+                w1c[r * m.bn..(r + 1) * m.bn]
+                    .copy_from_slice(&ex.w1[r * m.d + col * m.bn..r * m.d + (col + 1) * m.bn]);
+            }
+            let b1c = &ex.b1[col * m.bn..(col + 1) * m.bn];
+            let mut out = vec![0.0; m.bm * m.bn];
+            be.gemm0_tile(&x, &w1c, b1c, &mut out).unwrap();
+            for r in 0..m.bm {
+                mid[r * m.d + col * m.bn..r * m.d + (col + 1) * m.bn]
+                    .copy_from_slice(&out[r * m.bn..(r + 1) * m.bn]);
+            }
+        }
+        let mut split = vec![0.0; m.bm * m.h];
+        for col in 0..m.h / m.bn {
+            let mut w2c = vec![0.0; m.d * m.bn];
+            for r in 0..m.d {
+                w2c[r * m.bn..(r + 1) * m.bn]
+                    .copy_from_slice(&ex.w2[r * m.h + col * m.bn..r * m.h + (col + 1) * m.bn]);
+            }
+            let b2c = &ex.b2[col * m.bn..(col + 1) * m.bn];
+            let mut out = vec![0.0; m.bm * m.bn];
+            be.gemm1_tile(&mid, &w2c, b2c, &mut out).unwrap();
+            for r in 0..m.bm {
+                split[r * m.h + col * m.bn..r * m.h + (col + 1) * m.bn]
+                    .copy_from_slice(&out[r * m.bn..(r + 1) * m.bn]);
+            }
+        }
+        assert!(max_abs_diff(&fused, &split) < 1e-3);
+    }
+}

@@ -1,0 +1,90 @@
+//! Cost-model calibration: measure real tile-GEMM wall times on this
+//! machine and translate them into the simulator's `flops_per_processor`.
+//!
+//! The simulator's *shape* claims don't depend on absolute FLOP/s, but
+//! calibrating keeps virtual latencies in a realistic regime (and the
+//! perf pass compares measured coordinator latency against the calibrated
+//! flash-engine prediction as a sanity check).
+
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::expert::ExpertParams;
+use crate::runtime::{ComputeBackend, NativeBackend};
+use crate::util::prng::Rng;
+
+/// Calibration output.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    /// Measured fused-FFN tile time (seconds).
+    pub ffn_tile_secs: f64,
+    /// Implied per-processor FLOP/s.
+    pub flops_per_processor: f64,
+    /// Gate time for one rank's tokens (seconds).
+    pub gate_secs: f64,
+    pub backend: &'static str,
+}
+
+/// Measure `iters` fused FFN tiles + one gate pass on `backend`.
+pub fn calibrate_backend(
+    cfg: &Config,
+    backend: &dyn ComputeBackend,
+    iters: usize,
+) -> anyhow::Result<Calibration> {
+    let m = &cfg.model;
+    let mut rng = Rng::new(0xCA11);
+    let ex = ExpertParams {
+        w1: rng.normal_vec(m.h * m.d, 0.1),
+        b1: rng.normal_vec(m.d, 0.1),
+        w2: rng.normal_vec(m.d * m.h, 0.1),
+        b2: rng.normal_vec(m.h, 0.1),
+    };
+    let x = rng.normal_vec(m.bm * m.h, 1.0);
+    let mut out = vec![0.0f32; m.bm * m.h];
+    let mut scratch = vec![0.0f32; m.bm * m.d];
+    // warmup
+    backend.ffn_tile(&x, &ex, 0, &mut out, &mut scratch)?;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        backend.ffn_tile(&x, &ex, 0, &mut out, &mut scratch)?;
+    }
+    let ffn_tile_secs = t0.elapsed().as_secs_f64() / iters as f64;
+    let flops_per_processor = m.ffn_flops(m.bm) / ffn_tile_secs;
+
+    let s = cfg.system.s_rank;
+    let a = rng.normal_vec(s * m.h, 1.0);
+    let wg = rng.normal_vec(m.h * m.e, 1.0);
+    backend.gate_scores(&a, &wg, s)?; // warmup
+    let t1 = Instant::now();
+    backend.gate_scores(&a, &wg, s)?;
+    let gate_secs = t1.elapsed().as_secs_f64();
+
+    Ok(Calibration { ffn_tile_secs, flops_per_processor, gate_secs, backend: backend.name() })
+}
+
+/// Calibrate the native backend and write the result into `cfg.cost`.
+pub fn apply_native_calibration(cfg: &mut Config, iters: usize) -> anyhow::Result<Calibration> {
+    let backend = NativeBackend::from_config(cfg);
+    let cal = calibrate_backend(cfg, &backend, iters)?;
+    cfg.cost.flops_per_processor = cal.flops_per_processor;
+    Ok(cal)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_produces_sane_numbers() {
+        let mut cfg = Config::preset("tiny").unwrap();
+        let cal = apply_native_calibration(&mut cfg, 3).unwrap();
+        assert!(cal.ffn_tile_secs > 0.0);
+        // anything from 100 MFLOP/s to 1 TFLOP/s is plausible on CPU
+        assert!(
+            cal.flops_per_processor > 1e8 && cal.flops_per_processor < 1e12,
+            "implausible {}",
+            cal.flops_per_processor
+        );
+        assert_eq!(cfg.cost.flops_per_processor, cal.flops_per_processor);
+    }
+}

@@ -1,0 +1,22 @@
+//! Discrete-event simulator: regenerates the paper's evaluation figures on
+//! a calibrated cost model, replaying the *same* routing tables the real
+//! coordinator produces.
+//!
+//! Why a simulator: the paper's testbed is 8×H100 + NVLink (+ 4-node A100
+//! with 25 GB/s NICs). The structural claims — overlap, payload
+//! efficiency, launch-overhead elimination, straggler sensitivity — are
+//! properties of the *schedule*, which the engines below reproduce
+//! faithfully over virtual time: the flash engine schedules tile tasks
+//! the moment their one-sided transfer lands; the sequential engine
+//! inserts bulk-synchronous barriers and padded payloads; the overlap
+//! engine pipelines chunked collectives against compute with per-chunk
+//! launches. Compute costs are calibrated from measured tile-GEMM times
+//! ([`calibrate`]); communication follows bytes/bandwidth + latency on
+//! per-directed-link queues.
+
+pub mod calibrate;
+pub mod engines;
+pub mod resources;
+pub mod straggler;
+
+pub use engines::{simulate, Engine, SimReport};

@@ -1,0 +1,119 @@
+//! Straggler-delay simulation (paper §2.1, Table 2, Fig 15).
+//!
+//! A bulk-synchronous AllToAll step completes when the *slowest* rank
+//! finishes; the paper measures the distribution of `t / t_a` where `t_a`
+//! is the fastest per-rank kernel time in the step and `t` the step's max.
+//! Per-rank kernel times are lognormal around the nominal collective time
+//! — sigma models the platform's "software jitter" (commercial VM vs
+//! tuned supercomputer).
+
+use crate::util::prng::Rng;
+use crate::util::stats::{summarize, Summary};
+
+/// One platform's jitter profile: baseline lognormal sigma plus a
+/// heavy-tail mixture (with probability `tail_prob` a rank's kernel is hit
+/// by an interfering event — noisy neighbor, page migration, clock
+/// throttle — stretching it by `tail_scale`). The tail is what separates
+/// the VM's 11.4x p95 from its 3.1x median.
+#[derive(Clone, Copy, Debug)]
+pub struct Platform {
+    pub name: &'static str,
+    pub nodes: usize,
+    pub gpus: usize,
+    pub sigma: f64,
+    pub tail_prob: f64,
+    pub tail_scale: f64,
+    /// Steps profiled (paper: 1750 for the VM, 600 for the supercomputer).
+    pub steps: usize,
+}
+
+/// Paper Table 2 platforms.
+pub fn commercial_vm() -> Platform {
+    Platform {
+        name: "Commercial VM (V100)",
+        nodes: 1,
+        gpus: 8,
+        sigma: 0.38,
+        tail_prob: 0.04,
+        tail_scale: 4.0,
+        steps: 1750,
+    }
+}
+
+pub fn supercomputer() -> Platform {
+    Platform {
+        name: "Supercomputer (A100)",
+        nodes: 8,
+        gpus: 32,
+        sigma: 0.025,
+        tail_prob: 0.01,
+        tail_scale: 1.25,
+        steps: 600,
+    }
+}
+
+/// Result of a straggler study: the distribution of total/actual ratios.
+#[derive(Clone, Debug)]
+pub struct StragglerReport {
+    pub platform: Platform,
+    /// Per-step ratio t / t_a (>= 1).
+    pub ratios: Vec<f64>,
+    pub summary: Summary,
+}
+
+/// Simulate `steps` synchronous AllToAll steps on a platform.
+pub fn run(platform: Platform, seed: u64) -> StragglerReport {
+    let mut rng = Rng::new(seed);
+    let mut ratios = Vec::with_capacity(platform.steps);
+    for _ in 0..platform.steps {
+        let mut fastest = f64::INFINITY;
+        let mut slowest: f64 = 0.0;
+        for _ in 0..platform.gpus {
+            let mut t = rng.lognormal(0.0, platform.sigma);
+            if rng.f64() < platform.tail_prob {
+                t *= platform.tail_scale;
+            }
+            fastest = fastest.min(t);
+            slowest = slowest.max(t);
+        }
+        ratios.push(slowest / fastest);
+    }
+    let summary = summarize(&ratios);
+    StragglerReport { platform, ratios, summary }
+}
+
+/// Idle fraction implied by a ratio r: the fastest rank idles (r-1)/r of
+/// the step — the time Fig 4's overlapped schedule reclaims.
+pub fn idle_fraction(ratio: f64) -> f64 {
+    (ratio - 1.0) / ratio
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vm_is_much_worse_than_supercomputer() {
+        let vm = run(commercial_vm(), 1);
+        let sc = run(supercomputer(), 1);
+        assert!(vm.summary.p50 > 2.0, "vm median {}", vm.summary.p50);
+        assert!(vm.summary.p95 > 6.0, "vm p95 {}", vm.summary.p95);
+        assert!(sc.summary.p50 < 1.25, "sc median {}", sc.summary.p50);
+        assert!(sc.summary.p95 < 1.6, "sc p95 {}", sc.summary.p95);
+        assert!(vm.summary.p95 > 5.0 * sc.summary.p95);
+    }
+
+    #[test]
+    fn ratios_are_at_least_one() {
+        let rep = run(commercial_vm(), 3);
+        assert!(rep.ratios.iter().all(|&r| r >= 1.0));
+        assert_eq!(rep.ratios.len(), rep.platform.steps);
+    }
+
+    #[test]
+    fn idle_fraction_monotone() {
+        assert_eq!(idle_fraction(1.0), 0.0);
+        assert!(idle_fraction(3.0) > idle_fraction(1.5));
+        assert!(idle_fraction(11.0) > 0.9);
+    }
+}

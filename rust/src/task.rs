@@ -1,0 +1,228 @@
+//! Task abstraction (paper §3.1): the unified tile-granular unit of work
+//! exchanged between Subscriber → Scheduler → Processor actors.
+//!
+//! A task descriptor `t = (M, ⋆, φ)` names a binary tensor op with a fused
+//! epilogue over one (bM, bN) or (bM, H) tile:
+//!
+//! * `Gemm0`   — t1 = (M, ·, relu):  C1 ← relu(A·W1 + b1) tile
+//! * `Gemm1`   — t2 = (M, ·, id):    C2 ← C1·W2 + b2 tile
+//! * `FusedFfn`— t1∘t2 fused per tile (the `fused` task-graph mode)
+//! * `Combine` — t3 = (M, ⊙, id):    C ← A ⊙ s + C
+//!
+//! Mirrors the paper's Fig 16 `Task` struct: metadata identifies the peer,
+//! expert, tile and synchronization cell; dependency edges (Fig 7) are
+//! expressed with atomic countdown latches in [`DependencyTable`].
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Task kind (paper: TaskType ∈ {GEMM0, GEMM1, Combine}; we add the fused
+/// FFN variant used by the coarse-grained mode and the gate prologue).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskType {
+    Gemm0,
+    Gemm1,
+    FusedFfn,
+    Combine,
+}
+
+/// A tile-granular task descriptor (paper Fig 16, minus raw pointers: the
+/// processor resolves buffers from the coordinates at execution time,
+/// which keeps descriptors trivially `Send`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Task {
+    pub task_type: TaskType,
+    /// Source peer whose tokens this tile holds.
+    pub peer: u32,
+    /// Local expert index on the executing rank (Gemm*/FusedFfn) — or, for
+    /// Combine, the *global* expert the contribution came from.
+    pub expert: u32,
+    /// Tile index within the (peer, expert) capacity buffer.
+    pub tile: u32,
+    /// For Gemm0/Gemm1: output column-tile index along D (Gemm0) or H
+    /// (Gemm1). Unused (0) for fused/combine tasks.
+    pub col: u32,
+    /// Valid rows in the tile (<= bM); the remainder is in-place padding.
+    pub rows: u32,
+    /// Monotone id for tracing / fairness accounting.
+    pub seq: u32,
+}
+
+impl Task {
+    /// Estimated FLOPs of this task (drives both the simulator cost model
+    /// and the scheduler's longest-task-first policy).
+    pub fn flops(&self, h: usize, d: usize, bm: usize, bn: usize) -> f64 {
+        let rows = bm as f64; // padded tiles compute full bM rows (aligned reads)
+        match self.task_type {
+            TaskType::Gemm0 => 2.0 * rows * h as f64 * bn as f64,
+            TaskType::Gemm1 => 2.0 * rows * d as f64 * bn as f64,
+            TaskType::FusedFfn => 2.0 * rows * h as f64 * d as f64 * 2.0,
+            TaskType::Combine => 2.0 * rows * h as f64,
+        }
+    }
+}
+
+/// Atomic countdown latches implementing the Fig 7 dependency chain:
+/// a `Gemm1` column tile becomes ready only after all `Gemm0` column tiles
+/// of its (peer, expert, tile) row-block completed (the full (bM, D)
+/// intermediate is needed as its left operand).
+pub struct DependencyTable {
+    latches: Vec<AtomicU32>,
+}
+
+impl DependencyTable {
+    /// One latch per (peer, local expert, tile) row-block, initialized to
+    /// the number of `Gemm0` column tiles (D / bN).
+    pub fn new(blocks: usize, gemm0_cols: u32) -> Self {
+        Self {
+            latches: (0..blocks).map(|_| AtomicU32::new(gemm0_cols)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.latches.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.latches.is_empty()
+    }
+
+    /// Record one completed `Gemm0` column tile; returns true exactly once,
+    /// when the row-block's intermediate is fully materialized.
+    pub fn complete_one(&self, block: usize) -> bool {
+        let prev = self.latches[block].fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev >= 1, "latch underflow on block {block}");
+        prev == 1
+    }
+
+    /// Reset a latch (tests / reuse across layer invocations).
+    pub fn reset(&self, block: usize, count: u32) {
+        self.latches[block].store(count, Ordering::Release);
+    }
+
+    pub fn remaining(&self, block: usize) -> u32 {
+        self.latches[block].load(Ordering::Acquire)
+    }
+}
+
+/// Self-correcting task bound (paper Alg. 4 `SelfCorrectTaskBound`): the
+/// subscriber learns the true task count only as dispatch signals arrive,
+/// so the bound starts at an upper estimate and tightens monotonically;
+/// the scheduler exits once `completed == bound` *and* the bound is final.
+pub struct TaskBound {
+    bound: AtomicU32,
+    completed: AtomicU32,
+    finalized: AtomicU32,
+}
+
+impl Default for TaskBound {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TaskBound {
+    pub fn new() -> Self {
+        Self {
+            bound: AtomicU32::new(0),
+            completed: AtomicU32::new(0),
+            finalized: AtomicU32::new(0),
+        }
+    }
+
+    /// Add newly-discovered tasks to the bound.
+    pub fn add(&self, n: u32) {
+        self.bound.fetch_add(n, Ordering::AcqRel);
+    }
+
+    /// Mark that no further tasks will be discovered.
+    pub fn finalize(&self) {
+        self.finalized.store(1, Ordering::Release);
+    }
+
+    pub fn complete(&self, n: u32) {
+        self.completed.fetch_add(n, Ordering::AcqRel);
+    }
+
+    pub fn done(&self) -> bool {
+        self.finalized.load(Ordering::Acquire) == 1
+            && self.completed.load(Ordering::Acquire) >= self.bound.load(Ordering::Acquire)
+    }
+
+    pub fn progress(&self) -> (u32, u32) {
+        (self.completed.load(Ordering::Acquire), self.bound.load(Ordering::Acquire))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_ordering_sane() {
+        let t = |task_type| Task { task_type, peer: 0, expert: 0, tile: 0, col: 0, rows: 128, seq: 0 };
+        let (h, d, bm, bn) = (256, 512, 128, 64);
+        let fused = t(TaskType::FusedFfn).flops(h, d, bm, bn);
+        let g0 = t(TaskType::Gemm0).flops(h, d, bm, bn);
+        let g1 = t(TaskType::Gemm1).flops(h, d, bm, bn);
+        let cmb = t(TaskType::Combine).flops(h, d, bm, bn);
+        assert!(fused > g0 + g1, "fused covers all column tiles");
+        assert!(cmb < g0.min(g1));
+        // fused == sum over all column tiles of split tasks
+        let split_total = g0 * (d / bn) as f64 + g1 * (h / bn) as f64;
+        assert_eq!(fused, split_total);
+    }
+
+    #[test]
+    fn dependency_latch_fires_exactly_once() {
+        let dt = DependencyTable::new(2, 3);
+        assert!(!dt.complete_one(0));
+        assert!(!dt.complete_one(0));
+        assert!(dt.complete_one(0), "third completion releases the latch");
+        assert_eq!(dt.remaining(1), 3, "other blocks untouched");
+    }
+
+    #[test]
+    fn dependency_latch_concurrent_single_release() {
+        let dt = std::sync::Arc::new(DependencyTable::new(1, 64));
+        let mut handles = Vec::new();
+        let releases = std::sync::Arc::new(AtomicU32::new(0));
+        for _ in 0..8 {
+            let dt = dt.clone();
+            let releases = releases.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..8 {
+                    if dt.complete_one(0) {
+                        releases.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(releases.load(Ordering::SeqCst), 1, "exactly one releaser");
+    }
+
+    #[test]
+    fn task_bound_requires_finalization() {
+        let tb = TaskBound::new();
+        tb.add(2);
+        tb.complete(2);
+        assert!(!tb.done(), "not done until finalized");
+        tb.finalize();
+        assert!(tb.done());
+        assert_eq!(tb.progress(), (2, 2));
+    }
+
+    #[test]
+    fn task_bound_self_corrects_upward() {
+        let tb = TaskBound::new();
+        tb.add(1);
+        tb.finalize();
+        tb.add(3); // late-discovered remote work
+        tb.complete(1);
+        assert!(!tb.done());
+        tb.complete(3);
+        assert!(tb.done());
+    }
+}

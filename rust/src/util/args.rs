@@ -1,0 +1,200 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments; generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Declarative spec for one option.
+#[derive(Clone, Debug)]
+struct Opt {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Parsed command-line arguments against a declared spec.
+pub struct Args {
+    program: String,
+    about: String,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            values: BTreeMap::new(),
+            positionals: Vec::new(),
+        }
+    }
+
+    /// Declare an option with a default value.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required option (no default).
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean flag (defaults to false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some("false".to_string()),
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let default = o
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_else(|| " (required)".to_string());
+            out.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, default));
+        }
+        out
+    }
+
+    /// Parse an argv slice (without the program name).
+    pub fn parse(mut self, argv: &[String]) -> Result<Self> {
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .with_context(|| format!("unknown option --{key}\n{}", self.usage()))?
+                    .clone();
+                let val = if opt.is_flag && inline_val.is_none() {
+                    "true".to_string()
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .with_context(|| format!("--{key} requires a value"))?
+                        .clone()
+                };
+                self.values.insert(key, val);
+            } else {
+                self.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // check required
+        for o in &self.opts {
+            if o.default.is_none() && !self.values.contains_key(&o.name) {
+                bail!("missing required option --{}\n{}", o.name, self.usage());
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.opts
+            .iter()
+            .find(|o| o.name == name)
+            .and_then(|o| o.default.clone())
+            .unwrap_or_else(|| panic!("option --{name} was never declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name).parse().with_context(|| format!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name).parse().with_context(|| format!("--{name} must be a number"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name).as_str(), "true" | "1" | "yes")
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = Args::new("t", "test")
+            .opt("tokens", "1024", "tokens per rank")
+            .flag("verbose", "chatty")
+            .parse(&argv(&["--tokens", "4096", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_usize("tokens").unwrap(), 4096);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positionals(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn equals_syntax_and_defaults() {
+        let a = Args::new("t", "test")
+            .opt("ranks", "8", "world size")
+            .parse(&argv(&["--ranks=2"]))
+            .unwrap();
+        assert_eq!(a.get_usize("ranks").unwrap(), 2);
+        let b = Args::new("t", "test").opt("ranks", "8", "world size").parse(&[]).unwrap();
+        assert_eq!(b.get_usize("ranks").unwrap(), 8);
+    }
+
+    #[test]
+    fn required_missing_errors() {
+        let r = Args::new("t", "test").req("model", "model path").parse(&[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let r = Args::new("t", "test").parse(&argv(&["--nope", "1"]));
+        assert!(r.is_err());
+    }
+}

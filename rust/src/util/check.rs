@@ -1,0 +1,143 @@
+//! Proptest-style randomized property checking (proptest is unavailable
+//! offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` over `cases` random inputs
+//! drawn by `gen`; on failure it retries with progressively simpler inputs
+//! (re-drawing with a shrunken "size" hint) and reports the smallest
+//! reproducing seed so failures are replayable.
+
+use crate::util::prng::Rng;
+
+/// Context handed to generators; `size` shrinks during failure minimization.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// Integer in [lo, hi], biased toward smaller values as size shrinks.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo + 1).min(self.size.max(1));
+        lo + self.rng.below(span)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<T: Copy>(&mut self, xs: &[T]) -> T {
+        xs[self.rng.below(xs.len())]
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Vector with generated length in [0, max_len].
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        let n = self.int(0, max_len);
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+/// Outcome of a forall run.
+#[derive(Debug)]
+pub struct Failure {
+    pub case_seed: u64,
+    pub message: String,
+    pub shrunk_size: usize,
+}
+
+/// Run `prop` over `cases` random inputs. Panics with a replayable report on
+/// the first falsified case (after attempting size-based shrinking).
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = seed ^ ((case as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = base.fork(case_seed);
+        let mut g = Gen { rng: &mut rng, size: usize::MAX };
+        let input = gen(&mut g);
+        if let Err(msg) = prop(&input) {
+            let failure = shrink(case_seed, &mut gen, &mut prop).unwrap_or(Failure {
+                case_seed,
+                message: msg,
+                shrunk_size: usize::MAX,
+            });
+            panic!(
+                "property falsified (case {case}, replay seed {:#x}, size {}):\n  {}\n  original input: {:?}",
+                failure.case_seed, failure.shrunk_size, failure.message, input
+            );
+        }
+    }
+}
+
+/// Try progressively smaller `size` hints to find a simpler failing case.
+fn shrink<T>(
+    case_seed: u64,
+    gen: &mut impl FnMut(&mut Gen) -> T,
+    prop: &mut impl FnMut(&T) -> Result<(), String>,
+) -> Option<Failure> {
+    let mut best: Option<Failure> = None;
+    for size in [2usize, 4, 8, 16, 64, 256] {
+        for attempt in 0..50u64 {
+            let s = case_seed ^ (size as u64) ^ (attempt << 32);
+            let mut rng = Rng::new(s);
+            let mut g = Gen { rng: &mut rng, size };
+            let input = gen(&mut g);
+            if let Err(message) = prop(&input) {
+                best = Some(Failure { case_seed: s, message, shrunk_size: size });
+                break;
+            }
+        }
+        if best.is_some() {
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_silent() {
+        forall(
+            1,
+            200,
+            |g| (g.int(0, 100), g.int(0, 100)),
+            |(a, b)| {
+                if a + b >= *a.max(b) {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property falsified")]
+    fn failing_property_panics_with_seed() {
+        forall(
+            2,
+            200,
+            |g| g.int(0, 1000),
+            |n| if *n < 990 { Ok(()) } else { Err(format!("{n} too big")) },
+        );
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = Rng::new(3);
+        let mut g = Gen { rng: &mut rng, size: usize::MAX };
+        for _ in 0..1000 {
+            let v = g.int(5, 10);
+            assert!((5..=10).contains(&v));
+        }
+    }
+}

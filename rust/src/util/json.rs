@@ -1,0 +1,403 @@
+//! Minimal JSON reader/writer (serde is unavailable offline).
+//!
+//! Covers exactly what this crate needs: parsing `artifacts/manifest.json`
+//! (objects, arrays, strings, numbers, bools, null) and emitting metric /
+//! experiment dumps. Not a general-purpose JSON library — but it is a
+//! complete, recursive-descent parser for the JSON grammar.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            bail!("trailing bytes at offset {}", p.i);
+        }
+        Ok(v)
+    }
+
+    // -- typed accessors ----------------------------------------------------
+
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key '{key}'")),
+            _ => bail!("not an object (looking up '{key}')"),
+        }
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let n = self.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 {
+            bail!("not a non-negative integer: {n}");
+        }
+        Ok(n as usize)
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            _ => bail!("not an array: {self:?}"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            _ => bail!("not an object"),
+        }
+    }
+
+    /// `[1,2,3]` -> Vec<usize>, the manifest's shape encoding.
+    pub fn as_shape(&self) -> Result<Vec<usize>> {
+        self.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b.get(self.i).copied().ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected '{}' at {}, found '{}'", c as char, self.i, self.peek()? as char);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            bail!("invalid literal at {}", self.i)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            m.insert(k, self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => bail!("expected ',' or '}}' at {}, found '{}'", self.i, c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut v = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            self.ws();
+            v.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => bail!("expected ',' or ']' at {}, found '{}'", self.i, c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            // surrogate pairs unsupported (not present in our data)
+                            s.push(char::from_u32(cp).ok_or_else(|| anyhow!("bad \\u"))?);
+                        }
+                        _ => bail!("bad escape at {}", self.i),
+                    }
+                }
+                _ => {
+                    // collect the full UTF-8 sequence
+                    let start = self.i - 1;
+                    let len = utf8_len(c);
+                    self.i = start + len;
+                    s.push_str(std::str::from_utf8(&self.b[start..self.i])?);
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(s.parse::<f64>()?))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writer: a small builder for emitting metric / experiment JSON dumps.
+// ---------------------------------------------------------------------------
+
+/// Incremental JSON writer with pretty-printing.
+pub struct JsonWriter {
+    out: String,
+}
+
+impl Default for JsonWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonWriter {
+    pub fn new() -> Self {
+        Self { out: String::new() }
+    }
+
+    pub fn write(&mut self, v: &Json) -> &str {
+        self.emit(v, 0);
+        &self.out
+    }
+
+    fn emit(&mut self, v: &Json, indent: usize) {
+        match v {
+            Json::Null => self.out.push_str("null"),
+            Json::Bool(b) => self.out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 1e15 {
+                    let _ = write!(self.out, "{}", *n as i64);
+                } else {
+                    let _ = write!(self.out, "{n}");
+                }
+            }
+            Json::Str(s) => {
+                self.out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => self.out.push_str("\\\""),
+                        '\\' => self.out.push_str("\\\\"),
+                        '\n' => self.out.push_str("\\n"),
+                        '\t' => self.out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(self.out, "\\u{:04x}", c as u32);
+                        }
+                        c => self.out.push(c),
+                    }
+                }
+                self.out.push('"');
+            }
+            Json::Arr(items) => {
+                self.out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        self.out.push_str(", ");
+                    }
+                    self.emit(item, indent);
+                }
+                self.out.push(']');
+            }
+            Json::Obj(m) => {
+                self.out.push_str("{\n");
+                let pad = "  ".repeat(indent + 1);
+                for (i, (k, val)) in m.iter().enumerate() {
+                    if i > 0 {
+                        self.out.push_str(",\n");
+                    }
+                    let _ = write!(self.out, "{pad}\"{k}\": ");
+                    self.emit(val, indent + 1);
+                }
+                self.out.push('\n');
+                self.out.push_str(&"  ".repeat(indent));
+                self.out.push('}');
+            }
+        }
+    }
+}
+
+/// Convenience: serialize a value to a pretty string.
+pub fn to_string(v: &Json) -> String {
+    let mut w = JsonWriter::new();
+    w.write(v).to_string()
+}
+
+/// Convenience constructors for building objects in test/metric code.
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+pub fn num(n: f64) -> Json {
+    Json::Num(n)
+}
+
+pub fn s(v: &str) -> Json {
+    Json::Str(v.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_manifest_like() {
+        let text = r#"{"format": 1, "presets": {"tiny": {"config": {"h": 64, "cf": 1.0},
+            "artifacts": {"gate": {"file": "tiny_gate.hlo.txt", "inputs": [["a", [128, 64]]]}}}}}"#;
+        let v = Json::parse(text).unwrap();
+        assert_eq!(v.get("format").unwrap().as_usize().unwrap(), 1);
+        let gate = v
+            .get("presets").unwrap()
+            .get("tiny").unwrap()
+            .get("artifacts").unwrap()
+            .get("gate").unwrap();
+        assert_eq!(gate.get("file").unwrap().as_str().unwrap(), "tiny_gate.hlo.txt");
+        let shape = gate.get("inputs").unwrap().as_arr().unwrap()[0].as_arr().unwrap()[1]
+            .as_shape()
+            .unwrap();
+        assert_eq!(shape, vec![128, 64]);
+    }
+
+    #[test]
+    fn parse_escapes_and_negatives() {
+        let v = Json::parse(r#"{"s": "a\nb\"c", "n": -2.5e2, "b": [true, false, null]}"#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str().unwrap(), "a\nb\"c");
+        assert_eq!(v.get("n").unwrap().as_f64().unwrap(), -250.0);
+        assert_eq!(v.get("b").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn writer_roundtrips() {
+        let v = obj(vec![
+            ("name", s("fig10")),
+            ("rows", Json::Arr(vec![num(1.0), num(2.5)])),
+            ("ok", Json::Bool(true)),
+        ]);
+        let text = to_string(&v);
+        assert_eq!(Json::parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{oops}").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn parses_unicode() {
+        let v = Json::parse(r#""café ☕""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "café ☕");
+    }
+}

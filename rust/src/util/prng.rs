@@ -1,0 +1,228 @@
+//! Deterministic PRNG (no external crates available offline).
+//!
+//! `SplitMix64` seeds `Xoshiro256**`; normal deviates come from the
+//! Box–Muller transform. Streams are cheap to fork by key so every rank /
+//! expert / workload generator draws from an independent, reproducible
+//! stream — the same scheme seeds both the Rust side and the synthetic
+//! workloads the benches replay.
+
+/// SplitMix64 — used for seeding and as a tiny standalone generator.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Xoshiro256** — the workhorse generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// spare Box–Muller deviate
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+            spare: None,
+        }
+    }
+
+    /// Fork an independent stream keyed by `key` (stable across runs).
+    pub fn fork(&self, key: u64) -> Self {
+        // mix the current state with the key through SplitMix
+        let mut sm = SplitMix64::new(self.s[0] ^ key.wrapping_mul(0xA24B_AED4_963E_E407));
+        Self::new(sm.next_u64())
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // multiply-shift; bias negligible for our n << 2^64
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Normal f32 with mean/std.
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Lognormal deviate: exp(N(mu, sigma)).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Fill a buffer with N(0, std) f32 values.
+    pub fn fill_normal(&mut self, buf: &mut [f32], std: f32) {
+        for v in buf.iter_mut() {
+            *v = self.normal_f32(0.0, std);
+        }
+    }
+
+    /// Vector of N(0, std) f32 values.
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0; n];
+        self.fill_normal(&mut v, std);
+        v
+    }
+
+    /// Sample from a Zipf(s) distribution over [0, n) (used to skew expert
+    /// routing the way real MoE token distributions skew).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // inverse-CDF over precomputable harmonic weights would be nicer,
+        // but n is small (experts); a linear scan is fine and allocation-free.
+        let mut total = 0.0;
+        for i in 1..=n {
+            total += 1.0 / (i as f64).powf(s);
+        }
+        let mut u = self.f64() * total;
+        for i in 1..=n {
+            u -= 1.0 / (i as f64).powf(s);
+            if u <= 0.0 {
+                return i - 1;
+            }
+        }
+        n - 1
+    }
+
+    /// Random permutation of 0..n (Fisher–Yates).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i + 1);
+            v.swap(i, j);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn forked_streams_differ() {
+        let base = Rng::new(42);
+        let mut a = base.fork(1);
+        let mut b = base.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_near_half() {
+        let mut r = Rng::new(7);
+        let m: f64 = (0..10_000).map(|_| r.f64()).sum::<f64>() / 10_000.0;
+        assert!((m - 0.5).abs() < 0.02, "mean {m}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(9);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let mut r = Rng::new(5);
+        let mut counts = [0usize; 8];
+        for _ in 0..8000 {
+            counts[r.zipf(8, 1.2)] += 1;
+        }
+        assert!(counts[0] > counts[7] * 2, "{counts:?}");
+    }
+
+    #[test]
+    fn permutation_is_valid() {
+        let mut r = Rng::new(11);
+        let mut p = r.permutation(32);
+        p.sort_unstable();
+        assert_eq!(p, (0..32).collect::<Vec<_>>());
+    }
+}

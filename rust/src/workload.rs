@@ -1,0 +1,139 @@
+//! Synthetic workload generation: token routing distributions that drive
+//! both the real coordinator (via actual gate scores) and the simulator
+//! (via replayed routing tables).
+//!
+//! MoE token→expert distributions are *not* uniform in practice (the paper
+//! cites BlackMamba [36]); the generators below produce uniform, zipf-
+//! skewed and hot-expert distributions so payload efficiency, capacity
+//! drops and load imbalance are all exercised.
+
+use crate::config::{Config, ModelConfig};
+use crate::gate::{dispatch_plan, route_from_scores, DispatchPlan, Routing};
+use crate::util::prng::Rng;
+
+/// Routing skew shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Skew {
+    /// Experts drawn ~uniformly (well-balanced router).
+    Uniform,
+    /// Zipf(s≈1.1) over experts (realistic long-tail imbalance).
+    Zipf,
+    /// A handful of experts take most tokens (pathological hot spot).
+    Hot,
+}
+
+impl Skew {
+    pub fn parse(s: &str) -> Option<Skew> {
+        match s {
+            "uniform" => Some(Skew::Uniform),
+            "zipf" => Some(Skew::Zipf),
+            "hot" => Some(Skew::Hot),
+            _ => None,
+        }
+    }
+}
+
+/// One rank's replayable routing workload.
+#[derive(Clone, Debug)]
+pub struct RankWorkload {
+    pub routing: Routing,
+    pub plan: DispatchPlan,
+}
+
+/// Synthesize gate *scores* (not tokens) with the requested skew, then
+/// route them through the production gate/capacity/dispatch code — the
+/// simulator replays exactly what the real coordinator would do.
+pub fn synth_routing(
+    model: &ModelConfig,
+    s_rank: usize,
+    capacity: usize,
+    skew: Skew,
+    rng: &mut Rng,
+) -> Routing {
+    let e = model.e;
+    let mut scores = vec![0.0f32; s_rank * e];
+    for row in scores.chunks_mut(e) {
+        // favored expert by skew; logits = noise + bias toward favorite
+        let fav = match skew {
+            Skew::Uniform => rng.below(e),
+            Skew::Zipf => rng.zipf(e, 1.1),
+            Skew::Hot => {
+                if rng.f64() < 0.7 {
+                    rng.below((e / 8).max(1))
+                } else {
+                    rng.below(e)
+                }
+            }
+        };
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = rng.normal_f32(0.0, 1.0) + if j == fav { 3.0 } else { 0.0 };
+        }
+    }
+    crate::gate::softmax_rows(&mut scores, e);
+    route_from_scores(scores, s_rank, model, capacity)
+}
+
+/// Build the full per-rank workload set for a config.
+pub fn cluster_workload(cfg: &Config, skew: Skew, seed: u64) -> Vec<RankWorkload> {
+    let capacity = cfg.model.capacity(cfg.system.s_rank);
+    let base = Rng::new(seed);
+    (0..cfg.system.ranks)
+        .map(|r| {
+            let mut rng = base.fork(r as u64 + 0x50);
+            let routing = synth_routing(&cfg.model, cfg.system.s_rank, capacity, skew, &mut rng);
+            let plan = dispatch_plan(&routing, cfg.model.bm, |e| cfg.owner_of(e));
+            RankWorkload { routing, plan }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn uniform_loads_are_balanced() {
+        let cfg = Config::preset("default").unwrap();
+        let cap = cfg.model.capacity(cfg.system.s_rank);
+        let mut rng = Rng::new(1);
+        let r = synth_routing(&cfg.model, cfg.system.s_rank, cap, Skew::Uniform, &mut rng);
+        let max = *r.expert_load.iter().max().unwrap() as f64;
+        let min = *r.expert_load.iter().min().unwrap() as f64;
+        assert!(max / min.max(1.0) < 4.0, "uniform skew too high: {max}/{min}");
+    }
+
+    #[test]
+    fn hot_skew_concentrates_and_drops() {
+        let cfg = Config::preset("default").unwrap();
+        let cap = cfg.model.capacity(cfg.system.s_rank);
+        let mut rng = Rng::new(2);
+        let hot = synth_routing(&cfg.model, cfg.system.s_rank, cap, Skew::Hot, &mut rng);
+        let uni = synth_routing(&cfg.model, cfg.system.s_rank, cap, Skew::Uniform, &mut rng);
+        assert!(hot.dropped > uni.dropped, "hot skew should overflow capacity");
+        let hot_max = *hot.expert_load.iter().max().unwrap();
+        let uni_max = *uni.expert_load.iter().max().unwrap();
+        assert!(hot_max >= uni_max);
+    }
+
+    #[test]
+    fn workload_is_deterministic() {
+        let cfg = Config::preset("tiny").unwrap();
+        let a = cluster_workload(&cfg, Skew::Zipf, 7);
+        let b = cluster_workload(&cfg, Skew::Zipf, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.plan.tiles, y.plan.tiles);
+        }
+    }
+
+    #[test]
+    fn plans_cover_routes() {
+        let cfg = Config::preset("tiny").unwrap();
+        for skew in [Skew::Uniform, Skew::Zipf, Skew::Hot] {
+            for w in cluster_workload(&cfg, skew, 3) {
+                let covered: usize = w.plan.tiles.iter().map(|t| t.tokens.len()).sum();
+                assert_eq!(covered, w.routing.routes.len());
+            }
+        }
+    }
+}

@@ -1,0 +1,322 @@
+//! Property-based tests (via `util::check::forall`) over the paper's key
+//! invariants: Theorem 3.1 write-conflict freedom, gate/capacity/routing
+//! invariants, scheduler work conservation, and task-bound termination.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use flashdmoe::config::ModelConfig;
+use flashdmoe::coordinator::scheduler::TaskQueue;
+use flashdmoe::gate::{dispatch_plan, route_from_scores};
+use flashdmoe::layout::{conflict_free, write_is_valid, Coord, LayoutDims, Write, BUFFERS, ROUNDS};
+use flashdmoe::task::{Task, TaskBound, TaskType};
+use flashdmoe::util::check::{forall, Gen};
+use flashdmoe::util::prng::Rng;
+
+// ---------------------------------------------------------------------------
+// Theorem 3.1: random *valid* writes from distinct sources never overlap
+// ---------------------------------------------------------------------------
+
+fn random_dims(g: &mut Gen) -> LayoutDims {
+    let bm = g.choose(&[2usize, 4, 8]);
+    LayoutDims {
+        p: g.int(1, 8),
+        e_local: g.int(1, 4),
+        c: bm * g.int(1, 4),
+        h: g.int(1, 16),
+        bm,
+    }
+}
+
+fn random_valid_write(g: &mut Gen, dims: &LayoutDims) -> Write {
+    // generate writes *per the validity rules* (Definition C.2)
+    let src = g.int(0, dims.p - 1);
+    let inter = g.int(0, 1) == 1;
+    let (p, b, dst) = if inter {
+        (src, 1, g.int(0, dims.p - 1))
+    } else {
+        (g.int(0, dims.p - 1), 0, src)
+    };
+    let tile = g.int(0, dims.tiles_per_expert() - 1);
+    let rows = g.int(1, dims.bm);
+    Write {
+        src,
+        dst,
+        coord: Coord {
+            p,
+            r: g.int(0, ROUNDS - 1),
+            b,
+            e: g.int(0, dims.e_local - 1),
+            c: tile * dims.bm,
+        },
+        rows,
+    }
+}
+
+#[test]
+fn theorem_3_1_random_valid_writes_are_conflict_free() {
+    forall(
+        0xC0FFEE,
+        500,
+        |g| {
+            let dims = random_dims(g);
+            let writes: Vec<Write> =
+                (0..g.int(2, 20)).map(|_| random_valid_write(g, &dims)).collect();
+            (dims, writes)
+        },
+        |(dims, writes)| {
+            for w in writes {
+                if !write_is_valid(w, dims) {
+                    return Err(format!("generator produced invalid write {w:?}"));
+                }
+            }
+            for (i, a) in writes.iter().enumerate() {
+                for b in &writes[i + 1..] {
+                    if a.src != b.src && !conflict_free(a, b, dims) {
+                        return Err(format!("conflict between {a:?} and {b:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn forged_writes_are_always_rejected() {
+    forall(
+        0xBAD,
+        500,
+        |g| {
+            let dims = random_dims(g);
+            let mut w = random_valid_write(g, &dims);
+            // forge: claim another peer's slot on a remote write
+            w.coord.b = 1;
+            w.coord.p = (w.src + 1 + g.int(0, dims.p.saturating_sub(1))) % dims.p.max(2);
+            (dims, w)
+        },
+        |(dims, w)| {
+            if w.coord.p != w.src && write_is_valid(w, dims) {
+                return Err(format!("forged write accepted: {w:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Gate invariants
+// ---------------------------------------------------------------------------
+
+fn random_routing(g: &mut Gen) -> (ModelConfig, usize, Vec<f32>, usize) {
+    let e = g.choose(&[2usize, 4, 8, 16]);
+    let k = 1 + g.int(0, (e - 1).min(3));
+    let bm = g.choose(&[2usize, 4, 8]);
+    let s = bm * g.int(1, 16);
+    let capacity = bm * g.int(1, 8);
+    let model = ModelConfig { h: 4, d: 8, e, k, bm, bn: 4, capacity_factor: 1.0 };
+    let mut rng = Rng::new(g.int(0, u32::MAX as usize) as u64);
+    let mut scores = rng.normal_vec(s * e, 1.0);
+    flashdmoe::gate::softmax_rows(&mut scores, e);
+    (model, s, scores, capacity)
+}
+
+#[test]
+fn routing_invariants_hold() {
+    forall(
+        0x9A7E,
+        300,
+        |g| random_routing(g),
+        |(model, s, scores, capacity)| {
+            let r = route_from_scores(scores.clone(), *s, model, *capacity);
+            // (1) kept + dropped == S*k
+            if r.routes.len() + r.dropped != s * model.k {
+                return Err("kept+dropped != S*k".into());
+            }
+            // (2) per-expert loads never exceed capacity
+            for (e, &load) in r.expert_load.iter().enumerate() {
+                if load as usize > *capacity {
+                    return Err(format!("expert {e} over capacity: {load}"));
+                }
+            }
+            // (3) slots within an expert are unique and dense 0..load
+            for e in 0..model.e {
+                let mut slots: Vec<u32> = r
+                    .routes
+                    .iter()
+                    .filter(|x| x.expert as usize == e)
+                    .map(|x| x.slot)
+                    .collect();
+                slots.sort_unstable();
+                for (i, s2) in slots.iter().enumerate() {
+                    if *s2 as usize != i {
+                        return Err(format!("expert {e} slots not dense: {slots:?}"));
+                    }
+                }
+            }
+            // (4) combine weights of a token's kept routes never exceed 1
+            let mut per_token = vec![0.0f32; *s];
+            for x in &r.routes {
+                per_token[x.token as usize] += x.combine_weight;
+            }
+            if per_token.iter().any(|w| *w > 1.0 + 1e-4) {
+                return Err("combine weights exceed 1".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dispatch_plan_partitions_routes() {
+    forall(
+        0xD15,
+        200,
+        |g| random_routing(g),
+        |(model, s, scores, capacity)| {
+            let r = route_from_scores(scores.clone(), *s, model, *capacity);
+            let plan = dispatch_plan(&r, model.bm, |e| e % 3);
+            let covered: usize = plan.tiles.iter().map(|t| t.tokens.len()).sum();
+            if covered != r.routes.len() {
+                return Err(format!("plan covers {covered}, routes {}", r.routes.len()));
+            }
+            if plan.sent_rows > plan.padded_rows {
+                return Err("sent more than padded?".into());
+            }
+            for t in &plan.tiles {
+                if t.rows == 0 || t.rows as usize > model.bm {
+                    return Err(format!("bad tile rows {}", t.rows));
+                }
+                if t.tokens.len() != t.weights.len() {
+                    return Err("tokens/weights arity mismatch".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler: work conservation & exactly-once delivery under contention
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scheduler_delivers_exactly_once_under_random_schedules() {
+    forall(
+        0x5C4ED,
+        40,
+        |g| (g.int(1, 8), g.int(0, 500)),
+        |&(workers, n_tasks)| {
+            let q = Arc::new(TaskQueue::new());
+            let delivered = Arc::new(AtomicU32::new(0));
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let q = q.clone();
+                    let delivered = delivered.clone();
+                    std::thread::spawn(move || {
+                        while q.pop().is_some() {
+                            delivered.fetch_add(1, Ordering::Relaxed);
+                        }
+                    })
+                })
+                .collect();
+            for i in 0..n_tasks {
+                q.push(Task {
+                    task_type: TaskType::Combine,
+                    peer: 0,
+                    expert: 0,
+                    tile: 0,
+                    col: 0,
+                    rows: 1,
+                    seq: i as u32,
+                });
+            }
+            q.stop_all();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let got = delivered.load(Ordering::Relaxed) as usize;
+            if got != n_tasks {
+                return Err(format!("delivered {got} of {n_tasks}"));
+            }
+            let (pushed, popped) = q.counts();
+            if pushed != popped {
+                return Err(format!("pushed {pushed} != popped {popped}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn task_bound_terminates_iff_finalized_and_complete() {
+    forall(
+        0x7B0,
+        300,
+        |g| {
+            let adds: Vec<u32> = (0..g.int(1, 10)).map(|_| g.int(0, 50) as u32).collect();
+            let finalize_at = g.int(0, adds.len());
+            (adds, finalize_at)
+        },
+        |(adds, finalize_at)| {
+            let tb = TaskBound::new();
+            let mut total = 0u32;
+            for (i, &n) in adds.iter().enumerate() {
+                if i == *finalize_at {
+                    tb.finalize();
+                }
+                tb.add(n);
+                total += n;
+                if tb.done() && total > tb.progress().0 {
+                    return Err("done before all work completed".into());
+                }
+                tb.complete(n);
+            }
+            if *finalize_at >= adds.len() {
+                if tb.done() {
+                    return Err("done without finalize".into());
+                }
+                tb.finalize();
+            }
+            if !tb.done() {
+                return Err(format!("not done after {total} completions"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Layout offsets: random coordinates map to disjoint rows
+// ---------------------------------------------------------------------------
+
+#[test]
+fn layout_offsets_are_injective() {
+    forall(
+        0x0FF5,
+        200,
+        |g| {
+            let dims = random_dims(g);
+            let coords: Vec<Coord> = (0..g.int(2, 30))
+                .map(|_| Coord {
+                    p: g.int(0, dims.p - 1),
+                    r: g.int(0, ROUNDS - 1),
+                    b: g.int(0, BUFFERS - 1),
+                    e: g.int(0, dims.e_local - 1),
+                    c: g.int(0, dims.c - 1),
+                })
+                .collect();
+            (dims, coords)
+        },
+        |(dims, coords)| {
+            for (i, a) in coords.iter().enumerate() {
+                for b in &coords[i + 1..] {
+                    if a != b && dims.offset(*a) == dims.offset(*b) {
+                        return Err(format!("offset collision: {a:?} vs {b:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

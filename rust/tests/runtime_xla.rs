@@ -1,0 +1,159 @@
+//! XLA/PJRT-path tests: AOT artifacts loaded and executed from Rust, the
+//! XLA backend vs the native backend, and the headline end-to-end check —
+//! the multi-rank coordinator against the monolithic `moe_layer` artifact.
+//!
+//! These tests require `make artifacts`; they are skipped (pass
+//! trivially, with a note) when the manifest is absent so `cargo test`
+//! works from a clean checkout.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use flashdmoe::coordinator::{DistributedMoE, TaskGraphMode};
+use flashdmoe::expert::{generate_tokens, ExpertParams, ModelParams};
+use flashdmoe::runtime::{ArtifactStore, ComputeBackend, NativeBackend, XlaBackend};
+use flashdmoe::util::prng::Rng;
+use flashdmoe::util::stats::max_abs_diff;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    // tests run from the crate root
+    let dir = ArtifactStore::default_dir();
+    if ArtifactStore::available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn artifact_store_loads_all_kernels() {
+    let Some(dir) = artifacts_dir() else { return };
+    let store = ArtifactStore::load(&dir, "tiny").unwrap();
+    let names = store.kernel_names();
+    for want in ["gate", "ffn_block", "ffn_tile", "gemm0_tile", "gemm1_tile", "combine_tile", "moe_layer"] {
+        assert!(names.contains(&want), "missing artifact {want}");
+    }
+    assert!(store.compile_secs > 0.0);
+    assert!(ArtifactStore::load(&dir, "nope").is_err());
+}
+
+#[test]
+fn xla_gate_matches_native_gate() {
+    let Some(dir) = artifacts_dir() else { return };
+    let store = ArtifactStore::load(&dir, "tiny").unwrap();
+    let cfg = store.config.clone();
+    let xla = XlaBackend::new(store);
+    let native = NativeBackend::from_config(&cfg);
+    let mut rng = Rng::new(4);
+    let s = cfg.system.s_rank;
+    let a = rng.normal_vec(s * cfg.model.h, 1.0);
+    let wg = rng.normal_vec(cfg.model.h * cfg.model.e, 1.0);
+    let gx = xla.gate_scores(&a, &wg, s).unwrap();
+    let gn = native.gate_scores(&a, &wg, s).unwrap();
+    assert!(max_abs_diff(&gx, &gn) < 1e-4, "gate backends disagree");
+    // shape-specialization is enforced
+    assert!(xla.gate_scores(&a[..cfg.model.h], &wg, 1).is_err());
+}
+
+#[test]
+fn xla_ffn_tile_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let store = ArtifactStore::load(&dir, "tiny").unwrap();
+    let cfg = store.config.clone();
+    let m = &cfg.model;
+    let xla = XlaBackend::new(store);
+    let native = NativeBackend::from_config(&cfg);
+    let mut rng = Rng::new(5);
+    let ex = ExpertParams {
+        w1: rng.normal_vec(m.h * m.d, 0.1),
+        b1: rng.normal_vec(m.d, 0.1),
+        w2: rng.normal_vec(m.d * m.h, 0.1),
+        b2: rng.normal_vec(m.h, 0.1),
+    };
+    let x = rng.normal_vec(m.bm * m.h, 1.0);
+    let mut ox = vec![0.0; m.bm * m.h];
+    let mut on = vec![0.0; m.bm * m.h];
+    let mut scratch = vec![0.0; m.bm * m.d];
+    xla.ffn_tile(&x, &ex, 0, &mut ox, &mut scratch).unwrap();
+    native.ffn_tile(&x, &ex, 0, &mut on, &mut scratch).unwrap();
+    assert!(max_abs_diff(&ox, &on) < 1e-3, "ffn_tile backends disagree");
+}
+
+#[test]
+fn gemm_tiles_match_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let store = ArtifactStore::load(&dir, "tiny").unwrap();
+    let cfg = store.config.clone();
+    let m = &cfg.model;
+    let xla = XlaBackend::new(store);
+    let native = NativeBackend::from_config(&cfg);
+    let mut rng = Rng::new(6);
+    let x = rng.normal_vec(m.bm * m.h, 1.0);
+    let w1c = rng.normal_vec(m.h * m.bn, 0.1);
+    let b1c = rng.normal_vec(m.bn, 0.1);
+    let mut ox = vec![0.0; m.bm * m.bn];
+    let mut on = vec![0.0; m.bm * m.bn];
+    xla.gemm0_tile(&x, &w1c, &b1c, &mut ox).unwrap();
+    native.gemm0_tile(&x, &w1c, &b1c, &mut on).unwrap();
+    assert!(max_abs_diff(&ox, &on) < 1e-3);
+
+    let h2 = rng.normal_vec(m.bm * m.d, 1.0);
+    let w2c = rng.normal_vec(m.d * m.bn, 0.1);
+    let b2c = rng.normal_vec(m.bn, 0.1);
+    xla.gemm1_tile(&h2, &w2c, &b2c, &mut ox).unwrap();
+    native.gemm1_tile(&h2, &w2c, &b2c, &mut on).unwrap();
+    assert!(max_abs_diff(&ox, &on) < 1e-3);
+}
+
+/// The headline E2E: multi-rank distributed forward (both backends, both
+/// task-graph modes) ≡ the monolithic L2 `moe_layer` artifact.
+#[test]
+fn distributed_forward_matches_monolithic_artifact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let store = ArtifactStore::load(&dir, "tiny").unwrap();
+    let cfg = store.config.clone();
+    let params = Arc::new(ModelParams::generate(&cfg, 77));
+    let inputs: Vec<Vec<f32>> =
+        (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, 77, r)).collect();
+    let a_all: Vec<f32> = inputs.concat();
+    let want = store.run_moe_layer(&a_all, &params).unwrap();
+
+    // native backend, fused mode
+    let native: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+    let got = DistributedMoE::new(cfg.clone(), params.clone(), native.clone(), TaskGraphMode::Fused)
+        .unwrap()
+        .forward(&inputs)
+        .unwrap();
+    let flat: Vec<f32> = got.outputs.concat();
+    assert!(max_abs_diff(&flat, &want) < 1e-3, "native/fused vs artifact");
+
+    // native backend, split mode
+    let got = DistributedMoE::new(cfg.clone(), params.clone(), native, TaskGraphMode::Split)
+        .unwrap()
+        .forward(&inputs)
+        .unwrap();
+    let flat: Vec<f32> = got.outputs.concat();
+    assert!(max_abs_diff(&flat, &want) < 1e-3, "native/split vs artifact");
+
+    // xla backend (the AOT Pallas kernels on the hot path), fused mode
+    let xla: Arc<dyn ComputeBackend> = Arc::new(XlaBackend::new(store));
+    let got = DistributedMoE::new(cfg.clone(), params.clone(), xla, TaskGraphMode::Fused)
+        .unwrap()
+        .forward(&inputs)
+        .unwrap();
+    let flat: Vec<f32> = got.outputs.concat();
+    assert!(max_abs_diff(&flat, &want) < 1e-3, "xla/fused vs artifact");
+}
+
+#[test]
+fn manifest_capacity_contract_is_checked() {
+    let Some(dir) = artifacts_dir() else { return };
+    // loading validates capacity math between python and rust; a passing
+    // load IS the assertion (mismatch -> Err)
+    let store = ArtifactStore::load(&dir, "default").unwrap();
+    assert_eq!(
+        store.config.model.capacity(store.config.system.s_rank) % store.config.model.bm,
+        0
+    );
+}
