@@ -8,7 +8,7 @@
 use std::sync::Arc;
 
 use flashdmoe::config::Config;
-use flashdmoe::coordinator::{baseline, DistributedMoE, TaskGraphMode};
+use flashdmoe::coordinator::{baseline, MoeEngine, TaskGraphMode};
 use flashdmoe::expert::{generate_tokens, ModelParams};
 use flashdmoe::runtime::{ComputeBackend, NativeBackend};
 use flashdmoe::sim::engines::{simulate, Baseline, Engine};
@@ -27,10 +27,10 @@ fn main() -> anyhow::Result<()> {
         let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
         let inputs: Vec<Vec<f32>> =
             (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, 7, r)).collect();
-        let moe =
-            DistributedMoE::new(cfg.clone(), params.clone(), backend.clone(), TaskGraphMode::Fused)?;
-        let _ = moe.forward(&inputs)?; // warmup
-        let flash = moe.forward(&inputs)?;
+        let engine =
+            MoeEngine::start(cfg.clone(), params.clone(), backend.clone(), TaskGraphMode::Fused)?;
+        let _ = engine.submit(&inputs)?.wait()?; // warmup
+        let flash = engine.submit(&inputs)?.wait()?;
         let base = baseline::forward_sequential(&cfg, &params, &backend, &inputs)?;
         t.row(&[
             e.to_string(),

@@ -1,4 +1,5 @@
-//! Quickstart: build a distributed MoE operator and run a forward pass.
+//! Quickstart: start the persistent MoE engine, submit epoch-tagged
+//! forward passes, collect results, shut down.
 //!
 //!     cargo run --release --example quickstart
 //!
@@ -9,7 +10,7 @@
 use std::sync::Arc;
 
 use flashdmoe::config::Config;
-use flashdmoe::coordinator::{DistributedMoE, TaskGraphMode};
+use flashdmoe::coordinator::{MoeEngine, TaskGraphMode};
 use flashdmoe::expert::{generate_tokens, ModelParams};
 use flashdmoe::runtime::{ArtifactStore, ComputeBackend, NativeBackend, XlaBackend};
 use flashdmoe::util::stats::{fmt_bytes, fmt_time};
@@ -42,22 +43,27 @@ fn main() -> anyhow::Result<()> {
         Arc::new(NativeBackend::from_config(&cfg))
     };
 
-    // 4. The operator. Fused mode = one FFN task per tile; Split mode =
-    //    the paper's GEMM0->GEMM1 chain.
-    let moe = DistributedMoE::new(cfg.clone(), params, backend, TaskGraphMode::Fused)?;
-    println!("symmetric heap L: {} per rank", fmt_bytes(moe.heap_bytes_per_rank()));
+    // 4. The engine. Started ONCE: every rank's subscriber + processor
+    //    actors come up resident and park on doorbells. Fused mode = one
+    //    FFN task per tile; Split mode = the paper's GEMM0->GEMM1 chain.
+    let engine = MoeEngine::start(cfg.clone(), params, backend, TaskGraphMode::Fused)?;
+    println!("symmetric heap L: {} per rank", fmt_bytes(engine.heap_bytes_per_rank()));
 
     // 5. Per-rank token batches (each rank owns its own sequence — DDP+EP).
     let inputs: Vec<Vec<f32>> =
         (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, 42, r)).collect();
 
-    // 6. Forward. One call = gate -> one-sided dispatch -> expert FFN ->
-    //    one-sided combine, all inside the persistent actor runtime.
-    for pass in 0..3 {
-        let out = moe.forward(&inputs)?;
+    // 6. Forward passes: epoch-tagged submissions onto the resident
+    //    actors. submit() returns immediately with a PassHandle; wait()
+    //    collects the outputs. Submitting pass N+1 before waiting pass N
+    //    pipelines host work against engine compute (see examples/serve.rs).
+    for _ in 0..3 {
+        let handle = engine.submit(&inputs)?;
+        let out = handle.wait()?;
         let m = &out.metrics;
         println!(
-            "pass {pass}: {:>9} | util {:>5.1}% | {} tiles sent | payload saved {:.1}%",
+            "pass {}: {:>9} | util {:>5.1}% | {} tiles sent | payload saved {:.1}%",
+            m.epoch,
             fmt_time(m.wall_secs),
             m.utilization() * 100.0,
             m.ranks.iter().map(|r| r.tiles_sent).sum::<usize>(),
@@ -68,6 +74,19 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(out.outputs.len(), cfg.system.ranks);
         assert_eq!(out.outputs[0].len(), cfg.system.s_rank * cfg.model.h);
     }
+
+    // 7. Lifecycle accounting: the operator was "launched" exactly once,
+    //    no matter how many passes ran.
+    let em = engine.metrics();
+    println!(
+        "engine: {} passes | {} launch | {} resident threads",
+        em.passes, em.launches, em.threads_spawned
+    );
+    assert_eq!(em.launches, 1);
+
+    // 8. Shutdown: drain, park, join — no leaked threads (drop does the
+    //    same implicitly).
+    engine.shutdown();
     println!("ok");
     Ok(())
 }

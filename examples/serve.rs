@@ -1,34 +1,46 @@
 //! Serving-style driver: a request router + dynamic batcher in front of
-//! the distributed MoE operator — the shape a deployment embeds (vLLM-ish
+//! the persistent MoE engine — the shape a deployment embeds (vLLM-ish
 //! front end, FlashDMoE back end). Synthetic clients submit variable-size
 //! requests; the batcher packs them into fixed (S_r, H) rank batches
-//! (padding tracked), runs the fused forward, and reports per-request
-//! latency percentiles and sustained throughput.
+//! (padding tracked) and drives the engine with **pipelined submission**:
+//! while pass N runs on the resident actors, the batcher packs and
+//! submits batch N+1, so host-side packing is hidden behind engine
+//! compute. Reports per-request latency percentiles, sustained
+//! throughput, batch fill, and the achieved pack/compute overlap.
 //!
 //!     cargo run --release --example serve
 
 use std::collections::VecDeque;
 use std::sync::Arc;
+use std::time::Instant;
 
 use flashdmoe::config::Config;
-use flashdmoe::coordinator::{DistributedMoE, TaskGraphMode};
+use flashdmoe::coordinator::{MoeEngine, PassHandle, TaskGraphMode};
 use flashdmoe::expert::ModelParams;
 use flashdmoe::runtime::{ComputeBackend, NativeBackend};
 use flashdmoe::util::prng::Rng;
 use flashdmoe::util::stats::{fmt_time, summarize, Table};
 
 struct Request {
-    id: usize,
     tokens: usize,
-    submitted: std::time::Instant,
+    submitted: Instant,
+}
+
+/// A batch in flight on the engine: its pass handle plus the requests
+/// whose latency clocks stop when the pass completes.
+struct InFlight {
+    handle: PassHandle,
+    requests: Vec<Request>,
 }
 
 fn main() -> anyhow::Result<()> {
-    let n_requests: usize = std::env::var("REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(64);
+    let n_requests: usize =
+        std::env::var("REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(64);
     let cfg = Config::preset("tiny")?;
     let params = Arc::new(ModelParams::generate(&cfg, 42));
     let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
-    let moe = DistributedMoE::new(cfg.clone(), params, backend, TaskGraphMode::Fused)?;
+    // launch once — every batch below is a doorbell ring on these actors
+    let engine = MoeEngine::start(cfg.clone(), params, backend, TaskGraphMode::Fused)?;
 
     let (s_rank, h, ranks) = (cfg.system.s_rank, cfg.model.h, cfg.system.ranks);
     let batch_capacity = s_rank * ranks;
@@ -40,16 +52,35 @@ fn main() -> anyhow::Result<()> {
     // synthetic open-loop arrivals: requests of 8..256 tokens
     let mut rng = Rng::new(7);
     let mut queue: VecDeque<Request> = (0..n_requests)
-        .map(|id| Request { id, tokens: 8 + rng.below(249), submitted: std::time::Instant::now() })
+        .map(|_| Request { tokens: 8 + rng.below(249), submitted: Instant::now() })
         .collect();
 
     let mut latencies = Vec::new();
     let mut batches = 0usize;
     let mut served_tokens = 0usize;
     let mut padded_tokens = 0usize;
-    let t0 = std::time::Instant::now();
+    let mut pack_secs = 0.0f64; // host-side packing, total
+    let mut pack_overlapped_secs = 0.0f64; // packing done while a pass was in flight
+    let mut wait_secs = 0.0f64; // time actually blocked on the engine
+    let mut in_flight: Option<InFlight> = None;
+    let t0 = Instant::now();
+
+    fn drain(fly: InFlight, latencies: &mut Vec<f64>, wait_secs: &mut f64) -> anyhow::Result<()> {
+        let tw = Instant::now();
+        let out = fly.handle.wait()?;
+        *wait_secs += tw.elapsed().as_secs_f64();
+        let now = Instant::now();
+        for r in &fly.requests {
+            latencies.push(now.duration_since(r.submitted).as_secs_f64());
+        }
+        drop(out);
+        Ok(())
+    }
+
     while !queue.is_empty() {
-        // dynamic batching: greedily pack whole requests into the batch
+        // pack batch N+1 while batch N runs on the resident actors
+        let overlapped = in_flight.is_some();
+        let tp = Instant::now();
         let mut batch: Vec<Request> = Vec::new();
         let mut used = 0usize;
         while let Some(r) = queue.front() {
@@ -69,17 +100,33 @@ fn main() -> anyhow::Result<()> {
         }
         let inputs: Vec<Vec<f32>> =
             (0..ranks).map(|r| flat[r * s_rank * h..(r + 1) * s_rank * h].to_vec()).collect();
-        let out = moe.forward(&inputs)?;
+        let packed = tp.elapsed().as_secs_f64();
+        pack_secs += packed;
+        if overlapped {
+            // a pass was in flight for this whole pack: the engine was
+            // computing while the host prepared the next batch
+            pack_overlapped_secs += packed;
+        }
+
+        // pipelined submission: hand batch N+1 to the engine *before*
+        // collecting batch N
+        let handle = engine.submit(&inputs)?;
         batches += 1;
         served_tokens += used;
         padded_tokens += batch_capacity - used;
-        let now = std::time::Instant::now();
-        for r in &batch {
-            latencies.push(now.duration_since(r.submitted).as_secs_f64());
+        if let Some(prev) = in_flight.take() {
+            drain(prev, &mut latencies, &mut wait_secs)?;
         }
-        drop(out);
+        in_flight = Some(InFlight { handle, requests: batch });
+    }
+    if let Some(last) = in_flight.take() {
+        drain(last, &mut latencies, &mut wait_secs)?;
     }
     let wall = t0.elapsed().as_secs_f64();
+    let em = engine.metrics();
+    // achieved overlap: the fraction of host packing that happened while
+    // a pass was in flight (the first batch necessarily packs cold)
+    let overlap = if pack_secs > 0.0 { pack_overlapped_secs / pack_secs } else { 0.0 };
 
     let s = summarize(&latencies);
     let mut t = Table::new(&["metric", "value"]);
@@ -91,7 +138,14 @@ fn main() -> anyhow::Result<()> {
     t.row(&["latency p50".into(), fmt_time(s.p50)]);
     t.row(&["latency p95".into(), fmt_time(s.p95)]);
     t.row(&["latency max".into(), fmt_time(s.max)]);
+    t.row(&["engine passes".into(), format!("{} ({} launch)", em.passes, em.launches)]);
+    t.row(&["host pack time".into(), fmt_time(pack_secs)]);
+    t.row(&["  …while a pass ran".into(), fmt_time(pack_overlapped_secs)]);
+    t.row(&["blocked on engine".into(), fmt_time(wait_secs)]);
+    t.row(&["pack overlap achieved".into(), format!("{:.1}% of packing hidden", overlap * 100.0)]);
     println!("{}", t.render());
+    assert_eq!(em.passes, batches as u64);
+    engine.shutdown();
     println!("serve OK");
     Ok(())
 }

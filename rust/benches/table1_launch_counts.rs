@@ -1,8 +1,27 @@
 //! Table 1 — kernel launches per single MoE layer pass (2 ranks, 32 local
 //! experts). FlashDMoE = 1 persistent kernel; baselines modeled per
 //! `Baseline::launch_model`, calibrated against the paper's Nsight counts.
+//!
+//! Table 1b — the same claim measured on the real execution path: a
+//! resident `MoeEngine` (launched once, doorbell per pass) vs starting
+//! and tearing the actor group down around every pass (the per-call
+//! software "launch" the operator used to do). Reports steady-state
+//! per-pass latency both ways and the amortized launch overhead.
+//!
+//! Env: `PASSES` (default 10) steady-state passes per arm.
 fn main() {
     let (text, rows) = flashdmoe::harness::table1();
     println!("{text}");
     assert_eq!(rows[0].1, 1, "flash must be a single launch");
+
+    let passes: usize = std::env::var("PASSES").ok().and_then(|v| v.parse().ok()).unwrap_or(10);
+    let (text, p) = flashdmoe::harness::persistent_vs_respawn("tiny", passes, 42)
+        .expect("persistent-vs-respawn microbench");
+    println!("{text}");
+    assert_eq!(p.persistent_launches, 1, "resident engine: one launch for all passes");
+    assert_eq!(p.respawn_launches, passes as u64, "respawn shape: one launch per pass");
+    assert!(
+        p.respawn_threads >= p.persistent_threads,
+        "respawning must spawn at least as many threads as launching once"
+    );
 }

@@ -1,0 +1,417 @@
+//! The persistent `MoeEngine`: the paper's "launch once, stay resident"
+//! operator contract made into the public API.
+//!
+//! [`MoeEngine::start`] brings up every rank's actor group (subscriber
+//! thread + resident processor workers) exactly once — the
+//! launch-equivalent count in [`EngineMetrics`] is 1 for the engine's
+//! whole lifetime. A forward pass is an **epoch-tagged submission**:
+//! [`MoeEngine::submit`] stamps the next pass epoch, parks the inputs in
+//! one of two pass slots, and rings the engine doorbell; the resident
+//! actors pick the pass up, stamp the epoch into every one-sided transfer
+//! (the symmetric heap's per-slot generation counters — no global reset),
+//! and deposit their outputs back into the slot. [`PassHandle::wait`]
+//! collects the [`ForwardResult`].
+//!
+//! Submission is pipelined: with two pass slots, `submit` of pass N+1
+//! returns while pass N is still in flight (and `submit` of pass N+2
+//! first drains pass N into a parking buffer), so a serving batcher can
+//! pack the next batch while the current one runs. The actors execute
+//! passes in epoch order; the slots double-buffer inputs/outputs, not
+//! compute.
+//!
+//! Shutdown is explicit ([`MoeEngine::shutdown`]) or automatic on drop:
+//! the doorbell broadcasts the stop, every rank actor finishes any
+//! already-submitted pass, parks its processors, and joins — no leaked
+//! threads, verified by the engine lifecycle tests.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::expert::ModelParams;
+use crate::fabric::SymmetricHeap;
+use crate::layout::LayoutDims;
+use crate::runtime::ComputeBackend;
+
+use super::metrics::{EngineMetrics, PassMetrics};
+use super::rank::{EngineShared, RankActor, RankOutput, TaskGraphMode};
+
+/// Result of one distributed forward pass.
+pub struct ForwardResult {
+    /// Per-rank output matrices (S_r, H), row-major.
+    pub outputs: Vec<Vec<f32>>,
+    pub metrics: PassMetrics,
+}
+
+/// How many passes may be in flight (submitted, not yet collected into
+/// the parking buffer) at once. Two slots give submit/collect pipelining;
+/// the actors themselves execute passes serially in epoch order.
+const PASS_SLOTS: usize = 2;
+
+struct PassSlot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+struct SlotState {
+    /// Epoch currently occupying the slot; 0 = free.
+    epoch: u64,
+    inputs: Option<Arc<Vec<Vec<f32>>>>,
+    outputs: Vec<Option<Result<RankOutput>>>,
+    deposited: usize,
+}
+
+struct Submission {
+    /// Highest epoch submitted so far.
+    latest: u64,
+    shutdown: bool,
+}
+
+/// State shared between the engine handle, its rank actor threads, and
+/// any outstanding [`PassHandle`]s (which keep it alive past engine drop).
+struct EngineInner {
+    ranks: usize,
+    doorbell: Mutex<Submission>,
+    doorbell_cv: Condvar,
+    slots: [PassSlot; PASS_SLOTS],
+    /// Completed passes displaced from their slot by a later submit,
+    /// keyed by epoch, awaiting their `wait()`.
+    parked: Mutex<HashMap<u64, Result<ForwardResult>>>,
+    metrics: Mutex<EngineMetrics>,
+}
+
+impl EngineInner {
+    fn slot_of(&self, epoch: u64) -> &PassSlot {
+        &self.slots[(epoch % PASS_SLOTS as u64) as usize]
+    }
+}
+
+/// The persistent distributed MoE engine. See the module docs for the
+/// lifecycle; the one-line version:
+///
+/// ```text
+/// start(cfg, params, backend, mode)      // actors launched ONCE
+///   -> submit(inputs) -> PassHandle      //  × N, pipelined
+///   -> handle.wait()  -> ForwardResult   //  × N
+/// -> shutdown() / drop                   // actors joined
+/// ```
+pub struct MoeEngine {
+    shared: Arc<EngineShared>,
+    inner: Arc<EngineInner>,
+    /// Next epoch to assign; guards submission order.
+    next_epoch: Mutex<u64>,
+    rank_threads: Vec<JoinHandle<()>>,
+}
+
+/// An in-flight (or completed, not-yet-collected) epoch-tagged pass.
+/// `wait()` consumes the handle and returns the pass result; dropping an
+/// unwaited handle discards the result once the pass completes.
+pub struct PassHandle {
+    inner: Arc<EngineInner>,
+    epoch: u64,
+    collected: bool,
+}
+
+impl MoeEngine {
+    /// Validate the configuration, allocate the symmetric heap, and launch
+    /// the resident rank actors — the single "kernel launch" of the
+    /// engine's lifetime. Steady-state passes spawn zero threads.
+    pub fn start(
+        cfg: Config,
+        params: Arc<ModelParams>,
+        backend: Arc<dyn ComputeBackend>,
+        mode: TaskGraphMode,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        let dims = LayoutDims::from_config(&cfg);
+        let heap = Arc::new(SymmetricHeap::new(dims, cfg.system.ranks_per_node()));
+        let ranks = cfg.system.ranks;
+        let shared = Arc::new(EngineShared::new(cfg, params, heap, backend, mode));
+        let inner = Arc::new(EngineInner {
+            ranks,
+            doorbell: Mutex::new(Submission { latest: 0, shutdown: false }),
+            doorbell_cv: Condvar::new(),
+            slots: std::array::from_fn(|_| PassSlot {
+                state: Mutex::new(SlotState {
+                    epoch: 0,
+                    inputs: None,
+                    outputs: Vec::new(),
+                    deposited: 0,
+                }),
+                cv: Condvar::new(),
+            }),
+            parked: Mutex::new(HashMap::new()),
+            metrics: Mutex::new(EngineMetrics { launches: 1, ..Default::default() }),
+        });
+        let rank_threads = (0..ranks)
+            .map(|rank| {
+                let shared = shared.clone();
+                let inner = inner.clone();
+                shared.threads_spawned.fetch_add(1, Ordering::Relaxed);
+                std::thread::Builder::new()
+                    .name(format!("flash-rank{rank}"))
+                    .spawn(move || rank_main(shared, inner, rank))
+                    .expect("spawn rank actor")
+            })
+            .collect();
+        Ok(Self { shared, inner, next_epoch: Mutex::new(1), rank_threads })
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.shared.cfg
+    }
+
+    pub fn params(&self) -> &ModelParams {
+        &self.shared.params
+    }
+
+    pub fn mode(&self) -> TaskGraphMode {
+        self.shared.mode
+    }
+
+    /// Bytes of the symmetric tensor L per rank (Table 3's Size(L)).
+    pub fn heap_bytes_per_rank(&self) -> f64 {
+        self.shared.dims.bytes(4.0)
+    }
+
+    /// Snapshot of the cumulative engine metrics. `launches` is 1 for the
+    /// engine's lifetime; `threads_spawned` stops growing after `start`.
+    pub fn metrics(&self) -> EngineMetrics {
+        let mut m = self.inner.metrics.lock().unwrap().clone();
+        m.threads_spawned = self.shared.threads_spawned.load(Ordering::Relaxed);
+        m
+    }
+
+    /// Submit one epoch-tagged forward pass. `inputs[r]` is rank r's
+    /// (S_r, H) token matrix; inputs are copied into the pass slot so the
+    /// caller may reuse its buffers immediately. Returns a [`PassHandle`];
+    /// the pass runs on the resident actors while the caller continues
+    /// (e.g. packing the next batch). With both pass slots occupied,
+    /// `submit` first waits for the oldest pass to finish and parks its
+    /// result for the eventual `wait()`.
+    pub fn submit(&self, inputs: &[Vec<f32>]) -> Result<PassHandle> {
+        let cfg = &self.shared.cfg;
+        anyhow::ensure!(
+            inputs.len() == cfg.system.ranks,
+            "need {} rank inputs, got {}",
+            cfg.system.ranks,
+            inputs.len()
+        );
+        let want = cfg.system.s_rank * cfg.model.h;
+        for (r, a) in inputs.iter().enumerate() {
+            anyhow::ensure!(
+                a.len() == want,
+                "rank {r}: input length {} != S_r*H = {want}",
+                a.len()
+            );
+        }
+
+        let mut next = self.next_epoch.lock().unwrap();
+        let epoch = *next;
+        let slot = self.inner.slot_of(epoch);
+        {
+            let mut st = slot.state.lock().unwrap();
+            if st.epoch != 0 {
+                // Slot still holds the pass from two submits ago: drain it
+                // into the parking buffer (this is the only place submit
+                // can block, and only until that pass completes). A
+                // concurrent `wait()` may collect it first, which frees
+                // the slot under us — re-check ownership after waking.
+                let old = st.epoch;
+                while st.epoch == old && st.deposited < self.inner.ranks {
+                    st = slot.cv.wait(st).unwrap();
+                }
+                if st.epoch == old {
+                    let result = assemble(&self.inner, &mut st);
+                    self.inner.parked.lock().unwrap().insert(old, result);
+                }
+            }
+            st.epoch = epoch;
+            st.inputs = Some(Arc::new(inputs.to_vec()));
+            st.outputs = (0..self.inner.ranks).map(|_| None).collect();
+            st.deposited = 0;
+        }
+        *next += 1;
+        drop(next);
+
+        let mut bell = self.inner.doorbell.lock().unwrap();
+        bell.latest = bell.latest.max(epoch);
+        self.inner.doorbell_cv.notify_all();
+        drop(bell);
+        Ok(PassHandle { inner: self.inner.clone(), epoch, collected: false })
+    }
+
+    /// Convenience: submit one pass and wait for it (no pipelining).
+    pub fn forward(&self, inputs: &[Vec<f32>]) -> Result<ForwardResult> {
+        self.submit(inputs)?.wait()
+    }
+
+    /// Stop the engine: broadcast shutdown, let the actors finish any
+    /// already-submitted passes, park + join every resident thread.
+    /// Also runs on drop; calling it explicitly just surfaces the intent.
+    pub fn shutdown(mut self) {
+        self.shutdown_and_join();
+    }
+
+    fn shutdown_and_join(&mut self) {
+        {
+            let mut bell = self.inner.doorbell.lock().unwrap();
+            bell.shutdown = true;
+            self.inner.doorbell_cv.notify_all();
+        }
+        for h in self.rank_threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MoeEngine {
+    fn drop(&mut self) {
+        self.shutdown_and_join();
+    }
+}
+
+impl PassHandle {
+    /// The engine epoch of this pass (1-based submission order).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Block until the pass completes and return its result. Outstanding
+    /// handles stay valid across engine shutdown/drop for passes that
+    /// were already submitted (the actors drain them before exiting).
+    pub fn wait(mut self) -> Result<ForwardResult> {
+        self.collected = true;
+        collect(&self.inner, self.epoch)
+    }
+}
+
+impl Drop for PassHandle {
+    fn drop(&mut self) {
+        if !self.collected {
+            // Free the pass slot so later submits don't stall on an
+            // abandoned pass; the result is discarded.
+            let _ = collect(&self.inner, self.epoch);
+        }
+    }
+}
+
+/// Collect the result for `epoch`: from the parking buffer if a later
+/// submit already drained it, otherwise from its slot (blocking until the
+/// actors deposit all rank outputs).
+fn collect(inner: &Arc<EngineInner>, epoch: u64) -> Result<ForwardResult> {
+    let slot = inner.slot_of(epoch);
+    let mut st = slot.state.lock().unwrap();
+    if st.epoch == epoch {
+        // A concurrent submit draining this slot into the parking buffer
+        // may beat us to it — re-check ownership after every wake.
+        while st.epoch == epoch && st.deposited < inner.ranks {
+            st = slot.cv.wait(st).unwrap();
+        }
+        if st.epoch == epoch {
+            return assemble(inner, &mut st);
+        }
+    }
+    // Not in its slot: either parked by a later submit, or already taken.
+    // (`parked` is only mutated under the slot lock, so this is race-free.)
+    inner
+        .parked
+        .lock()
+        .unwrap()
+        .remove(&epoch)
+        .ok_or_else(|| anyhow!("pass {epoch} was never submitted or already collected"))?
+}
+
+/// Assemble a completed slot into a `ForwardResult`, free the slot, and
+/// fold the pass into the cumulative engine metrics. Caller holds the
+/// slot lock with all rank outputs deposited.
+fn assemble(inner: &Arc<EngineInner>, st: &mut SlotState) -> Result<ForwardResult> {
+    let epoch = st.epoch;
+    let rank_outputs: Vec<Result<RankOutput>> =
+        st.outputs.iter_mut().map(|o| o.take().expect("deposited output")).collect();
+    st.epoch = 0;
+    st.inputs = None;
+    st.deposited = 0;
+    // wake a submit that may be waiting to reuse this slot
+    inner.slot_of(epoch).cv.notify_all();
+
+    let mut outputs = Vec::with_capacity(rank_outputs.len());
+    let mut metrics = PassMetrics { epoch, ..Default::default() };
+    for (rank, ro) in rank_outputs.into_iter().enumerate() {
+        let ro = match ro {
+            Ok(ro) => ro,
+            Err(e) => return Err(e.context(format!("pass {epoch}, rank {rank}"))),
+        };
+        metrics.wall_secs = metrics.wall_secs.max(ro.metrics.wall_secs);
+        metrics.ranks.push(ro.metrics);
+        outputs.push(ro.out);
+    }
+    {
+        let mut em = inner.metrics.lock().unwrap();
+        em.passes += 1;
+        em.wall_secs += metrics.wall_secs;
+        em.busy_secs += metrics.ranks.iter().map(|r| r.busy_secs).sum::<f64>();
+    }
+    Ok(ForwardResult { outputs, metrics })
+}
+
+/// A rank actor's main thread: spawn the resident worker group once, then
+/// serve epoch after epoch from the engine doorbell until shutdown.
+fn rank_main(shared: Arc<EngineShared>, inner: Arc<EngineInner>, rank: usize) {
+    let actor = RankActor::spawn(shared, rank);
+    let mut next = 1u64;
+    loop {
+        let quit = {
+            let mut bell = inner.doorbell.lock().unwrap();
+            loop {
+                if bell.latest >= next {
+                    break false; // drain submitted passes even under shutdown
+                }
+                if bell.shutdown {
+                    break true;
+                }
+                bell = inner.doorbell_cv.wait(bell).unwrap();
+            }
+        };
+        if quit {
+            break;
+        }
+        let slot = inner.slot_of(next);
+        let inputs = {
+            let st = slot.state.lock().unwrap();
+            debug_assert_eq!(st.epoch, next, "pass slot out of sync with actor epoch");
+            st.inputs.as_ref().expect("submitted inputs").clone()
+        };
+        // A subscriber watchdog panic must not wedge `wait()`ers: convert
+        // it into a deposited error instead of a dead slot. Before serving
+        // another epoch, re-synchronize the rank's workers (the unwound
+        // pass may have left them mid-drain on its queue).
+        let result = match catch_unwind(AssertUnwindSafe(|| actor.run_pass(next, &inputs[rank]))) {
+            Ok(r) => r,
+            Err(p) => {
+                let msg = p
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "unknown panic".to_string());
+                actor.quiesce(next);
+                Err(anyhow!("rank {rank} panicked in pass {next}: {msg}"))
+            }
+        };
+        {
+            let mut st = slot.state.lock().unwrap();
+            st.outputs[rank] = Some(result);
+            st.deposited += 1;
+            if st.deposited == inner.ranks {
+                slot.cv.notify_all();
+            }
+        }
+        next += 1;
+    }
+    actor.shutdown();
+}

@@ -1,5 +1,17 @@
-//! Per-rank and per-pass metrics: the measured analogs of the paper's
-//! evaluation quantities (SM utilization, latency, payload efficiency).
+//! Per-rank, per-pass and engine-lifetime metrics: the measured analogs
+//! of the paper's evaluation quantities (SM utilization, latency, payload
+//! efficiency, and — for the persistent engine — Table 1's launch count).
+//!
+//! Three granularities:
+//! * [`RankMetrics`]   — one rank, one pass (busy/idle, tasks, traffic).
+//! * [`PassMetrics`]   — one epoch-tagged pass across all ranks.
+//! * [`EngineMetrics`] — cumulative over a [`MoeEngine`] lifetime:
+//!   passes served, steady-state busy/wall, resident thread census, and
+//!   the launch-equivalent count, which is exactly 1 — the actors are
+//!   launched once at `MoeEngine::start` and every subsequent pass is a
+//!   doorbell ring, not a launch.
+//!
+//! [`MoeEngine`]: super::engine::MoeEngine
 
 /// Metrics for one rank over one forward pass.
 #[derive(Clone, Debug, Default)]
@@ -54,6 +66,9 @@ impl RankMetrics {
 /// Metrics for one whole forward pass.
 #[derive(Clone, Debug, Default)]
 pub struct PassMetrics {
+    /// The pass epoch this result belongs to (1-based submission order;
+    /// also the generation tag stamped into the symmetric heap's flags).
+    pub epoch: u64,
     /// End-to-end wall time (max over ranks; the paper's forward latency).
     pub wall_secs: f64,
     pub ranks: Vec<RankMetrics>,
@@ -85,6 +100,46 @@ impl PassMetrics {
     }
 }
 
+/// Cumulative metrics over one persistent engine's lifetime.
+#[derive(Clone, Debug, Default)]
+pub struct EngineMetrics {
+    /// Launch-equivalent count: how many times actor groups were brought
+    /// up. Exactly 1 per engine lifetime (Table 1's FlashDMoE row) — a
+    /// steady-state pass rings doorbells instead of launching.
+    pub launches: u64,
+    /// Forward passes served (wait()-collected) so far.
+    pub passes: u64,
+    /// OS threads ever spawned by this engine (rank actors + resident
+    /// processors). Constant after `start`; a growing value would mean a
+    /// pass is respawning workers, which the engine never does.
+    pub threads_spawned: u64,
+    /// Cumulative processor busy seconds across all ranks and passes.
+    pub busy_secs: f64,
+    /// Cumulative pass wall seconds (sum of per-pass maxima).
+    pub wall_secs: f64,
+}
+
+impl EngineMetrics {
+    /// Steady-state processor utilization over the engine's life so far:
+    /// busy processor-seconds over available processor-seconds, with
+    /// `workers` = total resident processors across ranks.
+    pub fn steady_state_utilization(&self, workers: usize) -> f64 {
+        if self.wall_secs == 0.0 || workers == 0 {
+            return 0.0;
+        }
+        (self.busy_secs / (self.wall_secs * workers as f64)).min(1.0)
+    }
+
+    /// Launch overhead amortization: launches per pass served. Tends to
+    /// zero for a persistent engine; equals 1 for launch-per-call designs.
+    pub fn launches_per_pass(&self) -> f64 {
+        if self.passes == 0 {
+            return self.launches as f64;
+        }
+        self.launches as f64 / self.passes as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,7 +165,23 @@ mod tests {
 
     #[test]
     fn pass_throughput() {
-        let p = PassMetrics { wall_secs: 0.5, ranks: vec![] };
+        let p = PassMetrics { wall_secs: 0.5, ..Default::default() };
         assert_eq!(p.throughput(1000), 2000.0);
+    }
+
+    #[test]
+    fn engine_metrics_amortize_launches() {
+        let m = EngineMetrics {
+            launches: 1,
+            passes: 50,
+            threads_spawned: 10,
+            busy_secs: 30.0,
+            wall_secs: 10.0,
+        };
+        assert!((m.launches_per_pass() - 0.02).abs() < 1e-12);
+        assert!((m.steady_state_utilization(6) - 0.5).abs() < 1e-12);
+        let fresh = EngineMetrics { launches: 1, ..Default::default() };
+        assert_eq!(fresh.launches_per_pass(), 1.0);
+        assert_eq!(fresh.steady_state_utilization(8), 0.0);
     }
 }

@@ -1,27 +1,51 @@
-//! The L3 coordinator — the paper's system contribution.
+//! The L3 coordinator — the paper's system contribution, exposed as a
+//! **persistent engine**.
 //!
 //! Each rank runs a "persistent kernel": one OS/subscriber/scheduler
-//! context plus N processor workers that stay resident for the whole MoE
-//! operator. Actors exchange tile-granular task descriptors through a
-//! work-conserving ready queue; ranks exchange tiles through the
-//! write-conflict-free symmetric heap with one-sided put+signal
-//! (`crate::fabric`). There is no bulk-synchronous collective anywhere on
-//! the data path — the only barrier is the initial "kernel launch".
+//! context plus N processor workers that are launched **once** at
+//! [`MoeEngine::start`] and stay resident — parked on doorbells — for the
+//! engine's whole lifetime. Actors exchange tile-granular task
+//! descriptors through a work-conserving ready queue; ranks exchange
+//! tiles through the write-conflict-free symmetric heap with one-sided
+//! put+signal (`crate::fabric`), every transfer stamped with the pass
+//! epoch (per-slot generation counters — no global reset, no collective,
+//! no bulk-synchronous barrier anywhere on the data path).
 //!
-//! Module map (mirrors Fig. 6):
-//! * [`scheduler`] — the ready queue + interrupt plumbing (Alg. 3).
-//! * [`rank`]      — one rank's actor group: subscriber decode loop
-//!   (Alg. 4), processor execution loop (Alg. 2), dispatch (Alg. 1).
-//! * [`moe`]       — the public `DistributedMoE` operator API.
+//! Engine lifecycle (the only launch is the first line):
+//!
+//! ```text
+//! MoeEngine::start(cfg, params, backend, mode)   // actors launched ONCE
+//!     engine.submit(&inputs)? -> PassHandle       // epoch-tagged pass N
+//!     engine.submit(&next)?   -> PassHandle       // pass N+1, pipelined
+//!     handle.wait()?          -> ForwardResult    // collect pass N
+//!     ... × as many passes as you like: zero thread spawns, launch
+//!         count stays 1 (EngineMetrics::launches)
+//! engine.shutdown()  // or drop — actors drained, parked threads joined
+//! ```
+//!
+//! Module map (mirrors Fig. 6, plus the engine front end):
+//! * [`engine`]    — the public persistent [`MoeEngine`]: epoch-tagged
+//!   `submit`/`wait`, double-buffered pass slots, shutdown/join.
+//! * [`scheduler`] — the ready queue + interrupt plumbing (Alg. 3),
+//!   reusable across passes (`stop_all` parks a pass, `reopen` re-arms).
+//! * [`rank`]      — one rank's resident actor group: subscriber decode
+//!   loop (Alg. 4), processor execution loop (Alg. 2), dispatch (Alg. 1).
+//! * [`moe`]       — [`DistributedMoE`], the original one-call operator
+//!   API kept as a thin shim over a non-pipelined engine.
 //! * [`baseline`]  — a real-execution bulk-synchronous baseline
 //!   (Megatron/DeepSpeed-shaped) over the same substrate, for measured
 //!   comparisons and numeric cross-checks.
-//! * [`metrics`]   — per-rank busy/idle accounting (SM-utilization analog).
+//! * [`metrics`]   — per-rank / per-pass / engine-lifetime accounting
+//!   (SM-utilization analog, Table 1's launch count).
 
 pub mod baseline;
+pub mod engine;
 pub mod metrics;
 pub mod moe;
 pub mod rank;
 pub mod scheduler;
 
-pub use moe::{DistributedMoE, ForwardResult, TaskGraphMode};
+pub use engine::{ForwardResult, MoeEngine, PassHandle};
+pub use metrics::{EngineMetrics, PassMetrics, RankMetrics};
+pub use moe::DistributedMoE;
+pub use rank::TaskGraphMode;

@@ -1,5 +1,14 @@
-//! The public `DistributedMoE` operator: the API a downstream framework
-//! embeds. One call = one fused MoE layer forward across all ranks.
+//! `DistributedMoE`: the original one-call operator API, kept as a thin
+//! compatibility shim over the persistent [`MoeEngine`].
+//!
+//! Construction starts the engine (rank actors launched once);
+//! [`DistributedMoE::forward`] is exactly `submit(inputs)?.wait()` — one
+//! non-pipelined pass. New code should use [`MoeEngine`] directly to get
+//! epoch-tagged, pipelined submission; this type exists so the original
+//! call sites (and any downstream embedder of the old API) keep working
+//! unchanged while inheriting the resident-actor fast path. Outputs are
+//! identical to the engine API by construction (same actors, same pass
+//! path, deterministic combine fold).
 
 use std::sync::Arc;
 
@@ -7,34 +16,16 @@ use anyhow::Result;
 
 use crate::config::Config;
 use crate::expert::ModelParams;
-use crate::fabric::SymmetricHeap;
-use crate::layout::LayoutDims;
 use crate::runtime::ComputeBackend;
 
-use super::metrics::PassMetrics;
-use super::rank::{run_rank, ClusterShared, RankOutput};
-
+pub use super::engine::{ForwardResult, MoeEngine, PassHandle};
 pub use super::rank::TaskGraphMode;
 
-/// Result of one distributed forward pass.
-pub struct ForwardResult {
-    /// Per-rank output matrices (S_r, H), row-major.
-    pub outputs: Vec<Vec<f32>>,
-    pub metrics: PassMetrics,
-}
-
-/// The distributed MoE operator. Construct once (weights uploaded /
-/// sliced, symmetric heap allocated), call [`forward`] per layer pass.
-///
-/// Ranks are threads in this in-process fabric; every data movement goes
-/// through the write-conflict-free symmetric heap exactly as the paper's
-/// kernel moves tiles through NVSHMEM symmetric memory.
+/// The distributed MoE operator, one-call flavour. Construct once
+/// (weights sliced, symmetric heap allocated, actors resident), call
+/// [`forward`](Self::forward) per layer pass.
 pub struct DistributedMoE {
-    cfg: Config,
-    params: Arc<ModelParams>,
-    heap: Arc<SymmetricHeap>,
-    backend: Arc<dyn ComputeBackend>,
-    mode: TaskGraphMode,
+    engine: MoeEngine,
 }
 
 impl DistributedMoE {
@@ -44,63 +35,31 @@ impl DistributedMoE {
         backend: Arc<dyn ComputeBackend>,
         mode: TaskGraphMode,
     ) -> Result<Self> {
-        cfg.validate()?;
-        let dims = LayoutDims::from_config(&cfg);
-        let heap = Arc::new(SymmetricHeap::new(dims, cfg.system.ranks_per_node()));
-        Ok(Self { cfg, params, heap, backend, mode })
+        Ok(Self { engine: MoeEngine::start(cfg, params, backend, mode)? })
     }
 
     pub fn config(&self) -> &Config {
-        &self.cfg
+        self.engine.config()
     }
 
     pub fn params(&self) -> &ModelParams {
-        &self.params
+        self.engine.params()
     }
 
     /// Bytes of the symmetric tensor L per rank (Table 3's Size(L)).
     pub fn heap_bytes_per_rank(&self) -> f64 {
-        LayoutDims::from_config(&self.cfg).bytes(4.0)
+        self.engine.heap_bytes_per_rank()
+    }
+
+    /// The persistent engine underneath, for callers migrating to the
+    /// pipelined `submit`/`wait` API.
+    pub fn engine(&self) -> &MoeEngine {
+        &self.engine
     }
 
     /// One fused forward pass. `inputs[r]` is rank r's (S_r, H) tokens.
+    /// Equivalent to `engine().submit(inputs)?.wait()`.
     pub fn forward(&self, inputs: &[Vec<f32>]) -> Result<ForwardResult> {
-        anyhow::ensure!(
-            inputs.len() == self.cfg.system.ranks,
-            "need {} rank inputs, got {}",
-            self.cfg.system.ranks,
-            inputs.len()
-        );
-        self.heap.reset();
-        let shared = ClusterShared::new(
-            self.cfg.clone(),
-            self.params.clone(),
-            self.heap.clone(),
-            self.backend.clone(),
-            self.mode,
-        );
-        let t0 = std::time::Instant::now();
-        let rank_outputs: Vec<RankOutput> = std::thread::scope(|scope| {
-            let handles: Vec<_> = inputs
-                .iter()
-                .enumerate()
-                .map(|(r, a)| {
-                    let shared = &shared;
-                    scope.spawn(move || run_rank(shared, r, a))
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("rank thread panicked"))
-                .collect::<Result<Vec<_>>>()
-        })?;
-        let wall = t0.elapsed().as_secs_f64();
-        let mut outputs = Vec::with_capacity(rank_outputs.len());
-        let mut metrics = PassMetrics { wall_secs: wall, ranks: Vec::new() };
-        for ro in rank_outputs {
-            outputs.push(ro.out);
-            metrics.ranks.push(ro.metrics);
-        }
-        Ok(ForwardResult { outputs, metrics })
+        self.engine.forward(inputs)
     }
 }

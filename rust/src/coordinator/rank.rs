@@ -1,27 +1,41 @@
-//! One rank's persistent "kernel": dispatch (Alg. 1), the Subscriber
-//! decode loop (Alg. 4), and the Processor execution loop (Alg. 2).
+//! One rank's resident "persistent kernel": dispatch (Alg. 1), the
+//! Subscriber decode loop (Alg. 4), and the Processor execution loop
+//! (Alg. 2), all hosted by threads that are spawned **once** at engine
+//! start and stay parked on doorbells between passes.
 //!
-//! A rank thread gates its own tokens, announces + dispatches tiles with
-//! one-sided put+signal, then becomes the OS/subscriber context: it polls
-//! the symmetric heap's signal flags, decodes arriving packets into task
+//! A [`RankActor`] owns one rank's actor group: the subscriber context
+//! (the rank's main thread, driven per pass by the engine) plus N
+//! resident processor workers. A pass begins when the engine rings the
+//! rank's doorbell with an epoch-tagged [`PassCtx`]; the subscriber gates
+//! its tokens, announces + dispatches tiles with one-sided put+signal
+//! (stamped with the pass generation), then polls the symmetric heap's
+//! signal flags for packets of *this* generation, decodes them into task
 //! descriptors, feeds the work-conserving ready queue, and interrupts the
 //! processors once the self-correcting task bound is met. Processor
-//! worker threads execute FFN/GEMM/Combine tasks via the configured
+//! workers execute FFN/GEMM/Combine tasks via the configured
 //! [`ComputeBackend`] and write combine packets straight back to the
-//! originating rank — no collective, no host round-trip.
+//! originating rank — no collective, no host round-trip, and no thread
+//! spawned anywhere on the steady-state path.
+//!
+//! Combine determinism: a combine task scales its tile into a private
+//! staging block; the subscriber thread folds the blocks into the output
+//! in dispatch-plan order after the processors park. The f32 reduction
+//! order is therefore fixed, making pass outputs bitwise reproducible
+//! regardless of scheduling interleavings or processor count.
 
 use std::cell::UnsafeCell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Barrier};
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::Config;
 use crate::expert::ModelParams;
-use crate::fabric::{decode_rows, SymmetricHeap, FLAG_EMPTY};
-use crate::gate::{dispatch_plan, route_from_scores};
+use crate::fabric::SymmetricHeap;
+use crate::gate::{dispatch_plan, route_from_scores, DispatchPlan};
 use crate::layout::{Coord, LayoutDims};
 use crate::runtime::ComputeBackend;
 use crate::task::{DependencyTable, Task, TaskType};
@@ -38,8 +52,8 @@ pub enum TaskGraphMode {
     Split,
 }
 
-/// State shared by every rank for one forward pass.
-pub struct ClusterShared {
+/// State shared by every rank actor for the whole engine lifetime.
+pub struct EngineShared {
     pub cfg: Config,
     pub capacity: usize,
     pub dims: LayoutDims,
@@ -47,15 +61,22 @@ pub struct ClusterShared {
     pub heap: Arc<SymmetricHeap>,
     pub backend: Arc<dyn ComputeBackend>,
     pub mode: TaskGraphMode,
-    /// Dispatch tiles destined to each rank (accumulated by sources).
+    /// Dispatch tiles destined to each rank in the current pass
+    /// (accumulated by sources; cleared by rank 0 inside the pass-start
+    /// barrier pair).
     pub expected_dispatch: Vec<AtomicU32>,
-    /// Sources that have finished announcing.
+    /// Sources that have finished announcing in the current pass.
     pub announced: AtomicU32,
-    /// The single "kernel launch" barrier.
+    /// The reusable pass-start barrier. Besides synchronizing the pass,
+    /// it is the fence that orders pass n's heap readers before pass
+    /// n+1's writers on the same cells (see `fabric.rs` safety notes).
     pub start: Barrier,
+    /// OS threads ever spawned under this engine. Grows only during
+    /// `MoeEngine::start`; a steady-state pass spawns nothing.
+    pub threads_spawned: AtomicU64,
 }
 
-impl ClusterShared {
+impl EngineShared {
     pub fn new(
         cfg: Config,
         params: Arc<ModelParams>,
@@ -77,12 +98,14 @@ impl ClusterShared {
             expected_dispatch: (0..ranks).map(|_| AtomicU32::new(0)).collect(),
             announced: AtomicU32::new(0),
             start: Barrier::new(ranks),
+            threads_spawned: AtomicU64::new(0),
         }
     }
 }
 
 /// Column-sliced weights for split-mode GEMM tasks: `w1c[e][col]` is the
-/// (H, bN) stripe of local expert `e`'s W1, row-major.
+/// (H, bN) stripe of local expert `e`'s W1, row-major. Pass-invariant, so
+/// a rank actor builds them once at spawn and reuses them every pass.
 struct WeightSlices {
     w1c: Vec<Vec<Vec<f32>>>,
     b1c: Vec<Vec<Vec<f32>>>,
@@ -103,7 +126,7 @@ fn slice_cols(w: &[f32], rows: usize, cols: usize, bn: usize) -> Vec<Vec<f32>> {
 }
 
 impl WeightSlices {
-    fn build(shared: &ClusterShared, rank: usize) -> Self {
+    fn build(shared: &EngineShared, rank: usize) -> Self {
         let m = &shared.cfg.model;
         let e_local = shared.cfg.local_experts();
         let mut w1c = Vec::new();
@@ -121,9 +144,9 @@ impl WeightSlices {
     }
 }
 
-/// Rank-local staging for split-mode intermediates. Concurrent GEMM tasks
-/// write disjoint column stripes of one block, so raw interior mutability
-/// is sound (same disjointness argument as the symmetric heap).
+/// Rank-local staging for task intermediates. Concurrent tasks write
+/// disjoint blocks/stripes of the buffer, so raw interior mutability is
+/// sound (same disjointness argument as the symmetric heap).
 struct Staging {
     data: UnsafeCell<Vec<f32>>,
     stride: usize,
@@ -152,7 +175,8 @@ impl Staging {
     }
 
     /// Read a whole block. Caller must have synchronized with all writers
-    /// (dependency latch release + queue handoff establish happens-before).
+    /// (dependency latch release + queue/doorbell handoff establish
+    /// happens-before).
     fn read_block(&self, block: usize) -> &[f32] {
         unsafe {
             let v = &*self.data.get();
@@ -184,24 +208,35 @@ impl PassCounters {
     }
 }
 
-/// Everything a processor worker needs (shared immutably per pass).
-struct RankCtx<'a> {
-    shared: &'a ClusterShared,
+/// Everything the resident processors need for one epoch-tagged pass.
+/// Built by the subscriber at pass start and shared via `Arc` through the
+/// rank's doorbell; dropped when the pass completes.
+struct PassCtx {
+    shared: Arc<EngineShared>,
     rank: usize,
-    queue: TaskQueue,
+    /// Generation tag for this pass's heap traffic (low 32 bits of the
+    /// engine epoch; wraps after 2^32 passes, far beyond flag lifetime).
+    epoch32: u32,
+    queue: Arc<TaskQueue>,
     counters: PassCounters,
-    /// T_phi lookup: (global expert, tile) -> (tokens, combine weights).
-    tphi: HashMap<(u32, u32), (Vec<u32>, Vec<f32>)>,
-    slices: Option<WeightSlices>,
+    /// This rank's dispatch plan; tile index doubles as the combine
+    /// staging ordinal and fixes the output reduction order.
+    plan: DispatchPlan,
+    /// T_phi lookup: (global expert, tile) -> ordinal into `plan.tiles`.
+    tphi: HashMap<(u32, u32), u32>,
+    slices: Option<Arc<WeightSlices>>,
     mid: Option<Staging>,
     out_stage: Option<Staging>,
     g0_latch: Option<DependencyTable>,
     g1_latch: Option<DependencyTable>,
     /// Valid rows per split-mode block (indexed by block id).
     block_rows: Vec<AtomicU32>,
+    /// Per-dispatched-tile combine staging (bM, H) blocks: tasks write
+    /// disjoint blocks; the subscriber folds them in plan order.
+    combine_stage: Staging,
 }
 
-impl<'a> RankCtx<'a> {
+impl PassCtx {
     fn block_id(&self, peer: usize, e_loc: usize, tile: usize) -> usize {
         let d = &self.shared.dims;
         (peer * d.e_local + e_loc) * d.tiles_per_expert() + tile
@@ -214,116 +249,290 @@ pub struct RankOutput {
     pub metrics: RankMetrics,
 }
 
-/// Run one rank's full persistent-kernel pass over its (S_r, H) tokens.
-pub fn run_rank(shared: &ClusterShared, rank: usize, a: &[f32]) -> Result<RankOutput> {
-    let cfg = &shared.cfg;
-    let (s_rank, h) = (cfg.system.s_rank, cfg.model.h);
-    let e_local = cfg.local_experts();
-    anyhow::ensure!(a.len() == s_rank * h, "rank {rank}: bad input length");
+/// Doorbell between a rank's subscriber thread and its resident
+/// processor workers.
+struct ProcDoorbell {
+    state: Mutex<ProcState>,
+    cv: Condvar,
+}
 
-    // ---- "kernel launch" ---------------------------------------------------
-    shared.start.wait();
-    let t0 = Instant::now();
+struct ProcState {
+    /// Latest epoch published to the workers (0 = none yet).
+    epoch: u64,
+    ctx: Option<Arc<PassCtx>>,
+    shutdown: bool,
+    /// Workers that finished the current epoch.
+    done: usize,
+    /// Per-worker pass results, reset at publish time.
+    results: Vec<Option<Result<()>>>,
+}
 
-    // ---- FusedGate (Alg. 1 line 1) ------------------------------------------
-    let scores = shared
-        .backend
-        .gate_scores(a, &shared.params.wg, s_rank)
-        .context("gate")?;
-    let routing = route_from_scores(scores, s_rank, &cfg.model, shared.capacity);
-    let plan = dispatch_plan(&routing, cfg.model.bm, |e| cfg.owner_of(e));
+/// One rank's resident actor group: ready queue, pass-invariant weight
+/// slices, and the parked processor workers. Created once per engine
+/// start; `run_pass` reuses everything.
+pub struct RankActor {
+    shared: Arc<EngineShared>,
+    rank: usize,
+    queue: Arc<TaskQueue>,
+    slices: Option<Arc<WeightSlices>>,
+    bell: Arc<ProcDoorbell>,
+    workers: Vec<JoinHandle<()>>,
+}
 
-    // ---- announce expected dispatch-tile counts ------------------------------
-    let mut per_dst = vec![0u32; cfg.system.ranks];
-    for t in &plan.tiles {
-        per_dst[t.dst as usize] += 1;
+impl RankActor {
+    /// Spawn rank `rank`'s processor workers (the only thread creation
+    /// this rank ever does) and build its pass-invariant state.
+    pub fn spawn(shared: Arc<EngineShared>, rank: usize) -> Self {
+        let queue = Arc::new(TaskQueue::new());
+        let slices = (shared.mode == TaskGraphMode::Split)
+            .then(|| Arc::new(WeightSlices::build(&shared, rank)));
+        let processors = shared.cfg.system.processors;
+        let bell = Arc::new(ProcDoorbell {
+            state: Mutex::new(ProcState {
+                epoch: 0,
+                ctx: None,
+                shutdown: false,
+                done: 0,
+                results: (0..processors).map(|_| None).collect(),
+            }),
+            cv: Condvar::new(),
+        });
+        let workers = (0..processors)
+            .map(|slot| {
+                let bell = bell.clone();
+                shared.threads_spawned.fetch_add(1, Ordering::Relaxed);
+                std::thread::Builder::new()
+                    .name(format!("flash-r{rank}-p{slot}"))
+                    .spawn(move || worker_main(bell, slot))
+                    .expect("spawn processor worker")
+            })
+            .collect();
+        Self { shared, rank, queue, slices, bell, workers }
     }
-    for (dst, n) in per_dst.iter().enumerate() {
-        if *n > 0 {
-            shared.expected_dispatch[dst].fetch_add(*n, Ordering::AcqRel);
+
+    /// Run one epoch-tagged pass over this rank's (S_r, H) tokens.
+    /// Steady-state: no allocation of threads, no heap reset — the pass
+    /// barrier plus generation-tagged flags do all the cross-pass fencing.
+    pub fn run_pass(&self, epoch: u64, a: &[f32]) -> Result<RankOutput> {
+        let shared = &self.shared;
+        let cfg = &shared.cfg;
+        let rank = self.rank;
+        let (s_rank, h) = (cfg.system.s_rank, cfg.model.h);
+        let e_local = cfg.local_experts();
+        anyhow::ensure!(a.len() == s_rank * h, "rank {rank}: bad input length");
+        let epoch32 = epoch as u32;
+
+        // ---- pass-start doorbell (NOT a launch) ------------------------------
+        // First wait: every rank is done with the previous pass, so heap
+        // slots may be rewritten. Rank 0 then clears the pass-scoped
+        // announce counters; the second wait publishes the clear.
+        shared.start.wait();
+        if rank == 0 {
+            shared.announced.store(0, Ordering::Release);
+            for d in &shared.expected_dispatch {
+                d.store(0, Ordering::Release);
+            }
+        }
+        shared.start.wait();
+        let t0 = Instant::now();
+        let (bytes_local_0, bytes_remote_0) = shared.heap.bytes_in(rank);
+
+        // ---- FusedGate (Alg. 1 line 1) ---------------------------------------
+        let scores = shared
+            .backend
+            .gate_scores(a, &shared.params.wg, s_rank)
+            .context("gate")?;
+        let routing = route_from_scores(scores, s_rank, &cfg.model, shared.capacity);
+        let dropped = routing.dropped;
+        let plan = dispatch_plan(&routing, cfg.model.bm, |e| cfg.owner_of(e));
+
+        // ---- announce expected dispatch-tile counts --------------------------
+        let mut per_dst = vec![0u32; cfg.system.ranks];
+        for t in &plan.tiles {
+            per_dst[t.dst as usize] += 1;
+        }
+        for (dst, n) in per_dst.iter().enumerate() {
+            if *n > 0 {
+                shared.expected_dispatch[dst].fetch_add(*n, Ordering::AcqRel);
+            }
+        }
+        shared.announced.fetch_add(1, Ordering::AcqRel);
+
+        // ---- build T_phi and the pass context --------------------------------
+        let mut tphi = HashMap::with_capacity(plan.tiles.len());
+        for (i, t) in plan.tiles.iter().enumerate() {
+            tphi.insert((t.expert, t.tile), i as u32);
+        }
+        let m = &cfg.model;
+        let d_cols = (m.d / m.bn) as u32;
+        let h_cols = (m.h / m.bn) as u32;
+        let blocks = cfg.system.ranks * e_local * shared.dims.tiles_per_expert();
+        let my_expected_combine = plan.tiles.len() as u32;
+        let split = shared.mode == TaskGraphMode::Split;
+        self.queue.reopen();
+        let ctx = Arc::new(PassCtx {
+            shared: self.shared.clone(),
+            rank,
+            epoch32,
+            queue: self.queue.clone(),
+            counters: PassCounters::new(),
+            tphi,
+            slices: self.slices.clone(),
+            mid: split.then(|| Staging::new(blocks, m.bm * m.d)),
+            out_stage: split.then(|| Staging::new(blocks, m.bm * m.h)),
+            g0_latch: split.then(|| DependencyTable::new(blocks, d_cols)),
+            g1_latch: split.then(|| DependencyTable::new(blocks, h_cols)),
+            block_rows: (0..blocks).map(|_| AtomicU32::new(0)).collect(),
+            combine_stage: Staging::new(plan.tiles.len(), m.bm * m.h),
+            plan,
+        });
+
+        // ---- dispatch (payload-efficient, one-sided, generation-tagged) ------
+        // Runs before the processor doorbell so a dispatch error skips the
+        // epoch cleanly: workers never observe an epoch they'd half-run.
+        let mut pack = vec![0.0f32; m.bm * h];
+        for t in &ctx.plan.tiles {
+            for (row, &tok) in t.tokens.iter().enumerate() {
+                pack[row * h..(row + 1) * h]
+                    .copy_from_slice(&a[tok as usize * h..(tok as usize + 1) * h]);
+            }
+            let e_loc = t.expert as usize - cfg.owner_of(t.expert as usize) * e_local;
+            let coord = Coord { p: rank, r: 0, b: 1, e: e_loc, c: t.tile as usize * m.bm };
+            shared
+                .heap
+                .put_signal(rank, t.dst as usize, coord, &pack[..t.rows as usize * h], epoch32)
+                .context("dispatch put")?;
+        }
+
+        // ---- wake the resident processors (doorbell, not spawn) --------------
+        {
+            let mut st = self.bell.state.lock().unwrap();
+            st.ctx = Some(ctx.clone());
+            st.done = 0;
+            for r in st.results.iter_mut() {
+                *r = None;
+            }
+            st.epoch = epoch;
+            self.bell.cv.notify_all();
+        }
+
+        // ---- subscriber phase (this thread IS the OS/subscriber actor) -------
+        subscriber_loop(ctx.as_ref(), my_expected_combine);
+
+        // ---- park the processors: wait for the pass-done latch ---------------
+        let worker_results: Vec<Result<()>> = {
+            let mut st = self.bell.state.lock().unwrap();
+            while st.done < self.workers.len() {
+                st = self.bell.cv.wait(st).unwrap();
+            }
+            st.ctx = None;
+            st.results.iter_mut().map(|r| r.take().expect("worker result")).collect()
+        };
+        for (i, r) in worker_results.into_iter().enumerate() {
+            r.with_context(|| format!("rank {rank} processor {i} (pass {epoch})"))?;
+        }
+
+        // ---- deterministic combine fold (dispatch-plan order) ----------------
+        let mut out = vec![0.0f32; s_rank * h];
+        for (i, t) in ctx.plan.tiles.iter().enumerate() {
+            let y = ctx.combine_stage.read_block(i);
+            for (row, &tok) in t.tokens.iter().enumerate() {
+                let dst = &mut out[tok as usize * h..(tok as usize + 1) * h];
+                let src = &y[row * h..(row + 1) * h];
+                for (o, &v) in dst.iter_mut().zip(src) {
+                    *o += v;
+                }
+            }
+        }
+
+        let wall = t0.elapsed().as_secs_f64();
+        let (bytes_local_1, bytes_remote_1) = shared.heap.bytes_in(rank);
+        let c = &ctx.counters;
+        let metrics = RankMetrics {
+            busy_secs: c.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            wall_secs: wall,
+            processors: self.workers.len(),
+            ffn_tasks: c.ffn_completed.load(Ordering::Relaxed),
+            gemm_tasks: c.gemm_tasks.load(Ordering::Relaxed),
+            combine_tasks: c.combine_completed.load(Ordering::Relaxed),
+            tiles_sent: ctx.plan.tiles.len(),
+            sent_rows: ctx.plan.sent_rows,
+            padded_rows: ctx.plan.padded_rows,
+            dropped,
+            bytes_in_local: bytes_local_1 - bytes_local_0,
+            bytes_in_remote: bytes_remote_1 - bytes_remote_0,
+            max_queue_depth: self.queue.max_depth(),
+        };
+        Ok(RankOutput { out, metrics })
+    }
+
+    /// Post-panic cleanup: if `epoch` was already published to the
+    /// workers when `run_pass` unwound (subscriber watchdog, task error),
+    /// stop the ready queue and wait for every worker to drain and park,
+    /// so the next pass starts from a synchronized actor group instead of
+    /// racing old-ctx workers against a reopened queue.
+    pub fn quiesce(&self, epoch: u64) {
+        {
+            let st = self.bell.state.lock().unwrap();
+            if st.epoch != epoch {
+                return; // pass never reached the doorbell: workers idle
+            }
+        }
+        self.queue.stop_all();
+        let mut st = self.bell.state.lock().unwrap();
+        while st.done < self.workers.len() {
+            st = self.bell.cv.wait(st).unwrap();
+        }
+        st.ctx = None;
+        for r in st.results.iter_mut() {
+            *r = None;
         }
     }
-    shared.announced.fetch_add(1, Ordering::AcqRel);
 
-    // ---- build T_phi and the pass context ------------------------------------
-    let mut tphi = HashMap::with_capacity(plan.tiles.len());
-    for t in &plan.tiles {
-        tphi.insert((t.expert, t.tile), (t.tokens.clone(), t.weights.clone()));
-    }
-    let m = &cfg.model;
-    let d_cols = (m.d / m.bn) as u32;
-    let h_cols = (m.h / m.bn) as u32;
-    let blocks = cfg.system.ranks * e_local * shared.dims.tiles_per_expert();
-    let ctx = RankCtx {
-        shared,
-        rank,
-        queue: TaskQueue::new(),
-        counters: PassCounters::new(),
-        tphi,
-        slices: (shared.mode == TaskGraphMode::Split).then(|| WeightSlices::build(shared, rank)),
-        mid: (shared.mode == TaskGraphMode::Split).then(|| Staging::new(blocks, m.bm * m.d)),
-        out_stage: (shared.mode == TaskGraphMode::Split).then(|| Staging::new(blocks, m.bm * m.h)),
-        g0_latch: (shared.mode == TaskGraphMode::Split).then(|| DependencyTable::new(blocks, d_cols)),
-        g1_latch: (shared.mode == TaskGraphMode::Split).then(|| DependencyTable::new(blocks, h_cols)),
-        block_rows: (0..blocks).map(|_| AtomicU32::new(0)).collect(),
-    };
-
-    // ---- dispatch (payload-efficient, one-sided) ------------------------------
-    let mut pack = vec![0.0f32; m.bm * h];
-    for t in &plan.tiles {
-        for (row, &tok) in t.tokens.iter().enumerate() {
-            pack[row * h..(row + 1) * h].copy_from_slice(&a[tok as usize * h..(tok as usize + 1) * h]);
+    /// Wake and join the resident workers. Called exactly once, from the
+    /// engine's shutdown path.
+    pub fn shutdown(mut self) {
+        {
+            let mut st = self.bell.state.lock().unwrap();
+            st.shutdown = true;
+            self.bell.cv.notify_all();
         }
-        let e_loc = t.expert as usize - cfg.owner_of(t.expert as usize) * e_local;
-        let coord = Coord { p: rank, r: 0, b: 1, e: e_loc, c: t.tile as usize * m.bm };
-        shared
-            .heap
-            .put_signal(rank, t.dst as usize, coord, &pack[..t.rows as usize * h])
-            .context("dispatch put")?;
-    }
-    let my_expected_combine = plan.tiles.len() as u32;
-
-    // ---- actor phase: processors + subscriber ---------------------------------
-    let processors = cfg.system.processors;
-    let partials: Vec<Vec<f32>> = std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(processors);
-        for _ in 0..processors {
-            handles.push(scope.spawn(|| processor_loop(&ctx)));
-        }
-        subscriber_loop(&ctx, my_expected_combine);
-        handles
-            .into_iter()
-            .map(|hd| hd.join().expect("processor panicked"))
-            .collect::<Result<Vec<_>>>()
-    })?;
-
-    // ---- reduce processor partials into the output ----------------------------
-    let mut out = vec![0.0f32; s_rank * h];
-    for p in &partials {
-        for (o, v) in out.iter_mut().zip(p) {
-            *o += *v;
+        for w in self.workers.drain(..) {
+            let _ = w.join();
         }
     }
+}
 
-    let wall = t0.elapsed().as_secs_f64();
-    let (bytes_in_local, bytes_in_remote) = shared.heap.bytes_in(rank);
-    let c = &ctx.counters;
-    let metrics = RankMetrics {
-        busy_secs: c.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
-        wall_secs: wall,
-        processors,
-        ffn_tasks: c.ffn_completed.load(Ordering::Relaxed),
-        gemm_tasks: c.gemm_tasks.load(Ordering::Relaxed),
-        combine_tasks: c.combine_completed.load(Ordering::Relaxed),
-        tiles_sent: plan.tiles.len(),
-        sent_rows: plan.sent_rows,
-        padded_rows: plan.padded_rows,
-        dropped: routing.dropped,
-        bytes_in_local,
-        bytes_in_remote,
-        max_queue_depth: ctx.queue.max_depth(),
-    };
-    Ok(RankOutput { out, metrics })
+/// Resident processor worker: park on the doorbell, run one pass's
+/// processor loop, report into the pass-done latch, park again.
+fn worker_main(bell: Arc<ProcDoorbell>, slot: usize) {
+    let mut next_epoch = 1u64;
+    loop {
+        let (epoch, ctx) = {
+            let mut st = bell.state.lock().unwrap();
+            loop {
+                if st.epoch >= next_epoch {
+                    let ctx = st.ctx.as_ref().expect("ctx published with epoch").clone();
+                    break (st.epoch, ctx);
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = bell.cv.wait(st).unwrap();
+            }
+        };
+        let result = processor_loop(ctx.as_ref());
+        {
+            let mut st = bell.state.lock().unwrap();
+            st.results[slot] = Some(result);
+            st.done += 1;
+            bell.cv.notify_all();
+        }
+        // track the epoch actually served: a pass that errored before its
+        // doorbell never reaches the workers, and must not desynchronize
+        // the worker's position in the epoch stream
+        next_epoch = epoch + 1;
+    }
 }
 
 /// Subscriber actor (Alg. 4): sweep flags, decode packets into tasks, feed
@@ -333,8 +542,8 @@ pub fn run_rank(shared: &ClusterShared, rank: usize, a: &[f32]) -> Result<RankOu
 /// progress diagnostic instead of hanging the process.
 const WATCHDOG: std::time::Duration = std::time::Duration::from_secs(120);
 
-fn subscriber_loop(ctx: &RankCtx, my_expected_combine: u32) {
-    let shared = ctx.shared;
+fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) {
+    let shared = &*ctx.shared;
     let dims = &shared.dims;
     let ranks = shared.cfg.system.ranks;
     let mut visited = vec![false; dims.num_flags()];
@@ -351,19 +560,17 @@ fn subscriber_loop(ctx: &RankCtx, my_expected_combine: u32) {
                     // round 0: dispatch packets (token tiles for my experts)
                     let f0 = dims.flag_index(peer, 0, e_loc, tile);
                     if !visited[f0] {
-                        let flag = shared.heap.poll(ctx.rank, f0);
-                        if flag != FLAG_EMPTY {
+                        if let Some(rows) = shared.heap.poll_epoch(ctx.rank, f0, ctx.epoch32) {
                             visited[f0] = true;
                             progressed = true;
                             seen_dispatch += 1;
-                            decode_dispatch(ctx, peer, e_loc, tile, decode_rows(flag), &mut seq);
+                            decode_dispatch(ctx, peer, e_loc, tile, rows, &mut seq);
                         }
                     }
                     // round 1: combine packets (results for my tokens)
                     let f1 = dims.flag_index(peer, 1, e_loc, tile);
                     if !visited[f1] {
-                        let flag = shared.heap.poll(ctx.rank, f1);
-                        if flag != FLAG_EMPTY {
+                        if let Some(rows) = shared.heap.poll_epoch(ctx.rank, f1, ctx.epoch32) {
                             visited[f1] = true;
                             progressed = true;
                             seen_combine += 1;
@@ -374,7 +581,7 @@ fn subscriber_loop(ctx: &RankCtx, my_expected_combine: u32) {
                                 expert: e_loc as u32,
                                 tile: tile as u32,
                                 col: 0,
-                                rows: decode_rows(flag) as u32,
+                                rows: rows as u32,
                                 seq: next_seq(&mut seq),
                             });
                         }
@@ -411,11 +618,12 @@ fn subscriber_loop(ctx: &RankCtx, my_expected_combine: u32) {
                 let c = &ctx.counters;
                 ctx.queue.stop_all();
                 panic!(
-                    "rank {} wedged (watchdog {}s): announced {}/{ranks}, \
+                    "rank {} wedged (watchdog {}s, pass gen {}): announced {}/{ranks}, \
                      dispatch {seen_dispatch}/{}, combine {seen_combine}/{my_expected_combine}, \
                      ffn {}/{}, combine-exec {}/{}",
                     ctx.rank,
                     WATCHDOG.as_secs(),
+                    ctx.epoch32,
                     shared.announced.load(Ordering::Acquire),
                     shared.expected_dispatch[ctx.rank].load(Ordering::Acquire),
                     c.ffn_completed.load(Ordering::Acquire),
@@ -434,7 +642,7 @@ fn next_seq(seq: &mut u32) -> u32 {
 }
 
 /// Decode one dispatch packet into task descriptors (Alg. 4 line 18).
-fn decode_dispatch(ctx: &RankCtx, peer: usize, e_loc: usize, tile: usize, rows: usize, seq: &mut u32) {
+fn decode_dispatch(ctx: &PassCtx, peer: usize, e_loc: usize, tile: usize, rows: usize, seq: &mut u32) {
     let m = &ctx.shared.cfg.model;
     ctx.counters.ffn_decoded.fetch_add(1, Ordering::Relaxed);
     match ctx.shared.mode {
@@ -469,33 +677,25 @@ fn decode_dispatch(ctx: &RankCtx, peer: usize, e_loc: usize, tile: usize, rows: 
 }
 
 /// Processor actor (Alg. 2): pop → execute → notify, until interrupted.
-/// Returns this worker's partial output accumulator.
-fn processor_loop(ctx: &RankCtx) -> Result<Vec<f32>> {
-    let shared = ctx.shared;
+fn processor_loop(ctx: &PassCtx) -> Result<()> {
+    let shared = &*ctx.shared;
     let m = &shared.cfg.model;
-    let (s_rank, h, d) = (shared.cfg.system.s_rank, m.h, m.d);
-    let mut partial = vec![0.0f32; s_rank * h];
+    let (h, d) = (m.h, m.d);
     let mut scratch = vec![0.0f32; m.bm * d.max(h)];
     let mut tile_out = vec![0.0f32; m.bm * h.max(m.bn)];
     while let Some(task) = ctx.queue.pop() {
         let t0 = Instant::now();
-        execute_task(ctx, &task, &mut partial, &mut scratch, &mut tile_out)
+        execute_task(ctx, &task, &mut scratch, &mut tile_out)
             .with_context(|| format!("rank {} task {task:?}", ctx.rank))?;
         ctx.counters
             .busy_nanos
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
     }
-    Ok(partial)
+    Ok(())
 }
 
-fn execute_task(
-    ctx: &RankCtx,
-    task: &Task,
-    partial: &mut [f32],
-    scratch: &mut [f32],
-    tile_out: &mut [f32],
-) -> Result<()> {
-    let shared = ctx.shared;
+fn execute_task(ctx: &PassCtx, task: &Task, scratch: &mut [f32], tile_out: &mut [f32]) -> Result<()> {
+    let shared = &*ctx.shared;
     let m = &shared.cfg.model;
     let (h, bm, bn) = (m.h, m.bm, m.bn);
     let e_local = shared.cfg.local_experts();
@@ -514,9 +714,13 @@ fn execute_task(
             )?;
             // one-sided combine write-back to the originating rank
             let back = Coord { p: ctx.rank, r: 1, b: 1, e: e_loc, c: tile * bm };
-            shared
-                .heap
-                .put_signal(ctx.rank, peer, back, &tile_out[..task.rows as usize * h])?;
+            shared.heap.put_signal(
+                ctx.rank,
+                peer,
+                back,
+                &tile_out[..task.rows as usize * h],
+                ctx.epoch32,
+            )?;
             ctx.counters.ffn_completed.fetch_add(1, Ordering::Release);
         }
         TaskType::Gemm0 => {
@@ -565,7 +769,7 @@ fn execute_task(
                 let rows = ctx.block_rows[block].load(Ordering::Acquire) as usize;
                 let y = out_stage.read_block(block);
                 let back = Coord { p: ctx.rank, r: 1, b: 1, e: e_loc, c: tile * bm };
-                shared.heap.put_signal(ctx.rank, peer, back, &y[..rows * h])?;
+                shared.heap.put_signal(ctx.rank, peer, back, &y[..rows * h], ctx.epoch32)?;
                 ctx.counters.ffn_completed.fetch_add(1, Ordering::Release);
             }
         }
@@ -575,18 +779,25 @@ fn execute_task(
             let coord = Coord { p: peer, r: 1, b: 1, e: e_loc, c: tile * bm };
             let y = shared.heap.read(ctx.rank, coord, rows);
             let global_e = (peer * e_local + e_loc) as u32;
-            let (tokens, weights) = ctx
+            let ordinal = *ctx
                 .tphi
                 .get(&(global_e, task.tile))
-                .ok_or_else(|| anyhow!("combine for unknown tile (e={global_e}, t={tile})"))?;
-            anyhow::ensure!(tokens.len() == rows, "combine row mismatch");
-            for (row, (&tok, &w)) in tokens.iter().zip(weights).enumerate() {
-                let dstrow = &mut partial[tok as usize * h..(tok as usize + 1) * h];
+                .ok_or_else(|| anyhow!("combine for unknown tile (e={global_e}, t={tile})"))?
+                as usize;
+            let t = &ctx.plan.tiles[ordinal];
+            anyhow::ensure!(t.tokens.len() == rows, "combine row mismatch");
+            // Scale by the combine weights into this tile's private staging
+            // block. The subscriber folds blocks in plan order after the
+            // processors park, so the reduction order — and the output —
+            // is bitwise deterministic under any scheduling.
+            for (row, &w) in t.weights.iter().enumerate() {
                 let src = &y[row * h..(row + 1) * h];
-                for (o, &v) in dstrow.iter_mut().zip(src) {
-                    *o += w * v;
+                let dst = &mut tile_out[row * h..(row + 1) * h];
+                for (o, &v) in dst.iter_mut().zip(src) {
+                    *o = w * v;
                 }
             }
+            ctx.combine_stage.write_stripe(ordinal, rows, h, 0, h, &tile_out[..rows * h]);
             ctx.counters.combine_completed.fetch_add(1, Ordering::Release);
         }
     }

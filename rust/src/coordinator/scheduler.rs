@@ -6,6 +6,11 @@
 //! exactly the work-conservation property (no processor idles while the
 //! queue is non-empty). `stop_all` is the scheduler's interrupt broadcast
 //! (Alg. 3 lines 33–34).
+//!
+//! Queues are resident: one `TaskQueue` serves a rank for the whole
+//! engine lifetime. `stop_all` ends one pass (processors drain and park);
+//! [`TaskQueue::reopen`] re-arms the queue for the next pass without
+//! reallocating or re-spawning anything.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
@@ -110,6 +115,18 @@ impl TaskQueue {
         self.cv.notify_all();
     }
 
+    /// Re-arm a stopped queue for the next pass. The caller must have
+    /// observed all consumers park (the rank actor waits for its
+    /// processors' pass-done latch before reopening). Resets the per-pass
+    /// depth high-water mark; push/pop totals stay cumulative.
+    pub fn reopen(&self) {
+        let mut st = self.inner.lock().unwrap();
+        debug_assert!(st.tasks.is_empty(), "reopening a queue with undrained tasks");
+        st.stopped = false;
+        drop(st);
+        self.max_depth.store(0, Ordering::Relaxed);
+    }
+
     pub fn counts(&self) -> (u32, u32) {
         (self.pushed.load(Ordering::Relaxed), self.popped.load(Ordering::Relaxed))
     }
@@ -181,6 +198,21 @@ mod tests {
         assert!(q.pop().is_some());
         assert!(q.pop().is_some());
         assert!(q.pop().is_some());
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn reopen_rearms_a_stopped_queue() {
+        let q = TaskQueue::new();
+        q.push(task(0));
+        q.stop_all();
+        assert!(q.pop().is_some(), "drain before park");
+        assert!(q.pop().is_none(), "pass 1 over");
+        q.reopen();
+        q.push(task(1));
+        assert_eq!(q.pop().unwrap().seq, 1, "pass 2 delivers");
+        assert_eq!(q.max_depth(), 1, "depth high-water is per pass");
+        q.stop_all();
         assert!(q.pop().is_none());
     }
 

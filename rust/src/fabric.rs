@@ -9,6 +9,19 @@
 //! the `nvshmem_fence` analog in Alg. 4's "Enforce memory consistency
 //! before consuming packet").
 //!
+//! **Pass generations.** The heap is owned by a persistent engine and is
+//! never globally reset between forward passes. Instead every signal flag
+//! carries a *generation tag* — the pass epoch stamped by the writer —
+//! and a subscriber polling for pass `n` treats any flag whose generation
+//! is not `n` as empty ([`poll_epoch`](SymmetricHeap::poll_epoch)). Stale
+//! flags from pass `n-1` are thus invisible without any global
+//! synchronization or flag-clearing sweep, which is what lets pass `n+1`
+//! begin the moment the actors are done with pass `n`. Data cells need no
+//! clearing either: in-place padding means stale rows are never read (the
+//! signal's row count gates consumption). Transfer counters are
+//! cumulative over the heap's lifetime; per-pass accounting is done by
+//! the rank actors via start-of-pass snapshots.
+//!
 //! Safety: concurrent raw writes into a shared buffer are sound only
 //! because the paper's Theorem 3.1 applies — `put_signal` *enforces* the
 //! Definition C.2 validity rules at runtime (returning an error on any
@@ -23,18 +36,27 @@ use anyhow::{bail, Result};
 
 use crate::layout::{Coord, LayoutDims, Write};
 
-/// Signal flag encoding: 0 = empty; otherwise `rows + 1` valid rows are
-/// present in the guarded tile (the signal carries the payload-efficiency
-/// metadata, like the paper's packet headers).
+/// Signal flag encoding: 0 = never written; otherwise the high 32 bits
+/// hold the writer's pass epoch (the per-slot generation counter) and the
+/// low 32 bits hold `rows + 1` — the count of valid rows present in the
+/// guarded tile (the signal carries the payload-efficiency metadata, like
+/// the paper's packet headers).
 pub const FLAG_EMPTY: u64 = 0;
 
-pub fn encode_rows(rows: usize) -> u64 {
-    rows as u64 + 1
+/// Encode a (pass epoch, valid rows) pair into a signal flag.
+pub fn encode_flag(epoch: u32, rows: usize) -> u64 {
+    ((epoch as u64) << 32) | (rows as u64 + 1)
 }
 
-pub fn decode_rows(flag: u64) -> usize {
+/// Valid-row count carried by a non-empty flag.
+pub fn flag_rows(flag: u64) -> usize {
     debug_assert_ne!(flag, FLAG_EMPTY);
-    (flag - 1) as usize
+    ((flag & 0xFFFF_FFFF) as usize) - 1
+}
+
+/// Generation (pass epoch) tag carried by a flag.
+pub fn flag_epoch(flag: u64) -> u32 {
+    (flag >> 32) as u32
 }
 
 /// One rank's symmetric heap segment.
@@ -44,12 +66,14 @@ struct RankHeap {
     /// One signal flag per (peer, round, local expert, tile).
     flags: Vec<AtomicU64>,
     /// Transfer accounting (bytes received), split by locality.
+    /// Cumulative over the heap's lifetime.
     bytes_in_local: AtomicU64,
     bytes_in_remote: AtomicU64,
     puts_in: AtomicU64,
 }
 
-/// The whole-fabric symmetric heap. Shared by all rank threads via `Arc`.
+/// The whole-fabric symmetric heap. Shared by all rank threads via `Arc`
+/// and resident for the owning engine's lifetime.
 pub struct SymmetricHeap {
     dims: LayoutDims,
     ranks: Vec<RankHeap>,
@@ -61,7 +85,9 @@ pub struct SymmetricHeap {
 // Definition C.2 validity rules; valid writes from distinct sources target
 // disjoint memory (Theorem 3.1, proved in layout.rs and property-tested),
 // and same-source writes are ordered by that source's program order.
-// Readers synchronize through the release-store / acquire-load flag pair.
+// Across passes, the engine's pass-start barrier orders pass n's readers
+// before pass n+1's writers on the same cells. Readers synchronize through
+// the release-store / acquire-load flag pair.
 unsafe impl Sync for SymmetricHeap {}
 unsafe impl Send for SymmetricHeap {}
 
@@ -85,8 +111,10 @@ impl SymmetricHeap {
 
     /// One-sided put + signal: copy `payload` (rows × H) into rank `dst`'s
     /// cell at `coord` (rows starting at `coord.c`), then release-store
-    /// `encode_rows(rows)` into the destination flag for
-    /// `(coord.p, coord.r, coord.e, tile)`.
+    /// `encode_flag(epoch, rows)` into the destination flag for
+    /// `(coord.p, coord.r, coord.e, tile)`. `epoch` is the submitting
+    /// pass's generation tag; the destination only consumes flags of the
+    /// generation it is currently serving.
     ///
     /// Enforces Definition C.2; forged coordinates are rejected, which is
     /// what makes the unsafe interior sound.
@@ -96,6 +124,7 @@ impl SymmetricHeap {
         dst: usize,
         coord: Coord,
         payload: &[f32],
+        epoch: u32,
     ) -> Result<()> {
         let h = self.dims.h;
         if payload.is_empty() || payload.len() % h != 0 {
@@ -128,45 +157,45 @@ impl SymmetricHeap {
         // signal delivery: release pairs with the subscriber's acquire
         let tile = coord.c / self.dims.bm;
         let fidx = self.dims.flag_index(coord.p, coord.r, coord.e, tile);
-        target.flags[fidx].store(encode_rows(rows), Ordering::Release);
+        target.flags[fidx].store(encode_flag(epoch, rows), Ordering::Release);
         Ok(())
     }
 
-    /// Acquire-load a flag on `rank`.
+    /// Acquire-load a raw flag on `rank` (generation tag included).
     pub fn poll(&self, rank: usize, flag_idx: usize) -> u64 {
         self.ranks[rank].flags[flag_idx].load(Ordering::Acquire)
     }
 
+    /// Poll a flag for a specific pass generation: `Some(rows)` iff a
+    /// packet stamped with `epoch` has arrived. Flags from other passes
+    /// (stale generations, or a pipelined writer that raced ahead) read
+    /// as empty — this is the per-slot replacement for a global reset.
+    pub fn poll_epoch(&self, rank: usize, flag_idx: usize, epoch: u32) -> Option<usize> {
+        let flag = self.poll(rank, flag_idx);
+        if flag != FLAG_EMPTY && flag_epoch(flag) == epoch {
+            Some(flag_rows(flag))
+        } else {
+            None
+        }
+    }
+
     /// Read `rows` rows at `coord` on `rank`. Caller must have observed the
-    /// guarding flag via [`poll`] (acquire) before reading — that ordering
-    /// is what makes this data race-free.
+    /// guarding flag via [`poll`]/[`poll_epoch`] (acquire) before reading —
+    /// that ordering is what makes this data race-free.
     pub fn read(&self, rank: usize, coord: Coord, rows: usize) -> &[f32] {
         let off = self.dims.offset(coord);
         let len = rows * self.dims.h;
         // SAFETY: the release/acquire flag protocol orders this read after
         // the producer's copy; the region is never rewritten within a layer
-        // pass (slots are owned by one (src, round) pair).
+        // pass (slots are owned by one (src, round) pair), and the engine's
+        // pass-start barrier orders cross-pass reuse.
         unsafe {
             let v = &*self.ranks[rank].data.get();
             &v[off..off + len]
         }
     }
 
-    /// Zero all flags and counters (between forward passes). Data cells
-    /// need no clearing: in-place padding means stale rows are never read
-    /// (the signal's row count gates consumption).
-    pub fn reset(&self) {
-        for r in &self.ranks {
-            for f in &r.flags {
-                f.store(FLAG_EMPTY, Ordering::Release);
-            }
-            r.bytes_in_local.store(0, Ordering::Relaxed);
-            r.bytes_in_remote.store(0, Ordering::Relaxed);
-            r.puts_in.store(0, Ordering::Relaxed);
-        }
-    }
-
-    /// (local, remote) bytes received by `rank` since the last reset.
+    /// (local, remote) bytes received by `rank` over the heap's lifetime.
     pub fn bytes_in(&self, rank: usize) -> (u64, u64) {
         (
             self.ranks[rank].bytes_in_local.load(Ordering::Relaxed),
@@ -174,12 +203,12 @@ impl SymmetricHeap {
         )
     }
 
-    /// One-sided messages received by `rank` since the last reset.
+    /// One-sided messages received by `rank` over the heap's lifetime.
     pub fn puts_in(&self, rank: usize) -> u64 {
         self.ranks[rank].puts_in.load(Ordering::Relaxed)
     }
 
-    /// Total bytes moved across the fabric since the last reset.
+    /// Total bytes moved across the fabric over the heap's lifetime.
     pub fn total_bytes(&self) -> u64 {
         (0..self.dims.p)
             .map(|r| {
@@ -204,10 +233,12 @@ mod tests {
         let h = heap();
         let coord = Coord { p: 0, r: 0, b: 1, e: 1, c: 4 };
         let payload: Vec<f32> = (0..8).map(|i| i as f32).collect(); // 2 rows
-        h.put_signal(0, 1, coord, &payload).unwrap();
+        h.put_signal(0, 1, coord, &payload, 1).unwrap();
         let fidx = h.dims().flag_index(0, 0, 1, 1);
         let flag = h.poll(1, fidx);
-        assert_eq!(decode_rows(flag), 2);
+        assert_eq!(flag_rows(flag), 2);
+        assert_eq!(flag_epoch(flag), 1);
+        assert_eq!(h.poll_epoch(1, fidx, 1), Some(2));
         assert_eq!(h.read(1, coord, 2), &payload[..]);
     }
 
@@ -216,16 +247,35 @@ mod tests {
         let h = heap();
         // src 0 claiming peer slot 1 (forged p)
         let bad = Coord { p: 1, r: 0, b: 1, e: 0, c: 0 };
-        assert!(h.put_signal(0, 1, bad, &[0.0; 4]).is_err());
+        assert!(h.put_signal(0, 1, bad, &[0.0; 4], 1).is_err());
         // staging write to another rank (b=0, src != dst)
         let stage = Coord { p: 0, r: 0, b: 0, e: 0, c: 0 };
-        assert!(h.put_signal(0, 1, stage, &[0.0; 4]).is_err());
+        assert!(h.put_signal(0, 1, stage, &[0.0; 4], 1).is_err());
         // unaligned tile start
         let unaligned = Coord { p: 0, r: 0, b: 1, e: 0, c: 2 };
-        assert!(h.put_signal(0, 1, unaligned, &[0.0; 4]).is_err());
+        assert!(h.put_signal(0, 1, unaligned, &[0.0; 4], 1).is_err());
         // ragged payload
         let good = Coord { p: 0, r: 0, b: 1, e: 0, c: 0 };
-        assert!(h.put_signal(0, 1, good, &[0.0; 3]).is_err());
+        assert!(h.put_signal(0, 1, good, &[0.0; 3], 1).is_err());
+    }
+
+    #[test]
+    fn stale_generations_read_as_empty() {
+        let h = heap();
+        let coord = Coord { p: 0, r: 0, b: 1, e: 0, c: 0 };
+        let fidx = h.dims().flag_index(0, 0, 0, 0);
+        // never-written flag is empty for every generation
+        assert_eq!(h.poll_epoch(1, fidx, 1), None);
+        // pass 1 writes 1 row
+        h.put_signal(0, 1, coord, &[1.0; 4], 1).unwrap();
+        assert_eq!(h.poll_epoch(1, fidx, 1), Some(1));
+        // pass 2's subscriber must not see pass 1's flag...
+        assert_eq!(h.poll_epoch(1, fidx, 2), None);
+        // ...until the slot is rewritten with generation 2 (2 rows now)
+        h.put_signal(0, 1, coord, &[2.0; 8], 2).unwrap();
+        assert_eq!(h.poll_epoch(1, fidx, 2), Some(2));
+        assert_eq!(h.poll_epoch(1, fidx, 1), None, "old generation invisible");
+        assert!(h.read(1, coord, 2).iter().all(|&v| v == 2.0));
     }
 
     #[test]
@@ -240,7 +290,7 @@ mod tests {
                     for t in 0..4 {
                         let coord = Coord { p: src, r: 0, b: 1, e, c: t * 4 };
                         let val = (src * 100 + e * 10 + t) as f32;
-                        h.put_signal(src, 0, coord, &vec![val; 4 * 8]).unwrap();
+                        h.put_signal(src, 0, coord, &vec![val; 4 * 8], 1).unwrap();
                     }
                 }
             }));
@@ -254,7 +304,7 @@ mod tests {
                 for t in 0..4 {
                     let coord = Coord { p: src, r: 0, b: 1, e, c: t * 4 };
                     let fidx = h.dims().flag_index(src, 0, e, t);
-                    assert_eq!(decode_rows(h.poll(0, fidx)), 4);
+                    assert_eq!(h.poll_epoch(0, fidx, 1), Some(4));
                     let want = (src * 100 + e * 10 + t) as f32;
                     assert!(h.read(0, coord, 4).iter().all(|&v| v == want));
                 }
@@ -269,13 +319,15 @@ mod tests {
         let dims = LayoutDims { p: 4, e_local: 1, c: 4, h: 2, bm: 4 };
         let h = SymmetricHeap::new(dims, 2);
         let c = |p| Coord { p, r: 0, b: 1, e: 0, c: 0 };
-        h.put_signal(1, 0, c(1), &vec![0.0; 8]).unwrap(); // same node (0,1)
-        h.put_signal(2, 0, c(2), &vec![0.0; 8]).unwrap(); // cross node
+        h.put_signal(1, 0, c(1), &vec![0.0; 8], 1).unwrap(); // same node (0,1)
+        h.put_signal(2, 0, c(2), &vec![0.0; 8], 1).unwrap(); // cross node
         let (local, remote) = h.bytes_in(0);
         assert_eq!(local, 32);
         assert_eq!(remote, 32);
-        h.reset();
-        assert_eq!(h.bytes_in(0), (0, 0));
-        assert_eq!(h.poll(0, h.dims().flag_index(1, 0, 0, 0)), FLAG_EMPTY);
+        // counters are cumulative — a second pass adds on top, and the
+        // per-pass view is a snapshot delta (taken by the rank actors)
+        h.put_signal(1, 0, c(1), &vec![0.0; 8], 2).unwrap();
+        assert_eq!(h.bytes_in(0), (64, 32));
+        assert_eq!(h.total_bytes(), 96);
     }
 }

@@ -7,13 +7,18 @@
 //! factor, where the crossovers are). EXPERIMENTS.md records the
 //! paper-vs-measured comparison produced by `cargo bench`.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::config::Config;
+use crate::coordinator::{MoeEngine, TaskGraphMode};
+use crate::expert::{generate_tokens, ModelParams};
 use crate::layout;
+use crate::runtime::{ComputeBackend, NativeBackend};
 use crate::sim::engines::{simulate, Baseline, Engine};
 use crate::sim::straggler;
-use crate::util::stats::{fmt_bytes, fmt_time, Table};
+use crate::util::stats::{fmt_bytes, fmt_time, summarize, Table};
 use crate::workload::{cluster_workload, Skew};
 
 /// Engines compared in the latency/throughput figures.
@@ -132,6 +137,113 @@ pub fn table1() -> (String, Vec<(&'static str, usize)>) {
         t.row(&[name.to_string(), paper.to_string(), ours.to_string()]);
     }
     (format!("## Table 1 — kernel launches per layer pass\n\n{}", t.render()), rows)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1b: persistent engine vs per-pass respawn (real execution)
+// ---------------------------------------------------------------------------
+
+/// One steady-state comparison point between the persistent `MoeEngine`
+/// and the per-call actor-respawn shape the operator had before it
+/// (launch the actor group, run one pass, tear it down — the software
+/// analog of a per-pass kernel launch).
+#[derive(Clone, Debug)]
+pub struct PersistencePoint {
+    pub passes: usize,
+    /// Steady-state per-pass wall p50 on the resident engine (post-warmup).
+    pub persistent_p50: f64,
+    /// Per-pass wall p50 when the engine is started and torn down around
+    /// every pass.
+    pub respawn_p50: f64,
+    /// Launch-equivalent counts over the run: 1 vs one per pass.
+    pub persistent_launches: u64,
+    pub respawn_launches: u64,
+    /// Threads spawned over the run: constant vs linear in passes.
+    pub persistent_threads: u64,
+    pub respawn_threads: u64,
+}
+
+impl PersistencePoint {
+    /// Amortized per-pass overhead the respawn shape pays for bring-up
+    /// (thread spawn + heap alloc + weight slicing), by difference.
+    pub fn amortized_launch_overhead(&self) -> f64 {
+        self.respawn_p50 - self.persistent_p50
+    }
+}
+
+/// Measure steady-state pass latency of a resident [`MoeEngine`] against
+/// per-pass engine respawn on the real (native-backend) execution path.
+pub fn persistent_vs_respawn(
+    preset: &str,
+    passes: usize,
+    seed: u64,
+) -> Result<(String, PersistencePoint)> {
+    let cfg = Config::preset(preset)?;
+    let params = Arc::new(ModelParams::generate(&cfg, seed));
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+    let inputs: Vec<Vec<f32>> =
+        (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, seed, r)).collect();
+
+    // persistent arm: launch once, measure steady-state passes
+    let engine =
+        MoeEngine::start(cfg.clone(), params.clone(), backend.clone(), TaskGraphMode::Fused)?;
+    engine.submit(&inputs)?.wait()?; // warmup
+    let mut persist = Vec::with_capacity(passes);
+    for _ in 0..passes {
+        let t0 = std::time::Instant::now();
+        engine.submit(&inputs)?.wait()?;
+        persist.push(t0.elapsed().as_secs_f64());
+    }
+    let em = engine.metrics();
+    let (persistent_launches, persistent_threads) = (em.launches, em.threads_spawned);
+    engine.shutdown();
+
+    // respawn arm: bring the actor group up and tear it down every pass
+    let mut respawn = Vec::with_capacity(passes);
+    let mut respawn_launches = 0u64;
+    let mut respawn_threads = 0u64;
+    for _ in 0..passes {
+        let t0 = std::time::Instant::now();
+        let one =
+            MoeEngine::start(cfg.clone(), params.clone(), backend.clone(), TaskGraphMode::Fused)?;
+        one.submit(&inputs)?.wait()?;
+        let m = one.metrics();
+        respawn_launches += m.launches;
+        respawn_threads += m.threads_spawned;
+        one.shutdown();
+        respawn.push(t0.elapsed().as_secs_f64());
+    }
+
+    let point = PersistencePoint {
+        passes,
+        persistent_p50: summarize(&persist).p50,
+        respawn_p50: summarize(&respawn).p50,
+        persistent_launches,
+        respawn_launches,
+        persistent_threads,
+        respawn_threads,
+    };
+    let mut t = Table::new(&["operator shape", "p50 / pass", "launches", "threads spawned", "spawns / pass"]);
+    t.row(&[
+        "persistent MoeEngine".into(),
+        fmt_time(point.persistent_p50),
+        point.persistent_launches.to_string(),
+        point.persistent_threads.to_string(),
+        "0".into(),
+    ]);
+    t.row(&[
+        "respawn per pass".into(),
+        fmt_time(point.respawn_p50),
+        point.respawn_launches.to_string(),
+        point.respawn_threads.to_string(),
+        format!("{:.0}", point.respawn_threads as f64 / passes as f64),
+    ]);
+    let text = format!(
+        "## Table 1b — persistent engine vs per-pass respawn ({preset}, {passes} steady-state passes)\n\n{}\namortized launch overhead paid by the respawn shape: {} per pass\n",
+        t.render(),
+        fmt_time(point.amortized_launch_overhead().max(0.0)),
+    );
+    Ok((text, point))
 }
 
 // ---------------------------------------------------------------------------

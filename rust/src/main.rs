@@ -19,7 +19,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use flashdmoe::config::Config;
-use flashdmoe::coordinator::{baseline, DistributedMoE, TaskGraphMode};
+use flashdmoe::coordinator::{baseline, MoeEngine, TaskGraphMode};
 use flashdmoe::expert::{generate_tokens, ModelParams};
 use flashdmoe::harness;
 use flashdmoe::runtime::{ArtifactStore, ComputeBackend, NativeBackend, XlaBackend};
@@ -118,16 +118,18 @@ fn cmd_run(argv: &[String]) -> Result<()> {
         cfg.system.s_rank,
         cfg.system.processors
     );
-    let moe = DistributedMoE::new(cfg.clone(), params.clone(), backend, mode)?;
-    println!("symmetric heap: {} per rank", fmt_bytes(moe.heap_bytes_per_rank()));
+    // launch once: the actors stay resident across every pass below
+    let engine = MoeEngine::start(cfg.clone(), params.clone(), backend, mode)?;
+    println!("symmetric heap: {} per rank", fmt_bytes(engine.heap_bytes_per_rank()));
     let inputs: Vec<Vec<f32>> =
         (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, seed, r)).collect();
 
-    for pass in 0..a.get_usize("passes")? {
-        let res = moe.forward(&inputs)?;
+    for _ in 0..a.get_usize("passes")? {
+        let res = engine.submit(&inputs)?.wait()?;
         let m = &res.metrics;
         println!(
-            "pass {pass}: {} | util {:.1}% | tasks {} | payload saved {:.1}% | dropped {}",
+            "pass {}: {} | util {:.1}% | tasks {} | payload saved {:.1}% | dropped {}",
+            m.epoch,
             fmt_time(m.wall_secs),
             m.utilization() * 100.0,
             m.ranks.iter().map(|r| r.total_tasks()).sum::<u32>(),
@@ -136,6 +138,15 @@ fn cmd_run(argv: &[String]) -> Result<()> {
             m.total_dropped(),
         );
     }
+    let em = engine.metrics();
+    println!(
+        "engine: {} pass(es) served | {} launch(es) — {:.3} launches/pass | {} resident threads | steady-state util {:.1}%",
+        em.passes,
+        em.launches,
+        em.launches_per_pass(),
+        em.threads_spawned,
+        em.steady_state_utilization(cfg.system.ranks * cfg.system.processors) * 100.0,
+    );
 
     if a.get_bool("verify") {
         let dir = ArtifactStore::default_dir();
@@ -145,12 +156,13 @@ fn cmd_run(argv: &[String]) -> Result<()> {
             a_all.extend_from_slice(r);
         }
         let want = store.run_moe_layer(&a_all, &params)?;
-        let res = moe.forward(&inputs)?;
+        let res = engine.submit(&inputs)?.wait()?;
         let got: Vec<f32> = res.outputs.concat();
         let err = flashdmoe::util::stats::max_abs_diff(&got, &want);
         println!("verify vs monolithic PJRT reference: max |Δ| = {err:.2e}");
         anyhow::ensure!(err < 1e-3, "distributed forward diverged from reference");
     }
+    engine.shutdown();
     Ok(())
 }
 

@@ -1,0 +1,252 @@
+//! Persistent-engine lifecycle tests: launch-once accounting, pipelined
+//! epoch-tagged submission, bitwise pass determinism, shim equivalence,
+//! and clean shutdown (no leaked resident threads across repeated
+//! construct/drop cycles).
+
+use std::sync::Arc;
+
+use flashdmoe::config::Config;
+use flashdmoe::coordinator::{baseline, DistributedMoE, MoeEngine, TaskGraphMode};
+use flashdmoe::expert::{generate_tokens, ModelParams};
+use flashdmoe::runtime::{ComputeBackend, NativeBackend};
+
+fn setup(preset: &str, seed: u64) -> (Config, Arc<ModelParams>, Arc<dyn ComputeBackend>, Vec<Vec<f32>>) {
+    let cfg = Config::preset(preset).unwrap();
+    let params = Arc::new(ModelParams::generate(&cfg, seed));
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+    let inputs: Vec<Vec<f32>> =
+        (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, seed, r)).collect();
+    (cfg, params, backend, inputs)
+}
+
+fn start(cfg: &Config, params: &Arc<ModelParams>, backend: &Arc<dyn ComputeBackend>, mode: TaskGraphMode) -> MoeEngine {
+    MoeEngine::start(cfg.clone(), params.clone(), backend.clone(), mode).unwrap()
+}
+
+#[test]
+fn steady_state_passes_spawn_zero_threads_and_one_launch() {
+    let (cfg, params, backend, inputs) = setup("tiny", 42);
+    let engine = start(&cfg, &params, &backend, TaskGraphMode::Fused);
+    // the full resident census exists before any pass runs:
+    // one subscriber + `processors` workers per rank
+    let resident = (cfg.system.ranks * (1 + cfg.system.processors)) as u64;
+    assert_eq!(engine.metrics().threads_spawned, resident);
+    let after_one = {
+        engine.submit(&inputs).unwrap().wait().unwrap();
+        engine.metrics()
+    };
+    for _ in 0..4 {
+        engine.submit(&inputs).unwrap().wait().unwrap();
+    }
+    let after_five = engine.metrics();
+    assert_eq!(after_one.threads_spawned, resident, "pass 1 spawned threads");
+    assert_eq!(after_five.threads_spawned, resident, "steady state spawned threads");
+    assert_eq!(after_five.launches, 1, "launch-equivalent count over the lifetime");
+    assert_eq!(after_five.passes, 5);
+    assert!(after_five.launches_per_pass() < 1.0);
+    engine.shutdown();
+}
+
+#[test]
+fn submit_wait_matches_forward_shim_and_independent_witness_bitwise() {
+    // acceptance: back-to-back submit/wait passes must reproduce the
+    // one-call DistributedMoE path on the tiny preset, bit for bit.
+    // Since the shim now routes through the same engine, the real
+    // referee is the bulk-synchronous baseline: an independent schedule
+    // over the same substrate whose combine reduction also runs in
+    // dispatch-plan order with the same `w*v` → `+=` f32 ops per token,
+    // so agreement must be exact, not within-tolerance.
+    let (cfg, params, backend, inputs) = setup("tiny", 7);
+    let witness = baseline::forward_sequential(&cfg, &params, &backend, &inputs).unwrap();
+    let moe = DistributedMoE::new(cfg.clone(), params.clone(), backend.clone(), TaskGraphMode::Fused)
+        .unwrap();
+    let shim = moe.forward(&inputs).unwrap();
+    let engine = start(&cfg, &params, &backend, TaskGraphMode::Fused);
+    for pass in 0..3 {
+        let got = engine.submit(&inputs).unwrap().wait().unwrap();
+        for (r, (g, w)) in got.outputs.iter().zip(&witness.outputs).enumerate() {
+            assert_eq!(g, w, "pass {pass}, rank {r}: engine diverged from bulk-sync witness");
+        }
+        for (r, (g, w)) in got.outputs.iter().zip(&shim.outputs).enumerate() {
+            assert_eq!(g, w, "pass {pass}, rank {r}: engine diverged from forward() shim");
+        }
+    }
+}
+
+#[test]
+fn passes_are_bitwise_deterministic_across_engines_and_modes() {
+    // the deterministic combine fold makes outputs independent of
+    // scheduling: same inputs => identical bits, engine to engine,
+    // whatever the processor count
+    let (cfg, params, backend, inputs) = setup("tiny", 21);
+    let mut cfg1 = cfg.clone();
+    cfg1.set("processors", "1").unwrap();
+    let mut cfg8 = cfg.clone();
+    cfg8.set("processors", "8").unwrap();
+    let a = start(&cfg1, &params, &backend, TaskGraphMode::Fused)
+        .forward(&inputs)
+        .unwrap();
+    let b = start(&cfg8, &params, &backend, TaskGraphMode::Fused)
+        .forward(&inputs)
+        .unwrap();
+    for (x, y) in a.outputs.iter().zip(&b.outputs) {
+        assert_eq!(x, y, "processor count changed output bits");
+    }
+    // and within one engine, repeated passes are bitwise stable
+    let engine = start(&cfg8, &params, &backend, TaskGraphMode::Fused);
+    let first = engine.submit(&inputs).unwrap().wait().unwrap();
+    for _ in 0..3 {
+        let again = engine.submit(&inputs).unwrap().wait().unwrap();
+        for (x, y) in first.outputs.iter().zip(&again.outputs) {
+            assert_eq!(x, y, "repeated pass changed output bits");
+        }
+    }
+}
+
+#[test]
+fn pipelined_submission_overlaps_and_preserves_outputs() {
+    let (cfg, params, backend, _) = setup("tiny", 11);
+    let engine = start(&cfg, &params, &backend, TaskGraphMode::Fused);
+    // three distinct input sets, each with a known fresh-engine reference
+    let batches: Vec<Vec<Vec<f32>>> = (0..3)
+        .map(|seed| {
+            (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, 100 + seed, r)).collect()
+        })
+        .collect();
+    let want: Vec<_> = batches
+        .iter()
+        .map(|b| start(&cfg, &params, &backend, TaskGraphMode::Fused).forward(b).unwrap())
+        .collect();
+
+    // submit all three before collecting any: the third submit drains
+    // pass 1 into the parking buffer (slots are double-buffered)
+    let h1 = engine.submit(&batches[0]).unwrap();
+    let h2 = engine.submit(&batches[1]).unwrap();
+    let h3 = engine.submit(&batches[2]).unwrap();
+    assert_eq!((h1.epoch(), h2.epoch(), h3.epoch()), (1, 2, 3));
+    let r1 = h1.wait().unwrap();
+    let r2 = h2.wait().unwrap();
+    let r3 = h3.wait().unwrap();
+    for (got, want) in [&r1, &r2, &r3].into_iter().zip(&want) {
+        for (g, w) in got.outputs.iter().zip(&want.outputs) {
+            assert_eq!(g, w, "pipelined pass diverged from fresh-engine reference");
+        }
+    }
+    assert_eq!(r1.metrics.epoch, 1);
+    assert_eq!(r3.metrics.epoch, 3);
+    assert_eq!(engine.metrics().passes, 3);
+}
+
+#[test]
+fn waits_may_complete_out_of_order() {
+    let (cfg, params, backend, inputs) = setup("tiny", 13);
+    let engine = start(&cfg, &params, &backend, TaskGraphMode::Fused);
+    let h1 = engine.submit(&inputs).unwrap();
+    let h2 = engine.submit(&inputs).unwrap();
+    let r2 = h2.wait().unwrap();
+    let r1 = h1.wait().unwrap();
+    assert_eq!(r1.metrics.epoch, 1);
+    assert_eq!(r2.metrics.epoch, 2);
+    for (x, y) in r1.outputs.iter().zip(&r2.outputs) {
+        assert_eq!(x, y);
+    }
+}
+
+#[test]
+fn dropped_handles_do_not_wedge_later_submits() {
+    let (cfg, params, backend, inputs) = setup("tiny", 17);
+    let engine = start(&cfg, &params, &backend, TaskGraphMode::Fused);
+    for _ in 0..4 {
+        // submit and deliberately discard the handle: the drop path must
+        // free the pass slot or later submits would stall forever
+        let _ = engine.submit(&inputs).unwrap();
+    }
+    let last = engine.submit(&inputs).unwrap().wait().unwrap();
+    assert_eq!(last.metrics.epoch, 5);
+}
+
+#[test]
+fn construct_and_drop_engines_in_a_loop_joins_cleanly() {
+    // drop/shutdown satellite: resident actors must be joined on drop —
+    // a leak would either hang this test (join deadlock) or blow up the
+    // thread count across 8 lifecycles x 2 modes
+    let (cfg, params, backend, inputs) = setup("tiny", 23);
+    for mode in [TaskGraphMode::Fused, TaskGraphMode::Split] {
+        for i in 0..8 {
+            let engine = start(&cfg, &params, &backend, mode);
+            if i % 2 == 0 {
+                engine.submit(&inputs).unwrap().wait().unwrap();
+            }
+            // half the engines are dropped idle, half mid-lifecycle;
+            // explicit shutdown and implicit drop both must join
+            if i % 3 == 0 {
+                engine.shutdown();
+            } // else: Drop
+        }
+    }
+}
+
+#[test]
+fn handles_survive_engine_shutdown_for_submitted_passes() {
+    let (cfg, params, backend, inputs) = setup("tiny", 29);
+    let engine = start(&cfg, &params, &backend, TaskGraphMode::Fused);
+    let reference = engine.submit(&inputs).unwrap().wait().unwrap();
+    let handle = engine.submit(&inputs).unwrap();
+    engine.shutdown(); // drains the submitted pass before joining
+    let late = handle.wait().unwrap();
+    for (x, y) in reference.outputs.iter().zip(&late.outputs) {
+        assert_eq!(x, y);
+    }
+}
+
+#[test]
+fn split_mode_engine_matches_fused_engine() {
+    let (cfg, params, backend, inputs) = setup("tiny", 31);
+    let fused = start(&cfg, &params, &backend, TaskGraphMode::Fused).forward(&inputs).unwrap();
+    let engine = start(&cfg, &params, &backend, TaskGraphMode::Split);
+    for _ in 0..2 {
+        let split = engine.submit(&inputs).unwrap().wait().unwrap();
+        for (f, s) in fused.outputs.iter().zip(&split.outputs) {
+            let max = f
+                .iter()
+                .zip(s)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max < 1e-3, "split engine diverged from fused: {max}");
+        }
+        let gemm: u32 = split.metrics.ranks.iter().map(|r| r.gemm_tasks).sum();
+        assert!(gemm > 0, "split mode must run Gemm0/Gemm1 tasks");
+    }
+}
+
+#[test]
+fn bad_submissions_are_rejected_without_poisoning_the_engine() {
+    let (cfg, params, backend, inputs) = setup("tiny", 37);
+    let engine = start(&cfg, &params, &backend, TaskGraphMode::Fused);
+    // wrong arity
+    let short = inputs[..cfg.system.ranks - 1].to_vec();
+    assert!(engine.submit(&short).is_err());
+    // wrong per-rank length
+    let bad_len: Vec<Vec<f32>> = (0..cfg.system.ranks).map(|_| vec![0.0f32; 3]).collect();
+    assert!(engine.submit(&bad_len).is_err());
+    // the engine still serves good passes afterwards
+    let ok = engine.submit(&inputs).unwrap().wait().unwrap();
+    assert_eq!(ok.outputs.len(), cfg.system.ranks);
+}
+
+#[test]
+fn epoch_tags_isolate_back_to_back_heterogeneous_passes() {
+    // different routing every pass: stale generation flags from pass N
+    // must be invisible to pass N+1 (no global heap reset exists anymore)
+    let (cfg, params, backend, _) = setup("tiny", 41);
+    let engine = start(&cfg, &params, &backend, TaskGraphMode::Fused);
+    for seed in [1u64, 2, 3, 4] {
+        let inputs: Vec<Vec<f32>> =
+            (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, seed, r)).collect();
+        let got = engine.submit(&inputs).unwrap().wait().unwrap();
+        let want = start(&cfg, &params, &backend, TaskGraphMode::Fused).forward(&inputs).unwrap();
+        for (g, w) in got.outputs.iter().zip(&want.outputs) {
+            assert_eq!(g, w, "seed {seed}: resident-engine pass leaked state");
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! API-compatible stub of the `xla` PJRT bindings used by
+//! `flashdmoe::runtime`. It exists so the workspace builds (and the
+//! native-backend paths run) on machines without the XLA C libraries:
+//! literal construction works for real, while anything that needs an
+//! actual PJRT runtime (`PjRtClient::cpu`, compilation, execution)
+//! returns a descriptive error. Replace this path dependency with the
+//! real bindings to execute the AOT HLO artifacts.
+
+use std::path::Path;
+
+/// Stub error: everything that would touch PJRT reports through this.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unsupported<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} requires a real PJRT runtime; this build uses the offline `xla` stub \
+         (vendor/xla) — swap it for the real bindings to run AOT artifacts"
+    )))
+}
+
+/// Element dtypes the runtime constructs literals with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+/// Host-side literal: shape + raw bytes. Construction is real (callers
+/// cache weight literals before any execution is attempted); consumption
+/// paths are only reachable after a successful execution, which the stub
+/// never produces.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    elem: ElementType,
+    dims: Vec<usize>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        elem: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        Ok(Literal { elem, dims: dims.to_vec(), bytes: data.to_vec() })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.elem
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn raw_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        unsupported("Literal::to_vec")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unsupported("Literal::to_tuple")
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unsupported("Literal::to_tuple1")
+    }
+}
+
+/// Parsed HLO module text (never constructed by the stub).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        unsupported(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        ))
+    }
+}
+
+/// An XLA computation handle.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// A PJRT client. The stub has no runtime, so `cpu()` fails up front —
+/// callers gate on artifact availability before reaching this.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unsupported("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unsupported("PjRtClient::compile")
+    }
+}
+
+/// A compiled executable (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unsupported("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A device buffer handle (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unsupported("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_build_offline() {
+        let data = [0u8; 16];
+        let l = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &data)
+            .unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.raw_bytes().len(), 16);
+        assert_eq!(l.element_type(), ElementType::F32);
+    }
+
+    #[test]
+    fn runtime_paths_error_descriptively() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT"), "{e}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
