@@ -1,7 +1,9 @@
 //! Expert-scalability scenario (the paper's §4.6 motivation, run for real):
 //! sweep the expert count on the *real* coordinator at a small scale and
 //! on the calibrated simulator at paper scale, and show the flash design's
-//! flat latency vs the launch-bound baselines.
+//! flat latency vs the launch-bound baselines. Closes with a routing
+//! policy A/B: fixed-capacity dispatch (drops under skew) vs dropless
+//! variable-capacity dispatch (zero drops, same payload efficiency).
 //!
 //!     cargo run --release --example expert_scaling
 
@@ -65,5 +67,17 @@ fn main() -> anyhow::Result<()> {
     }
     println!("{}", t.render());
     println!("flash stays flat; per-expert kernel launches make the baselines superlinear.");
+
+    // ---- routing policy A/B: capacity vs dropless (real engine) -------------
+    let (text, points) = flashdmoe::harness::routing_policy_ab("tiny", 7)?;
+    println!("\n{text}");
+    let dropless = points.iter().find(|p| p.policy == "dropless").unwrap();
+    assert_eq!(dropless.dropped, 0, "dropless must never drop");
+    println!(
+        "dropless keeps every routed pair ({} dropped) at {:.1}% payload savings; \
+         capacity arms trade dropped tokens for a smaller heap.",
+        dropless.dropped,
+        dropless.payload_savings * 100.0
+    );
     Ok(())
 }

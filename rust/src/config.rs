@@ -8,6 +8,71 @@
 
 use anyhow::{bail, Context, Result};
 
+/// How the router treats per-expert load.
+///
+/// * [`Capacity`](RoutingPolicy::Capacity) — the paper's §3.2.1 contract:
+///   each (source rank, expert) pair gets a fixed, bM-aligned capacity
+///   buffer `roundup(max(ceil(S_r·k/E·f), bM), bM)`; over-capacity
+///   (token, expert) pairs are silently dropped, so under skewed gating
+///   the engine computes a *different function* than the dense reference.
+/// * [`Dropless`](RoutingPolicy::Dropless) — MegaBlocks-style dropless
+///   MoE: no pair is ever dropped. The symmetric heap's per-(source,
+///   expert) slot region is sized to the worst case (`roundup(S_r, bM)` —
+///   a source can route at most its whole batch to one expert), and
+///   dispatch ships variable-length tile lists sized to the *actual*
+///   routed counts, so the worst-case region costs no extra wire traffic.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RoutingPolicy {
+    /// Fixed per-(source, expert) capacity with factor `f`; overflow drops.
+    Capacity(f64),
+    /// Variable-capacity dispatch; every routed pair is kept.
+    Dropless,
+}
+
+impl RoutingPolicy {
+    /// Parse a CLI/config-file value: `dropless`, `capacity` (factor 1.0)
+    /// or `capacity:<factor>` (the factor must be finite and positive).
+    pub fn parse(s: &str) -> Option<RoutingPolicy> {
+        match s {
+            "dropless" => Some(RoutingPolicy::Dropless),
+            "capacity" => Some(RoutingPolicy::Capacity(1.0)),
+            _ => s
+                .strip_prefix("capacity:")
+                .and_then(|f| f.parse().ok())
+                .filter(|f: &f64| *f > 0.0 && *f <= MAX_CAPACITY_FACTOR)
+                .map(RoutingPolicy::Capacity),
+        }
+    }
+
+    pub fn is_dropless(&self) -> bool {
+        matches!(self, RoutingPolicy::Dropless)
+    }
+
+    /// A capacity factor must lie in `(0, MAX_CAPACITY_FACTOR]`. NaN,
+    /// infinite, zero or negative factors would silently clamp every
+    /// (source, expert) buffer to bM via the `ceil() as usize` saturation,
+    /// and a huge finite factor (e.g. 1e300) would saturate the cast to
+    /// `usize::MAX` and overflow the bM alignment — wrapping capacity to 0
+    /// in release builds, i.e. silently dropping every token.
+    pub fn validate(&self) -> Result<()> {
+        if let RoutingPolicy::Capacity(f) = self {
+            if !(*f > 0.0 && *f <= MAX_CAPACITY_FACTOR) {
+                bail!(
+                    "capacity factor must be in (0, {MAX_CAPACITY_FACTOR:e}], got {f}"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Upper bound on a usable capacity factor: far above any practical value
+/// (real deployments use f in [0.25, 8]), far below the range where the
+/// `ceil() as usize` in [`ModelConfig::capacity`] could saturate/overflow.
+/// The comparison `f <= MAX_CAPACITY_FACTOR` is false for NaN, so the
+/// bound check also rejects non-finite factors.
+pub const MAX_CAPACITY_FACTOR: f64 = 1e6;
+
 /// Model-side configuration (mirrors `python/compile/aot.py::PRESETS`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelConfig {
@@ -23,8 +88,8 @@ pub struct ModelConfig {
     pub bm: usize,
     /// Tile width bN (the paper fixes 64).
     pub bn: usize,
-    /// Expert capacity factor f.
-    pub capacity_factor: f64,
+    /// Routing policy: fixed capacity (with factor) or dropless.
+    pub policy: RoutingPolicy,
 }
 
 /// System-side configuration: topology + actor resources.
@@ -117,18 +182,45 @@ pub struct Config {
 }
 
 impl ModelConfig {
+    /// Capacity factor `f` of the [`RoutingPolicy::Capacity`] policy
+    /// (1.0 under `Dropless`, where it only feeds Table-3-style reports).
+    pub fn capacity_factor(&self) -> f64 {
+        match self.policy {
+            RoutingPolicy::Capacity(f) => f,
+            RoutingPolicy::Dropless => 1.0,
+        }
+    }
+
     /// Aligned per-(source rank, expert) capacity (paper §3.2.1):
-    /// `roundup(max(ceil(S_r·k/E·f), bM), bM)`.
+    /// `roundup(max(ceil(S_r·k/E·f), bM), bM)`. This is the *Capacity
+    /// policy's* buffer size; policy-aware sizing is [`slot_capacity`]
+    /// (the two agree under `Capacity`).
+    ///
+    /// [`slot_capacity`]: ModelConfig::slot_capacity
     pub fn capacity(&self, s_rank: usize) -> usize {
-        let raw = (s_rank as f64 * self.k as f64 / self.e as f64 * self.capacity_factor).ceil()
-            as usize;
+        let f = self.capacity_factor();
+        let raw = (s_rank as f64 * self.k as f64 / self.e as f64 * f).ceil() as usize;
         let cap = raw.max(self.bm);
         cap.div_ceil(self.bm) * self.bm
     }
 
-    /// Tiles per (rank, expert) capacity buffer.
+    /// Policy-aware per-(source rank, expert) slot-region size (bM-aligned).
+    /// Under `Capacity` this is [`capacity`](ModelConfig::capacity); under
+    /// `Dropless` it is the worst case `roundup(max(S_r, bM), bM)` — a
+    /// source routes each token to an expert at most once, so one expert
+    /// can receive at most the source's whole batch. Dispatch only ever
+    /// ships the tiles that actually hold rows, so the worst-case region
+    /// costs memory, never wire traffic.
+    pub fn slot_capacity(&self, s_rank: usize) -> usize {
+        match self.policy {
+            RoutingPolicy::Capacity(_) => self.capacity(s_rank),
+            RoutingPolicy::Dropless => s_rank.max(self.bm).div_ceil(self.bm) * self.bm,
+        }
+    }
+
+    /// Tile slots per (rank, expert) region under the configured policy.
     pub fn tiles_per_capacity(&self, s_rank: usize) -> usize {
-        self.capacity(s_rank) / self.bm
+        self.slot_capacity(s_rank) / self.bm
     }
 
     /// FLOPs of one expert-FFN application to `rows` tokens (2 GEMMs).
@@ -191,29 +283,69 @@ impl Config {
     pub fn preset(name: &str) -> Result<Config> {
         let cfg = match name {
             "tiny" => Config {
-                model: ModelConfig { h: 64, d: 128, e: 8, k: 2, bm: 32, bn: 32, capacity_factor: 1.0 },
+                model: ModelConfig {
+                    h: 64,
+                    d: 128,
+                    e: 8,
+                    k: 2,
+                    bm: 32,
+                    bn: 32,
+                    policy: RoutingPolicy::Capacity(1.0),
+                },
                 system: SystemConfig { ranks: 2, nodes: 1, s_rank: 128, processors: 4 },
                 cost: CostModel::h100_nvlink(),
             },
             "default" => Config {
-                model: ModelConfig { h: 256, d: 512, e: 16, k: 2, bm: 128, bn: 64, capacity_factor: 1.0 },
+                model: ModelConfig {
+                    h: 256,
+                    d: 512,
+                    e: 16,
+                    k: 2,
+                    bm: 128,
+                    bn: 64,
+                    policy: RoutingPolicy::Capacity(1.0),
+                },
                 system: SystemConfig { ranks: 4, nodes: 1, s_rank: 512, processors: 4 },
                 cost: CostModel::h100_nvlink(),
             },
             "perf" => Config {
-                model: ModelConfig { h: 512, d: 1024, e: 16, k: 2, bm: 128, bn: 64, capacity_factor: 1.0 },
+                model: ModelConfig {
+                    h: 512,
+                    d: 1024,
+                    e: 16,
+                    k: 2,
+                    bm: 128,
+                    bn: 64,
+                    policy: RoutingPolicy::Capacity(1.0),
+                },
                 system: SystemConfig { ranks: 4, nodes: 1, s_rank: 1024, processors: 4 },
                 cost: CostModel::h100_nvlink(),
             },
             // Paper §4: 8xH100, E up to 128, T up to 16K, H=2048, D=2048.
             "paper_h100x8" => Config {
-                model: ModelConfig { h: 2048, d: 2048, e: 64, k: 2, bm: 128, bn: 64, capacity_factor: 1.0 },
+                model: ModelConfig {
+                    h: 2048,
+                    d: 2048,
+                    e: 64,
+                    k: 2,
+                    bm: 128,
+                    bn: 64,
+                    policy: RoutingPolicy::Capacity(1.0),
+                },
                 system: SystemConfig { ranks: 8, nodes: 1, s_rank: 8192, processors: 132 },
                 cost: CostModel::h100_nvlink(),
             },
             // Paper Fig 5/11: 2xA100 NVLink, E=64, T=8K.
             "paper_a100x2" => Config {
-                model: ModelConfig { h: 2048, d: 2048, e: 64, k: 2, bm: 128, bn: 64, capacity_factor: 1.0 },
+                model: ModelConfig {
+                    h: 2048,
+                    d: 2048,
+                    e: 64,
+                    k: 2,
+                    bm: 128,
+                    bn: 64,
+                    policy: RoutingPolicy::Capacity(1.0),
+                },
                 system: SystemConfig { ranks: 2, nodes: 1, s_rank: 8192, processors: 108 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -221,7 +353,15 @@ impl Config {
             // nic_buffer is sized so the observed incast failure appears
             // past 2048 tokens/GPU (Fig 17's non-termination).
             "paper_multinode" => Config {
-                model: ModelConfig { h: 1024, d: 4096, e: 16, k: 2, bm: 128, bn: 64, capacity_factor: 1.0 },
+                model: ModelConfig {
+                    h: 1024,
+                    d: 4096,
+                    e: 16,
+                    k: 2,
+                    bm: 128,
+                    bn: 64,
+                    policy: RoutingPolicy::Capacity(1.0),
+                },
                 system: SystemConfig { ranks: 16, nodes: 4, s_rank: 1024, processors: 108 },
                 cost: CostModel { nic_buffer: 32.0 * 1024.0 * 1024.0, ..CostModel::h100_nvlink() },
             },
@@ -234,6 +374,7 @@ impl Config {
     pub fn validate(&self) -> Result<()> {
         self.system.validate()?;
         let m = &self.model;
+        m.policy.validate()?;
         if m.e % self.system.ranks != 0 {
             bail!("experts ({}) must divide evenly over ranks ({})", m.e, self.system.ranks);
         }
@@ -270,7 +411,13 @@ impl Config {
             "k" | "topk" => self.model.k = u()?,
             "bm" => self.model.bm = u()?,
             "bn" => self.model.bn = u()?,
-            "capacity_factor" => self.model.capacity_factor = f()?,
+            "capacity_factor" => self.model.policy = RoutingPolicy::Capacity(f()?),
+            "routing_policy" | "policy" => match RoutingPolicy::parse(value) {
+                Some(p) => self.model.policy = p,
+                None => bail!(
+                    "{key}={value}: expected 'dropless', 'capacity' or 'capacity:<factor>'"
+                ),
+            },
             "ranks" => self.system.ranks = u()?,
             "nodes" => self.system.nodes = u()?,
             "s_rank" | "tokens" => self.system.s_rank = u()?,
@@ -338,7 +485,15 @@ mod tests {
 
     #[test]
     fn capacity_is_aligned_and_at_least_bm() {
-        let m = ModelConfig { h: 8, d: 8, e: 64, k: 2, bm: 128, bn: 8, capacity_factor: 1.0 };
+        let m = ModelConfig {
+            h: 8,
+            d: 8,
+            e: 64,
+            k: 2,
+            bm: 128,
+            bn: 8,
+            policy: RoutingPolicy::Capacity(1.0),
+        };
         // tiny load: raw capacity would be 1, must clamp to bM
         assert_eq!(m.capacity(16), 128);
         // big load: stays aligned
@@ -352,11 +507,67 @@ mod tests {
         // Paper Table 3 `max(bM, EC)` column (T tokens spread over 8 GPUs
         // is not how they count — EC is per total tokens/E there; verify the
         // alignment rule reproduces the max(bM, EC) column for T=4K..16K).
-        let mk = |e| ModelConfig { h: 2048, d: 2048, e, k: 1, bm: 128, bn: 64, capacity_factor: 1.0 };
+        let mk = |e| ModelConfig {
+            h: 2048,
+            d: 2048,
+            e,
+            k: 1,
+            bm: 128,
+            bn: 64,
+            policy: RoutingPolicy::Capacity(1.0),
+        };
         assert_eq!(mk(16).capacity(4096), 256);
         assert_eq!(mk(32).capacity(4096), 128);
         assert_eq!(mk(64).capacity(4096), 128); // EC=64 -> clamp to bM
         assert_eq!(mk(16).capacity(16384), 1024);
+    }
+
+    #[test]
+    fn dropless_slot_capacity_covers_worst_case() {
+        let mut m =
+            ModelConfig { h: 8, d: 8, e: 8, k: 2, bm: 32, bn: 8, policy: RoutingPolicy::Dropless };
+        // one source can route at most its whole batch to a single expert
+        assert_eq!(m.slot_capacity(128), 128);
+        assert_eq!(m.slot_capacity(130), 160, "rounded up to bM");
+        assert_eq!(m.slot_capacity(16), 32, "at least one tile");
+        assert_eq!(m.tiles_per_capacity(128), 4);
+        // under Capacity the two sizings agree
+        m.policy = RoutingPolicy::Capacity(1.0);
+        assert_eq!(m.slot_capacity(128), m.capacity(128));
+    }
+
+    #[test]
+    fn routing_policy_overrides() {
+        let mut cfg = Config::preset("tiny").unwrap();
+        cfg.set("routing_policy", "dropless").unwrap();
+        assert_eq!(cfg.model.policy, RoutingPolicy::Dropless);
+        assert!(cfg.model.policy.is_dropless());
+        cfg.validate().unwrap();
+        cfg.set("capacity_factor", "1.5").unwrap();
+        assert_eq!(cfg.model.policy, RoutingPolicy::Capacity(1.5));
+        assert_eq!(cfg.model.capacity_factor(), 1.5);
+        cfg.set("routing_policy", "capacity:0.5").unwrap();
+        assert_eq!(cfg.model.policy, RoutingPolicy::Capacity(0.5));
+        cfg.set("policy", "capacity").unwrap();
+        assert_eq!(cfg.model.policy, RoutingPolicy::Capacity(1.0));
+        assert!(cfg.set("routing_policy", "nope").is_err());
+    }
+
+    #[test]
+    fn degenerate_capacity_factors_are_rejected() {
+        // parse refuses non-finite, non-positive and absurdly large factors
+        let bad = ["capacity:nan", "capacity:inf", "capacity:-1", "capacity:0", "capacity:1e300"];
+        for b in bad {
+            assert!(RoutingPolicy::parse(b).is_none(), "{b} must not parse");
+        }
+        // and validate() catches a factor smuggled in via capacity_factor
+        let mut cfg = Config::preset("tiny").unwrap();
+        for b in ["-1", "nan", "1e300"] {
+            cfg.set("capacity_factor", b).unwrap();
+            assert!(cfg.validate().is_err(), "factor {b} must fail validation");
+        }
+        cfg.set("capacity_factor", "0.5").unwrap();
+        cfg.validate().unwrap();
     }
 
     #[test]

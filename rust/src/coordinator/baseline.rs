@@ -57,7 +57,12 @@ pub fn forward_sequential(
     anyhow::ensure!(inputs.len() == ranks);
     let m = cfg.model.clone();
     let (s_rank, h, d) = (cfg.system.s_rank, cfg.model.h, cfg.model.d);
-    let capacity = cfg.model.capacity(s_rank);
+    // Policy-aware slab size: the fixed capacity under `Capacity`, the
+    // worst-case slot region under `Dropless` — a padded bulk-synchronous
+    // implementation must ship whatever region guarantees zero drops, so
+    // the baseline keeps matching the flash path's function in both modes
+    // (and pays dearly for it on the wire, which is the point).
+    let capacity = cfg.model.slot_capacity(s_rank);
     let e_local = cfg.local_experts();
 
     let barrier = Barrier::new(ranks);

@@ -13,6 +13,14 @@
 //!
 //! [`MoeEngine`]: super::engine::MoeEngine
 
+/// Fraction of padded dispatch traffic avoided (0.0 when nothing padded).
+fn savings(sent_rows: usize, padded_rows: usize) -> f64 {
+    if padded_rows == 0 {
+        return 0.0;
+    }
+    1.0 - sent_rows as f64 / padded_rows as f64
+}
+
 /// Metrics for one rank over one forward pass.
 #[derive(Clone, Debug, Default)]
 pub struct RankMetrics {
@@ -56,10 +64,7 @@ impl RankMetrics {
 
     /// Fraction of padded dispatch traffic avoided (payload efficiency).
     pub fn payload_savings(&self) -> f64 {
-        if self.padded_rows == 0 {
-            return 0.0;
-        }
-        1.0 - self.sent_rows as f64 / self.padded_rows as f64
+        savings(self.sent_rows, self.padded_rows)
     }
 }
 
@@ -97,6 +102,19 @@ impl PassMetrics {
 
     pub fn total_dropped(&self) -> usize {
         self.ranks.iter().map(|r| r.dropped).sum()
+    }
+
+    /// Pass-wide payload savings: fraction of padded dispatch traffic
+    /// avoided, aggregated over ranks. Under `RoutingPolicy::Dropless` the
+    /// padded baseline is the policy's worst-case slot region, so savings
+    /// read high exactly when the gate is balanced — and
+    /// [`total_dropped`](Self::total_dropped) must read 0 regardless of
+    /// skew (asserted by the conformance suite).
+    pub fn payload_savings(&self) -> f64 {
+        savings(
+            self.ranks.iter().map(|r| r.sent_rows).sum(),
+            self.ranks.iter().map(|r| r.padded_rows).sum(),
+        )
     }
 }
 
@@ -167,6 +185,19 @@ mod tests {
     fn pass_throughput() {
         let p = PassMetrics { wall_secs: 0.5, ..Default::default() };
         assert_eq!(p.throughput(1000), 2000.0);
+    }
+
+    #[test]
+    fn pass_payload_savings_aggregates_ranks() {
+        let p = PassMetrics {
+            ranks: vec![
+                RankMetrics { sent_rows: 10, padded_rows: 50, ..Default::default() },
+                RankMetrics { sent_rows: 15, padded_rows: 50, ..Default::default() },
+            ],
+            ..Default::default()
+        };
+        assert!((p.payload_savings() - 0.75).abs() < 1e-12);
+        assert_eq!(PassMetrics::default().payload_savings(), 0.0);
     }
 
     #[test]

@@ -7,11 +7,15 @@
 //! (the rank's main thread, driven per pass by the engine) plus N
 //! resident processor workers. A pass begins when the engine rings the
 //! rank's doorbell with an epoch-tagged [`PassCtx`]; the subscriber gates
-//! its tokens, announces + dispatches tiles with one-sided put+signal
-//! (stamped with the pass generation), then polls the symmetric heap's
-//! signal flags for packets of *this* generation, decodes them into task
-//! descriptors, feeds the work-conserving ready queue, and interrupts the
-//! processors once the self-correcting task bound is met. Processor
+//! its tokens, announces its per-(destination, expert) dispatch-tile
+//! counts (so every receiver can size its dependency tables, staging and
+//! flag-sweep bounds to the pass's *actual* — possibly dropless,
+//! variable-length — tile lists), dispatches tiles with one-sided
+//! put+signal (stamped with the pass generation), then polls the
+//! symmetric heap's signal flags for packets of *this* generation,
+//! decodes them into task descriptors, feeds the work-conserving ready
+//! queue, and interrupts the processors once the self-correcting task
+//! bound is met. Processor
 //! workers execute FFN/GEMM/Combine tasks via the configured
 //! [`ComputeBackend`] and write combine packets straight back to the
 //! originating rank — no collective, no host round-trip, and no thread
@@ -55,6 +59,10 @@ pub enum TaskGraphMode {
 /// State shared by every rank actor for the whole engine lifetime.
 pub struct EngineShared {
     pub cfg: Config,
+    /// Policy-aware per-(source, expert) slot-region size (see
+    /// [`ModelConfig::slot_capacity`](crate::config::ModelConfig::slot_capacity)):
+    /// the fixed capacity under `Capacity`, the worst-case region under
+    /// `Dropless`. Only the announced tiles of a pass are ever touched.
     pub capacity: usize,
     pub dims: LayoutDims,
     pub params: Arc<ModelParams>,
@@ -65,6 +73,18 @@ pub struct EngineShared {
     /// (accumulated by sources; cleared by rank 0 inside the pass-start
     /// barrier pair).
     pub expected_dispatch: Vec<AtomicU32>,
+    /// Per-(dst rank, src rank, dst-local expert) dispatch-tile counts for
+    /// the current pass, announced by each source right after gating and
+    /// *before* it dispatches. The destination sizes its dependency
+    /// tables, staging buffers and flag-sweep bounds from these dynamic
+    /// counts instead of the static worst-case capacity — which is what
+    /// keeps `Dropless` passes (whose per-expert tile counts vary wildly
+    /// with gate skew) from paying worst-case bookkeeping. The `Capacity`
+    /// policy keeps its small fixed worst case instead and never waits on
+    /// these counts, preserving full gate/dispatch overlap across ranks.
+    /// Indexed by [`EngineShared::announce_idx`]; cleared by rank 0
+    /// inside the pass-start barrier pair.
+    pub announced_tiles: Vec<AtomicU32>,
     /// Sources that have finished announcing in the current pass.
     pub announced: AtomicU32,
     /// The reusable pass-start barrier. Besides synchronizing the pass,
@@ -84,9 +104,10 @@ impl EngineShared {
         backend: Arc<dyn ComputeBackend>,
         mode: TaskGraphMode,
     ) -> Self {
-        let capacity = cfg.model.capacity(cfg.system.s_rank);
+        let capacity = cfg.model.slot_capacity(cfg.system.s_rank);
         let dims = LayoutDims::from_config(&cfg);
         let ranks = cfg.system.ranks;
+        let e_local = cfg.local_experts();
         Self {
             cfg,
             capacity,
@@ -96,10 +117,17 @@ impl EngineShared {
             backend,
             mode,
             expected_dispatch: (0..ranks).map(|_| AtomicU32::new(0)).collect(),
+            announced_tiles: (0..ranks * ranks * e_local).map(|_| AtomicU32::new(0)).collect(),
             announced: AtomicU32::new(0),
             start: Barrier::new(ranks),
             threads_spawned: AtomicU64::new(0),
         }
+    }
+
+    /// Index into [`announced_tiles`](Self::announced_tiles) for
+    /// (destination rank, source rank, destination-local expert).
+    pub fn announce_idx(&self, dst: usize, src: usize, e_loc: usize) -> usize {
+        (dst * self.cfg.system.ranks + src) * self.cfg.local_experts() + e_loc
     }
 }
 
@@ -224,6 +252,17 @@ struct PassCtx {
     plan: DispatchPlan,
     /// T_phi lookup: (global expert, tile) -> ordinal into `plan.tiles`.
     tphi: HashMap<(u32, u32), u32>,
+    /// Announced inbound dispatch-tile count per (peer, local expert):
+    /// bounds the round-0 flag sweep and sizes the block tables below.
+    incoming_tiles: Vec<u32>,
+    /// Expected combine-tile count per (owner peer, owner-local expert),
+    /// derived from this rank's own plan: bounds the round-1 flag sweep.
+    combine_tiles: Vec<u32>,
+    /// Dense block ordinal base per (peer, local expert): block ids for a
+    /// pass are prefix sums of the *announced* tile counts, so staging and
+    /// dependency tables are sized to the pass's actual work, not to the
+    /// static worst-case capacity.
+    block_base: Vec<u32>,
     slices: Option<Arc<WeightSlices>>,
     mid: Option<Staging>,
     out_stage: Option<Staging>,
@@ -238,8 +277,9 @@ struct PassCtx {
 
 impl PassCtx {
     fn block_id(&self, peer: usize, e_loc: usize, tile: usize) -> usize {
-        let d = &self.shared.dims;
-        (peer * d.e_local + e_loc) * d.tiles_per_expert() + tile
+        let e_local = self.shared.dims.e_local;
+        debug_assert!((tile as u32) < self.incoming_tiles[peer * e_local + e_loc]);
+        (self.block_base[peer * e_local + e_loc] + tile as u32) as usize
     }
 }
 
@@ -332,6 +372,9 @@ impl RankActor {
             for d in &shared.expected_dispatch {
                 d.store(0, Ordering::Release);
             }
+            for counter in &shared.announced_tiles {
+                counter.store(0, Ordering::Release);
+            }
         }
         shared.start.wait();
         let t0 = Instant::now();
@@ -344,54 +387,50 @@ impl RankActor {
             .context("gate")?;
         let routing = route_from_scores(scores, s_rank, &cfg.model, shared.capacity);
         let dropped = routing.dropped;
+        anyhow::ensure!(
+            !cfg.model.policy.is_dropless() || dropped == 0,
+            "rank {rank}: dropless routing dropped {dropped} pairs (slot region undersized)"
+        );
         let plan = dispatch_plan(&routing, cfg.model.bm, |e| cfg.owner_of(e));
 
-        // ---- announce expected dispatch-tile counts --------------------------
-        let mut per_dst = vec![0u32; cfg.system.ranks];
+        // ---- announce dispatch-tile counts (before dispatching) --------------
+        // Per-destination totals drive the self-correcting task bound;
+        // per-(destination, local expert) counts let the destination size
+        // its pass bookkeeping to the actual tile counts.
+        let ranks_n = cfg.system.ranks;
+        let mut per_dst = vec![0u32; ranks_n];
+        let mut per_dst_eloc = vec![0u32; ranks_n * e_local];
         for t in &plan.tiles {
-            per_dst[t.dst as usize] += 1;
+            let dst = t.dst as usize;
+            let e_loc = t.expert as usize - dst * e_local;
+            per_dst[dst] += 1;
+            per_dst_eloc[dst * e_local + e_loc] += 1;
         }
-        for (dst, n) in per_dst.iter().enumerate() {
-            if *n > 0 {
-                shared.expected_dispatch[dst].fetch_add(*n, Ordering::AcqRel);
+        for dst in 0..ranks_n {
+            for el in 0..e_local {
+                let n = per_dst_eloc[dst * e_local + el];
+                if n > 0 {
+                    shared.announced_tiles[shared.announce_idx(dst, rank, el)]
+                        .store(n, Ordering::Release);
+                }
+            }
+            if per_dst[dst] > 0 {
+                shared.expected_dispatch[dst].fetch_add(per_dst[dst], Ordering::AcqRel);
             }
         }
         shared.announced.fetch_add(1, Ordering::AcqRel);
 
-        // ---- build T_phi and the pass context --------------------------------
-        let mut tphi = HashMap::with_capacity(plan.tiles.len());
-        for (i, t) in plan.tiles.iter().enumerate() {
-            tphi.insert((t.expert, t.tile), i as u32);
-        }
-        let m = &cfg.model;
-        let d_cols = (m.d / m.bn) as u32;
-        let h_cols = (m.h / m.bn) as u32;
-        let blocks = cfg.system.ranks * e_local * shared.dims.tiles_per_expert();
-        let my_expected_combine = plan.tiles.len() as u32;
-        let split = shared.mode == TaskGraphMode::Split;
-        self.queue.reopen();
-        let ctx = Arc::new(PassCtx {
-            shared: self.shared.clone(),
-            rank,
-            epoch32,
-            queue: self.queue.clone(),
-            counters: PassCounters::new(),
-            tphi,
-            slices: self.slices.clone(),
-            mid: split.then(|| Staging::new(blocks, m.bm * m.d)),
-            out_stage: split.then(|| Staging::new(blocks, m.bm * m.h)),
-            g0_latch: split.then(|| DependencyTable::new(blocks, d_cols)),
-            g1_latch: split.then(|| DependencyTable::new(blocks, h_cols)),
-            block_rows: (0..blocks).map(|_| AtomicU32::new(0)).collect(),
-            combine_stage: Staging::new(plan.tiles.len(), m.bm * m.h),
-            plan,
-        });
-
         // ---- dispatch (payload-efficient, one-sided, generation-tagged) ------
-        // Runs before the processor doorbell so a dispatch error skips the
-        // epoch cleanly: workers never observe an epoch they'd half-run.
+        // Depends only on this rank's own plan, so it runs before the
+        // (Dropless) announcement wait below — a gate straggler on one
+        // rank never delays another rank's outbound tiles. Receivers may
+        // not have built their pass context yet; flags simply persist on
+        // the heap until their subscriber sweeps them. Runs before the
+        // processor doorbell so a dispatch error skips the epoch cleanly:
+        // workers never observe an epoch they'd half-run.
+        let m = &cfg.model;
         let mut pack = vec![0.0f32; m.bm * h];
-        for t in &ctx.plan.tiles {
+        for t in &plan.tiles {
             for (row, &tok) in t.tokens.iter().enumerate() {
                 pack[row * h..(row + 1) * h]
                     .copy_from_slice(&a[tok as usize * h..(tok as usize + 1) * h]);
@@ -403,6 +442,98 @@ impl RankActor {
                 .put_signal(rank, t.dst as usize, coord, &pack[..t.rows as usize * h], epoch32)
                 .context("dispatch put")?;
         }
+
+        // ---- size pass bookkeeping -------------------------------------------
+        // Dropless: wait for every source's announcement, then size the
+        // dependency tables, staging and flag-sweep bounds from the
+        // announced *dynamic* tile counts — a skewed gate can concentrate
+        // a whole batch on one expert, so the static worst case would be
+        // `roundup(S_r, bM)/bM` tiles per (peer, expert) and worst-case
+        // bookkeeping every pass. Sources announce right after gating and
+        // before any dispatch copy, so the wait is bounded by the slowest
+        // peer's gate.
+        //
+        // Capacity: keep the static `capacity / bM` sizing and do NOT
+        // wait — dispatch overlaps peers' gates exactly as before, so a
+        // gate straggler on one rank never stalls another rank's dispatch
+        // (the bookkeeping worst case is small and fixed in this policy).
+        let pe_slots = ranks_n * e_local;
+        let (incoming_tiles, block_base, blocks) = if cfg.model.policy.is_dropless() {
+            let mut spins = 0u32;
+            while (shared.announced.load(Ordering::Acquire) as usize) < ranks_n {
+                spins = spins.wrapping_add(1);
+                if spins < 64 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+                if spins % 4096 == 0 && t0.elapsed() > WATCHDOG {
+                    panic!(
+                        "rank {rank} wedged waiting for announcements (pass gen {epoch32}): {}/{ranks_n} ranks announced",
+                        shared.announced.load(Ordering::Acquire),
+                    );
+                }
+            }
+            let mut incoming = vec![0u32; pe_slots];
+            let mut base = vec![0u32; pe_slots];
+            let mut blocks = 0u32;
+            for peer in 0..ranks_n {
+                for el in 0..e_local {
+                    let n = shared.announced_tiles[shared.announce_idx(rank, peer, el)]
+                        .load(Ordering::Acquire);
+                    base[peer * e_local + el] = blocks;
+                    incoming[peer * e_local + el] = n;
+                    blocks += n;
+                }
+            }
+            debug_assert_eq!(blocks, shared.expected_dispatch[rank].load(Ordering::Acquire));
+            (incoming, base, blocks)
+        } else {
+            let tpe = shared.dims.tiles_per_expert() as u32;
+            let incoming = vec![tpe; pe_slots];
+            let base = (0..pe_slots as u32).map(|i| i * tpe).collect();
+            (incoming, base, pe_slots as u32 * tpe)
+        };
+        // expected combine tiles per (owner, owner-local expert), from my
+        // own plan: the owner writes results back at the same tile index.
+        let mut combine_tiles = vec![0u32; ranks_n * e_local];
+        for t in &plan.tiles {
+            let owner = t.dst as usize;
+            let el = t.expert as usize - owner * e_local;
+            let idx = owner * e_local + el;
+            combine_tiles[idx] = combine_tiles[idx].max(t.tile + 1);
+        }
+
+        // ---- build T_phi and the pass context --------------------------------
+        let mut tphi = HashMap::with_capacity(plan.tiles.len());
+        for (i, t) in plan.tiles.iter().enumerate() {
+            tphi.insert((t.expert, t.tile), i as u32);
+        }
+        let d_cols = (m.d / m.bn) as u32;
+        let h_cols = (m.h / m.bn) as u32;
+        let blocks = blocks as usize;
+        let my_expected_combine = plan.tiles.len() as u32;
+        let split = shared.mode == TaskGraphMode::Split;
+        self.queue.reopen();
+        let ctx = Arc::new(PassCtx {
+            shared: self.shared.clone(),
+            rank,
+            epoch32,
+            queue: self.queue.clone(),
+            counters: PassCounters::new(),
+            tphi,
+            incoming_tiles,
+            combine_tiles,
+            block_base,
+            slices: self.slices.clone(),
+            mid: split.then(|| Staging::new(blocks, m.bm * m.d)),
+            out_stage: split.then(|| Staging::new(blocks, m.bm * m.h)),
+            g0_latch: split.then(|| DependencyTable::new(blocks, d_cols)),
+            g1_latch: split.then(|| DependencyTable::new(blocks, h_cols)),
+            block_rows: (0..blocks).map(|_| AtomicU32::new(0)).collect(),
+            combine_stage: Staging::new(plan.tiles.len(), m.bm * m.h),
+            plan,
+        });
 
         // ---- wake the resident processors (doorbell, not spawn) --------------
         {
@@ -556,8 +687,14 @@ fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) {
         let mut progressed = false;
         for peer in 0..ranks {
             for e_loc in 0..dims.e_local {
-                for tile in 0..dims.tiles_per_expert() {
-                    // round 0: dispatch packets (token tiles for my experts)
+                let pe = peer * dims.e_local + e_loc;
+                // Sweep bounds: under `Dropless` the round-0 bound is the
+                // pass's announced inbound tile count (the occupied prefix
+                // of a slot region varies per pass); under `Capacity` it
+                // is the fixed `capacity / bM` worst case. The round-1
+                // bound always comes from this rank's own plan.
+                // round 0: dispatch packets (token tiles for my experts)
+                for tile in 0..ctx.incoming_tiles[pe] as usize {
                     let f0 = dims.flag_index(peer, 0, e_loc, tile);
                     if !visited[f0] {
                         if let Some(rows) = shared.heap.poll_epoch(ctx.rank, f0, ctx.epoch32) {
@@ -567,7 +704,9 @@ fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) {
                             decode_dispatch(ctx, peer, e_loc, tile, rows, &mut seq);
                         }
                     }
-                    // round 1: combine packets (results for my tokens)
+                }
+                // round 1: combine packets (results for my tokens)
+                for tile in 0..ctx.combine_tiles[pe] as usize {
                     let f1 = dims.flag_index(peer, 1, e_loc, tile);
                     if !visited[f1] {
                         if let Some(rows) = shared.heap.poll_epoch(ctx.rank, f1, ctx.epoch32) {

@@ -41,10 +41,22 @@ use crate::layout::{Coord, LayoutDims, Write};
 /// low 32 bits hold `rows + 1` — the count of valid rows present in the
 /// guarded tile (the signal carries the payload-efficiency metadata, like
 /// the paper's packet headers).
+///
+/// **Bound:** `rows` must satisfy `rows < u32::MAX` so that `rows + 1`
+/// fits the low 32 bits — otherwise the count would bleed into the epoch
+/// half and corrupt the generation tag. The `+ 1` bias also guarantees a
+/// written flag can never alias `FLAG_EMPTY`, even at epoch 0 with 0
+/// rows. In practice `rows <= bM` (one tile), far below the bound;
+/// [`encode_flag`] debug-asserts it anyway.
 pub const FLAG_EMPTY: u64 = 0;
 
-/// Encode a (pass epoch, valid rows) pair into a signal flag.
+/// Encode a (pass epoch, valid rows) pair into a signal flag. See the
+/// [`FLAG_EMPTY`] docs for the `rows < u32::MAX` packing bound.
 pub fn encode_flag(epoch: u32, rows: usize) -> u64 {
+    debug_assert!(
+        rows < u32::MAX as usize,
+        "rows {rows} overflows the 32-bit valid-row field of the signal flag"
+    );
     ((epoch as u64) << 32) | (rows as u64 + 1)
 }
 
@@ -240,6 +252,23 @@ mod tests {
         assert_eq!(flag_epoch(flag), 1);
         assert_eq!(h.poll_epoch(1, fidx, 1), Some(2));
         assert_eq!(h.read(1, coord, 2), &payload[..]);
+    }
+
+    #[test]
+    fn flag_encoding_roundtrips_and_never_aliases_empty() {
+        for (epoch, rows) in [(0u32, 0usize), (1, 7), (u32::MAX, 12345), (42, u32::MAX as usize - 1)] {
+            let f = encode_flag(epoch, rows);
+            assert_ne!(f, FLAG_EMPTY, "written flag must never read as empty");
+            assert_eq!(flag_epoch(f), epoch);
+            assert_eq!(flag_rows(f), rows);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows the 32-bit valid-row field")]
+    #[cfg(debug_assertions)]
+    fn flag_encoding_rejects_row_overflow() {
+        let _ = encode_flag(1, u32::MAX as usize);
     }
 
     #[test]

@@ -10,6 +10,20 @@
 //! subtraction, ties to the lower expert index, token-order slot
 //! assignment, drops beyond aligned capacity) so the Rust routing agrees
 //! bit-for-tolerance with `ref.py` and the AOT `moe_layer` artifact.
+//!
+//! **Routing policy.** Under [`RoutingPolicy::Capacity`] the per-(source,
+//! expert) buffer is fixed and over-capacity pairs are dropped, so a
+//! skewed gate silently changes the computed function. Under
+//! [`RoutingPolicy::Dropless`] (MegaBlocks-style dropless MoE via
+//! variable-sized blocks) the caller passes the policy's worst-case
+//! [`slot_capacity`](ModelConfig::slot_capacity) and no pair can ever
+//! overflow: [`dispatch_plan`] builds a *variable-length* tile list per
+//! expert sized to the actual routed counts — full bM tiles plus one
+//! partially-filled tail tile, row counts carried in the signal flag —
+//! so quality-preserving routing costs no padded traffic.
+//!
+//! [`RoutingPolicy::Capacity`]: crate::config::RoutingPolicy::Capacity
+//! [`RoutingPolicy::Dropless`]: crate::config::RoutingPolicy::Dropless
 
 use crate::config::ModelConfig;
 
@@ -209,19 +223,25 @@ impl DispatchPlan {
 }
 
 /// Build the dispatch plan from a routing table. `owner_of(e)` maps a
-/// global expert to its owning rank; `bm` is the tile height; `active_only`
-/// payload efficiency means experts with zero routed tokens produce no
-/// traffic at all.
+/// global expert to its owning rank; `bm` is the tile height.
+///
+/// The tile list is **variable-length per expert**: slots are assigned
+/// densely in arrival order (0..load), so expert `e`'s tiles are exactly
+/// `ceil(load_e / bM)` chunks — every tile full except a possibly
+/// partially-filled tail, whose row count travels in the signal flag.
+/// Nothing here assumes the fixed `capacity / bM` tile count of the
+/// Capacity policy, which is what makes the same plan builder serve
+/// `Dropless` routing unchanged. Experts with zero routed tokens produce
+/// no traffic at all (payload efficiency).
 pub fn dispatch_plan(
     routing: &Routing,
     bm: usize,
     owner_of: impl Fn(usize) -> usize,
 ) -> DispatchPlan {
     let e = routing.e;
-    let tiles_per_expert = routing.capacity / bm;
     let mut tiles: Vec<DispatchTile> = Vec::new();
-    // group routes by (expert, tile); routes are already slot-ordered per
-    // expert because slots are assigned in arrival order.
+    // group routes by expert; routes are already slot-ordered per expert
+    // because slots are assigned densely in arrival order.
     let mut by_expert: Vec<Vec<&Route>> = vec![Vec::new(); e];
     for r in &routing.routes {
         by_expert[r.expert as usize].push(r);
@@ -231,15 +251,10 @@ pub fn dispatch_plan(
         if rs.is_empty() {
             continue; // payload efficiency: inactive expert, no traffic
         }
-        for t in 0..tiles_per_expert {
-            let lo = (t * bm) as u32;
-            let hi = ((t + 1) * bm) as u32;
-            let in_tile: Vec<&&Route> = rs.iter().filter(|r| r.slot >= lo && r.slot < hi).collect();
-            if in_tile.is_empty() {
-                continue;
-            }
-            let tokens: Vec<u32> = in_tile.iter().map(|r| r.token).collect();
-            let weights: Vec<f32> = in_tile.iter().map(|r| r.combine_weight).collect();
+        for (t, chunk) in rs.chunks(bm).enumerate() {
+            debug_assert_eq!(chunk[0].slot as usize, t * bm, "slots dense per expert");
+            let tokens: Vec<u32> = chunk.iter().map(|r| r.token).collect();
+            let weights: Vec<f32> = chunk.iter().map(|r| r.combine_weight).collect();
             sent_rows += tokens.len();
             tiles.push(DispatchTile {
                 expert: ex as u32,
@@ -265,7 +280,15 @@ mod tests {
     use crate::util::prng::Rng;
 
     fn model(e: usize, k: usize, bm: usize) -> ModelConfig {
-        ModelConfig { h: 16, d: 32, e, k, bm, bn: 8, capacity_factor: 1.0 }
+        ModelConfig {
+            h: 16,
+            d: 32,
+            e,
+            k,
+            bm,
+            bn: 8,
+            policy: crate::config::RoutingPolicy::Capacity(1.0),
+        }
     }
 
     #[test]
@@ -356,6 +379,34 @@ mod tests {
         assert!(plan.tiles.iter().all(|t| t.rows > 0));
         // inactive experts generate zero traffic
         assert!(plan.tiles.iter().all(|t| t.expert != 1 && t.expert != 3));
+    }
+
+    #[test]
+    fn dropless_plan_builds_variable_tile_lists() {
+        let mut m = model(2, 1, 4);
+        m.policy = crate::config::RoutingPolicy::Dropless;
+        // 10 tokens, all to expert 0: dropless keeps every pair
+        let s = 10;
+        let mut scores = Vec::new();
+        for _ in 0..s {
+            scores.extend([0.9f32, 0.1]);
+        }
+        let cap = m.slot_capacity(s); // roundup(10, 4) = 12
+        assert_eq!(cap, 12);
+        let routing = route_from_scores(scores, s, &m, cap);
+        assert_eq!(routing.dropped, 0, "dropless keeps all pairs");
+        assert_eq!(routing.routes.len(), s);
+        let plan = dispatch_plan(&routing, m.bm, |_| 0);
+        // variable tile list: two full tiles + one partially-filled tail
+        assert_eq!(plan.tiles.len(), 3);
+        assert_eq!(
+            plan.tiles.iter().map(|t| t.rows).collect::<Vec<_>>(),
+            vec![4, 4, 2],
+            "last tile partially filled"
+        );
+        assert_eq!(plan.tiles.iter().map(|t| t.tile).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(plan.sent_rows, s, "only valid rows travel");
+        assert_eq!(plan.padded_rows, cap, "one active expert x slot region");
     }
 
     #[test]

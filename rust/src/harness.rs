@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::config::Config;
+use crate::config::{Config, RoutingPolicy};
 use crate::coordinator::{MoeEngine, TaskGraphMode};
 use crate::expert::{generate_tokens, ModelParams};
 use crate::layout;
@@ -247,6 +247,77 @@ pub fn persistent_vs_respawn(
 }
 
 // ---------------------------------------------------------------------------
+// Routing policy A/B: dropless vs fixed capacity (real execution)
+// ---------------------------------------------------------------------------
+
+/// One routing-policy arm measured on the real engine.
+#[derive(Clone, Debug)]
+pub struct PolicyPoint {
+    pub policy: &'static str,
+    /// Over-capacity (token, expert) pairs dropped in the measured pass
+    /// (must be 0 for the dropless arm).
+    pub dropped: usize,
+    /// Fraction of padded dispatch traffic avoided.
+    pub payload_savings: f64,
+    /// Dispatch tiles shipped across all ranks.
+    pub tiles_sent: usize,
+    pub wall_secs: f64,
+    /// Symmetric-heap bytes per rank (the memory cost of the policy).
+    pub heap_bytes: f64,
+}
+
+/// A/B the routing policies on the real (native-backend) engine: same
+/// preset, same seed, same inputs — only the dispatch contract changes.
+/// `Capacity` arms may drop over-capacity pairs (computing a different
+/// function under skew); the `Dropless` arm must report zero drops while
+/// shipping only the rows that actually routed.
+pub fn routing_policy_ab(preset: &str, seed: u64) -> Result<(String, Vec<PolicyPoint>)> {
+    let arms: [(&'static str, RoutingPolicy); 3] = [
+        ("capacity f=1.0", RoutingPolicy::Capacity(1.0)),
+        ("capacity f=2.0", RoutingPolicy::Capacity(2.0)),
+        ("dropless", RoutingPolicy::Dropless),
+    ];
+    let mut points = Vec::new();
+    let mut t = Table::new(&["policy", "dropped", "payload saved", "tiles", "wall", "heap/rank"]);
+    for (name, policy) in arms {
+        let mut cfg = Config::preset(preset)?;
+        cfg.model.policy = policy;
+        cfg.validate()?;
+        let params = Arc::new(ModelParams::generate(&cfg, seed));
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+        let inputs: Vec<Vec<f32>> =
+            (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, seed, r)).collect();
+        let engine =
+            MoeEngine::start(cfg.clone(), params, backend, TaskGraphMode::Fused)?;
+        engine.submit(&inputs)?.wait()?; // warmup
+        let res = engine.submit(&inputs)?.wait()?;
+        let m = &res.metrics;
+        let p = PolicyPoint {
+            policy: name,
+            dropped: m.total_dropped(),
+            payload_savings: m.payload_savings(),
+            tiles_sent: m.ranks.iter().map(|r| r.tiles_sent).sum(),
+            wall_secs: m.wall_secs,
+            heap_bytes: engine.heap_bytes_per_rank(),
+        };
+        t.row(&[
+            p.policy.to_string(),
+            p.dropped.to_string(),
+            format!("{:.1}%", p.payload_savings * 100.0),
+            p.tiles_sent.to_string(),
+            fmt_time(p.wall_secs),
+            fmt_bytes(p.heap_bytes),
+        ]);
+        points.push(p);
+        engine.shutdown();
+    }
+    Ok((
+        format!("## Routing policy A/B — dropless vs fixed capacity ({preset})\n\n{}", t.render()),
+        points,
+    ))
+}
+
+// ---------------------------------------------------------------------------
 // Table 2 / Fig 15: straggler delay
 // ---------------------------------------------------------------------------
 
@@ -284,7 +355,7 @@ pub fn table3() -> (String, Vec<layout::MemoryReport>) {
         k: 1,
         bm: 128,
         bn: 64,
-        capacity_factor: 1.0,
+        policy: crate::config::RoutingPolicy::Capacity(1.0),
     };
     let mut reports = Vec::new();
     let mut t = Table::new(&["Tokens", "Experts", "EC", "max(bM,EC)", "Size(L) MB", "Bookkeeping MB", "Total MB"]);

@@ -31,7 +31,12 @@ pub struct LayoutDims {
     pub p: usize,
     /// Local experts E on this rank.
     pub e_local: usize,
-    /// Aligned expert capacity C (multiple of bM).
+    /// Aligned per-(peer, expert) slot-region size C (multiple of bM).
+    /// Under `RoutingPolicy::Capacity` this is the fixed expert capacity;
+    /// under `Dropless` it is the worst-case `roundup(S_r, bM)` region,
+    /// of which a pass only ever touches the tiles its dispatch plan
+    /// actually announced (variable tile-slot usage — the heap no longer
+    /// assumes `capacity / bM` occupied tiles per source).
     pub c: usize,
     /// Embedding dimension H.
     pub h: usize,
@@ -55,7 +60,7 @@ impl LayoutDims {
         Self {
             p: cfg.system.ranks,
             e_local: cfg.local_experts(),
-            c: cfg.model.capacity(cfg.system.s_rank),
+            c: cfg.model.slot_capacity(cfg.system.s_rank),
             h: cfg.model.h,
             bm: cfg.model.bm,
         }
@@ -177,7 +182,7 @@ impl MemoryReport {
 /// token count T of the table (per-GPU sequence in the paper's setup);
 /// EC = T/E · f as in the paper's table (k is folded into f there).
 pub fn memory_report(tokens: usize, experts: usize, model: &ModelConfig, world: usize) -> MemoryReport {
-    let ec = (tokens as f64 / experts as f64 * model.capacity_factor).ceil() as usize;
+    let ec = (tokens as f64 / experts as f64 * model.capacity_factor()).ceil() as usize;
     let c_aligned = ec.max(model.bm).div_ceil(model.bm) * model.bm;
     // L holds E_total cells across the P peers (P * E_local == E):
     let e_local = experts.div_ceil(world);
@@ -292,7 +297,15 @@ mod tests {
     fn size_l_matches_paper_4x_rule() {
         // Paper: Size(L) ~= 4 * Size(T) when S/E >= bM. H=1024 f32 makes a
         // token 4KB — Table 3's Size(T) convention.
-        let m = ModelConfig { h: 1024, d: 2048, e: 16, k: 1, bm: 128, bn: 64, capacity_factor: 1.0 };
+        let m = ModelConfig {
+            h: 1024,
+            d: 2048,
+            e: 16,
+            k: 1,
+            bm: 128,
+            bn: 64,
+            policy: crate::config::RoutingPolicy::Capacity(1.0),
+        };
         let rep = memory_report(4096, 16, &m, 8);
         let size_t = 4096.0 * 1024.0 * 4.0;
         assert_eq!(rep.ec, 256);
@@ -307,7 +320,15 @@ mod tests {
 
     #[test]
     fn memory_total_grows_predictably() {
-        let m = ModelConfig { h: 1024, d: 2048, e: 16, k: 1, bm: 128, bn: 64, capacity_factor: 1.0 };
+        let m = ModelConfig {
+            h: 1024,
+            d: 2048,
+            e: 16,
+            k: 1,
+            bm: 128,
+            bn: 64,
+            policy: crate::config::RoutingPolicy::Capacity(1.0),
+        };
         let r4k = memory_report(4096, 16, &m, 8);
         let r8k = memory_report(8192, 16, &m, 8);
         // doubling tokens doubles L

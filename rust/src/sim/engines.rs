@@ -243,7 +243,11 @@ impl Ctx {
             ffn_tile_flops: m.ffn_flops(m.bm),
             combine_tile_flops: 2.0 * m.bm as f64 * m.h as f64,
             gate_secs: m.gate_flops(s.s_rank) / (flops * s.processors as f64),
-            capacity: m.capacity(s.s_rank),
+            // policy-aware: the padded-collective baselines ship whatever
+            // slot region the routing policy implies (worst case under
+            // `Dropless`), while the flash engine's payload-efficient
+            // dispatch only ever pays for actual rows
+            capacity: m.slot_capacity(s.s_rank),
             bm: m.bm,
         }
     }

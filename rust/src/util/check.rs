@@ -1,12 +1,82 @@
 //! Proptest-style randomized property checking (proptest is unavailable
-//! offline).
+//! offline), plus the conformance oracle the checks compare against.
 //!
 //! `forall(seed, cases, gen, prop)` runs `prop` over `cases` random inputs
 //! drawn by `gen`; on failure it retries with progressively simpler inputs
 //! (re-drawing with a shrunken "size" hint) and reports the smallest
 //! reproducing seed so failures are replayable.
+//!
+//! [`dense_reference_moe`] is a dense, per-token, drop-free MoE forward —
+//! the function a `RoutingPolicy::Dropless` engine pass must equal (the
+//! conformance suite in `rust/tests/properties.rs` asserts agreement to
+//! 1e-5 under fuzzed shapes and skews).
 
+use crate::config::Config;
+use crate::expert::ModelParams;
 use crate::util::prng::Rng;
+
+/// Dense per-token reference MoE over one rank's (S, H) tokens: gate via
+/// softmax(a·Wg), top-k with ties to the lower expert, then for every
+/// routed pair the full expert FFN applied to the single token row,
+/// combined with weights normalized over the token's top-k mass. No
+/// capacity, no drops, no tiling — every routed (token, expert) pair's
+/// weight mass is preserved by construction, which is exactly the
+/// contract `RoutingPolicy::Dropless` promises. Accumulation runs in the
+/// same reduction order as the blocked GEMM kernels (ascending over the
+/// shared dimension, bias after), so agreement with the engine is tight.
+pub fn dense_reference_moe(cfg: &Config, params: &ModelParams, a: &[f32]) -> Vec<f32> {
+    let m = &cfg.model;
+    let (h, d, e, k) = (m.h, m.d, m.e, m.k);
+    let s = a.len() / h;
+    debug_assert_eq!(a.len(), s * h);
+    // gate: logits = a·Wg, softmax rows, top-k (same contract as gate.rs)
+    let mut scores = vec![0.0f32; s * e];
+    for i in 0..s {
+        let ai = &a[i * h..(i + 1) * h];
+        for j in 0..e {
+            let mut acc = 0.0f32;
+            for (p, &av) in ai.iter().enumerate() {
+                acc += av * params.wg[p * e + j];
+            }
+            scores[i * e + j] = acc;
+        }
+    }
+    crate::gate::softmax_rows(&mut scores, e);
+    let (idx, w) = crate::gate::topk_rows(&scores, e, k);
+
+    let mut out = vec![0.0f32; s * h];
+    let mut mid = vec![0.0f32; d];
+    let mut y = vec![0.0f32; h];
+    for i in 0..s {
+        let ai = &a[i * h..(i + 1) * h];
+        let denom: f32 = w[i * k..(i + 1) * k].iter().sum();
+        for j in 0..k {
+            let ex = &params.experts[idx[i * k + j] as usize];
+            // mid = relu(a_i·W1 + b1)
+            for (c, mv) in mid.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (p, &av) in ai.iter().enumerate() {
+                    acc += av * ex.w1[p * d + c];
+                }
+                acc += ex.b1[c];
+                *mv = if acc < 0.0 { 0.0 } else { acc };
+            }
+            // y = mid·W2 + b2
+            for (c, yv) in y.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (p, &mv) in mid.iter().enumerate() {
+                    acc += mv * ex.w2[p * h + c];
+                }
+                *yv = acc + ex.b2[c];
+            }
+            let cw = w[i * k + j] / denom;
+            for (o, &yv) in out[i * h..(i + 1) * h].iter_mut().zip(&y) {
+                *o += cw * yv;
+            }
+        }
+    }
+    out
+}
 
 /// Context handed to generators; `size` shrinks during failure minimization.
 pub struct Gen<'a> {

@@ -75,7 +75,7 @@ pub fn synth_routing(
 
 /// Build the full per-rank workload set for a config.
 pub fn cluster_workload(cfg: &Config, skew: Skew, seed: u64) -> Vec<RankWorkload> {
-    let capacity = cfg.model.capacity(cfg.system.s_rank);
+    let capacity = cfg.model.slot_capacity(cfg.system.s_rank);
     let base = Rng::new(seed);
     (0..cfg.system.ranks)
         .map(|r| {

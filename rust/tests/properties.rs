@@ -1,17 +1,23 @@
 //! Property-based tests (via `util::check::forall`) over the paper's key
 //! invariants: Theorem 3.1 write-conflict freedom, gate/capacity/routing
-//! invariants, scheduler work conservation, and task-bound termination.
+//! invariants, scheduler work conservation, task-bound termination, and
+//! the `RoutingPolicy::Dropless` conformance contract (engine output ==
+//! dense per-token reference, zero drops, full weight-mass preservation).
 
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 
-use flashdmoe::config::ModelConfig;
+use flashdmoe::config::{Config, CostModel, ModelConfig, RoutingPolicy, SystemConfig};
 use flashdmoe::coordinator::scheduler::TaskQueue;
+use flashdmoe::coordinator::{MoeEngine, TaskGraphMode};
+use flashdmoe::expert::{generate_tokens, ModelParams};
 use flashdmoe::gate::{dispatch_plan, route_from_scores};
 use flashdmoe::layout::{conflict_free, write_is_valid, Coord, LayoutDims, Write, BUFFERS, ROUNDS};
+use flashdmoe::runtime::{ComputeBackend, NativeBackend};
 use flashdmoe::task::{Task, TaskBound, TaskType};
-use flashdmoe::util::check::{forall, Gen};
+use flashdmoe::util::check::{dense_reference_moe, forall, Gen};
 use flashdmoe::util::prng::Rng;
+use flashdmoe::util::stats::max_abs_diff;
 
 // ---------------------------------------------------------------------------
 // Theorem 3.1: random *valid* writes from distinct sources never overlap
@@ -114,7 +120,7 @@ fn random_routing(g: &mut Gen) -> (ModelConfig, usize, Vec<f32>, usize) {
     let bm = g.choose(&[2usize, 4, 8]);
     let s = bm * g.int(1, 16);
     let capacity = bm * g.int(1, 8);
-    let model = ModelConfig { h: 4, d: 8, e, k, bm, bn: 4, capacity_factor: 1.0 };
+    let model = ModelConfig { h: 4, d: 8, e, k, bm, bn: 4, policy: RoutingPolicy::Capacity(1.0) };
     let mut rng = Rng::new(g.int(0, u32::MAX as usize) as u64);
     let mut scores = rng.normal_vec(s * e, 1.0);
     flashdmoe::gate::softmax_rows(&mut scores, e);
@@ -189,6 +195,117 @@ fn dispatch_plan_partitions_routes() {
                 }
                 if t.tokens.len() != t.weights.len() {
                     return Err("tokens/weights arity mismatch".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Dropless conformance: zero drops, weight mass preserved, dense-equal
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dropless_routing_keeps_every_pair_and_all_weight_mass() {
+    forall(
+        0xD801,
+        300,
+        |g| random_routing(g),
+        |(model, s, scores, _)| {
+            let mut m = model.clone();
+            m.policy = RoutingPolicy::Dropless;
+            let cap = m.slot_capacity(*s);
+            let r = route_from_scores(scores.clone(), *s, &m, cap);
+            if r.dropped != 0 {
+                return Err(format!("dropless routing dropped {}", r.dropped));
+            }
+            if r.routes.len() != s * m.k {
+                return Err(format!("kept {} of {} pairs", r.routes.len(), s * m.k));
+            }
+            // every token's combine weight mass is fully preserved
+            let mut per_token = vec![0.0f32; *s];
+            for x in &r.routes {
+                per_token[x.token as usize] += x.combine_weight;
+            }
+            if let Some(w) = per_token.iter().find(|w| (**w - 1.0).abs() > 1e-4) {
+                return Err(format!("token weight mass {w} != 1"));
+            }
+            // the variable tile list covers every pair exactly once, full
+            // tiles followed by one partially-filled tail per expert
+            let plan = dispatch_plan(&r, m.bm, |e| e % 2);
+            let covered: usize = plan.tiles.iter().map(|t| t.tokens.len()).sum();
+            if covered != r.routes.len() {
+                return Err(format!("plan covers {covered}, routes {}", r.routes.len()));
+            }
+            for (e, load) in r.expert_load.iter().enumerate() {
+                let ntiles =
+                    plan.tiles.iter().filter(|t| t.expert as usize == e).count();
+                if ntiles != (*load as usize).div_ceil(m.bm) {
+                    return Err(format!(
+                        "expert {e}: load {load} but {ntiles} tiles (bm {})",
+                        m.bm
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dropless_engine_matches_dense_reference_under_fuzzed_skew() {
+    // End-to-end conformance: under `Dropless`, a real engine pass over
+    // fuzzed (ranks × experts × skewed gate) configurations must compute
+    // the same function as the dense per-token reference MoE — every
+    // routed token's weight mass preserved — and report zero drops.
+    // Engine-spawning cases are heavier than pure-math properties, so the
+    // fleet is small; shapes stay tiny to keep the suite fast.
+    forall(
+        0xD802,
+        6,
+        |g| {
+            let ranks = g.choose(&[1usize, 2]);
+            let e = ranks * g.choose(&[2usize, 4]);
+            let k = 1 + g.int(0, (e - 1).min(2));
+            let bm = g.choose(&[4usize, 8]);
+            let s_rank = bm * g.int(1, 4);
+            let seed = g.int(0, 1 << 16) as u64;
+            (ranks, e, k, bm, s_rank, seed)
+        },
+        |&(ranks, e, k, bm, s_rank, seed)| {
+            let cfg = Config {
+                model: ModelConfig { h: 8, d: 8, e, k, bm, bn: 4, policy: RoutingPolicy::Dropless },
+                system: SystemConfig { ranks, nodes: 1, s_rank, processors: 2 },
+                cost: CostModel::h100_nvlink(),
+            };
+            cfg.validate().map_err(|err| err.to_string())?;
+            let params = Arc::new(ModelParams::generate(&cfg, seed));
+            let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+            // skew the gate: bias every token along one embedding lane so
+            // routing concentrates on a few experts — the regime where the
+            // Capacity policy would drop and change the function
+            let inputs: Vec<Vec<f32>> = (0..ranks)
+                .map(|r| {
+                    let mut v = generate_tokens(&cfg, seed, r);
+                    for x in v.iter_mut().step_by(cfg.model.h) {
+                        *x += 2.5;
+                    }
+                    v
+                })
+                .collect();
+            let engine =
+                MoeEngine::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused)
+                    .map_err(|err| err.to_string())?;
+            let res = engine.forward(&inputs).map_err(|err| err.to_string())?;
+            if res.metrics.total_dropped() != 0 {
+                return Err(format!("dropless pass dropped {}", res.metrics.total_dropped()));
+            }
+            for (r, out) in res.outputs.iter().enumerate() {
+                let want = dense_reference_moe(&cfg, &params, &inputs[r]);
+                let diff = max_abs_diff(out, &want);
+                if diff > 1e-5 {
+                    return Err(format!("rank {r}: engine vs dense reference diff {diff}"));
                 }
             }
             Ok(())
