@@ -32,20 +32,28 @@ fn main() -> anyhow::Result<()> {
     let params = Arc::new(ModelParams::generate(&cfg, 42));
     println!("params: {} ({} experts)", params.num_params(), params.num_experts());
 
-    // 3. Compute backend: native blocked GEMM, or the AOT Pallas kernels
-    //    executed via PJRT.
+    // 3. Compute backend: native GEMM — on the packed persistent-weight
+    //    hot path by default (weights re-laid into cache-contiguous NR
+    //    panels once at engine start; `cfg.set("packed", "false")` A/Bs
+    //    the unpacked baseline) — or the AOT Pallas kernels via PJRT.
     let backend: Arc<dyn ComputeBackend> = if use_xla {
         let store = ArtifactStore::load(&ArtifactStore::default_dir(), "default")?;
         println!("xla backend: compiled {} artifacts in {}", store.kernel_names().len(),
             fmt_time(store.compile_secs));
         Arc::new(XlaBackend::new(store))
     } else {
-        Arc::new(NativeBackend::from_config(&cfg))
+        let native = NativeBackend::from_config(&cfg);
+        println!("native backend: {} (packed={})", native.name(), native.is_packed());
+        Arc::new(native)
     };
 
     // 4. The engine. Started ONCE: every rank's subscriber + processor
-    //    actors come up resident and park on doorbells. Fused mode = one
-    //    FFN task per tile; Split mode = the paper's GEMM0->GEMM1 chain.
+    //    actors come up resident and park on doorbells (and the backend
+    //    packs its weights — the only weight work of the lifetime). The
+    //    `processors` knob sizes each rank's work-stealing pool: one
+    //    deque per worker, idle workers steal, nobody serializes on a
+    //    central queue lock. Fused mode = one FFN task per tile; Split
+    //    mode = the paper's GEMM0->GEMM1 chain.
     let engine = MoeEngine::start(cfg.clone(), params, backend, TaskGraphMode::Fused)?;
     println!("symmetric heap L: {} per rank", fmt_bytes(engine.heap_bytes_per_rank()));
 
@@ -62,13 +70,14 @@ fn main() -> anyhow::Result<()> {
         let out = handle.wait()?;
         let m = &out.metrics;
         println!(
-            "pass {}: {:>9} | util {:>5.1}% | {} tiles sent | payload saved {:.1}%",
+            "pass {}: {:>9} | util {:>5.1}% | {} tiles sent | payload saved {:.1}% | {} steals",
             m.epoch,
             fmt_time(m.wall_secs),
             m.utilization() * 100.0,
             m.ranks.iter().map(|r| r.tiles_sent).sum::<usize>(),
             m.ranks.iter().map(|r| r.payload_savings()).sum::<f64>()
                 / m.ranks.len() as f64 * 100.0,
+            m.ranks.iter().map(|r| r.steals).sum::<u32>(),
         );
         // outputs[r] is rank r's (S_r, H) output matrix
         assert_eq!(out.outputs.len(), cfg.system.ranks);

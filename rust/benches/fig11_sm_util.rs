@@ -1,6 +1,22 @@
 //! Fig 5a / Fig 11 — SM utilization during the forward pass
-//! (T=8K, E=64, 2 GPUs), Nsight-style "SM active" metric.
+//! (T=8K, E=64, 2 GPUs), Nsight-style "SM active" metric — plus the
+//! real-execution hot-path A/B: packed vs unpacked compute backend on
+//! the resident engine, with the work-stealing pool's queue-contention
+//! stats (steals, max depth) and the pack-once audit. Results land in
+//! `BENCH_pr3_hotpath.json` (section `engine_ab`).
 fn main() {
     let (text, _) = flashdmoe::harness::fig11(42).unwrap();
     println!("{text}");
+
+    let passes: usize =
+        std::env::var("PASSES").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let (text, points) = flashdmoe::harness::hotpath_ab("default", passes, 42).unwrap();
+    println!("{text}");
+    flashdmoe::harness::update_bench_json(
+        "BENCH_pr3_hotpath.json",
+        "engine_ab",
+        flashdmoe::harness::hotpath_json(&points),
+    )
+    .expect("write bench json");
+    println!("wrote BENCH_pr3_hotpath.json (section engine_ab)");
 }

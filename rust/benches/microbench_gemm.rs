@@ -1,15 +1,25 @@
 //! Microbench: tile-level compute on both backends — the calibration
 //! source for the simulator's cost model and the §Perf L3 hot-path
 //! baseline. Prints GFLOP/s per tile shape for the native blocked GEMM
-//! and (when artifacts exist) the XLA/PJRT Pallas kernels.
+//! (packed persistent-weight path by default) and (when artifacts exist)
+//! the XLA/PJRT Pallas kernels, then A/Bs the packed vs unpacked GEMM
+//! kernels per shape and records the result in `BENCH_pr3_hotpath.json`
+//! (section `gemm_ab`).
+//!
+//! `PERF_SMOKE=1` runs the CI perf gate instead: a pinned small shape,
+//! best-of-3 A/B, non-zero exit if the packed kernel is slower than the
+//! unpacked baseline on the same run.
 
 use std::time::Instant;
 
 use flashdmoe::config::Config;
 use flashdmoe::expert::ExpertParams;
+use flashdmoe::harness;
 use flashdmoe::runtime::{ArtifactStore, ComputeBackend, NativeBackend, XlaBackend};
 use flashdmoe::util::prng::Rng;
 use flashdmoe::util::stats::{fmt_time, Table};
+
+const BENCH_JSON: &str = "BENCH_pr3_hotpath.json";
 
 fn bench_backend(name: &str, cfg: &Config, be: &dyn ComputeBackend, iters: usize, t: &mut Table) {
     let m = &cfg.model;
@@ -24,7 +34,9 @@ fn bench_backend(name: &str, cfg: &Config, be: &dyn ComputeBackend, iters: usize
     let mut out = vec![0.0f32; m.bm * m.h];
     let mut scratch = vec![0.0f32; m.bm * m.d];
 
-    be.ffn_tile(&x, &ex, 0, &mut out, &mut scratch).unwrap(); // warmup
+    // warmup (on the packed backend this is also where the one-time
+    // expert pack happens, so the timed loop sees only steady state)
+    be.ffn_tile(&x, &ex, 0, &mut out, &mut scratch).unwrap();
     let t0 = Instant::now();
     for _ in 0..iters {
         be.ffn_tile(&x, &ex, 0, &mut out, &mut scratch).unwrap();
@@ -52,13 +64,58 @@ fn bench_backend(name: &str, cfg: &Config, be: &dyn ComputeBackend, iters: usize
     ]);
 }
 
+/// CI perf gate: pinned small shape, best-of-3, fail if packed loses.
+fn perf_smoke() -> ! {
+    let shape = (128usize, 256usize, 512usize); // pinned: (m, k, n)
+    let iters = 20;
+    let mut best: Option<flashdmoe::harness::GemmAbPoint> = None;
+    for round in 0..3 {
+        let (_, points) = harness::gemm_backend_ab(&[shape], iters);
+        let p = points.into_iter().next().expect("one shape");
+        println!(
+            "perf-smoke round {round}: unpacked {:.2} GFLOP/s, packed {:.2} GFLOP/s ({:.2}x)",
+            p.unpacked_gflops,
+            p.packed_gflops,
+            p.speedup()
+        );
+        if best.as_ref().map(|b| p.speedup() > b.speedup()).unwrap_or(true) {
+            best = Some(p);
+        }
+    }
+    // persist the round the gate judged (the best one), so the artifact
+    // and the pass/fail decision can never disagree
+    let best = best.expect("three rounds");
+    let best_speedup = best.speedup();
+    harness::update_bench_json(
+        BENCH_JSON,
+        "gemm_ab",
+        harness::gemm_ab_json(std::slice::from_ref(&best)),
+    )
+    .expect("write bench json");
+    if best_speedup < 1.0 {
+        eprintln!(
+            "PERF SMOKE FAILED: packed GEMM slower than unpacked baseline \
+             (best speedup {best_speedup:.2}x < 1.0x at {shape:?})"
+        );
+        std::process::exit(1);
+    }
+    println!("perf-smoke ok: packed >= unpacked (best {best_speedup:.2}x), {BENCH_JSON} written");
+    std::process::exit(0);
+}
+
 fn main() {
+    if std::env::var("PERF_SMOKE").map(|v| v == "1").unwrap_or(false) {
+        perf_smoke();
+    }
     let iters: usize = std::env::var("ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(30);
     let mut t = Table::new(&["backend", "tile (bM,H,D)", "ffn_tile", "GFLOP/s", "gate"]);
+    let mut shapes: Vec<(usize, usize, usize)> = Vec::new();
     for preset in ["tiny", "default", "perf"] {
         let cfg = Config::preset(preset).unwrap();
         let native = NativeBackend::from_config(&cfg);
         bench_backend(&format!("native/{preset}"), &cfg, &native, iters, &mut t);
+        let unpacked = NativeBackend::with_packed(&cfg, false);
+        bench_backend(&format!("native-unpacked/{preset}"), &cfg, &unpacked, iters, &mut t);
         let dir = ArtifactStore::default_dir();
         if preset != "perf" && ArtifactStore::available(&dir) {
             if let Ok(store) = ArtifactStore::load(&dir, preset) {
@@ -66,7 +123,17 @@ fn main() {
                 bench_backend(&format!("xla/{preset}"), &cfg, &xla, iters, &mut t);
             }
         }
+        // the two GEMM shapes of the fused FFN at this preset's tile size
+        let m = &cfg.model;
+        shapes.push((m.bm, m.h, m.d));
+        shapes.push((m.bm, m.d, m.h));
     }
     println!("## Microbench — tile compute per backend (calibration source)\n");
     println!("{}", t.render());
+
+    let (text, points) = harness::gemm_backend_ab(&shapes, iters);
+    println!("{text}");
+    harness::update_bench_json(BENCH_JSON, "gemm_ab", harness::gemm_ab_json(&points))
+        .expect("write bench json");
+    println!("wrote {BENCH_JSON} (section gemm_ab, {} shapes)", points.len());
 }

@@ -103,6 +103,15 @@ pub struct SystemConfig {
     pub s_rank: usize,
     /// Processor actors (worker threads / "SM" slots) per rank.
     pub processors: usize,
+    /// Compute-backend toggle: `true` (default) runs expert GEMMs on the
+    /// packed persistent-weight path (weights re-laid into NR panels once
+    /// at `MoeEngine::start`, bias+activation fused into the single C
+    /// write-back); `false` keeps the row-major unpacked kernels. One
+    /// flag A/Bs the two on identical inputs (`cfg.set("packed", ...)`,
+    /// `harness::gemm_backend_ab`, `harness::hotpath_ab`). Numerics are
+    /// identical either way — the packed kernel replays the same f32
+    /// accumulation order — so the toggle is purely a performance knob.
+    pub packed: bool,
 }
 
 /// Hardware cost model for the simulator, calibrated by `flashdmoe
@@ -292,7 +301,7 @@ impl Config {
                     bn: 32,
                     policy: RoutingPolicy::Capacity(1.0),
                 },
-                system: SystemConfig { ranks: 2, nodes: 1, s_rank: 128, processors: 4 },
+                system: SystemConfig { ranks: 2, nodes: 1, s_rank: 128, processors: 4, packed: true },
                 cost: CostModel::h100_nvlink(),
             },
             "default" => Config {
@@ -305,7 +314,7 @@ impl Config {
                     bn: 64,
                     policy: RoutingPolicy::Capacity(1.0),
                 },
-                system: SystemConfig { ranks: 4, nodes: 1, s_rank: 512, processors: 4 },
+                system: SystemConfig { ranks: 4, nodes: 1, s_rank: 512, processors: 4, packed: true },
                 cost: CostModel::h100_nvlink(),
             },
             "perf" => Config {
@@ -318,7 +327,7 @@ impl Config {
                     bn: 64,
                     policy: RoutingPolicy::Capacity(1.0),
                 },
-                system: SystemConfig { ranks: 4, nodes: 1, s_rank: 1024, processors: 4 },
+                system: SystemConfig { ranks: 4, nodes: 1, s_rank: 1024, processors: 4, packed: true },
                 cost: CostModel::h100_nvlink(),
             },
             // Paper §4: 8xH100, E up to 128, T up to 16K, H=2048, D=2048.
@@ -332,7 +341,7 @@ impl Config {
                     bn: 64,
                     policy: RoutingPolicy::Capacity(1.0),
                 },
-                system: SystemConfig { ranks: 8, nodes: 1, s_rank: 8192, processors: 132 },
+                system: SystemConfig { ranks: 8, nodes: 1, s_rank: 8192, processors: 132, packed: true },
                 cost: CostModel::h100_nvlink(),
             },
             // Paper Fig 5/11: 2xA100 NVLink, E=64, T=8K.
@@ -346,7 +355,7 @@ impl Config {
                     bn: 64,
                     policy: RoutingPolicy::Capacity(1.0),
                 },
-                system: SystemConfig { ranks: 2, nodes: 1, s_rank: 8192, processors: 108 },
+                system: SystemConfig { ranks: 2, nodes: 1, s_rank: 8192, processors: 108, packed: true },
                 cost: CostModel::h100_nvlink(),
             },
             // Paper §F: 4 nodes x 4 A100, 1 local expert, 25 GB/s NIC.
@@ -362,7 +371,7 @@ impl Config {
                     bn: 64,
                     policy: RoutingPolicy::Capacity(1.0),
                 },
-                system: SystemConfig { ranks: 16, nodes: 4, s_rank: 1024, processors: 108 },
+                system: SystemConfig { ranks: 16, nodes: 4, s_rank: 1024, processors: 108, packed: true },
                 cost: CostModel { nic_buffer: 32.0 * 1024.0 * 1024.0, ..CostModel::h100_nvlink() },
             },
             other => bail!("unknown preset '{other}' (try tiny/default/perf/paper_h100x8/paper_a100x2/paper_multinode)"),
@@ -422,6 +431,13 @@ impl Config {
             "nodes" => self.system.nodes = u()?,
             "s_rank" | "tokens" => self.system.s_rank = u()?,
             "processors" => self.system.processors = u()?,
+            "packed" => {
+                self.system.packed = match value {
+                    "1" | "true" | "on" => true,
+                    "0" | "false" | "off" => false,
+                    other => bail!("packed={other}: expected true/false/1/0/on/off"),
+                }
+            }
             "launch_overhead" => self.cost.launch_overhead = f()?,
             "flops_per_processor" => self.cost.flops_per_processor = f()?,
             "intra_bw" => self.cost.intra_bw = f()?,
@@ -567,6 +583,20 @@ mod tests {
             assert!(cfg.validate().is_err(), "factor {b} must fail validation");
         }
         cfg.set("capacity_factor", "0.5").unwrap();
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn packed_toggle_parses_and_defaults_on() {
+        let mut cfg = Config::preset("tiny").unwrap();
+        assert!(cfg.system.packed, "packed hot path is the default");
+        cfg.set("packed", "false").unwrap();
+        assert!(!cfg.system.packed);
+        cfg.set("packed", "1").unwrap();
+        assert!(cfg.system.packed);
+        cfg.set("packed", "off").unwrap();
+        assert!(!cfg.system.packed);
+        assert!(cfg.set("packed", "maybe").is_err());
         cfg.validate().unwrap();
     }
 

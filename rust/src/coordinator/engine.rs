@@ -128,6 +128,10 @@ impl MoeEngine {
         mode: TaskGraphMode,
     ) -> Result<Self> {
         cfg.validate()?;
+        // One-time weight preparation (packed panels / literal uploads):
+        // after this, steady-state passes do zero per-pass weight work —
+        // the backend's pack counter stays flat for the engine lifetime.
+        backend.prepare(&params)?;
         let dims = LayoutDims::from_config(&cfg);
         let heap = Arc::new(SymmetricHeap::new(dims, cfg.system.ranks_per_node()));
         let ranks = cfg.system.ranks;

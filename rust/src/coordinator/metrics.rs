@@ -44,8 +44,13 @@ pub struct RankMetrics {
     /// One-sided bytes received, split by locality.
     pub bytes_in_local: u64,
     pub bytes_in_remote: u64,
-    /// Peak ready-queue depth (scheduling pressure).
+    /// Peak ready-pool depth (scheduling pressure).
     pub max_queue_depth: usize,
+    /// Cross-deque task migrations in the work-stealing pool this pass
+    /// (includes the subscriber's help-out steals) — the queue-contention
+    /// stat: high steals mean the round-robin deal was imbalanced or a
+    /// processor ran dry while a peer was backed up.
+    pub steals: u32,
 }
 
 impl RankMetrics {

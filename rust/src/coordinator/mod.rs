@@ -26,8 +26,9 @@
 //! Module map (mirrors Fig. 6, plus the engine front end):
 //! * [`engine`]    — the public persistent [`MoeEngine`]: epoch-tagged
 //!   `submit`/`wait`, double-buffered pass slots, shutdown/join.
-//! * [`scheduler`] — the ready queue + interrupt plumbing (Alg. 3),
-//!   reusable across passes (`stop_all` parks a pass, `reopen` re-arms).
+//! * [`scheduler`] — the per-processor work-stealing ready pool +
+//!   interrupt plumbing (Alg. 3), reusable across passes (`stop_all`
+//!   parks a pass, `reopen` re-arms).
 //! * [`rank`]      — one rank's resident actor group: subscriber decode
 //!   loop (Alg. 4), processor execution loop (Alg. 2), dispatch (Alg. 1).
 //! * [`moe`]       — [`DistributedMoE`], the original one-call operator

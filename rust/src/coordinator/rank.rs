@@ -13,11 +13,14 @@
 //! variable-length — tile lists), dispatches tiles with one-sided
 //! put+signal (stamped with the pass generation), then polls the
 //! symmetric heap's signal flags for packets of *this* generation,
-//! decodes them into task descriptors, feeds the work-conserving ready
-//! queue, and interrupts the processors once the self-correcting task
-//! bound is met. Processor
+//! decodes them into task descriptors, deals the work round-robin into
+//! the per-processor work-stealing pool (and turns thief itself when the
+//! sweep idles — the help-out path), and interrupts the processors once
+//! the self-correcting task bound is met. Processor
 //! workers execute FFN/GEMM/Combine tasks via the configured
-//! [`ComputeBackend`] and write combine packets straight back to the
+//! [`ComputeBackend`] — on the packed persistent-weight GEMM path by
+//! default (weights panel-packed once at engine start, never per pass) —
+//! and write combine packets straight back to the
 //! originating rank — no collective, no host round-trip, and no thread
 //! spawned anywhere on the steady-state path.
 //!
@@ -134,6 +137,14 @@ impl EngineShared {
 /// Column-sliced weights for split-mode GEMM tasks: `w1c[e][col]` is the
 /// (H, bN) stripe of local expert `e`'s W1, row-major. Pass-invariant, so
 /// a rank actor builds them once at spawn and reuses them every pass.
+///
+/// Invariant: when the backend answers [`ComputeBackend::packed_split_tiles`]
+/// `true`, the `w1c`/`w2c` entries are **empty sentinels** — the backend
+/// serves those tiles from its packed panel cache, which
+/// `MoeEngine::start` populated via `prepare()` *before* any rank actor
+/// spawns. The backend rejects an empty slice with a descriptive error if
+/// that cache were ever missing, so a mis-wired construction path fails
+/// loudly on its first tile rather than computing garbage.
 struct WeightSlices {
     w1c: Vec<Vec<Vec<f32>>>,
     b1c: Vec<Vec<Vec<f32>>>,
@@ -157,15 +168,28 @@ impl WeightSlices {
     fn build(shared: &EngineShared, rank: usize) -> Self {
         let m = &shared.cfg.model;
         let e_local = shared.cfg.local_experts();
+        // When the backend serves split-mode tiles straight from its
+        // packed panel cache, the w1c/w2c column copies would be dead
+        // weight (the one packed copy already covers every column tile,
+        // and retaining sliced duplicates would roughly double per-rank
+        // weight memory) — keep only the bias slices, which the packed
+        // path still consumes; the backend rejects empty weight slices
+        // if its cache were ever missing.
+        let skip_weight_copies = shared.backend.packed_split_tiles();
         let mut w1c = Vec::new();
         let mut b1c = Vec::new();
         let mut w2c = Vec::new();
         let mut b2c = Vec::new();
         for el in 0..e_local {
             let ex = &shared.params.experts[rank * e_local + el];
-            w1c.push(slice_cols(&ex.w1, m.h, m.d, m.bn));
+            if skip_weight_copies {
+                w1c.push(vec![Vec::new(); m.d / m.bn]);
+                w2c.push(vec![Vec::new(); m.h / m.bn]);
+            } else {
+                w1c.push(slice_cols(&ex.w1, m.h, m.d, m.bn));
+                w2c.push(slice_cols(&ex.w2, m.d, m.h, m.bn));
+            }
             b1c.push(ex.b1.chunks(m.bn).map(|c| c.to_vec()).collect());
-            w2c.push(slice_cols(&ex.w2, m.d, m.h, m.bn));
             b2c.push(ex.b2.chunks(m.bn).map(|c| c.to_vec()).collect());
         }
         Self { w1c, b1c, w2c, b2c }
@@ -323,7 +347,7 @@ impl RankActor {
     /// Spawn rank `rank`'s processor workers (the only thread creation
     /// this rank ever does) and build its pass-invariant state.
     pub fn spawn(shared: Arc<EngineShared>, rank: usize) -> Self {
-        let queue = Arc::new(TaskQueue::new());
+        let queue = Arc::new(TaskQueue::new(shared.cfg.system.processors));
         let slices = (shared.mode == TaskGraphMode::Split)
             .then(|| Arc::new(WeightSlices::build(&shared, rank)));
         let processors = shared.cfg.system.processors;
@@ -379,6 +403,7 @@ impl RankActor {
         shared.start.wait();
         let t0 = Instant::now();
         let (bytes_local_0, bytes_remote_0) = shared.heap.bytes_in(rank);
+        let steals_0 = self.queue.steals();
 
         // ---- FusedGate (Alg. 1 line 1) ---------------------------------------
         let scores = shared
@@ -593,6 +618,7 @@ impl RankActor {
             bytes_in_local: bytes_local_1 - bytes_local_0,
             bytes_in_remote: bytes_remote_1 - bytes_remote_0,
             max_queue_depth: self.queue.max_depth(),
+            steals: self.queue.steals() - steals_0,
         };
         Ok(RankOutput { out, metrics })
     }
@@ -652,7 +678,7 @@ fn worker_main(bell: Arc<ProcDoorbell>, slot: usize) {
                 st = bell.cv.wait(st).unwrap();
             }
         };
-        let result = processor_loop(ctx.as_ref());
+        let result = processor_loop(ctx.as_ref(), slot);
         {
             let mut st = bell.state.lock().unwrap();
             st.results[slot] = Some(result);
@@ -673,6 +699,10 @@ fn worker_main(bell: Arc<ProcDoorbell>, slot: usize) {
 /// progress diagnostic instead of hanging the process.
 const WATCHDOG: std::time::Duration = std::time::Duration::from_secs(120);
 
+/// Idle sweeps before the subscriber turns thief (prioritizes decode:
+/// fresh flags beat lending a hand for the first few empty sweeps).
+const HELP_OUT_AFTER: u32 = 8;
+
 fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) {
     let shared = &*ctx.shared;
     let dims = &shared.dims;
@@ -683,6 +713,9 @@ fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) {
     let mut seq = 0u32;
     let mut idle_spins = 0u32;
     let mut last_progress = Instant::now();
+    // Help-out buffers, allocated on the first steal only (most sweeps
+    // never need them).
+    let mut help: Option<(Vec<f32>, Vec<f32>)> = None;
     loop {
         let mut progressed = false;
         for peer in 0..ranks {
@@ -747,6 +780,30 @@ fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) {
             idle_spins = 0;
             last_progress = Instant::now();
         } else {
+            // Help-out path (Alg. 4's OS actor lending a hand): the sweep
+            // found no fresh flags, so if the ready pool still holds work,
+            // steal a task instead of spinning — one more core on the
+            // GEMMs exactly when dispatch is the bottleneck's tail.
+            if idle_spins >= HELP_OUT_AFTER {
+                if let Some(task) = ctx.queue.steal() {
+                    let m = &shared.cfg.model;
+                    let (scratch, tile_out) = help.get_or_insert_with(|| {
+                        (vec![0.0f32; m.bm * m.d.max(m.h)], vec![0.0f32; m.bm * m.h.max(m.bn)])
+                    });
+                    if let Err(err) = execute_task(ctx, &task, None, scratch, tile_out) {
+                        // fail the pass loudly, exactly like the watchdog:
+                        // rank_main converts the unwind into a pass error
+                        ctx.queue.stop_all();
+                        panic!(
+                            "rank {} subscriber help-out failed on {task:?}: {err:#}",
+                            ctx.rank
+                        );
+                    }
+                    idle_spins = 0;
+                    last_progress = Instant::now();
+                    continue;
+                }
+            }
             idle_spins += 1;
             if idle_spins < 64 {
                 std::hint::spin_loop();
@@ -815,16 +872,18 @@ fn decode_dispatch(ctx: &PassCtx, peer: usize, e_loc: usize, tile: usize, rows: 
     }
 }
 
-/// Processor actor (Alg. 2): pop → execute → notify, until interrupted.
-fn processor_loop(ctx: &PassCtx) -> Result<()> {
+/// Processor actor (Alg. 2): pop (own deque, else steal) → execute →
+/// notify, until interrupted. `slot` identifies this worker's deque in
+/// the work-stealing pool.
+fn processor_loop(ctx: &PassCtx, slot: usize) -> Result<()> {
     let shared = &*ctx.shared;
     let m = &shared.cfg.model;
     let (h, d) = (m.h, m.d);
     let mut scratch = vec![0.0f32; m.bm * d.max(h)];
     let mut tile_out = vec![0.0f32; m.bm * h.max(m.bn)];
-    while let Some(task) = ctx.queue.pop() {
+    while let Some(task) = ctx.queue.pop(slot) {
         let t0 = Instant::now();
-        execute_task(ctx, &task, &mut scratch, &mut tile_out)
+        execute_task(ctx, &task, Some(slot), &mut scratch, &mut tile_out)
             .with_context(|| format!("rank {} task {task:?}", ctx.rank))?;
         ctx.counters
             .busy_nanos
@@ -833,7 +892,17 @@ fn processor_loop(ctx: &PassCtx) -> Result<()> {
     Ok(())
 }
 
-fn execute_task(ctx: &PassCtx, task: &Task, scratch: &mut [f32], tile_out: &mut [f32]) -> Result<()> {
+/// Execute one task. `slot` is the executing processor's deque (its
+/// spawned children are owner-pushed there, LIFO, while the intermediate
+/// block is cache-hot); `None` means the subscriber is helping out via a
+/// steal, so children go through the external round-robin path instead.
+fn execute_task(
+    ctx: &PassCtx,
+    task: &Task,
+    slot: Option<usize>,
+    scratch: &mut [f32],
+    tile_out: &mut [f32],
+) -> Result<()> {
     let shared = &*ctx.shared;
     let m = &shared.cfg.model;
     let (h, bm, bn) = (m.h, m.bm, m.bn);
@@ -872,12 +941,16 @@ fn execute_task(ctx: &PassCtx, task: &Task, scratch: &mut [f32], tile_out: &mut 
                 &sl.w1c[e_loc][col],
                 &sl.b1c[e_loc][col],
                 &mut tile_out[..bm * bn],
+                ctx.rank * e_local + e_loc,
+                col,
             )?;
             let block = ctx.block_id(peer, e_loc, tile);
             ctx.mid.as_ref().unwrap().write_stripe(block, bm, m.d, col, bn, &tile_out[..bm * bn]);
             ctx.counters.gemm_tasks.fetch_add(1, Ordering::Relaxed);
             if ctx.g0_latch.as_ref().unwrap().complete_one(block) {
-                // full (bM, D) intermediate ready -> unlock the GEMM1 chain
+                // full (bM, D) intermediate ready -> unlock the GEMM1 chain.
+                // Owner-push onto this processor's deque: the block it just
+                // finished is cache-hot, and idle peers steal the surplus.
                 let tasks: Vec<Task> = (0..(m.h / bn) as u32)
                     .map(|c2| Task {
                         task_type: TaskType::Gemm1,
@@ -886,7 +959,10 @@ fn execute_task(ctx: &PassCtx, task: &Task, scratch: &mut [f32], tile_out: &mut 
                         ..*task
                     })
                     .collect();
-                ctx.queue.push_batch(tasks);
+                match slot {
+                    Some(s) => ctx.queue.push_batch_local(s, tasks),
+                    None => ctx.queue.push_batch(tasks),
+                }
             }
         }
         TaskType::Gemm1 => {
@@ -899,6 +975,8 @@ fn execute_task(ctx: &PassCtx, task: &Task, scratch: &mut [f32], tile_out: &mut 
                 &sl.w2c[e_loc][col],
                 &sl.b2c[e_loc][col],
                 &mut tile_out[..bm * bn],
+                ctx.rank * e_local + e_loc,
+                col,
             )?;
             let out_stage = ctx.out_stage.as_ref().unwrap();
             out_stage.write_stripe(block, bm, h, col, bn, &tile_out[..bm * bn]);

@@ -1,134 +1,258 @@
-//! The Scheduler actor (paper Alg. 3): a work-conserving ready queue.
+//! The Scheduler actor (paper Alg. 3): a decentralized, work-stealing
+//! ready pool.
 //!
-//! The paper's scheduler warp sweeps doorbells and signals processor
-//! blocks; the CPU analog is a blocking MPMC queue — processors park on a
-//! condvar when idle and are woken the instant work exists, which is
-//! exactly the work-conservation property (no processor idles while the
-//! queue is non-empty). `stop_all` is the scheduler's interrupt broadcast
-//! (Alg. 3 lines 33–34).
+//! The paper's scheduler decentralizes dispatch across processor blocks;
+//! the CPU analog is **per-processor deques with Chase-Lev-style
+//! stealing** instead of one central `Mutex<VecDeque>`:
 //!
-//! Queues are resident: one `TaskQueue` serves a rank for the whole
-//! engine lifetime. `stop_all` ends one pass (processors drain and park);
-//! [`TaskQueue::reopen`] re-arms the queue for the next pass without
-//! reallocating or re-spawning anything.
+//! * Each processor slot owns a deque. The owner pushes and pops at the
+//!   **bottom** (LIFO — a Gemm0's freshly-unlocked Gemm1 children run
+//!   while their intermediate block is still cache-hot); thieves steal
+//!   from the **top** (FIFO — the oldest, least-cache-relevant work
+//!   migrates). Each deque has its own lock, so two processors only ever
+//!   contend when one is actually stealing from the other — dispatch no
+//!   longer serializes on a single queue lock.
+//! * External producers (the subscriber decoding packets) deal tasks
+//!   round-robin across the deques, so a burst of decoded tiles starts on
+//!   many processors at once without any of them touching a shared queue.
+//! * Processors **park only on global emptiness**: a pop scans its own
+//!   deque, then every victim, and only then blocks on the pool condvar.
+//!   Wakeups are counted — a batch of n tasks wakes `min(n, parked)`
+//!   processors via that many `notify_one`s, never a blanket
+//!   `notify_all` (the thundering-herd fix: 2 tasks no longer wake 16
+//!   parked workers to fight over 2 pops).
+//!
+//! Pass semantics are unchanged from the centralized queue: `stop_all`
+//! is the scheduler's interrupt broadcast (Alg. 3 lines 33–34) — pops
+//! drain every deque, then return `None`; [`TaskQueue::reopen`] re-arms
+//! the pool for the next pass without reallocating or re-spawning
+//! anything (the pool is resident for the engine lifetime). The
+//! pushed/popped totals stay cumulative; `max_depth` (global high-water)
+//! resets per pass; `steals` counts cross-deque migrations — the
+//! queue-contention stat reported by the PR-3 hot-path benches.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 
 use crate::task::Task;
 
-/// Blocking ready queue shared by one rank's actors.
+/// Soft per-deque pre-allocation: deques start with this capacity so the
+/// steady-state pass never grows them (a pass's per-processor share of
+/// tasks is far below this for every preset; `VecDeque` grows safely if
+/// a pathological pass exceeds it).
+const DEQUE_CAPACITY: usize = 256;
+
+/// Work-stealing ready pool shared by one rank's actors.
 pub struct TaskQueue {
-    inner: Mutex<QueueState>,
+    /// One deque per processor slot (owner: that slot; thieves: everyone).
+    deques: Vec<Mutex<VecDeque<Task>>>,
+    /// Tasks currently resident across all deques. Incremented *before* a
+    /// task becomes visible in a deque and decremented *after* it is
+    /// taken, so `len == 0` proves global emptiness — the only state in
+    /// which a pop may park (or, post-`stop_all`, return `None`).
+    len: AtomicUsize,
+    /// Parked-or-parking processors; producers wake `min(n, parked)`.
+    parked: AtomicUsize,
+    stopped: AtomicBool,
+    /// Guards the condvar sleep; all queue state lives in the atomics and
+    /// the sharded deque locks, so this lock is only taken on the
+    /// park/wake edge — never on the push/pop fast path.
+    park: Mutex<()>,
     cv: Condvar,
     pushed: AtomicU32,
     popped: AtomicU32,
-    /// High-water mark of queue depth (scheduling pressure metric).
+    /// Cross-deque migrations (successful steals): the contention metric.
+    steals: AtomicU32,
+    /// High-water mark of global depth (scheduling pressure metric).
     max_depth: AtomicUsize,
-}
-
-struct QueueState {
-    tasks: VecDeque<Task>,
-    stopped: bool,
-}
-
-impl Default for TaskQueue {
-    fn default() -> Self {
-        Self::new()
-    }
+    /// Round-robin cursor for external (subscriber) pushes.
+    next_rr: AtomicUsize,
 }
 
 impl TaskQueue {
-    pub fn new() -> Self {
+    /// A pool with one deque per processor slot (`workers >= 1`).
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
         Self {
-            inner: Mutex::new(QueueState { tasks: VecDeque::new(), stopped: false }),
+            deques: (0..workers)
+                .map(|_| Mutex::new(VecDeque::with_capacity(DEQUE_CAPACITY)))
+                .collect(),
+            len: AtomicUsize::new(0),
+            parked: AtomicUsize::new(0),
+            stopped: AtomicBool::new(false),
+            park: Mutex::new(()),
             cv: Condvar::new(),
             pushed: AtomicU32::new(0),
             popped: AtomicU32::new(0),
+            steals: AtomicU32::new(0),
             max_depth: AtomicUsize::new(0),
+            next_rr: AtomicUsize::new(0),
         }
     }
 
-    /// Enqueue one ready task and wake one parked processor.
-    pub fn push(&self, t: Task) {
-        let mut st = self.inner.lock().unwrap();
-        st.tasks.push_back(t);
-        let depth = st.tasks.len();
-        drop(st);
-        self.pushed.fetch_add(1, Ordering::Relaxed);
-        self.max_depth.fetch_max(depth, Ordering::Relaxed);
-        self.cv.notify_one();
+    /// Deques in the pool (== processor slots).
+    pub fn workers(&self) -> usize {
+        self.deques.len()
     }
 
-    /// Enqueue a batch (single lock acquisition) and wake enough workers.
+    /// Enqueue one ready task (external producer): deal it round-robin
+    /// and wake at most one parked processor.
+    pub fn push(&self, t: Task) {
+        let slot = self.next_rr.fetch_add(1, Ordering::Relaxed) % self.deques.len();
+        self.insert(slot, t);
+        self.wake(1);
+    }
+
+    /// Enqueue a batch (external producer): deal round-robin so the burst
+    /// starts on many processors at once, then wake `min(n, parked)`.
     pub fn push_batch(&self, ts: impl IntoIterator<Item = Task>) {
-        let mut st = self.inner.lock().unwrap();
-        let mut n = 0u32;
+        let mut n = 0usize;
         for t in ts {
-            st.tasks.push_back(t);
+            let slot = self.next_rr.fetch_add(1, Ordering::Relaxed) % self.deques.len();
+            self.insert(slot, t);
             n += 1;
         }
-        let depth = st.tasks.len();
-        drop(st);
+        if n > 0 {
+            self.wake(n);
+        }
+    }
+
+    /// Enqueue a batch produced *by* processor `slot` (e.g. the Gemm1
+    /// children a finished Gemm0 column unlocks): owner-push onto its own
+    /// bottom — uncontended unless a thief is mid-steal — and wake peers
+    /// that may have parked while this slot was busy.
+    pub fn push_batch_local(&self, slot: usize, ts: impl IntoIterator<Item = Task>) {
+        let mut n = 0usize;
+        for t in ts {
+            self.insert(slot % self.deques.len(), t);
+            n += 1;
+        }
+        if n > 0 {
+            // the pushing processor will pop its own bottom next, so peers
+            // only need waking for the surplus
+            self.wake(n.saturating_sub(1));
+        }
+    }
+
+    /// All inserts land at the deque *bottom* (Chase-Lev discipline): the
+    /// owner's pop_back takes the newest task, thieves' pop_front always
+    /// migrate the oldest — for external and owner pushes alike.
+    fn insert(&self, slot: usize, t: Task) {
+        // len goes up before the task is visible so a concurrent pop can
+        // never drive it below zero, and a parking processor that reads
+        // len > 0 under the park lock is guaranteed to find the task on
+        // its rescan (the producer's deque insert completes first).
+        let depth = self.len.fetch_add(1, Ordering::SeqCst) + 1;
+        self.max_depth.fetch_max(depth, Ordering::Relaxed);
+        self.pushed.fetch_add(1, Ordering::Relaxed);
+        self.deques[slot].lock().unwrap().push_back(t);
+    }
+
+    /// Wake up to `n` parked processors with counted `notify_one`s (the
+    /// thundering-herd fix — never `notify_all` for a 2-task batch).
+    fn wake(&self, n: usize) {
         if n == 0 {
             return;
         }
-        self.pushed.fetch_add(n, Ordering::Relaxed);
-        self.max_depth.fetch_max(depth, Ordering::Relaxed);
-        if n == 1 {
+        let parked = self.parked.load(Ordering::SeqCst);
+        if parked == 0 {
+            return;
+        }
+        let _guard = self.park.lock().unwrap();
+        for _ in 0..n.min(parked) {
             self.cv.notify_one();
-        } else {
-            self.cv.notify_all();
         }
     }
 
-    /// Blocking pop; returns `None` only after `stop_all` with an empty
-    /// queue (processors drain remaining work before exiting).
-    pub fn pop(&self) -> Option<Task> {
-        let mut st = self.inner.lock().unwrap();
-        loop {
-            if let Some(t) = st.tasks.pop_front() {
+    /// Take a task as processor `slot`: own bottom first (LIFO,
+    /// cache-hot children), then steal a victim's top (FIFO). `None`
+    /// means nothing runnable *right now* — callers park via [`pop`].
+    fn try_take(&self, slot: usize) -> Option<Task> {
+        let n = self.deques.len();
+        let own = slot % n;
+        if let Some(t) = self.deques[own].lock().unwrap().pop_back() {
+            self.len.fetch_sub(1, Ordering::SeqCst);
+            self.popped.fetch_add(1, Ordering::Relaxed);
+            return Some(t);
+        }
+        for i in 1..n {
+            let victim = (own + i) % n;
+            if let Some(t) = self.deques[victim].lock().unwrap().pop_front() {
+                self.len.fetch_sub(1, Ordering::SeqCst);
                 self.popped.fetch_add(1, Ordering::Relaxed);
+                self.steals.fetch_add(1, Ordering::Relaxed);
                 return Some(t);
             }
-            if st.stopped {
-                return None;
+        }
+        None
+    }
+
+    /// Blocking pop for processor `slot`; parks only on global emptiness
+    /// and returns `None` only after `stop_all` with every deque drained.
+    pub fn pop(&self, slot: usize) -> Option<Task> {
+        loop {
+            if let Some(t) = self.try_take(slot) {
+                return Some(t);
             }
-            st = self.cv.wait(st).unwrap();
+            // Publish intent-to-park *before* re-checking len: a producer
+            // increments len before reading `parked`, so either it sees us
+            // and notifies, or we see its len increment here and rescan.
+            self.parked.fetch_add(1, Ordering::SeqCst);
+            let guard = self.park.lock().unwrap();
+            if self.len.load(Ordering::SeqCst) == 0 {
+                if self.stopped.load(Ordering::SeqCst) {
+                    self.parked.fetch_sub(1, Ordering::SeqCst);
+                    return None;
+                }
+                let _unused = self.cv.wait(guard).unwrap();
+            }
+            self.parked.fetch_sub(1, Ordering::SeqCst);
         }
     }
 
-    /// Non-blocking pop (used by the subscriber's help-out path).
-    pub fn try_pop(&self) -> Option<Task> {
-        let mut st = self.inner.lock().unwrap();
-        let t = st.tasks.pop_front();
-        if t.is_some() {
-            self.popped.fetch_add(1, Ordering::Relaxed);
+    /// Non-blocking steal from any deque (the subscriber's help-out
+    /// path: while its flag sweep is idle it lends a hand as a thief).
+    pub fn steal(&self) -> Option<Task> {
+        for dq in &self.deques {
+            if let Some(t) = dq.lock().unwrap().pop_front() {
+                self.len.fetch_sub(1, Ordering::SeqCst);
+                self.popped.fetch_add(1, Ordering::Relaxed);
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(t);
+            }
         }
-        t
+        None
     }
 
     /// Interrupt broadcast: wake everyone; pops drain then return `None`.
     pub fn stop_all(&self) {
-        self.inner.lock().unwrap().stopped = true;
+        self.stopped.store(true, Ordering::SeqCst);
+        let _guard = self.park.lock().unwrap();
         self.cv.notify_all();
     }
 
-    /// Re-arm a stopped queue for the next pass. The caller must have
+    /// Re-arm a stopped pool for the next pass. The caller must have
     /// observed all consumers park (the rank actor waits for its
     /// processors' pass-done latch before reopening). Resets the per-pass
-    /// depth high-water mark; push/pop totals stay cumulative.
+    /// depth high-water mark; push/pop/steal totals stay cumulative.
     pub fn reopen(&self) {
-        let mut st = self.inner.lock().unwrap();
-        debug_assert!(st.tasks.is_empty(), "reopening a queue with undrained tasks");
-        st.stopped = false;
-        drop(st);
+        debug_assert_eq!(self.len.load(Ordering::SeqCst), 0, "reopening with undrained tasks");
+        debug_assert!(
+            self.deques.iter().all(|d| d.lock().unwrap().is_empty()),
+            "reopening with undrained deques"
+        );
+        self.stopped.store(false, Ordering::SeqCst);
         self.max_depth.store(0, Ordering::Relaxed);
     }
 
     pub fn counts(&self) -> (u32, u32) {
         (self.pushed.load(Ordering::Relaxed), self.popped.load(Ordering::Relaxed))
+    }
+
+    /// Cumulative cross-deque steals (contention/imbalance metric).
+    pub fn steals(&self) -> u32 {
+        self.steals.load(Ordering::Relaxed)
     }
 
     pub fn max_depth(&self) -> usize {
@@ -140,6 +264,7 @@ impl TaskQueue {
 mod tests {
     use super::*;
     use crate::task::{Task, TaskType};
+    use std::sync::atomic::AtomicU32;
     use std::sync::Arc;
 
     fn task(seq: u32) -> Task {
@@ -147,30 +272,32 @@ mod tests {
     }
 
     #[test]
-    fn fifo_order_single_consumer() {
-        let q = TaskQueue::new();
+    fn single_worker_delivers_everything_then_drains() {
+        let q = TaskQueue::new(1);
         for i in 0..5 {
             q.push(task(i));
         }
-        for i in 0..5 {
-            assert_eq!(q.pop().unwrap().seq, i);
-        }
+        let mut got: Vec<u32> = (0..5).map(|_| q.pop(0).unwrap().seq).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
         q.stop_all();
-        assert!(q.pop().is_none());
+        assert!(q.pop(0).is_none());
     }
 
     #[test]
     fn every_task_consumed_exactly_once_under_contention() {
-        let q = Arc::new(TaskQueue::new());
+        let workers = 8;
+        let q = Arc::new(TaskQueue::new(workers));
+        assert_eq!(q.workers(), workers);
         let n_tasks = 10_000u32;
         let consumed = Arc::new(AtomicU32::new(0));
         let mut handles = Vec::new();
-        for _ in 0..8 {
+        for slot in 0..workers {
             let q = q.clone();
             let consumed = consumed.clone();
             handles.push(std::thread::spawn(move || {
                 let mut seen = Vec::new();
-                while let Some(t) = q.pop() {
+                while let Some(t) = q.pop(slot) {
                     seen.push(t.seq);
                     consumed.fetch_add(1, Ordering::Relaxed);
                 }
@@ -190,36 +317,130 @@ mod tests {
     }
 
     #[test]
+    fn local_pushes_are_stolen_by_idle_workers() {
+        // worker 0 never pops; everything it produces locally must migrate
+        // to the other workers via steals
+        let workers = 4;
+        let q = Arc::new(TaskQueue::new(workers));
+        let n_tasks = 64u32;
+        q.push_batch_local(0, (0..n_tasks).map(task));
+        let mut handles = Vec::new();
+        for slot in 1..workers {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(t) = q.pop(slot) {
+                    got.push(t.seq);
+                }
+                got
+            }));
+        }
+        // wait until the thieves drain everything, then stop
+        while q.counts().1 < n_tasks {
+            std::thread::yield_now();
+        }
+        q.stop_all();
+        let mut all: Vec<u32> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n_tasks).collect::<Vec<_>>());
+        assert_eq!(q.steals(), n_tasks, "every delivery crossed deques");
+    }
+
+    #[test]
+    fn owner_pops_its_own_bottom_lifo() {
+        let q = TaskQueue::new(2);
+        q.push_batch_local(0, (0..3).map(task));
+        // owner sees its freshest child first (LIFO bottom)
+        assert_eq!(q.pop(0).unwrap().seq, 2);
+        assert_eq!(q.pop(0).unwrap().seq, 1);
+        // a thief would have taken the oldest: steal() pops the top
+        q.push_batch_local(0, (10..12).map(task));
+        assert_eq!(q.steal().unwrap().seq, 0, "thief takes the oldest task");
+    }
+
+    #[test]
     fn stop_drains_pending_work() {
-        let q = TaskQueue::new();
+        let q = TaskQueue::new(3);
         q.push_batch((0..3).map(task));
         q.stop_all();
-        // all 3 must still be deliverable post-stop
-        assert!(q.pop().is_some());
-        assert!(q.pop().is_some());
-        assert!(q.pop().is_some());
-        assert!(q.pop().is_none());
+        // all 3 must still be deliverable post-stop, from any slot
+        assert!(q.pop(0).is_some());
+        assert!(q.pop(1).is_some());
+        assert!(q.pop(2).is_some());
+        assert!(q.pop(0).is_none());
     }
 
     #[test]
-    fn reopen_rearms_a_stopped_queue() {
-        let q = TaskQueue::new();
+    fn reopen_rearms_a_stopped_pool() {
+        let q = TaskQueue::new(2);
         q.push(task(0));
         q.stop_all();
-        assert!(q.pop().is_some(), "drain before park");
-        assert!(q.pop().is_none(), "pass 1 over");
+        assert!(q.pop(0).is_some(), "drain before park");
+        assert!(q.pop(0).is_none(), "pass 1 over");
         q.reopen();
         q.push(task(1));
-        assert_eq!(q.pop().unwrap().seq, 1, "pass 2 delivers");
+        assert_eq!(q.pop(1).unwrap().seq, 1, "pass 2 delivers (any slot)");
         assert_eq!(q.max_depth(), 1, "depth high-water is per pass");
         q.stop_all();
-        assert!(q.pop().is_none());
+        assert!(q.pop(0).is_none());
     }
 
     #[test]
-    fn max_depth_tracks_pressure() {
-        let q = TaskQueue::new();
+    fn max_depth_tracks_global_pressure() {
+        let q = TaskQueue::new(4);
         q.push_batch((0..7).map(task));
-        assert_eq!(q.max_depth(), 7);
+        assert_eq!(q.max_depth(), 7, "global depth, not per-deque");
+        let (pushed, _) = q.counts();
+        assert_eq!(pushed, 7);
+    }
+
+    #[test]
+    fn subscriber_steal_helps_out_without_a_slot() {
+        let q = TaskQueue::new(2);
+        assert!(q.steal().is_none(), "empty pool steals nothing");
+        q.push_batch((0..4).map(task));
+        let mut got = Vec::new();
+        while let Some(t) = q.steal() {
+            got.push(t.seq);
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        assert_eq!(q.steals(), 4);
+    }
+
+    #[test]
+    fn parked_workers_wake_on_late_pushes() {
+        // regression for lost-wakeup bugs: workers park on an empty pool,
+        // then tasks arrive in small batches (the counted-notify path)
+        let workers = 4;
+        let q = Arc::new(TaskQueue::new(workers));
+        let consumed = Arc::new(AtomicU32::new(0));
+        let mut handles = Vec::new();
+        for slot in 0..workers {
+            let q = q.clone();
+            let consumed = consumed.clone();
+            handles.push(std::thread::spawn(move || {
+                while q.pop(slot).is_some() {
+                    consumed.fetch_add(1, Ordering::Relaxed);
+                }
+            }));
+        }
+        // give workers a moment to reach the parked state, then trickle
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        for i in 0..100u32 {
+            if i % 3 == 0 {
+                q.push(task(i));
+            } else {
+                q.push_batch([task(i)]);
+            }
+        }
+        while consumed.load(Ordering::Relaxed) < 100 {
+            std::thread::yield_now();
+        }
+        q.stop_all();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(consumed.load(Ordering::Relaxed), 100);
     }
 }

@@ -8,6 +8,7 @@
 //! single-shot oracle see bit-identical weights.
 
 use crate::config::Config;
+use crate::gemm::PackedWeights;
 use crate::util::prng::Rng;
 
 /// Parameters of a single expert FFN.
@@ -17,6 +18,39 @@ pub struct ExpertParams {
     pub b1: Vec<f32>, // (D,)
     pub w2: Vec<f32>, // (D, H) row-major
     pub b2: Vec<f32>, // (H,)
+}
+
+/// One expert's weights in the packed persistent-GEMM layout (see
+/// `gemm.rs`): W1 and W2 re-laid into NR-wide contiguous panels, biases
+/// carried alongside. Built once per engine lifetime — expert weights
+/// are static across passes — and reused by every FFN/GEMM task.
+#[derive(Clone, Debug)]
+pub struct PackedExpert {
+    pub w1: PackedWeights, // (H, D) panel-packed
+    pub b1: Vec<f32>,
+    pub w2: PackedWeights, // (D, H) panel-packed
+    pub b2: Vec<f32>,
+}
+
+impl PackedExpert {
+    /// Packed footprint in bytes (weights only; biases are tiny).
+    pub fn bytes(&self) -> usize {
+        self.w1.bytes() + self.w2.bytes()
+    }
+}
+
+impl ExpertParams {
+    /// Pack this expert for the persistent hot path. One call per expert
+    /// per engine lifetime; the backend's pack counter audits that no
+    /// steady-state pass ever re-packs.
+    pub fn pack(&self, h: usize, d: usize) -> PackedExpert {
+        PackedExpert {
+            w1: PackedWeights::pack(&self.w1, h, d),
+            b1: self.b1.clone(),
+            w2: PackedWeights::pack(&self.w2, d, h),
+            b2: self.b2.clone(),
+        }
+    }
 }
 
 /// All model parameters; `experts[e]` is global expert e.
@@ -130,6 +164,33 @@ mod tests {
         assert_eq!(t0.len(), cfg.system.s_rank * cfg.model.h);
         assert_ne!(t0, t1);
         assert_eq!(t0, generate_tokens(&cfg, 3, 0));
+    }
+
+    #[test]
+    fn packed_expert_preserves_the_ffn_function() {
+        let cfg = Config::preset("tiny").unwrap();
+        let p = ModelParams::generate(&cfg, 5);
+        let (h, d) = (p.h, p.d);
+        let ex = &p.experts[1];
+        let pe = ex.pack(h, d);
+        assert_eq!((pe.w1.k(), pe.w1.n()), (h, d));
+        assert_eq!((pe.w2.k(), pe.w2.n()), (d, h));
+        assert!(pe.bytes() >= (h * d + d * h) * 4, "panels cover both matrices");
+        let mut rng = Rng::new(9);
+        let rows = 7; // deliberately not an MR multiple
+        let x = rng.normal_vec(rows * h, 1.0);
+        let mut packed_out = vec![0.0f32; rows * h];
+        let mut unpacked_out = vec![0.0f32; rows * h];
+        let mut scratch = vec![0.0f32; rows * d];
+        crate::gemm::ffn_packed(
+            &x, &pe.w1, &pe.b1, &pe.w2, &pe.b2, &mut packed_out, &mut scratch, rows, h, d,
+        );
+        crate::gemm::ffn(
+            &x, &ex.w1, &ex.b1, &ex.w2, &ex.b2, &mut unpacked_out, &mut scratch, rows, h, d,
+        );
+        // tiny shapes fit one KC chunk, so the two paths even agree exactly
+        let diff = crate::util::stats::max_abs_diff(&packed_out, &unpacked_out);
+        assert!(diff < 1e-4, "packed FFN diverged from unpacked: {diff}");
     }
 
     #[test]

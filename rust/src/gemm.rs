@@ -1,15 +1,62 @@
-//! Native in-process BLAS: cache-blocked f32 GEMM with fused epilogues.
+//! Native in-process BLAS: cache-blocked f32 GEMM with fused epilogues,
+//! in two flavours — the row-major reference path and the packed
+//! persistent-weight hot path.
 //!
 //! This is the paper's "in-device BLAS" substrate (they built it on
 //! CUTLASS; here it is a register-blocked CPU kernel). It backs the
-//! `ComputeBackend::Native` path used by tests, the baselines and the
+//! native `ComputeBackend` path used by tests, the baselines and the
 //! perf pass; the XLA/PJRT path executes the same math via the AOT
 //! Pallas artifacts, and both must agree to f32 tolerance.
 //!
-//! Layout: all matrices row-major. The hot loop is an (MR x NR) register
-//! tile over a K-panel, the standard micro-kernel shape; the epilogue
-//! (bias + activation) is fused into the write-back exactly like the
-//! paper's task formulation F_t(A,B,C,D) = phi(A*B + D).
+//! ## Unpacked reference path
+//!
+//! All matrices row-major. The hot loop is an (MR x NR) register tile
+//! over a K-panel; the epilogue (bias + activation) runs as a separate
+//! sweep after the last K-panel. Every step through K strides `n`
+//! floats through B — a new cache line per step for any realistic `n` —
+//! which is exactly the cost the packed path removes. This path is kept
+//! as the A/B baseline (`packed=false`) and for one-shot weights.
+//!
+//! ## Packed persistent-weight path (BLIS-style)
+//!
+//! MoE expert weights are **static across passes**, so a persistent
+//! engine packs them once per lifetime ([`PackedWeights::pack`]) and
+//! every subsequent GEMM streams cache-contiguous panels:
+//!
+//! ```text
+//!   B (k x n), row-major              PackedWeights (panel-major)
+//!   +--------- n ---------+           panel 0    panel 1    ...
+//!   | b00 b01 ......  b0n |          +--------+ +--------+
+//!   k ...                 |   pack   | k x NR | | k x NR |  each panel is
+//!   | ...                 |  ----->  | rows,  | | rows,  |  one contiguous
+//!   +---------------------+          | contig | | contig |  k*NR block
+//!                                    +--------+ +--------+
+//! ```
+//!
+//! * Panel `p` holds columns `[p*NR, p*NR + NR)` for all `k` rows; the
+//!   last panel is zero-padded in the column direction ("pad into
+//!   panel"), so the micro-kernel never takes a scalar n-edge path.
+//! * The micro-kernel keeps the full (MR x NR) accumulator in registers
+//!   across **all** of K, streaming the panel top-to-bottom in KC-sized
+//!   chunks, and writes C exactly once: bias add + activation are fused
+//!   into that single write-back, eliminating both the `c.fill(0.0)`
+//!   prologue and the separate epilogue sweep of the unpacked path.
+//! * m-edges (m % MR != 0) reuse the same NR-wide vectorized lanes with
+//!   a shortened row loop — no O(m*n*k) scalar fallback anywhere.
+//!
+//! Invariants (relied on by callers and the property suite):
+//!
+//! * Per output element, the packed kernel performs the same f32
+//!   multiply-adds in the same k-ascending order as [`gemm_naive`], so
+//!   `packed == naive` holds **bitwise**, not just to tolerance — which
+//!   is what lets the engine keep its combine-order determinism
+//!   guarantee regardless of the `packed` toggle.
+//! * Column slices ([`gemm_bias_packed_cols`]) must start on a panel
+//!   boundary (`col0 % NR == 0`); a slice is a contiguous run of panels,
+//!   so split-mode (bN-wide) GEMMs index straight into the one packed
+//!   copy of the full weight matrix (no per-column-tile re-pack).
+//! * Packing is the only O(k*n) copy; per-pass packing work is zero
+//!   (asserted by the engine test suite via the backend pack counter).
 
 /// Fused epilogue selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -23,10 +70,13 @@ pub enum Epilogue {
 /// Register tile height/width of the micro-kernel. NR=16 maps one
 /// accumulator row to a ZMM register (AVX-512) or two YMMs; MR=8 gives
 /// 8 accumulator rows + loaded B row within the 32-register budget.
-const MR: usize = 8;
-const NR: usize = 16;
-/// K-panel blocking (fits MR+NR panels in L1 comfortably).
-const KC: usize = 256;
+/// NR is also the packed panel width, so packed column slices must be
+/// NR-aligned (callers check `bn % NR == 0` before taking that path).
+pub const MR: usize = 8;
+pub const NR: usize = 16;
+/// K-chunk length the packed micro-kernel streams a panel in (and the
+/// unpacked path's K-panel blocking; fits MR+NR panels in L1 comfortably).
+pub const KC: usize = 256;
 
 /// C(m,n) = phi(A(m,k)·B(k,n) + bias(n)), row-major, C overwritten.
 pub fn gemm_bias(
@@ -141,6 +191,210 @@ fn finish(c: &mut [f32], bias: Option<&[f32]>, m: usize, n: usize, epilogue: Epi
     }
 }
 
+// ---------------------------------------------------------------------------
+// Packed persistent-weight path
+// ---------------------------------------------------------------------------
+
+/// A weight matrix re-laid out for the persistent hot path: NR-wide
+/// column panels, each a contiguous (k, NR) block, zero-padded in the
+/// column direction (see the module docs for the diagram). Built once
+/// per engine lifetime — weights are static across passes — and then
+/// streamed by [`gemm_bias_packed`] / [`gemm_bias_packed_cols`].
+#[derive(Clone, Debug)]
+pub struct PackedWeights {
+    k: usize,
+    n: usize,
+    /// `panels * k * NR` floats, panel-major.
+    data: Vec<f32>,
+}
+
+impl PackedWeights {
+    /// Pack row-major B (k, n) into NR-wide panels. This is the only
+    /// O(k·n) copy the packed path ever performs.
+    pub fn pack(b: &[f32], k: usize, n: usize) -> Self {
+        debug_assert_eq!(b.len(), k * n);
+        let panels = n.div_ceil(NR);
+        let mut data = vec![0.0f32; panels * k * NR];
+        for p in 0..panels {
+            let j0 = p * NR;
+            let w = NR.min(n - j0);
+            let panel = &mut data[p * k * NR..(p + 1) * k * NR];
+            for kk in 0..k {
+                panel[kk * NR..kk * NR + w].copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
+            }
+        }
+        Self { k, n, data }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Packed footprint in bytes (the memory cost of the layout).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    #[inline]
+    fn panel(&self, p: usize) -> &[f32] {
+        &self.data[p * self.k * NR..(p + 1) * self.k * NR]
+    }
+}
+
+/// C(m, n) = phi(A(m, k)·B + bias), B pre-packed; C overwritten by the
+/// single fused write-back (no zero-fill, no separate epilogue sweep).
+pub fn gemm_bias_packed(
+    a: &[f32],
+    bp: &PackedWeights,
+    bias: Option<&[f32]>,
+    c: &mut [f32],
+    m: usize,
+    epilogue: Epilogue,
+) {
+    debug_assert_eq!(a.len(), m * bp.k);
+    debug_assert_eq!(c.len(), m * bp.n);
+    gemm_bias_packed_cols(a, bp, 0, bp.n, bias, c, bp.n, m, epilogue);
+}
+
+/// Column-slice variant: C[:, 0..width] = phi(A·B[:, col0..col0+width] +
+/// bias), writing a (m, c_stride) row-major buffer (`c_stride >= width`).
+/// `col0` must be panel-aligned (`col0 % NR == 0`) so the slice is a
+/// contiguous panel run; `bias` is pre-sliced to `width`. Split-mode
+/// (bN-wide) column tiles call this against the one packed copy of the
+/// full weight matrix.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_packed_cols(
+    a: &[f32],
+    bp: &PackedWeights,
+    col0: usize,
+    width: usize,
+    bias: Option<&[f32]>,
+    c: &mut [f32],
+    c_stride: usize,
+    m: usize,
+    epilogue: Epilogue,
+) {
+    debug_assert_eq!(col0 % NR, 0, "column slice must start on a panel boundary");
+    debug_assert!(col0 + width <= bp.n);
+    debug_assert!(c_stride >= width);
+    debug_assert!(a.len() >= m * bp.k);
+    debug_assert!(c.len() >= m.saturating_sub(1) * c_stride + width || m == 0);
+    if let Some(bv) = bias {
+        debug_assert!(bv.len() >= width);
+    }
+    let k = bp.k;
+    let p_start = col0 / NR;
+    let p_end = (col0 + width).div_ceil(NR);
+    let mut i = 0;
+    while i < m {
+        let rows = MR.min(m - i);
+        for p in p_start..p_end {
+            let jbase = p * NR - col0;
+            let ncols = NR.min(width - jbase);
+            let panel = bp.panel(p);
+            // Full-K register accumulation: the (MR, NR) accumulator
+            // lives in registers across every K chunk, so C sees exactly
+            // one store per element (the fused write-back below).
+            let mut acc = [[0.0f32; NR]; MR];
+            if rows == MR {
+                packed_micro_full(a, k, i, panel, &mut acc);
+            } else {
+                packed_micro_edge(a, k, i, rows, panel, &mut acc);
+            }
+            for (r, accr) in acc.iter().enumerate().take(rows) {
+                let row0 = (i + r) * c_stride + jbase;
+                let crow = &mut c[row0..row0 + ncols];
+                for (x, cv) in crow.iter_mut().enumerate() {
+                    let mut v = accr[x];
+                    if let Some(bv) = bias {
+                        v += bv[jbase + x];
+                    }
+                    if epilogue == Epilogue::Relu && v < 0.0 {
+                        v = 0.0;
+                    }
+                    *cv = v;
+                }
+            }
+        }
+        i += MR;
+    }
+}
+
+/// Full MR-row micro-kernel over one packed panel: streams the panel
+/// top-to-bottom in KC-sized chunks (pure locality; the k-ascending
+/// accumulation order — and hence every output bit — is unchanged).
+#[inline]
+fn packed_micro_full(a: &[f32], k: usize, i: usize, panel: &[f32], acc: &mut [[f32; NR]; MR]) {
+    let mut k0 = 0;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        for kk in k0..k0 + kb {
+            let brow = &panel[kk * NR..kk * NR + NR];
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = a[(i + r) * k + kk];
+                for (x, &bv) in accr.iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+        }
+        k0 += kb;
+    }
+}
+
+/// m-edge micro-kernel: same NR-wide vectorized lanes, shortened row
+/// loop (the "pad-into-panel" counterpart for partial MR tiles — B's
+/// n-edge padding already lives in the packed panel itself).
+#[inline]
+fn packed_micro_edge(
+    a: &[f32],
+    k: usize,
+    i: usize,
+    rows: usize,
+    panel: &[f32],
+    acc: &mut [[f32; NR]; MR],
+) {
+    let mut k0 = 0;
+    while k0 < k {
+        let kb = KC.min(k - k0);
+        for kk in k0..k0 + kb {
+            let brow = &panel[kk * NR..kk * NR + NR];
+            for (r, accr) in acc.iter_mut().enumerate().take(rows) {
+                let av = a[(i + r) * k + kk];
+                for (x, &bv) in accr.iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+        }
+        k0 += kb;
+    }
+}
+
+/// Expert FFN over a row block on pre-packed weights:
+/// relu(x·W1 + b1)·W2 + b2 with both GEMMs on the packed hot path.
+#[allow(clippy::too_many_arguments)]
+pub fn ffn_packed(
+    x: &[f32],
+    w1: &PackedWeights,
+    b1: &[f32],
+    w2: &PackedWeights,
+    b2: &[f32],
+    out: &mut [f32],
+    scratch: &mut [f32],
+    rows: usize,
+    h: usize,
+    d: usize,
+) {
+    debug_assert_eq!((w1.k, w1.n), (h, d));
+    debug_assert_eq!((w2.k, w2.n), (d, h));
+    debug_assert!(scratch.len() >= rows * d);
+    gemm_bias_packed(x, w1, Some(b1), &mut scratch[..rows * d], rows, Epilogue::Relu);
+    gemm_bias_packed(&scratch[..rows * d], w2, Some(b2), out, rows, Epilogue::Identity);
+}
+
 /// Expert FFN over a row block: relu(x·W1 + b1)·W2 + b2, returning (rows, h).
 /// `scratch` must hold rows*d floats (the caller reuses it across tasks to
 /// keep the hot path allocation-free).
@@ -253,6 +507,142 @@ mod tests {
         let mut want = vec![0.0; rows * h];
         gemm_bias(&mid, &w2, Some(&b2), &mut want, rows, d, h, Epilogue::Identity);
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn packed_matches_naive_bitwise_over_shapes() {
+        // the packed kernel must replay the naive k-ascending accumulation
+        // order per element, so equality is exact — not within-tolerance
+        let mut rng = Rng::new(4);
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 5, 7),        // everything sub-tile
+            (8, 16, 16),      // exact MR/NR multiples
+            (17, 33, 9),      // m- and n-edges
+            (65, 300, 31),    // k crosses a KC chunk boundary
+            (128, 64, 96),
+        ] {
+            let a = rand_mat(&mut rng, m * k);
+            let b = rand_mat(&mut rng, k * n);
+            let bp = PackedWeights::pack(&b, k, n);
+            assert_eq!((bp.k(), bp.n()), (k, n));
+            let mut want = vec![0.0; m * n];
+            gemm_naive(&a, &b, &mut want, m, k, n);
+            // poison C: the packed write-back must fully overwrite it
+            let mut got = vec![f32::NAN; m * n];
+            gemm_bias_packed(&a, &bp, None, &mut got, m, Epilogue::Identity);
+            assert_eq!(got, want, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn packed_fused_epilogue_matches_reference() {
+        let mut rng = Rng::new(5);
+        let (m, k, n) = (13, 40, 27); // deliberate edge tiles
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, k * n);
+        let bias = rand_mat(&mut rng, n);
+        let bp = PackedWeights::pack(&b, k, n);
+        let mut got = vec![f32::NAN; m * n];
+        gemm_bias_packed(&a, &bp, Some(&bias), &mut got, m, Epilogue::Relu);
+        let mut want = vec![0.0; m * n];
+        gemm_naive(&a, &b, &mut want, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let v = {
+                    let mut v = want[i * n + j] + bias[j];
+                    if v < 0.0 {
+                        v = 0.0;
+                    }
+                    v
+                };
+                assert_eq!(got[i * n + j], v, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_column_slices_match_full_result() {
+        // a bN-wide slice (panel-aligned) of the packed matrix must equal
+        // the corresponding columns of the full packed GEMM, written into
+        // a tile buffer with its own stride
+        let mut rng = Rng::new(6);
+        let (m, k, n, bn) = (20, 50, 64, 32); // bn % NR == 0
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, k * n);
+        let bias = rand_mat(&mut rng, n);
+        let bp = PackedWeights::pack(&b, k, n);
+        let mut full = vec![0.0; m * n];
+        gemm_bias_packed(&a, &bp, Some(&bias), &mut full, m, Epilogue::Relu);
+        for col in 0..n / bn {
+            let mut tile = vec![f32::NAN; m * bn];
+            gemm_bias_packed_cols(
+                &a,
+                &bp,
+                col * bn,
+                bn,
+                Some(&bias[col * bn..(col + 1) * bn]),
+                &mut tile,
+                bn,
+                m,
+                Epilogue::Relu,
+            );
+            for r in 0..m {
+                assert_eq!(
+                    &tile[r * bn..(r + 1) * bn],
+                    &full[r * n + col * bn..r * n + (col + 1) * bn],
+                    "col tile {col}, row {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ffn_packed_matches_unpacked_composition() {
+        let mut rng = Rng::new(7);
+        let (rows, h, d) = (19, 24, 40); // row edge
+        let x = rand_mat(&mut rng, rows * h);
+        let w1 = rand_mat(&mut rng, h * d);
+        let b1 = rand_mat(&mut rng, d);
+        let w2 = rand_mat(&mut rng, d * h);
+        let b2 = rand_mat(&mut rng, h);
+        let w1p = PackedWeights::pack(&w1, h, d);
+        let w2p = PackedWeights::pack(&w2, d, h);
+        let mut got = vec![0.0; rows * h];
+        let mut scratch = vec![0.0; rows * d];
+        ffn_packed(&x, &w1p, &b1, &w2p, &b2, &mut got, &mut scratch, rows, h, d);
+        // reference composition via the naive kernel + explicit epilogues
+        let mut mid = vec![0.0; rows * d];
+        gemm_naive(&x, &w1, &mut mid, rows, h, d);
+        for r in 0..rows {
+            for j in 0..d {
+                mid[r * d + j] = (mid[r * d + j] + b1[j]).max(0.0);
+            }
+        }
+        let mut want = vec![0.0; rows * h];
+        gemm_naive(&mid, &w2, &mut want, rows, d, h);
+        for r in 0..rows {
+            for j in 0..h {
+                want[r * h + j] += b2[j];
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn packing_pads_the_last_panel_with_zeros() {
+        let (k, n) = (3, 5); // one partial panel
+        let b: Vec<f32> = (0..k * n).map(|i| i as f32 + 1.0).collect();
+        let bp = PackedWeights::pack(&b, k, n);
+        assert_eq!(bp.bytes(), k * NR * 4, "one NR-wide panel");
+        // a GEMM against an all-ones A must ignore the padded lanes
+        let a = vec![1.0f32; k];
+        let mut c = vec![f32::NAN; n];
+        gemm_bias_packed(&a, &bp, None, &mut c, 1, Epilogue::Identity);
+        for j in 0..n {
+            let want: f32 = (0..k).map(|p| b[p * n + j]).sum();
+            assert_eq!(c[j], want);
+        }
     }
 
     #[test]

@@ -14,11 +14,14 @@ use anyhow::Result;
 use crate::config::{Config, RoutingPolicy};
 use crate::coordinator::{MoeEngine, TaskGraphMode};
 use crate::expert::{generate_tokens, ModelParams};
+use crate::gemm;
 use crate::layout;
 use crate::runtime::{ComputeBackend, NativeBackend};
 use crate::sim::engines::{simulate, Baseline, Engine};
 use crate::sim::straggler;
-use crate::util::stats::{fmt_bytes, fmt_time, summarize, Table};
+use crate::util::json::{self, Json};
+use crate::util::prng::Rng;
+use crate::util::stats::{fmt_bytes, fmt_time, max_abs_diff, summarize, Table};
 use crate::workload::{cluster_workload, Skew};
 
 /// Engines compared in the latency/throughput figures.
@@ -315,6 +318,269 @@ pub fn routing_policy_ab(preset: &str, seed: u64) -> Result<(String, Vec<PolicyP
         format!("## Routing policy A/B — dropless vs fixed capacity ({preset})\n\n{}", t.render()),
         points,
     ))
+}
+
+// ---------------------------------------------------------------------------
+// PR-3 hot path: packed vs unpacked GEMM, work-stealing contention stats
+// ---------------------------------------------------------------------------
+
+/// One (m, k, n) point of the packed-vs-unpacked GEMM sweep.
+#[derive(Clone, Debug)]
+pub struct GemmAbPoint {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub unpacked_gflops: f64,
+    pub packed_gflops: f64,
+    /// One-time packing cost (amortized to zero over an engine lifetime).
+    pub pack_secs: f64,
+}
+
+impl GemmAbPoint {
+    pub fn speedup(&self) -> f64 {
+        if self.unpacked_gflops == 0.0 {
+            return 0.0;
+        }
+        self.packed_gflops / self.unpacked_gflops
+    }
+}
+
+/// Kernel-level A/B: the unpacked row-major GEMM vs the packed
+/// persistent-weight GEMM on identical inputs, per shape. Weights are
+/// packed once outside the timed loop — exactly the engine's contract
+/// (pack at `MoeEngine::start`, never per pass) — and the one-time cost
+/// is reported alongside. Numeric agreement is asserted, not assumed.
+pub fn gemm_backend_ab(
+    shapes: &[(usize, usize, usize)],
+    iters: usize,
+) -> (String, Vec<GemmAbPoint>) {
+    let iters = iters.max(1);
+    let mut points = Vec::new();
+    let mut t =
+        Table::new(&["shape (m,k,n)", "unpacked GFLOP/s", "packed GFLOP/s", "speedup", "pack cost"]);
+    for &(m, k, n) in shapes {
+        let mut rng = Rng::new(0x9EA5 ^ (m * 31 + k * 7 + n) as u64);
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 0.1);
+        let bias = rng.normal_vec(n, 0.1);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+
+        let mut c0 = vec![0.0f32; m * n];
+        gemm::gemm_bias(&a, &b, Some(&bias), &mut c0, m, k, n, gemm::Epilogue::Relu); // warmup
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            gemm::gemm_bias(&a, &b, Some(&bias), &mut c0, m, k, n, gemm::Epilogue::Relu);
+        }
+        let unpacked_secs = t0.elapsed().as_secs_f64() / iters as f64;
+
+        let tp = std::time::Instant::now();
+        let bp = gemm::PackedWeights::pack(&b, k, n);
+        let pack_secs = tp.elapsed().as_secs_f64();
+        let mut c1 = vec![0.0f32; m * n];
+        gemm::gemm_bias_packed(&a, &bp, Some(&bias), &mut c1, m, gemm::Epilogue::Relu); // warmup
+        let t1 = std::time::Instant::now();
+        for _ in 0..iters {
+            gemm::gemm_bias_packed(&a, &bp, Some(&bias), &mut c1, m, gemm::Epilogue::Relu);
+        }
+        let packed_secs = t1.elapsed().as_secs_f64() / iters as f64;
+
+        let diff = max_abs_diff(&c0, &c1);
+        assert!(diff < 1e-3, "packed diverged from unpacked at ({m},{k},{n}): {diff}");
+
+        let p = GemmAbPoint {
+            m,
+            k,
+            n,
+            unpacked_gflops: flops / unpacked_secs / 1e9,
+            packed_gflops: flops / packed_secs / 1e9,
+            pack_secs,
+        };
+        t.row(&[
+            format!("{m}x{k}x{n}"),
+            format!("{:.2}", p.unpacked_gflops),
+            format!("{:.2}", p.packed_gflops),
+            format!("{:.2}x", p.speedup()),
+            fmt_time(p.pack_secs),
+        ]);
+        points.push(p);
+    }
+    (
+        format!("## GEMM backend A/B — packed persistent-weight vs unpacked\n\n{}", t.render()),
+        points,
+    )
+}
+
+/// One arm of the engine-level hot-path A/B.
+#[derive(Clone, Debug)]
+pub struct HotPathPoint {
+    pub packed: bool,
+    /// Steady-state per-pass wall p50.
+    pub wall_p50: f64,
+    /// Mean processor utilization of the last measured pass.
+    pub utilization: f64,
+    /// Work-stealing contention stats of the last measured pass,
+    /// aggregated over ranks.
+    pub steals: u32,
+    pub max_queue_depth: usize,
+    /// Experts packed over the whole run (0 for the unpacked arm; must
+    /// equal the expert count — never grow with passes — for the packed
+    /// arm).
+    pub pack_count: u64,
+    /// Effective FFN GFLOP/s over the measured passes (valid rows only).
+    pub gflops: f64,
+}
+
+/// Engine-level A/B of the compute hot path: same preset, same seed, same
+/// inputs — only `packed` flips. Reports steady-state latency, processor
+/// utilization and the work-stealing pool's contention stats, and audits
+/// the pack-once contract (pack count flat across passes). Both arms'
+/// outputs are asserted numerically equal.
+pub fn hotpath_ab(preset: &str, passes: usize, seed: u64) -> Result<(String, Vec<HotPathPoint>)> {
+    let passes = passes.max(1);
+    let mut points = Vec::new();
+    let mut reference: Option<Vec<Vec<f32>>> = None;
+    let mut t = Table::new(&[
+        "backend",
+        "p50 / pass",
+        "GFLOP/s",
+        "util",
+        "steals",
+        "max depth",
+        "packs",
+    ]);
+    for packed in [false, true] {
+        let mut cfg = Config::preset(preset)?;
+        cfg.set("packed", if packed { "true" } else { "false" })?;
+        let params = Arc::new(ModelParams::generate(&cfg, seed));
+        let native = Arc::new(NativeBackend::from_config(&cfg));
+        let backend: Arc<dyn ComputeBackend> = native.clone();
+        let inputs: Vec<Vec<f32>> =
+            (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, seed, r)).collect();
+        let engine =
+            MoeEngine::start(cfg.clone(), params, backend, TaskGraphMode::Fused)?;
+        let packs_after_start = native.pack_count();
+        engine.submit(&inputs)?.wait()?; // warmup
+        let mut walls = Vec::with_capacity(passes);
+        let mut last = None;
+        let mut flops_done = 0.0f64;
+        for _ in 0..passes {
+            let t0 = std::time::Instant::now();
+            let res = engine.submit(&inputs)?.wait()?;
+            walls.push(t0.elapsed().as_secs_f64());
+            flops_done += res
+                .metrics
+                .ranks
+                .iter()
+                .map(|r| cfg.model.ffn_flops(r.sent_rows))
+                .sum::<f64>();
+            last = Some(res);
+        }
+        let last = last.expect("at least one pass");
+        anyhow::ensure!(
+            native.pack_count() == packs_after_start,
+            "{preset}: steady-state passes re-packed weights ({} -> {})",
+            packs_after_start,
+            native.pack_count()
+        );
+        match &reference {
+            None => reference = Some(last.outputs.clone()),
+            Some(want) => {
+                for (r, (g, w)) in last.outputs.iter().zip(want).enumerate() {
+                    let diff = max_abs_diff(g, w);
+                    anyhow::ensure!(
+                        diff < 1e-3,
+                        "rank {r}: packed arm diverged from unpacked arm by {diff}"
+                    );
+                }
+            }
+        }
+        let wall_sum: f64 = walls.iter().sum();
+        let p = HotPathPoint {
+            packed,
+            wall_p50: summarize(&walls).p50,
+            utilization: last.metrics.utilization(),
+            steals: last.metrics.ranks.iter().map(|r| r.steals).sum(),
+            max_queue_depth: last.metrics.ranks.iter().map(|r| r.max_queue_depth).max().unwrap_or(0),
+            pack_count: native.pack_count(),
+            gflops: if wall_sum > 0.0 { flops_done / wall_sum / 1e9 } else { 0.0 },
+        };
+        t.row(&[
+            if packed { "native-packed".into() } else { "native".to_string() },
+            fmt_time(p.wall_p50),
+            format!("{:.2}", p.gflops),
+            format!("{:.1}%", p.utilization * 100.0),
+            p.steals.to_string(),
+            p.max_queue_depth.to_string(),
+            p.pack_count.to_string(),
+        ]);
+        points.push(p);
+        engine.shutdown();
+    }
+    Ok((
+        format!(
+            "## Hot-path A/B — packed backend + work-stealing pool ({preset}, {passes} passes)\n\n{}",
+            t.render()
+        ),
+        points,
+    ))
+}
+
+/// Read-modify-write one top-level section of a JSON report file (the
+/// benches each own a section of `BENCH_pr3_hotpath.json`; a corrupt or
+/// missing file is replaced rather than failing the bench).
+pub fn update_bench_json(path: &str, section: &str, value: Json) -> Result<()> {
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .unwrap_or_else(|| Json::Obj(Default::default()));
+    if !matches!(root, Json::Obj(_)) {
+        root = Json::Obj(Default::default());
+    }
+    if let Json::Obj(map) = &mut root {
+        map.insert(section.to_string(), value);
+    }
+    std::fs::write(path, json::to_string(&root))?;
+    Ok(())
+}
+
+/// JSON rows for [`gemm_backend_ab`] points.
+pub fn gemm_ab_json(points: &[GemmAbPoint]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                json::obj(vec![
+                    ("m", json::num(p.m as f64)),
+                    ("k", json::num(p.k as f64)),
+                    ("n", json::num(p.n as f64)),
+                    ("unpacked_gflops", json::num(p.unpacked_gflops)),
+                    ("packed_gflops", json::num(p.packed_gflops)),
+                    ("speedup", json::num(p.speedup())),
+                    ("pack_secs", json::num(p.pack_secs)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// JSON rows for [`hotpath_ab`] points.
+pub fn hotpath_json(points: &[HotPathPoint]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                json::obj(vec![
+                    ("backend", json::s(if p.packed { "native-packed" } else { "native" })),
+                    ("wall_p50", json::num(p.wall_p50)),
+                    ("gflops", json::num(p.gflops)),
+                    ("utilization", json::num(p.utilization)),
+                    ("steals", json::num(p.steals as f64)),
+                    ("max_queue_depth", json::num(p.max_queue_depth as f64)),
+                    ("pack_count", json::num(p.pack_count as f64)),
+                ])
+            })
+            .collect(),
+    )
 }
 
 // ---------------------------------------------------------------------------

@@ -47,6 +47,34 @@
 //! for drop-in compatibility; `harness::routing_policy_ab` and
 //! `examples/expert_scaling.rs` A/B the two on the same inputs.
 //!
+//! ## Compute hot path: packed weights + work stealing
+//!
+//! Two knobs govern how a rank's processors chew through their tasks:
+//!
+//! * **`packed`** (default `true`, `cfg.set("packed", "false")` to A/B) —
+//!   expert weights are re-laid into the BLIS-style NR-panel format
+//!   exactly once at [`coordinator::MoeEngine::start`]
+//!   ([`runtime::ComputeBackend::prepare`]); every FFN/GEMM task then
+//!   streams cache-contiguous panels with bias+activation fused into the
+//!   single output write-back (no zero-fill pass, no epilogue sweep — see
+//!   `gemm.rs` for the layout diagram). The packed kernels replay the
+//!   unpacked f32 accumulation order, so the toggle never changes output
+//!   bits, and the backend's pack counter is flat across passes (audited
+//!   by the engine tests: pack count == expert count per lifetime).
+//! * **`processors`** — per-rank worker count. The ready queue behind
+//!   them is a decentralized work-stealing pool (one deque per
+//!   processor, owner-LIFO / thief-FIFO, parking only on global
+//!   emptiness), so dispatch scales with cores instead of serializing on
+//!   one queue lock; the subscriber lends a hand as a thief when its
+//!   flag sweep idles. Per-pass `steals` / `max_queue_depth` metrics in
+//!   [`coordinator::RankMetrics`] expose the pool's contention.
+//!
+//! `harness::gemm_backend_ab` (kernel-level) and `harness::hotpath_ab`
+//! (engine-level) A/B the packed toggle; `cargo bench --bench
+//! microbench_gemm` / `--bench fig11_sm_util` record both into
+//! `BENCH_pr3_hotpath.json`, and CI's perf-smoke job fails if the packed
+//! kernel ever regresses below the unpacked baseline.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

@@ -16,12 +16,13 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::Config;
-use crate::expert::{ExpertParams, ModelParams};
+use crate::expert::{ExpertParams, ModelParams, PackedExpert};
 use crate::gemm;
 use crate::util::json::Json;
 
@@ -225,10 +226,29 @@ impl ArtifactStore {
 pub trait ComputeBackend: Send + Sync {
     fn name(&self) -> &'static str;
 
+    /// One-time weight preparation, invoked by `MoeEngine::start` (and any
+    /// other long-lived owner) before the first pass. Backends that keep
+    /// derived weight state — the native backend's packed panels, the XLA
+    /// backend's uploaded literals — build it here, so steady-state passes
+    /// do zero per-pass weight work. Default: no-op.
+    fn prepare(&self, _params: &ModelParams) -> Result<()> {
+        Ok(())
+    }
+
+    /// True when this backend serves split-mode column tiles from its own
+    /// packed weight cache (filled by [`prepare`](Self::prepare)), making
+    /// caller-side `w1c`/`w2c` column copies dead weight — callers may
+    /// then pass empty weight slices (bias slices are still consumed).
+    /// Default: false.
+    fn packed_split_tiles(&self) -> bool {
+        false
+    }
+
     /// softmax(A·Wg) for one rank's (s, H) tokens -> (s, E) scores.
     fn gate_scores(&self, a: &[f32], wg: &[f32], s: usize) -> Result<Vec<f32>>;
 
-    /// Fused FFN over one (bm, H) tile of expert `ex`.
+    /// Fused FFN over one (bm, H) tile of expert `ex` (`expert_id` is the
+    /// *global* expert index, the key for backend-side weight caches).
     fn ffn_tile(
         &self,
         x: &[f32],
@@ -238,31 +258,153 @@ pub trait ComputeBackend: Send + Sync {
         scratch: &mut [f32],
     ) -> Result<()>;
 
-    /// Split-mode GEMM0: relu(x·W1[:, col] + b1[col]) over one (bm, bn) tile.
-    fn gemm0_tile(&self, x: &[f32], w1c: &[f32], b1c: &[f32], out: &mut [f32]) -> Result<()>;
+    /// Split-mode GEMM0: relu(x·W1[:, col·bn..] + b1c) over one (bm, bn)
+    /// tile. `w1c`/`b1c` carry the column slice for cache-less backends;
+    /// backends with a packed cache resolve (expert_id, col) into their
+    /// own panel run instead.
+    fn gemm0_tile(
+        &self,
+        x: &[f32],
+        w1c: &[f32],
+        b1c: &[f32],
+        out: &mut [f32],
+        expert_id: usize,
+        col: usize,
+    ) -> Result<()>;
 
-    /// Split-mode GEMM1: h·W2[:, col] + b2[col] over one (bm, bn) tile.
-    fn gemm1_tile(&self, h: &[f32], w2c: &[f32], b2c: &[f32], out: &mut [f32]) -> Result<()>;
+    /// Split-mode GEMM1: h·W2[:, col·bn..] + b2c over one (bm, bn) tile.
+    fn gemm1_tile(
+        &self,
+        h: &[f32],
+        w2c: &[f32],
+        b2c: &[f32],
+        out: &mut [f32],
+        expert_id: usize,
+        col: usize,
+    ) -> Result<()>;
 }
 
-/// Pure-Rust backend over `crate::gemm`.
+/// Pure-Rust backend over `crate::gemm`, in one of two modes:
+///
+/// * **packed** (`cfg.system.packed`, the default) — expert weights are
+///   re-laid into the persistent NR-panel format exactly once (at
+///   [`prepare`](ComputeBackend::prepare), or lazily on an expert's first
+///   tile), and every FFN/GEMM task streams contiguous panels with the
+///   epilogue fused into the single C write-back.
+/// * **unpacked** — the original row-major blocked kernels; the A/B
+///   baseline `harness::gemm_backend_ab` measures against.
+///
+/// `pack_count()` audits the packed contract: it equals the number of
+/// distinct experts packed so far, and must stop growing after `prepare`
+/// — steady-state passes never re-pack (asserted in the engine tests).
 pub struct NativeBackend {
     pub h: usize,
     pub d: usize,
     pub e: usize,
     pub bm: usize,
     pub bn: usize,
+    packed: bool,
+    packs: AtomicU64,
+    /// Per-global-expert packed weights, filled by `prepare` (or lazily).
+    /// Read-mostly: after `prepare` every tile takes only the shared read
+    /// lock (uncontended Arc clone) — the write lock exists solely for
+    /// the lazy first-touch path, so the hot path this PR de-serializes
+    /// never funnels through an exclusive backend lock.
+    cache: RwLock<Vec<Option<Arc<PackedExpert>>>>,
 }
 
 impl NativeBackend {
     pub fn from_config(cfg: &Config) -> Self {
-        Self { h: cfg.model.h, d: cfg.model.d, e: cfg.model.e, bm: cfg.model.bm, bn: cfg.model.bn }
+        Self::with_packed(cfg, cfg.system.packed)
+    }
+
+    /// Explicit-mode constructor for A/B comparisons.
+    pub fn with_packed(cfg: &Config, packed: bool) -> Self {
+        Self {
+            h: cfg.model.h,
+            d: cfg.model.d,
+            e: cfg.model.e,
+            bm: cfg.model.bm,
+            bn: cfg.model.bn,
+            packed,
+            packs: AtomicU64::new(0),
+            cache: RwLock::new(vec![None; cfg.model.e]),
+        }
+    }
+
+    pub fn is_packed(&self) -> bool {
+        self.packed
+    }
+
+    /// Experts packed so far (== distinct experts touched; flat after
+    /// `prepare`, and flat across every steady-state pass).
+    pub fn pack_count(&self) -> u64 {
+        self.packs.load(Ordering::Relaxed)
+    }
+
+    /// Packed weights of `expert_id`, packing on first touch. Steady
+    /// state (post-`prepare`) takes only the read lock.
+    fn packed_expert(&self, expert_id: usize, ex: &ExpertParams) -> Arc<PackedExpert> {
+        if let Some(pe) = self.cached_expert(expert_id) {
+            return pe;
+        }
+        let mut cache = self.cache.write().unwrap();
+        if cache.len() <= expert_id {
+            cache.resize(expert_id + 1, None);
+        }
+        if let Some(pe) = &cache[expert_id] {
+            return pe.clone(); // another thread packed it while we upgraded
+        }
+        let pe = Arc::new(ex.pack(self.h, self.d));
+        self.packs.fetch_add(1, Ordering::Relaxed);
+        cache[expert_id] = Some(pe.clone());
+        pe
+    }
+
+    /// Cache lookup without packing (split-mode tiles have no
+    /// `ExpertParams` in hand; `prepare` fills the cache for them).
+    fn cached_expert(&self, expert_id: usize) -> Option<Arc<PackedExpert>> {
+        self.cache.read().unwrap().get(expert_id).cloned().flatten()
+    }
+
+    /// True when split-mode column tiles can use the packed panels: the
+    /// tile width must be a whole number of NR panels.
+    fn packed_cols_ok(&self) -> bool {
+        self.packed && self.bn % gemm::NR == 0
+    }
+}
+
+impl NativeBackend {
+    fn ensure_slice(len: usize, want: usize, what: &str, expert_id: usize) -> Result<()> {
+        anyhow::ensure!(
+            len == want,
+            "{what}: no packed cache for expert {expert_id} and no usable weight slice \
+             (got {len} floats, need {want}) — call prepare() or pass the column slice"
+        );
+        Ok(())
     }
 }
 
 impl ComputeBackend for NativeBackend {
     fn name(&self) -> &'static str {
-        "native"
+        if self.packed {
+            "native-packed"
+        } else {
+            "native"
+        }
+    }
+
+    fn prepare(&self, params: &ModelParams) -> Result<()> {
+        if self.packed {
+            for (ex_id, ex) in params.experts.iter().enumerate() {
+                let _ = self.packed_expert(ex_id, ex);
+            }
+        }
+        Ok(())
+    }
+
+    fn packed_split_tiles(&self) -> bool {
+        self.packed_cols_ok()
     }
 
     fn gate_scores(&self, a: &[f32], wg: &[f32], s: usize) -> Result<Vec<f32>> {
@@ -276,20 +418,77 @@ impl ComputeBackend for NativeBackend {
         &self,
         x: &[f32],
         ex: &ExpertParams,
-        _expert_id: usize,
+        expert_id: usize,
         out: &mut [f32],
         scratch: &mut [f32],
     ) -> Result<()> {
-        gemm::ffn(x, &ex.w1, &ex.b1, &ex.w2, &ex.b2, out, scratch, self.bm, self.h, self.d);
+        if self.packed {
+            let pe = self.packed_expert(expert_id, ex);
+            gemm::ffn_packed(
+                x, &pe.w1, &pe.b1, &pe.w2, &pe.b2, out, scratch, self.bm, self.h, self.d,
+            );
+        } else {
+            gemm::ffn(x, &ex.w1, &ex.b1, &ex.w2, &ex.b2, out, scratch, self.bm, self.h, self.d);
+        }
         Ok(())
     }
 
-    fn gemm0_tile(&self, x: &[f32], w1c: &[f32], b1c: &[f32], out: &mut [f32]) -> Result<()> {
+    fn gemm0_tile(
+        &self,
+        x: &[f32],
+        w1c: &[f32],
+        b1c: &[f32],
+        out: &mut [f32],
+        expert_id: usize,
+        col: usize,
+    ) -> Result<()> {
+        if self.packed_cols_ok() {
+            if let Some(pe) = self.cached_expert(expert_id) {
+                gemm::gemm_bias_packed_cols(
+                    x,
+                    &pe.w1,
+                    col * self.bn,
+                    self.bn,
+                    Some(b1c),
+                    out,
+                    self.bn,
+                    self.bm,
+                    gemm::Epilogue::Relu,
+                );
+                return Ok(());
+            }
+        }
+        Self::ensure_slice(w1c.len(), self.h * self.bn, "gemm0_tile", expert_id)?;
         gemm::gemm_bias(x, w1c, Some(b1c), out, self.bm, self.h, self.bn, gemm::Epilogue::Relu);
         Ok(())
     }
 
-    fn gemm1_tile(&self, h: &[f32], w2c: &[f32], b2c: &[f32], out: &mut [f32]) -> Result<()> {
+    fn gemm1_tile(
+        &self,
+        h: &[f32],
+        w2c: &[f32],
+        b2c: &[f32],
+        out: &mut [f32],
+        expert_id: usize,
+        col: usize,
+    ) -> Result<()> {
+        if self.packed_cols_ok() {
+            if let Some(pe) = self.cached_expert(expert_id) {
+                gemm::gemm_bias_packed_cols(
+                    h,
+                    &pe.w2,
+                    col * self.bn,
+                    self.bn,
+                    Some(b2c),
+                    out,
+                    self.bn,
+                    self.bm,
+                    gemm::Epilogue::Identity,
+                );
+                return Ok(());
+            }
+        }
+        Self::ensure_slice(w2c.len(), self.d * self.bn, "gemm1_tile", expert_id)?;
         gemm::gemm_bias(h, w2c, Some(b2c), out, self.bm, self.d, self.bn, gemm::Epilogue::Identity);
         Ok(())
     }
@@ -356,6 +555,12 @@ impl ComputeBackend for XlaBackend {
         "xla"
     }
 
+    /// Pre-upload every expert's weight literals (the XLA analog of
+    /// packing): steady-state passes then only copy activations.
+    fn prepare(&self, params: &ModelParams) -> Result<()> {
+        self.warm_weights(params)
+    }
+
     fn gate_scores(&self, a: &[f32], wg: &[f32], s: usize) -> Result<Vec<f32>> {
         let k = self.store.kernel("gate")?;
         let expect = k.meta.inputs[0].1[0];
@@ -385,14 +590,30 @@ impl ComputeBackend for XlaBackend {
         Ok(())
     }
 
-    fn gemm0_tile(&self, x: &[f32], w1c: &[f32], b1c: &[f32], out: &mut [f32]) -> Result<()> {
+    fn gemm0_tile(
+        &self,
+        x: &[f32],
+        w1c: &[f32],
+        b1c: &[f32],
+        out: &mut [f32],
+        _expert_id: usize,
+        _col: usize,
+    ) -> Result<()> {
         let k = self.store.kernel("gemm0_tile")?;
         let y = k.run(&[x, w1c, b1c])?;
         out.copy_from_slice(&y);
         Ok(())
     }
 
-    fn gemm1_tile(&self, h: &[f32], w2c: &[f32], b2c: &[f32], out: &mut [f32]) -> Result<()> {
+    fn gemm1_tile(
+        &self,
+        h: &[f32],
+        w2c: &[f32],
+        b2c: &[f32],
+        out: &mut [f32],
+        _expert_id: usize,
+        _col: usize,
+    ) -> Result<()> {
         let k = self.store.kernel("gemm1_tile")?;
         let y = k.run(&[h, w2c, b2c])?;
         out.copy_from_slice(&y);
@@ -417,6 +638,42 @@ mod tests {
         let scores = be.gate_scores(&a, &wg, s).unwrap();
         let routing = crate::gate::gate_and_route(&a, &wg, s, &cfg.model, 32);
         assert!(max_abs_diff(&scores, &routing.scores) < 1e-5);
+    }
+
+    #[test]
+    fn packed_backend_packs_each_expert_once_and_matches_unpacked() {
+        let cfg = Config::preset("tiny").unwrap();
+        let m = &cfg.model;
+        let packed = NativeBackend::with_packed(&cfg, true);
+        let unpacked = NativeBackend::with_packed(&cfg, false);
+        assert!(packed.is_packed() && !unpacked.is_packed());
+        assert_eq!(packed.name(), "native-packed");
+        assert_eq!(packed.pack_count(), 0, "no packing before first touch");
+        let mut rng = Rng::new(11);
+        let ex = ExpertParams {
+            w1: rng.normal_vec(m.h * m.d, 0.1),
+            b1: rng.normal_vec(m.d, 0.1),
+            w2: rng.normal_vec(m.d * m.h, 0.1),
+            b2: rng.normal_vec(m.h, 0.1),
+        };
+        let x = rng.normal_vec(m.bm * m.h, 1.0);
+        let mut scratch = vec![0.0; m.bm * m.d];
+        let mut a = vec![0.0; m.bm * m.h];
+        let mut b = vec![0.0; m.bm * m.h];
+        for _ in 0..3 {
+            packed.ffn_tile(&x, &ex, 2, &mut a, &mut scratch).unwrap();
+        }
+        assert_eq!(packed.pack_count(), 1, "repeated tiles reuse the one pack");
+        unpacked.ffn_tile(&x, &ex, 2, &mut b, &mut scratch).unwrap();
+        assert_eq!(unpacked.pack_count(), 0, "unpacked mode never packs");
+        assert!(max_abs_diff(&a, &b) < 1e-3, "packed vs unpacked FFN tile");
+        // prepare() packs every expert exactly once, idempotently
+        let params = crate::expert::ModelParams::generate(&cfg, 3);
+        let fresh = NativeBackend::with_packed(&cfg, true);
+        fresh.prepare(&params).unwrap();
+        assert_eq!(fresh.pack_count(), m.e as u64, "pack count == expert count");
+        fresh.prepare(&params).unwrap();
+        assert_eq!(fresh.pack_count(), m.e as u64, "prepare is idempotent");
     }
 
     #[test]
@@ -447,7 +704,7 @@ mod tests {
             }
             let b1c = &ex.b1[col * m.bn..(col + 1) * m.bn];
             let mut out = vec![0.0; m.bm * m.bn];
-            be.gemm0_tile(&x, &w1c, b1c, &mut out).unwrap();
+            be.gemm0_tile(&x, &w1c, b1c, &mut out, 0, col).unwrap();
             for r in 0..m.bm {
                 mid[r * m.d + col * m.bn..r * m.d + (col + 1) * m.bn]
                     .copy_from_slice(&out[r * m.bn..(r + 1) * m.bn]);
@@ -462,7 +719,7 @@ mod tests {
             }
             let b2c = &ex.b2[col * m.bn..(col + 1) * m.bn];
             let mut out = vec![0.0; m.bm * m.bn];
-            be.gemm1_tile(&mid, &w2c, b2c, &mut out).unwrap();
+            be.gemm1_tile(&mid, &w2c, b2c, &mut out, 0, col).unwrap();
             for r in 0..m.bm {
                 split[r * m.h + col * m.bn..r * m.h + (col + 1) * m.bn]
                     .copy_from_slice(&out[r * m.bn..(r + 1) * m.bn]);

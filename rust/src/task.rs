@@ -48,10 +48,19 @@ pub struct Task {
 }
 
 impl Task {
-    /// Estimated FLOPs of this task (drives both the simulator cost model
-    /// and the scheduler's longest-task-first policy).
+    /// Estimated useful FLOPs of this task, based on the tile's *actual*
+    /// row count — the cost-model hook for schedulers and simulators that
+    /// weigh tasks (currently exercised by the test suite only). Dropless
+    /// dispatch ships variable-length tile lists whose tails carry
+    /// `rows < bM`; costing those at the padded `bm` would over-weight
+    /// every tail tile (by up to bM/1). Caveat for consumers: the native
+    /// fused backend still *executes* the full padded bM rows per tile,
+    /// so for that backend this is the useful-work lower bound on tails,
+    /// not the wall-clock cost. `bm` is kept as the upper bound the row
+    /// count must respect.
     pub fn flops(&self, h: usize, d: usize, bm: usize, bn: usize) -> f64 {
-        let rows = bm as f64; // padded tiles compute full bM rows (aligned reads)
+        debug_assert!(self.rows as usize <= bm, "tile rows {} exceed bM {bm}", self.rows);
+        let rows = self.rows as f64;
         match self.task_type {
             TaskType::Gemm0 => 2.0 * rows * h as f64 * bn as f64,
             TaskType::Gemm1 => 2.0 * rows * d as f64 * bn as f64,
@@ -170,6 +179,30 @@ mod tests {
         // fused == sum over all column tiles of split tasks
         let split_total = g0 * (d / bn) as f64 + g1 * (h / bn) as f64;
         assert_eq!(fused, split_total);
+    }
+
+    #[test]
+    fn flops_scale_with_actual_rows_not_padded_bm() {
+        // dropless tails: a 1-row tail tile must cost 1/bM of a full tile,
+        // not the same — padded costing skewed LTF ordering & the simulator
+        let mk = |rows| Task {
+            task_type: TaskType::FusedFfn,
+            peer: 0,
+            expert: 0,
+            tile: 0,
+            col: 0,
+            rows,
+            seq: 0,
+        };
+        let (h, d, bm, bn) = (256, 512, 128, 64);
+        let full = mk(128).flops(h, d, bm, bn);
+        let tail = mk(1).flops(h, d, bm, bn);
+        assert_eq!(tail * 128.0, full, "cost is linear in valid rows");
+        for ty in [TaskType::Gemm0, TaskType::Gemm1, TaskType::Combine] {
+            let t32 = Task { task_type: ty, ..mk(32) }.flops(h, d, bm, bn);
+            let t128 = Task { task_type: ty, ..mk(128) }.flops(h, d, bm, bn);
+            assert_eq!(t32 * 4.0, t128, "{ty:?} cost tracks rows");
+        }
     }
 
     #[test]

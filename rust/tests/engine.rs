@@ -140,6 +140,81 @@ fn golden_determinism_across_restarts_modes_and_policies() {
 }
 
 #[test]
+fn packed_backend_packs_once_per_expert_for_the_engine_lifetime() {
+    // acceptance: per-pass weight-packing work is zero after
+    // `MoeEngine::start` — the pack count equals the expert count right
+    // after start and never grows, no matter how many passes run
+    let cfg = Config::preset("tiny").unwrap();
+    assert!(cfg.system.packed, "packed is the default hot path");
+    let params = Arc::new(ModelParams::generate(&cfg, 61));
+    let native = Arc::new(NativeBackend::from_config(&cfg));
+    let backend: Arc<dyn ComputeBackend> = native.clone();
+    let inputs: Vec<Vec<f32>> =
+        (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, 61, r)).collect();
+    assert_eq!(native.pack_count(), 0, "no packing before start");
+    for mode in [TaskGraphMode::Fused, TaskGraphMode::Split] {
+        let engine = MoeEngine::start(cfg.clone(), params.clone(), backend.clone(), mode).unwrap();
+        assert_eq!(
+            native.pack_count(),
+            cfg.model.e as u64,
+            "pack count == expert count after start ({mode:?})"
+        );
+        for _ in 0..3 {
+            engine.submit(&inputs).unwrap().wait().unwrap();
+        }
+        assert_eq!(
+            native.pack_count(),
+            cfg.model.e as u64,
+            "steady-state passes must never re-pack ({mode:?})"
+        );
+        engine.shutdown();
+    }
+}
+
+#[test]
+fn packed_engine_is_bitwise_deterministic_across_restarts_and_policies() {
+    // acceptance: the packed backend preserves the PR 1 combine-order
+    // guarantee — same seed + config => bitwise-identical outputs across
+    // engine restarts, under both routing policies and any processor
+    // count; and the packed kernels reproduce the unpacked outputs on
+    // these shapes (identical f32 accumulation order).
+    let (cfg0, params, _, inputs) = setup("tiny", 67);
+    for policy in [RoutingPolicy::Capacity(1.0), RoutingPolicy::Dropless] {
+        let mut cfg = cfg0.clone();
+        cfg.model.policy = policy;
+        cfg.set("packed", "true").unwrap();
+        cfg.validate().unwrap();
+        let run = |cfg: &Config, processors: usize| {
+            let mut cfg = cfg.clone();
+            cfg.set("processors", &processors.to_string()).unwrap();
+            let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+            MoeEngine::start(cfg, params.clone(), backend, TaskGraphMode::Fused)
+                .unwrap()
+                .forward(&inputs)
+                .unwrap()
+        };
+        let a = run(&cfg, 4);
+        let b = run(&cfg, 4); // restart, fresh backend + fresh packing
+        let c = run(&cfg, 1); // scheduling degenerate case
+        for (r, (x, y)) in a.outputs.iter().zip(&b.outputs).enumerate() {
+            assert_eq!(x, y, "{policy:?}: restart changed rank {r} output bits");
+        }
+        for (r, (x, y)) in a.outputs.iter().zip(&c.outputs).enumerate() {
+            assert_eq!(x, y, "{policy:?}: processor count changed rank {r} output bits");
+        }
+        // packed vs unpacked: tiny's K fits one KC chunk, so even the
+        // accumulation grouping matches and the arms agree exactly
+        let mut un = cfg.clone();
+        un.set("packed", "false").unwrap();
+        let d = run(&un, 4);
+        for (r, (x, y)) in a.outputs.iter().zip(&d.outputs).enumerate() {
+            let diff = max_abs_diff(x, y);
+            assert!(diff < 1e-5, "{policy:?}: packed vs unpacked rank {r} diff {diff}");
+        }
+    }
+}
+
+#[test]
 fn out_of_order_wait_with_dropless_max_skew_reuses_variable_tile_slots() {
     // Engine configured Dropless; pass 1 routes normally, pass 2 is
     // maximally skewed (every token of every rank -> global expert 0), so

@@ -276,7 +276,7 @@ fn dropless_engine_matches_dense_reference_under_fuzzed_skew() {
         |&(ranks, e, k, bm, s_rank, seed)| {
             let cfg = Config {
                 model: ModelConfig { h: 8, d: 8, e, k, bm, bn: 4, policy: RoutingPolicy::Dropless },
-                system: SystemConfig { ranks, nodes: 1, s_rank, processors: 2 },
+                system: SystemConfig { ranks, nodes: 1, s_rank, processors: 2, packed: true },
                 cost: CostModel::h100_nvlink(),
             };
             cfg.validate().map_err(|err| err.to_string())?;
@@ -314,39 +314,142 @@ fn dropless_engine_matches_dense_reference_under_fuzzed_skew() {
 }
 
 // ---------------------------------------------------------------------------
+// Packed GEMM: equal to the naive reference over randomized shapes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn packed_gemm_equals_naive_over_randomized_shapes() {
+    use flashdmoe::gemm::{
+        gemm_bias_packed, gemm_bias_packed_cols, gemm_naive, Epilogue, PackedWeights, MR, NR,
+    };
+    // Shapes deliberately straddle the register-tile and panel boundaries:
+    // m around MR multiples, n around NR multiples, k crossing KC — every
+    // edge-tile path in the packed kernel gets exercised. Equality is
+    // exact (not within-tolerance): the packed kernel replays the naive
+    // k-ascending accumulation order per output element.
+    forall(
+        0x9ACC,
+        200,
+        |g| {
+            let m = g.int(1, 3 * MR + 2);
+            let k = g.int(1, 300); // > KC/2 sometimes; a few cross 256
+            let n = g.int(1, 3 * NR + 2);
+            let seed = g.int(0, u32::MAX as usize) as u64;
+            let with_bias = g.int(0, 1) == 1;
+            let relu = g.int(0, 1) == 1;
+            (m, k, n, seed, with_bias, relu)
+        },
+        |&(m, k, n, seed, with_bias, relu)| {
+            let mut rng = Rng::new(seed);
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(k * n, 1.0);
+            let bias = rng.normal_vec(n, 1.0);
+            let bp = PackedWeights::pack(&b, k, n);
+            let epi = if relu { Epilogue::Relu } else { Epilogue::Identity };
+            // reference: naive GEMM + explicit epilogue
+            let mut want = vec![0.0f32; m * n];
+            gemm_naive(&a, &b, &mut want, m, k, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut v = want[i * n + j];
+                    if with_bias {
+                        v += bias[j];
+                    }
+                    if relu && v < 0.0 {
+                        v = 0.0;
+                    }
+                    want[i * n + j] = v;
+                }
+            }
+            // packed full-width, into a poisoned C (single-write-back proof)
+            let mut got = vec![f32::NAN; m * n];
+            gemm_bias_packed(&a, &bp, with_bias.then_some(&bias[..]), &mut got, m, epi);
+            if got != want {
+                return Err(format!("packed != naive at ({m},{k},{n})"));
+            }
+            // packed NR-aligned column slices must reproduce their columns
+            let mut col0 = 0;
+            while col0 < n {
+                let width = NR.min(n - col0);
+                let mut tile = vec![f32::NAN; m * width];
+                gemm_bias_packed_cols(
+                    &a,
+                    &bp,
+                    col0,
+                    width,
+                    with_bias.then_some(&bias[col0..col0 + width]),
+                    &mut tile,
+                    width,
+                    m,
+                    epi,
+                );
+                for r in 0..m {
+                    if tile[r * width..(r + 1) * width] != want[r * n + col0..r * n + col0 + width]
+                    {
+                        return Err(format!("col slice {col0} mismatch at ({m},{k},{n})"));
+                    }
+                }
+                col0 += width;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
 // Scheduler: work conservation & exactly-once delivery under contention
 // ---------------------------------------------------------------------------
 
 #[test]
 fn scheduler_delivers_exactly_once_under_random_schedules() {
+    // Work-stealing pool: random worker counts, random mixes of external
+    // (round-robin) pushes, owner-local pushes and subscriber steals —
+    // every task must be delivered exactly once, then the pool drains.
     forall(
         0x5C4ED,
         40,
-        |g| (g.int(1, 8), g.int(0, 500)),
-        |&(workers, n_tasks)| {
-            let q = Arc::new(TaskQueue::new());
+        |g| (g.int(1, 8), g.int(0, 500), g.int(0, 3)),
+        |&(workers, n_tasks, style)| {
+            let q = Arc::new(TaskQueue::new(workers));
             let delivered = Arc::new(AtomicU32::new(0));
             let handles: Vec<_> = (0..workers)
-                .map(|_| {
+                .map(|slot| {
                     let q = q.clone();
                     let delivered = delivered.clone();
                     std::thread::spawn(move || {
-                        while q.pop().is_some() {
+                        while q.pop(slot).is_some() {
                             delivered.fetch_add(1, Ordering::Relaxed);
                         }
                     })
                 })
                 .collect();
-            for i in 0..n_tasks {
-                q.push(Task {
-                    task_type: TaskType::Combine,
-                    peer: 0,
-                    expert: 0,
-                    tile: 0,
-                    col: 0,
-                    rows: 1,
-                    seq: i as u32,
-                });
+            let mk = |i: usize| Task {
+                task_type: TaskType::Combine,
+                peer: 0,
+                expert: 0,
+                tile: 0,
+                col: 0,
+                rows: 1,
+                seq: i as u32,
+            };
+            match style {
+                0 => {
+                    for i in 0..n_tasks {
+                        q.push(mk(i));
+                    }
+                }
+                1 => q.push_batch((0..n_tasks).map(mk)),
+                // adversarial: everything lands on one deque; delivery
+                // relies on stealing
+                _ => q.push_batch_local(0, (0..n_tasks).map(mk)),
+            }
+            // the producer side may also help out as a thief
+            let mut stolen = 0usize;
+            if style == 2 {
+                while q.steal().is_some() {
+                    stolen += 1;
+                    delivered.fetch_add(1, Ordering::Relaxed);
+                }
             }
             q.stop_all();
             for h in handles {
@@ -354,7 +457,7 @@ fn scheduler_delivers_exactly_once_under_random_schedules() {
             }
             let got = delivered.load(Ordering::Relaxed) as usize;
             if got != n_tasks {
-                return Err(format!("delivered {got} of {n_tasks}"));
+                return Err(format!("delivered {got} of {n_tasks} (stole {stolen})"));
             }
             let (pushed, popped) = q.counts();
             if pushed != popped {
