@@ -1,151 +1,125 @@
-//! Serving-style driver: a request router + dynamic batcher in front of
-//! the persistent MoE engine — the shape a deployment embeds (vLLM-ish
-//! front end, FlashDMoE back end). Synthetic clients submit variable-size
-//! requests; the batcher packs them into fixed (S_r, H) rank batches
-//! (padding tracked) and drives the engine with **pipelined submission**:
-//! while pass N runs on the resident actors, the batcher packs and
-//! submits batch N+1, so host-side packing is hidden behind engine
-//! compute. Reports per-request latency percentiles, sustained
-//! throughput, batch fill, and the achieved pack/compute overlap.
+//! Serving example: the request-level front door.
+//!
+//! `MoeService` is the deployment shape — a resident continuous batcher
+//! (bounded admission queue, `BatchPolicy` coalescing, round-robin row
+//! packing into variable-shape engine passes, scatter-gather back per
+//! request) over the persistent engine, launched exactly once. Synthetic
+//! clients drive open-loop Poisson traffic of variable-length requests
+//! (`workload::ArrivalProcess`); the example reports request latency
+//! percentiles, queue time, batch fill and throughput, spot-checks
+//! request outputs against the dense per-token reference (dropless
+//! routing makes results independent of co-batching), and asserts the
+//! single-launch contract.
 //!
 //!     cargo run --release --example serve
+//!
+//! Env knobs: `REQUESTS` (default 48), `RATE` req/s (default 400).
 
-use std::collections::VecDeque;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use flashdmoe::config::Config;
-use flashdmoe::coordinator::{MoeEngine, PassHandle, TaskGraphMode};
+use flashdmoe::coordinator::{BatchPolicy, MoeService, RequestOpts, TaskGraphMode};
 use flashdmoe::expert::ModelParams;
 use flashdmoe::runtime::{ComputeBackend, NativeBackend};
+use flashdmoe::util::check::dense_reference_moe;
 use flashdmoe::util::prng::Rng;
-use flashdmoe::util::stats::{fmt_time, summarize, Table};
-
-struct Request {
-    tokens: usize,
-    submitted: Instant,
-}
-
-/// A batch in flight on the engine: its pass handle plus the requests
-/// whose latency clocks stop when the pass completes.
-struct InFlight {
-    handle: PassHandle,
-    requests: Vec<Request>,
-}
+use flashdmoe::util::stats::{fmt_time, max_abs_diff, summarize, Table};
+use flashdmoe::workload::ArrivalProcess;
 
 fn main() -> anyhow::Result<()> {
     let n_requests: usize =
-        std::env::var("REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(64);
-    let cfg = Config::preset("tiny")?;
+        std::env::var("REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(48);
+    let rate: f64 = std::env::var("RATE").ok().and_then(|v| v.parse().ok()).unwrap_or(400.0);
+
+    let mut cfg = Config::preset("tiny")?;
+    // dropless: a request's output never depends on what shares its pass
+    cfg.set("routing_policy", "dropless")?;
     let params = Arc::new(ModelParams::generate(&cfg, 42));
     let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
-    // launch once — every batch below is a doorbell ring on these actors
-    let engine = MoeEngine::start(cfg.clone(), params, backend, TaskGraphMode::Fused)?;
 
-    let (s_rank, h, ranks) = (cfg.system.s_rank, cfg.model.h, cfg.system.ranks);
-    let batch_capacity = s_rank * ranks;
+    // launch once — every request below is served by these resident actors
+    let policy = BatchPolicy::from_config(&cfg);
     println!(
-        "serving: batch capacity {} tokens ({} ranks x {}), H={}",
-        batch_capacity, ranks, s_rank, h
+        "serving: max_tokens={} per pass ({} ranks x {}), max_delay={:?}, queue={} requests",
+        policy.max_tokens,
+        cfg.system.ranks,
+        cfg.system.s_rank,
+        policy.max_delay,
+        policy.queue_requests
     );
+    let service =
+        MoeService::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused, policy)?;
 
-    // synthetic open-loop arrivals: requests of 8..256 tokens
+    // Open-loop Poisson arrivals of variable-length requests, the same
+    // drive shape `harness::serving_bench` measures headlessly — this
+    // example deliberately stays on the raw enqueue/wait API (that's
+    // what it demonstrates) and adds dense-reference spot checks.
+    let h = cfg.model.h;
     let mut rng = Rng::new(7);
-    let mut queue: VecDeque<Request> = (0..n_requests)
-        .map(|_| Request { tokens: 8 + rng.below(249), submitted: Instant::now() })
-        .collect();
+    let arrivals = ArrivalProcess::Poisson { rate }.arrivals(
+        n_requests,
+        (8, (cfg.system.s_rank / 2).max(8)),
+        &mut rng,
+    )?;
+
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n_requests);
+    for a in &arrivals {
+        if let Some(wait) = Duration::from_secs_f64(a.at).checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let tokens = rng.normal_vec(a.tokens * h, 1.0);
+        let handle = service
+            .enqueue(tokens.clone(), RequestOpts::default())
+            .map_err(|e| anyhow::anyhow!("enqueue: {e}"))?;
+        pending.push((tokens, handle));
+    }
 
     let mut latencies = Vec::new();
-    let mut batches = 0usize;
+    let mut queue_times = Vec::new();
     let mut served_tokens = 0usize;
-    let mut padded_tokens = 0usize;
-    let mut pack_secs = 0.0f64; // host-side packing, total
-    let mut pack_overlapped_secs = 0.0f64; // packing done while a pass was in flight
-    let mut wait_secs = 0.0f64; // time actually blocked on the engine
-    let mut in_flight: Option<InFlight> = None;
-    let t0 = Instant::now();
-
-    fn drain(fly: InFlight, latencies: &mut Vec<f64>, wait_secs: &mut f64) -> anyhow::Result<()> {
-        let tw = Instant::now();
-        let out = fly.handle.wait()?;
-        *wait_secs += tw.elapsed().as_secs_f64();
-        let now = Instant::now();
-        for r in &fly.requests {
-            latencies.push(now.duration_since(r.submitted).as_secs_f64());
+    let mut checked = 0usize;
+    for (i, (tokens, handle)) in pending.into_iter().enumerate() {
+        let res = handle.wait()?;
+        anyhow::ensure!(res.tokens.len() == tokens.len(), "request {i}: wrong output shape");
+        served_tokens += res.rows;
+        latencies.push(res.latency_secs);
+        queue_times.push(res.queue_secs);
+        // spot-check against the dense per-token reference
+        if i % 8 == 0 {
+            let want = dense_reference_moe(&cfg, &params, &tokens);
+            let diff = max_abs_diff(&res.tokens, &want);
+            anyhow::ensure!(diff < 1e-5, "request {i}: diverged from dense reference by {diff}");
+            checked += 1;
         }
-        drop(out);
-        Ok(())
-    }
-
-    while !queue.is_empty() {
-        // pack batch N+1 while batch N runs on the resident actors
-        let overlapped = in_flight.is_some();
-        let tp = Instant::now();
-        let mut batch: Vec<Request> = Vec::new();
-        let mut used = 0usize;
-        while let Some(r) = queue.front() {
-            if used + r.tokens > batch_capacity {
-                break;
-            }
-            used += r.tokens;
-            batch.push(queue.pop_front().unwrap());
-        }
-        anyhow::ensure!(!batch.is_empty(), "request larger than batch capacity");
-
-        // pack token embeddings (synthetic) into per-rank inputs
-        let mut flat = rng.normal_vec(batch_capacity * h, 1.0);
-        // zero the padding region so it's visibly inert
-        for v in flat[used * h..].iter_mut() {
-            *v = 0.0;
-        }
-        let inputs: Vec<Vec<f32>> =
-            (0..ranks).map(|r| flat[r * s_rank * h..(r + 1) * s_rank * h].to_vec()).collect();
-        let packed = tp.elapsed().as_secs_f64();
-        pack_secs += packed;
-        if overlapped {
-            // a pass was in flight for this whole pack: the engine was
-            // computing while the host prepared the next batch
-            pack_overlapped_secs += packed;
-        }
-
-        // pipelined submission: hand batch N+1 to the engine *before*
-        // collecting batch N
-        let handle = engine.submit(&inputs)?;
-        batches += 1;
-        served_tokens += used;
-        padded_tokens += batch_capacity - used;
-        if let Some(prev) = in_flight.take() {
-            drain(prev, &mut latencies, &mut wait_secs)?;
-        }
-        in_flight = Some(InFlight { handle, requests: batch });
-    }
-    if let Some(last) = in_flight.take() {
-        drain(last, &mut latencies, &mut wait_secs)?;
     }
     let wall = t0.elapsed().as_secs_f64();
-    let em = engine.metrics();
-    // achieved overlap: the fraction of host packing that happened while
-    // a pass was in flight (the first batch necessarily packs cold)
-    let overlap = if pack_secs > 0.0 { pack_overlapped_secs / pack_secs } else { 0.0 };
+    let report = service.shutdown();
 
-    let s = summarize(&latencies);
+    let lat = summarize(&latencies);
+    let qt = summarize(&queue_times);
     let mut t = Table::new(&["metric", "value"]);
     t.row(&["requests".into(), n_requests.to_string()]);
-    t.row(&["batches".into(), batches.to_string()]);
+    t.row(&["arrival rate".into(), format!("{rate:.0} req/s (Poisson)")]);
     t.row(&["tokens served".into(), served_tokens.to_string()]);
-    t.row(&["batch fill".into(), format!("{:.1}%", served_tokens as f64 / (served_tokens + padded_tokens) as f64 * 100.0)]);
+    t.row(&["latency p50".into(), fmt_time(lat.p50)]);
+    t.row(&["latency p95".into(), fmt_time(lat.p95)]);
+    t.row(&["latency p99".into(), fmt_time(lat.p99)]);
+    t.row(&["queue-time p50".into(), fmt_time(qt.p50)]);
+    t.row(&["batch fill".into(), format!("{:.1}%", report.service.mean_batch_fill() * 100.0)]);
+    t.row(&["peak queue depth".into(), report.service.max_queue_depth.to_string()]);
+    t.row(&[
+        "engine passes".into(),
+        format!("{} ({} launch)", report.service.passes, report.engine.launches),
+    ]);
     t.row(&["throughput".into(), format!("{:.0} tokens/s", served_tokens as f64 / wall)]);
-    t.row(&["latency p50".into(), fmt_time(s.p50)]);
-    t.row(&["latency p95".into(), fmt_time(s.p95)]);
-    t.row(&["latency max".into(), fmt_time(s.max)]);
-    t.row(&["engine passes".into(), format!("{} ({} launch)", em.passes, em.launches)]);
-    t.row(&["host pack time".into(), fmt_time(pack_secs)]);
-    t.row(&["  …while a pass ran".into(), fmt_time(pack_overlapped_secs)]);
-    t.row(&["blocked on engine".into(), fmt_time(wait_secs)]);
-    t.row(&["pack overlap achieved".into(), format!("{:.1}% of packing hidden", overlap * 100.0)]);
+    t.row(&["dense-reference spot checks".into(), format!("{checked} passed @1e-5")]);
     println!("{}", t.render());
-    assert_eq!(em.passes, batches as u64);
-    engine.shutdown();
+
+    assert_eq!(report.service.requests_served, n_requests as u64, "every request served");
+    assert_eq!(report.engine.launches, 1, "one launch for the service lifetime");
+    assert!(report.service.passes >= 1);
     println!("serve OK");
     Ok(())
 }

@@ -1,6 +1,29 @@
 //! Fig 10 — forward latency vs tokens/GPU at 4 and 8 GPUs, E=64,
 //! FlashDMoE (fp32) vs fp16 baselines on the calibrated simulator.
+//!
+//! Serving mode (`SERVING=1`, used by CI): instead of the simulator
+//! sweep, drive the real `MoeService` request-level front end with
+//! open-loop Poisson traffic and emit `BENCH_pr4_serving.json`
+//! (p50/p99 request latency, batch fill, queue depth, throughput;
+//! `REQUESTS`/`RATE` env knobs). The single-launch contract is asserted
+//! inside the harness.
 fn main() {
+    if std::env::var("SERVING").map(|v| v == "1").unwrap_or(false) {
+        let requests: usize =
+            std::env::var("REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(64);
+        let rate: f64 =
+            std::env::var("RATE").ok().and_then(|v| v.parse().ok()).unwrap_or(500.0);
+        let (text, point) = flashdmoe::harness::serving_bench("tiny", requests, rate, 42).unwrap();
+        println!("{text}");
+        flashdmoe::harness::update_bench_json(
+            "BENCH_pr4_serving.json",
+            "serving",
+            flashdmoe::harness::serving_json(&point),
+        )
+        .unwrap();
+        println!("wrote BENCH_pr4_serving.json (serving section)");
+        return;
+    }
     let (text, pts) = flashdmoe::harness::fig10(42).unwrap();
     println!("{text}");
     let f = |e: &str| pts.iter().filter(|p| p.engine == e && p.x == 16384.0).map(|p| p.latency).fold(f64::MAX, f64::min);

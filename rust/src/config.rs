@@ -5,6 +5,29 @@
 //! manifest presets), from `KEY=VALUE` config files, or from CLI overrides.
 //! Everything downstream (gate, layout, coordinator, sim, benches) consumes
 //! these structs — there is a single source of shape/capacity math.
+//!
+//! ## Serving knobs
+//!
+//! The request-level front end ([`MoeService`]) layers a [`BatchPolicy`]
+//! on top of this config; its defaults derive from here
+//! ([`BatchPolicy::from_config`]):
+//!
+//! * `max_tokens` — rows coalesced per engine pass; defaults to
+//!   [`SystemConfig::max_batch_tokens`] (`ranks × s_rank`, one full
+//!   pass), and may be lowered to trade batch fill for latency.
+//! * `max_delay` — how long the oldest queued request waits for
+//!   co-travelers before a partially-filled pass is submitted anyway.
+//! * `queue_requests` + `on_full` — the bounded admission queue and its
+//!   backpressure (`Reject` ⇒ `enqueue` fails fast with `ServiceFull`;
+//!   `Block` ⇒ the caller waits for space).
+//! * `oversize` — requests larger than `max_tokens` are `Split` across
+//!   passes (MoE is per-token, so splitting is result-invariant) or
+//!   `Reject`ed.
+//! * `priority` — FIFO or priority-ordered admission.
+//!
+//! [`MoeService`]: crate::coordinator::MoeService
+//! [`BatchPolicy`]: crate::coordinator::BatchPolicy
+//! [`BatchPolicy::from_config`]: crate::coordinator::BatchPolicy::from_config
 
 use anyhow::{bail, Context, Result};
 
@@ -260,6 +283,15 @@ impl SystemConfig {
     /// Total tokens across ranks.
     pub fn s_total(&self) -> usize {
         self.ranks * self.s_rank
+    }
+
+    /// Row capacity of one engine pass — the hard ceiling on a serving
+    /// batch and the denominator of `PassMetrics::batch_fill`. A
+    /// variable-shape pass may submit any `0..=s_rank` rows per rank, so
+    /// this is the most any single pass can carry: exactly
+    /// [`s_total`](Self::s_total), under its serving-side name.
+    pub fn max_batch_tokens(&self) -> usize {
+        self.s_total()
     }
 
     /// Ranks per node.
@@ -617,6 +649,13 @@ mod tests {
         cfg.set("e", "17").unwrap();
         assert!(cfg.validate().is_err(), "17 experts over 4 ranks must fail");
         assert!(cfg.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn max_batch_tokens_is_one_full_pass() {
+        let cfg = Config::preset("tiny").unwrap(); // 2 ranks x 128 tokens
+        assert_eq!(cfg.system.max_batch_tokens(), 256);
+        assert_eq!(cfg.system.max_batch_tokens(), cfg.system.s_total());
     }
 
     #[test]

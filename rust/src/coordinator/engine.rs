@@ -17,7 +17,19 @@
 //! first drains pass N into a parking buffer), so a serving batcher can
 //! pack the next batch while the current one runs. The actors execute
 //! passes in epoch order; the slots double-buffer inputs/outputs, not
-//! compute.
+//! compute. Epoch assignment is a short critical section: a submitter
+//! that must wait for its slot to drain waits on the *slot's* condvar
+//! with the epoch lock released, so concurrent submitters (the serving
+//! batcher plus direct embedders) interleave instead of serializing
+//! behind one blocked `submit`.
+//!
+//! Passes are **variable-shape**: [`MoeEngine::submit_pass`] takes a
+//! [`PassInput`] whose per-rank row counts `s_r` may be anywhere in
+//! `0..=s_rank` — a partially-filled pass computes and ships only the
+//! rows that exist (no padded-row compute or transfer; the dispatch
+//! plan, announcement tables and task row counts all carry actual
+//! counts). The fixed-shape [`MoeEngine::submit`] is the `s_r == s_rank`
+//! special case and reports `PassMetrics::batch_fill == 1.0`.
 //!
 //! Shutdown is explicit ([`MoeEngine::shutdown`]) or automatic on drop:
 //! the doorbell broadcasts the stop, every rank actor finishes any
@@ -43,9 +55,46 @@ use super::rank::{EngineShared, RankActor, RankOutput, TaskGraphMode};
 
 /// Result of one distributed forward pass.
 pub struct ForwardResult {
-    /// Per-rank output matrices (S_r, H), row-major.
+    /// Per-rank output matrices (s_r, H), row-major — the same per-rank
+    /// row counts the pass was submitted with (`s_rank` rows everywhere
+    /// on the fixed-shape path).
     pub outputs: Vec<Vec<f32>>,
     pub metrics: PassMetrics,
+}
+
+/// Variable-shape input for one engine pass: `per_rank[r]` is rank r's
+/// `(s_r, H)` row-major token matrix with `s_r ≤ s_rank` (zero rows is
+/// legal — such a rank contributes no tokens but still serves its
+/// resident experts for its peers' dispatch). The engine validates the
+/// shape at `submit_pass`; row counts are carried implicitly by the
+/// buffer lengths, so a serving batcher packs exactly the rows it has
+/// and never pads.
+#[derive(Clone, Debug, Default)]
+pub struct PassInput {
+    /// Per-rank token matrices, `per_rank[r]` of length `s_r * H`.
+    pub per_rank: Vec<Vec<f32>>,
+}
+
+impl PassInput {
+    pub fn new(per_rank: Vec<Vec<f32>>) -> Self {
+        Self { per_rank }
+    }
+
+    /// Per-rank row counts at embedding width `h`.
+    pub fn rows(&self, h: usize) -> Vec<usize> {
+        self.per_rank.iter().map(|a| a.len() / h).collect()
+    }
+
+    /// Total token rows across ranks at embedding width `h`.
+    pub fn total_rows(&self, h: usize) -> usize {
+        self.per_rank.iter().map(|a| a.len() / h).sum()
+    }
+}
+
+impl From<&[Vec<f32>]> for PassInput {
+    fn from(inputs: &[Vec<f32>]) -> Self {
+        Self { per_rank: inputs.to_vec() }
+    }
 }
 
 /// How many passes may be in flight (submitted, not yet collected into
@@ -61,6 +110,13 @@ struct PassSlot {
 struct SlotState {
     /// Epoch currently occupying the slot; 0 = free.
     epoch: u64,
+    /// Epoch of the last pass freed (collected or parked) from this
+    /// slot; 0 until the slot's first occupant completes. Together with
+    /// `epoch == 0` this is the install turnstile: the submitter of
+    /// epoch E may install only once its predecessor `E - PASS_SLOTS`
+    /// has been freed, which keeps same-slot installs in epoch order
+    /// even with many concurrent submitters.
+    freed: u64,
     inputs: Option<Arc<Vec<Vec<f32>>>>,
     outputs: Vec<Option<Result<RankOutput>>>,
     deposited: usize,
@@ -76,6 +132,8 @@ struct Submission {
 /// any outstanding [`PassHandle`]s (which keep it alive past engine drop).
 struct EngineInner {
     ranks: usize,
+    /// Per-rank row capacity, for `PassMetrics::batch_fill` accounting.
+    s_rank: usize,
     doorbell: Mutex<Submission>,
     doorbell_cv: Condvar,
     slots: [PassSlot; PASS_SLOTS],
@@ -135,14 +193,17 @@ impl MoeEngine {
         let dims = LayoutDims::from_config(&cfg);
         let heap = Arc::new(SymmetricHeap::new(dims, cfg.system.ranks_per_node()));
         let ranks = cfg.system.ranks;
+        let s_rank = cfg.system.s_rank;
         let shared = Arc::new(EngineShared::new(cfg, params, heap, backend, mode));
         let inner = Arc::new(EngineInner {
             ranks,
+            s_rank,
             doorbell: Mutex::new(Submission { latest: 0, shutdown: false }),
             doorbell_cv: Condvar::new(),
             slots: std::array::from_fn(|_| PassSlot {
                 state: Mutex::new(SlotState {
                     epoch: 0,
+                    freed: 0,
                     inputs: None,
                     outputs: Vec::new(),
                     deposited: 0,
@@ -191,21 +252,13 @@ impl MoeEngine {
         m
     }
 
-    /// Submit one epoch-tagged forward pass. `inputs[r]` is rank r's
-    /// (S_r, H) token matrix; inputs are copied into the pass slot so the
-    /// caller may reuse its buffers immediately. Returns a [`PassHandle`];
-    /// the pass runs on the resident actors while the caller continues
-    /// (e.g. packing the next batch). With both pass slots occupied,
-    /// `submit` first waits for the oldest pass to finish and parks its
-    /// result for the eventual `wait()`.
+    /// Submit one fixed-shape, epoch-tagged forward pass: `inputs[r]` is
+    /// rank r's full (S_r, H) token matrix. This is the legacy front door
+    /// — a thin shim that validates every rank is exactly full (so
+    /// `PassMetrics::batch_fill` reads 1.0) and delegates to
+    /// [`submit_pass`](Self::submit_pass).
     pub fn submit(&self, inputs: &[Vec<f32>]) -> Result<PassHandle> {
         let cfg = &self.shared.cfg;
-        anyhow::ensure!(
-            inputs.len() == cfg.system.ranks,
-            "need {} rank inputs, got {}",
-            cfg.system.ranks,
-            inputs.len()
-        );
         let want = cfg.system.s_rank * cfg.model.h;
         for (r, a) in inputs.iter().enumerate() {
             anyhow::ensure!(
@@ -214,34 +267,82 @@ impl MoeEngine {
                 a.len()
             );
         }
+        self.submit_pass(PassInput::from(inputs))
+    }
 
-        let mut next = self.next_epoch.lock().unwrap();
-        let epoch = *next;
+    /// Submit one **variable-shape** epoch-tagged pass: rank r runs on
+    /// `input.per_rank[r].len() / H` rows, anywhere in `0..=s_rank`.
+    /// Inputs are copied into the pass slot so the caller may reuse its
+    /// buffers immediately. Returns a [`PassHandle`]; the pass runs on
+    /// the resident actors while the caller continues (e.g. packing the
+    /// next batch). With this epoch's slot still occupied by the pass
+    /// from `PASS_SLOTS` submits ago, `submit_pass` waits for that pass
+    /// to finish and parks its result for the eventual `wait()` — that
+    /// wait happens on the slot's condvar with the epoch lock released,
+    /// so one blocked submitter never serializes the others.
+    pub fn submit_pass(&self, input: PassInput) -> Result<PassHandle> {
+        let cfg = &self.shared.cfg;
+        let h = cfg.model.h;
+        anyhow::ensure!(
+            input.per_rank.len() == cfg.system.ranks,
+            "need {} rank inputs, got {}",
+            cfg.system.ranks,
+            input.per_rank.len()
+        );
+        for (r, a) in input.per_rank.iter().enumerate() {
+            anyhow::ensure!(
+                a.len() % h == 0,
+                "rank {r}: input length {} is not a multiple of H = {h}",
+                a.len()
+            );
+            anyhow::ensure!(
+                a.len() / h <= cfg.system.s_rank,
+                "rank {r}: {} rows exceed s_rank = {}",
+                a.len() / h,
+                cfg.system.s_rank
+            );
+        }
+
+        // Epoch assignment is the only work under the epoch lock; all
+        // validation precedes it (an assigned epoch MUST reach its slot,
+        // or every later pass in the same slot would wedge).
+        let epoch = {
+            let mut next = self.next_epoch.lock().unwrap();
+            let e = *next;
+            *next += 1;
+            e
+        };
         let slot = self.inner.slot_of(epoch);
+        let prev = epoch.saturating_sub(PASS_SLOTS as u64);
         {
             let mut st = slot.state.lock().unwrap();
-            if st.epoch != 0 {
-                // Slot still holds the pass from two submits ago: drain it
-                // into the parking buffer (this is the only place submit
-                // can block, and only until that pass completes). A
-                // concurrent `wait()` may collect it first, which frees
-                // the slot under us — re-check ownership after waking.
-                let old = st.epoch;
-                while st.epoch == old && st.deposited < self.inner.ranks {
-                    st = slot.cv.wait(st).unwrap();
+            loop {
+                if st.epoch == 0 && st.freed == prev {
+                    // Our predecessor in this slot was freed (collected
+                    // by a wait() or parked by us/another submitter):
+                    // our turn to install.
+                    break;
                 }
-                if st.epoch == old {
+                if st.epoch == prev && st.deposited >= self.inner.ranks {
+                    // Predecessor complete but uncollected: drain it into
+                    // the parking buffer for its eventual `wait()`.
                     let result = assemble(&self.inner, &mut st);
-                    self.inner.parked.lock().unwrap().insert(old, result);
+                    self.inner.parked.lock().unwrap().insert(prev, result);
+                    break;
                 }
+                // Predecessor still in flight (or not even installed yet,
+                // its submitter racing us): wait on the slot, not the
+                // epoch lock.
+                st = slot.cv.wait(st).unwrap();
             }
             st.epoch = epoch;
-            st.inputs = Some(Arc::new(inputs.to_vec()));
+            st.inputs = Some(Arc::new(input.per_rank));
             st.outputs = (0..self.inner.ranks).map(|_| None).collect();
             st.deposited = 0;
+            // wake rank actors (and same-slot submitters) waiting for the
+            // install
+            slot.cv.notify_all();
         }
-        *next += 1;
-        drop(next);
 
         let mut bell = self.inner.doorbell.lock().unwrap();
         bell.latest = bell.latest.max(epoch);
@@ -339,19 +440,25 @@ fn assemble(inner: &Arc<EngineInner>, st: &mut SlotState) -> Result<ForwardResul
     let rank_outputs: Vec<Result<RankOutput>> =
         st.outputs.iter_mut().map(|o| o.take().expect("deposited output")).collect();
     st.epoch = 0;
+    st.freed = epoch;
     st.inputs = None;
     st.deposited = 0;
     // wake a submit that may be waiting to reuse this slot
     inner.slot_of(epoch).cv.notify_all();
 
     let mut outputs = Vec::with_capacity(rank_outputs.len());
-    let mut metrics = PassMetrics { epoch, ..Default::default() };
+    let mut metrics = PassMetrics {
+        epoch,
+        rows_capacity: inner.ranks * inner.s_rank,
+        ..Default::default()
+    };
     for (rank, ro) in rank_outputs.into_iter().enumerate() {
         let ro = match ro {
             Ok(ro) => ro,
             Err(e) => return Err(e.context(format!("pass {epoch}, rank {rank}"))),
         };
         metrics.wall_secs = metrics.wall_secs.max(ro.metrics.wall_secs);
+        metrics.rows_submitted += ro.metrics.rows_in;
         metrics.ranks.push(ro.metrics);
         outputs.push(ro.out);
     }
@@ -387,8 +494,16 @@ fn rank_main(shared: Arc<EngineShared>, inner: Arc<EngineInner>, rank: usize) {
         }
         let slot = inner.slot_of(next);
         let inputs = {
-            let st = slot.state.lock().unwrap();
-            debug_assert_eq!(st.epoch, next, "pass slot out of sync with actor epoch");
+            // The doorbell only guarantees *some* epoch >= `next` was
+            // submitted; with concurrent submitters, epoch `next + 1`
+            // (the other slot) may ring before `next` is installed here.
+            // An assigned epoch always reaches its slot (validation
+            // precedes assignment), so this wait is bounded by that
+            // submitter's install.
+            let mut st = slot.state.lock().unwrap();
+            while st.epoch != next {
+                st = slot.cv.wait(st).unwrap();
+            }
             st.inputs.as_ref().expect("submitted inputs").clone()
         };
         // A subscriber watchdog panic must not wedge `wait()`ers: convert

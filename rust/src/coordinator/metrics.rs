@@ -2,16 +2,26 @@
 //! of the paper's evaluation quantities (SM utilization, latency, payload
 //! efficiency, and — for the persistent engine — Table 1's launch count).
 //!
-//! Three granularities:
-//! * [`RankMetrics`]   — one rank, one pass (busy/idle, tasks, traffic).
-//! * [`PassMetrics`]   — one epoch-tagged pass across all ranks.
-//! * [`EngineMetrics`] — cumulative over a [`MoeEngine`] lifetime:
+//! Four granularities:
+//! * [`RankMetrics`]    — one rank, one pass (busy/idle, tasks, traffic).
+//! * [`PassMetrics`]    — one epoch-tagged pass across all ranks,
+//!   including the pass's *fill*: passes submitted through the
+//!   variable-shape [`PassInput`] path may run with `s_r < s_rank` rows
+//!   on some ranks, and [`PassMetrics::batch_fill`] reports how much of
+//!   the engine's row capacity the pass actually used (1.0 by contract
+//!   for the legacy fixed-shape `submit`).
+//! * [`EngineMetrics`]  — cumulative over a [`MoeEngine`] lifetime:
 //!   passes served, steady-state busy/wall, resident thread census, and
 //!   the launch-equivalent count, which is exactly 1 — the actors are
 //!   launched once at `MoeEngine::start` and every subsequent pass is a
 //!   doorbell ring, not a launch.
+//! * [`ServiceMetrics`] — cumulative over a [`MoeService`] lifetime:
+//!   request admission/rejection/cancellation counts, tokens served,
+//!   mean pass fill, and the peak request-queue depth.
 //!
 //! [`MoeEngine`]: super::engine::MoeEngine
+//! [`PassInput`]: super::engine::PassInput
+//! [`MoeService`]: super::service::MoeService
 
 /// Fraction of padded dispatch traffic avoided (0.0 when nothing padded).
 fn savings(sent_rows: usize, padded_rows: usize) -> f64 {
@@ -30,6 +40,11 @@ pub struct RankMetrics {
     pub wall_secs: f64,
     /// Processor workers on this rank.
     pub processors: usize,
+    /// Token rows this rank was submitted for the pass (`s_r`). Equal to
+    /// `s_rank` on the fixed-shape path; possibly smaller — or zero, for
+    /// a rank that only serves its experts — under a variable-shape
+    /// [`PassInput`](super::engine::PassInput) pass.
+    pub rows_in: usize,
     /// Tasks executed, by kind.
     pub ffn_tasks: u32,
     pub gemm_tasks: u32,
@@ -81,10 +96,25 @@ pub struct PassMetrics {
     pub epoch: u64,
     /// End-to-end wall time (max over ranks; the paper's forward latency).
     pub wall_secs: f64,
+    /// Token rows actually submitted across ranks (Σ `rows_in`).
+    pub rows_submitted: usize,
+    /// Row capacity of one engine pass (`ranks × s_rank`).
+    pub rows_capacity: usize,
     pub ranks: Vec<RankMetrics>,
 }
 
 impl PassMetrics {
+    /// Fraction of the engine's per-pass row capacity this pass used.
+    /// Exactly 1.0 for the legacy fixed-shape `submit` path (asserted by
+    /// the engine tests); `< 1.0` for a partially-filled variable-shape
+    /// pass — the serving batcher's fill quality, surfaced per pass.
+    pub fn batch_fill(&self) -> f64 {
+        if self.rows_capacity == 0 {
+            return 0.0;
+        }
+        self.rows_submitted as f64 / self.rows_capacity as f64
+    }
+
     /// Mean processor utilization across ranks.
     pub fn utilization(&self) -> f64 {
         if self.ranks.is_empty() {
@@ -163,6 +193,51 @@ impl EngineMetrics {
     }
 }
 
+/// Cumulative metrics over one [`MoeService`](super::service::MoeService)
+/// lifetime — the request-level view in front of the engine's pass-level
+/// accounting.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceMetrics {
+    /// Requests accepted into the bounded queue.
+    pub requests_enqueued: u64,
+    /// Requests fully served (all token rows returned to their handle).
+    pub requests_served: u64,
+    /// Requests refused at `enqueue` (`ServiceFull`, zero tokens,
+    /// oversize under the `Reject` policy, or shutdown).
+    pub requests_rejected: u64,
+    /// Requests whose handle was dropped before completion; their queued
+    /// work is discarded at admission so abandoned requests never occupy
+    /// a pass.
+    pub requests_cancelled: u64,
+    /// Requests failed by an engine submit/pass error (their handles
+    /// observe the error). Accepted requests satisfy
+    /// `enqueued == served + cancelled + failed`.
+    pub requests_failed: u64,
+    /// Token rows served through completed requests.
+    pub tokens_served: u64,
+    /// Engine passes the batcher completed successfully.
+    pub passes: u64,
+    /// Batches whose engine submit or pass errored (their requests are
+    /// counted in `requests_failed`, and contribute no fill).
+    pub passes_failed: u64,
+    /// Σ over *successful* passes of `PassMetrics::batch_fill` (mean =
+    /// `batch_fill_sum / passes`; see [`mean_batch_fill`](Self::mean_batch_fill)).
+    pub batch_fill_sum: f64,
+    /// Peak depth of the bounded request queue.
+    pub max_queue_depth: usize,
+}
+
+impl ServiceMetrics {
+    /// Mean per-pass row fill achieved by the batcher (0.0 before the
+    /// first pass).
+    pub fn mean_batch_fill(&self) -> f64 {
+        if self.passes == 0 {
+            return 0.0;
+        }
+        self.batch_fill_sum / self.passes as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,6 +265,22 @@ mod tests {
     fn pass_throughput() {
         let p = PassMetrics { wall_secs: 0.5, ..Default::default() };
         assert_eq!(p.throughput(1000), 2000.0);
+    }
+
+    #[test]
+    fn batch_fill_tracks_submitted_rows() {
+        let full = PassMetrics { rows_submitted: 256, rows_capacity: 256, ..Default::default() };
+        assert_eq!(full.batch_fill(), 1.0, "fixed-shape passes fill exactly");
+        let partial = PassMetrics { rows_submitted: 64, rows_capacity: 256, ..Default::default() };
+        assert!((partial.batch_fill() - 0.25).abs() < 1e-12);
+        assert_eq!(PassMetrics::default().batch_fill(), 0.0, "no capacity, no fill");
+    }
+
+    #[test]
+    fn service_metrics_mean_fill() {
+        let m = ServiceMetrics { passes: 4, batch_fill_sum: 3.0, ..Default::default() };
+        assert!((m.mean_batch_fill() - 0.75).abs() < 1e-12);
+        assert_eq!(ServiceMetrics::default().mean_batch_fill(), 0.0);
     }
 
     #[test]

@@ -23,9 +23,15 @@
 //! engine.shutdown()  // or drop — actors drained, parked threads joined
 //! ```
 //!
-//! Module map (mirrors Fig. 6, plus the engine front end):
-//! * [`engine`]    — the public persistent [`MoeEngine`]: epoch-tagged
-//!   `submit`/`wait`, double-buffered pass slots, shutdown/join.
+//! Module map (mirrors Fig. 6, plus the serving front end):
+//! * [`service`]   — the request-level [`MoeService`]: a resident
+//!   continuous batcher over the engine — `enqueue` variable-length
+//!   requests, bounded-queue backpressure, coalescing under a
+//!   [`BatchPolicy`], round-robin row packing into variable-shape
+//!   passes, scatter-gather back to per-request results.
+//! * [`engine`]    — the persistent [`MoeEngine`] underneath: epoch-tagged
+//!   `submit`/`submit_pass`/`wait`, double-buffered pass slots,
+//!   variable-shape [`PassInput`] passes, shutdown/join.
 //! * [`scheduler`] — the per-processor work-stealing ready pool +
 //!   interrupt plumbing (Alg. 3), reusable across passes (`stop_all`
 //!   parks a pass, `reopen` re-arms).
@@ -36,8 +42,9 @@
 //! * [`baseline`]  — a real-execution bulk-synchronous baseline
 //!   (Megatron/DeepSpeed-shaped) over the same substrate, for measured
 //!   comparisons and numeric cross-checks.
-//! * [`metrics`]   — per-rank / per-pass / engine-lifetime accounting
-//!   (SM-utilization analog, Table 1's launch count).
+//! * [`metrics`]   — per-rank / per-pass / engine-lifetime / service
+//!   accounting (SM-utilization analog, Table 1's launch count, batch
+//!   fill).
 
 pub mod baseline;
 pub mod engine;
@@ -45,8 +52,13 @@ pub mod metrics;
 pub mod moe;
 pub mod rank;
 pub mod scheduler;
+pub mod service;
 
-pub use engine::{ForwardResult, MoeEngine, PassHandle};
-pub use metrics::{EngineMetrics, PassMetrics, RankMetrics};
+pub use engine::{ForwardResult, MoeEngine, PassHandle, PassInput};
+pub use metrics::{EngineMetrics, PassMetrics, RankMetrics, ServiceMetrics};
 pub use moe::DistributedMoE;
 pub use rank::TaskGraphMode;
+pub use service::{
+    BatchPolicy, Backpressure, MoeService, OversizePolicy, QueueDiscipline, RequestHandle,
+    RequestOpts, RequestResult, ServiceError, ServiceReport,
+};

@@ -374,7 +374,12 @@ impl RankActor {
         Self { shared, rank, queue, slices, bell, workers }
     }
 
-    /// Run one epoch-tagged pass over this rank's (S_r, H) tokens.
+    /// Run one epoch-tagged pass over this rank's (s_r, H) tokens, where
+    /// `s_r = a.len() / H` may be anywhere in `0..=s_rank` — the engine's
+    /// variable-shape `PassInput` path plumbs partially-filled batches
+    /// straight through: the gate routes only the rows that exist, the
+    /// dispatch plan and announcements carry actual tile counts, and a
+    /// zero-row rank still sweeps and serves its experts for its peers.
     /// Steady-state: no allocation of threads, no heap reset — the pass
     /// barrier plus generation-tagged flags do all the cross-pass fencing.
     pub fn run_pass(&self, epoch: u64, a: &[f32]) -> Result<RankOutput> {
@@ -383,7 +388,20 @@ impl RankActor {
         let rank = self.rank;
         let (s_rank, h) = (cfg.system.s_rank, cfg.model.h);
         let e_local = cfg.local_experts();
-        anyhow::ensure!(a.len() == s_rank * h, "rank {rank}: bad input length");
+        anyhow::ensure!(a.len() % h == 0, "rank {rank}: bad input length");
+        let s_rows = a.len() / h;
+        anyhow::ensure!(
+            s_rows <= s_rank,
+            "rank {rank}: {s_rows} rows exceed s_rank = {s_rank}"
+        );
+        // Dropless slot-region invariant: the heap was sized once from
+        // the static worst case, so any admissible row count fits even
+        // if every row routes to one expert.
+        debug_assert!(
+            !cfg.model.policy.is_dropless() || shared.dims.fits_source_rows(s_rows),
+            "rank {rank}: {s_rows} rows overflow the dropless slot region (C = {})",
+            shared.dims.c
+        );
         let epoch32 = epoch as u32;
 
         // ---- pass-start doorbell (NOT a launch) ------------------------------
@@ -406,11 +424,13 @@ impl RankActor {
         let steals_0 = self.queue.steals();
 
         // ---- FusedGate (Alg. 1 line 1) ---------------------------------------
+        // Gated over the pass's actual rows, not the static s_rank: a
+        // partially-filled rank routes (and pays for) only what it holds.
         let scores = shared
             .backend
-            .gate_scores(a, &shared.params.wg, s_rank)
+            .gate_scores(a, &shared.params.wg, s_rows)
             .context("gate")?;
-        let routing = route_from_scores(scores, s_rank, &cfg.model, shared.capacity);
+        let routing = route_from_scores(scores, s_rows, &cfg.model, shared.capacity);
         let dropped = routing.dropped;
         anyhow::ensure!(
             !cfg.model.policy.is_dropless() || dropped == 0,
@@ -589,7 +609,7 @@ impl RankActor {
         }
 
         // ---- deterministic combine fold (dispatch-plan order) ----------------
-        let mut out = vec![0.0f32; s_rank * h];
+        let mut out = vec![0.0f32; s_rows * h];
         for (i, t) in ctx.plan.tiles.iter().enumerate() {
             let y = ctx.combine_stage.read_block(i);
             for (row, &tok) in t.tokens.iter().enumerate() {
@@ -608,6 +628,7 @@ impl RankActor {
             busy_secs: c.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
             wall_secs: wall,
             processors: self.workers.len(),
+            rows_in: s_rows,
             ffn_tasks: c.ffn_completed.load(Ordering::Relaxed),
             gemm_tasks: c.gemm_tasks.load(Ordering::Relaxed),
             combine_tasks: c.combine_completed.load(Ordering::Relaxed),

@@ -1,0 +1,808 @@
+//! `MoeService`: the request-level serving front end — a continuous
+//! batcher resident in front of the persistent [`MoeEngine`].
+//!
+//! The paper's operator is "launch once, stay resident" precisely so a
+//! serving batcher can pack the next batch while the current one runs;
+//! this module is that batcher. Clients call
+//! [`MoeService::enqueue`] with a *variable-length* token sequence and
+//! get back a [`RequestHandle`]; a resident batcher thread admits
+//! requests from a bounded queue (backpressure per
+//! [`Backpressure`]), coalesces them into engine passes under a
+//! [`BatchPolicy`] (`max_tokens` caps the pass, `max_delay` bounds how
+//! long the oldest admitted request waits for co-travelers), round-robins
+//! token rows across ranks into a variable-shape
+//! [`PassInput`](super::engine::PassInput) — partially-filled passes
+//! compute and ship only the rows that exist — and scatter-gathers pass
+//! outputs back into per-request [`RequestResult`]s carrying queue-time
+//! and end-to-end latency.
+//!
+//! Pipelining: the batcher keeps one pass in flight while it packs (and
+//! submits) the next, exactly the double-buffered `submit`/`wait`
+//! contract the engine exposes — so request admission, host packing and
+//! engine compute overlap, and `EngineMetrics::launches` stays 1 for the
+//! whole service lifetime.
+//!
+//! Correctness: an MoE layer is a per-token function (gate, top-k
+//! experts, weighted combine, all per row), so batching arbitrary
+//! requests together — and splitting an oversize request across passes
+//! under [`OversizePolicy::Split`] — never changes any request's output
+//! under `RoutingPolicy::Dropless`. (Under a `Capacity` policy, drops
+//! depend on what else shares the pass; serve with dropless routing when
+//! request-level conformance matters — the service tests do.)
+//!
+//! Shutdown ([`MoeService::shutdown`] or drop) stops admission
+//! (`enqueue` returns [`ServiceError::ShuttingDown`]), drains every
+//! already-queued and in-flight request, then shuts the engine down and
+//! joins the batcher — no request is ever silently dropped; abandoning a
+//! [`RequestHandle`] cancels its request instead of wedging the batcher.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::expert::ModelParams;
+use crate::runtime::ComputeBackend;
+
+use super::engine::{MoeEngine, PassHandle, PassInput};
+use super::metrics::{EngineMetrics, ServiceMetrics};
+use super::rank::TaskGraphMode;
+
+/// What `enqueue` does when the bounded request queue is full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backpressure {
+    /// Fail fast with [`ServiceError::ServiceFull`] (open-loop clients).
+    Reject,
+    /// Block the caller until space frees up (closed-loop clients).
+    Block,
+}
+
+/// What `enqueue` does with a request larger than `max_tokens`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OversizePolicy {
+    /// Split the request into `<= max_tokens` chunks served over
+    /// multiple passes; the handle completes when every chunk has (MoE
+    /// is per-token, so splitting never changes the result).
+    Split,
+    /// Fail fast with [`ServiceError::TooLarge`].
+    Reject,
+}
+
+/// Queue discipline for admission order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueDiscipline {
+    /// Strict arrival order.
+    Fifo,
+    /// Higher [`RequestOpts::priority`] admits first; FIFO within a
+    /// priority level.
+    Priority,
+}
+
+/// The batcher's knobs. Defaults come from
+/// [`BatchPolicy::from_config`]: fill a whole engine pass
+/// (`max_tokens = ranks × s_rank`, see
+/// [`SystemConfig::max_batch_tokens`](crate::config::SystemConfig::max_batch_tokens)),
+/// wait at most 2 ms for co-travelers, FIFO admission, a 256-request
+/// queue that rejects when full, and oversize requests split.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// Max token rows coalesced into one engine pass. Must be
+    /// `1..=ranks × s_rank` (a pass cannot hold more).
+    pub max_tokens: usize,
+    /// Max time the oldest admitted request waits for the batch to fill
+    /// before the pass is submitted anyway.
+    pub max_delay: Duration,
+    /// Admission order.
+    pub priority: QueueDiscipline,
+    /// Bounded queue depth, in requests.
+    pub queue_requests: usize,
+    /// Behavior when the queue is full.
+    pub on_full: Backpressure,
+    /// Behavior for requests larger than `max_tokens`.
+    pub oversize: OversizePolicy,
+}
+
+impl BatchPolicy {
+    pub fn from_config(cfg: &Config) -> Self {
+        Self {
+            max_tokens: cfg.system.max_batch_tokens(),
+            max_delay: Duration::from_millis(2),
+            priority: QueueDiscipline::Fifo,
+            queue_requests: 256,
+            on_full: Backpressure::Reject,
+            oversize: OversizePolicy::Split,
+        }
+    }
+}
+
+/// Per-request options.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RequestOpts {
+    /// Admission priority under [`QueueDiscipline::Priority`] (higher
+    /// admits first); ignored under FIFO.
+    pub priority: i32,
+}
+
+/// Why `enqueue` refused a request. Everything here is a *client-side*
+/// refusal — once a request is accepted it is always either served or
+/// (only if its handle is dropped) cancelled.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// Zero-token requests carry no work.
+    EmptyRequest,
+    /// Flat token buffer is not a multiple of the embedding width H.
+    RaggedRequest { len: usize, h: usize },
+    /// Request exceeds `max_tokens` and the policy is
+    /// [`OversizePolicy::Reject`].
+    TooLarge { rows: usize, max_tokens: usize },
+    /// Bounded queue full and the policy is [`Backpressure::Reject`].
+    ServiceFull,
+    /// The service is shutting down (or already shut down).
+    ShuttingDown,
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::EmptyRequest => write!(f, "request has zero tokens"),
+            ServiceError::RaggedRequest { len, h } => {
+                write!(f, "request length {len} is not a multiple of H = {h}")
+            }
+            ServiceError::TooLarge { rows, max_tokens } => {
+                write!(f, "request of {rows} rows exceeds max_tokens = {max_tokens}")
+            }
+            ServiceError::ServiceFull => write!(f, "request queue is full"),
+            ServiceError::ShuttingDown => write!(f, "service is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// A completed request: output rows plus its serving timeline.
+#[derive(Clone, Debug)]
+pub struct RequestResult {
+    /// (rows, H) row-major output, row i the MoE output of input row i.
+    pub tokens: Vec<f32>,
+    /// Token rows in the request.
+    pub rows: usize,
+    /// Enqueue → first admission into a pass.
+    pub queue_secs: f64,
+    /// Enqueue → completion (end-to-end request latency).
+    pub latency_secs: f64,
+    /// Engine passes this request spanned (1 unless split).
+    pub passes: usize,
+}
+
+// ---------------------------------------------------------------------------
+// internals
+// ---------------------------------------------------------------------------
+
+struct CellState {
+    out: Vec<f32>,
+    /// Chunks not yet fulfilled; the request completes at 0.
+    remaining: usize,
+    /// Earliest admission of any chunk.
+    first_admitted: Option<Instant>,
+    /// Stamped by the batcher the moment the last chunk lands, so a
+    /// client that waits late still reads the true completion latency.
+    completed_at: Option<Instant>,
+    passes: usize,
+    error: Option<String>,
+    done: bool,
+}
+
+/// One request's completion cell, shared between its [`RequestHandle`]
+/// and the batcher. Lock order: a cell lock is always taken *leaf-most*
+/// (never while holding the queue lock and vice versa).
+struct RequestCell {
+    state: Mutex<CellState>,
+    cv: Condvar,
+    cancelled: AtomicBool,
+    /// Metrics latch: each accepted request is claimed by exactly one of
+    /// served / cancelled / failed, whatever races between a dropped
+    /// handle, a purge, and an engine error (a cancelled split request
+    /// whose other chunk rides a failing pass must not count twice).
+    accounted: AtomicBool,
+    enqueued_at: Instant,
+    rows: usize,
+}
+
+impl RequestCell {
+    /// Claim this request for one metrics bucket; true exactly once.
+    fn claim(&self) -> bool {
+        !self.accounted.swap(true, Ordering::AcqRel)
+    }
+
+    /// Fail the request; returns true iff this call transitioned it to
+    /// done (completion/error visibility — metrics go through `claim`).
+    fn fail(&self, msg: String) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if st.done {
+            return false;
+        }
+        st.error = Some(msg);
+        st.done = true;
+        st.completed_at = Some(Instant::now());
+        self.cv.notify_all();
+        true
+    }
+}
+
+/// Handle to an accepted request. `wait()` blocks for the
+/// [`RequestResult`]; dropping the handle unwaited cancels the request
+/// (queued chunks are discarded at admission; a chunk already in flight
+/// completes harmlessly and its result is discarded).
+pub struct RequestHandle {
+    cell: Arc<RequestCell>,
+    waited: bool,
+}
+
+impl RequestHandle {
+    /// Token rows in the request.
+    pub fn rows(&self) -> usize {
+        self.cell.rows
+    }
+
+    /// Block until the request completes and return its result.
+    pub fn wait(mut self) -> Result<RequestResult> {
+        self.waited = true;
+        let cell = &*self.cell;
+        let mut st = cell.state.lock().unwrap();
+        while !st.done {
+            st = cell.cv.wait(st).unwrap();
+        }
+        if let Some(e) = &st.error {
+            anyhow::bail!("request failed: {e}");
+        }
+        let completed = st.completed_at.unwrap_or_else(Instant::now);
+        Ok(RequestResult {
+            tokens: std::mem::take(&mut st.out),
+            rows: cell.rows,
+            queue_secs: st
+                .first_admitted
+                .map(|t| t.duration_since(cell.enqueued_at).as_secs_f64())
+                .unwrap_or(0.0),
+            latency_secs: completed.duration_since(cell.enqueued_at).as_secs_f64(),
+            passes: st.passes,
+        })
+    }
+}
+
+impl Drop for RequestHandle {
+    fn drop(&mut self) {
+        if !self.waited {
+            self.cell.cancelled.store(true, Ordering::Release);
+        }
+    }
+}
+
+/// One `<= max_tokens` slice of a request, the unit the batcher admits.
+struct Chunk {
+    cell: Arc<RequestCell>,
+    tokens: Vec<f32>,
+    rows: usize,
+    /// Row offset of this chunk in its request's output.
+    out_offset: usize,
+    priority: i32,
+    /// Last chunk of its request (drives request-level queue accounting).
+    last: bool,
+}
+
+struct QueueState {
+    chunks: VecDeque<Chunk>,
+    /// Requests with at least one chunk still queued (the bounded-depth
+    /// unit).
+    queued_requests: usize,
+    /// False once shutdown begins; `enqueue` refuses from then on.
+    accepting: bool,
+    metrics: ServiceMetrics,
+    /// Final engine metrics, published by the batcher as it exits.
+    engine_metrics: Option<EngineMetrics>,
+}
+
+struct ServiceShared {
+    h: usize,
+    ranks: usize,
+    policy: BatchPolicy,
+    queue: Mutex<QueueState>,
+    /// Batcher wakeups (new work / shutdown).
+    work_cv: Condvar,
+    /// Blocked enqueuers ([`Backpressure::Block`]) wait here for space.
+    space_cv: Condvar,
+}
+
+/// A pass in flight on the engine, with everything needed to scatter its
+/// outputs back to the requests that rode in it.
+struct InFlight {
+    handle: PassHandle,
+    /// (chunk, base virtual-row offset) in admission order.
+    chunks: Vec<(Chunk, usize)>,
+    admitted_at: Instant,
+}
+
+/// Final report returned by [`MoeService::shutdown`].
+#[derive(Clone, Debug)]
+pub struct ServiceReport {
+    pub service: ServiceMetrics,
+    /// Engine-lifetime metrics; `launches == 1` for the whole service
+    /// lifetime (the batcher starts the engine exactly once).
+    pub engine: EngineMetrics,
+}
+
+/// The request-level serving API. See the module docs for the design;
+/// the one-line version:
+///
+/// ```text
+/// MoeService::start(cfg, params, backend, mode, policy)  // engine launched ONCE
+///   -> enqueue(tokens, opts) -> RequestHandle             //  × N clients, concurrent
+///   -> handle.wait()         -> RequestResult             //  per request
+/// -> shutdown() / drop   // admission closed, queue drained, engine joined
+/// ```
+pub struct MoeService {
+    shared: Arc<ServiceShared>,
+    batcher: Option<JoinHandle<()>>,
+}
+
+impl MoeService {
+    /// Validate the policy, start the persistent engine (the single
+    /// launch of the service lifetime) and spawn the resident batcher.
+    pub fn start(
+        cfg: Config,
+        params: Arc<ModelParams>,
+        backend: Arc<dyn ComputeBackend>,
+        mode: TaskGraphMode,
+        policy: BatchPolicy,
+    ) -> Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(policy.max_tokens > 0, "max_tokens must be positive");
+        anyhow::ensure!(
+            policy.max_tokens <= cfg.system.max_batch_tokens(),
+            "max_tokens ({}) exceeds one pass's row capacity ({} = ranks x s_rank)",
+            policy.max_tokens,
+            cfg.system.max_batch_tokens()
+        );
+        anyhow::ensure!(policy.queue_requests > 0, "queue_requests must be positive");
+        let engine = MoeEngine::start(cfg.clone(), params, backend, mode)?;
+        let shared = Arc::new(ServiceShared {
+            h: cfg.model.h,
+            ranks: cfg.system.ranks,
+            policy,
+            queue: Mutex::new(QueueState {
+                chunks: VecDeque::new(),
+                queued_requests: 0,
+                accepting: true,
+                metrics: ServiceMetrics::default(),
+                engine_metrics: None,
+            }),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+        });
+        let batcher = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("flash-batcher".into())
+                .spawn(move || batcher_main(shared, engine))
+                .expect("spawn service batcher")
+        };
+        Ok(Self { shared, batcher: Some(batcher) })
+    }
+
+    /// Convenience: start with [`BatchPolicy::from_config`] defaults.
+    pub fn with_defaults(
+        cfg: Config,
+        params: Arc<ModelParams>,
+        backend: Arc<dyn ComputeBackend>,
+        mode: TaskGraphMode,
+    ) -> Result<Self> {
+        let policy = BatchPolicy::from_config(&cfg);
+        Self::start(cfg, params, backend, mode, policy)
+    }
+
+    /// Submit one request: a flat `(rows, H)` row-major token buffer,
+    /// `rows >= 1`. Returns immediately with a [`RequestHandle`] (or an
+    /// admission refusal — see [`ServiceError`]); the batcher coalesces
+    /// the request into one or more engine passes per the
+    /// [`BatchPolicy`].
+    pub fn enqueue(
+        &self,
+        tokens: Vec<f32>,
+        opts: RequestOpts,
+    ) -> std::result::Result<RequestHandle, ServiceError> {
+        let h = self.shared.h;
+        let policy = &self.shared.policy;
+        if tokens.is_empty() {
+            self.count_rejected();
+            return Err(ServiceError::EmptyRequest);
+        }
+        if tokens.len() % h != 0 {
+            self.count_rejected();
+            return Err(ServiceError::RaggedRequest { len: tokens.len(), h });
+        }
+        let rows = tokens.len() / h;
+        if rows > policy.max_tokens && policy.oversize == OversizePolicy::Reject {
+            self.count_rejected();
+            return Err(ServiceError::TooLarge { rows, max_tokens: policy.max_tokens });
+        }
+
+        let mut q = self.shared.queue.lock().unwrap();
+        loop {
+            if !q.accepting {
+                q.metrics.requests_rejected += 1;
+                return Err(ServiceError::ShuttingDown);
+            }
+            if q.queued_requests < policy.queue_requests {
+                break;
+            }
+            match policy.on_full {
+                Backpressure::Reject => {
+                    q.metrics.requests_rejected += 1;
+                    return Err(ServiceError::ServiceFull);
+                }
+                Backpressure::Block => q = self.shared.space_cv.wait(q).unwrap(),
+            }
+        }
+
+        let cell = Arc::new(RequestCell {
+            state: Mutex::new(CellState {
+                out: vec![0.0f32; rows * h],
+                remaining: rows.div_ceil(policy.max_tokens),
+                first_admitted: None,
+                completed_at: None,
+                passes: 0,
+                error: None,
+                done: false,
+            }),
+            cv: Condvar::new(),
+            cancelled: AtomicBool::new(false),
+            accounted: AtomicBool::new(false),
+            enqueued_at: Instant::now(),
+            rows,
+        });
+        // Chunk the request ([`OversizePolicy::Split`]; a request within
+        // max_tokens is exactly one chunk — the dominant case, which
+        // moves the caller's buffer instead of copying it) and insert
+        // per the discipline.
+        let insert = |q: &mut QueueState, chunk: Chunk| match policy.priority {
+            QueueDiscipline::Fifo => q.chunks.push_back(chunk),
+            QueueDiscipline::Priority => {
+                // stable: after the last chunk with priority >= ours
+                let pos = q
+                    .chunks
+                    .iter()
+                    .position(|c| c.priority < chunk.priority)
+                    .unwrap_or(q.chunks.len());
+                q.chunks.insert(pos, chunk);
+            }
+        };
+        let n_chunks = rows.div_ceil(policy.max_tokens);
+        if n_chunks == 1 {
+            let chunk = Chunk {
+                cell: cell.clone(),
+                tokens,
+                rows,
+                out_offset: 0,
+                priority: opts.priority,
+                last: true,
+            };
+            insert(&mut q, chunk);
+        } else {
+            for i in 0..n_chunks {
+                let lo = i * policy.max_tokens;
+                let hi = ((i + 1) * policy.max_tokens).min(rows);
+                let chunk = Chunk {
+                    cell: cell.clone(),
+                    tokens: tokens[lo * h..hi * h].to_vec(),
+                    rows: hi - lo,
+                    out_offset: lo,
+                    priority: opts.priority,
+                    last: i + 1 == n_chunks,
+                };
+                insert(&mut q, chunk);
+            }
+        }
+        q.queued_requests += 1;
+        q.metrics.requests_enqueued += 1;
+        q.metrics.max_queue_depth = q.metrics.max_queue_depth.max(q.queued_requests);
+        self.shared.work_cv.notify_all();
+        Ok(RequestHandle { cell, waited: false })
+    }
+
+    fn count_rejected(&self) {
+        self.shared.queue.lock().unwrap().metrics.requests_rejected += 1;
+    }
+
+    /// Snapshot of the cumulative service metrics.
+    pub fn metrics(&self) -> ServiceMetrics {
+        self.shared.queue.lock().unwrap().metrics.clone()
+    }
+
+    /// Stop admission, drain every queued and in-flight request, shut the
+    /// engine down and join the batcher. Also runs on drop; calling it
+    /// explicitly returns the final [`ServiceReport`].
+    pub fn shutdown(mut self) -> ServiceReport {
+        self.shutdown_and_join();
+        let q = self.shared.queue.lock().unwrap();
+        ServiceReport {
+            service: q.metrics.clone(),
+            engine: q.engine_metrics.clone().unwrap_or_default(),
+        }
+    }
+
+    fn shutdown_and_join(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.accepting = false;
+            self.shared.work_cv.notify_all();
+            self.shared.space_cv.notify_all();
+        }
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+    }
+}
+
+impl Drop for MoeService {
+    fn drop(&mut self) {
+        self.shutdown_and_join();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the batcher thread
+// ---------------------------------------------------------------------------
+
+enum Admission {
+    /// A coalesced batch ready to pack and submit.
+    Batch(Vec<Chunk>),
+    /// Queue empty with a pass still in flight: go collect it.
+    Collect,
+    /// Queue drained and admission closed: exit.
+    Exit,
+}
+
+fn batcher_main(shared: Arc<ServiceShared>, engine: MoeEngine) {
+    let mut in_flight: Option<InFlight> = None;
+    loop {
+        match admit(&shared, in_flight.is_some()) {
+            Admission::Batch(chunks) => {
+                let admitted_at = Instant::now();
+                let input = pack(&shared, &chunks);
+                match engine.submit_pass(input) {
+                    Ok(handle) => {
+                        let mut base = 0usize;
+                        let fly = InFlight {
+                            handle,
+                            chunks: chunks
+                                .into_iter()
+                                .map(|c| {
+                                    let b = base;
+                                    base += c.rows;
+                                    (c, b)
+                                })
+                                .collect(),
+                            admitted_at,
+                        };
+                        // pipelined: pass N stays in flight while pass
+                        // N+1 was packed and submitted above
+                        if let Some(prev) = in_flight.replace(fly) {
+                            collect(&shared, prev);
+                        }
+                    }
+                    Err(e) => {
+                        let msg = format!("engine submit failed: {e:#}");
+                        let failed = chunks
+                            .iter()
+                            .filter(|c| c.cell.fail(msg.clone()) && c.cell.claim())
+                            .count() as u64;
+                        let mut q = shared.queue.lock().unwrap();
+                        q.metrics.passes_failed += 1;
+                        q.metrics.requests_failed += failed;
+                    }
+                }
+            }
+            Admission::Collect => {
+                if let Some(prev) = in_flight.take() {
+                    collect(&shared, prev);
+                }
+            }
+            Admission::Exit => {
+                if let Some(prev) = in_flight.take() {
+                    collect(&shared, prev);
+                }
+                break;
+            }
+        }
+    }
+    // Publish the engine's final accounting, then take it down (drop
+    // joins the rank actors).
+    let em = engine.metrics();
+    engine.shutdown();
+    shared.queue.lock().unwrap().engine_metrics = Some(em);
+}
+
+/// Drop cancelled chunks in place, keeping the request-level accounting
+/// straight. Caller holds the queue lock.
+fn purge_cancelled(shared: &ServiceShared, q: &mut QueueState) {
+    let mut freed = false;
+    let QueueState { chunks, queued_requests, metrics, .. } = q;
+    chunks.retain(|c| {
+        if !c.cell.cancelled.load(Ordering::Acquire) {
+            return true;
+        }
+        if c.last {
+            *queued_requests -= 1;
+            if c.cell.claim() {
+                metrics.requests_cancelled += 1;
+            }
+            freed = true;
+        }
+        false
+    });
+    if freed {
+        shared.space_cv.notify_all();
+    }
+}
+
+/// Admit the next batch: wait for work, then coalesce chunks until the
+/// batch is full or the oldest waiter's `max_delay` expires.
+fn admit(shared: &ServiceShared, have_in_flight: bool) -> Admission {
+    let policy = &shared.policy;
+    let mut q = shared.queue.lock().unwrap();
+    'restart: loop {
+        loop {
+            purge_cancelled(shared, &mut q);
+            if !q.chunks.is_empty() {
+                break;
+            }
+            if have_in_flight {
+                // Nothing to pack; the in-flight pass's requests are
+                // waiting on the batcher's collect, which nothing else
+                // performs.
+                return Admission::Collect;
+            }
+            if !q.accepting {
+                return Admission::Exit;
+            }
+            q = shared.work_cv.wait(q).unwrap();
+        }
+
+        let mut batch: Vec<Chunk> = Vec::new();
+        let mut rows = 0usize;
+        // The coalescing window closes max_delay after the oldest queued
+        // chunk's *enqueue* (not admission), so a request's time-to-pass
+        // is bounded even when traffic trickles.
+        let deadline = q.chunks.front().unwrap().cell.enqueued_at + policy.max_delay;
+        loop {
+            // admit everything that fits right now (chunks are
+            // <= max_tokens by construction, so an empty batch always
+            // admits the front chunk)
+            while let Some(c) = q.chunks.front() {
+                if c.cell.cancelled.load(Ordering::Acquire) {
+                    purge_cancelled(shared, &mut q);
+                    continue;
+                }
+                if rows + c.rows > policy.max_tokens {
+                    break;
+                }
+                let c = q.chunks.pop_front().unwrap();
+                if c.last {
+                    q.queued_requests -= 1;
+                    shared.space_cv.notify_all();
+                }
+                rows += c.rows;
+                batch.push(c);
+            }
+            if rows >= policy.max_tokens || !q.accepting {
+                break; // full, or shutting down: don't dawdle
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (qq, timeout) = shared.work_cv.wait_timeout(q, deadline - now).unwrap();
+            q = qq;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        // drop chunks whose requests were abandoned between admission
+        // and packing (claiming each such request once, via its last
+        // chunk — queue-depth accounting already happened at pop); an
+        // all-cancelled batch restarts the wait
+        batch.retain(|c| {
+            let cancelled = c.cell.cancelled.load(Ordering::Acquire);
+            if cancelled && c.last && c.cell.claim() {
+                q.metrics.requests_cancelled += 1;
+            }
+            !cancelled
+        });
+        if batch.is_empty() {
+            continue 'restart;
+        }
+        return Admission::Batch(batch);
+    }
+}
+
+/// Pack a batch into a variable-shape pass: virtual row v (chunks
+/// concatenated in admission order) goes to rank `v % ranks`, local row
+/// `v / ranks` — round-robin, so per-rank loads differ by at most one
+/// row and every rank's `s_r <= ceil(total / ranks) <= s_rank`.
+fn pack(shared: &ServiceShared, batch: &[Chunk]) -> PassInput {
+    let (h, ranks) = (shared.h, shared.ranks);
+    let total: usize = batch.iter().map(|c| c.rows).sum();
+    let counts: Vec<usize> =
+        (0..ranks).map(|r| total / ranks + usize::from(r < total % ranks)).collect();
+    let mut per_rank: Vec<Vec<f32>> =
+        counts.iter().map(|&c| vec![0.0f32; c * h]).collect();
+    let mut v = 0usize;
+    for c in batch {
+        for j in 0..c.rows {
+            let (dst, pos) = (v % ranks, v / ranks);
+            per_rank[dst][pos * h..(pos + 1) * h]
+                .copy_from_slice(&c.tokens[j * h..(j + 1) * h]);
+            v += 1;
+        }
+    }
+    PassInput::new(per_rank)
+}
+
+/// Collect one in-flight pass and scatter its outputs back to the
+/// requests that rode in it (inverse of [`pack`]'s round-robin).
+fn collect(shared: &ServiceShared, fly: InFlight) {
+    let (h, ranks) = (shared.h, shared.ranks);
+    let admitted_at = fly.admitted_at;
+    match fly.handle.wait() {
+        Ok(res) => {
+            let mut served_requests = 0u64;
+            let mut served_tokens = 0u64;
+            for (c, base) in &fly.chunks {
+                let mut st = c.cell.state.lock().unwrap();
+                if st.done {
+                    continue; // another chunk already failed the request
+                }
+                for j in 0..c.rows {
+                    let v = base + j;
+                    let (src, pos) = (v % ranks, v / ranks);
+                    let row = &res.outputs[src][pos * h..(pos + 1) * h];
+                    st.out[(c.out_offset + j) * h..(c.out_offset + j + 1) * h]
+                        .copy_from_slice(row);
+                }
+                if st.first_admitted.is_none() {
+                    st.first_admitted = Some(admitted_at);
+                }
+                st.passes += 1;
+                st.remaining -= 1;
+                if st.remaining == 0 {
+                    st.done = true;
+                    st.completed_at = Some(Instant::now());
+                    if c.cell.claim() {
+                        served_requests += 1;
+                        served_tokens += c.cell.rows as u64;
+                    }
+                    c.cell.cv.notify_all();
+                }
+            }
+            let mut q = shared.queue.lock().unwrap();
+            q.metrics.passes += 1;
+            q.metrics.batch_fill_sum += res.metrics.batch_fill();
+            q.metrics.requests_served += served_requests;
+            q.metrics.tokens_served += served_tokens;
+        }
+        Err(e) => {
+            let msg = format!("engine pass failed: {e:#}");
+            let failed = fly
+                .chunks
+                .iter()
+                .filter(|(c, _)| c.cell.fail(msg.clone()) && c.cell.claim())
+                .count() as u64;
+            let mut q = shared.queue.lock().unwrap();
+            q.metrics.passes_failed += 1;
+            q.metrics.requests_failed += failed;
+        }
+    }
+}

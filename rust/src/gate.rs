@@ -137,6 +137,13 @@ pub fn gate_and_route(
 }
 
 /// Routing from precomputed softmax scores (S, E).
+///
+/// `s` is the *actual* row count of the pass — under the engine's
+/// variable-shape `PassInput` path a rank may gate any `0..=s_rank`
+/// rows (zero included: an expert-only rank routes nothing and the
+/// result is an empty, drop-free routing). Capacity buffers are sized
+/// by the caller from the static worst case, so fewer rows can only
+/// mean fewer drops.
 pub fn route_from_scores(
     scores: Vec<f32>,
     s: usize,
@@ -407,6 +414,35 @@ mod tests {
         assert_eq!(plan.tiles.iter().map(|t| t.tile).collect::<Vec<_>>(), vec![0, 1, 2]);
         assert_eq!(plan.sent_rows, s, "only valid rows travel");
         assert_eq!(plan.padded_rows, cap, "one active expert x slot region");
+    }
+
+    #[test]
+    fn zero_and_partial_row_passes_route_cleanly() {
+        // the variable-shape engine path gates whatever rows exist; zero
+        // rows is an empty, drop-free routing with an empty plan
+        let m = model(4, 2, 4);
+        let r0 = route_from_scores(Vec::new(), 0, &m, 8);
+        assert_eq!(r0.routes.len(), 0);
+        assert_eq!(r0.dropped, 0);
+        assert!(r0.expert_load.iter().all(|&l| l == 0));
+        let p0 = dispatch_plan(&r0, m.bm, |e| e % 2);
+        assert!(p0.tiles.is_empty());
+        assert_eq!(p0.sent_rows, 0);
+        // partial rows: the plan covers exactly the routed pairs of the
+        // rows that exist — nothing padded up to any static batch shape
+        let mut rng = Rng::new(77);
+        let rows = 5; // deliberately not a bM multiple
+        let scores = {
+            let mut s = rng.normal_vec(rows * m.e, 1.0);
+            crate::gate::softmax_rows(&mut s, m.e);
+            s
+        };
+        let r = route_from_scores(scores, rows, &m, 64);
+        assert_eq!(r.routes.len() + r.dropped, rows * m.k);
+        let p = dispatch_plan(&r, m.bm, |e| e % 2);
+        let covered: usize = p.tiles.iter().map(|t| t.tokens.len()).sum();
+        assert_eq!(covered, r.routes.len());
+        assert_eq!(p.sent_rows, r.routes.len(), "only existing rows travel");
     }
 
     #[test]

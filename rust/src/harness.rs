@@ -12,7 +12,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::config::{Config, RoutingPolicy};
-use crate::coordinator::{MoeEngine, TaskGraphMode};
+use crate::coordinator::{BatchPolicy, MoeEngine, MoeService, RequestOpts, TaskGraphMode};
 use crate::expert::{generate_tokens, ModelParams};
 use crate::gemm;
 use crate::layout;
@@ -22,7 +22,7 @@ use crate::sim::straggler;
 use crate::util::json::{self, Json};
 use crate::util::prng::Rng;
 use crate::util::stats::{fmt_bytes, fmt_time, max_abs_diff, summarize, Table};
-use crate::workload::{cluster_workload, Skew};
+use crate::workload::{cluster_workload, ArrivalProcess, Skew};
 
 /// Engines compared in the latency/throughput figures.
 pub fn figure_engines() -> Vec<Engine> {
@@ -581,6 +581,144 @@ pub fn hotpath_json(points: &[HotPathPoint]) -> Json {
             })
             .collect(),
     )
+}
+
+// ---------------------------------------------------------------------------
+// PR-4 serving: request-level latency through the MoeService batcher
+// ---------------------------------------------------------------------------
+
+/// One serving-mode measurement on the real `MoeService` (request-level
+/// front end over the persistent engine).
+#[derive(Clone, Debug)]
+pub struct ServingPoint {
+    pub requests: usize,
+    /// Open-loop arrival rate driven (requests/second).
+    pub rate: f64,
+    /// Request latency percentiles (enqueue → completion), seconds.
+    pub latency_p50: f64,
+    pub latency_p99: f64,
+    /// Median queue time (enqueue → first admission), seconds.
+    pub queue_p50: f64,
+    /// Mean per-pass row fill achieved by the batcher.
+    pub batch_fill: f64,
+    /// Peak bounded-queue depth (requests).
+    pub max_queue_depth: usize,
+    /// Engine passes the batcher submitted.
+    pub passes: u64,
+    /// Tokens served per wall second.
+    pub throughput: f64,
+    /// Engine launch count over the service lifetime (must be 1).
+    pub launches: u64,
+}
+
+/// Drive the serving front end with open-loop Poisson traffic: `rate`
+/// requests/second of `8..=s_rank/2`-row requests, served by a
+/// `MoeService` under dropless routing (request outputs independent of
+/// co-batching), and report request-level latency, fill and queue
+/// pressure. The single engine launch over the run is asserted, not
+/// assumed.
+pub fn serving_bench(
+    preset: &str,
+    requests: usize,
+    rate: f64,
+    seed: u64,
+) -> Result<(String, ServingPoint)> {
+    let mut cfg = Config::preset(preset)?;
+    cfg.set("routing_policy", "dropless")?;
+    cfg.validate()?;
+    let params = Arc::new(ModelParams::generate(&cfg, seed));
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+    let policy = BatchPolicy::from_config(&cfg);
+    let service =
+        MoeService::start(cfg.clone(), params, backend, TaskGraphMode::Fused, policy)?;
+
+    let h = cfg.model.h;
+    let mut rng = Rng::new(seed ^ 0x5E47);
+    let arrivals = ArrivalProcess::Poisson { rate }.arrivals(
+        requests,
+        (8, (cfg.system.s_rank / 2).max(8)),
+        &mut rng,
+    )?;
+
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::with_capacity(requests);
+    for a in &arrivals {
+        // open loop: hold to the arrival clock, never to completions
+        let due = std::time::Duration::from_secs_f64(a.at);
+        if let Some(wait) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let tokens = rng.normal_vec(a.tokens * h, 1.0);
+        handles.push(
+            service
+                .enqueue(tokens, RequestOpts::default())
+                .map_err(|e| anyhow::anyhow!("enqueue failed: {e}"))?,
+        );
+    }
+    let mut latencies = Vec::with_capacity(requests);
+    let mut queue_times = Vec::with_capacity(requests);
+    let mut tokens_served = 0usize;
+    for hdl in handles {
+        let res = hdl.wait()?;
+        tokens_served += res.rows;
+        latencies.push(res.latency_secs);
+        queue_times.push(res.queue_secs);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let report = service.shutdown();
+    anyhow::ensure!(
+        report.engine.launches == 1,
+        "service lifetime must cost exactly one launch, saw {}",
+        report.engine.launches
+    );
+
+    let lat = summarize(&latencies);
+    let qt = summarize(&queue_times);
+    let point = ServingPoint {
+        requests,
+        rate,
+        latency_p50: lat.p50,
+        latency_p99: lat.p99,
+        queue_p50: qt.p50,
+        batch_fill: report.service.mean_batch_fill(),
+        max_queue_depth: report.service.max_queue_depth,
+        passes: report.service.passes,
+        throughput: if wall > 0.0 { tokens_served as f64 / wall } else { 0.0 },
+        launches: report.engine.launches,
+    };
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["requests".into(), point.requests.to_string()]);
+    t.row(&["arrival rate".into(), format!("{:.0} req/s (Poisson)", point.rate)]);
+    t.row(&["latency p50".into(), fmt_time(point.latency_p50)]);
+    t.row(&["latency p99".into(), fmt_time(point.latency_p99)]);
+    t.row(&["queue-time p50".into(), fmt_time(point.queue_p50)]);
+    t.row(&["batch fill".into(), format!("{:.1}%", point.batch_fill * 100.0)]);
+    t.row(&["peak queue depth".into(), point.max_queue_depth.to_string()]);
+    t.row(&["engine passes".into(), format!("{} ({} launch)", point.passes, point.launches)]);
+    t.row(&["throughput".into(), format!("{:.0} tokens/s", point.throughput)]);
+    Ok((
+        format!(
+            "## Serving — request-level latency through MoeService ({preset}, {requests} requests)\n\n{}",
+            t.render()
+        ),
+        point,
+    ))
+}
+
+/// JSON row for a [`serving_bench`] point (`BENCH_pr4_serving.json`).
+pub fn serving_json(p: &ServingPoint) -> Json {
+    json::obj(vec![
+        ("requests", json::num(p.requests as f64)),
+        ("rate_rps", json::num(p.rate)),
+        ("latency_p50", json::num(p.latency_p50)),
+        ("latency_p99", json::num(p.latency_p99)),
+        ("queue_p50", json::num(p.queue_p50)),
+        ("batch_fill", json::num(p.batch_fill)),
+        ("max_queue_depth", json::num(p.max_queue_depth as f64)),
+        ("passes", json::num(p.passes as f64)),
+        ("throughput_tokens_per_sec", json::num(p.throughput)),
+        ("launches", json::num(p.launches as f64)),
+    ])
 }
 
 // ---------------------------------------------------------------------------

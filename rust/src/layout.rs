@@ -98,6 +98,18 @@ impl LayoutDims {
         self.c / self.bm
     }
 
+    /// True iff a source routing `rows` token rows to a single expert
+    /// fits one (peer, expert) slot region of this layout — the
+    /// invariant the engine's variable-shape *dropless* passes rely on:
+    /// the region is sized once from the static worst case
+    /// (`roundup(s_rank, bM)`), and any pass with `s_r ≤ s_rank` rows
+    /// needs at most `roundup(s_r, bM) ≤ C` slots, so partially-filled
+    /// passes reuse the resident heap unchanged. (Under a `Capacity`
+    /// policy the gate's drop rule bounds occupancy instead.)
+    pub fn fits_source_rows(&self, rows: usize) -> bool {
+        rows.div_ceil(self.bm) * self.bm <= self.c
+    }
+
     pub fn in_bounds(&self, i: Coord) -> bool {
         i.p < self.p && i.r < ROUNDS && i.b < BUFFERS && i.e < self.e_local && i.c < self.c
     }
@@ -275,6 +287,26 @@ mod tests {
         assert!(!write_is_valid(&w3, &d));
         // same source, same cell: Case 1 (program order)
         assert!(conflict_free(&w1, &w1, &d));
+    }
+
+    #[test]
+    fn variable_row_passes_fit_the_static_slot_region() {
+        // dropless sizing: c = roundup(s_rank, bM); every s_r <= s_rank fits
+        let m = ModelConfig {
+            h: 8,
+            d: 8,
+            e: 4,
+            k: 2,
+            bm: 32,
+            bn: 8,
+            policy: crate::config::RoutingPolicy::Dropless,
+        };
+        let s_rank = 130;
+        let d = LayoutDims { p: 2, e_local: 2, c: m.slot_capacity(s_rank), h: 8, bm: 32 };
+        for rows in [0usize, 1, 31, 32, 33, 64, 129, 130] {
+            assert!(d.fits_source_rows(rows), "{rows} rows must fit c={}", d.c);
+        }
+        assert!(!d.fits_source_rows(s_rank + 31), "beyond s_rank may overflow");
     }
 
     #[test]

@@ -15,13 +15,20 @@
 //!
 //! The paper's central claim — the MoE operator is **one kernel, launched
 //! once** (Table 1: 33–550 launches/layer in baselines vs 1 here) — is
-//! the shape of the public API. A [`coordinator::MoeEngine`] launches
-//! every rank's actor group exactly once at `start`; each forward pass is
-//! an epoch-tagged `submit` that rings doorbells on the resident actors
-//! (zero thread spawns, zero heap resets — signal flags carry per-slot
-//! generation counters), and `submit` of pass N+1 may overlap collection
-//! of pass N so a serving batcher can pack the next batch while the
-//! current one runs.
+//! the shape of the public API, and the front door is now *request
+//! level*: a [`coordinator::MoeService`] owns a persistent
+//! [`coordinator::MoeEngine`] (every rank's actor group launched exactly
+//! once at `start`) and runs a resident continuous batcher over it.
+//! Clients `enqueue` variable-length token sequences; the batcher admits
+//! them from a bounded queue, coalesces them under a
+//! [`coordinator::BatchPolicy`], round-robins rows across ranks into
+//! **variable-shape engine passes** (`s_r ≤ s_rank` per rank — no padded
+//! rows are ever computed or shipped), and scatter-gathers outputs back
+//! per request. Each pass is an epoch-tagged `submit` that rings
+//! doorbells on the resident actors (zero thread spawns, zero heap
+//! resets — signal flags carry per-slot generation counters), and the
+//! batcher keeps pass N+1 packed and submitted while pass N runs, so
+//! `EngineMetrics::launches` stays 1 for the whole service lifetime.
 //!
 //! ## Routing policy: capacity vs dropless
 //!
@@ -75,7 +82,63 @@
 //! `BENCH_pr3_hotpath.json`, and CI's perf-smoke job fails if the packed
 //! kernel ever regresses below the unpacked baseline.
 //!
-//! ## Quickstart
+//! ## Quickstart — serving requests
+//!
+//! The serving front door: start a [`coordinator::MoeService`], enqueue
+//! variable-length requests from any number of client threads, wait on
+//! each handle. The batcher does the rest — admission, coalescing,
+//! variable-shape passes, scatter-gather — over one engine launch.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use flashdmoe::config::Config;
+//! use flashdmoe::coordinator::{BatchPolicy, MoeService, RequestOpts, TaskGraphMode};
+//! use flashdmoe::expert::ModelParams;
+//! use flashdmoe::runtime::{ComputeBackend, NativeBackend};
+//! use flashdmoe::util::prng::Rng;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut cfg = Config::preset("tiny")?;
+//! cfg.set("routing_policy", "dropless")?; // request-level conformance
+//! let params = Arc::new(ModelParams::generate(&cfg, 42));
+//! let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+//!
+//! // one launch for the service lifetime: engine + resident batcher
+//! let policy = BatchPolicy::from_config(&cfg); // max_tokens, max_delay, queue knobs
+//! let service = MoeService::start(cfg.clone(), params, backend, TaskGraphMode::Fused, policy)?;
+//!
+//! // requests are (rows, H) flat buffers of any length 1..=max_tokens
+//! // (oversize requests split across passes under the default policy)
+//! let mut rng = Rng::new(7);
+//! let a = service.enqueue(rng.normal_vec(3 * cfg.model.h, 1.0), RequestOpts::default())
+//!     .map_err(|e| anyhow::anyhow!("{e}"))?;
+//! let b = service.enqueue(rng.normal_vec(40 * cfg.model.h, 1.0), RequestOpts::default())
+//!     .map_err(|e| anyhow::anyhow!("{e}"))?;
+//!
+//! let ra = a.wait()?; // (3, H) outputs + queue-time / latency metrics
+//! let rb = b.wait()?;
+//! assert_eq!(ra.tokens.len(), 3 * cfg.model.h);
+//! assert_eq!(rb.rows, 40);
+//!
+//! // shutdown (or drop) drains every in-flight request, then joins:
+//! // the whole service lifetime cost exactly one launch
+//! let report = service.shutdown();
+//! assert_eq!(report.engine.launches, 1);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! ## Operator embedding — the engine API
+//!
+//! Embedders that own their batching (a training loop, another serving
+//! stack) drive the persistent [`coordinator::MoeEngine`] directly:
+//! `start` launches the rank actors once; `submit` (fixed-shape) or
+//! `submit_pass` (variable-shape [`coordinator::PassInput`], per-rank
+//! rows `s_r ≤ s_rank`) rings the doorbells and returns a `PassHandle`;
+//! `wait` collects. Submission is pipelined — pass N+1 may be submitted
+//! before pass N is collected — and `PassMetrics::batch_fill` reports
+//! how much of the pass's row capacity was used (1.0 on the fixed-shape
+//! path, by contract).
 //!
 //! ```no_run
 //! use std::sync::Arc;
@@ -88,23 +151,15 @@
 //! let cfg = Config::preset("tiny")?;
 //! let params = Arc::new(ModelParams::generate(&cfg, 42));
 //! let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
-//!
-//! // launch once: rank actors come up resident
 //! let engine = MoeEngine::start(cfg.clone(), params, backend, TaskGraphMode::Fused)?;
 //! let inputs: Vec<Vec<f32>> =
 //!     (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, 42, r)).collect();
-//!
-//! // submit/wait × N — pipelined: pass N+1 may be submitted before
-//! // pass N is collected
 //! let pass1 = engine.submit(&inputs)?;
-//! let pass2 = engine.submit(&inputs)?;
+//! let pass2 = engine.submit(&inputs)?; // pipelined
 //! let out1 = pass1.wait()?;
-//! let out2 = pass2.wait()?;
-//! assert_eq!(out1.outputs.len(), cfg.system.ranks);
-//! assert_eq!(engine.metrics().launches, 1); // for the whole lifetime
-//! # let _ = out2;
-//!
-//! // shutdown (or just drop): resident threads drained and joined
+//! assert_eq!((out1.metrics.batch_fill() * 100.0) as u32, 100);
+//! # let _ = pass2.wait()?;
+//! assert_eq!(engine.metrics().launches, 1);
 //! engine.shutdown();
 //! # Ok(())
 //! # }

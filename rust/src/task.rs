@@ -52,8 +52,10 @@ impl Task {
     /// row count — the cost-model hook for schedulers and simulators that
     /// weigh tasks (currently exercised by the test suite only). Dropless
     /// dispatch ships variable-length tile lists whose tails carry
-    /// `rows < bM`; costing those at the padded `bm` would over-weight
-    /// every tail tile (by up to bM/1). Caveat for consumers: the native
+    /// `rows < bM` — and the engine's variable-shape `PassInput` passes
+    /// (the serving batcher's partially-filled batches) make such tails
+    /// routine under *both* policies; costing those at the padded `bm`
+    /// would over-weight every tail tile (by up to bM/1). Caveat for consumers: the native
     /// fused backend still *executes* the full padded bM rows per tile,
     /// so for that backend this is the useful-work lower bound on tails,
     /// not the wall-clock cost. `bm` is kept as the upper bound the row

@@ -6,6 +6,13 @@
 //! cites BlackMamba [36]); the generators below produce uniform, zipf-
 //! skewed and hot-expert distributions so payload efficiency, capacity
 //! drops and load imbalance are all exercised.
+//!
+//! For the serving path, [`ArrivalProcess`] generates *request arrival*
+//! workloads — Poisson open-loop traffic, replayed traces, or
+//! closed-loop client populations — so `MoeService` benches drive
+//! realistic load instead of back-to-back saturation.
+
+use anyhow::{Context, Result};
 
 use crate::config::{Config, ModelConfig};
 use crate::gate::{dispatch_plan, route_from_scores, DispatchPlan, Routing};
@@ -38,6 +45,136 @@ impl Skew {
 pub struct RankWorkload {
     pub routing: Routing,
     pub plan: DispatchPlan,
+}
+
+/// One serving request arrival: when it hits the front door and how many
+/// token rows it carries.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Arrival {
+    /// Arrival time in seconds from the start of the run. Zero for every
+    /// arrival of a [`Closed`](ArrivalProcess::Closed) process — the
+    /// driver re-issues on completion instead of on a clock.
+    pub at: f64,
+    /// Token rows in the request.
+    pub tokens: usize,
+}
+
+/// Request arrival process for serving benches (open-loop Poisson,
+/// replayed trace, or closed-loop client population).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Open loop: exponential interarrivals at `rate` requests/second;
+    /// request sizes drawn uniformly from the driver's range.
+    Poisson { rate: f64 },
+    /// Replay a trace file: one arrival per line, `<at_secs> <tokens>`
+    /// ('#' comments and blank lines allowed).
+    Trace(String),
+    /// Closed loop: `n` clients, each submitting its next request the
+    /// moment the previous completes (arrival times are all zero; the
+    /// driver maintains `n` outstanding).
+    Closed { n: usize },
+}
+
+impl ArrivalProcess {
+    /// Parse a CLI value: `poisson:<rate>`, `trace:<path>`, `closed:<n>`.
+    pub fn parse(s: &str) -> Option<ArrivalProcess> {
+        if let Some(r) = s.strip_prefix("poisson:") {
+            return r
+                .parse::<f64>()
+                .ok()
+                .filter(|r| r.is_finite() && *r > 0.0)
+                .map(|rate| ArrivalProcess::Poisson { rate });
+        }
+        if let Some(p) = s.strip_prefix("trace:") {
+            return Some(ArrivalProcess::Trace(p.to_string()));
+        }
+        if let Some(n) = s.strip_prefix("closed:") {
+            return n.parse::<usize>().ok().filter(|n| *n > 0).map(|n| ArrivalProcess::Closed { n });
+        }
+        None
+    }
+
+    /// Generate `count` arrivals. `tokens` is the inclusive request-size
+    /// range for the synthetic (non-trace) processes; a trace supplies
+    /// its own sizes and times (and its `count` is the number of lines
+    /// replayed, cycling if the trace is shorter).
+    pub fn arrivals(
+        &self,
+        count: usize,
+        tokens: (usize, usize),
+        rng: &mut Rng,
+    ) -> Result<Vec<Arrival>> {
+        let (lo, hi) = tokens;
+        anyhow::ensure!(lo >= 1 && lo <= hi, "bad request-size range [{lo}, {hi}]");
+        let size = |rng: &mut Rng| lo + rng.below(hi - lo + 1);
+        match self {
+            ArrivalProcess::Poisson { rate } => {
+                let mut t = 0.0f64;
+                Ok((0..count)
+                    .map(|_| {
+                        // exponential interarrival: -ln(U)/rate, U in (0,1]
+                        let u = 1.0 - rng.f64();
+                        t += -u.ln() / rate;
+                        Arrival { at: t, tokens: size(rng) }
+                    })
+                    .collect())
+            }
+            ArrivalProcess::Trace(path) => {
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading arrival trace {path}"))?;
+                let mut parsed = Vec::new();
+                for (ln, line) in text.lines().enumerate() {
+                    let line = line.split('#').next().unwrap_or("").trim();
+                    if line.is_empty() {
+                        continue;
+                    }
+                    let mut it = line.split_whitespace();
+                    let at: f64 = it
+                        .next()
+                        .and_then(|v| v.parse().ok())
+                        .with_context(|| format!("{path}:{}: expected '<at> <tokens>'", ln + 1))?;
+                    let tokens: usize = it
+                        .next()
+                        .and_then(|v| v.parse().ok())
+                        .with_context(|| format!("{path}:{}: expected '<at> <tokens>'", ln + 1))?;
+                    anyhow::ensure!(
+                        tokens >= 1,
+                        "{path}:{}: zero-token arrival in trace",
+                        ln + 1
+                    );
+                    anyhow::ensure!(
+                        at.is_finite() && at >= 0.0,
+                        "{path}:{}: arrival time {at} must be finite and non-negative",
+                        ln + 1
+                    );
+                    parsed.push(Arrival { at, tokens });
+                }
+                anyhow::ensure!(!parsed.is_empty(), "{path}: empty arrival trace");
+                parsed.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+                let span = parsed.last().unwrap().at;
+                Ok((0..count)
+                    .map(|i| {
+                        // cycle the trace, shifting each lap by its span
+                        let lap = i / parsed.len();
+                        let a = parsed[i % parsed.len()];
+                        Arrival { at: a.at + lap as f64 * span, tokens: a.tokens }
+                    })
+                    .collect())
+            }
+            ArrivalProcess::Closed { .. } => {
+                Ok((0..count).map(|_| Arrival { at: 0.0, tokens: size(rng) }).collect())
+            }
+        }
+    }
+
+    /// Outstanding-request bound the driver should maintain: `n` for a
+    /// closed loop, unbounded (`usize::MAX`) for open-loop processes.
+    pub fn concurrency(&self) -> usize {
+        match self {
+            ArrivalProcess::Closed { n } => *n,
+            _ => usize::MAX,
+        }
+    }
 }
 
 /// Synthesize gate *scores* (not tokens) with the requested skew, then
@@ -123,6 +260,62 @@ mod tests {
         let b = cluster_workload(&cfg, Skew::Zipf, 7);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.plan.tiles, y.plan.tiles);
+        }
+    }
+
+    #[test]
+    fn poisson_arrivals_are_monotone_and_near_rate() {
+        let p = ArrivalProcess::parse("poisson:100").unwrap();
+        assert_eq!(p, ArrivalProcess::Poisson { rate: 100.0 });
+        let mut rng = Rng::new(11);
+        let a = p.arrivals(2000, (8, 64), &mut rng).unwrap();
+        assert_eq!(a.len(), 2000);
+        assert!(a.windows(2).all(|w| w[0].at <= w[1].at), "arrival times monotone");
+        assert!(a.iter().all(|x| (8..=64).contains(&x.tokens)));
+        // mean interarrival ~ 1/rate (law of large numbers, loose bound)
+        let mean = a.last().unwrap().at / 2000.0;
+        assert!((mean - 0.01).abs() < 0.002, "mean interarrival {mean} far from 1/100");
+        // deterministic under the same seed
+        let b = p.arrivals(2000, (8, 64), &mut Rng::new(11)).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn closed_arrivals_carry_concurrency_not_clocks() {
+        let p = ArrivalProcess::parse("closed:8").unwrap();
+        assert_eq!(p.concurrency(), 8);
+        let a = p.arrivals(32, (16, 16), &mut Rng::new(3)).unwrap();
+        assert!(a.iter().all(|x| x.at == 0.0 && x.tokens == 16));
+        assert_eq!(ArrivalProcess::Poisson { rate: 1.0 }.concurrency(), usize::MAX);
+    }
+
+    #[test]
+    fn trace_arrivals_replay_and_cycle() {
+        let dir = std::env::temp_dir().join("flashdmoe_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("arrivals.trace");
+        std::fs::write(&path, "# at tokens\n0.0 8\n0.5 16\n1.0 32\n").unwrap();
+        let p = ArrivalProcess::parse(&format!("trace:{}", path.display())).unwrap();
+        let a = p.arrivals(5, (1, 1), &mut Rng::new(0)).unwrap();
+        assert_eq!(a[0], Arrival { at: 0.0, tokens: 8 });
+        assert_eq!(a[2], Arrival { at: 1.0, tokens: 32 });
+        // cycles past the end, shifted by the trace span
+        assert_eq!(a[3], Arrival { at: 1.0, tokens: 8 });
+        assert_eq!(a[4], Arrival { at: 1.5, tokens: 16 });
+        // bad inputs refuse loudly
+        assert!(ArrivalProcess::parse("poisson:0").is_none());
+        assert!(ArrivalProcess::parse("poisson:nan").is_none());
+        assert!(ArrivalProcess::parse("closed:0").is_none());
+        assert!(ArrivalProcess::parse("fifo").is_none());
+        assert!(ArrivalProcess::Trace("/nonexistent/x".into())
+            .arrivals(1, (1, 1), &mut Rng::new(0))
+            .is_err());
+        // malformed times error out instead of panicking downstream
+        for bad in ["nan 8\n", "inf 8\n", "-1.0 8\n"] {
+            let p = dir.join("bad.trace");
+            std::fs::write(&p, bad).unwrap();
+            let t = ArrivalProcess::Trace(p.to_str().unwrap().into());
+            assert!(t.arrivals(1, (1, 1), &mut Rng::new(0)).is_err(), "{bad:?} must error");
         }
     }
 

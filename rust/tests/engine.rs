@@ -6,10 +6,11 @@
 use std::sync::Arc;
 
 use flashdmoe::config::{Config, RoutingPolicy};
-use flashdmoe::coordinator::{baseline, DistributedMoE, MoeEngine, TaskGraphMode};
+use flashdmoe::coordinator::{baseline, DistributedMoE, MoeEngine, PassInput, TaskGraphMode};
 use flashdmoe::expert::{generate_tokens, ModelParams};
 use flashdmoe::runtime::{ComputeBackend, NativeBackend};
 use flashdmoe::util::check::dense_reference_moe;
+use flashdmoe::util::prng::Rng;
 use flashdmoe::util::stats::max_abs_diff;
 
 fn setup(preset: &str, seed: u64) -> (Config, Arc<ModelParams>, Arc<dyn ComputeBackend>, Vec<Vec<f32>>) {
@@ -403,6 +404,163 @@ fn bad_submissions_are_rejected_without_poisoning_the_engine() {
     // the engine still serves good passes afterwards
     let ok = engine.submit(&inputs).unwrap().wait().unwrap();
     assert_eq!(ok.outputs.len(), cfg.system.ranks);
+}
+
+#[test]
+fn legacy_fixed_shape_passes_report_full_batch_fill() {
+    // satellite: the fixed-shape `submit` path is exactly full by
+    // construction — batch_fill == 1.0, rows accounting to match
+    let (cfg, params, backend, inputs) = setup("tiny", 43);
+    let engine = start(&cfg, &params, &backend, TaskGraphMode::Fused);
+    for _ in 0..3 {
+        let res = engine.submit(&inputs).unwrap().wait().unwrap();
+        assert_eq!(res.metrics.batch_fill(), 1.0, "legacy path must fill exactly");
+        assert_eq!(res.metrics.rows_submitted, cfg.system.ranks * cfg.system.s_rank);
+        assert_eq!(res.metrics.rows_capacity, cfg.system.max_batch_tokens());
+        for (r, rm) in res.metrics.ranks.iter().enumerate() {
+            assert_eq!(rm.rows_in, cfg.system.s_rank, "rank {r} rows_in");
+        }
+    }
+}
+
+/// Property-test a variable-shape pass (fuzzed per-rank row counts,
+/// zero included) for one policy: outputs have the submitted shapes,
+/// metrics carry the actual rows, transfer bytes scale with routed rows
+/// only (no padded-row traffic), and — whenever the gate dropped
+/// nothing — outputs equal the dense per-token reference.
+fn check_variable_shape_pass(policy: RoutingPolicy, seed: u64) {
+    let mut cfg = Config::preset("tiny").unwrap();
+    cfg.model.policy = policy;
+    cfg.validate().unwrap();
+    let params = Arc::new(ModelParams::generate(&cfg, seed));
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+    let engine =
+        MoeEngine::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused).unwrap();
+    let (h, k) = (cfg.model.h, cfg.model.k);
+    let mut rng = Rng::new(seed);
+    for case in 0..6 {
+        // fuzz s_r in 0..=s_rank per rank; keep at least one nonempty rank
+        let rows: Vec<usize> = (0..cfg.system.ranks)
+            .map(|_| rng.below(cfg.system.s_rank + 1))
+            .collect();
+        let rows = if rows.iter().all(|&r| r == 0) { vec![1; cfg.system.ranks] } else { rows };
+        let per_rank: Vec<Vec<f32>> =
+            rows.iter().map(|&r| rng.normal_vec(r * h, 1.0)).collect();
+        let res = engine.submit_pass(PassInput::new(per_rank.clone())).unwrap().wait().unwrap();
+
+        // shapes and fill accounting follow the submitted rows
+        let total: usize = rows.iter().sum();
+        assert_eq!(res.metrics.rows_submitted, total, "case {case}: rows_submitted");
+        assert!(res.metrics.batch_fill() <= 1.0);
+        assert_eq!(
+            res.metrics.batch_fill(),
+            total as f64 / cfg.system.max_batch_tokens() as f64
+        );
+        for (r, out) in res.outputs.iter().enumerate() {
+            assert_eq!(out.len(), rows[r] * h, "case {case}: rank {r} output shape");
+        }
+
+        // payload metrics reflect actual routed rows: every dispatched
+        // row comes back exactly once as a combine row, so total heap
+        // traffic is 2 × routed × H × 4 bytes — nothing padded travels
+        let routed: usize = res.metrics.ranks.iter().map(|m| m.sent_rows).sum();
+        assert!(routed <= total * k, "case {case}: routed beyond top-k");
+        assert_eq!(
+            res.metrics.total_bytes(),
+            (2 * routed * h * 4) as u64,
+            "case {case}: padded rows hit the wire"
+        );
+        if policy.is_dropless() {
+            assert_eq!(res.metrics.total_dropped(), 0, "case {case}: dropless dropped");
+            assert_eq!(routed, total * k, "case {case}: dropless keeps all pairs");
+        }
+
+        // conformance: with zero drops the pass equals the dense
+        // per-token reference (always true under dropless; true under
+        // capacity whenever the fuzzed load fit the buffers)
+        if res.metrics.total_dropped() == 0 {
+            for (r, out) in res.outputs.iter().enumerate() {
+                if rows[r] == 0 {
+                    continue;
+                }
+                let want = dense_reference_moe(&cfg, &params, &per_rank[r]);
+                let diff = max_abs_diff(out, &want);
+                assert!(
+                    diff < 1e-5,
+                    "case {case}: rank {r} ({} rows) diff {diff} vs dense reference",
+                    rows[r]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn variable_shape_passes_capacity_policy() {
+    check_variable_shape_pass(RoutingPolicy::Capacity(1.0), 0x51AE);
+}
+
+#[test]
+fn variable_shape_passes_dropless_policy() {
+    check_variable_shape_pass(RoutingPolicy::Dropless, 0x51AF);
+}
+
+#[test]
+fn variable_shape_split_mode_matches_dense_reference() {
+    // the Split task graph (Gemm0→Gemm1 chains) must also carry dynamic
+    // row counts end to end
+    let mut cfg = Config::preset("tiny").unwrap();
+    cfg.model.policy = RoutingPolicy::Dropless;
+    cfg.validate().unwrap();
+    let params = Arc::new(ModelParams::generate(&cfg, 59));
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+    let engine =
+        MoeEngine::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Split).unwrap();
+    let h = cfg.model.h;
+    let mut rng = Rng::new(60);
+    let rows = [37usize, 0, 101, 5][..cfg.system.ranks.min(4)].to_vec();
+    let per_rank: Vec<Vec<f32>> = rows.iter().map(|&r| rng.normal_vec(r * h, 1.0)).collect();
+    let res = engine.submit_pass(PassInput::new(per_rank.clone())).unwrap().wait().unwrap();
+    for (r, out) in res.outputs.iter().enumerate() {
+        assert_eq!(out.len(), rows[r] * h);
+        if rows[r] > 0 {
+            let want = dense_reference_moe(&cfg, &params, &per_rank[r]);
+            let diff = max_abs_diff(out, &want);
+            assert!(diff < 1e-3, "rank {r}: split-mode variable pass diff {diff}");
+        }
+    }
+}
+
+#[test]
+fn concurrent_submitters_interleave_without_wedging() {
+    // satellite: the slot-drain wait no longer holds the epoch lock, so
+    // concurrent submitters (the service batcher's world) make progress
+    // and every pass still returns the right output
+    let (cfg, params, backend, inputs) = setup("tiny", 71);
+    let reference = start(&cfg, &params, &backend, TaskGraphMode::Fused)
+        .forward(&inputs)
+        .unwrap();
+    let engine = Arc::new(start(&cfg, &params, &backend, TaskGraphMode::Fused));
+    let mut threads = Vec::new();
+    for t in 0..4 {
+        let engine = engine.clone();
+        let inputs = inputs.clone();
+        let want: Vec<Vec<f32>> = reference.outputs.clone();
+        threads.push(std::thread::spawn(move || {
+            for pass in 0..5 {
+                let got = engine.submit(&inputs).unwrap().wait().unwrap();
+                for (r, (g, w)) in got.outputs.iter().zip(&want).enumerate() {
+                    assert_eq!(g, w, "thread {t} pass {pass} rank {r} diverged");
+                }
+            }
+        }));
+    }
+    for th in threads {
+        th.join().unwrap();
+    }
+    let em = engine.metrics();
+    assert_eq!(em.passes, 20);
+    assert_eq!(em.launches, 1);
 }
 
 #[test]

@@ -1,0 +1,285 @@
+//! `MoeService` request-path tests: concurrent fuzzed end-to-end
+//! conformance against the dense per-token reference, admission edge
+//! cases (zero-token, ragged, oversize split/reject), backpressure
+//! (reject and block), abandoned handles, and shutdown draining — plus
+//! the service-lifetime single-launch contract.
+
+use std::sync::Arc;
+
+use flashdmoe::config::Config;
+use flashdmoe::coordinator::{
+    Backpressure, BatchPolicy, MoeService, OversizePolicy, RequestOpts, ServiceError,
+    TaskGraphMode,
+};
+use flashdmoe::expert::ModelParams;
+use flashdmoe::runtime::{ComputeBackend, NativeBackend};
+use flashdmoe::util::check::dense_reference_moe;
+use flashdmoe::util::prng::Rng;
+use flashdmoe::util::stats::max_abs_diff;
+
+/// Dropless tiny config: request outputs are independent of co-batching,
+/// so every request must equal the dense per-token reference.
+fn service_cfg() -> Config {
+    let mut cfg = Config::preset("tiny").unwrap();
+    cfg.set("routing_policy", "dropless").unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn start_service(cfg: &Config, seed: u64, policy: BatchPolicy) -> (MoeService, Arc<ModelParams>) {
+    let params = Arc::new(ModelParams::generate(cfg, seed));
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(cfg));
+    let svc = MoeService::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused, policy)
+        .unwrap();
+    (svc, params)
+}
+
+#[test]
+fn concurrent_fuzzed_requests_match_dense_reference_with_one_launch() {
+    // Acceptance: N concurrent client threads enqueue fuzzed
+    // variable-length requests; every output equals the dense per-token
+    // reference to 1e-5, no request lost or duplicated, and the engine
+    // launch count is 1 for the service lifetime.
+    let cfg = service_cfg();
+    let (svc, params) = start_service(&cfg, 42, BatchPolicy::from_config(&cfg));
+    let svc = Arc::new(svc);
+    let h = cfg.model.h;
+    let threads = 4usize;
+    let per_thread = 6usize;
+
+    let mut clients = Vec::new();
+    for t in 0..threads {
+        let svc = svc.clone();
+        let cfg = cfg.clone();
+        let params = params.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xC11E27 ^ t as u64);
+            let mut served = 0usize;
+            for i in 0..per_thread {
+                let rows = 1 + rng.below(96); // fuzzed variable length
+                let tokens = rng.normal_vec(rows * h, 1.0);
+                let handle = svc
+                    .enqueue(tokens.clone(), RequestOpts::default())
+                    .expect("enqueue within queue bounds");
+                let res = handle.wait().expect("request served");
+                assert_eq!(res.rows, rows, "client {t} request {i}: row count");
+                assert_eq!(res.tokens.len(), rows * h, "client {t} request {i}: shape");
+                let want = dense_reference_moe(&cfg, &params, &tokens);
+                let diff = max_abs_diff(&res.tokens, &want);
+                assert!(
+                    diff < 1e-5,
+                    "client {t} request {i} ({rows} rows): diverged from dense reference by {diff}"
+                );
+                assert!(res.latency_secs >= res.queue_secs);
+                assert!(res.passes >= 1);
+                served += 1;
+            }
+            served
+        }));
+    }
+    let total: usize = clients.into_iter().map(|c| c.join().unwrap()).sum();
+    assert_eq!(total, threads * per_thread, "no request lost");
+
+    let report = Arc::try_unwrap(svc).ok().expect("all clients done").shutdown();
+    assert_eq!(report.service.requests_served, (threads * per_thread) as u64, "none lost/dup");
+    assert_eq!(report.service.requests_enqueued, (threads * per_thread) as u64);
+    assert_eq!(report.engine.launches, 1, "one launch for the service lifetime");
+    assert!(report.service.passes >= 1);
+    assert!(report.service.mean_batch_fill() > 0.0);
+}
+
+#[test]
+fn zero_token_and_ragged_requests_are_rejected() {
+    let cfg = service_cfg();
+    let (svc, _) = start_service(&cfg, 7, BatchPolicy::from_config(&cfg));
+    assert_eq!(
+        svc.enqueue(Vec::new(), RequestOpts::default()).err(),
+        Some(ServiceError::EmptyRequest)
+    );
+    let h = cfg.model.h;
+    assert_eq!(
+        svc.enqueue(vec![0.0; h + 1], RequestOpts::default()).err(),
+        Some(ServiceError::RaggedRequest { len: h + 1, h })
+    );
+    // the service still serves good requests afterwards
+    let ok = svc.enqueue(vec![0.5; 2 * h], RequestOpts::default()).unwrap();
+    assert_eq!(ok.wait().unwrap().rows, 2);
+    let report = svc.shutdown();
+    assert_eq!(report.service.requests_rejected, 2);
+    assert_eq!(report.service.requests_served, 1);
+}
+
+#[test]
+fn oversize_requests_split_across_passes_per_policy() {
+    let cfg = service_cfg();
+    let mut policy = BatchPolicy::from_config(&cfg);
+    policy.max_tokens = 64; // force splitting well below one full pass
+    let (svc, params) = start_service(&cfg, 11, policy);
+    let h = cfg.model.h;
+    let rows = 150; // ceil(150/64) = 3 chunks
+    let tokens = Rng::new(9).normal_vec(rows * h, 1.0);
+    let res = svc.enqueue(tokens.clone(), RequestOpts::default()).unwrap().wait().unwrap();
+    assert_eq!(res.rows, rows);
+    assert_eq!(res.passes, 3, "3 chunks => 3 passes");
+    let want = dense_reference_moe(&cfg, &params, &tokens);
+    let diff = max_abs_diff(&res.tokens, &want);
+    assert!(diff < 1e-5, "split request diverged from dense reference by {diff}");
+    let report = svc.shutdown();
+    assert_eq!(report.service.requests_served, 1);
+    assert!(report.service.passes >= 3);
+    assert_eq!(report.engine.launches, 1);
+}
+
+#[test]
+fn oversize_requests_rejected_per_policy() {
+    let cfg = service_cfg();
+    let mut policy = BatchPolicy::from_config(&cfg);
+    policy.max_tokens = 32;
+    policy.oversize = OversizePolicy::Reject;
+    let (svc, _) = start_service(&cfg, 13, policy);
+    let h = cfg.model.h;
+    assert_eq!(
+        svc.enqueue(vec![0.0; 33 * h], RequestOpts::default()).err(),
+        Some(ServiceError::TooLarge { rows: 33, max_tokens: 32 })
+    );
+    // a request at exactly max_tokens is fine
+    let ok = svc.enqueue(vec![0.25; 32 * h], RequestOpts::default()).unwrap();
+    assert_eq!(ok.wait().unwrap().passes, 1);
+    svc.shutdown();
+}
+
+#[test]
+fn dropped_handles_do_not_wedge_the_batcher() {
+    let cfg = service_cfg();
+    let (svc, params) = start_service(&cfg, 17, BatchPolicy::from_config(&cfg));
+    let h = cfg.model.h;
+    // abandon a burst of handles: the batcher must discard or harmlessly
+    // complete them and keep serving
+    for i in 0..8 {
+        let _ = svc.enqueue(vec![0.1 * (i as f32 + 1.0); 16 * h], RequestOpts::default()).unwrap();
+        // handle dropped here, unwaited => cancelled
+    }
+    let tokens = Rng::new(21).normal_vec(5 * h, 1.0);
+    let res = svc.enqueue(tokens.clone(), RequestOpts::default()).unwrap().wait().unwrap();
+    let want = dense_reference_moe(&cfg, &params, &tokens);
+    assert!(max_abs_diff(&res.tokens, &want) < 1e-5, "batcher wedged or corrupted by drops");
+    let report = svc.shutdown();
+    // every abandoned request was either discarded before admission
+    // (cancelled) or already in flight and served-then-discarded
+    assert_eq!(
+        report.service.requests_cancelled + report.service.requests_served,
+        9,
+        "abandoned requests unaccounted for"
+    );
+    assert_eq!(report.engine.launches, 1);
+}
+
+#[test]
+fn shutdown_drains_already_enqueued_requests() {
+    let cfg = service_cfg();
+    // a generous coalescing window, so requests are still queued (not yet
+    // in a pass) when shutdown lands — drain must serve them anyway
+    let mut policy = BatchPolicy::from_config(&cfg);
+    policy.max_delay = std::time::Duration::from_millis(250);
+    let (svc, params) = start_service(&cfg, 23, policy);
+    let h = cfg.model.h;
+    let mut wanted = Vec::new();
+    let mut handles = Vec::new();
+    let mut rng = Rng::new(31);
+    for _ in 0..6 {
+        let rows = 1 + rng.below(40);
+        let tokens = rng.normal_vec(rows * h, 1.0);
+        handles.push(svc.enqueue(tokens.clone(), RequestOpts::default()).unwrap());
+        wanted.push(tokens);
+    }
+    let report = svc.shutdown(); // drains the queue before joining
+    assert_eq!(report.service.requests_served, 6, "shutdown must drain, not drop");
+    for (hdl, tokens) in handles.into_iter().zip(&wanted) {
+        let res = hdl.wait().expect("drained request completes");
+        let want = dense_reference_moe(&cfg, &params, tokens);
+        assert!(max_abs_diff(&res.tokens, &want) < 1e-5);
+    }
+    // and post-shutdown admission refuses — exercised via a second
+    // service whose handle survived shutdown is impossible; metrics above
+    // already confirm the drain.
+    assert_eq!(report.engine.launches, 1);
+}
+
+#[test]
+fn bounded_queue_rejects_under_pressure_and_accounts_for_it() {
+    let cfg = service_cfg();
+    let mut policy = BatchPolicy::from_config(&cfg);
+    policy.queue_requests = 1;
+    policy.on_full = Backpressure::Reject;
+    let (svc, _) = start_service(&cfg, 29, policy);
+    let h = cfg.model.h;
+    let mut accepted = Vec::new();
+    let mut rejected = 0u64;
+    for _ in 0..200 {
+        match svc.enqueue(vec![0.5; 64 * h], RequestOpts::default()) {
+            Ok(hdl) => accepted.push(hdl),
+            Err(ServiceError::ServiceFull) => rejected += 1,
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+    }
+    assert!(rejected > 0, "200 instant enqueues against a depth-1 queue must overflow");
+    let n_accepted = accepted.len() as u64;
+    for hdl in accepted {
+        hdl.wait().unwrap(); // accepted requests are always served
+    }
+    let report = svc.shutdown();
+    assert_eq!(report.service.requests_served, n_accepted);
+    assert_eq!(report.service.requests_rejected, rejected, "rejection accounting");
+    assert!(report.service.max_queue_depth <= 1);
+}
+
+#[test]
+fn blocking_backpressure_serves_everything() {
+    let cfg = service_cfg();
+    let mut policy = BatchPolicy::from_config(&cfg);
+    policy.queue_requests = 1;
+    policy.on_full = Backpressure::Block;
+    let (svc, _) = start_service(&cfg, 37, policy);
+    let h = cfg.model.h;
+    let svc = Arc::new(svc);
+    // a consumer thread drains handles so the producer's blocking
+    // enqueues always make progress
+    let (tx, rx) = std::sync::mpsc::channel::<flashdmoe::coordinator::RequestHandle>();
+    let consumer = std::thread::spawn(move || {
+        let mut n = 0u64;
+        while let Ok(hdl) = rx.recv() {
+            hdl.wait().unwrap();
+            n += 1;
+        }
+        n
+    });
+    for _ in 0..20 {
+        let hdl = svc.enqueue(vec![1.0; 32 * h], RequestOpts::default()).unwrap();
+        tx.send(hdl).unwrap();
+    }
+    drop(tx);
+    assert_eq!(consumer.join().unwrap(), 20);
+    let report = Arc::try_unwrap(svc).ok().unwrap().shutdown();
+    assert_eq!(report.service.requests_served, 20);
+    assert_eq!(report.service.requests_rejected, 0, "Block never rejects");
+}
+
+#[test]
+fn priority_discipline_admits_high_priority_first() {
+    use flashdmoe::coordinator::QueueDiscipline;
+    let cfg = service_cfg();
+    let mut policy = BatchPolicy::from_config(&cfg);
+    policy.priority = QueueDiscipline::Priority;
+    // a long coalescing window so both requests land in the same batch
+    // regardless of arrival jitter; priority decides pack order
+    policy.max_delay = std::time::Duration::from_millis(100);
+    let (svc, _) = start_service(&cfg, 41, policy);
+    let h = cfg.model.h;
+    let low = svc.enqueue(vec![0.1; 8 * h], RequestOpts { priority: 0 }).unwrap();
+    let high = svc.enqueue(vec![0.9; 8 * h], RequestOpts { priority: 5 }).unwrap();
+    let (rl, rh) = (low.wait().unwrap(), high.wait().unwrap());
+    // both served correctly; the high-priority request never queues
+    // longer than the low one that arrived first
+    assert!(rh.queue_secs <= rl.queue_secs + 1e-3);
+    svc.shutdown();
+}
