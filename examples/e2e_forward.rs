@@ -118,7 +118,9 @@ fn main() -> anyhow::Result<()> {
         tokens as f64 / flash_latency / 1e6,
         s.p50 / flash_latency,
         fmt_bytes(
-            (base.metrics.sent_rows - base.metrics.valid_rows) as f64 * cfg.model.h as f64 * 4.0
+            (base.metrics.sent_rows - base.metrics.valid_rows) as f64
+                * cfg.model.h as f64
+                * cfg.system.wire.bytes() as f64
         )
     );
     println!("e2e OK — all layers compose, distributed ≡ monolithic reference");

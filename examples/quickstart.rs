@@ -20,11 +20,17 @@ fn main() -> anyhow::Result<()> {
 
     // 1. Configuration: model shapes + system topology (presets mirror the
     //    AOT manifest; every knob is overridable, see `Config::set`).
+    //    `cfg.set("wire_precision", "bf16")?` would halve the fabric
+    //    payload bytes and the symmetric-heap footprint — dispatch/combine
+    //    tiles quantize to 16 bits at the heap boundary while every GEMM
+    //    still computes in f32 (see the crate docs' wire-precision
+    //    section; f32, the default, is bitwise-transparent).
     let cfg = Config::preset("default")?;
     println!(
-        "config: H={} D={} E={} top-{} | {} ranks x {} tokens, {} processors/rank",
+        "config: H={} D={} E={} top-{} | {} ranks x {} tokens, {} processors/rank | {} wire",
         cfg.model.h, cfg.model.d, cfg.model.e, cfg.model.k,
         cfg.system.ranks, cfg.system.s_rank, cfg.system.processors,
+        cfg.system.wire.name(),
     );
 
     // 2. Parameters: deterministic, expert-keyed (any rank or the

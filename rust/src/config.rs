@@ -25,11 +25,106 @@
 //!   `Reject`ed.
 //! * `priority` — FIFO or priority-ordered admission.
 //!
+//! ## Wire precision
+//!
+//! [`WirePrecision`] selects the element format of dispatch/combine
+//! payloads crossing the symmetric heap (`wire_precision=f32|f16|bf16`).
+//! It is a *wire* knob, not a compute knob: 16-bit settings halve the
+//! measured fabric bytes and heap footprint while every GEMM still
+//! accumulates in f32. The old `elem_bytes` float knob is a deprecated
+//! shim over it (2 → `F16`, 4 → `F32`).
+//!
 //! [`MoeService`]: crate::coordinator::MoeService
 //! [`BatchPolicy`]: crate::coordinator::BatchPolicy
 //! [`BatchPolicy::from_config`]: crate::coordinator::BatchPolicy::from_config
 
 use anyhow::{bail, Context, Result};
+
+/// Element format of the **wire** — the dispatch and combine payloads
+/// crossing the symmetric heap. Payloads are quantized to this width when
+/// `SymmetricHeap::put_signal` copies them into the destination inbox and
+/// dequantized back to f32 when the consumer reads them (`crate::wire`
+/// owns the conversions), so expert GEMMs, gate math and the combine fold
+/// always run in f32 — *wire* precision and *compute* precision are
+/// separate axes.
+///
+/// Guarantees by setting:
+///
+/// * `F32` (default) — the encode/decode pair is a bitwise byte copy;
+///   outputs are bit-identical to an engine without the wire subsystem,
+///   and all determinism/conformance guarantees hold unchanged.
+/// * `Bf16` / `F16` — payload bytes halve (measured, not modeled: the
+///   heap's byte counters account at this width). Outputs remain bitwise
+///   deterministic across restarts/schedules (round-to-nearest-even is
+///   order-free), but match the dense f32 reference only to the format's
+///   [`conformance_tol`](WirePrecision::conformance_tol).
+///
+/// Select per config: `cfg.set("wire_precision", "bf16")` (also `"f16"`,
+/// `"f32"`). The legacy float-typed `elem_bytes` knob survives as a
+/// deprecation shim: `elem_bytes=2` implies `F16` and `elem_bytes=4`
+/// implies `F32` — but only when the requested width actually differs
+/// from the configured wire's, so it never downgrades an explicit `Bf16`
+/// (other widths only retune the simulator's cost model).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum WirePrecision {
+    /// 4-byte f32 wire: bitwise-transparent (the pre-existing contract).
+    #[default]
+    F32,
+    /// 2-byte IEEE binary16 wire: 10 mantissa bits, narrow exponent
+    /// (overflows past 65504 saturate to Inf on the wire).
+    F16,
+    /// 2-byte bfloat16 wire: 7 mantissa bits, full f32 exponent range.
+    Bf16,
+}
+
+impl WirePrecision {
+    /// Bytes per wire scalar.
+    pub fn bytes(self) -> usize {
+        match self {
+            WirePrecision::F32 => 4,
+            WirePrecision::F16 | WirePrecision::Bf16 => 2,
+        }
+    }
+
+    /// Canonical knob spelling (accepted by [`parse`](Self::parse)).
+    pub fn name(self) -> &'static str {
+        match self {
+            WirePrecision::F32 => "f32",
+            WirePrecision::F16 => "f16",
+            WirePrecision::Bf16 => "bf16",
+        }
+    }
+
+    /// True for the 16-bit formats (payload narrowing in effect).
+    pub fn is_reduced(self) -> bool {
+        !matches!(self, WirePrecision::F32)
+    }
+
+    /// Parse a CLI/config-file value.
+    pub fn parse(s: &str) -> Option<WirePrecision> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Some(WirePrecision::F32),
+            "f16" | "fp16" | "half" | "float16" => Some(WirePrecision::F16),
+            "bf16" | "bfloat16" => Some(WirePrecision::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Documented conformance tolerance of an engine pass against the
+    /// dense f32 per-token reference (`util::check::dense_reference_moe`)
+    /// on unit-scale workloads (tokens ~ N(0,1), `INIT_STD` weights).
+    /// Both the dispatch and the combine payload are quantized once each,
+    /// so the bound is a comfortable multiple of the format's
+    /// 2^-(mantissa bits + 1) relative rounding error; `F32` keeps the
+    /// exact-path 1e-5 used by the pre-existing conformance suite.
+    pub fn conformance_tol(self) -> f32 {
+        match self {
+            WirePrecision::F32 => 1e-5,
+            WirePrecision::F16 => 5e-2,
+            WirePrecision::Bf16 => 2.5e-1,
+        }
+    }
+}
 
 /// How the router treats per-expert load.
 ///
@@ -135,6 +230,11 @@ pub struct SystemConfig {
     /// identical either way — the packed kernel replays the same f32
     /// accumulation order — so the toggle is purely a performance knob.
     pub packed: bool,
+    /// Wire element format for dispatch/combine payloads (see
+    /// [`WirePrecision`]): the symmetric heap stores, ships and *counts*
+    /// bytes at this width; compute stays f32. `cfg.set("wire_precision",
+    /// "bf16")` selects it; defaults to `F32` (bitwise-transparent).
+    pub wire: WirePrecision,
 }
 
 /// Hardware cost model for the simulator, calibrated by `flashdmoe
@@ -160,7 +260,10 @@ pub struct CostModel {
     pub jitter_sigma: f64,
     /// Fixed host sync cost of a bulk-synchronous collective barrier.
     pub barrier_cost: f64,
-    /// Bytes per scalar element (4 = fp32, 2 = fp16).
+    /// Bytes per scalar element in the *analytic* cost model (4 = fp32,
+    /// 2 = fp16). Kept in sync with [`SystemConfig::wire`] by the
+    /// `wire_precision` knob; setting `elem_bytes` directly is the
+    /// deprecated back-channel (see [`Config::set`]).
     pub elem_bytes: f64,
 }
 
@@ -333,7 +436,14 @@ impl Config {
                     bn: 32,
                     policy: RoutingPolicy::Capacity(1.0),
                 },
-                system: SystemConfig { ranks: 2, nodes: 1, s_rank: 128, processors: 4, packed: true },
+                system: SystemConfig {
+                    ranks: 2,
+                    nodes: 1,
+                    s_rank: 128,
+                    processors: 4,
+                    packed: true,
+                    wire: WirePrecision::F32,
+                },
                 cost: CostModel::h100_nvlink(),
             },
             "default" => Config {
@@ -346,7 +456,14 @@ impl Config {
                     bn: 64,
                     policy: RoutingPolicy::Capacity(1.0),
                 },
-                system: SystemConfig { ranks: 4, nodes: 1, s_rank: 512, processors: 4, packed: true },
+                system: SystemConfig {
+                    ranks: 4,
+                    nodes: 1,
+                    s_rank: 512,
+                    processors: 4,
+                    packed: true,
+                    wire: WirePrecision::F32,
+                },
                 cost: CostModel::h100_nvlink(),
             },
             "perf" => Config {
@@ -359,7 +476,14 @@ impl Config {
                     bn: 64,
                     policy: RoutingPolicy::Capacity(1.0),
                 },
-                system: SystemConfig { ranks: 4, nodes: 1, s_rank: 1024, processors: 4, packed: true },
+                system: SystemConfig {
+                    ranks: 4,
+                    nodes: 1,
+                    s_rank: 1024,
+                    processors: 4,
+                    packed: true,
+                    wire: WirePrecision::F32,
+                },
                 cost: CostModel::h100_nvlink(),
             },
             // Paper §4: 8xH100, E up to 128, T up to 16K, H=2048, D=2048.
@@ -373,7 +497,14 @@ impl Config {
                     bn: 64,
                     policy: RoutingPolicy::Capacity(1.0),
                 },
-                system: SystemConfig { ranks: 8, nodes: 1, s_rank: 8192, processors: 132, packed: true },
+                system: SystemConfig {
+                    ranks: 8,
+                    nodes: 1,
+                    s_rank: 8192,
+                    processors: 132,
+                    packed: true,
+                    wire: WirePrecision::F32,
+                },
                 cost: CostModel::h100_nvlink(),
             },
             // Paper Fig 5/11: 2xA100 NVLink, E=64, T=8K.
@@ -387,7 +518,14 @@ impl Config {
                     bn: 64,
                     policy: RoutingPolicy::Capacity(1.0),
                 },
-                system: SystemConfig { ranks: 2, nodes: 1, s_rank: 8192, processors: 108, packed: true },
+                system: SystemConfig {
+                    ranks: 2,
+                    nodes: 1,
+                    s_rank: 8192,
+                    processors: 108,
+                    packed: true,
+                    wire: WirePrecision::F32,
+                },
                 cost: CostModel::h100_nvlink(),
             },
             // Paper §F: 4 nodes x 4 A100, 1 local expert, 25 GB/s NIC.
@@ -403,7 +541,14 @@ impl Config {
                     bn: 64,
                     policy: RoutingPolicy::Capacity(1.0),
                 },
-                system: SystemConfig { ranks: 16, nodes: 4, s_rank: 1024, processors: 108, packed: true },
+                system: SystemConfig {
+                    ranks: 16,
+                    nodes: 4,
+                    s_rank: 1024,
+                    processors: 108,
+                    packed: true,
+                    wire: WirePrecision::F32,
+                },
                 cost: CostModel { nic_buffer: 32.0 * 1024.0 * 1024.0, ..CostModel::h100_nvlink() },
             },
             other => bail!("unknown preset '{other}' (try tiny/default/perf/paper_h100x8/paper_a100x2/paper_multinode)"),
@@ -470,6 +615,15 @@ impl Config {
                     other => bail!("packed={other}: expected true/false/1/0/on/off"),
                 }
             }
+            // The wire-format knob: also syncs the simulator's per-element
+            // byte cost so modeled and measured traffic agree.
+            "wire_precision" | "wire" => match WirePrecision::parse(value) {
+                Some(w) => {
+                    self.system.wire = w;
+                    self.cost.elem_bytes = w.bytes() as f64;
+                }
+                None => bail!("{key}={value}: expected 'f32', 'f16' or 'bf16'"),
+            },
             "launch_overhead" => self.cost.launch_overhead = f()?,
             "flops_per_processor" => self.cost.flops_per_processor = f()?,
             "intra_bw" => self.cost.intra_bw = f()?,
@@ -477,7 +631,25 @@ impl Config {
             "nic_buffer" => self.cost.nic_buffer = f()?,
             "jitter_sigma" => self.cost.jitter_sigma = f()?,
             "barrier_cost" => self.cost.barrier_cost = f()?,
-            "elem_bytes" => self.cost.elem_bytes = f()?,
+            // DEPRECATED back-channel, kept as a shim: `elem_bytes` used to
+            // be the only way to express a narrower dtype, and only the
+            // analytic cost model ever saw it. It now drives the real wire
+            // format too — but only when the requested *width* actually
+            // differs from the configured wire's, so `elem_bytes=2` after
+            // `wire_precision=bf16` (already 2 bytes/elem) is the no-op it
+            // looks like rather than a silent bf16→f16 downgrade. Widths
+            // other than 2/4 are simulator-only what-ifs (the cost model
+            // keeps them; the real wire stays as configured). Prefer
+            // `wire_precision`.
+            "elem_bytes" => {
+                let v = f()?;
+                self.cost.elem_bytes = v;
+                if v == 4.0 && self.system.wire.bytes() != 4 {
+                    self.system.wire = WirePrecision::F32;
+                } else if v == 2.0 && self.system.wire.bytes() != 2 {
+                    self.system.wire = WirePrecision::F16;
+                }
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -630,6 +802,65 @@ mod tests {
         assert!(!cfg.system.packed);
         assert!(cfg.set("packed", "maybe").is_err());
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn wire_precision_knob_parses_and_defaults_to_f32() {
+        let mut cfg = Config::preset("tiny").unwrap();
+        assert_eq!(cfg.system.wire, WirePrecision::F32, "f32 wire is the default");
+        assert!(!cfg.system.wire.is_reduced());
+        for (v, want, bytes) in [
+            ("bf16", WirePrecision::Bf16, 2),
+            ("f16", WirePrecision::F16, 2),
+            ("fp16", WirePrecision::F16, 2),
+            ("F32", WirePrecision::F32, 4),
+            ("bfloat16", WirePrecision::Bf16, 2),
+        ] {
+            cfg.set("wire_precision", v).unwrap();
+            assert_eq!(cfg.system.wire, want, "wire_precision={v}");
+            assert_eq!(cfg.system.wire.bytes(), bytes);
+            // the analytic cost model follows the real wire width
+            assert_eq!(cfg.cost.elem_bytes, bytes as f64);
+            cfg.validate().unwrap();
+        }
+        assert!(cfg.set("wire_precision", "int8").is_err());
+        assert!(cfg.set("wire", "f16").is_ok(), "short spelling accepted");
+        assert_eq!(cfg.system.wire, WirePrecision::F16);
+    }
+
+    #[test]
+    fn elem_bytes_shim_still_drives_the_wire_format() {
+        // the deprecated float knob maps onto the typed one
+        let mut cfg = Config::preset("tiny").unwrap();
+        cfg.set("elem_bytes", "2").unwrap();
+        assert_eq!(cfg.system.wire, WirePrecision::F16);
+        assert_eq!(cfg.cost.elem_bytes, 2.0);
+        cfg.set("elem_bytes", "4").unwrap();
+        assert_eq!(cfg.system.wire, WirePrecision::F32);
+        // a width-consistent elem_bytes never downgrades an explicit
+        // format choice: bf16 is already 2 bytes/elem, so elem_bytes=2
+        // is the no-op it looks like (not a silent bf16 -> f16 flip)
+        cfg.set("wire_precision", "bf16").unwrap();
+        cfg.set("elem_bytes", "2").unwrap();
+        assert_eq!(cfg.system.wire, WirePrecision::Bf16, "no bf16->f16 downgrade");
+        // ...while a *different* width still converts (bf16 -> f32)
+        cfg.set("elem_bytes", "4").unwrap();
+        assert_eq!(cfg.system.wire, WirePrecision::F32);
+        // exotic widths remain cost-model-only what-ifs
+        cfg.set("wire_precision", "bf16").unwrap();
+        cfg.set("elem_bytes", "1.5").unwrap();
+        assert_eq!(cfg.cost.elem_bytes, 1.5);
+        assert_eq!(cfg.system.wire, WirePrecision::Bf16, "real wire unchanged");
+    }
+
+    #[test]
+    fn wire_precision_tolerances_are_ordered() {
+        // wider mantissa => tighter documented conformance bound
+        assert!(WirePrecision::F32.conformance_tol() < WirePrecision::F16.conformance_tol());
+        assert!(WirePrecision::F16.conformance_tol() < WirePrecision::Bf16.conformance_tol());
+        for p in [WirePrecision::F32, WirePrecision::F16, WirePrecision::Bf16] {
+            assert_eq!(WirePrecision::parse(p.name()), Some(p), "name roundtrips");
+        }
     }
 
     #[test]

@@ -134,6 +134,9 @@ struct EngineInner {
     ranks: usize,
     /// Per-rank row capacity, for `PassMetrics::batch_fill` accounting.
     s_rank: usize,
+    /// Wire element format, stamped into every pass's metrics (the byte
+    /// counters are measured at this width).
+    wire: crate::config::WirePrecision,
     doorbell: Mutex<Submission>,
     doorbell_cv: Condvar,
     slots: [PassSlot; PASS_SLOTS],
@@ -191,13 +194,18 @@ impl MoeEngine {
         // the backend's pack counter stays flat for the engine lifetime.
         backend.prepare(&params)?;
         let dims = LayoutDims::from_config(&cfg);
-        let heap = Arc::new(SymmetricHeap::new(dims, cfg.system.ranks_per_node()));
+        // The heap IS the wire: cells, transfers and byte counters all
+        // live at the configured element width.
+        let heap =
+            Arc::new(SymmetricHeap::with_wire(dims, cfg.system.ranks_per_node(), cfg.system.wire));
         let ranks = cfg.system.ranks;
         let s_rank = cfg.system.s_rank;
+        let wire = cfg.system.wire;
         let shared = Arc::new(EngineShared::new(cfg, params, heap, backend, mode));
         let inner = Arc::new(EngineInner {
             ranks,
             s_rank,
+            wire,
             doorbell: Mutex::new(Submission { latest: 0, shutdown: false }),
             doorbell_cv: Condvar::new(),
             slots: std::array::from_fn(|_| PassSlot {
@@ -239,9 +247,10 @@ impl MoeEngine {
         self.shared.mode
     }
 
-    /// Bytes of the symmetric tensor L per rank (Table 3's Size(L)).
+    /// Bytes of the symmetric tensor L per rank (Table 3's Size(L)), at
+    /// the configured wire element width — a 16-bit wire halves it.
     pub fn heap_bytes_per_rank(&self) -> f64 {
-        self.shared.dims.bytes(4.0)
+        self.shared.heap.bytes_per_rank() as f64
     }
 
     /// Snapshot of the cumulative engine metrics. `launches` is 1 for the
@@ -450,6 +459,7 @@ fn assemble(inner: &Arc<EngineInner>, st: &mut SlotState) -> Result<ForwardResul
     let mut metrics = PassMetrics {
         epoch,
         rows_capacity: inner.ranks * inner.s_rank,
+        wire: inner.wire,
         ..Default::default()
     };
     for (rank, ro) in rank_outputs.into_iter().enumerate() {

@@ -23,12 +23,16 @@
 //! [`PassInput`]: super::engine::PassInput
 //! [`MoeService`]: super::service::MoeService
 
-/// Fraction of padded dispatch traffic avoided (0.0 when nothing padded).
-fn savings(sent_rows: usize, padded_rows: usize) -> f64 {
-    if padded_rows == 0 {
+use crate::config::WirePrecision;
+
+/// Fraction of a padded baseline avoided (0.0 when the baseline is
+/// empty). Unit-agnostic: callers pass rows (padding-only savings) or
+/// bytes (padding + wire-narrowing savings).
+fn savings(sent: usize, padded: usize) -> f64 {
+    if padded == 0 {
         return 0.0;
     }
-    1.0 - sent_rows as f64 / padded_rows as f64
+    1.0 - sent as f64 / padded as f64
 }
 
 /// Metrics for one rank over one forward pass.
@@ -56,7 +60,8 @@ pub struct RankMetrics {
     pub padded_rows: usize,
     /// Over-capacity (token, expert) pairs dropped by the gate.
     pub dropped: usize,
-    /// One-sided bytes received, split by locality.
+    /// One-sided bytes received, split by locality, **measured at the
+    /// configured wire element width** (2 bytes/elem on a 16-bit wire).
     pub bytes_in_local: u64,
     pub bytes_in_remote: u64,
     /// Peak ready-pool depth (scheduling pressure).
@@ -82,7 +87,10 @@ impl RankMetrics {
         self.ffn_tasks + self.gemm_tasks + self.combine_tasks
     }
 
-    /// Fraction of padded dispatch traffic avoided (payload efficiency).
+    /// Fraction of padded dispatch traffic avoided, in *rows* (the
+    /// padding-only view; a rank doesn't know the wire width). The
+    /// byte-granular view that also credits wire narrowing is
+    /// [`PassMetrics::payload_savings`].
     pub fn payload_savings(&self) -> f64 {
         savings(self.sent_rows, self.padded_rows)
     }
@@ -100,6 +108,9 @@ pub struct PassMetrics {
     pub rows_submitted: usize,
     /// Row capacity of one engine pass (`ranks × s_rank`).
     pub rows_capacity: usize,
+    /// Wire element format the pass ran under (stamps the byte counters:
+    /// `bytes_in_*` are measured at this width).
+    pub wire: WirePrecision,
     pub ranks: Vec<RankMetrics>,
 }
 
@@ -131,25 +142,43 @@ impl PassMetrics {
         total_tokens as f64 / self.wall_secs
     }
 
+    /// Measured one-sided bytes moved across the fabric this pass, at the
+    /// configured wire width (split by locality in the per-rank metrics).
     pub fn total_bytes(&self) -> u64 {
         self.ranks.iter().map(|r| r.bytes_in_local + r.bytes_in_remote).sum()
+    }
+
+    /// [`total_bytes`](Self::total_bytes) under its wire-format name,
+    /// paired with the precision that produced it — the measured quantity
+    /// behind the Fig 18 A/B (`harness::precision_ab`).
+    pub fn wire_bytes(&self) -> (WirePrecision, u64) {
+        (self.wire, self.total_bytes())
+    }
+
+    /// What the same routed rows would have cost on a 4-byte f32 wire:
+    /// the denominator of the payload-narrowing factor. Exact, because
+    /// measured bytes are always `rows × H × wire.bytes()`.
+    pub fn fp32_equiv_bytes(&self) -> u64 {
+        self.total_bytes() / self.wire.bytes() as u64 * 4
     }
 
     pub fn total_dropped(&self) -> usize {
         self.ranks.iter().map(|r| r.dropped).sum()
     }
 
-    /// Pass-wide payload savings: fraction of padded dispatch traffic
-    /// avoided, aggregated over ranks. Under `RoutingPolicy::Dropless` the
-    /// padded baseline is the policy's worst-case slot region, so savings
-    /// read high exactly when the gate is balanced — and
-    /// [`total_dropped`](Self::total_dropped) must read 0 regardless of
-    /// skew (asserted by the conformance suite).
+    /// Pass-wide payload savings in **bytes** against the padded *fp32*
+    /// baseline: credits both dropped padding (rows that never travel)
+    /// and wire narrowing (each traveling element at `wire.bytes()`
+    /// instead of 4). On an f32 wire this reduces to the row-granular
+    /// fraction; on a 16-bit wire a fully-padded pass still reports 0.5.
+    /// Under `RoutingPolicy::Dropless` the padded baseline is the
+    /// policy's worst-case slot region, so savings read high exactly when
+    /// the gate is balanced — and [`total_dropped`](Self::total_dropped)
+    /// must read 0 regardless of skew (asserted by the conformance suite).
     pub fn payload_savings(&self) -> f64 {
-        savings(
-            self.ranks.iter().map(|r| r.sent_rows).sum(),
-            self.ranks.iter().map(|r| r.padded_rows).sum(),
-        )
+        let sent: usize = self.ranks.iter().map(|r| r.sent_rows).sum();
+        let padded: usize = self.ranks.iter().map(|r| r.padded_rows).sum();
+        savings(sent * self.wire.bytes(), padded * WirePrecision::F32.bytes())
     }
 }
 
@@ -285,6 +314,7 @@ mod tests {
 
     #[test]
     fn pass_payload_savings_aggregates_ranks() {
+        // default wire (F32): byte savings reduce to the row fraction
         let p = PassMetrics {
             ranks: vec![
                 RankMetrics { sent_rows: 10, padded_rows: 50, ..Default::default() },
@@ -292,8 +322,51 @@ mod tests {
             ],
             ..Default::default()
         };
+        assert_eq!(p.wire, WirePrecision::F32);
         assert!((p.payload_savings() - 0.75).abs() < 1e-12);
         assert_eq!(PassMetrics::default().payload_savings(), 0.0);
+    }
+
+    #[test]
+    fn pass_payload_savings_credits_wire_narrowing() {
+        // a 16-bit wire halves every traveling element vs the padded-fp32
+        // baseline: 25 rows at 2 B/elem over 100 padded rows at 4 B/elem
+        let p = PassMetrics {
+            wire: WirePrecision::Bf16,
+            ranks: vec![
+                RankMetrics { sent_rows: 10, padded_rows: 50, ..Default::default() },
+                RankMetrics { sent_rows: 15, padded_rows: 50, ..Default::default() },
+            ],
+            ..Default::default()
+        };
+        assert!((p.payload_savings() - 0.875).abs() < 1e-12);
+        // even a fully-padded 16-bit pass saves the narrowing factor
+        let full = PassMetrics {
+            wire: WirePrecision::F16,
+            ranks: vec![RankMetrics { sent_rows: 50, padded_rows: 50, ..Default::default() }],
+            ..Default::default()
+        };
+        assert!((full.payload_savings() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wire_bytes_and_fp32_equivalents() {
+        let p = PassMetrics {
+            wire: WirePrecision::Bf16,
+            ranks: vec![RankMetrics {
+                bytes_in_local: 96,
+                bytes_in_remote: 32,
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        assert_eq!(p.wire_bytes(), (WirePrecision::Bf16, 128));
+        assert_eq!(p.fp32_equiv_bytes(), 256, "same rows on an f32 wire");
+        let f = PassMetrics {
+            ranks: vec![RankMetrics { bytes_in_local: 128, ..Default::default() }],
+            ..Default::default()
+        };
+        assert_eq!(f.fp32_equiv_bytes(), f.total_bytes(), "f32 wire is its own baseline");
     }
 
     #[test]

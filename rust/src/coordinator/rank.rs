@@ -29,6 +29,19 @@
 //! in dispatch-plan order after the processors park. The f32 reduction
 //! order is therefore fixed, making pass outputs bitwise reproducible
 //! regardless of scheduling interleavings or processor count.
+//!
+//! Wire precision: dispatch and combine payloads are encoded to the
+//! configured `WirePrecision` inside `SymmetricHeap::put_signal` and
+//! decoded back to f32 before any GEMM touches them. On an f32 wire the
+//! cells *are* f32, so reads stay zero-copy borrows (`read_borrowed`) —
+//! the hot path is unchanged from before the wire subsystem existed. On
+//! a 16-bit wire each worker decodes into its own `xbuf`, and in split
+//! mode the subscriber decodes each dispatch tile exactly once into
+//! `x_stage` so the D/bN Gemm0 column tasks share one copy. Compute —
+//! gate, FFN, combine scaling and the fold — is f32 throughout, so an
+//! `F32` wire reproduces the pre-wire-subsystem outputs bit for bit, and
+//! 16-bit wires stay bitwise deterministic (round-to-nearest-even is
+//! schedule-free).
 
 use std::cell::UnsafeCell;
 use std::collections::HashMap;
@@ -226,6 +239,16 @@ impl Staging {
         }
     }
 
+    /// Fill a whole block in place. SAFETY: one writer per block — the
+    /// subscriber decodes each dispatch block exactly once, before any
+    /// reader task is queued (the queue handoff publishes the write).
+    fn fill_block(&self, block: usize, f: impl FnOnce(&mut [f32])) {
+        unsafe {
+            let base = (*self.data.get()).as_mut_ptr().add(block * self.stride);
+            f(std::slice::from_raw_parts_mut(base, self.stride));
+        }
+    }
+
     /// Read a whole block. Caller must have synchronized with all writers
     /// (dependency latch release + queue/doorbell handoff establish
     /// happens-before).
@@ -288,6 +311,12 @@ struct PassCtx {
     /// static worst-case capacity.
     block_base: Vec<u32>,
     slices: Option<Arc<WeightSlices>>,
+    /// Split mode on a reduced (16-bit) wire only: each inbound dispatch
+    /// tile decoded to f32 exactly **once** (by the subscriber, at decode
+    /// time) — the D/bN Gemm0 column tasks borrow this copy instead of
+    /// each re-decoding the same heap cell. `None` on an f32 wire, where
+    /// Gemm0 borrows the heap cell zero-copy (`read_borrowed`).
+    x_stage: Option<Staging>,
     mid: Option<Staging>,
     out_stage: Option<Staging>,
     g0_latch: Option<DependencyTable>,
@@ -571,6 +600,7 @@ impl RankActor {
             combine_tiles,
             block_base,
             slices: self.slices.clone(),
+            x_stage: (split && !shared.heap.zero_copy()).then(|| Staging::new(blocks, m.bm * h)),
             mid: split.then(|| Staging::new(blocks, m.bm * m.d)),
             out_stage: split.then(|| Staging::new(blocks, m.bm * m.h)),
             g0_latch: split.then(|| DependencyTable::new(blocks, d_cols)),
@@ -735,8 +765,8 @@ fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) {
     let mut idle_spins = 0u32;
     let mut last_progress = Instant::now();
     // Help-out buffers, allocated on the first steal only (most sweeps
-    // never need them).
-    let mut help: Option<(Vec<f32>, Vec<f32>)> = None;
+    // never need them): (scratch, tile_out, xbuf).
+    let mut help: Option<(Vec<f32>, Vec<f32>, Vec<f32>)> = None;
     loop {
         let mut progressed = false;
         for peer in 0..ranks {
@@ -808,10 +838,16 @@ fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) {
             if idle_spins >= HELP_OUT_AFTER {
                 if let Some(task) = ctx.queue.steal() {
                     let m = &shared.cfg.model;
-                    let (scratch, tile_out) = help.get_or_insert_with(|| {
-                        (vec![0.0f32; m.bm * m.d.max(m.h)], vec![0.0f32; m.bm * m.h.max(m.bn)])
+                    let (scratch, tile_out, xbuf) = help.get_or_insert_with(|| {
+                        let xbuf_len =
+                            if shared.heap.zero_copy() { 0 } else { m.bm * m.h };
+                        (
+                            vec![0.0f32; m.bm * m.d.max(m.h)],
+                            vec![0.0f32; m.bm * m.h.max(m.bn)],
+                            vec![0.0f32; xbuf_len],
+                        )
                     });
-                    if let Err(err) = execute_task(ctx, &task, None, scratch, tile_out) {
+                    if let Err(err) = execute_task(ctx, &task, None, scratch, tile_out, xbuf) {
                         // fail the pass loudly, exactly like the watchdog:
                         // rank_main converts the unwind into a pass error
                         ctx.queue.stop_all();
@@ -877,6 +913,16 @@ fn decode_dispatch(ctx: &PassCtx, peer: usize, e_loc: usize, tile: usize, rows: 
         TaskGraphMode::Split => {
             let block = ctx.block_id(peer, e_loc, tile);
             ctx.block_rows[block].store(rows as u32, Ordering::Release);
+            // Reduced wire: decode the tile to f32 exactly once, before
+            // the column tasks are queued (the queue handoff publishes
+            // the write) — the D/bN Gemm0 tasks all read this one copy.
+            // F32 wire: no stage exists; Gemm0 borrows the cell directly.
+            if let Some(stage) = &ctx.x_stage {
+                let coord = Coord { p: peer, r: 0, b: 1, e: e_loc, c: tile * m.bm };
+                stage.fill_block(block, |dst| {
+                    ctx.shared.heap.read_into(ctx.rank, coord, m.bm, dst);
+                });
+            }
             let tasks: Vec<Task> = (0..(m.d / m.bn) as u32)
                 .map(|col| Task {
                     task_type: TaskType::Gemm0,
@@ -902,9 +948,14 @@ fn processor_loop(ctx: &PassCtx, slot: usize) -> Result<()> {
     let (h, d) = (m.h, m.d);
     let mut scratch = vec![0.0f32; m.bm * d.max(h)];
     let mut tile_out = vec![0.0f32; m.bm * h.max(m.bn)];
+    // decode buffer for reduced-wire heap reads (f32 after decode);
+    // zero-length on a zero-copy wire, where reads borrow the heap and
+    // never touch it — no per-pass megabytes for the default f32 config
+    let xbuf_len = if shared.heap.zero_copy() { 0 } else { m.bm * h };
+    let mut xbuf = vec![0.0f32; xbuf_len];
     while let Some(task) = ctx.queue.pop(slot) {
         let t0 = Instant::now();
-        execute_task(ctx, &task, Some(slot), &mut scratch, &mut tile_out)
+        execute_task(ctx, &task, Some(slot), &mut scratch, &mut tile_out, &mut xbuf)
             .with_context(|| format!("rank {} task {task:?}", ctx.rank))?;
         ctx.counters
             .busy_nanos
@@ -917,12 +968,16 @@ fn processor_loop(ctx: &PassCtx, slot: usize) -> Result<()> {
 /// spawned children are owner-pushed there, LIFO, while the intermediate
 /// block is cache-hot); `None` means the subscriber is helping out via a
 /// steal, so children go through the external round-robin path instead.
+/// `xbuf` (≥ bM×H floats) receives heap payloads decoded from a reduced
+/// wire back to f32 before compute consumes them; on an f32 wire the
+/// reads borrow the heap zero-copy and `xbuf` goes untouched.
 fn execute_task(
     ctx: &PassCtx,
     task: &Task,
     slot: Option<usize>,
     scratch: &mut [f32],
     tile_out: &mut [f32],
+    xbuf: &mut [f32],
 ) -> Result<()> {
     let shared = &*ctx.shared;
     let m = &shared.cfg.model;
@@ -932,7 +987,14 @@ fn execute_task(
     match task.task_type {
         TaskType::FusedFfn => {
             let coord = Coord { p: peer, r: 0, b: 1, e: e_loc, c: tile * bm };
-            let x = shared.heap.read(ctx.rank, coord, bm);
+            // f32 wire: zero-copy borrow; 16-bit wire: decode into xbuf
+            let x: &[f32] = match shared.heap.read_borrowed(ctx.rank, coord, bm) {
+                Some(x) => x,
+                None => {
+                    shared.heap.read_into(ctx.rank, coord, bm, xbuf);
+                    &xbuf[..bm * h]
+                }
+            };
             let global_e = ctx.rank * e_local + e_loc;
             shared.backend.ffn_tile(
                 x,
@@ -954,8 +1016,20 @@ fn execute_task(
         }
         TaskType::Gemm0 => {
             let col = task.col as usize;
-            let coord = Coord { p: peer, r: 0, b: 1, e: e_loc, c: tile * bm };
-            let x = shared.heap.read(ctx.rank, coord, bm);
+            let block = ctx.block_id(peer, e_loc, tile);
+            // Reduced wire: the subscriber decoded this tile to f32 once
+            // at decode time (x_stage) and column tasks share that copy.
+            // F32 wire: borrow the heap cell zero-copy, as pre-PR.
+            let x: &[f32] = match &ctx.x_stage {
+                Some(stage) => stage.read_block(block),
+                None => {
+                    let coord = Coord { p: peer, r: 0, b: 1, e: e_loc, c: tile * bm };
+                    shared
+                        .heap
+                        .read_borrowed(ctx.rank, coord, bm)
+                        .expect("x_stage is None only on a zero-copy wire")
+                }
+            };
             let sl = ctx.slices.as_ref().unwrap();
             shared.backend.gemm0_tile(
                 x,
@@ -965,7 +1039,6 @@ fn execute_task(
                 ctx.rank * e_local + e_loc,
                 col,
             )?;
-            let block = ctx.block_id(peer, e_loc, tile);
             ctx.mid.as_ref().unwrap().write_stripe(block, bm, m.d, col, bn, &tile_out[..bm * bn]);
             ctx.counters.gemm_tasks.fetch_add(1, Ordering::Relaxed);
             if ctx.g0_latch.as_ref().unwrap().complete_one(block) {
@@ -1015,7 +1088,14 @@ fn execute_task(
             // `peer` is the expert-owner rank; e_loc indexes its experts.
             let rows = task.rows as usize;
             let coord = Coord { p: peer, r: 1, b: 1, e: e_loc, c: tile * bm };
-            let y = shared.heap.read(ctx.rank, coord, rows);
+            // f32 wire: zero-copy borrow; 16-bit wire: decode into xbuf
+            let y: &[f32] = match shared.heap.read_borrowed(ctx.rank, coord, rows) {
+                Some(y) => y,
+                None => {
+                    shared.heap.read_into(ctx.rank, coord, rows, xbuf);
+                    &xbuf[..rows * h]
+                }
+            };
             let global_e = (peer * e_local + e_loc) as u32;
             let ordinal = *ctx
                 .tphi

@@ -9,6 +9,19 @@
 //! the `nvshmem_fence` analog in Alg. 4's "Enforce memory consistency
 //! before consuming packet").
 //!
+//! **Wire precision.** The heap is the *wire*: cells store elements at
+//! the configured [`WirePrecision`] (f32, f16 or bf16), `put_signal`
+//! quantizes its f32 payload into that format on the way in, and
+//! [`read_into`](SymmetricHeap::read_into) dequantizes back to f32 on the
+//! way out — so expert GEMMs and the combine fold always compute in f32
+//! while inbox cells, staging regions and the byte counters all scale
+//! with the wire element width (a 16-bit wire *measures* half the bytes
+//! of f32 for the same routed rows; nothing here is modeled). At `F32`
+//! the encode/decode pair is a bitwise byte copy, preserving the
+//! pre-existing bitwise-determinism contract exactly. Flag-carried row
+//! metadata is unchanged by the format: signals count *rows*, and byte
+//! accounting derives bytes as `rows × H × wire.bytes()`.
+//!
 //! **Pass generations.** The heap is owned by a persistent engine and is
 //! never globally reset between forward passes. Instead every signal flag
 //! carries a *generation tag* — the pass epoch stamped by the writer —
@@ -34,7 +47,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Result};
 
+use crate::config::WirePrecision;
 use crate::layout::{Coord, LayoutDims, Write};
+use crate::wire;
 
 /// Signal flag encoding: 0 = never written; otherwise the high 32 bits
 /// hold the writer's pass epoch (the per-slot generation counter) and the
@@ -73,12 +88,18 @@ pub fn flag_epoch(flag: u64) -> u32 {
 
 /// One rank's symmetric heap segment.
 struct RankHeap {
-    /// The symmetric tensor L (f32 elements).
-    data: UnsafeCell<Vec<f32>>,
+    /// The symmetric tensor L, stored as little-endian code units of the
+    /// heap's [`WirePrecision`] (4 bytes/elem at f32, 2 at f16/bf16) —
+    /// the inbox cells and staging regions genuinely shrink with the
+    /// configured width, they are not f32 buffers with narrow accounting.
+    /// Backed by `u32` words (length `ceil(elems · width / 4)`) so the
+    /// base is 4-byte aligned, which is what lets an f32-wire read be a
+    /// zero-copy `&[f32]` borrow ([`SymmetricHeap::read_borrowed`]).
+    data: UnsafeCell<Vec<u32>>,
     /// One signal flag per (peer, round, local expert, tile).
     flags: Vec<AtomicU64>,
-    /// Transfer accounting (bytes received), split by locality.
-    /// Cumulative over the heap's lifetime.
+    /// Transfer accounting (bytes received *at the wire width*), split by
+    /// locality. Cumulative over the heap's lifetime.
     bytes_in_local: AtomicU64,
     bytes_in_remote: AtomicU64,
     puts_in: AtomicU64,
@@ -88,6 +109,8 @@ struct RankHeap {
 /// and resident for the owning engine's lifetime.
 pub struct SymmetricHeap {
     dims: LayoutDims,
+    /// Element format of every cell (fixed at construction).
+    wire: WirePrecision,
     ranks: Vec<RankHeap>,
     /// ranks per node, for intra/inter accounting.
     ranks_per_node: usize,
@@ -104,29 +127,57 @@ unsafe impl Sync for SymmetricHeap {}
 unsafe impl Send for SymmetricHeap {}
 
 impl SymmetricHeap {
+    /// Bitwise-transparent f32-wire heap (the historical default).
     pub fn new(dims: LayoutDims, ranks_per_node: usize) -> Self {
+        Self::with_wire(dims, ranks_per_node, WirePrecision::F32)
+    }
+
+    /// Heap whose cells, transfers and byte counters all live at `wire`
+    /// width. Zero-initialized cells decode to 0.0 in every format.
+    pub fn with_wire(dims: LayoutDims, ranks_per_node: usize, wire: WirePrecision) -> Self {
+        let cell_words = (dims.elems() * wire.bytes()).div_ceil(4);
         let ranks = (0..dims.p)
             .map(|_| RankHeap {
-                data: UnsafeCell::new(vec![0.0f32; dims.elems()]),
+                data: UnsafeCell::new(vec![0u32; cell_words]),
                 flags: (0..dims.num_flags()).map(|_| AtomicU64::new(FLAG_EMPTY)).collect(),
                 bytes_in_local: AtomicU64::new(0),
                 bytes_in_remote: AtomicU64::new(0),
                 puts_in: AtomicU64::new(0),
             })
             .collect();
-        Self { dims, ranks, ranks_per_node }
+        Self { dims, wire, ranks, ranks_per_node }
     }
 
     pub fn dims(&self) -> &LayoutDims {
         &self.dims
     }
 
-    /// One-sided put + signal: copy `payload` (rows × H) into rank `dst`'s
-    /// cell at `coord` (rows starting at `coord.c`), then release-store
-    /// `encode_flag(epoch, rows)` into the destination flag for
-    /// `(coord.p, coord.r, coord.e, tile)`. `epoch` is the submitting
-    /// pass's generation tag; the destination only consumes flags of the
-    /// generation it is currently serving.
+    /// The heap's wire element format.
+    pub fn wire(&self) -> WirePrecision {
+        self.wire
+    }
+
+    /// Bytes of the symmetric tensor L on one rank at the wire width.
+    pub fn bytes_per_rank(&self) -> usize {
+        self.dims.elems() * self.wire.bytes()
+    }
+
+    /// True when reads need no decode step: an f32 wire on a
+    /// little-endian target stores the exact f32 bit patterns, so
+    /// [`read_borrowed`](SymmetricHeap::read_borrowed) can hand out the
+    /// cell memory directly (the pre-wire-subsystem zero-copy path).
+    pub fn zero_copy(&self) -> bool {
+        self.wire == WirePrecision::F32 && cfg!(target_endian = "little")
+    }
+
+    /// One-sided put + signal: quantize `payload` (rows × H, f32) into
+    /// rank `dst`'s cell at `coord` (rows starting at `coord.c`) at the
+    /// heap's wire precision, then release-store `encode_flag(epoch,
+    /// rows)` into the destination flag for `(coord.p, coord.r, coord.e,
+    /// tile)`. `epoch` is the submitting pass's generation tag; the
+    /// destination only consumes flags of the generation it is currently
+    /// serving. Bytes are accounted at the wire width — `rows × H ×
+    /// wire.bytes()` — not at a hardcoded 4 bytes/element.
     ///
     /// Enforces Definition C.2; forged coordinates are rejected, which is
     /// what makes the unsafe interior sound.
@@ -151,15 +202,20 @@ impl SymmetricHeap {
             bail!("tile writes must start at a bM-aligned slot, got c={}", coord.c);
         }
         let target = &self.ranks[dst];
-        let off = self.dims.offset(coord);
+        let wb = self.wire.bytes();
+        let off = self.dims.offset(coord) * wb;
         // SAFETY: bounds checked by write_is_valid + offset debug assert;
-        // disjointness across concurrent writers by Theorem 3.1.
+        // disjointness across concurrent writers by Theorem 3.1 (byte
+        // ranges scale element ranges by the constant wire width, so
+        // element-disjoint writes stay byte-disjoint). The u32 backing is
+        // viewed as bytes for the encode.
         unsafe {
-            let base = (*target.data.get()).as_mut_ptr().add(off);
-            std::ptr::copy_nonoverlapping(payload.as_ptr(), base, payload.len());
+            let base = ((*target.data.get()).as_mut_ptr() as *mut u8).add(off);
+            let dst_bytes = std::slice::from_raw_parts_mut(base, payload.len() * wb);
+            wire::encode_into(self.wire, payload, dst_bytes);
         }
-        // accounting
-        let bytes = (payload.len() * 4) as u64;
+        // accounting at the wire width (the measured payload-narrowing)
+        let bytes = (payload.len() * wb) as u64;
         if src / self.ranks_per_node == dst / self.ranks_per_node {
             target.bytes_in_local.fetch_add(bytes, Ordering::Relaxed);
         } else {
@@ -191,20 +247,64 @@ impl SymmetricHeap {
         }
     }
 
-    /// Read `rows` rows at `coord` on `rank`. Caller must have observed the
-    /// guarding flag via [`poll`]/[`poll_epoch`] (acquire) before reading —
-    /// that ordering is what makes this data race-free.
-    pub fn read(&self, rank: usize, coord: Coord, rows: usize) -> &[f32] {
-        let off = self.dims.offset(coord);
+    /// Decode `rows` rows at `coord` on `rank` into `out[..rows*H]`
+    /// (dequantized to f32 from the wire format; a byte copy at `F32`).
+    /// Caller must have observed the guarding flag via
+    /// [`poll`]/[`poll_epoch`] (acquire) before reading — that ordering is
+    /// what makes this data race-free.
+    ///
+    /// [`poll`]: SymmetricHeap::poll
+    /// [`poll_epoch`]: SymmetricHeap::poll_epoch
+    pub fn read_into(&self, rank: usize, coord: Coord, rows: usize, out: &mut [f32]) {
+        let wb = self.wire.bytes();
+        let off = self.dims.offset(coord) * wb;
         let len = rows * self.dims.h;
+        debug_assert!(out.len() >= len, "read_into buffer too small: {} < {len}", out.len());
         // SAFETY: the release/acquire flag protocol orders this read after
         // the producer's copy; the region is never rewritten within a layer
         // pass (slots are owned by one (src, round) pair), and the engine's
-        // pass-start barrier orders cross-pass reuse.
+        // pass-start barrier orders cross-pass reuse. The u32 backing is
+        // viewed as bytes for the decode.
         unsafe {
             let v = &*self.ranks[rank].data.get();
-            &v[off..off + len]
+            let bytes = std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4);
+            wire::decode_into(self.wire, &bytes[off..off + len * wb], &mut out[..len]);
         }
+    }
+
+    /// Zero-copy read of `rows` rows at `coord` on `rank`: `Some(&[f32])`
+    /// iff [`zero_copy`](SymmetricHeap::zero_copy) holds (f32 wire,
+    /// little-endian target) — the cell memory *is* the f32 data, so the
+    /// hot path pays no decode copy, exactly like the pre-wire-subsystem
+    /// `read`. Reduced wires return `None`; callers fall back to
+    /// [`read_into`](SymmetricHeap::read_into). Same flag-acquire
+    /// precondition as `read_into`.
+    pub fn read_borrowed(&self, rank: usize, coord: Coord, rows: usize) -> Option<&[f32]> {
+        if !self.zero_copy() {
+            return None;
+        }
+        let off = self.dims.offset(coord);
+        let len = rows * self.dims.h;
+        // SAFETY: same ordering argument as read_into; the u32 backing
+        // guarantees 4-byte alignment, `off` is an element offset (so the
+        // byte offset is 4-aligned at f32 width), and on a little-endian
+        // target the encoded bytes are the f32 bit patterns verbatim.
+        unsafe {
+            let v = &*self.ranks[rank].data.get();
+            debug_assert!((off + len) * 4 <= v.len() * 4);
+            let base = (v.as_ptr() as *const f32).add(off);
+            Some(std::slice::from_raw_parts(base, len))
+        }
+    }
+
+    /// Allocating convenience wrapper over [`read_into`] (tests, cold
+    /// paths; the hot path reuses per-worker buffers instead).
+    ///
+    /// [`read_into`]: SymmetricHeap::read_into
+    pub fn read_rows(&self, rank: usize, coord: Coord, rows: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; rows * self.dims.h];
+        self.read_into(rank, coord, rows, &mut out);
+        out
     }
 
     /// (local, remote) bytes received by `rank` over the heap's lifetime.
@@ -251,7 +351,7 @@ mod tests {
         assert_eq!(flag_rows(flag), 2);
         assert_eq!(flag_epoch(flag), 1);
         assert_eq!(h.poll_epoch(1, fidx, 1), Some(2));
-        assert_eq!(h.read(1, coord, 2), &payload[..]);
+        assert_eq!(h.read_rows(1, coord, 2), payload, "f32 wire roundtrips bitwise");
     }
 
     #[test]
@@ -304,7 +404,7 @@ mod tests {
         h.put_signal(0, 1, coord, &[2.0; 8], 2).unwrap();
         assert_eq!(h.poll_epoch(1, fidx, 2), Some(2));
         assert_eq!(h.poll_epoch(1, fidx, 1), None, "old generation invisible");
-        assert!(h.read(1, coord, 2).iter().all(|&v| v == 2.0));
+        assert!(h.read_rows(1, coord, 2).iter().all(|&v| v == 2.0));
     }
 
     #[test]
@@ -335,11 +435,68 @@ mod tests {
                     let fidx = h.dims().flag_index(src, 0, e, t);
                     assert_eq!(h.poll_epoch(0, fidx, 1), Some(4));
                     let want = (src * 100 + e * 10 + t) as f32;
-                    assert!(h.read(0, coord, 4).iter().all(|&v| v == want));
+                    assert!(h.read_rows(0, coord, 4).iter().all(|&v| v == want));
                 }
             }
         }
         assert_eq!(h.puts_in(0), 8 * 2 * 4);
+    }
+
+    #[test]
+    fn reduced_precision_wire_quantizes_payloads_and_halves_accounting() {
+        let dims = LayoutDims { p: 2, e_local: 2, c: 8, h: 4, bm: 4 };
+        let coord = Coord { p: 0, r: 0, b: 1, e: 1, c: 4 };
+        // payload mixes exactly-representable values with ones that must
+        // round; 2 rows x H=4 = 8 floats
+        let payload: Vec<f32> = vec![1.0, -2.5, 0.15625, 1024.0, 1.0e-3, -7.3, 3.14159, 0.0];
+        let f32_bytes = {
+            let h = SymmetricHeap::new(dims, 2);
+            h.put_signal(0, 1, coord, &payload, 1).unwrap();
+            h.total_bytes()
+        };
+        assert_eq!(f32_bytes, 8 * 4);
+        for wire in [WirePrecision::Bf16, WirePrecision::F16] {
+            let h = SymmetricHeap::with_wire(dims, 2, wire);
+            assert_eq!(h.wire(), wire);
+            assert_eq!(h.bytes_per_rank(), dims.elems() * 2, "cells shrink for real");
+            h.put_signal(0, 1, coord, &payload, 1).unwrap();
+            // measured bytes are exactly half of the f32 wire for the
+            // same rows — the accounting follows the element width
+            assert_eq!(h.total_bytes() * 2, f32_bytes, "{wire:?} byte accounting");
+            // the receiver observes the per-element quantized values
+            let got = h.read_rows(1, coord, 2);
+            for (g, &x) in got.iter().zip(&payload) {
+                assert_eq!(
+                    g.to_bits(),
+                    crate::wire::quantize(wire, x).to_bits(),
+                    "{wire:?}: wire roundtrip of {x}"
+                );
+            }
+            // flags still carry rows, independent of the element width
+            let fidx = h.dims().flag_index(0, 0, 1, 1);
+            assert_eq!(h.poll_epoch(1, fidx, 1), Some(2));
+            // reduced wires have no zero-copy view — callers must decode
+            assert!(!h.zero_copy());
+            assert!(h.read_borrowed(1, coord, 2).is_none());
+        }
+    }
+
+    #[test]
+    fn f32_wire_reads_borrow_zero_copy() {
+        let h = heap(); // f32 wire
+        let coord = Coord { p: 0, r: 0, b: 1, e: 0, c: 0 };
+        let payload = vec![1.5f32, -2.0, f32::MIN_POSITIVE, 0.0, 3.25, -0.0, 1e30, -7.0];
+        h.put_signal(0, 1, coord, &payload, 1).unwrap();
+        if cfg!(target_endian = "little") {
+            assert!(h.zero_copy());
+            let got = h.read_borrowed(1, coord, 2).expect("f32 wire borrows");
+            // bitwise: the borrow views the encoded cell directly
+            for (g, w) in got.iter().zip(&payload) {
+                assert_eq!(g.to_bits(), w.to_bits());
+            }
+        }
+        // the decode path agrees with the borrow path
+        assert_eq!(h.read_rows(1, coord, 2), payload);
     }
 
     #[test]

@@ -8,6 +8,15 @@
 //! perf pass; the XLA/PJRT path executes the same math via the AOT
 //! Pallas artifacts, and both must agree to f32 tolerance.
 //!
+//! **Compute precision is f32, unconditionally.** The engine's
+//! `wire_precision` knob (f16/bf16 payloads on the symmetric heap —
+//! see `crate::wire` and `fabric.rs`) never reaches this module: tiles
+//! are dequantized back to f32 *before* any GEMM consumes them, every
+//! kernel here accumulates in f32, and the bitwise `packed == naive`
+//! reduction-order guarantee below is independent of what format the
+//! operands crossed the fabric in. FlashMoE ships FP32 compute while
+//! shrinking the sparse data movement — this split is that contract.
+//!
 //! ## Unpacked reference path
 //!
 //! All matrices row-major. The hot loop is an (MR x NR) register tile

@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::config::{Config, RoutingPolicy};
+use crate::config::{Config, RoutingPolicy, WirePrecision};
 use crate::coordinator::{BatchPolicy, MoeEngine, MoeService, RequestOpts, TaskGraphMode};
 use crate::expert::{generate_tokens, ModelParams};
 use crate::gemm;
@@ -19,6 +19,7 @@ use crate::layout;
 use crate::runtime::{ComputeBackend, NativeBackend};
 use crate::sim::engines::{simulate, Baseline, Engine};
 use crate::sim::straggler;
+use crate::util::check::dense_reference_moe;
 use crate::util::json::{self, Json};
 use crate::util::prng::Rng;
 use crate::util::stats::{fmt_bytes, fmt_time, max_abs_diff, summarize, Table};
@@ -767,7 +768,9 @@ pub fn table3() -> (String, Vec<layout::MemoryReport>) {
         for experts in [16usize, 32, 64, 128] {
             let mut m = model.clone();
             m.e = experts;
-            let r = layout::memory_report(tokens, experts, &m, 8);
+            // fp32 wire for parity with the paper's Table 3 columns;
+            // `memory_report(…, WirePrecision::Bf16)` halves Size(L)
+            let r = layout::memory_report(tokens, experts, &m, 8, WirePrecision::F32);
             t.row(&[
                 format!("{}K", tokens / 1024),
                 experts.to_string(),
@@ -931,39 +934,154 @@ pub fn fig17(seed: u64) -> Result<(String, Vec<Point>)> {
 }
 
 // ---------------------------------------------------------------------------
-// Fig 18: FP16 vs FP32 memory-instruction model
+// Fig 18: wire precision A/B — measured on the live engine, not modeled
 // ---------------------------------------------------------------------------
 
-pub fn fig18(seed: u64) -> Result<(String, Vec<Point>)> {
-    let mut text = String::from("## Fig 18 — FP16 vs FP32 (payload + shared-memory instruction model)\n\n");
-    let mut t = Table::new(&["dtype", "bytes on wire", "smem instr / tile (model)", "latency"]);
-    let mut pts = Vec::new();
-    for (name, elem_bytes) in [("fp32", 4.0f64), ("fp16", 2.0)] {
-        let mut cfg = paper_config(2, 8192, 64)?;
-        cfg.set("elem_bytes", &elem_bytes.to_string())?;
-        let wl = cluster_workload(&cfg, Skew::Zipf, seed);
-        let r = simulate(&cfg, &wl, Engine::Flash, seed)?;
-        // Model (paper §H): the fp32 path issues one 128-bit shared-memory
-        // instruction per 4 elements; the fp16 path's suboptimal swizzle
-        // halves the effective width -> 2x the instruction count.
-        let elems = cfg.model.bm * cfg.model.h;
-        let instr = if elem_bytes == 4.0 { elems / 4 } else { elems / 2 };
+/// One wire-precision arm measured on the real engine (replaces the
+/// old analytic fig18: every number here comes out of a live pass).
+#[derive(Clone, Debug)]
+pub struct PrecisionPoint {
+    pub wire: WirePrecision,
+    /// Measured one-sided bytes of one steady-state pass at this wire
+    /// width (from the heap's byte counters, not a formula).
+    pub wire_bytes: u64,
+    /// Byte-granular payload savings vs the padded-fp32 baseline
+    /// (dropped padding + narrowing; `PassMetrics::payload_savings`).
+    pub payload_savings: f64,
+    /// Steady-state per-pass wall p50.
+    pub wall_p50: f64,
+    /// Max |engine - dense f32 reference| over all ranks' outputs.
+    pub max_abs_err: f64,
+    /// The documented conformance bound the error was checked against.
+    pub tolerance: f64,
+    /// Symmetric-heap bytes per rank (halves on a 16-bit wire).
+    pub heap_bytes: f64,
+}
+
+/// A/B the wire formats on the real (native-backend) engine: same
+/// preset, same seed, same inputs — only `wire_precision` changes.
+/// Dropless routing makes the dense per-token reference the oracle for
+/// every arm: conformance at each format's documented tolerance is
+/// asserted here. The gate runs on the submitted f32 tokens, so routing
+/// is identical across arms and the 16-bit arms should measure exactly
+/// half the f32 wire bytes — the measured `wire_bytes` are *reported*,
+/// and the byte-ratio checks live in the callers (the engines test
+/// asserts the exact 2×; the `fig18_fp16` PERF_SMOKE gate independently
+/// fails CI at ≥ 0.6×), so the CI gate is a real check rather than dead
+/// code behind a stricter internal assert.
+pub fn precision_ab(
+    preset: &str,
+    passes: usize,
+    seed: u64,
+) -> Result<(String, Vec<PrecisionPoint>)> {
+    let passes = passes.max(1);
+    let arms = [WirePrecision::F32, WirePrecision::Bf16, WirePrecision::F16];
+    // weights and tokens depend only on model dims + seed, not on the
+    // wire setting — generate once and share across all three arms
+    let mut base = Config::preset(preset)?;
+    base.set("routing_policy", "dropless")?; // dense-ref conformance holds
+    base.validate()?;
+    let params = Arc::new(ModelParams::generate(&base, seed));
+    let inputs: Vec<Vec<f32>> =
+        (0..base.system.ranks).map(|r| generate_tokens(&base, seed, r)).collect();
+    let mut points: Vec<PrecisionPoint> = Vec::new();
+    let mut f32_bytes: Option<u64> = None;
+    let mut t = Table::new(&[
+        "wire",
+        "bytes / pass (measured)",
+        "vs fp32",
+        "payload saved",
+        "p50 / pass",
+        "max |err| vs dense ref",
+        "heap/rank",
+    ]);
+    for wire in arms {
+        let mut cfg = base.clone();
+        cfg.set("wire_precision", wire.name())?;
+        cfg.validate()?;
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+        let engine = MoeEngine::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused)?;
+        engine.submit(&inputs)?.wait()?; // warmup
+        let mut walls = Vec::with_capacity(passes);
+        let mut last = None;
+        for _ in 0..passes {
+            let t0 = std::time::Instant::now();
+            let res = engine.submit(&inputs)?.wait()?;
+            walls.push(t0.elapsed().as_secs_f64());
+            last = Some(res);
+        }
+        let res = last.expect("at least one pass");
+        let bytes = res.metrics.total_bytes();
+        anyhow::ensure!(res.metrics.total_dropped() == 0, "dropless arm dropped pairs");
+
+        // conformance: measured outputs vs the dense f32 per-token oracle
+        let mut max_err = 0.0f64;
+        for (r, out) in res.outputs.iter().enumerate() {
+            let want = dense_reference_moe(&cfg, &params, &inputs[r]);
+            let diff = max_abs_diff(out, &want) as f64;
+            anyhow::ensure!(
+                diff < wire.conformance_tol() as f64,
+                "{} wire: rank {r} err {diff} exceeds documented tolerance {}",
+                wire.name(),
+                wire.conformance_tol()
+            );
+            max_err = max_err.max(diff);
+        }
+
+        // identical routing across arms (the gate sees the f32 tokens),
+        // so bytes scale exactly with the element width — reported here,
+        // asserted by the callers (exact 2× in the engines test, < 0.6×
+        // in the bench's PERF_SMOKE gate)
+        if f32_bytes.is_none() {
+            f32_bytes = Some(bytes);
+        }
+
+        let p = PrecisionPoint {
+            wire,
+            wire_bytes: bytes,
+            payload_savings: res.metrics.payload_savings(),
+            wall_p50: summarize(&walls).p50,
+            max_abs_err: max_err,
+            tolerance: wire.conformance_tol() as f64,
+            heap_bytes: engine.heap_bytes_per_rank(),
+        };
         t.row(&[
-            name.to_string(),
-            fmt_bytes(r.bytes_on_wire),
-            instr.to_string(),
-            fmt_time(r.latency),
+            wire.name().to_string(),
+            fmt_bytes(p.wire_bytes as f64),
+            format!("{:.2}x", p.wire_bytes as f64 / f32_bytes.unwrap() as f64),
+            format!("{:.1}%", p.payload_savings * 100.0),
+            fmt_time(p.wall_p50),
+            format!("{:.2e} (tol {:.0e})", p.max_abs_err, p.tolerance),
+            fmt_bytes(p.heap_bytes),
         ]);
-        pts.push(Point {
-            engine: if elem_bytes == 4.0 { "fp32" } else { "fp16" },
-            x: elem_bytes,
-            latency: r.latency,
-            utilization: r.utilization,
-            bytes: r.bytes_on_wire,
-            launches: r.launches_per_rank,
-            overflow: r.incast_overflow,
-        });
+        points.push(p);
+        engine.shutdown();
     }
-    text.push_str(&t.render());
-    Ok((text, pts))
+    Ok((
+        format!(
+            "## Fig 18 — wire precision A/B, measured on the live engine ({preset}, {passes} passes)\n\n{}",
+            t.render()
+        ),
+        points,
+    ))
+}
+
+/// JSON rows for [`precision_ab`] points (`BENCH_pr5_precision.json`).
+pub fn precision_json(points: &[PrecisionPoint]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                json::obj(vec![
+                    ("wire", json::s(p.wire.name())),
+                    ("wire_bytes", json::num(p.wire_bytes as f64)),
+                    ("payload_savings", json::num(p.payload_savings)),
+                    ("wall_p50", json::num(p.wall_p50)),
+                    ("max_abs_err", json::num(p.max_abs_err)),
+                    ("tolerance", json::num(p.tolerance)),
+                    ("heap_bytes_per_rank", json::num(p.heap_bytes)),
+                ])
+            })
+            .collect(),
+    )
 }

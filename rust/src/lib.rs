@@ -82,6 +82,40 @@
 //! `BENCH_pr3_hotpath.json`, and CI's perf-smoke job fails if the packed
 //! kernel ever regresses below the unpacked baseline.
 //!
+//! ## Wire precision vs compute precision
+//!
+//! [`config::WirePrecision`] (`cfg.set("wire_precision", "bf16")`, also
+//! `"f16"`/`"f32"`) selects the element format of what actually crosses
+//! the fabric: dispatch and combine payloads are quantized by
+//! `SymmetricHeap::put_signal` on the way into a peer's inbox and
+//! dequantized to f32 by `read_into` before any kernel touches them
+//! (`crate::wire` owns the conversions). Compute — gate, expert GEMMs,
+//! combine scaling and the deterministic fold — is f32 at every setting,
+//! so the knob trades *transfer* bytes, never accumulation math:
+//!
+//! * **`F32`** (default): encode/decode is a byte copy; outputs are
+//!   **bitwise identical** to the pre-wire-subsystem engine, and every
+//!   existing guarantee (restart/schedule determinism, dense-reference
+//!   conformance at 1e-5, Theorem 3.1 write disjointness) is unchanged.
+//! * **`Bf16` / `F16`**: inbox cells, staging regions and the *measured*
+//!   byte counters all halve — `PassMetrics::total_bytes` reads exactly
+//!   `2·routed·H·2` bytes instead of `…·4` for the same routed rows, and
+//!   `PassMetrics::payload_savings` credits the narrowing on top of
+//!   dropped padding. Outputs remain bitwise deterministic across
+//!   restarts, policies and processor counts (round-to-nearest-even has
+//!   no schedule dependence), but match the dense f32 reference only to
+//!   [`config::WirePrecision::conformance_tol`] (documented per format).
+//!
+//! The paper's Fig 18 (FP16 vs FP32) is reproduced **measured, not
+//! modeled**: `harness::precision_ab` drives the same inputs through live
+//! engines at each wire setting, asserts dense-reference conformance per
+//! format, and reports measured bytes and pass latency; the engines test
+//! asserts the exact 2× byte reduction on those points, `cargo bench
+//! --bench fig18_fp16` records them into `BENCH_pr5_precision.json`, and
+//! CI's perf-smoke gate independently fails if a 16-bit wire ever costs
+//! ≥ 0.6× the f32 bytes. The legacy `elem_bytes` cost-model float is now
+//! a deprecation shim over this knob (see `config.rs`).
+//!
 //! ## Quickstart — serving requests
 //!
 //! The serving front door: start a [`coordinator::MoeService`], enqueue
@@ -100,6 +134,7 @@
 //! # fn main() -> anyhow::Result<()> {
 //! let mut cfg = Config::preset("tiny")?;
 //! cfg.set("routing_policy", "dropless")?; // request-level conformance
+//! cfg.set("wire_precision", "bf16")?; // halve fabric bytes; compute stays f32
 //! let params = Arc::new(ModelParams::generate(&cfg, 42));
 //! let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
 //!
@@ -180,6 +215,7 @@ pub mod util {
 }
 
 pub mod config;
+pub mod wire;
 pub mod gate;
 pub mod layout;
 pub mod task;

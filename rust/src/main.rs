@@ -243,10 +243,13 @@ fn cmd_figures(argv: &[String]) -> Result<()> {
         harness::fig13(seed)?,
         harness::fig14(seed)?,
         harness::fig17(seed)?,
-        harness::fig18(seed)?,
     ] {
         println!("{}", f.0);
     }
+    // Fig 18 is measured on the live engine (not simulated): f32 vs
+    // bf16/f16 wire formats on identical inputs, conformance asserted.
+    let (fig18, _) = harness::precision_ab("tiny", 2, seed)?;
+    println!("{fig18}");
     Ok(())
 }
 
@@ -292,12 +295,13 @@ fn cmd_inspect(argv: &[String]) -> Result<()> {
     let dims = flashdmoe::layout::LayoutDims::from_config(&cfg);
     println!("{cfg:#?}");
     println!(
-        "layout: P={} E_local={} C={} H={} | L = {} | {} flags | {} tiles/expert",
+        "layout: P={} E_local={} C={} H={} | L = {} ({} wire) | {} flags | {} tiles/expert",
         dims.p,
         dims.e_local,
         dims.c,
         dims.h,
-        fmt_bytes(dims.bytes(cfg.cost.elem_bytes)),
+        fmt_bytes(dims.bytes(cfg.system.wire.bytes() as f64)),
+        cfg.system.wire.name(),
         dims.num_flags(),
         dims.tiles_per_expert()
     );
@@ -310,6 +314,7 @@ fn cmd_inspect(argv: &[String]) -> Result<()> {
         cfg.model.e,
         &cfg.model,
         cfg.system.ranks,
+        cfg.system.wire,
     );
     println!(
         "memory: Size(L)={} bookkeeping={} total={}",

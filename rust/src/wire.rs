@@ -1,0 +1,312 @@
+//! The reduced-precision wire format: f32 ⇄ {f32, f16, bf16} conversion
+//! at the symmetric-heap boundary.
+//!
+//! Dispatch and combine payloads are *quantized* to the configured
+//! [`WirePrecision`] when they enter the heap (`SymmetricHeap::put_signal`
+//! encodes) and *dequantized* back to f32 when a consumer reads them
+//! (`SymmetricHeap::read_into` decodes). Expert GEMMs, gate math and the
+//! combine fold all run in f32 — wire precision changes what crosses the
+//! fabric, never how the compute kernels accumulate.
+//!
+//! Guarantees, relied on by the engine test suite:
+//!
+//! * **F32 is a bitwise no-op.** `encode_into`/`decode_into` at
+//!   [`WirePrecision::F32`] are little-endian byte copies, so an F32
+//!   engine produces bit-identical outputs to one that predates the wire
+//!   subsystem — including NaN payloads and `-0.0` signs.
+//! * **Conversions are deterministic and order-free.** Both 16-bit
+//!   formats use IEEE round-to-nearest-even per element, so reduced
+//!   passes stay bitwise reproducible across restarts, schedules and
+//!   processor counts (the combine fold already fixes the f32 reduction
+//!   order).
+//! * **Round-trip error is bounded.** For finite inputs in the format's
+//!   normal range, `|roundtrip(x) - x| <= |x| * 2^-(m+1)` with `m` stored
+//!   mantissa bits (7 for bf16, 10 for f16). NaN stays NaN (quieted),
+//!   ±Inf and signed zero are preserved, f16 subnormals round with
+//!   absolute error ≤ 2^-25, and quantization is monotone — all
+//!   property-tested below.
+
+use crate::config::WirePrecision;
+
+// ---------------------------------------------------------------------------
+// bf16 (bfloat16: 1 sign, 8 exponent, 7 mantissa — f32's top half)
+// ---------------------------------------------------------------------------
+
+/// f32 → bf16 code unit, round-to-nearest-even.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // keep the sign + a quiet NaN payload; truncation alone could
+        // zero the mantissa and turn a signalling NaN into Inf
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // RNE: add 0x7FFF plus the parity of the kept LSB, then truncate.
+    // Carries propagate into the exponent correctly (e.g. f32::MAX
+    // rounds to +Inf, as IEEE RNE requires).
+    let round_bit = (bits >> 16) & 1;
+    ((bits.wrapping_add(0x7FFF + round_bit)) >> 16) as u16
+}
+
+/// bf16 code unit → f32 (exact: bf16 ⊂ f32).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+// ---------------------------------------------------------------------------
+// f16 (IEEE 754 binary16: 1 sign, 5 exponent, 10 mantissa)
+// ---------------------------------------------------------------------------
+
+/// f32 → f16 code unit, round-to-nearest-even, with gradual underflow
+/// (subnormal halves) and overflow to ±Inf.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // Inf stays Inf; NaN becomes a quiet NaN with the sign kept
+        return if man != 0 { sign | 0x7E00 } else { sign | 0x7C00 };
+    }
+    let e = exp - 127; // unbiased
+    if e > 15 {
+        return sign | 0x7C00; // overflow -> Inf
+    }
+    if e >= -14 {
+        // normal half: keep 10 mantissa bits, RNE on the dropped 13.
+        // A mantissa carry bumps the exponent field, which also handles
+        // values just under 2^16 rounding up to Inf.
+        let base = (((e + 15) as u32) << 10) | (man >> 13);
+        let rem = man & 0x1FFF;
+        let round = ((rem > 0x1000) || (rem == 0x1000 && (base & 1) == 1)) as u32;
+        return sign | (base + round) as u16;
+    }
+    if e < -25 {
+        return sign; // underflow to signed zero
+    }
+    // subnormal half: value = m_h * 2^-24; shift the full significand
+    // (implicit bit restored) down with RNE. e == -25 rounds to either
+    // zero or the minimum subnormal.
+    let sig = man | 0x0080_0000;
+    let shift = (-e - 1) as u32; // in 14..=24
+    let base = sig >> shift;
+    let rem = sig & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let round = ((rem > half) || (rem == half && (base & 1) == 1)) as u32;
+    sign | (base + round) as u16
+}
+
+/// f16 code unit → f32 (exact: every binary16 value is an f32).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13) // Inf / NaN (payload widened)
+    } else if exp == 0 {
+        if man == 0 {
+            sign // signed zero
+        } else {
+            // subnormal: value = man * 2^-24; normalize into an f32
+            let p = 31 - man.leading_zeros(); // highest set bit, 0..=9
+            let e = p as i32 - 24; // unbiased f32 exponent
+            let m32 = (man << (23 - p)) & 0x007F_FFFF; // drop implicit bit
+            sign | (((e + 127) as u32) << 23) | m32
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13) // bias 15 -> 127
+    };
+    f32::from_bits(bits)
+}
+
+// ---------------------------------------------------------------------------
+// Payload encode / decode (the SymmetricHeap boundary)
+// ---------------------------------------------------------------------------
+
+/// Quantize one f32 through the wire format and back (the value a
+/// receiver observes). Identity at `F32`.
+pub fn quantize(p: WirePrecision, x: f32) -> f32 {
+    match p {
+        WirePrecision::F32 => x,
+        WirePrecision::F16 => f16_to_f32(f32_to_f16(x)),
+        WirePrecision::Bf16 => bf16_to_f32(f32_to_bf16(x)),
+    }
+}
+
+/// Encode an f32 payload into wire code units (little-endian bytes).
+/// `dst.len()` must be exactly `src.len() * p.bytes()`.
+pub fn encode_into(p: WirePrecision, src: &[f32], dst: &mut [u8]) {
+    debug_assert_eq!(dst.len(), src.len() * p.bytes());
+    match p {
+        WirePrecision::F32 => {
+            for (x, b) in src.iter().zip(dst.chunks_exact_mut(4)) {
+                b.copy_from_slice(&x.to_le_bytes());
+            }
+        }
+        WirePrecision::F16 => {
+            for (x, b) in src.iter().zip(dst.chunks_exact_mut(2)) {
+                b.copy_from_slice(&f32_to_f16(*x).to_le_bytes());
+            }
+        }
+        WirePrecision::Bf16 => {
+            for (x, b) in src.iter().zip(dst.chunks_exact_mut(2)) {
+                b.copy_from_slice(&f32_to_bf16(*x).to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Decode wire code units back into f32. `src.len()` must be exactly
+/// `dst.len() * p.bytes()`. Bitwise inverse of [`encode_into`] at `F32`.
+pub fn decode_into(p: WirePrecision, src: &[u8], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len() * p.bytes());
+    match p {
+        WirePrecision::F32 => {
+            for (b, x) in src.chunks_exact(4).zip(dst.iter_mut()) {
+                *x = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+            }
+        }
+        WirePrecision::F16 => {
+            for (b, x) in src.chunks_exact(2).zip(dst.iter_mut()) {
+                *x = f16_to_f32(u16::from_le_bytes([b[0], b[1]]));
+            }
+        }
+        WirePrecision::Bf16 => {
+            for (b, x) in src.chunks_exact(2).zip(dst.iter_mut()) {
+                *x = bf16_to_f32(u16::from_le_bytes([b[0], b[1]]));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    const REDUCED: [WirePrecision; 2] = [WirePrecision::Bf16, WirePrecision::F16];
+
+    /// Stored mantissa bits of a reduced format (RNE error is 2^-(m+1)).
+    fn mantissa_bits(p: WirePrecision) -> i32 {
+        match p {
+            WirePrecision::Bf16 => 7,
+            WirePrecision::F16 => 10,
+            WirePrecision::F32 => 23,
+        }
+    }
+
+    #[test]
+    fn exactly_representable_values_roundtrip_bitwise() {
+        // small integers, powers of two and their sums fit 7 mantissa bits
+        let exact = [0.0f32, -0.0, 1.0, -1.0, 2.5, -3.0, 96.0, 0.15625, 1024.0, -0.5];
+        for p in REDUCED {
+            for &x in &exact {
+                let rt = quantize(p, x);
+                assert_eq!(rt.to_bits(), x.to_bits(), "{p:?}: {x} must roundtrip exactly");
+            }
+        }
+        // f32 wire is a bitwise identity for everything, NaN payloads included
+        for x in [f32::NAN, -f32::NAN, f32::INFINITY, -0.0, 1e-42, f32::MAX] {
+            assert_eq!(quantize(WirePrecision::F32, x).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn roundtrip_error_is_bounded_in_the_normal_range() {
+        let mut rng = Rng::new(0xB16);
+        for p in REDUCED {
+            let bound = 2.0f32.powi(-(mantissa_bits(p) + 1));
+            for _ in 0..20_000 {
+                // |x| in [mag, 2*mag] with mag in 2^-14 .. 2^14: inside the
+                // shared *normal* range of both formats (f16 subnormals
+                // have an absolute, not relative, bound — tested below)
+                let mag = 2.0f32.powi(rng.below(29) as i32 - 14);
+                let frac = 1.0 + rng.range_f64(0.0, 1.0) as f32;
+                let sign = if rng.below(2) == 0 { 1.0f32 } else { -1.0 };
+                let x = sign * frac * mag;
+                let err = (quantize(p, x) - x).abs();
+                assert!(
+                    err <= x.abs() * bound,
+                    "{p:?}: |{x}| roundtrip err {err} exceeds rel bound {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nan_inf_and_signed_zero_are_preserved() {
+        for p in REDUCED {
+            assert!(quantize(p, f32::NAN).is_nan(), "{p:?}: NaN must stay NaN");
+            assert!(quantize(p, -f32::NAN).is_nan());
+            assert_eq!(quantize(p, f32::INFINITY), f32::INFINITY);
+            assert_eq!(quantize(p, f32::NEG_INFINITY), f32::NEG_INFINITY);
+            assert_eq!(quantize(p, 0.0).to_bits(), 0.0f32.to_bits());
+            assert_eq!(quantize(p, -0.0).to_bits(), (-0.0f32).to_bits());
+        }
+    }
+
+    #[test]
+    fn f16_overflow_saturates_to_inf_and_bf16_covers_f32_range() {
+        // beyond 65504 (+ half an ulp) the f16 wire carries Inf
+        assert_eq!(quantize(WirePrecision::F16, 65504.0), 65504.0);
+        assert_eq!(quantize(WirePrecision::F16, 65505.0), 65504.0, "rounds back down");
+        assert_eq!(quantize(WirePrecision::F16, 1e6), f32::INFINITY);
+        assert_eq!(quantize(WirePrecision::F16, -1e6), f32::NEG_INFINITY);
+        // bf16 shares f32's exponent range: huge magnitudes stay finite
+        let big = 1e38f32;
+        let rt = quantize(WirePrecision::Bf16, big);
+        assert!(rt.is_finite() && (rt - big).abs() <= big * 2.0f32.powi(-8));
+        // f32::MAX sits above bf16::MAX + ulp/2, so RNE carries to Inf
+        assert_eq!(quantize(WirePrecision::Bf16, f32::MAX), f32::INFINITY);
+    }
+
+    #[test]
+    fn f16_subnormals_round_with_bounded_absolute_error() {
+        let min_sub = 2.0f32.powi(-24);
+        assert_eq!(quantize(WirePrecision::F16, min_sub), min_sub, "min subnormal exact");
+        assert_eq!(quantize(WirePrecision::F16, -min_sub), -min_sub);
+        // halfway below the min subnormal ties to even -> zero
+        assert_eq!(quantize(WirePrecision::F16, min_sub / 2.0), 0.0);
+        // 1.5 * 2^-24 ties between 1*2^-24 and 2*2^-24 -> even (2*2^-24)
+        assert_eq!(quantize(WirePrecision::F16, 1.5 * min_sub), 2.0 * min_sub);
+        let mut rng = Rng::new(0x5B);
+        for _ in 0..5_000 {
+            let x = (rng.range_f64(-1.0, 1.0) as f32) * 2.0f32.powi(-15);
+            let err = (quantize(WirePrecision::F16, x) - x).abs();
+            assert!(err <= 2.0f32.powi(-25), "subnormal abs err {err} at {x}");
+        }
+    }
+
+    #[test]
+    fn quantization_is_monotone() {
+        let mut rng = Rng::new(0x303);
+        for p in REDUCED {
+            let mut xs: Vec<f32> = (0..4_000)
+                .map(|_| {
+                    let mag = 2.0f32.powi(rng.below(60) as i32 - 30);
+                    (rng.range_f64(-1.0, 1.0) as f32) * mag
+                })
+                .collect();
+            xs.extend_from_slice(&[0.0, -0.0, 2.0f32.powi(-24), -2.0f32.powi(-24)]);
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let q: Vec<f32> = xs.iter().map(|&x| quantize(p, x)).collect();
+            for w in q.windows(2) {
+                assert!(w[0] <= w[1], "{p:?}: quantization reordered {} > {}", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_matches_scalar_quantize() {
+        let mut rng = Rng::new(0xE2C);
+        let src: Vec<f32> = (0..257).map(|_| rng.range_f64(-8.0, 8.0) as f32).collect();
+        for p in [WirePrecision::F32, WirePrecision::Bf16, WirePrecision::F16] {
+            let mut bytes = vec![0u8; src.len() * p.bytes()];
+            encode_into(p, &src, &mut bytes);
+            let mut out = vec![0.0f32; src.len()];
+            decode_into(p, &bytes, &mut out);
+            for (&x, &y) in src.iter().zip(&out) {
+                assert_eq!(y.to_bits(), quantize(p, x).to_bits(), "{p:?} buffer vs scalar");
+            }
+        }
+    }
+}

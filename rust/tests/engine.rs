@@ -5,7 +5,7 @@
 
 use std::sync::Arc;
 
-use flashdmoe::config::{Config, RoutingPolicy};
+use flashdmoe::config::{Config, RoutingPolicy, WirePrecision};
 use flashdmoe::coordinator::{baseline, DistributedMoE, MoeEngine, PassInput, TaskGraphMode};
 use flashdmoe::expert::{generate_tokens, ModelParams};
 use flashdmoe::runtime::{ComputeBackend, NativeBackend};
@@ -424,13 +424,16 @@ fn legacy_fixed_shape_passes_report_full_batch_fill() {
 }
 
 /// Property-test a variable-shape pass (fuzzed per-rank row counts,
-/// zero included) for one policy: outputs have the submitted shapes,
-/// metrics carry the actual rows, transfer bytes scale with routed rows
-/// only (no padded-row traffic), and — whenever the gate dropped
-/// nothing — outputs equal the dense per-token reference.
-fn check_variable_shape_pass(policy: RoutingPolicy, seed: u64) {
+/// zero included) for one (policy, wire precision) pair: outputs have
+/// the submitted shapes, metrics carry the actual rows, transfer bytes
+/// scale with routed rows at the **configured wire element width** (no
+/// padded-row traffic, no hardcoded 4-byte floats), and — whenever the
+/// gate dropped nothing — outputs equal the dense per-token reference
+/// within the format's documented tolerance.
+fn check_variable_shape_pass(policy: RoutingPolicy, wire: WirePrecision, seed: u64) {
     let mut cfg = Config::preset("tiny").unwrap();
     cfg.model.policy = policy;
+    cfg.set("wire_precision", wire.name()).unwrap();
     cfg.validate().unwrap();
     let params = Arc::new(ModelParams::generate(&cfg, seed));
     let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
@@ -462,13 +465,21 @@ fn check_variable_shape_pass(policy: RoutingPolicy, seed: u64) {
 
         // payload metrics reflect actual routed rows: every dispatched
         // row comes back exactly once as a combine row, so total heap
-        // traffic is 2 × routed × H × 4 bytes — nothing padded travels
+        // traffic is 2 × routed × H × wire.bytes() — nothing padded
+        // travels, and the byte count follows the precision knob (a
+        // 16-bit wire measures exactly half the fp32 bytes)
         let routed: usize = res.metrics.ranks.iter().map(|m| m.sent_rows).sum();
         assert!(routed <= total * k, "case {case}: routed beyond top-k");
         assert_eq!(
             res.metrics.total_bytes(),
+            (2 * routed * h * wire.bytes()) as u64,
+            "case {case}: wire bytes must derive from the {wire:?} element width"
+        );
+        assert_eq!(res.metrics.wire, wire, "case {case}: pass metrics carry the wire format");
+        assert_eq!(
+            res.metrics.fp32_equiv_bytes(),
             (2 * routed * h * 4) as u64,
-            "case {case}: padded rows hit the wire"
+            "case {case}: fp32-equivalent baseline"
         );
         if policy.is_dropless() {
             assert_eq!(res.metrics.total_dropped(), 0, "case {case}: dropless dropped");
@@ -476,8 +487,8 @@ fn check_variable_shape_pass(policy: RoutingPolicy, seed: u64) {
         }
 
         // conformance: with zero drops the pass equals the dense
-        // per-token reference (always true under dropless; true under
-        // capacity whenever the fuzzed load fit the buffers)
+        // per-token reference within the wire format's documented
+        // tolerance (1e-5 on the exact f32 wire; loosened for 16-bit)
         if res.metrics.total_dropped() == 0 {
             for (r, out) in res.outputs.iter().enumerate() {
                 if rows[r] == 0 {
@@ -486,8 +497,8 @@ fn check_variable_shape_pass(policy: RoutingPolicy, seed: u64) {
                 let want = dense_reference_moe(&cfg, &params, &per_rank[r]);
                 let diff = max_abs_diff(out, &want);
                 assert!(
-                    diff < 1e-5,
-                    "case {case}: rank {r} ({} rows) diff {diff} vs dense reference",
+                    diff < wire.conformance_tol(),
+                    "case {case}: rank {r} ({} rows, {wire:?}) diff {diff} vs dense reference",
                     rows[r]
                 );
             }
@@ -497,12 +508,23 @@ fn check_variable_shape_pass(policy: RoutingPolicy, seed: u64) {
 
 #[test]
 fn variable_shape_passes_capacity_policy() {
-    check_variable_shape_pass(RoutingPolicy::Capacity(1.0), 0x51AE);
+    check_variable_shape_pass(RoutingPolicy::Capacity(1.0), WirePrecision::F32, 0x51AE);
 }
 
 #[test]
 fn variable_shape_passes_dropless_policy() {
-    check_variable_shape_pass(RoutingPolicy::Dropless, 0x51AF);
+    check_variable_shape_pass(RoutingPolicy::Dropless, WirePrecision::F32, 0x51AF);
+}
+
+#[test]
+fn variable_shape_passes_bf16_wire_halve_measured_bytes() {
+    // the byte assert inside is 2·routed·H·2 — the measured halving
+    check_variable_shape_pass(RoutingPolicy::Dropless, WirePrecision::Bf16, 0x51B0);
+}
+
+#[test]
+fn variable_shape_passes_f16_wire_halve_measured_bytes() {
+    check_variable_shape_pass(RoutingPolicy::Dropless, WirePrecision::F16, 0x51B1);
 }
 
 #[test]
@@ -528,6 +550,97 @@ fn variable_shape_split_mode_matches_dense_reference() {
             let diff = max_abs_diff(out, &want);
             assert!(diff < 1e-3, "rank {r}: split-mode variable pass diff {diff}");
         }
+    }
+}
+
+/// Bit-pattern equality for f32 buffers: unlike `assert_eq!` on `f32`
+/// values, this catches −0.0 vs 0.0 and NaN-payload changes — the exact
+/// edge cases the F32 wire documents as preserved.
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i} bit pattern");
+    }
+}
+
+#[test]
+fn f32_wire_passes_stay_bitwise_identical_across_restarts_and_policies() {
+    // regression guard for the wire subsystem: at `WirePrecision::F32`
+    // the encode/decode pair is a byte copy, so outputs must be bitwise
+    // identical to a config that never touched the knob — across engine
+    // restarts and under both routing policies. The pre-existing
+    // determinism guarantee must not erode.
+    let (cfg0, params, backend, inputs) = setup("tiny", 83);
+    for policy in [RoutingPolicy::Capacity(1.0), RoutingPolicy::Dropless] {
+        let mut cfg = cfg0.clone();
+        cfg.model.policy = policy;
+        cfg.validate().unwrap();
+        // baseline: the knob left at its default
+        let golden = start(&cfg, &params, &backend, TaskGraphMode::Fused)
+            .forward(&inputs)
+            .unwrap();
+        // explicit f32 wire, fresh engine per run (restart × 2)
+        let mut cfg_wire = cfg.clone();
+        cfg_wire.set("wire_precision", "f32").unwrap();
+        assert_eq!(cfg_wire.system.wire, WirePrecision::F32);
+        for restart in 0..2 {
+            let got = start(&cfg_wire, &params, &backend, TaskGraphMode::Fused)
+                .forward(&inputs)
+                .unwrap();
+            assert_eq!(got.metrics.wire, WirePrecision::F32);
+            for (r, (g, w)) in got.outputs.iter().zip(&golden.outputs).enumerate() {
+                assert_bits_eq(
+                    g,
+                    w,
+                    &format!("{policy:?} restart {restart}: f32 wire, rank {r}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn reduced_precision_wire_matches_dense_reference_and_stays_deterministic() {
+    // engine-level conformance at the loosened 16-bit tolerance, plus:
+    // reduced passes are still bitwise deterministic across restarts
+    // (round-to-nearest-even has no schedule dependence), and the
+    // quantization genuinely happened (outputs differ from the f32 arm).
+    let mut cfg = Config::preset("tiny").unwrap();
+    cfg.set("routing_policy", "dropless").unwrap();
+    cfg.validate().unwrap();
+    let params = Arc::new(ModelParams::generate(&cfg, 89));
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+    let inputs: Vec<Vec<f32>> =
+        (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, 89, r)).collect();
+    let exact = start(&cfg, &params, &backend, TaskGraphMode::Fused).forward(&inputs).unwrap();
+    for wire in [WirePrecision::Bf16, WirePrecision::F16] {
+        let mut cfg_w = cfg.clone();
+        cfg_w.set("wire_precision", wire.name()).unwrap();
+        let a = start(&cfg_w, &params, &backend, TaskGraphMode::Fused).forward(&inputs).unwrap();
+        let b = start(&cfg_w, &params, &backend, TaskGraphMode::Fused).forward(&inputs).unwrap();
+        assert_eq!(a.metrics.wire, wire);
+        assert_eq!(a.metrics.total_dropped(), 0);
+        let mut any_diff = false;
+        for (r, out) in a.outputs.iter().enumerate() {
+            // restart-determinism holds at reduced precision too
+            assert_bits_eq(out, &b.outputs[r], &format!("{wire:?} restart, rank {r}"));
+            // conformance vs the dense f32 oracle, loosened per format
+            let want = dense_reference_moe(&cfg_w, &params, &inputs[r]);
+            let diff = max_abs_diff(out, &want);
+            assert!(
+                diff < wire.conformance_tol(),
+                "{wire:?}: rank {r} err {diff} exceeds {}",
+                wire.conformance_tol()
+            );
+            any_diff |= out != &exact.outputs[r];
+        }
+        assert!(any_diff, "{wire:?}: outputs identical to f32 — quantization is a no-op?");
+        // 16-bit wire halves the heap and the per-pass measured bytes
+        assert_eq!(
+            a.metrics.total_bytes() * 2,
+            exact.metrics.total_bytes(),
+            "{wire:?}: measured wire bytes must halve for identical routing"
+        );
     }
 }
 

@@ -164,10 +164,25 @@ fn fig17_incast_failure_appears_past_threshold() {
 }
 
 #[test]
-fn fig18_fp16_halves_wire_bytes() {
-    let (_, pts) = harness::fig18(SEED).unwrap();
-    let fp32 = pts.iter().find(|p| p.engine == "fp32").unwrap();
-    let fp16 = pts.iter().find(|p| p.engine == "fp16").unwrap();
-    assert!((fp32.bytes / fp16.bytes - 2.0).abs() < 0.01, "payload ratio");
-    assert!(fp16.latency <= fp32.latency, "fp16 must not be slower in-model");
+fn fig18_reduced_precision_halves_measured_wire_bytes() {
+    // Measured, not modeled: precision_ab runs live engines per wire
+    // format (it asserts dense-reference conformance internally; the
+    // byte-ratio claims are asserted HERE, on the reported points —
+    // this is the exact-2x check, and the bench's PERF_SMOKE gate is
+    // the independent looser one).
+    use flashdmoe::config::WirePrecision;
+    let (_, pts) = harness::precision_ab("tiny", 1, SEED).unwrap();
+    let fp32 = pts.iter().find(|p| p.wire == WirePrecision::F32).unwrap();
+    assert!(fp32.max_abs_err < 1e-5, "f32 wire must stay on the exact path");
+    for wire in [WirePrecision::Bf16, WirePrecision::F16] {
+        let p = pts.iter().find(|p| p.wire == wire).unwrap();
+        assert_eq!(p.wire_bytes * 2, fp32.wire_bytes, "{wire:?} measured halving");
+        assert!(p.max_abs_err < p.tolerance, "{wire:?} conformance");
+        assert!(
+            (fp32.heap_bytes / p.heap_bytes - 2.0).abs() < 1e-9,
+            "{wire:?} heap footprint halves"
+        );
+        // narrowing shows up in the savings metric on top of padding
+        assert!(p.payload_savings > fp32.payload_savings, "{wire:?} savings credit");
+    }
 }

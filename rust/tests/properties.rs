@@ -7,7 +7,7 @@
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 
-use flashdmoe::config::{Config, CostModel, ModelConfig, RoutingPolicy, SystemConfig};
+use flashdmoe::config::{Config, CostModel, ModelConfig, RoutingPolicy, SystemConfig, WirePrecision};
 use flashdmoe::coordinator::scheduler::TaskQueue;
 use flashdmoe::coordinator::{MoeEngine, TaskGraphMode};
 use flashdmoe::expert::{generate_tokens, ModelParams};
@@ -276,7 +276,14 @@ fn dropless_engine_matches_dense_reference_under_fuzzed_skew() {
         |&(ranks, e, k, bm, s_rank, seed)| {
             let cfg = Config {
                 model: ModelConfig { h: 8, d: 8, e, k, bm, bn: 4, policy: RoutingPolicy::Dropless },
-                system: SystemConfig { ranks, nodes: 1, s_rank, processors: 2, packed: true },
+                system: SystemConfig {
+                    ranks,
+                    nodes: 1,
+                    s_rank,
+                    processors: 2,
+                    packed: true,
+                    wire: WirePrecision::F32,
+                },
                 cost: CostModel::h100_nvlink(),
             };
             cfg.validate().map_err(|err| err.to_string())?;
