@@ -1,68 +1,88 @@
-//! Multi-node scenario (paper §F / Fig 17): 4 nodes x 4 GPUs, one local
-//! expert per GPU, 25 GB/s NICs. Reproduces the latency curve, the
-//! Maximal Incast Volume accounting, and the >2048-token incast failure.
+//! Multi-node scenario (paper §F / Fig 17), driven through the **live
+//! engine** over the Transport subsystem: a node-aware config (4 nodes,
+//! bounded NIC receive windows) runs real `MoeEngine` passes in both
+//! dispatch modes. Latency and the Maximal Incast Volume are *measured*
+//! (`PassMetrics::miv_bytes`); the paper's closed-form MIV stays as a
+//! cross-check column; and the >2048-tokens/GPU incast failure shows up
+//! as an engine-reported pass error, not a sim flag.
 //!
 //!     cargo run --release --example multinode_sim
 
-use flashdmoe::config::Config;
-use flashdmoe::sim::engines::{simulate, Engine};
+use std::sync::Arc;
+
+use flashdmoe::coordinator::{MoeEngine, TaskGraphMode};
+use flashdmoe::expert::{generate_tokens, ModelParams};
+use flashdmoe::harness::{miv_formula_bytes, multinode_config};
+use flashdmoe::runtime::{ComputeBackend, NativeBackend};
 use flashdmoe::util::stats::{fmt_bytes, fmt_time, Table};
-use flashdmoe::workload::{cluster_workload, Skew};
 
 fn main() -> anyhow::Result<()> {
-    println!("## Fig 17 — multi-node FlashDMoE (4x4 ranks, 25 GB/s NIC)\n");
-    let mut t = Table::new(&["tokens/GPU", "latency", "MIV (sim)", "MIV (paper formula)", "status"]);
+    let seed = 42u64;
+    println!("## Fig 17 — multi-node FlashDMoE, live engine (4 nodes, bounded NIC windows)\n");
+    let base = multinode_config(256)?;
+    let params = Arc::new(ModelParams::generate(&base, seed));
+    let mut t = Table::new(&[
+        "tokens/GPU",
+        "mode",
+        "latency",
+        "MIV (measured)",
+        "MIV (paper formula)",
+        "inter/total bytes",
+        "status",
+    ]);
     for tokens in [256usize, 512, 1024, 2048, 4096] {
-        let mut cfg = Config::preset("paper_multinode")?;
-        cfg.set("tokens", &tokens.to_string())?;
-        cfg.validate()?;
-        let wl = cluster_workload(&cfg, Skew::Uniform, 42);
-        let rep = simulate(&cfg, &wl, Engine::Flash, 42)?;
-        // paper §F: MIV = Tokens/Experts * local_experts * precision *
-        // hidden * 2 rounds * n_remote_peers
-        let n_rg = (cfg.system.ranks - cfg.system.ranks_per_node()) as f64;
-        let miv_formula = tokens as f64 / cfg.model.e as f64
-            * 1.0
-            * 4.0
-            * cfg.model.h as f64
-            * 2.0
-            * n_rg;
-        t.row(&[
-            tokens.to_string(),
-            fmt_time(rep.latency),
-            fmt_bytes(rep.max_incast),
-            fmt_bytes(miv_formula),
-            if rep.incast_overflow { "FAIL: incast buffer overflow".into() } else { "ok".to_string() },
-        ]);
+        for mode in ["flat", "hierarchical"] {
+            let mut cfg = multinode_config(tokens)?;
+            cfg.set("dispatch", mode)?;
+            cfg.validate()?;
+            let inputs: Vec<Vec<f32>> =
+                (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, seed, r)).collect();
+            let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+            let engine =
+                MoeEngine::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused)?;
+            let formula = miv_formula_bytes(&cfg, tokens);
+            match engine.submit(&inputs)?.wait() {
+                Ok(res) => {
+                    let m = &res.metrics;
+                    let total = m.intra_bytes() + m.inter_bytes();
+                    t.row(&[
+                        tokens.to_string(),
+                        mode.to_string(),
+                        fmt_time(m.wall_secs),
+                        fmt_bytes(m.miv_bytes() as f64),
+                        fmt_bytes(formula),
+                        format!("{}%", m.inter_bytes() * 100 / total.max(1)),
+                        "ok".to_string(),
+                    ]);
+                }
+                Err(e) => {
+                    // the paper's observed non-termination, surfaced as a
+                    // real pass error by the poisoned-generation protocol
+                    t.row(&[
+                        tokens.to_string(),
+                        mode.to_string(),
+                        "-".into(),
+                        "-".into(),
+                        fmt_bytes(formula),
+                        "-".into(),
+                        "FAIL: NIC receive window overflow (incast)".into(),
+                    ]);
+                    println!("engine error at {tokens} tokens/GPU ({mode}): {e:#}\n");
+                }
+            }
+            engine.shutdown();
+        }
     }
     println!("{}", t.render());
     println!(
         "\nthe failure mode past 2048 tokens/GPU reproduces the paper's observed\n\
-         non-termination: per-NIC ingress exceeds the receive buffering the\n\
-         fabric can absorb in one incast burst (tunable via cost.nic_buffer)."
-    );
-
-    // intra vs inter traffic split
-    println!("\n## locality split at 1024 tokens/GPU\n");
-    let mut cfg = Config::preset("paper_multinode")?;
-    cfg.set("tokens", "1024")?;
-    let wl = cluster_workload(&cfg, Skew::Uniform, 42);
-    let mut intra_rows = 0usize;
-    let mut inter_rows = 0usize;
-    for (src, w) in wl.iter().enumerate() {
-        for tile in &w.plan.tiles {
-            if cfg.system.same_node(src, tile.dst as usize) {
-                intra_rows += tile.rows as usize;
-            } else {
-                inter_rows += tile.rows as usize;
-            }
-        }
-    }
-    println!(
-        "dispatch rows: {} intra-node (NVLink), {} inter-node (NIC) — {}% crosses nodes",
-        intra_rows,
-        inter_rows,
-        inter_rows * 100 / (intra_rows + inter_rows).max(1)
+         non-termination: per-NIC ingress exceeds the bounded receive window\n\
+         (cfg.cost.nic_buffer) in one pass generation. The overflow is raised\n\
+         by the transport at put time, the failing rank poisons the pass, and\n\
+         every peer abandons it promptly — an engine error, not a wedge.\n\
+         Hierarchical dispatch coalesces each remote node's unique token rows\n\
+         through one proxy rank, so its inter-node share sits below flat's at\n\
+         every point while the outputs stay bitwise identical."
     );
     Ok(())
 }

@@ -1,6 +1,75 @@
-//! Fig 17 — multi-node latency + Maximal Incast Volume; reproduces the
-//! paper's >2048-token incast failure mode.
+//! Fig 17 — multi-node A/B, **measured on live engines** over the
+//! Transport subsystem (the old closed-form sim sweep is gone): flat vs
+//! hierarchical dispatch on the same node-aware config, params and
+//! inputs, reporting per-pass latency vs tokens/GPU, the intra/inter
+//! byte split, the *measured* Maximal Incast Volume (the paper's §F
+//! formula stays as a cross-check column), and the >2048-tokens/GPU
+//! incast overflow as an engine-reported pass error. Bitwise equality of
+//! flat vs hierarchical outputs is asserted inside the harness.
+//!
+//! Emits `BENCH_pr6_multinode.json` (section `multinode_ab`) for the CI
+//! artifact upload. With `PERF_SMOKE=1` the run FAILS if hierarchical
+//! dispatch ever moves *more* inter-node bytes than flat dispatch at the
+//! same tokens/GPU — the harness only reports the split (it asserts
+//! output equality and the incast bound, not the byte ordering), so this
+//! gate is the live CI check that coalescing actually pays.
+//!
+//!     cargo bench --bench fig17_multinode
 fn main() {
-    let (text, _) = flashdmoe::harness::fig17(42).unwrap();
+    let (text, pts) = flashdmoe::harness::multinode_ab(42).unwrap();
     println!("{text}");
+
+    flashdmoe::harness::update_bench_json(
+        "BENCH_pr6_multinode.json",
+        "multinode_ab",
+        flashdmoe::harness::multinode_json(&pts),
+    )
+    .unwrap();
+    println!("wrote BENCH_pr6_multinode.json (section multinode_ab)");
+
+    let perf_smoke = std::env::var("PERF_SMOKE").map(|v| v == "1").unwrap_or(false);
+    if perf_smoke {
+        let mut failed = false;
+        let mut compared = 0;
+        for f in pts.iter().filter(|p| p.mode == "flat" && !p.overflow) {
+            let Some(h) = pts
+                .iter()
+                .find(|p| p.mode == "hierarchical" && p.tokens_per_gpu == f.tokens_per_gpu)
+            else {
+                continue;
+            };
+            if h.overflow {
+                continue;
+            }
+            compared += 1;
+            if h.inter_bytes > f.inter_bytes {
+                eprintln!(
+                    "PERF_SMOKE FAIL: hierarchical moved {} inter-node bytes vs flat {} \
+                     at {} tokens/GPU (coalescing must not add NIC traffic)",
+                    h.inter_bytes, f.inter_bytes, f.tokens_per_gpu
+                );
+                failed = true;
+            } else {
+                println!(
+                    "PERF_SMOKE ok: {} tokens/GPU inter bytes {:.3}x flat (MIV {:.3}x)",
+                    f.tokens_per_gpu,
+                    h.inter_bytes as f64 / f.inter_bytes.max(1) as f64,
+                    h.miv_bytes as f64 / f.miv_bytes.max(1) as f64,
+                );
+            }
+        }
+        // an A/B with nothing to compare must not pass silently
+        if compared == 0 {
+            eprintln!("PERF_SMOKE FAIL: no comparable (flat, hierarchical) point pairs");
+            failed = true;
+        }
+        // the incast cliff must exist: the top of the sweep overflows
+        if !pts.iter().any(|p| p.overflow) {
+            eprintln!("PERF_SMOKE FAIL: no point overflowed the NIC receive window");
+            failed = true;
+        }
+        if failed {
+            std::process::exit(1);
+        }
+    }
 }

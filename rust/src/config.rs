@@ -34,6 +34,26 @@
 //! accumulates in f32. The old `elem_bytes` float knob is a deprecated
 //! shim over it (2 → `F16`, 4 → `F32`).
 //!
+//! ## Multi-node knobs
+//!
+//! The `crate::transport` subsystem reads its shape and NIC model from
+//! here:
+//!
+//! * `nodes` — how many nodes the `ranks` spread over (even split
+//!   enforced); links within a node are NVLink-class, across nodes
+//!   NIC-class.
+//! * `topology` / `dispatch` = `flat` | `hier`(`archical`) — the
+//!   inter-node dispatch schedule ([`DispatchMode`]): direct per-tile
+//!   puts vs coalesced per-node transfers through proxy ranks.
+//! * `nic_bandwidth` / `nic_latency` — the NIC link parameters
+//!   ([`CostModel::inter_bw`] / [`CostModel::inter_lat`]; the spellings
+//!   `inter_bw` / `inter_lat` are equivalent).
+//! * `nic_buffer` — bytes of per-rank NIC receive buffering; one pass's
+//!   inter-node traffic into a rank beyond this fails the pass with a
+//!   measured incast-overflow error (Fig 17).
+//! * `nic_delay` = `true|false` — inject real `latency + bytes/bw` delay
+//!   per NIC transfer into the live engine (calibrated-sim mode).
+//!
 //! [`MoeService`]: crate::coordinator::MoeService
 //! [`BatchPolicy`]: crate::coordinator::BatchPolicy
 //! [`BatchPolicy::from_config`]: crate::coordinator::BatchPolicy::from_config
@@ -123,6 +143,57 @@ impl WirePrecision {
             WirePrecision::F16 => 5e-2,
             WirePrecision::Bf16 => 2.5e-1,
         }
+    }
+}
+
+/// How dispatch traffic crosses node boundaries (the transport schedule;
+/// see `crate::transport` for the fabric it runs on).
+///
+/// * [`Flat`](DispatchMode::Flat) — every dispatch tile is one direct
+///   put to its destination rank, regardless of node locality. Remote
+///   tiles each cross the NIC individually, and a token routed to `k`
+///   experts on one remote node crosses `k` times.
+/// * [`Hierarchical`](DispatchMode::Hierarchical) — the FSMoE-style
+///   two-level schedule: all tiles bound for one remote node travel as a
+///   single coalesced transfer of the node's *unique* token rows to a
+///   proxy rank, which fans the per-tile payloads out intra-node. Fewer,
+///   larger NIC transfers and strictly no duplicate rows on the wire;
+///   pass outputs are bitwise identical to `Flat` (the proxy hop
+///   preserves logical source coordinates, so the announcement tables
+///   and the plan-order combine fold are untouched).
+///
+/// Select per config: `cfg.set("topology", "hier")` (also spelled
+/// `dispatch=hierarchical`). Defaults to `Flat`; the `paper_multinode`
+/// preset selects `Hierarchical`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum DispatchMode {
+    /// Direct per-tile puts; every remote tile crosses the NIC alone.
+    #[default]
+    Flat,
+    /// Coalesced per-node transfers with intra-node proxy fan-out.
+    Hierarchical,
+}
+
+impl DispatchMode {
+    /// Canonical knob spelling (accepted by [`parse`](Self::parse)).
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchMode::Flat => "flat",
+            DispatchMode::Hierarchical => "hierarchical",
+        }
+    }
+
+    /// Parse a CLI/config-file value.
+    pub fn parse(s: &str) -> Option<DispatchMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "flat" | "direct" => Some(DispatchMode::Flat),
+            "hier" | "hierarchical" | "coalesced" => Some(DispatchMode::Hierarchical),
+            _ => None,
+        }
+    }
+
+    pub fn is_hierarchical(self) -> bool {
+        matches!(self, DispatchMode::Hierarchical)
     }
 }
 
@@ -235,6 +306,12 @@ pub struct SystemConfig {
     /// bytes at this width; compute stays f32. `cfg.set("wire_precision",
     /// "bf16")` selects it; defaults to `F32` (bitwise-transparent).
     pub wire: WirePrecision,
+    /// Inter-node dispatch schedule (see [`DispatchMode`]): `Flat` direct
+    /// puts or `Hierarchical` coalesced per-node transfers via proxy
+    /// ranks. Knobs: `topology=flat|hier` / `dispatch=...`. Irrelevant
+    /// (and harmless) on single-node topologies, where every link is
+    /// NVLink-class.
+    pub dispatch: DispatchMode,
 }
 
 /// Hardware cost model for the simulator, calibrated by `flashdmoe
@@ -255,7 +332,17 @@ pub struct CostModel {
     /// Inter-node latency per message.
     pub inter_lat: f64,
     /// NIC receive buffer capacity (bytes) for incast modeling (Fig 17).
+    /// Bounds the live transport's per-rank, per-pass receive window
+    /// (`transport::InterNodeLink`): exceeding it fails the transfer and
+    /// the engine reports the pass error — the measured incast overflow.
+    /// Knob: `nic_buffer=<bytes>`.
     pub nic_buffer: f64,
+    /// When true, the live transport injects `inter_lat + bytes /
+    /// inter_bw` of real wall-clock delay per NIC transfer, so engine
+    /// timings reflect the calibrated inter-node link instead of shared
+    /// memory speed. Off by default (pure functional/accounting runs).
+    /// Knob: `nic_delay=true|false`.
+    pub nic_delay: bool,
     /// Straggler jitter: lognormal sigma applied to collective kernels.
     pub jitter_sigma: f64,
     /// Fixed host sync cost of a bulk-synchronous collective barrier.
@@ -286,6 +373,7 @@ impl CostModel {
             inter_bw: 25e9,
             inter_lat: 5e-6,
             nic_buffer: 64.0 * 1024.0 * 1024.0,
+            nic_delay: false,
             jitter_sigma: 0.05,
             barrier_cost: 10e-6,
             elem_bytes: 4.0,
@@ -443,6 +531,7 @@ impl Config {
                     processors: 4,
                     packed: true,
                     wire: WirePrecision::F32,
+                    dispatch: DispatchMode::Flat,
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -463,6 +552,7 @@ impl Config {
                     processors: 4,
                     packed: true,
                     wire: WirePrecision::F32,
+                    dispatch: DispatchMode::Flat,
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -483,6 +573,7 @@ impl Config {
                     processors: 4,
                     packed: true,
                     wire: WirePrecision::F32,
+                    dispatch: DispatchMode::Flat,
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -504,6 +595,7 @@ impl Config {
                     processors: 132,
                     packed: true,
                     wire: WirePrecision::F32,
+                    dispatch: DispatchMode::Flat,
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -525,12 +617,15 @@ impl Config {
                     processors: 108,
                     packed: true,
                     wire: WirePrecision::F32,
+                    dispatch: DispatchMode::Flat,
                 },
                 cost: CostModel::h100_nvlink(),
             },
             // Paper §F: 4 nodes x 4 A100, 1 local expert, 25 GB/s NIC.
             // nic_buffer is sized so the observed incast failure appears
-            // past 2048 tokens/GPU (Fig 17's non-termination).
+            // past 2048 tokens/GPU (Fig 17's non-termination), and the
+            // hierarchical (coalesced, FSMoE-style) dispatch schedule is
+            // on — the flat baseline is one `topology=flat` override away.
             "paper_multinode" => Config {
                 model: ModelConfig {
                     h: 1024,
@@ -548,6 +643,7 @@ impl Config {
                     processors: 108,
                     packed: true,
                     wire: WirePrecision::F32,
+                    dispatch: DispatchMode::Hierarchical,
                 },
                 cost: CostModel { nic_buffer: 32.0 * 1024.0 * 1024.0, ..CostModel::h100_nvlink() },
             },
@@ -624,11 +720,24 @@ impl Config {
                 }
                 None => bail!("{key}={value}: expected 'f32', 'f16' or 'bf16'"),
             },
+            // The inter-node dispatch schedule (see the transport module).
+            "topology" | "dispatch" => match DispatchMode::parse(value) {
+                Some(m) => self.system.dispatch = m,
+                None => bail!("{key}={value}: expected 'flat' or 'hier'/'hierarchical'"),
+            },
             "launch_overhead" => self.cost.launch_overhead = f()?,
             "flops_per_processor" => self.cost.flops_per_processor = f()?,
             "intra_bw" => self.cost.intra_bw = f()?,
-            "inter_bw" => self.cost.inter_bw = f()?,
+            "inter_bw" | "nic_bandwidth" => self.cost.inter_bw = f()?,
+            "inter_lat" | "nic_latency" => self.cost.inter_lat = f()?,
             "nic_buffer" => self.cost.nic_buffer = f()?,
+            "nic_delay" => {
+                self.cost.nic_delay = match value {
+                    "1" | "true" | "on" => true,
+                    "0" | "false" | "off" => false,
+                    other => bail!("nic_delay={other}: expected true/false/1/0/on/off"),
+                }
+            }
             "jitter_sigma" => self.cost.jitter_sigma = f()?,
             "barrier_cost" => self.cost.barrier_cost = f()?,
             // DEPRECATED back-channel, kept as a shim: `elem_bytes` used to
@@ -895,6 +1004,38 @@ mod tests {
         assert_eq!(cfg.system.ranks_per_node(), 4);
         assert!(cfg.system.same_node(0, 3));
         assert!(!cfg.system.same_node(3, 4));
+        // the multi-node preset ships the coalesced two-level schedule
+        assert!(cfg.system.dispatch.is_hierarchical());
+    }
+
+    #[test]
+    fn dispatch_mode_and_nic_knobs() {
+        let mut cfg = Config::preset("tiny").unwrap();
+        assert_eq!(cfg.system.dispatch, DispatchMode::Flat, "flat is the default");
+        cfg.set("topology", "hier").unwrap();
+        assert!(cfg.system.dispatch.is_hierarchical());
+        cfg.set("dispatch", "flat").unwrap();
+        assert_eq!(cfg.system.dispatch, DispatchMode::Flat);
+        cfg.set("dispatch", "hierarchical").unwrap();
+        assert_eq!(cfg.system.dispatch, DispatchMode::Hierarchical);
+        assert!(cfg.set("topology", "mesh").is_err());
+        for m in [DispatchMode::Flat, DispatchMode::Hierarchical] {
+            assert_eq!(DispatchMode::parse(m.name()), Some(m), "name roundtrips");
+        }
+        // NIC spellings hit the same cost-model fields as inter_*
+        cfg.set("nic_bandwidth", "12.5e9").unwrap();
+        assert_eq!(cfg.cost.inter_bw, 12.5e9);
+        cfg.set("nic_latency", "7e-6").unwrap();
+        assert_eq!(cfg.cost.inter_lat, 7e-6);
+        cfg.set("nic_buffer", "1048576").unwrap();
+        assert_eq!(cfg.cost.nic_buffer, 1048576.0);
+        assert!(!cfg.cost.nic_delay, "delay injection is opt-in");
+        cfg.set("nic_delay", "true").unwrap();
+        assert!(cfg.cost.nic_delay);
+        cfg.set("nic_delay", "off").unwrap();
+        assert!(!cfg.cost.nic_delay);
+        assert!(cfg.set("nic_delay", "maybe").is_err());
+        cfg.validate().unwrap();
     }
 
     #[test]

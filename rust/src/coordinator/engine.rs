@@ -49,6 +49,7 @@ use crate::expert::ModelParams;
 use crate::fabric::SymmetricHeap;
 use crate::layout::LayoutDims;
 use crate::runtime::ComputeBackend;
+use crate::transport::NodeFabric;
 
 use super::metrics::{EngineMetrics, PassMetrics};
 use super::rank::{EngineShared, RankActor, RankOutput, TaskGraphMode};
@@ -198,10 +199,14 @@ impl MoeEngine {
         // live at the configured element width.
         let heap =
             Arc::new(SymmetricHeap::with_wire(dims, cfg.system.ranks_per_node(), cfg.system.wire));
+        // Wrap the heap in the node-aware transport: NVLink-class puts go
+        // straight through; NIC-class puts are admitted against a bounded
+        // per-destination receive window first (the multi-node model).
+        let fabric = Arc::new(NodeFabric::new(heap, &cfg));
         let ranks = cfg.system.ranks;
         let s_rank = cfg.system.s_rank;
         let wire = cfg.system.wire;
-        let shared = Arc::new(EngineShared::new(cfg, params, heap, backend, mode));
+        let shared = Arc::new(EngineShared::new(cfg, params, fabric, backend, mode));
         let inner = Arc::new(EngineInner {
             ranks,
             s_rank,
@@ -250,7 +255,7 @@ impl MoeEngine {
     /// Bytes of the symmetric tensor L per rank (Table 3's Size(L)), at
     /// the configured wire element width — a 16-bit wire halves it.
     pub fn heap_bytes_per_rank(&self) -> f64 {
-        self.shared.heap.bytes_per_rank() as f64
+        self.shared.fabric.bytes_per_rank() as f64
     }
 
     /// Snapshot of the cumulative engine metrics. `launches` is 1 for the

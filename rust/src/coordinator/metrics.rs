@@ -62,8 +62,17 @@ pub struct RankMetrics {
     pub dropped: usize,
     /// One-sided bytes received, split by locality, **measured at the
     /// configured wire element width** (2 bytes/elem on a 16-bit wire).
+    /// `local` is NVLink-class (same-node) traffic; `remote` is NIC-class
+    /// (cross-node) traffic, including coalesced hierarchical-dispatch
+    /// transfers landing at this rank as a proxy.
     pub bytes_in_local: u64,
     pub bytes_in_remote: u64,
+    /// NIC bytes this rank *declared* for the pass before moving them:
+    /// outbound dispatch volume (per-tile in flat mode; per-remote-node
+    /// unique rows in hierarchical mode) plus the combine returns its
+    /// cross-node tiles pull back in. Summed over ranks it upper-bounds
+    /// the pass's measured inter-node bytes — the incast-bound property.
+    pub announced_inter_bytes: u64,
     /// Peak ready-pool depth (scheduling pressure).
     pub max_queue_depth: usize,
     /// Cross-deque task migrations in the work-stealing pool this pass
@@ -164,6 +173,33 @@ impl PassMetrics {
 
     pub fn total_dropped(&self) -> usize {
         self.ranks.iter().map(|r| r.dropped).sum()
+    }
+
+    /// Intra-node (NVLink-class) bytes moved this pass, summed over ranks.
+    pub fn intra_bytes(&self) -> u64 {
+        self.ranks.iter().map(|r| r.bytes_in_local).sum()
+    }
+
+    /// Inter-node (NIC-class) bytes moved this pass, summed over ranks —
+    /// the quantity hierarchical dispatch exists to shrink.
+    pub fn inter_bytes(&self) -> u64 {
+        self.ranks.iter().map(|r| r.bytes_in_remote).sum()
+    }
+
+    /// NIC bytes the ranks *declared* before moving them (see
+    /// [`RankMetrics::announced_inter_bytes`]); `inter_bytes() <= this`
+    /// is the pass-level incast bound asserted by the property suite.
+    pub fn announced_inter_bytes(&self) -> u64 {
+        self.ranks.iter().map(|r| r.announced_inter_bytes).sum()
+    }
+
+    /// Measured Maximal Incast Volume: the largest NIC-class byte count
+    /// any single rank *received* this pass — the paper's §F quantity as
+    /// a live engine outcome instead of a closed-form estimate. The rank
+    /// with the maximum is the incast hotspot whose NIC receive window
+    /// overflows first as tokens/GPU grows (Fig 17).
+    pub fn miv_bytes(&self) -> u64 {
+        self.ranks.iter().map(|r| r.bytes_in_remote).max().unwrap_or(0)
     }
 
     /// Pass-wide payload savings in **bytes** against the padded *fp32*
@@ -367,6 +403,33 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(f.fp32_equiv_bytes(), f.total_bytes(), "f32 wire is its own baseline");
+    }
+
+    #[test]
+    fn locality_split_and_measured_miv() {
+        let p = PassMetrics {
+            ranks: vec![
+                RankMetrics {
+                    bytes_in_local: 100,
+                    bytes_in_remote: 40,
+                    announced_inter_bytes: 48,
+                    ..Default::default()
+                },
+                RankMetrics {
+                    bytes_in_local: 60,
+                    bytes_in_remote: 90,
+                    announced_inter_bytes: 90,
+                    ..Default::default()
+                },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(p.intra_bytes(), 160);
+        assert_eq!(p.inter_bytes(), 130);
+        assert_eq!(p.announced_inter_bytes(), 138);
+        assert_eq!(p.miv_bytes(), 90, "MIV is the hottest receiver, not the sum");
+        assert!(p.inter_bytes() <= p.announced_inter_bytes(), "incast bound");
+        assert_eq!(PassMetrics::default().miv_bytes(), 0);
     }
 
     #[test]

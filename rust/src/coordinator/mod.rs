@@ -7,9 +7,16 @@
 //! engine's whole lifetime. Actors exchange tile-granular task
 //! descriptors through a work-conserving ready queue; ranks exchange
 //! tiles through the write-conflict-free symmetric heap with one-sided
-//! put+signal (`crate::fabric`), every transfer stamped with the pass
-//! epoch (per-slot generation counters — no global reset, no collective,
-//! no bulk-synchronous barrier anywhere on the data path).
+//! put+signal, addressed via the node-aware transport layer
+//! (`crate::transport::NodeFabric` over `crate::fabric`), every transfer
+//! stamped with the pass epoch (per-slot generation counters — no global
+//! reset, no collective, no bulk-synchronous barrier anywhere on the
+//! data path). On multi-node topologies the dispatch loop can coalesce
+//! each remote node's unique token rows into one NIC transfer through a
+//! proxy rank (`DispatchMode::Hierarchical`), and a failed transfer —
+//! e.g. a bounded NIC receive window overflowing under incast — poisons
+//! the pass generation so every rank abandons that pass promptly as an
+//! engine error instead of wedging on the watchdog.
 //!
 //! Engine lifecycle (the only launch is the first line):
 //!
@@ -36,7 +43,9 @@
 //!   interrupt plumbing (Alg. 3), reusable across passes (`stop_all`
 //!   parks a pass, `reopen` re-arms).
 //! * [`rank`]      — one rank's resident actor group: subscriber decode
-//!   loop (Alg. 4), processor execution loop (Alg. 2), dispatch (Alg. 1).
+//!   loop (Alg. 4), processor execution loop (Alg. 2), dispatch (Alg. 1,
+//!   flat or node-coalesced hierarchical), pass poisoning on transport
+//!   failure.
 //! * [`moe`]       — [`DistributedMoE`], the original one-call operator
 //!   API kept as a thin shim over a non-pipelined engine.
 //! * [`baseline`]  — a real-execution bulk-synchronous baseline

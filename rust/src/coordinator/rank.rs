@@ -42,6 +42,21 @@
 //! `F32` wire reproduces the pre-wire-subsystem outputs bit for bit, and
 //! 16-bit wires stay bitwise deterministic (round-to-nearest-even is
 //! schedule-free).
+//!
+//! Multi-node transport: every one-sided transfer goes through the
+//! [`NodeFabric`] (`crate::transport`), which classifies each (src, dst)
+//! pair as NVLink (same node) or NIC (cross-node) and admits NIC traffic
+//! against a bounded per-destination receive window. Under
+//! `DispatchMode::Hierarchical` the dispatch loop coalesces each remote
+//! node's *unique* token rows into one NIC transfer to a proxy rank,
+//! which fans the per-tile payloads out intra-node via delegated writes
+//! that preserve the logical source — so flags, announcements, the
+//! combine protocol and the plan-order fold are identical to the flat
+//! path, and the two modes produce bitwise-equal outputs. A put that the
+//! NIC window rejects (incast overflow) *poisons* the pass generation
+//! via `EngineShared::pass_poisoned`; every peer's subscriber checks the
+//! stamp each sweep and abandons the pass with an error instead of
+//! spinning into the watchdog waiting for tiles that will never arrive.
 
 use std::cell::UnsafeCell;
 use std::collections::HashMap;
@@ -50,12 +65,12 @@ use std::sync::{Arc, Barrier, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::Config;
 use crate::expert::ModelParams;
-use crate::fabric::SymmetricHeap;
 use crate::gate::{dispatch_plan, route_from_scores, DispatchPlan};
+use crate::transport::{NodeFabric, Transport};
 use crate::layout::{Coord, LayoutDims};
 use crate::runtime::ComputeBackend;
 use crate::task::{DependencyTable, Task, TaskType};
@@ -82,7 +97,13 @@ pub struct EngineShared {
     pub capacity: usize,
     pub dims: LayoutDims,
     pub params: Arc<ModelParams>,
-    pub heap: Arc<SymmetricHeap>,
+    /// The node-aware transport every one-sided transfer goes through:
+    /// the symmetric heap wrapped in the configured topology and NIC
+    /// model (`crate::transport`). Intra-node puts hit the heap
+    /// directly; cross-node puts are admitted against the NIC's bounded
+    /// receive window first — so incast overflow surfaces here as a put
+    /// error, not as a formula.
+    pub fabric: Arc<NodeFabric>,
     pub backend: Arc<dyn ComputeBackend>,
     pub mode: TaskGraphMode,
     /// Dispatch tiles destined to each rank in the current pass
@@ -103,6 +124,14 @@ pub struct EngineShared {
     pub announced_tiles: Vec<AtomicU32>,
     /// Sources that have finished announcing in the current pass.
     pub announced: AtomicU32,
+    /// Pass-generation tag of a pass some rank failed mid-transfer (0 =
+    /// none): a rank whose dispatch or combine put fails — NIC incast
+    /// overflow being the expected case — stamps the generation here so
+    /// every peer's subscriber stops waiting for the packets that will
+    /// never arrive and fails its pass promptly instead of tripping the
+    /// 120 s watchdog. Cleared by rank 0 inside the pass-start barrier
+    /// pair (and self-invalidating anyway: the check is epoch-exact).
+    pub pass_poisoned: AtomicU32,
     /// The reusable pass-start barrier. Besides synchronizing the pass,
     /// it is the fence that orders pass n's heap readers before pass
     /// n+1's writers on the same cells (see `fabric.rs` safety notes).
@@ -116,7 +145,7 @@ impl EngineShared {
     pub fn new(
         cfg: Config,
         params: Arc<ModelParams>,
-        heap: Arc<SymmetricHeap>,
+        fabric: Arc<NodeFabric>,
         backend: Arc<dyn ComputeBackend>,
         mode: TaskGraphMode,
     ) -> Self {
@@ -129,12 +158,13 @@ impl EngineShared {
             capacity,
             dims,
             params,
-            heap,
+            fabric,
             backend,
             mode,
             expected_dispatch: (0..ranks).map(|_| AtomicU32::new(0)).collect(),
             announced_tiles: (0..ranks * ranks * e_local).map(|_| AtomicU32::new(0)).collect(),
             announced: AtomicU32::new(0),
+            pass_poisoned: AtomicU32::new(0),
             start: Barrier::new(ranks),
             threads_spawned: AtomicU64::new(0),
         }
@@ -144,6 +174,17 @@ impl EngineShared {
     /// (destination rank, source rank, destination-local expert).
     pub fn announce_idx(&self, dst: usize, src: usize, e_loc: usize) -> usize {
         (dst * self.cfg.system.ranks + src) * self.cfg.local_experts() + e_loc
+    }
+
+    /// Mark pass generation `epoch32` as failed by this rank (a transfer
+    /// error mid-pass); peers' subscribers observe it and bail out.
+    pub fn poison(&self, epoch32: u32) {
+        self.pass_poisoned.store(epoch32, Ordering::Release);
+    }
+
+    /// True if some rank failed pass generation `epoch32` mid-transfer.
+    pub fn poisoned(&self, epoch32: u32) -> bool {
+        self.pass_poisoned.load(Ordering::Acquire) == epoch32
     }
 }
 
@@ -439,6 +480,7 @@ impl RankActor {
         // announce counters; the second wait publishes the clear.
         shared.start.wait();
         if rank == 0 {
+            shared.pass_poisoned.store(0, Ordering::Release);
             shared.announced.store(0, Ordering::Release);
             for d in &shared.expected_dispatch {
                 d.store(0, Ordering::Release);
@@ -449,7 +491,7 @@ impl RankActor {
         }
         shared.start.wait();
         let t0 = Instant::now();
-        let (bytes_local_0, bytes_remote_0) = shared.heap.bytes_in(rank);
+        let (bytes_local_0, bytes_remote_0) = shared.fabric.bytes_in(rank);
         let steals_0 = self.queue.steals();
 
         // ---- FusedGate (Alg. 1 line 1) ---------------------------------------
@@ -501,20 +543,104 @@ impl RankActor {
         // not have built their pass context yet; flags simply persist on
         // the heap until their subscriber sweeps them. Runs before the
         // processor doorbell so a dispatch error skips the epoch cleanly:
-        // workers never observe an epoch they'd half-run.
+        // workers never observe an epoch they'd half-run. A failed put
+        // (NIC incast overflow) poisons the pass generation so peers'
+        // subscribers stop waiting for the tiles that will never arrive.
+        //
+        // Under `DispatchMode::Hierarchical`, tiles bound for a remote
+        // node do not cross the NIC one by one: the node's *unique* token
+        // rows travel as one coalesced transfer to a proxy rank (the
+        // FSMoE-style two-level schedule — a token routed to two experts
+        // on the same remote node crosses once, not twice), and the proxy
+        // fans the per-tile payloads out intra-node via delegated writes
+        // that keep this rank as the logical source. Flags, announcement
+        // tables and the combine protocol are untouched, so flat and
+        // hierarchical passes produce bitwise-identical outputs.
+        //
+        // `announced_inter_bytes` is this rank's declared NIC volume for
+        // the pass: outbound dispatch (per-tile in flat mode, per-node
+        // unique rows in hierarchical) plus the combine returns its
+        // cross-node tiles will pull back in. Summed over ranks it upper-
+        // bounds the pass's measured inter-node bytes (the incast-bound
+        // property test).
         let m = &cfg.model;
+        let wb = shared.fabric.wire().bytes() as u64;
+        let topo = *shared.fabric.topology();
+        let hier = cfg.system.dispatch.is_hierarchical() && topo.nodes() > 1;
         let mut pack = vec![0.0f32; m.bm * h];
+        let mut announced_inter_bytes: u64 = 0;
         for t in &plan.tiles {
+            // combine returns for cross-node tiles come back over the NIC
+            if !topo.same_node(rank, t.dst as usize) {
+                announced_inter_bytes += t.rows as u64 * h as u64 * wb;
+            }
+        }
+        if hier {
+            let my_node = topo.node_of(rank);
+            for node in 0..topo.nodes() {
+                if node == my_node {
+                    continue; // same-node tiles dispatch direct below
+                }
+                // dedup: unique token rows bound for this node across all
+                // of its tiles (k > 1 routes may share a remote node)
+                let mut seen = vec![false; s_rows];
+                let mut unique = 0u64;
+                for t in plan.tiles.iter().filter(|t| topo.node_of(t.dst as usize) == node) {
+                    for &tok in &t.tokens {
+                        if !seen[tok as usize] {
+                            seen[tok as usize] = true;
+                            unique += 1;
+                        }
+                    }
+                }
+                if unique == 0 {
+                    continue;
+                }
+                let unique_bytes = unique * h as u64 * wb;
+                announced_inter_bytes += unique_bytes;
+                let xfer = match shared.fabric.coalesced(rank, node, epoch32, unique_bytes) {
+                    Ok(x) => x,
+                    Err(e) => {
+                        shared.poison(epoch32);
+                        return Err(e).context("coalesced dispatch");
+                    }
+                };
+                for t in plan.tiles.iter().filter(|t| topo.node_of(t.dst as usize) == node) {
+                    for (row, &tok) in t.tokens.iter().enumerate() {
+                        pack[row * h..(row + 1) * h]
+                            .copy_from_slice(&a[tok as usize * h..(tok as usize + 1) * h]);
+                    }
+                    let e_loc = t.expert as usize - cfg.owner_of(t.expert as usize) * e_local;
+                    let coord =
+                        Coord { p: rank, r: 0, b: 1, e: e_loc, c: t.tile as usize * m.bm };
+                    if let Err(e) = xfer.put(t.dst as usize, coord, &pack[..t.rows as usize * h])
+                    {
+                        shared.poison(epoch32);
+                        return Err(e).context("coalesced fan-out");
+                    }
+                }
+            }
+        }
+        for t in &plan.tiles {
+            let dst = t.dst as usize;
+            if hier && !topo.same_node(rank, dst) {
+                continue; // already shipped via the coalesced path
+            }
+            if !topo.same_node(rank, dst) {
+                announced_inter_bytes += t.rows as u64 * h as u64 * wb;
+            }
             for (row, &tok) in t.tokens.iter().enumerate() {
                 pack[row * h..(row + 1) * h]
                     .copy_from_slice(&a[tok as usize * h..(tok as usize + 1) * h]);
             }
             let e_loc = t.expert as usize - cfg.owner_of(t.expert as usize) * e_local;
             let coord = Coord { p: rank, r: 0, b: 1, e: e_loc, c: t.tile as usize * m.bm };
-            shared
-                .heap
-                .put_signal(rank, t.dst as usize, coord, &pack[..t.rows as usize * h], epoch32)
-                .context("dispatch put")?;
+            if let Err(e) =
+                shared.fabric.put_signal(rank, dst, coord, &pack[..t.rows as usize * h], epoch32)
+            {
+                shared.poison(epoch32);
+                return Err(e).context("dispatch put");
+            }
         }
 
         // ---- size pass bookkeeping -------------------------------------------
@@ -600,7 +726,7 @@ impl RankActor {
             combine_tiles,
             block_base,
             slices: self.slices.clone(),
-            x_stage: (split && !shared.heap.zero_copy()).then(|| Staging::new(blocks, m.bm * h)),
+            x_stage: (split && !shared.fabric.zero_copy()).then(|| Staging::new(blocks, m.bm * h)),
             mid: split.then(|| Staging::new(blocks, m.bm * m.d)),
             out_stage: split.then(|| Staging::new(blocks, m.bm * m.h)),
             g0_latch: split.then(|| DependencyTable::new(blocks, d_cols)),
@@ -623,7 +749,10 @@ impl RankActor {
         }
 
         // ---- subscriber phase (this thread IS the OS/subscriber actor) -------
-        subscriber_loop(ctx.as_ref(), my_expected_combine);
+        // Capture the result but park the processors FIRST: a poisoned
+        // pass must still leave the actor group synchronized before the
+        // error propagates, or the next pass would race old-ctx workers.
+        let sub_result = subscriber_loop(ctx.as_ref(), my_expected_combine);
 
         // ---- park the processors: wait for the pass-done latch ---------------
         let worker_results: Vec<Result<()>> = {
@@ -634,6 +763,7 @@ impl RankActor {
             st.ctx = None;
             st.results.iter_mut().map(|r| r.take().expect("worker result")).collect()
         };
+        sub_result.with_context(|| format!("rank {rank} subscriber (pass {epoch})"))?;
         for (i, r) in worker_results.into_iter().enumerate() {
             r.with_context(|| format!("rank {rank} processor {i} (pass {epoch})"))?;
         }
@@ -652,7 +782,7 @@ impl RankActor {
         }
 
         let wall = t0.elapsed().as_secs_f64();
-        let (bytes_local_1, bytes_remote_1) = shared.heap.bytes_in(rank);
+        let (bytes_local_1, bytes_remote_1) = shared.fabric.bytes_in(rank);
         let c = &ctx.counters;
         let metrics = RankMetrics {
             busy_secs: c.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
@@ -668,6 +798,7 @@ impl RankActor {
             dropped,
             bytes_in_local: bytes_local_1 - bytes_local_0,
             bytes_in_remote: bytes_remote_1 - bytes_remote_0,
+            announced_inter_bytes,
             max_queue_depth: self.queue.max_depth(),
             steals: self.queue.steals() - steals_0,
         };
@@ -754,7 +885,7 @@ const WATCHDOG: std::time::Duration = std::time::Duration::from_secs(120);
 /// fresh flags beat lending a hand for the first few empty sweeps).
 const HELP_OUT_AFTER: u32 = 8;
 
-fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) {
+fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) -> Result<()> {
     let shared = &*ctx.shared;
     let dims = &shared.dims;
     let ranks = shared.cfg.system.ranks;
@@ -768,6 +899,20 @@ fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) {
     // never need them): (scratch, tile_out, xbuf).
     let mut help: Option<(Vec<f32>, Vec<f32>, Vec<f32>)> = None;
     loop {
+        // Poison check: a peer whose put failed (NIC incast overflow)
+        // stamped this pass generation. Its announced tiles will never
+        // arrive, so waiting out the watchdog would wedge every rank for
+        // two minutes — abandon the pass promptly instead. Epoch-exact,
+        // so a stamp from an already-failed earlier pass is ignored.
+        if shared.poisoned(ctx.epoch32) {
+            ctx.queue.stop_all();
+            bail!(
+                "rank {} abandoning pass gen {}: a peer failed mid-transfer \
+                 (e.g. NIC incast overflow)",
+                ctx.rank,
+                ctx.epoch32
+            );
+        }
         let mut progressed = false;
         for peer in 0..ranks {
             for e_loc in 0..dims.e_local {
@@ -781,7 +926,7 @@ fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) {
                 for tile in 0..ctx.incoming_tiles[pe] as usize {
                     let f0 = dims.flag_index(peer, 0, e_loc, tile);
                     if !visited[f0] {
-                        if let Some(rows) = shared.heap.poll_epoch(ctx.rank, f0, ctx.epoch32) {
+                        if let Some(rows) = shared.fabric.poll_epoch(ctx.rank, f0, ctx.epoch32) {
                             visited[f0] = true;
                             progressed = true;
                             seen_dispatch += 1;
@@ -793,7 +938,7 @@ fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) {
                 for tile in 0..ctx.combine_tiles[pe] as usize {
                     let f1 = dims.flag_index(peer, 1, e_loc, tile);
                     if !visited[f1] {
-                        if let Some(rows) = shared.heap.poll_epoch(ctx.rank, f1, ctx.epoch32) {
+                        if let Some(rows) = shared.fabric.poll_epoch(ctx.rank, f1, ctx.epoch32) {
                             visited[f1] = true;
                             progressed = true;
                             seen_combine += 1;
@@ -824,7 +969,7 @@ fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) {
                     == c.combine_decoded.load(Ordering::Acquire)
             {
                 ctx.queue.stop_all();
-                return;
+                return Ok(());
             }
         }
         if progressed {
@@ -840,7 +985,7 @@ fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) {
                     let m = &shared.cfg.model;
                     let (scratch, tile_out, xbuf) = help.get_or_insert_with(|| {
                         let xbuf_len =
-                            if shared.heap.zero_copy() { 0 } else { m.bm * m.h };
+                            if shared.fabric.zero_copy() { 0 } else { m.bm * m.h };
                         (
                             vec![0.0f32; m.bm * m.d.max(m.h)],
                             vec![0.0f32; m.bm * m.h.max(m.bn)],
@@ -920,7 +1065,7 @@ fn decode_dispatch(ctx: &PassCtx, peer: usize, e_loc: usize, tile: usize, rows: 
             if let Some(stage) = &ctx.x_stage {
                 let coord = Coord { p: peer, r: 0, b: 1, e: e_loc, c: tile * m.bm };
                 stage.fill_block(block, |dst| {
-                    ctx.shared.heap.read_into(ctx.rank, coord, m.bm, dst);
+                    ctx.shared.fabric.read_into(ctx.rank, coord, m.bm, dst);
                 });
             }
             let tasks: Vec<Task> = (0..(m.d / m.bn) as u32)
@@ -951,7 +1096,7 @@ fn processor_loop(ctx: &PassCtx, slot: usize) -> Result<()> {
     // decode buffer for reduced-wire heap reads (f32 after decode);
     // zero-length on a zero-copy wire, where reads borrow the heap and
     // never touch it — no per-pass megabytes for the default f32 config
-    let xbuf_len = if shared.heap.zero_copy() { 0 } else { m.bm * h };
+    let xbuf_len = if shared.fabric.zero_copy() { 0 } else { m.bm * h };
     let mut xbuf = vec![0.0f32; xbuf_len];
     while let Some(task) = ctx.queue.pop(slot) {
         let t0 = Instant::now();
@@ -988,10 +1133,10 @@ fn execute_task(
         TaskType::FusedFfn => {
             let coord = Coord { p: peer, r: 0, b: 1, e: e_loc, c: tile * bm };
             // f32 wire: zero-copy borrow; 16-bit wire: decode into xbuf
-            let x: &[f32] = match shared.heap.read_borrowed(ctx.rank, coord, bm) {
+            let x: &[f32] = match shared.fabric.read_borrowed(ctx.rank, coord, bm) {
                 Some(x) => x,
                 None => {
-                    shared.heap.read_into(ctx.rank, coord, bm, xbuf);
+                    shared.fabric.read_into(ctx.rank, coord, bm, xbuf);
                     &xbuf[..bm * h]
                 }
             };
@@ -1003,15 +1148,20 @@ fn execute_task(
                 &mut tile_out[..bm * h],
                 scratch,
             )?;
-            // one-sided combine write-back to the originating rank
+            // one-sided combine write-back to the originating rank —
+            // crosses the NIC directly for a cross-node peer, so a
+            // receive-window overflow here poisons the pass for everyone
             let back = Coord { p: ctx.rank, r: 1, b: 1, e: e_loc, c: tile * bm };
-            shared.heap.put_signal(
+            if let Err(e) = shared.fabric.put_signal(
                 ctx.rank,
                 peer,
                 back,
                 &tile_out[..task.rows as usize * h],
                 ctx.epoch32,
-            )?;
+            ) {
+                shared.poison(ctx.epoch32);
+                return Err(e);
+            }
             ctx.counters.ffn_completed.fetch_add(1, Ordering::Release);
         }
         TaskType::Gemm0 => {
@@ -1025,7 +1175,7 @@ fn execute_task(
                 None => {
                     let coord = Coord { p: peer, r: 0, b: 1, e: e_loc, c: tile * bm };
                     shared
-                        .heap
+                        .fabric
                         .read_borrowed(ctx.rank, coord, bm)
                         .expect("x_stage is None only on a zero-copy wire")
                 }
@@ -1080,7 +1230,12 @@ fn execute_task(
                 let rows = ctx.block_rows[block].load(Ordering::Acquire) as usize;
                 let y = out_stage.read_block(block);
                 let back = Coord { p: ctx.rank, r: 1, b: 1, e: e_loc, c: tile * bm };
-                shared.heap.put_signal(ctx.rank, peer, back, &y[..rows * h], ctx.epoch32)?;
+                if let Err(e) =
+                    shared.fabric.put_signal(ctx.rank, peer, back, &y[..rows * h], ctx.epoch32)
+                {
+                    shared.poison(ctx.epoch32);
+                    return Err(e);
+                }
                 ctx.counters.ffn_completed.fetch_add(1, Ordering::Release);
             }
         }
@@ -1089,10 +1244,10 @@ fn execute_task(
             let rows = task.rows as usize;
             let coord = Coord { p: peer, r: 1, b: 1, e: e_loc, c: tile * bm };
             // f32 wire: zero-copy borrow; 16-bit wire: decode into xbuf
-            let y: &[f32] = match shared.heap.read_borrowed(ctx.rank, coord, rows) {
+            let y: &[f32] = match shared.fabric.read_borrowed(ctx.rank, coord, rows) {
                 Some(y) => y,
                 None => {
-                    shared.heap.read_into(ctx.rank, coord, rows, xbuf);
+                    shared.fabric.read_into(ctx.rank, coord, rows, xbuf);
                     &xbuf[..rows * h]
                 }
             };

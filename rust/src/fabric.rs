@@ -98,11 +98,14 @@ struct RankHeap {
     data: UnsafeCell<Vec<u32>>,
     /// One signal flag per (peer, round, local expert, tile).
     flags: Vec<AtomicU64>,
-    /// Transfer accounting (bytes received *at the wire width*), split by
-    /// locality. Cumulative over the heap's lifetime.
-    bytes_in_local: AtomicU64,
-    bytes_in_remote: AtomicU64,
-    puts_in: AtomicU64,
+    /// Transfer accounting (bytes received *at the wire width*), split
+    /// per link class — index 0 is intra-node (NVLink-class), index 1 is
+    /// inter-node (NIC-class), matching `LinkClass::index()` in the
+    /// transport module. Cumulative over the heap's lifetime. Both byte
+    /// *and* message counters carry the split, so per-pass snapshots can
+    /// never conflate the two classes when both are active in one pass.
+    bytes_in: [AtomicU64; 2],
+    puts_in: [AtomicU64; 2],
 }
 
 /// The whole-fabric symmetric heap. Shared by all rank threads via `Arc`
@@ -140,9 +143,8 @@ impl SymmetricHeap {
             .map(|_| RankHeap {
                 data: UnsafeCell::new(vec![0u32; cell_words]),
                 flags: (0..dims.num_flags()).map(|_| AtomicU64::new(FLAG_EMPTY)).collect(),
-                bytes_in_local: AtomicU64::new(0),
-                bytes_in_remote: AtomicU64::new(0),
-                puts_in: AtomicU64::new(0),
+                bytes_in: [AtomicU64::new(0), AtomicU64::new(0)],
+                puts_in: [AtomicU64::new(0), AtomicU64::new(0)],
             })
             .collect();
         Self { dims, wire, ranks, ranks_per_node }
@@ -189,6 +191,33 @@ impl SymmetricHeap {
         payload: &[f32],
         epoch: u32,
     ) -> Result<()> {
+        self.put_signal_from(src, src, dst, coord, payload, epoch)
+    }
+
+    /// One-sided put + signal issued on behalf of a logical source: the
+    /// Definition C.2 validity check runs against `src` (whose peer slot
+    /// and flags the write targets), while the link class for the
+    /// byte/message accounting is derived from `writer` — the rank that
+    /// physically issues the transfer. The coalesced inter-node dispatch
+    /// uses this for its proxy fan-out: the proxy (on `dst`'s node)
+    /// delivers tiles whose coordinates and signals are exactly those of
+    /// a direct write from `src` — consumers cannot tell the two apart,
+    /// and Theorem 3.1's conflict freedom still holds because cell
+    /// disjointness is a function of the *logical* source — but the bytes
+    /// count against the writer's intra-node link (the NIC hop was
+    /// already accounted, once, by the transport layer).
+    pub(crate) fn put_signal_from(
+        &self,
+        writer: usize,
+        src: usize,
+        dst: usize,
+        coord: Coord,
+        payload: &[f32],
+        epoch: u32,
+    ) -> Result<()> {
+        if writer >= self.dims.p {
+            bail!("writer rank {writer} out of range (P={})", self.dims.p);
+        }
         let h = self.dims.h;
         if payload.is_empty() || payload.len() % h != 0 {
             bail!("payload must be a positive multiple of H={h} floats");
@@ -214,14 +243,13 @@ impl SymmetricHeap {
             let dst_bytes = std::slice::from_raw_parts_mut(base, payload.len() * wb);
             wire::encode_into(self.wire, payload, dst_bytes);
         }
-        // accounting at the wire width (the measured payload-narrowing)
+        // accounting at the wire width (the measured payload-narrowing),
+        // per link class of the physical writer -> dst hop
         let bytes = (payload.len() * wb) as u64;
-        if src / self.ranks_per_node == dst / self.ranks_per_node {
-            target.bytes_in_local.fetch_add(bytes, Ordering::Relaxed);
-        } else {
-            target.bytes_in_remote.fetch_add(bytes, Ordering::Relaxed);
-        }
-        target.puts_in.fetch_add(1, Ordering::Relaxed);
+        let class =
+            usize::from(writer / self.ranks_per_node != dst / self.ranks_per_node);
+        target.bytes_in[class].fetch_add(bytes, Ordering::Relaxed);
+        target.puts_in[class].fetch_add(1, Ordering::Relaxed);
         // signal delivery: release pairs with the subscriber's acquire
         let tile = coord.c / self.dims.bm;
         let fidx = self.dims.flag_index(coord.p, coord.r, coord.e, tile);
@@ -307,17 +335,29 @@ impl SymmetricHeap {
         out
     }
 
-    /// (local, remote) bytes received by `rank` over the heap's lifetime.
+    /// (intra-node, inter-node) bytes received by `rank` over the heap's
+    /// lifetime.
     pub fn bytes_in(&self, rank: usize) -> (u64, u64) {
         (
-            self.ranks[rank].bytes_in_local.load(Ordering::Relaxed),
-            self.ranks[rank].bytes_in_remote.load(Ordering::Relaxed),
+            self.ranks[rank].bytes_in[0].load(Ordering::Relaxed),
+            self.ranks[rank].bytes_in[1].load(Ordering::Relaxed),
         )
     }
 
-    /// One-sided messages received by `rank` over the heap's lifetime.
+    /// (intra-node, inter-node) one-sided messages received by `rank`
+    /// over the heap's lifetime.
+    pub fn puts_in_split(&self, rank: usize) -> (u64, u64) {
+        (
+            self.ranks[rank].puts_in[0].load(Ordering::Relaxed),
+            self.ranks[rank].puts_in[1].load(Ordering::Relaxed),
+        )
+    }
+
+    /// One-sided messages received by `rank` over the heap's lifetime
+    /// (both link classes).
     pub fn puts_in(&self, rank: usize) -> u64 {
-        self.ranks[rank].puts_in.load(Ordering::Relaxed)
+        let (intra, inter) = self.puts_in_split(rank);
+        intra + inter
     }
 
     /// Total bytes moved across the fabric over the heap's lifetime.
@@ -515,5 +555,31 @@ mod tests {
         h.put_signal(1, 0, c(1), &vec![0.0; 8], 2).unwrap();
         assert_eq!(h.bytes_in(0), (64, 32));
         assert_eq!(h.total_bytes(), 96);
+        // message counters carry the same per-class split as the bytes
+        assert_eq!(h.puts_in_split(0), (2, 1));
+        assert_eq!(h.puts_in(0), 3);
+    }
+
+    #[test]
+    fn delegated_writes_validate_source_but_account_writer() {
+        // 4 ranks, 2 per node; rank 2 (same node as 3) delivers rank 0's
+        // tile to rank 3 — the proxy fan-out half of a coalesced transfer
+        let dims = LayoutDims { p: 4, e_local: 1, c: 4, h: 2, bm: 4 };
+        let h = SymmetricHeap::new(dims, 2);
+        let c0 = Coord { p: 0, r: 0, b: 1, e: 0, c: 0 };
+        h.put_signal_from(2, 0, 3, c0, &[1.0; 8], 3).unwrap();
+        // consumers observe an ordinary packet from rank 0
+        let fidx = dims.flag_index(0, 0, 0, 0);
+        assert_eq!(h.poll_epoch(3, fidx, 3), Some(4));
+        assert_eq!(h.read_rows(3, c0, 4), vec![1.0; 8]);
+        // ...but the bytes/messages count on the writer's intra-node link
+        assert_eq!(h.bytes_in(3), (32, 0));
+        assert_eq!(h.puts_in_split(3), (1, 0));
+        // validity is still judged against the logical source: a proxy
+        // cannot forge a write into some third rank's peer slot
+        let forged = Coord { p: 2, r: 0, b: 1, e: 0, c: 0 };
+        assert!(h.put_signal_from(2, 0, 3, forged, &[0.0; 2], 3).is_err());
+        // and the physical writer must be a real rank
+        assert!(h.put_signal_from(9, 0, 3, c0, &[0.0; 2], 3).is_err());
     }
 }

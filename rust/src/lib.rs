@@ -116,6 +116,42 @@
 //! ≥ 0.6× the f32 bytes. The legacy `elem_bytes` cost-model float is now
 //! a deprecation shim over this knob (see `config.rs`).
 //!
+//! ## Multi-node topology: transport, hierarchical dispatch, incast
+//!
+//! The fabric is **node-aware**: [`transport::Topology`]
+//! (`cfg.set("nodes", n)`) groups `ranks_per_node` consecutive ranks per
+//! node, and every one-sided transfer goes through a
+//! [`transport::NodeFabric`] that classifies each (src, dst) pair by
+//! [`transport::LinkClass`] — `NvLink` (same node: the symmetric heap,
+//! unbounded, as before) or `Nic` (cross-node: admitted against a
+//! **bounded per-destination receive window** sized by
+//! `cfg.set("nic_buffer", bytes)` and reset each pass generation). A put
+//! the window rejects is a real engine error — the paper's §F incast
+//! overflow as a *measured outcome*, not a formula: past ~2048
+//! tokens/GPU on the `paper_multinode` preset the hottest receiver's
+//! window overflows, the failing rank poisons the pass generation, and
+//! every peer abandons the pass promptly instead of wedging.
+//!
+//! [`config::DispatchMode`] (`cfg.set("topology", "hier")`, default on
+//! `paper_multinode`) selects **hierarchical dispatch**: each remote
+//! node's *unique* token rows cross the NIC once, coalesced into a
+//! single transfer to a proxy rank that fans the per-tile payloads out
+//! intra-node via delegated writes preserving the logical source — so
+//! announcements, flags, combine and the plan-order fold are untouched
+//! and flat vs hierarchical outputs are **bitwise identical** (asserted
+//! by the conformance tests). With top-k routing a token bound for two
+//! experts on one remote node crosses once instead of twice, so
+//! NIC-class bytes drop (`harness::multinode_ab` measures the split;
+//! CI's perf-smoke gate fails if hierarchical ever moves more inter-node
+//! bytes than flat). Per-pass metrics expose the locality split
+//! (`PassMetrics::intra_bytes` / `inter_bytes`) and the measured Maximal
+//! Incast Volume (`PassMetrics::miv_bytes` — the hottest receiver's
+//! NIC-class bytes), with `announced_inter_bytes` as the declared upper
+//! bound the property suite holds the measurement to. `cargo bench
+//! --bench fig17_multinode` records the A/B into
+//! `BENCH_pr6_multinode.json`; the remaining gap to real hardware is an
+//! RDMA backend behind the same [`transport::Transport`] trait.
+//!
 //! ## Quickstart — serving requests
 //!
 //! The serving front door: start a [`coordinator::MoeService`], enqueue
@@ -222,6 +258,7 @@ pub mod task;
 pub mod gemm;
 pub mod expert;
 pub mod fabric;
+pub mod transport;
 pub mod runtime;
 pub mod coordinator;
 pub mod sim;

@@ -8,6 +8,7 @@ use std::sync::Arc;
 use flashdmoe::config::{Config, RoutingPolicy, WirePrecision};
 use flashdmoe::coordinator::{baseline, DistributedMoE, MoeEngine, PassInput, TaskGraphMode};
 use flashdmoe::expert::{generate_tokens, ModelParams};
+use flashdmoe::harness::multinode_config;
 use flashdmoe::runtime::{ComputeBackend, NativeBackend};
 use flashdmoe::util::check::dense_reference_moe;
 use flashdmoe::util::prng::Rng;
@@ -689,6 +690,89 @@ fn epoch_tags_isolate_back_to_back_heterogeneous_passes() {
         let want = start(&cfg, &params, &backend, TaskGraphMode::Fused).forward(&inputs).unwrap();
         for (g, w) in got.outputs.iter().zip(&want.outputs) {
             assert_eq!(g, w, "seed {seed}: resident-engine pass leaked state");
+        }
+    }
+}
+
+#[test]
+fn hierarchical_dispatch_is_conformant_across_policies_and_wires() {
+    // Tentpole conformance on a 4-node topology: two-level coalesced
+    // dispatch only changes the transfer path — the plan, the logical
+    // write coordinates and the plan-order combine fold are untouched —
+    // so hierarchical outputs must equal flat outputs *bit for bit*, per
+    // routing policy and wire format; and whenever the gate dropped
+    // nothing, both must match the dense per-token oracle at the wire's
+    // documented tolerance.
+    for policy in [RoutingPolicy::Capacity(1.0), RoutingPolicy::Dropless] {
+        for wire in [WirePrecision::F32, WirePrecision::Bf16] {
+            let mut cfg = multinode_config(48).unwrap();
+            cfg.model.policy = policy;
+            cfg.set("wire_precision", wire.name()).unwrap();
+            cfg.validate().unwrap();
+            assert!(cfg.system.dispatch.is_hierarchical(), "preset default");
+            let params = Arc::new(ModelParams::generate(&cfg, 0x6E0D));
+            let inputs: Vec<Vec<f32>> =
+                (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, 0x6E0D, r)).collect();
+            let run = |cfg: &Config| {
+                let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(cfg));
+                MoeEngine::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused)
+                    .unwrap()
+                    .forward(&inputs)
+                    .unwrap()
+            };
+            let mut flat_cfg = cfg.clone();
+            flat_cfg.set("dispatch", "flat").unwrap();
+            let flat = run(&flat_cfg);
+            let hier = run(&cfg);
+            for (r, (f, h)) in flat.outputs.iter().zip(&hier.outputs).enumerate() {
+                assert_bits_eq(
+                    f,
+                    h,
+                    &format!("{policy:?}/{wire:?} rank {r}: flat vs hierarchical"),
+                );
+            }
+            if hier.metrics.total_dropped() == 0 {
+                for (r, out) in hier.outputs.iter().enumerate() {
+                    let want = dense_reference_moe(&cfg, &params, &inputs[r]);
+                    let diff = max_abs_diff(out, &want);
+                    assert!(
+                        diff < wire.conformance_tol(),
+                        "{policy:?}/{wire:?} rank {r}: diff {diff} vs dense reference"
+                    );
+                }
+            } else {
+                assert!(
+                    matches!(policy, RoutingPolicy::Capacity(_)),
+                    "dropless must not drop on the multi-node config"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn multinode_hierarchical_restarts_stay_bitwise_deterministic() {
+    // The restart-determinism guarantee survives the Transport subsystem:
+    // same seed + multi-node hierarchical config => bitwise-identical
+    // outputs across engine lifetimes, and repeated passes within one
+    // resident engine are bitwise stable too (proxy fan-out introduces no
+    // schedule dependence — the combine fold stays dispatch-plan-ordered).
+    let cfg = multinode_config(64).unwrap();
+    assert!(cfg.system.nodes > 1 && cfg.system.dispatch.is_hierarchical());
+    let params = Arc::new(ModelParams::generate(&cfg, 0x17A2));
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+    let inputs: Vec<Vec<f32>> =
+        (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, 0x17A2, r)).collect();
+    let a = start(&cfg, &params, &backend, TaskGraphMode::Fused).forward(&inputs).unwrap();
+    let b = start(&cfg, &params, &backend, TaskGraphMode::Fused).forward(&inputs).unwrap();
+    for (r, (x, y)) in a.outputs.iter().zip(&b.outputs).enumerate() {
+        assert_bits_eq(x, y, &format!("multi-node restart, rank {r}"));
+    }
+    let engine = start(&cfg, &params, &backend, TaskGraphMode::Fused);
+    for pass in 0..2 {
+        let again = engine.submit(&inputs).unwrap().wait().unwrap();
+        for (r, (x, y)) in a.outputs.iter().zip(&again.outputs).enumerate() {
+            assert_bits_eq(x, y, &format!("multi-node resident pass {pass}, rank {r}"));
         }
     }
 }

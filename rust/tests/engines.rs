@@ -152,15 +152,52 @@ fn fig14_flash_stays_flat_in_experts() {
 
 #[test]
 fn fig17_incast_failure_appears_past_threshold() {
-    let (_, pts) = harness::fig17(SEED).unwrap();
-    let small_ok = pts.iter().filter(|p| p.x <= 1024.0).all(|p| !p.overflow);
-    let big_fails = pts.iter().any(|p| p.x >= 2048.0 && p.overflow);
-    assert!(small_ok, "small token counts must not overflow");
-    assert!(big_fails, "the paper's >2048-token failure must reproduce");
-    // latency grows sublinearly in tokens where it survives (paper §F)
-    let l256 = latency(&pts, "FlashDMoE", 256.0);
-    let l1024 = latency(&pts, "FlashDMoE", 1024.0);
-    assert!(l1024 / l256 < 4.0, "sublinear scaling expected");
+    // Measured, not closed-form: multinode_ab drives live engines over
+    // the Transport subsystem in both dispatch modes (and asserts
+    // flat/hier bitwise output equality + the incast byte bound
+    // internally — the shape claims are asserted HERE on its points).
+    let (_, pts) = harness::multinode_ab(SEED).unwrap();
+    let small_ok = pts.iter().filter(|p| p.tokens_per_gpu <= 2048).all(|p| !p.overflow);
+    let big_fails = pts.iter().any(|p| p.tokens_per_gpu > 2048 && p.overflow);
+    assert!(small_ok, "token counts <= 2048/GPU must not overflow the NIC window");
+    assert!(big_fails, "the paper's >2048-token incast failure must reproduce as an engine error");
+    for mode in ["flat", "hierarchical"] {
+        let surviving: Vec<_> =
+            pts.iter().filter(|p| p.mode == mode && !p.overflow).collect();
+        assert!(!surviving.is_empty(), "{mode}: no surviving points");
+        for p in &surviving {
+            // measured MIV is a real engine quantity on every live point
+            assert!(p.miv_bytes > 0, "{mode}@{}: MIV must be measured", p.tokens_per_gpu);
+            // and the incast bound holds: measured inter <= announced
+            assert!(
+                p.inter_bytes <= p.announced_inter_bytes,
+                "{mode}@{}: inter {} > announced {}",
+                p.tokens_per_gpu,
+                p.inter_bytes,
+                p.announced_inter_bytes
+            );
+        }
+    }
+    // the tentpole's payoff: coalescing strictly reduces NIC bytes at
+    // k=2 (duplicate remote-node rows cross once) on every live point
+    for f in pts.iter().filter(|p| p.mode == "flat" && !p.overflow) {
+        let h = pts
+            .iter()
+            .find(|p| p.mode == "hierarchical" && p.tokens_per_gpu == f.tokens_per_gpu)
+            .unwrap();
+        assert!(
+            h.inter_bytes < f.inter_bytes,
+            "@{} tokens/GPU: hierarchical {} must move fewer NIC bytes than flat {}",
+            f.tokens_per_gpu,
+            h.inter_bytes,
+            f.inter_bytes
+        );
+        assert!(
+            h.miv_bytes <= f.miv_bytes,
+            "@{} tokens/GPU: hierarchical MIV must not exceed flat's",
+            f.tokens_per_gpu
+        );
+    }
 }
 
 #[test]

@@ -7,7 +7,9 @@
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 
-use flashdmoe::config::{Config, CostModel, ModelConfig, RoutingPolicy, SystemConfig, WirePrecision};
+use flashdmoe::config::{
+    Config, CostModel, DispatchMode, ModelConfig, RoutingPolicy, SystemConfig, WirePrecision,
+};
 use flashdmoe::coordinator::scheduler::TaskQueue;
 use flashdmoe::coordinator::{MoeEngine, TaskGraphMode};
 use flashdmoe::expert::{generate_tokens, ModelParams};
@@ -283,6 +285,7 @@ fn dropless_engine_matches_dense_reference_under_fuzzed_skew() {
                     processors: 2,
                     packed: true,
                     wire: WirePrecision::F32,
+                    dispatch: DispatchMode::Flat,
                 },
                 cost: CostModel::h100_nvlink(),
             };
@@ -541,6 +544,73 @@ fn layout_offsets_are_injective() {
                     if a != b && dims.offset(*a) == dims.offset(*b) {
                         return Err(format!("offset collision: {a:?} vs {b:?}"));
                     }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Incast bound: measured inter-node bytes never exceed the announced volume
+// ---------------------------------------------------------------------------
+
+#[test]
+fn measured_inter_node_bytes_never_exceed_announced_volume() {
+    // Per pass and per rank, the dispatch loop announces its inter-node
+    // volume up front (per-tile bytes in flat mode, per-node coalesced
+    // unique bytes + combine returns in both). The NIC receive windows
+    // admit traffic against exactly that promise, so the *measured*
+    // inter-class byte counters must stay at or below the announced sum —
+    // over fuzzed token counts, top-k fan-outs and both dispatch modes.
+    // Engine-spawning cases are heavy (8 ranks x 4 nodes), so the fleet
+    // is small.
+    forall(
+        0x1CA57,
+        4,
+        |g| {
+            let tokens = g.choose(&[32usize, 48, 64]);
+            let hier = g.int(0, 1) == 1;
+            let k = g.choose(&[1usize, 2]);
+            let seed = g.int(0, 1 << 16) as u64;
+            (tokens, hier, k, seed)
+        },
+        |&(tokens, hier, k, seed)| {
+            let mut cfg =
+                flashdmoe::harness::multinode_config(tokens).map_err(|e| e.to_string())?;
+            cfg.set("dispatch", if hier { "hier" } else { "flat" })
+                .map_err(|e| e.to_string())?;
+            cfg.set("k", &k.to_string()).map_err(|e| e.to_string())?;
+            cfg.validate().map_err(|e| e.to_string())?;
+            let params = Arc::new(ModelParams::generate(&cfg, seed));
+            let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+            let inputs: Vec<Vec<f32>> =
+                (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, seed, r)).collect();
+            let engine =
+                MoeEngine::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused)
+                    .map_err(|e| e.to_string())?;
+            for pass in 0..2 {
+                let res = engine.forward(&inputs).map_err(|e| e.to_string())?;
+                let m = &res.metrics;
+                if m.inter_bytes() > m.announced_inter_bytes() {
+                    return Err(format!(
+                        "pass {pass} ({tokens} tok, hier={hier}, k={k}): measured inter {} \
+                         exceeds announced {}",
+                        m.inter_bytes(),
+                        m.announced_inter_bytes()
+                    ));
+                }
+                // the measured MIV is a max over ranks of the same counters,
+                // so it is bounded by the pass-wide inter sum
+                if m.miv_bytes() > m.inter_bytes() {
+                    return Err(format!(
+                        "pass {pass}: MIV {} exceeds total inter bytes {}",
+                        m.miv_bytes(),
+                        m.inter_bytes()
+                    ));
+                }
+                if cfg.system.dispatch.is_hierarchical() && m.inter_bytes() == 0 {
+                    return Err("hierarchical pass moved zero inter-node bytes?".into());
                 }
             }
             Ok(())
