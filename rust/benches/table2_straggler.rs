@@ -1,5 +1,21 @@
 //! Table 2 / Fig 15 — straggler delay within synchronous AllToAll
-//! (commercial VM vs supercomputer jitter profiles).
+//! (commercial VM vs supercomputer jitter profiles), plus the PR-7
+//! replication A/B that attacks the same pathology on the live engine:
+//! under Zipf skew one rank's experts go hot and every synchronous step
+//! waits for it; EWMA-driven hot-expert replication shards that load
+//! across replica slots without changing a single output bit (bitwise
+//! equality and dense-reference conformance are asserted inside the
+//! harness).
+//!
+//! Emits `BENCH_pr7_replication.json` (section `replication_ab`) for the
+//! CI artifact upload. With `PERF_SMOKE=1` the run FAILS unless the
+//! replicated arm beats the static arm on at least one of the two
+//! skew-pain metrics — hot-rank busy-time share or serving p99 — the
+//! harness only reports the numbers (it asserts correctness, not the
+//! ordering), so this gate is the live CI check that replication
+//! actually pays.
+//!
+//!     cargo bench --bench table2_straggler
 fn main() {
     let (text, reports) = flashdmoe::harness::table2(42);
     println!("{text}");
@@ -8,5 +24,51 @@ fn main() {
             "{}: mean {:.2}x, max {:.2}x over {} steps",
             r.platform.name, r.summary.mean, r.summary.max, r.summary.n
         );
+    }
+
+    let (text, pts) = flashdmoe::harness::replication_ab(42).unwrap();
+    println!("{text}");
+
+    flashdmoe::harness::update_bench_json(
+        "BENCH_pr7_replication.json",
+        "replication_ab",
+        flashdmoe::harness::replication_json(&pts),
+    )
+    .unwrap();
+    println!("wrote BENCH_pr7_replication.json (section replication_ab)");
+
+    let perf_smoke = std::env::var("PERF_SMOKE").map(|v| v == "1").unwrap_or(false);
+    if perf_smoke {
+        let stat = pts.iter().find(|p| p.arm == "static").expect("static arm");
+        let repl = pts.iter().find(|p| p.arm == "replicated").expect("replicated arm");
+        let mut failed = false;
+        if repl.replica_hits == 0 {
+            eprintln!("PERF_SMOKE FAIL: replicated arm served zero rows from replica slots");
+            failed = true;
+        }
+        let busy_better = repl.hot_rank_busy_share < stat.hot_rank_busy_share;
+        let p99_better = repl.serving_p99 < stat.serving_p99;
+        if busy_better || p99_better {
+            println!(
+                "PERF_SMOKE ok: hot-rank busy share {:.1}% -> {:.1}%, serving p99 {:.2}ms -> {:.2}ms",
+                stat.hot_rank_busy_share * 100.0,
+                repl.hot_rank_busy_share * 100.0,
+                stat.serving_p99 * 1e3,
+                repl.serving_p99 * 1e3,
+            );
+        } else {
+            eprintln!(
+                "PERF_SMOKE FAIL: replication improved neither hot-rank busy share \
+                 ({:.1}% -> {:.1}%) nor serving p99 ({:.2}ms -> {:.2}ms) under Zipf skew",
+                stat.hot_rank_busy_share * 100.0,
+                repl.hot_rank_busy_share * 100.0,
+                stat.serving_p99 * 1e3,
+                repl.serving_p99 * 1e3,
+            );
+            failed = true;
+        }
+        if failed {
+            std::process::exit(1);
+        }
     }
 }

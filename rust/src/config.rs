@@ -54,6 +54,27 @@
 //! * `nic_delay` = `true|false` — inject real `latency + bytes/bw` delay
 //!   per NIC transfer into the live engine (calibrated-sim mode).
 //!
+//! ## Replication knobs
+//!
+//! [`ReplicationPolicy`] governs hot-expert replication (ROADMAP item 2):
+//! the engine tracks an EWMA of per-expert *offered* load across passes
+//! and, between passes, installs replicas of the hottest experts into
+//! spare expert slots on underloaded ranks
+//! (`crate::placement::plan_replication`); the gate then shards those
+//! experts' tokens across their serving locations. All knobs flow
+//! through [`Config::set`]:
+//!
+//! * `replicate_top` (alias `top_r`) — how many of the hottest experts
+//!   are eligible for replication; `0` (the default) disables the whole
+//!   subsystem and also sizes zero replica slots, so static engines pay
+//!   no heap/flag overhead.
+//! * `replicas` — target serving copies per hot expert, primary
+//!   included (so `2` means one replica); clamped to `ranks`.
+//! * `replication_hysteresis` — an expert enters replication while its
+//!   EWMA load ≥ `hysteresis × mean`, and its replicas are only torn
+//!   down below half that, so borderline experts don't flap.
+//! * `ewma_alpha` — smoothing factor of the load tracker in `(0, 1]`.
+//!
 //! [`MoeService`]: crate::coordinator::MoeService
 //! [`BatchPolicy`]: crate::coordinator::BatchPolicy
 //! [`BatchPolicy::from_config`]: crate::coordinator::BatchPolicy::from_config
@@ -197,6 +218,63 @@ impl DispatchMode {
     }
 }
 
+/// Hot-expert replication policy (ROADMAP item 2; grounded in "Fast MoE
+/// Inference via Predictive Prefetching and Expert Replication",
+/// PAPERS.md).
+///
+/// When [`enabled`](Self::enabled), every rank reserves
+/// [`top_r`](Self::top_r) spare *replica slots* next to its owned expert
+/// slots (heap regions, signal flags and announcement lanes are sized at
+/// engine start exactly like owned slots), and
+/// [`MoeEngine::rebalance`](crate::coordinator::MoeEngine::rebalance)
+/// may bind a hot expert into such a slot between passes — epoch-fenced,
+/// so no in-flight pass ever observes a placement change. The gate's
+/// dispatch plan then shards a replicated expert's tokens across its
+/// serving locations deterministically (arrival index modulo copy
+/// count), which keeps outputs bitwise identical to static placement.
+///
+/// Disabled by default (`top_r == 0`): the static block placement of
+/// `Config::owner_of` with zero slot overhead.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplicationPolicy {
+    /// How many of the hottest experts may hold replicas (0 disables);
+    /// also the number of spare replica slots reserved per rank.
+    pub top_r: usize,
+    /// Target serving copies per hot expert, primary included; values
+    /// below 2 make replication a no-op, values above `ranks` clamp.
+    pub replicas: usize,
+    /// Enter threshold multiplier: replicate expert `e` while its EWMA
+    /// offered load ≥ `hysteresis × mean`; tear down only below half
+    /// that (the hysteresis band that prevents flapping).
+    pub hysteresis: f64,
+    /// EWMA smoothing factor in `(0, 1]`: the weight of the newest
+    /// pass's observation.
+    pub ewma_alpha: f64,
+}
+
+impl Default for ReplicationPolicy {
+    fn default() -> Self {
+        Self { top_r: 0, replicas: 2, hysteresis: 1.5, ewma_alpha: 0.3 }
+    }
+}
+
+impl ReplicationPolicy {
+    /// True when the policy can ever install a replica.
+    pub fn enabled(&self) -> bool {
+        self.top_r > 0 && self.replicas >= 2
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(self.hysteresis.is_finite() && self.hysteresis >= 1.0) {
+            bail!("replication_hysteresis must be finite and >= 1.0, got {}", self.hysteresis);
+        }
+        if !(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0) {
+            bail!("ewma_alpha must be in (0, 1], got {}", self.ewma_alpha);
+        }
+        Ok(())
+    }
+}
+
 /// How the router treats per-expert load.
 ///
 /// * [`Capacity`](RoutingPolicy::Capacity) — the paper's §3.2.1 contract:
@@ -312,6 +390,9 @@ pub struct SystemConfig {
     /// (and harmless) on single-node topologies, where every link is
     /// NVLink-class.
     pub dispatch: DispatchMode,
+    /// Hot-expert replication policy (see [`ReplicationPolicy`]); the
+    /// default disables replication and reserves no replica slots.
+    pub replication: ReplicationPolicy,
 }
 
 /// Hardware cost model for the simulator, calibrated by `flashdmoe
@@ -532,6 +613,7 @@ impl Config {
                     packed: true,
                     wire: WirePrecision::F32,
                     dispatch: DispatchMode::Flat,
+                    replication: ReplicationPolicy::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -553,6 +635,7 @@ impl Config {
                     packed: true,
                     wire: WirePrecision::F32,
                     dispatch: DispatchMode::Flat,
+                    replication: ReplicationPolicy::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -574,6 +657,7 @@ impl Config {
                     packed: true,
                     wire: WirePrecision::F32,
                     dispatch: DispatchMode::Flat,
+                    replication: ReplicationPolicy::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -596,6 +680,7 @@ impl Config {
                     packed: true,
                     wire: WirePrecision::F32,
                     dispatch: DispatchMode::Flat,
+                    replication: ReplicationPolicy::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -618,6 +703,7 @@ impl Config {
                     packed: true,
                     wire: WirePrecision::F32,
                     dispatch: DispatchMode::Flat,
+                    replication: ReplicationPolicy::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -644,6 +730,7 @@ impl Config {
                     packed: true,
                     wire: WirePrecision::F32,
                     dispatch: DispatchMode::Hierarchical,
+                    replication: ReplicationPolicy::default(),
                 },
                 cost: CostModel { nic_buffer: 32.0 * 1024.0 * 1024.0, ..CostModel::h100_nvlink() },
             },
@@ -655,6 +742,7 @@ impl Config {
 
     pub fn validate(&self) -> Result<()> {
         self.system.validate()?;
+        self.system.replication.validate()?;
         let m = &self.model;
         m.policy.validate()?;
         if m.e % self.system.ranks != 0 {
@@ -677,9 +765,24 @@ impl Config {
         self.model.e / self.system.ranks
     }
 
-    /// Owning rank of global expert `e`.
+    /// Owning rank of global expert `e` — the *primary* location. Under
+    /// an enabled [`ReplicationPolicy`] a hot expert may additionally be
+    /// served from replica slots on other ranks; the dynamic map is
+    /// `crate::placement::Placement` (whose `owner_of` agrees with this).
     pub fn owner_of(&self, e: usize) -> usize {
         e / self.local_experts()
+    }
+
+    /// Spare replica expert slots per rank: `replicate_top` when the
+    /// replication policy is enabled, else 0. Every layout/flag/announce
+    /// table sizes its expert dimension as `local_experts() +
+    /// replica_slots()`.
+    pub fn replica_slots(&self) -> usize {
+        if self.system.replication.enabled() {
+            self.system.replication.top_r
+        } else {
+            0
+        }
     }
 
     /// Apply a `key=value` override (used by the CLI and config files).
@@ -725,6 +828,13 @@ impl Config {
                 Some(m) => self.system.dispatch = m,
                 None => bail!("{key}={value}: expected 'flat' or 'hier'/'hierarchical'"),
             },
+            // Hot-expert replication knobs (see ReplicationPolicy).
+            "replicate_top" | "top_r" => self.system.replication.top_r = u()?,
+            "replicas" => self.system.replication.replicas = u()?,
+            "replication_hysteresis" | "hysteresis" => {
+                self.system.replication.hysteresis = f()?
+            }
+            "ewma_alpha" => self.system.replication.ewma_alpha = f()?,
             "launch_overhead" => self.cost.launch_overhead = f()?,
             "flops_per_processor" => self.cost.flops_per_processor = f()?,
             "intra_bw" => self.cost.intra_bw = f()?,
@@ -1036,6 +1146,39 @@ mod tests {
         assert!(!cfg.cost.nic_delay);
         assert!(cfg.set("nic_delay", "maybe").is_err());
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn replication_knobs_parse_and_default_off() {
+        let mut cfg = Config::preset("tiny").unwrap();
+        assert!(!cfg.system.replication.enabled(), "replication is opt-in");
+        assert_eq!(cfg.replica_slots(), 0, "disabled policy sizes no slots");
+        cfg.set("replicate_top", "2").unwrap();
+        assert!(cfg.system.replication.enabled());
+        assert_eq!(cfg.replica_slots(), 2);
+        cfg.set("replicas", "3").unwrap();
+        assert_eq!(cfg.system.replication.replicas, 3);
+        cfg.set("replication_hysteresis", "2.0").unwrap();
+        assert_eq!(cfg.system.replication.hysteresis, 2.0);
+        cfg.set("ewma_alpha", "0.5").unwrap();
+        assert_eq!(cfg.system.replication.ewma_alpha, 0.5);
+        cfg.validate().unwrap();
+        // alias spellings
+        cfg.set("top_r", "1").unwrap();
+        assert_eq!(cfg.system.replication.top_r, 1);
+        cfg.set("hysteresis", "1.25").unwrap();
+        assert_eq!(cfg.system.replication.hysteresis, 1.25);
+        // replicas < 2 makes the policy inert even with top_r set
+        cfg.set("replicas", "1").unwrap();
+        assert!(!cfg.system.replication.enabled());
+        assert_eq!(cfg.replica_slots(), 0);
+        // degenerate values are rejected by validate()
+        cfg.set("replicas", "2").unwrap();
+        for (k, v) in [("ewma_alpha", "0"), ("ewma_alpha", "1.5"), ("hysteresis", "0.5")] {
+            let mut bad = cfg.clone();
+            bad.set(k, v).unwrap();
+            assert!(bad.validate().is_err(), "{k}={v} must fail validation");
+        }
     }
 
     #[test]

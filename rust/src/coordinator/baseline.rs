@@ -24,6 +24,7 @@ use anyhow::{Context, Result};
 use crate::config::Config;
 use crate::expert::ModelParams;
 use crate::gate::{dispatch_plan, route_from_scores};
+use crate::placement::Placement;
 use crate::runtime::ComputeBackend;
 
 /// Metrics of one bulk-synchronous pass.
@@ -46,12 +47,29 @@ pub struct BaselineResult {
     pub metrics: BaselineMetrics,
 }
 
-/// Bulk-synchronous MoE forward over the same substrate as the flash path.
+/// Bulk-synchronous MoE forward over the same substrate as the flash
+/// path, under the static block placement (`Placement::from_config`).
 pub fn forward_sequential(
     cfg: &Config,
     params: &Arc<ModelParams>,
     backend: &Arc<dyn ComputeBackend>,
     inputs: &[Vec<f32>],
+) -> Result<BaselineResult> {
+    forward_sequential_placed(cfg, params, backend, inputs, &Placement::from_config(cfg))
+}
+
+/// Bulk-synchronous MoE forward under an explicit expert→location
+/// [`Placement`] — the replication-aware variant the conformance tests
+/// drive against a replicated engine. Tokens of a replicated expert are
+/// sharded across its serving slots by the same deterministic gate-side
+/// splitter as the flash path (`dispatch_plan`), so outputs stay bitwise
+/// identical to the static-placement baseline.
+pub fn forward_sequential_placed(
+    cfg: &Config,
+    params: &Arc<ModelParams>,
+    backend: &Arc<dyn ComputeBackend>,
+    inputs: &[Vec<f32>],
+    placement: &Placement,
 ) -> Result<BaselineResult> {
     let ranks = cfg.system.ranks;
     anyhow::ensure!(inputs.len() == ranks);
@@ -63,7 +81,9 @@ pub fn forward_sequential(
     // the baseline keeps matching the flash path's function in both modes
     // (and pays dearly for it on the wire, which is the point).
     let capacity = cfg.model.slot_capacity(s_rank);
-    let e_local = cfg.local_experts();
+    // Expert *slots* per rank: owned block plus (possibly bound) replica
+    // slots — the exchange slabs cover both with no special cases.
+    let e_slots = cfg.local_experts() + placement.replica_slots();
 
     let barrier = Barrier::new(ranks);
     let launches = AtomicUsize::new(0);
@@ -76,14 +96,14 @@ pub fn forward_sequential(
     let expert_in: Vec<Vec<Vec<std::sync::Mutex<Vec<f32>>>>> = (0..ranks)
         .map(|_| {
             (0..ranks)
-                .map(|_| (0..e_local).map(|_| std::sync::Mutex::new(vec![0.0f32; capacity * h])).collect())
+                .map(|_| (0..e_slots).map(|_| std::sync::Mutex::new(vec![0.0f32; capacity * h])).collect())
                 .collect()
         })
         .collect();
     let combine_back: Vec<Vec<Vec<std::sync::Mutex<Vec<f32>>>>> = (0..ranks)
         .map(|_| {
             (0..ranks)
-                .map(|_| (0..e_local).map(|_| std::sync::Mutex::new(vec![0.0f32; capacity * h])).collect())
+                .map(|_| (0..e_slots).map(|_| std::sync::Mutex::new(vec![0.0f32; capacity * h])).collect())
                 .collect()
         })
         .collect();
@@ -114,43 +134,55 @@ pub fn forward_sequential(
                     let scores = backend.gate_scores(a, &params.wg, s_rank)?;
                     launches.fetch_add(1, Ordering::Relaxed);
                     let routing = route_from_scores(scores, s_rank, m, capacity);
-                    let plan = dispatch_plan(&routing, m.bm, |e| cfg.owner_of(e));
+                    let plan = dispatch_plan(&routing, m.bm, placement);
                     sync(barrier_nanos);
 
                     // phase 2: padded dispatch AllToAll — ships every active
-                    // (expert) capacity slab in full (one "launch" per peer,
-                    // the collective's chunked sends)
-                    let mut active = vec![false; m.e];
+                    // (dst rank, dst slot) capacity slab in full (one
+                    // "launch" per peer, the collective's chunked sends). A
+                    // replicated expert occupies one slab per serving
+                    // location; the plan already sharded its tokens.
+                    let mut active = vec![false; ranks * e_slots];
                     for t in &plan.tiles {
-                        active[t.expert as usize] = true;
+                        active[t.dst as usize * e_slots + t.dslot as usize] = true;
                     }
-                    for ex in 0..m.e {
-                        if !active[ex] {
-                            continue;
-                        }
-                        let owner = cfg.owner_of(ex);
-                        let e_loc = ex - owner * e_local;
-                        let mut slab = expert_in[owner][rank][e_loc].lock().unwrap();
-                        slab.fill(0.0);
-                        for t in plan.tiles.iter().filter(|t| t.expert as usize == ex) {
-                            for (row, &tok) in t.tokens.iter().enumerate() {
-                                let slot = t.tile as usize * m.bm + row;
-                                slab[slot * h..(slot + 1) * h]
-                                    .copy_from_slice(&a[tok as usize * h..(tok as usize + 1) * h]);
+                    for dst in 0..ranks {
+                        for sl in 0..e_slots {
+                            if !active[dst * e_slots + sl] {
+                                continue;
                             }
-                            valid_rows.fetch_add(t.rows as usize, Ordering::Relaxed);
+                            let mut slab = expert_in[dst][rank][sl].lock().unwrap();
+                            slab.fill(0.0);
+                            for t in plan
+                                .tiles
+                                .iter()
+                                .filter(|t| t.dst as usize == dst && t.dslot as usize == sl)
+                            {
+                                for (row, &tok) in t.tokens.iter().enumerate() {
+                                    let slot = t.tile as usize * m.bm + row;
+                                    slab[slot * h..(slot + 1) * h].copy_from_slice(
+                                        &a[tok as usize * h..(tok as usize + 1) * h],
+                                    );
+                                }
+                                valid_rows.fetch_add(t.rows as usize, Ordering::Relaxed);
+                            }
+                            sent_rows.fetch_add(capacity, Ordering::Relaxed);
                         }
-                        sent_rows.fetch_add(capacity, Ordering::Relaxed);
                     }
                     launches.fetch_add(ranks, Ordering::Relaxed); // NCCL send/recv chunks
                     sync(barrier_nanos);
 
-                    // phase 3: expert FFN — one grouped launch per local
-                    // expert over the full padded (ranks*capacity, H) buffer
+                    // phase 3: expert FFN — one grouped launch per *bound*
+                    // expert slot over the full padded (ranks*capacity, H)
+                    // buffer; unbound replica slots hold no expert and run
+                    // nothing
                     let mut scratch = vec![0.0f32; m.bm * d];
-                    let mut expert_out: Vec<Vec<f32>> = Vec::with_capacity(e_local);
-                    for e_loc in 0..e_local {
-                        let global_e = rank * e_local + e_loc;
+                    let mut expert_out: Vec<Vec<f32>> = Vec::with_capacity(e_slots);
+                    for e_loc in 0..e_slots {
+                        let Some(global_e) = placement.expert_on(rank, e_loc) else {
+                            expert_out.push(Vec::new());
+                            continue;
+                        };
                         let mut out = vec![0.0f32; ranks * capacity * h];
                         for src in 0..ranks {
                             let slab = expert_in[rank][src][e_loc].lock().unwrap();
@@ -173,7 +205,10 @@ pub fn forward_sequential(
                     sync(barrier_nanos);
 
                     // phase 4: padded combine AllToAll back to sources
-                    for e_loc in 0..e_local {
+                    for e_loc in 0..e_slots {
+                        if expert_out[e_loc].is_empty() {
+                            continue; // unbound replica slot
+                        }
                         for src in 0..ranks {
                             let mut slab = combine_back[src][rank][e_loc].lock().unwrap();
                             slab.copy_from_slice(
@@ -185,12 +220,12 @@ pub fn forward_sequential(
                     launches.fetch_add(ranks, Ordering::Relaxed);
                     sync(barrier_nanos);
 
-                    // phase 5: combine/scale (one launch)
+                    // phase 5: combine/scale (one launch) — keyed by the
+                    // (serving rank, serving slot) each tile dispatched to
                     let mut out = vec![0.0f32; s_rank * h];
                     for t in &plan.tiles {
-                        let owner = cfg.owner_of(t.expert as usize);
-                        let e_loc = t.expert as usize - owner * e_local;
-                        let slab = combine_back[rank][owner][e_loc].lock().unwrap();
+                        let slab =
+                            combine_back[rank][t.dst as usize][t.dslot as usize].lock().unwrap();
                         for (row, (&tok, &w)) in t.tokens.iter().zip(&t.weights).enumerate() {
                             let slot = t.tile as usize * m.bm + row;
                             let src = &slab[slot * h..(slot + 1) * h];

@@ -48,6 +48,7 @@ use crate::config::Config;
 use crate::expert::ModelParams;
 use crate::fabric::SymmetricHeap;
 use crate::layout::LayoutDims;
+use crate::placement::{plan_replication, Placement};
 use crate::runtime::ComputeBackend;
 use crate::transport::NodeFabric;
 
@@ -121,6 +122,10 @@ struct SlotState {
     inputs: Option<Arc<Vec<Vec<f32>>>>,
     outputs: Vec<Option<Result<RankOutput>>>,
     deposited: usize,
+    /// Placement version the occupying pass was submitted under —
+    /// `rebalance` fences on drained slots, so this is also the version
+    /// the pass *ran* under. Stamped into `PassMetrics`.
+    placement_version: u64,
 }
 
 struct Submission {
@@ -220,6 +225,7 @@ impl MoeEngine {
                     inputs: None,
                     outputs: Vec::new(),
                     deposited: 0,
+                    placement_version: 0,
                 }),
                 cv: Condvar::new(),
             }),
@@ -264,6 +270,97 @@ impl MoeEngine {
         let mut m = self.inner.metrics.lock().unwrap().clone();
         m.threads_spawned = self.shared.threads_spawned.load(Ordering::Relaxed);
         m
+    }
+
+    /// Snapshot of the live expert→location placement.
+    pub fn placement(&self) -> Arc<Placement> {
+        self.shared.placement()
+    }
+
+    /// Re-plan hot-expert replication from the EWMA load tracker and, if
+    /// the plan changed, install the new placement. Returns whether a
+    /// swap happened. No-op (`Ok(false)`) when the policy is disabled or
+    /// no pass has been observed yet.
+    ///
+    /// **Epoch fence**: the placement may only change with no pass in
+    /// flight — a pass snapshots the map once at its start, and a swap
+    /// mid-pass would desynchronize ranks. `rebalance` holds the epoch
+    /// lock (blocking new submits) and waits for every occupied pass
+    /// slot to finish depositing before swapping, so it runs strictly
+    /// *between* passes. Replica weight installs are modeled accounting
+    /// (`EngineMetrics::{replica_installs, install_bytes}`): the
+    /// in-process backend packed every expert at `start`, so a new
+    /// binding needs no data movement here — but the placement swap is
+    /// still the real synchronization point a hardware port would fence
+    /// its weight copies on.
+    pub fn rebalance(&self) -> Result<bool> {
+        let policy = &self.shared.cfg.system.replication;
+        if !policy.enabled() {
+            return Ok(false);
+        }
+        // Hold the epoch lock for the whole swap: no new epoch can be
+        // assigned while we fence and swap. Then wait until every
+        // *assigned* epoch has fully deposited — per slot, the last
+        // assigned epoch must be freed, or occupying the slot with all
+        // rank outputs in. (Checking only "slot drained" would miss an
+        // epoch whose submitter is still waiting to install it; that
+        // pass would then run concurrently with the swap and its ranks
+        // could snapshot different placement versions.)
+        let turnstile = self.next_epoch.lock().unwrap();
+        let latest = *turnstile - 1;
+        for (i, slot) in self.inner.slots.iter().enumerate() {
+            if latest == 0 {
+                break; // nothing ever submitted
+            }
+            // greatest assigned epoch that maps to slot i (epochs are
+            // 1-based and strike slots round-robin by `epoch % SLOTS`)
+            let lag = (latest as usize + PASS_SLOTS - i) % PASS_SLOTS;
+            let last = latest - lag as u64;
+            if last == 0 {
+                continue;
+            }
+            let mut st = slot.state.lock().unwrap();
+            while !(st.freed == last
+                || (st.epoch == last && st.deposited >= self.inner.ranks))
+            {
+                st = slot.cv.wait(st).unwrap();
+            }
+        }
+        let current = self.shared.placement();
+        let proposed = {
+            let tracker = self.shared.tracker.lock().unwrap();
+            plan_replication(policy, &tracker, &current)
+        };
+        if proposed.same_locations(&current) {
+            return Ok(false);
+        }
+        // Book the weight movement: every (expert, rank) serving pair
+        // that is new in the proposed map is one expert-install onto
+        // that rank; every pair that vanished is a removal.
+        let (mut installs, mut removals, mut bytes) = (0u64, 0u64, 0u64);
+        for ex in 0..proposed.num_experts() {
+            let old = current.locations(ex);
+            let new = proposed.locations(ex);
+            for &(r, _) in new {
+                if !old.iter().any(|&(or, _)| or == r) {
+                    installs += 1;
+                    bytes += self.shared.params.experts[ex].size_bytes() as u64;
+                }
+            }
+            for &(r, _) in old {
+                if !new.iter().any(|&(nr, _)| nr == r) {
+                    removals += 1;
+                }
+            }
+        }
+        {
+            let mut em = self.inner.metrics.lock().unwrap();
+            em.replica_installs += installs;
+            em.replica_removals += removals;
+            em.install_bytes += bytes;
+        }
+        self.shared.set_placement(Arc::new(proposed));
+        Ok(true)
     }
 
     /// Submit one fixed-shape, epoch-tagged forward pass: `inputs[r]` is
@@ -353,6 +450,7 @@ impl MoeEngine {
             st.inputs = Some(Arc::new(input.per_rank));
             st.outputs = (0..self.inner.ranks).map(|_| None).collect();
             st.deposited = 0;
+            st.placement_version = self.shared.placement().version();
             // wake rank actors (and same-slot submitters) waiting for the
             // install
             slot.cv.notify_all();
@@ -465,6 +563,7 @@ fn assemble(inner: &Arc<EngineInner>, st: &mut SlotState) -> Result<ForwardResul
         epoch,
         rows_capacity: inner.ranks * inner.s_rank,
         wire: inner.wire,
+        placement_version: st.placement_version,
         ..Default::default()
     };
     for (rank, ro) in rank_outputs.into_iter().enumerate() {
@@ -484,6 +583,28 @@ fn assemble(inner: &Arc<EngineInner>, st: &mut SlotState) -> Result<ForwardResul
         em.busy_secs += metrics.ranks.iter().map(|r| r.busy_secs).sum::<f64>();
     }
     Ok(ForwardResult { outputs, metrics })
+}
+
+/// Fold one fully-deposited pass into the shared EWMA load tracker:
+/// per-expert *offered* load (un-clamped gate demand, summed over ranks)
+/// plus per-rank busy seconds. Called by the last depositing rank under
+/// the slot lock; skipped entirely when replication is off.
+fn observe_pass(shared: &EngineShared, st: &SlotState) {
+    if !shared.cfg.system.replication.enabled() {
+        return;
+    }
+    let e = shared.cfg.model.e;
+    let mut offered = vec![0u64; e];
+    let mut busy = vec![0.0f64; shared.cfg.system.ranks];
+    for (rank, out) in st.outputs.iter().enumerate() {
+        if let Some(Ok(ro)) = out {
+            for (i, &v) in ro.metrics.expert_offered.iter().take(e).enumerate() {
+                offered[i] += v;
+            }
+            busy[rank] = ro.metrics.busy_secs;
+        }
+    }
+    shared.tracker.lock().unwrap().observe(&offered, &busy);
 }
 
 /// A rank actor's main thread: spawn the resident worker group once, then
@@ -542,6 +663,11 @@ fn rank_main(shared: Arc<EngineShared>, inner: Arc<EngineInner>, rank: usize) {
             st.outputs[rank] = Some(result);
             st.deposited += 1;
             if st.deposited == inner.ranks {
+                // Last depositor feeds the replication tracker with the
+                // pass's offered-load signal, before waiters wake — so a
+                // `wait()` → `rebalance()` sequence always sees this
+                // pass's observation.
+                observe_pass(&shared, &st);
                 slot.cv.notify_all();
             }
         }

@@ -80,6 +80,18 @@ pub struct RankMetrics {
     /// stat: high steals mean the round-robin deal was imbalanced or a
     /// processor ran dry while a peer was backed up.
     pub steals: u32,
+    /// Tokens this rank's gate *offered* to each global expert (kept +
+    /// dropped, length E) — the pre-clamp demand histogram the
+    /// replication EWMA tracker consumes. Empty for a rank that routed
+    /// nothing.
+    pub expert_offered: Vec<u64>,
+    /// Tokens this rank's gate kept (post capacity clamp) per global
+    /// expert, length E. Empty for a rank that routed nothing.
+    pub expert_kept: Vec<u64>,
+    /// FFN rows this rank executed out of *replica* slots (slots bound by
+    /// the placement rather than owned) — the replica-hit counter: > 0
+    /// means replication actually absorbed load here.
+    pub replica_rows: u64,
 }
 
 impl RankMetrics {
@@ -120,6 +132,10 @@ pub struct PassMetrics {
     /// Wire element format the pass ran under (stamps the byte counters:
     /// `bytes_in_*` are measured at this width).
     pub wire: WirePrecision,
+    /// Version of the [`Placement`](crate::placement::Placement) the pass
+    /// ran under (0 = the static block placement; bumps on every replica
+    /// install/teardown).
+    pub placement_version: u64,
     pub ranks: Vec<RankMetrics>,
 }
 
@@ -165,14 +181,87 @@ impl PassMetrics {
     }
 
     /// What the same routed rows would have cost on a 4-byte f32 wire:
-    /// the denominator of the payload-narrowing factor. Exact, because
-    /// measured bytes are always `rows × H × wire.bytes()`.
+    /// the denominator of the payload-narrowing factor. Derived by
+    /// re-scaling the measured bytes from the wire width to 4 bytes/elem;
+    /// the division must be exact (measured bytes are always
+    /// `rows × H × wire.bytes()`), and a truncating remainder would
+    /// silently skew the Fig 18 narrowing ratio — so divisibility is
+    /// asserted rather than assumed.
     pub fn fp32_equiv_bytes(&self) -> u64 {
-        self.total_bytes() / self.wire.bytes() as u64 * 4
+        let bytes = self.total_bytes();
+        let wb = self.wire.bytes() as u64;
+        debug_assert_eq!(
+            bytes % wb,
+            0,
+            "measured bytes {bytes} not divisible by wire width {wb} — a transfer \
+             accounted at the wrong granularity would corrupt the fp32-equivalent ratio"
+        );
+        bytes / wb * 4
     }
 
     pub fn total_dropped(&self) -> usize {
         self.ranks.iter().map(|r| r.dropped).sum()
+    }
+
+    /// Pass-wide *offered* load per global expert: the element-wise sum of
+    /// every rank's pre-clamp demand histogram
+    /// ([`RankMetrics::expert_offered`]). Sums to `rows_submitted × k`;
+    /// this is the observation the replication EWMA tracker folds in
+    /// after each pass.
+    pub fn expert_offered(&self) -> Vec<u64> {
+        let e = self.ranks.iter().map(|r| r.expert_offered.len()).max().unwrap_or(0);
+        let mut out = vec![0u64; e];
+        for r in &self.ranks {
+            for (o, &x) in out.iter_mut().zip(&r.expert_offered) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    /// Pass-wide *kept* load per global expert (post capacity clamp).
+    pub fn expert_kept(&self) -> Vec<u64> {
+        let e = self.ranks.iter().map(|r| r.expert_kept.len()).max().unwrap_or(0);
+        let mut out = vec![0u64; e];
+        for r in &self.ranks {
+            for (o, &x) in out.iter_mut().zip(&r.expert_kept) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    /// Busy-time imbalance across ranks: max rank busy-seconds over the
+    /// mean (1.0 = perfectly balanced; the straggler factor replication
+    /// exists to shrink). 0.0 when nothing ran.
+    pub fn imbalance(&self) -> f64 {
+        if self.ranks.is_empty() {
+            return 0.0;
+        }
+        let mean = self.ranks.iter().map(|r| r.busy_secs).sum::<f64>() / self.ranks.len() as f64;
+        if mean <= 0.0 {
+            return 0.0;
+        }
+        self.ranks.iter().map(|r| r.busy_secs).fold(0.0, f64::max) / mean
+    }
+
+    /// The hottest rank's share of total busy time this pass, in
+    /// `[1/ranks, 1.0]` — `1/ranks` is perfect balance, `1.0` means one
+    /// rank did all the work (the serialized-hot-expert regime). This is
+    /// the replication A/B's primary balance metric: unlike wall-clock it
+    /// is immune to scheduler noise. 0.0 when nothing ran.
+    pub fn hot_rank_busy_share(&self) -> f64 {
+        let total: f64 = self.ranks.iter().map(|r| r.busy_secs).sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.ranks.iter().map(|r| r.busy_secs).fold(0.0, f64::max) / total
+    }
+
+    /// FFN rows served out of replica slots this pass, summed over ranks
+    /// (> 0 iff installed replicas actually absorbed load).
+    pub fn replica_hits(&self) -> u64 {
+        self.ranks.iter().map(|r| r.replica_rows).sum()
     }
 
     /// Intra-node (NVLink-class) bytes moved this pass, summed over ranks.
@@ -235,6 +324,15 @@ pub struct EngineMetrics {
     pub busy_secs: f64,
     /// Cumulative pass wall seconds (sum of per-pass maxima).
     pub wall_secs: f64,
+    /// Replica installs performed by `MoeEngine::rebalance` over the
+    /// engine's life (each one epoch-fenced between passes).
+    pub replica_installs: u64,
+    /// Replica removals performed by `rebalance`.
+    pub replica_removals: u64,
+    /// Packed-weight bytes copied by replica installs (modeled from the
+    /// packed expert size; the in-process backend shares one packed
+    /// cache, so this counts what a multi-device install would ship).
+    pub install_bytes: u64,
 }
 
 impl EngineMetrics {
@@ -433,6 +531,41 @@ mod tests {
     }
 
     #[test]
+    fn expert_load_and_balance_aggregations() {
+        let p = PassMetrics {
+            ranks: vec![
+                RankMetrics {
+                    busy_secs: 3.0,
+                    expert_offered: vec![10, 2, 0, 0],
+                    expert_kept: vec![8, 2, 0, 0],
+                    replica_rows: 0,
+                    ..Default::default()
+                },
+                RankMetrics {
+                    busy_secs: 1.0,
+                    expert_offered: vec![5, 1, 1, 1],
+                    expert_kept: vec![4, 1, 1, 1],
+                    replica_rows: 6,
+                    ..Default::default()
+                },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(p.expert_offered(), vec![15, 3, 1, 1]);
+        assert_eq!(p.expert_kept(), vec![12, 3, 1, 1]);
+        // busy: max 3.0, mean 2.0, total 4.0
+        assert!((p.imbalance() - 1.5).abs() < 1e-12);
+        assert!((p.hot_rank_busy_share() - 0.75).abs() < 1e-12);
+        assert_eq!(p.replica_hits(), 6);
+        // a routing-only rank (empty histograms) aggregates harmlessly
+        let empty = PassMetrics::default();
+        assert!(empty.expert_offered().is_empty());
+        assert_eq!(empty.imbalance(), 0.0);
+        assert_eq!(empty.hot_rank_busy_share(), 0.0);
+        assert_eq!(empty.replica_hits(), 0);
+    }
+
+    #[test]
     fn engine_metrics_amortize_launches() {
         let m = EngineMetrics {
             launches: 1,
@@ -440,6 +573,7 @@ mod tests {
             threads_spawned: 10,
             busy_secs: 30.0,
             wall_secs: 10.0,
+            ..Default::default()
         };
         assert!((m.launches_per_pass() - 0.02).abs() < 1e-12);
         assert!((m.steady_state_utilization(6) - 0.5).abs() < 1e-12);

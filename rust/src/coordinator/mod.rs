@@ -38,7 +38,9 @@
 //!   passes, scatter-gather back to per-request results.
 //! * [`engine`]    — the persistent [`MoeEngine`] underneath: epoch-tagged
 //!   `submit`/`submit_pass`/`wait`, double-buffered pass slots,
-//!   variable-shape [`PassInput`] passes, shutdown/join.
+//!   variable-shape [`PassInput`] passes, the epoch-fenced
+//!   `rebalance` quiet point that installs hot-expert replicas between
+//!   passes (EWMA load tracker + `crate::placement`), shutdown/join.
 //! * [`scheduler`] — the per-processor work-stealing ready pool +
 //!   interrupt plumbing (Alg. 3), reusable across passes (`stop_all`
 //!   parks a pass, `reopen` re-arms).
@@ -63,6 +65,7 @@ pub mod rank;
 pub mod scheduler;
 pub mod service;
 
+pub use baseline::{forward_sequential, forward_sequential_placed, BaselineResult};
 pub use engine::{ForwardResult, MoeEngine, PassHandle, PassInput};
 pub use metrics::{EngineMetrics, PassMetrics, RankMetrics, ServiceMetrics};
 pub use moe::DistributedMoE;

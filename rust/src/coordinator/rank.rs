@@ -70,6 +70,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::config::Config;
 use crate::expert::ModelParams;
 use crate::gate::{dispatch_plan, route_from_scores, DispatchPlan};
+use crate::placement::{LoadTracker, Placement};
 use crate::transport::{NodeFabric, Transport};
 use crate::layout::{Coord, LayoutDims};
 use crate::runtime::ComputeBackend;
@@ -139,6 +140,19 @@ pub struct EngineShared {
     /// OS threads ever spawned under this engine. Grows only during
     /// `MoeEngine::start`; a steady-state pass spawns nothing.
     pub threads_spawned: AtomicU64,
+    /// The live expert→location placement every pass consults: the
+    /// dispatch plan reads it to split hot experts over replicas, and
+    /// task execution reads it to resolve which expert a replica slot is
+    /// serving. Swapped whole-`Arc` by `MoeEngine::rebalance` *between*
+    /// passes only (the epoch fence guarantees no pass is in flight
+    /// during a swap), so every rank of a given pass snapshots the same
+    /// version at pass start.
+    pub placement: Mutex<Arc<Placement>>,
+    /// Per-expert offered-load EWMA feeding the replication planner.
+    /// The engine observes each pass's `expert_offered` histogram here;
+    /// `rebalance` consumes it. Separate lock from `placement` — the
+    /// tracker is written every pass, the placement only at rebalance.
+    pub tracker: Mutex<LoadTracker>,
 }
 
 impl EngineShared {
@@ -152,7 +166,12 @@ impl EngineShared {
         let capacity = cfg.model.slot_capacity(cfg.system.s_rank);
         let dims = LayoutDims::from_config(&cfg);
         let ranks = cfg.system.ranks;
-        let e_local = cfg.local_experts();
+        // `dims.e_local` counts expert *slots* (owned + replica), so the
+        // announce tables cover replica traffic with no special cases.
+        let e_slots = dims.e_local;
+        let placement = Arc::new(Placement::from_config(&cfg));
+        let tracker =
+            LoadTracker::new(cfg.model.e, ranks, cfg.system.replication.ewma_alpha);
         Self {
             cfg,
             capacity,
@@ -162,18 +181,31 @@ impl EngineShared {
             backend,
             mode,
             expected_dispatch: (0..ranks).map(|_| AtomicU32::new(0)).collect(),
-            announced_tiles: (0..ranks * ranks * e_local).map(|_| AtomicU32::new(0)).collect(),
+            announced_tiles: (0..ranks * ranks * e_slots).map(|_| AtomicU32::new(0)).collect(),
             announced: AtomicU32::new(0),
             pass_poisoned: AtomicU32::new(0),
             start: Barrier::new(ranks),
             threads_spawned: AtomicU64::new(0),
+            placement: Mutex::new(placement),
+            tracker: Mutex::new(tracker),
         }
     }
 
+    /// Snapshot the current placement (cheap `Arc` clone).
+    pub fn placement(&self) -> Arc<Placement> {
+        self.placement.lock().unwrap().clone()
+    }
+
+    /// Install a new placement. Callers must hold the engine's epoch
+    /// fence (no pass in flight) — see `MoeEngine::rebalance`.
+    pub fn set_placement(&self, p: Arc<Placement>) {
+        *self.placement.lock().unwrap() = p;
+    }
+
     /// Index into [`announced_tiles`](Self::announced_tiles) for
-    /// (destination rank, source rank, destination-local expert).
+    /// (destination rank, source rank, destination expert *slot*).
     pub fn announce_idx(&self, dst: usize, src: usize, e_loc: usize) -> usize {
-        (dst * self.cfg.system.ranks + src) * self.cfg.local_experts() + e_loc
+        (dst * self.cfg.system.ranks + src) * self.dims.e_local + e_loc
     }
 
     /// Mark pass generation `epoch32` as failed by this rank (a transfer
@@ -189,8 +221,11 @@ impl EngineShared {
 }
 
 /// Column-sliced weights for split-mode GEMM tasks: `w1c[e][col]` is the
-/// (H, bN) stripe of local expert `e`'s W1, row-major. Pass-invariant, so
-/// a rank actor builds them once at spawn and reuses them every pass.
+/// (H, bN) stripe of **global** expert `e`'s W1, row-major. Indexed by
+/// global expert id (not local slot) because with replication a rank's
+/// replica slots bind to different experts across rebalances while these
+/// slices are pass-invariant — a rank actor builds them once at spawn and
+/// resolves `slot → global expert` through the pass's placement snapshot.
 ///
 /// Invariant: when the backend answers [`ComputeBackend::packed_split_tiles`]
 /// `true`, the `w1c`/`w2c` entries are **empty sentinels** — the backend
@@ -219,23 +254,24 @@ fn slice_cols(w: &[f32], rows: usize, cols: usize, bn: usize) -> Vec<Vec<f32>> {
 }
 
 impl WeightSlices {
-    fn build(shared: &EngineShared, rank: usize) -> Self {
+    fn build(shared: &EngineShared) -> Self {
         let m = &shared.cfg.model;
-        let e_local = shared.cfg.local_experts();
         // When the backend serves split-mode tiles straight from its
         // packed panel cache, the w1c/w2c column copies would be dead
         // weight (the one packed copy already covers every column tile,
         // and retaining sliced duplicates would roughly double per-rank
         // weight memory) — keep only the bias slices, which the packed
         // path still consumes; the backend rejects empty weight slices
-        // if its cache were ever missing.
+        // if its cache were ever missing. Covering the full expert table
+        // (not just the owned block) costs only the tiny bias slices on
+        // this default path; the non-packed fallback pays full-table
+        // weight copies, mirroring the backend's own global expert cache.
         let skip_weight_copies = shared.backend.packed_split_tiles();
         let mut w1c = Vec::new();
         let mut b1c = Vec::new();
         let mut w2c = Vec::new();
         let mut b2c = Vec::new();
-        for el in 0..e_local {
-            let ex = &shared.params.experts[rank * e_local + el];
+        for ex in shared.params.experts.iter() {
             if skip_weight_copies {
                 w1c.push(vec![Vec::new(); m.d / m.bn]);
                 w2c.push(vec![Vec::new(); m.h / m.bn]);
@@ -309,6 +345,9 @@ struct PassCounters {
     combine_completed: AtomicU32,
     gemm_tasks: AtomicU32,
     busy_nanos: AtomicU64,
+    /// Token rows this rank received into *replica* slots (slot index
+    /// `>= local_experts`) — the replication-effect signal.
+    replica_rows: AtomicU64,
 }
 
 impl PassCounters {
@@ -320,6 +359,7 @@ impl PassCounters {
             combine_completed: AtomicU32::new(0),
             gemm_tasks: AtomicU32::new(0),
             busy_nanos: AtomicU64::new(0),
+            replica_rows: AtomicU64::new(0),
         }
     }
 }
@@ -338,8 +378,14 @@ struct PassCtx {
     /// This rank's dispatch plan; tile index doubles as the combine
     /// staging ordinal and fixes the output reduction order.
     plan: DispatchPlan,
-    /// T_phi lookup: (global expert, tile) -> ordinal into `plan.tiles`.
-    tphi: HashMap<(u32, u32), u32>,
+    /// The placement snapshot this pass was planned against: resolves a
+    /// (rank, slot) pair back to the global expert it is serving.
+    placement: Arc<Placement>,
+    /// T_phi lookup: (dst rank, dst slot, tile) -> ordinal into
+    /// `plan.tiles`. Keyed by destination slot, not global expert — a
+    /// replicated expert has the same tile index live on two
+    /// destinations, so an expert-keyed table would collide.
+    tphi: HashMap<(u32, u32, u32), u32>,
     /// Announced inbound dispatch-tile count per (peer, local expert):
     /// bounds the round-0 flag sweep and sizes the block tables below.
     incoming_tiles: Vec<u32>,
@@ -419,7 +465,7 @@ impl RankActor {
     pub fn spawn(shared: Arc<EngineShared>, rank: usize) -> Self {
         let queue = Arc::new(TaskQueue::new(shared.cfg.system.processors));
         let slices = (shared.mode == TaskGraphMode::Split)
-            .then(|| Arc::new(WeightSlices::build(&shared, rank)));
+            .then(|| Arc::new(WeightSlices::build(&shared)));
         let processors = shared.cfg.system.processors;
         let bell = Arc::new(ProcDoorbell {
             state: Mutex::new(ProcState {
@@ -457,7 +503,6 @@ impl RankActor {
         let cfg = &shared.cfg;
         let rank = self.rank;
         let (s_rank, h) = (cfg.system.s_rank, cfg.model.h);
-        let e_local = cfg.local_experts();
         anyhow::ensure!(a.len() % h == 0, "rank {rank}: bad input length");
         let s_rows = a.len() / h;
         anyhow::ensure!(
@@ -493,6 +538,11 @@ impl RankActor {
         let t0 = Instant::now();
         let (bytes_local_0, bytes_remote_0) = shared.fabric.bytes_in(rank);
         let steals_0 = self.queue.steals();
+        // Placement snapshot for this pass. Taken *after* the barrier
+        // pair: rebalance only swaps the map with no pass in flight, so
+        // every rank of this pass reads the same version.
+        let placement = shared.placement();
+        let e_slots = shared.dims.e_local;
 
         // ---- FusedGate (Alg. 1 line 1) ---------------------------------------
         // Gated over the pass's actual rows, not the static s_rank: a
@@ -507,24 +557,25 @@ impl RankActor {
             !cfg.model.policy.is_dropless() || dropped == 0,
             "rank {rank}: dropless routing dropped {dropped} pairs (slot region undersized)"
         );
-        let plan = dispatch_plan(&routing, cfg.model.bm, |e| cfg.owner_of(e));
+        let plan = dispatch_plan(&routing, cfg.model.bm, &placement);
 
         // ---- announce dispatch-tile counts (before dispatching) --------------
         // Per-destination totals drive the self-correcting task bound;
-        // per-(destination, local expert) counts let the destination size
-        // its pass bookkeeping to the actual tile counts.
+        // per-(destination, expert slot) counts let the destination size
+        // its pass bookkeeping to the actual tile counts. `t.dslot` is
+        // the destination slot the plan already resolved — owned slot on
+        // the primary, bound replica slot on a replica host.
         let ranks_n = cfg.system.ranks;
         let mut per_dst = vec![0u32; ranks_n];
-        let mut per_dst_eloc = vec![0u32; ranks_n * e_local];
+        let mut per_dst_slot = vec![0u32; ranks_n * e_slots];
         for t in &plan.tiles {
             let dst = t.dst as usize;
-            let e_loc = t.expert as usize - dst * e_local;
             per_dst[dst] += 1;
-            per_dst_eloc[dst * e_local + e_loc] += 1;
+            per_dst_slot[dst * e_slots + t.dslot as usize] += 1;
         }
         for dst in 0..ranks_n {
-            for el in 0..e_local {
-                let n = per_dst_eloc[dst * e_local + el];
+            for el in 0..e_slots {
+                let n = per_dst_slot[dst * e_slots + el];
                 if n > 0 {
                     shared.announced_tiles[shared.announce_idx(dst, rank, el)]
                         .store(n, Ordering::Release);
@@ -610,9 +661,8 @@ impl RankActor {
                         pack[row * h..(row + 1) * h]
                             .copy_from_slice(&a[tok as usize * h..(tok as usize + 1) * h]);
                     }
-                    let e_loc = t.expert as usize - cfg.owner_of(t.expert as usize) * e_local;
                     let coord =
-                        Coord { p: rank, r: 0, b: 1, e: e_loc, c: t.tile as usize * m.bm };
+                        Coord { p: rank, r: 0, b: 1, e: t.dslot as usize, c: t.tile as usize * m.bm };
                     if let Err(e) = xfer.put(t.dst as usize, coord, &pack[..t.rows as usize * h])
                     {
                         shared.poison(epoch32);
@@ -633,8 +683,7 @@ impl RankActor {
                 pack[row * h..(row + 1) * h]
                     .copy_from_slice(&a[tok as usize * h..(tok as usize + 1) * h]);
             }
-            let e_loc = t.expert as usize - cfg.owner_of(t.expert as usize) * e_local;
-            let coord = Coord { p: rank, r: 0, b: 1, e: e_loc, c: t.tile as usize * m.bm };
+            let coord = Coord { p: rank, r: 0, b: 1, e: t.dslot as usize, c: t.tile as usize * m.bm };
             if let Err(e) =
                 shared.fabric.put_signal(rank, dst, coord, &pack[..t.rows as usize * h], epoch32)
             {
@@ -657,7 +706,7 @@ impl RankActor {
         // wait — dispatch overlaps peers' gates exactly as before, so a
         // gate straggler on one rank never stalls another rank's dispatch
         // (the bookkeeping worst case is small and fixed in this policy).
-        let pe_slots = ranks_n * e_local;
+        let pe_slots = ranks_n * e_slots;
         let (incoming_tiles, block_base, blocks) = if cfg.model.policy.is_dropless() {
             let mut spins = 0u32;
             while (shared.announced.load(Ordering::Acquire) as usize) < ranks_n {
@@ -678,11 +727,11 @@ impl RankActor {
             let mut base = vec![0u32; pe_slots];
             let mut blocks = 0u32;
             for peer in 0..ranks_n {
-                for el in 0..e_local {
+                for el in 0..e_slots {
                     let n = shared.announced_tiles[shared.announce_idx(rank, peer, el)]
                         .load(Ordering::Acquire);
-                    base[peer * e_local + el] = blocks;
-                    incoming[peer * e_local + el] = n;
+                    base[peer * e_slots + el] = blocks;
+                    incoming[peer * e_slots + el] = n;
                     blocks += n;
                 }
             }
@@ -694,20 +743,21 @@ impl RankActor {
             let base = (0..pe_slots as u32).map(|i| i * tpe).collect();
             (incoming, base, pe_slots as u32 * tpe)
         };
-        // expected combine tiles per (owner, owner-local expert), from my
-        // own plan: the owner writes results back at the same tile index.
-        let mut combine_tiles = vec![0u32; ranks_n * e_local];
+        // expected combine tiles per (serving rank, serving slot), from my
+        // own plan: the server writes results back at the same tile index
+        // and slot it received the dispatch on.
+        let mut combine_tiles = vec![0u32; ranks_n * e_slots];
         for t in &plan.tiles {
-            let owner = t.dst as usize;
-            let el = t.expert as usize - owner * e_local;
-            let idx = owner * e_local + el;
+            let idx = t.dst as usize * e_slots + t.dslot as usize;
             combine_tiles[idx] = combine_tiles[idx].max(t.tile + 1);
         }
 
         // ---- build T_phi and the pass context --------------------------------
+        // Keyed (dst, dslot, tile): a replicated expert runs the same
+        // tile index on two destinations, so (expert, tile) would collide.
         let mut tphi = HashMap::with_capacity(plan.tiles.len());
         for (i, t) in plan.tiles.iter().enumerate() {
-            tphi.insert((t.expert, t.tile), i as u32);
+            tphi.insert((t.dst, t.dslot, t.tile), i as u32);
         }
         let d_cols = (m.d / m.bn) as u32;
         let h_cols = (m.h / m.bn) as u32;
@@ -733,6 +783,7 @@ impl RankActor {
             g1_latch: split.then(|| DependencyTable::new(blocks, h_cols)),
             block_rows: (0..blocks).map(|_| AtomicU32::new(0)).collect(),
             combine_stage: Staging::new(plan.tiles.len(), m.bm * m.h),
+            placement: placement.clone(),
             plan,
         });
 
@@ -801,6 +852,9 @@ impl RankActor {
             announced_inter_bytes,
             max_queue_depth: self.queue.max_depth(),
             steals: self.queue.steals() - steals_0,
+            expert_offered: routing.offered_load.iter().map(|&v| v as u64).collect(),
+            expert_kept: routing.expert_load.iter().map(|&v| v as u64).collect(),
+            replica_rows: c.replica_rows.load(Ordering::Relaxed),
         };
         Ok(RankOutput { out, metrics })
     }
@@ -1043,6 +1097,10 @@ fn next_seq(seq: &mut u32) -> u32 {
 fn decode_dispatch(ctx: &PassCtx, peer: usize, e_loc: usize, tile: usize, rows: usize, seq: &mut u32) {
     let m = &ctx.shared.cfg.model;
     ctx.counters.ffn_decoded.fetch_add(1, Ordering::Relaxed);
+    if e_loc >= ctx.shared.cfg.local_experts() {
+        // rows landing in a replica slot: traffic replication absorbed
+        ctx.counters.replica_rows.fetch_add(rows as u64, Ordering::Relaxed);
+    }
     match ctx.shared.mode {
         TaskGraphMode::Fused => {
             ctx.queue.push(Task {
@@ -1127,8 +1185,16 @@ fn execute_task(
     let shared = &*ctx.shared;
     let m = &shared.cfg.model;
     let (h, bm, bn) = (m.h, m.bm, m.bn);
-    let e_local = shared.cfg.local_experts();
     let (peer, e_loc, tile) = (task.peer as usize, task.expert as usize, task.tile as usize);
+    // `task.expert` is a *slot* on the serving rank. For compute tasks
+    // the serving rank is us — resolve the slot to the global expert it
+    // is bound to under this pass's placement snapshot (owned slots map
+    // statically; replica slots follow the dynamic binding).
+    let resolve = |r: usize| {
+        ctx.placement
+            .expert_on(r, e_loc)
+            .ok_or_else(|| anyhow!("rank {r} slot {e_loc}: no expert bound (task {task:?})"))
+    };
     match task.task_type {
         TaskType::FusedFfn => {
             let coord = Coord { p: peer, r: 0, b: 1, e: e_loc, c: tile * bm };
@@ -1140,7 +1206,7 @@ fn execute_task(
                     &xbuf[..bm * h]
                 }
             };
-            let global_e = ctx.rank * e_local + e_loc;
+            let global_e = resolve(ctx.rank)?;
             shared.backend.ffn_tile(
                 x,
                 &shared.params.experts[global_e],
@@ -1181,12 +1247,13 @@ fn execute_task(
                 }
             };
             let sl = ctx.slices.as_ref().unwrap();
+            let ge = resolve(ctx.rank)?;
             shared.backend.gemm0_tile(
                 x,
-                &sl.w1c[e_loc][col],
-                &sl.b1c[e_loc][col],
+                &sl.w1c[ge][col],
+                &sl.b1c[ge][col],
                 &mut tile_out[..bm * bn],
-                ctx.rank * e_local + e_loc,
+                ge,
                 col,
             )?;
             ctx.mid.as_ref().unwrap().write_stripe(block, bm, m.d, col, bn, &tile_out[..bm * bn]);
@@ -1214,12 +1281,13 @@ fn execute_task(
             let block = ctx.block_id(peer, e_loc, tile);
             let mid = ctx.mid.as_ref().unwrap().read_block(block);
             let sl = ctx.slices.as_ref().unwrap();
+            let ge = resolve(ctx.rank)?;
             shared.backend.gemm1_tile(
                 mid,
-                &sl.w2c[e_loc][col],
-                &sl.b2c[e_loc][col],
+                &sl.w2c[ge][col],
+                &sl.b2c[ge][col],
                 &mut tile_out[..bm * bn],
-                ctx.rank * e_local + e_loc,
+                ge,
                 col,
             )?;
             let out_stage = ctx.out_stage.as_ref().unwrap();
@@ -1240,7 +1308,9 @@ fn execute_task(
             }
         }
         TaskType::Combine => {
-            // `peer` is the expert-owner rank; e_loc indexes its experts.
+            // `peer` is the serving rank; e_loc is the slot it served
+            // (owned or replica) — exactly the (dst, dslot) the plan
+            // dispatched on, so the T_phi key needs no expert resolution.
             let rows = task.rows as usize;
             let coord = Coord { p: peer, r: 1, b: 1, e: e_loc, c: tile * bm };
             // f32 wire: zero-copy borrow; 16-bit wire: decode into xbuf
@@ -1251,12 +1321,12 @@ fn execute_task(
                     &xbuf[..rows * h]
                 }
             };
-            let global_e = (peer * e_local + e_loc) as u32;
             let ordinal = *ctx
                 .tphi
-                .get(&(global_e, task.tile))
-                .ok_or_else(|| anyhow!("combine for unknown tile (e={global_e}, t={tile})"))?
-                as usize;
+                .get(&(task.peer, task.expert, task.tile))
+                .ok_or_else(|| {
+                    anyhow!("combine for unknown tile (dst={peer}, slot={e_loc}, t={tile})")
+                })? as usize;
             let t = &ctx.plan.tiles[ordinal];
             anyhow::ensure!(t.tokens.len() == rows, "combine row mismatch");
             // Scale by the combine weights into this tile's private staging

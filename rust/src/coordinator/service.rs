@@ -30,6 +30,13 @@
 //! depend on what else shares the pass; serve with dropless routing when
 //! request-level conformance matters — the service tests do.)
 //!
+//! Replication: when the config enables a
+//! [`ReplicationPolicy`](crate::config::ReplicationPolicy), the batcher
+//! calls [`MoeEngine::rebalance`] at its quiet points (queue momentarily
+//! drained, no pass in flight), so a long-running service adapts its
+//! expert placement to hot experts between passes — outputs are
+//! unaffected (the gate-side splitter keeps the combine fold identical).
+//!
 //! Shutdown ([`MoeService::shutdown`] or drop) stops admission
 //! (`enqueue` returns [`ServiceError::ShuttingDown`]), drains every
 //! already-queued and in-flight request, then shuts the engine down and
@@ -609,6 +616,14 @@ fn batcher_main(shared: Arc<ServiceShared>, engine: MoeEngine) {
                 if let Some(prev) = in_flight.take() {
                     collect(&shared, prev);
                 }
+                // Quiet point: the queue was empty and the last in-flight
+                // pass just landed, so the engine has no assigned epochs —
+                // the one place the batcher can swap the expert placement
+                // (hot-expert replication, see `MoeEngine::rebalance`)
+                // without stalling behind a running pass. A no-op unless
+                // the config enables a `ReplicationPolicy`; an error here
+                // keeps the old placement, which is always safe to serve.
+                let _ = engine.rebalance();
             }
             Admission::Exit => {
                 if let Some(prev) = in_flight.take() {

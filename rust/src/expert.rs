@@ -40,6 +40,14 @@ impl PackedExpert {
 }
 
 impl ExpertParams {
+    /// Unpacked parameter footprint in bytes (f32 weights + biases) —
+    /// the wire cost `MoeEngine::rebalance` books per replica install
+    /// when a hot expert's weights are copied onto a new host rank.
+    pub fn size_bytes(&self) -> usize {
+        (self.w1.len() + self.b1.len() + self.w2.len() + self.b2.len())
+            * std::mem::size_of::<f32>()
+    }
+
     /// Pack this expert for the persistent hot path. One call per expert
     /// per engine lifetime; the backend's pack counter audits that no
     /// steady-state pass ever re-packs.

@@ -11,6 +11,37 @@
 //! assignment, drops beyond aligned capacity) so the Rust routing agrees
 //! bit-for-tolerance with `ref.py` and the AOT `moe_layer` artifact.
 //!
+//! **NaN / tie-break contract.** The gate is total over arbitrary f32
+//! input, including NaN and ±inf — a poisoned embedding row must never
+//! panic a resident rank actor (it would wedge every peer on the
+//! watchdog). Precisely:
+//!
+//! * [`softmax_rows`]: any row whose softmax is undefined — all `-inf`
+//!   logits (sum 0), or a NaN/`+inf` logit (NaN sum) — falls back to the
+//!   uniform distribution `1/E`, so the row still routes and its combine
+//!   weights stay finite.
+//! * [`topk_rows`]: comparison is [`f32::total_cmp`] with NaN explicitly
+//!   sorted *last* (total order alone would rank positive NaN above
+//!   `+inf`). Equal scores — including `-0.0` vs `+0.0`, which are
+//!   normalized before comparison — tie toward the lower expert index,
+//!   matching `jax.lax.top_k`. A row of fewer than `k` non-NaN scores
+//!   still yields `k` indices (NaN-scored experts fill the tail).
+//!
+//! **Load accounting.** [`Routing`] carries two per-expert histograms:
+//! `offered_load` counts every top-k (token, expert) pair *before* the
+//! capacity clamp — the demand signal the replication EWMA tracker feeds
+//! on (`Σ offered_load == s × k` under every policy) — while
+//! `expert_load` counts kept routes only (what actually travels).
+//!
+//! **Replication.** [`dispatch_plan`] consults a [`Placement`] instead of
+//! a static owner function: an expert with R serving locations (primary +
+//! replicas, see `crate::placement`) has its routed tokens sharded
+//! deterministically by arrival index (`j % R`) across the locations,
+//! each shard re-slotted densely and tiled by bM. Tiles stay grouped by
+//! ascending expert id, so the plan-order combine fold accumulates each
+//! token's per-expert contributions in the same order as under static
+//! placement — replication is bitwise-invisible to pass outputs.
+//!
 //! **Routing policy.** Under [`RoutingPolicy::Capacity`] the per-(source,
 //! expert) buffer is fixed and over-capacity pairs are dropped, so a
 //! skewed gate silently changes the computed function. Under
@@ -26,6 +57,7 @@
 //! [`RoutingPolicy::Dropless`]: crate::config::RoutingPolicy::Dropless
 
 use crate::config::ModelConfig;
+use crate::placement::Placement;
 
 /// One routed (token, expert) pair.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -55,8 +87,14 @@ pub struct Routing {
     pub routes: Vec<Route>,
     /// Number of dropped (over-capacity) pairs.
     pub dropped: usize,
-    /// Tokens routed to each expert (kept only), length E.
+    /// Tokens routed to each expert that were *kept* (post capacity
+    /// clamp), length E — what actually travels.
     pub expert_load: Vec<u32>,
+    /// Tokens the gate *offered* to each expert (kept + dropped), length
+    /// E. Always sums to `s × k`; under `Capacity` routing this is the
+    /// un-clamped demand signal the replication EWMA tracker consumes —
+    /// `expert_load` saturates at capacity exactly when skew matters.
+    pub offered_load: Vec<u32>,
     pub s: usize,
     pub e: usize,
     pub k: usize,
@@ -64,6 +102,11 @@ pub struct Routing {
 }
 
 /// Row softmax with max subtraction over logits (S, E), in place.
+///
+/// Total over arbitrary input (module-header contract): a row whose
+/// softmax is undefined — all `-inf` (sum 0, which would make `inv`
+/// infinite and the row NaN), or any NaN/`+inf` logit (NaN sum) — falls
+/// back to the uniform distribution `1/E` instead of emitting NaN.
 pub fn softmax_rows(logits: &mut [f32], e: usize) {
     debug_assert_eq!(logits.len() % e, 0);
     for row in logits.chunks_mut(e) {
@@ -73,15 +116,27 @@ pub fn softmax_rows(logits: &mut [f32], e: usize) {
             *v = (*v - m).exp();
             sum += *v;
         }
-        let inv = 1.0 / sum;
-        for v in row.iter_mut() {
-            *v *= inv;
+        if sum > 0.0 && sum.is_finite() {
+            let inv = 1.0 / sum;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        } else {
+            // degenerate row: uniform fallback keeps routing total
+            row.fill(1.0 / e as f32);
         }
     }
 }
 
 /// Top-k per row: descending score, ties broken toward the lower index
 /// (matches `jax.lax.top_k`). Returns (indices, weights) both (S, k).
+///
+/// NaN-safe (module-header contract): comparison is [`f32::total_cmp`]
+/// with NaN explicitly sorted last — `partial_cmp().unwrap()` here used
+/// to panic the calling rank actor on a single NaN score, and raw
+/// `total_cmp` would instead rank positive NaN *above* `+inf`. Signed
+/// zeros are normalized (`-0.0 + 0.0 == +0.0`) so they still tie toward
+/// the lower index as equal scores always have.
 pub fn topk_rows(scores: &[f32], e: usize, k: usize) -> (Vec<u32>, Vec<f32>) {
     let s = scores.len() / e;
     let mut idx = Vec::with_capacity(s * k);
@@ -92,10 +147,13 @@ pub fn topk_rows(scores: &[f32], e: usize, k: usize) -> (Vec<u32>, Vec<f32>) {
         order.extend(0..e as u32);
         // stable selection of the k best: full sort is fine, E <= 128
         order.sort_by(|&a, &b| {
-            row[b as usize]
-                .partial_cmp(&row[a as usize])
-                .unwrap()
-                .then(a.cmp(&b))
+            let (x, y) = (row[a as usize], row[b as usize]);
+            match (x.is_nan(), y.is_nan()) {
+                (false, false) => (y + 0.0).total_cmp(&(x + 0.0)).then(a.cmp(&b)),
+                (true, true) => a.cmp(&b),
+                (true, false) => std::cmp::Ordering::Greater, // NaN last
+                (false, true) => std::cmp::Ordering::Less,
+            }
         });
         for j in 0..k {
             idx.push(order[j]);
@@ -153,6 +211,7 @@ pub fn route_from_scores(
     let (e, k) = (model.e, model.k);
     let (topk_idx, topk_w) = topk_rows(&scores, e, k);
     let mut counts = vec![0u32; e];
+    let mut offered = vec![0u32; e];
     let mut routes = Vec::with_capacity(s * k);
     let mut dropped = 0usize;
     for i in 0..s {
@@ -160,6 +219,10 @@ pub fn route_from_scores(
         for j in 0..k {
             let expert = topk_idx[i * k + j];
             let weight = topk_w[i * k + j];
+            // offered load counts the pair whether or not it is kept —
+            // the capacity clamp below must not hide demand from the
+            // replication tracker
+            offered[expert as usize] += 1;
             let c = counts[expert as usize];
             if (c as usize) < capacity {
                 counts[expert as usize] = c + 1;
@@ -182,6 +245,7 @@ pub fn route_from_scores(
         routes,
         dropped,
         expert_load: counts,
+        offered_load: offered,
         s,
         e,
         k,
@@ -195,9 +259,16 @@ pub fn route_from_scores(
 pub struct DispatchTile {
     /// Global expert id.
     pub expert: u32,
-    /// Destination rank (owner of `expert`).
+    /// Destination rank — the primary owner of `expert`, or a rank
+    /// hosting one of its replicas.
     pub dst: u32,
-    /// Tile index within the (rank, expert) capacity buffer (slot / bM).
+    /// Destination-local expert slot on `dst`: the owned slot
+    /// (`expert % e_local`) when `dst` is the primary, or a replica slot
+    /// (`>= e_local`) bound to `expert` by the [`Placement`]. This is the
+    /// `e` coordinate of every heap write for this tile.
+    pub dslot: u32,
+    /// Tile index within the (rank, expert-slot) capacity buffer
+    /// (shard slot / bM).
     pub tile: u32,
     /// Valid rows in this tile (1..=bM); the rest is *in-place* padding on
     /// the receiver — it never hits the wire.
@@ -229,8 +300,8 @@ impl DispatchPlan {
     }
 }
 
-/// Build the dispatch plan from a routing table. `owner_of(e)` maps a
-/// global expert to its owning rank; `bm` is the tile height.
+/// Build the dispatch plan from a routing table; `placement` maps each
+/// global expert to its serving locations and `bm` is the tile height.
 ///
 /// The tile list is **variable-length per expert**: slots are assigned
 /// densely in arrival order (0..load), so expert `e`'s tiles are exactly
@@ -240,11 +311,18 @@ impl DispatchPlan {
 /// Capacity policy, which is what makes the same plan builder serve
 /// `Dropless` routing unchanged. Experts with zero routed tokens produce
 /// no traffic at all (payload efficiency).
-pub fn dispatch_plan(
-    routing: &Routing,
-    bm: usize,
-    owner_of: impl Fn(usize) -> usize,
-) -> DispatchPlan {
+///
+/// **Replica splitting.** An expert with `R > 1` serving locations has
+/// its routed tokens sharded deterministically: arrival index `j` goes to
+/// location `j % R` (the placement's location order — primary first,
+/// replicas in install order), and each shard is re-slotted densely
+/// (`j / R`) before tiling, so every destination still sees dense,
+/// bM-aligned tile regions. Shards are emitted consecutively under their
+/// expert — the plan stays grouped by ascending expert id — so the
+/// plan-order combine fold adds each token's per-expert contributions in
+/// exactly the static-placement order: replication never changes a pass
+/// output bit.
+pub fn dispatch_plan(routing: &Routing, bm: usize, placement: &Placement) -> DispatchPlan {
     let e = routing.e;
     let mut tiles: Vec<DispatchTile> = Vec::new();
     // group routes by expert; routes are already slot-ordered per expert
@@ -254,29 +332,52 @@ pub fn dispatch_plan(
         by_expert[r.expert as usize].push(r);
     }
     let mut sent_rows = 0usize;
+    let mut active_regions = 0usize;
+    let mut shard: Vec<&Route> = Vec::new();
     for (ex, rs) in by_expert.iter().enumerate() {
         if rs.is_empty() {
             continue; // payload efficiency: inactive expert, no traffic
         }
-        for (t, chunk) in rs.chunks(bm).enumerate() {
-            debug_assert_eq!(chunk[0].slot as usize, t * bm, "slots dense per expert");
-            let tokens: Vec<u32> = chunk.iter().map(|r| r.token).collect();
-            let weights: Vec<f32> = chunk.iter().map(|r| r.combine_weight).collect();
-            sent_rows += tokens.len();
-            tiles.push(DispatchTile {
-                expert: ex as u32,
-                dst: owner_of(ex) as u32,
-                tile: t as u32,
-                rows: tokens.len() as u32,
-                tokens,
-                weights,
-            });
+        let locs = placement.locations(ex);
+        let n = locs.len();
+        debug_assert!(n >= 1, "every expert has a primary location");
+        for (li, &(dst, dslot)) in locs.iter().enumerate() {
+            shard.clear();
+            if n == 1 {
+                shard.extend(rs.iter().copied());
+            } else {
+                shard.extend(
+                    rs.iter().enumerate().filter(|(j, _)| j % n == li).map(|(_, r)| *r),
+                );
+            }
+            if shard.is_empty() {
+                continue; // fewer routed tokens than locations
+            }
+            active_regions += 1;
+            for (t, chunk) in shard.chunks(bm).enumerate() {
+                if n == 1 {
+                    debug_assert_eq!(chunk[0].slot as usize, t * bm, "slots dense per expert");
+                }
+                let tokens: Vec<u32> = chunk.iter().map(|r| r.token).collect();
+                let weights: Vec<f32> = chunk.iter().map(|r| r.combine_weight).collect();
+                sent_rows += tokens.len();
+                tiles.push(DispatchTile {
+                    expert: ex as u32,
+                    dst,
+                    dslot,
+                    tile: t as u32,
+                    rows: tokens.len() as u32,
+                    tokens,
+                    weights,
+                });
+            }
         }
     }
-    let active_experts = by_expert.iter().filter(|v| !v.is_empty()).count();
     DispatchPlan {
         tiles,
-        padded_rows: active_experts * routing.capacity,
+        // padded baseline: capacity-sized dispatch ships the full slot
+        // region of every active (expert, location) pair
+        padded_rows: active_regions * routing.capacity,
         sent_rows,
     }
 }
@@ -284,6 +385,7 @@ pub fn dispatch_plan(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::placement::Placement;
     use crate::util::prng::Rng;
 
     fn model(e: usize, k: usize, bm: usize) -> ModelConfig {
@@ -377,7 +479,7 @@ mod tests {
         }
         scores.extend([0.1f32, 0.1, 0.7, 0.1]);
         let routing = route_from_scores(scores, 5, &m, 8);
-        let plan = dispatch_plan(&routing, 4, |e| e % 2);
+        let plan = dispatch_plan(&routing, 4, &Placement::balanced(4, 2, 0));
         // expert0: tile0 full (4 rows); expert2: tile0 1 row. 2 tiles total.
         assert_eq!(plan.tiles.len(), 2);
         assert_eq!(plan.sent_rows, 5);
@@ -403,7 +505,7 @@ mod tests {
         let routing = route_from_scores(scores, s, &m, cap);
         assert_eq!(routing.dropped, 0, "dropless keeps all pairs");
         assert_eq!(routing.routes.len(), s);
-        let plan = dispatch_plan(&routing, m.bm, |_| 0);
+        let plan = dispatch_plan(&routing, m.bm, &Placement::balanced(2, 1, 0));
         // variable tile list: two full tiles + one partially-filled tail
         assert_eq!(plan.tiles.len(), 3);
         assert_eq!(
@@ -425,7 +527,8 @@ mod tests {
         assert_eq!(r0.routes.len(), 0);
         assert_eq!(r0.dropped, 0);
         assert!(r0.expert_load.iter().all(|&l| l == 0));
-        let p0 = dispatch_plan(&r0, m.bm, |e| e % 2);
+        assert!(r0.offered_load.iter().all(|&l| l == 0));
+        let p0 = dispatch_plan(&r0, m.bm, &Placement::balanced(4, 2, 0));
         assert!(p0.tiles.is_empty());
         assert_eq!(p0.sent_rows, 0);
         // partial rows: the plan covers exactly the routed pairs of the
@@ -439,7 +542,7 @@ mod tests {
         };
         let r = route_from_scores(scores, rows, &m, 64);
         assert_eq!(r.routes.len() + r.dropped, rows * m.k);
-        let p = dispatch_plan(&r, m.bm, |e| e % 2);
+        let p = dispatch_plan(&r, m.bm, &Placement::balanced(4, 2, 0));
         let covered: usize = p.tiles.iter().map(|t| t.tokens.len()).sum();
         assert_eq!(covered, r.routes.len());
         assert_eq!(p.sent_rows, r.routes.len(), "only existing rows travel");
@@ -453,8 +556,117 @@ mod tests {
         let a = rng.normal_vec(s * m.h, 1.0);
         let wg = rng.normal_vec(m.h * m.e, 1.0);
         let routing = gate_and_route(&a, &wg, s, &m, 8);
-        let plan = dispatch_plan(&routing, 4, |e| e / 4);
+        let plan = dispatch_plan(&routing, 4, &Placement::balanced(8, 2, 0));
         let covered: usize = plan.tiles.iter().map(|t| t.tokens.len()).sum();
         assert_eq!(covered, routing.routes.len());
+    }
+
+    #[test]
+    fn topk_handles_nan_scores_without_panicking() {
+        // one NaN among finite scores: finite scores rank, NaN sorts last
+        let scores = vec![f32::NAN, 0.5, 0.1, 0.2];
+        let (idx, w) = topk_rows(&scores, 4, 2);
+        assert_eq!(idx, vec![1, 3]);
+        assert_eq!(w, vec![0.5, 0.2]);
+        // NaN beyond +inf in total order must still sort last
+        let scores = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY];
+        let (idx, _) = topk_rows(&scores, 3, 3);
+        assert_eq!(idx, vec![1, 2, 0], "NaN after every non-NaN, +inf first");
+        // all-NaN row: k indices still come back (low indices first)
+        let scores = vec![f32::NAN; 4];
+        let (idx, w) = topk_rows(&scores, 4, 2);
+        assert_eq!(idx, vec![0, 1]);
+        assert!(w.iter().all(|v| v.is_nan()));
+        // signed zeros tie toward the lower index like any equal scores
+        let scores = vec![-0.0f32, 0.0, -1.0];
+        let (idx, _) = topk_rows(&scores, 3, 2);
+        assert_eq!(idx, vec![0, 1], "-0.0 == +0.0 ties break low");
+    }
+
+    #[test]
+    fn softmax_degenerate_rows_fall_back_to_uniform() {
+        let e = 4;
+        // row 0: all -inf (sum would be 0); row 1: NaN logit; row 2: +inf
+        // logit (NaN after max subtraction); row 3: healthy
+        let mut x = vec![
+            f32::NEG_INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY,
+            f32::NAN, 1.0, 2.0, 3.0,
+            f32::INFINITY, 0.0, 0.0, 0.0,
+            1.0, 2.0, 3.0, 4.0,
+        ];
+        softmax_rows(&mut x, e);
+        for (i, row) in x.chunks(e).enumerate() {
+            assert!(row.iter().all(|v| v.is_finite()), "row {i} finite: {row:?}");
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "row {i} sums to 1");
+        }
+        for row in x.chunks(e).take(3) {
+            assert!(row.iter().all(|&v| v == 0.25), "degenerate rows uniform");
+        }
+        assert!(x[12..].windows(2).all(|w| w[0] < w[1]), "healthy row untouched");
+    }
+
+    #[test]
+    fn offered_load_counts_drops_kept_load_saturates() {
+        let m = model(2, 1, 4);
+        // 10 tokens all offered to expert 0, capacity 4
+        let mut scores = Vec::new();
+        for _ in 0..10 {
+            scores.extend([0.9f32, 0.1]);
+        }
+        let r = route_from_scores(scores, 10, &m, 4);
+        assert_eq!(r.expert_load, vec![4, 0], "kept load clamps at capacity");
+        assert_eq!(r.offered_load, vec![10, 0], "offered load sees demand");
+        assert_eq!(r.offered_load.iter().sum::<u32>() as usize, 10 * m.k);
+        assert_eq!(
+            r.offered_load.iter().sum::<u32>(),
+            r.expert_load.iter().sum::<u32>() + r.dropped as u32
+        );
+    }
+
+    #[test]
+    fn replicated_plan_splits_deterministically_and_stays_expert_grouped() {
+        let mut m = model(4, 1, 4);
+        m.policy = crate::config::RoutingPolicy::Dropless;
+        // 10 tokens to expert 0, 3 to expert 2
+        let mut scores = Vec::new();
+        for _ in 0..10 {
+            scores.extend([0.7f32, 0.1, 0.1, 0.1]);
+        }
+        for _ in 0..3 {
+            scores.extend([0.1f32, 0.1, 0.7, 0.1]);
+        }
+        let cap = m.slot_capacity(13);
+        let routing = route_from_scores(scores, 13, &m, cap);
+        // 2 ranks, e_local 2, one replica slot per rank; replicate expert
+        // 0 (owned by rank 0) onto rank 1
+        let mut p = Placement::balanced(4, 2, 1);
+        let slot = p.add_replica(0, 1).unwrap();
+        assert_eq!(slot, 2, "first replica slot sits just past e_local");
+        let plan = dispatch_plan(&routing, m.bm, &p);
+        // expert 0 splits 5/5 across (rank0, slot0) and (rank1, slot2):
+        // arrival j -> location j % 2, re-slotted densely -> 2 tiles of
+        // (4,1) rows each; expert 2 stays whole on its owner
+        let e0: Vec<_> = plan.tiles.iter().filter(|t| t.expert == 0).collect();
+        assert_eq!(e0.len(), 4);
+        assert_eq!(
+            e0.iter().map(|t| (t.dst, t.dslot, t.tile, t.rows)).collect::<Vec<_>>(),
+            vec![(0, 0, 0, 4), (0, 0, 1, 1), (1, 2, 0, 4), (1, 2, 1, 1)]
+        );
+        // primary shard takes even arrivals, replica shard odd arrivals
+        assert_eq!(e0[0].tokens, vec![0, 2, 4, 6]);
+        assert_eq!(e0[2].tokens, vec![1, 3, 5, 7]);
+        // plan stays grouped by ascending expert id (combine-fold order)
+        let experts: Vec<u32> = plan.tiles.iter().map(|t| t.expert).collect();
+        let mut sorted = experts.clone();
+        sorted.sort_unstable();
+        assert_eq!(experts, sorted, "tiles grouped by ascending expert");
+        // every kept route travels exactly once
+        let covered: usize = plan.tiles.iter().map(|t| t.tokens.len()).sum();
+        assert_eq!(covered, routing.routes.len());
+        assert_eq!(plan.sent_rows, 13);
+        // deterministic: same routing + placement -> identical plan
+        let plan2 = dispatch_plan(&routing, m.bm, &p);
+        assert_eq!(plan.tiles, plan2.tiles);
     }
 }

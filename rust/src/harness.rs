@@ -23,7 +23,7 @@ use crate::util::check::dense_reference_moe;
 use crate::util::json::{self, Json};
 use crate::util::prng::Rng;
 use crate::util::stats::{fmt_bytes, fmt_time, max_abs_diff, summarize, Table};
-use crate::workload::{cluster_workload, ArrivalProcess, Skew};
+use crate::workload::{cluster_workload, skewed_tokens, ArrivalProcess, Skew};
 
 /// Engines compared in the latency/throughput figures.
 pub fn figure_engines() -> Vec<Engine> {
@@ -720,6 +720,263 @@ pub fn serving_json(p: &ServingPoint) -> Json {
         ("throughput_tokens_per_sec", json::num(p.throughput)),
         ("launches", json::num(p.launches as f64)),
     ])
+}
+
+// ---------------------------------------------------------------------------
+// PR-7 replication: hot-expert replication A/B — live engines, Zipf skew
+// ---------------------------------------------------------------------------
+
+/// One arm of the replication A/B (static block placement vs EWMA-driven
+/// hot-expert replication), every number measured from live passes.
+#[derive(Clone, Debug)]
+pub struct ReplicationPoint {
+    /// `"static"` or `"replicated"`.
+    pub arm: &'static str,
+    /// Steady-state per-pass wall p50 after the (possible) rebalance.
+    pub wall_p50: f64,
+    /// Hottest rank's share of total busy time in the last measured pass
+    /// — the load-concentration number replication exists to shrink.
+    pub hot_rank_busy_share: f64,
+    /// max/mean busy-time imbalance of the last measured pass.
+    pub imbalance: f64,
+    /// Rows served by replica slots (0 on the static arm).
+    pub replica_hits: u64,
+    /// Placement version the measured passes ran under.
+    pub placement_version: u64,
+    /// Replica installs the rebalance performed, and the packed-weight
+    /// bytes it booked for them.
+    pub replica_installs: u64,
+    pub install_bytes: u64,
+    /// Request-level latency through `MoeService` under open-loop
+    /// Poisson traffic of the same Zipf-skewed tokens.
+    pub serving_p50: f64,
+    pub serving_p99: f64,
+    pub serving_throughput: f64,
+}
+
+/// CI-sized replication config: the `tiny` model over 4 ranks (2 owned
+/// experts per rank) under dropless routing, so the dense per-token
+/// reference is the oracle for both arms. The replicated arm turns the
+/// policy on: top-2 hottest experts, 2 copies each, a low enter
+/// threshold (the Zipf-1.1 favorite carries ~40% of top-1 mass, far past
+/// 1.2× mean) and a fast EWMA so three warm passes converge.
+pub fn replication_config(replicated: bool) -> Result<Config> {
+    let mut cfg = Config::preset("tiny")?;
+    cfg.set("ranks", "4")?;
+    cfg.set("tokens", "256")?;
+    cfg.set("routing_policy", "dropless")?;
+    if replicated {
+        cfg.set("replicate_top", "2")?;
+        cfg.set("replicas", "2")?;
+        cfg.set("replication_hysteresis", "1.2")?;
+        cfg.set("ewma_alpha", "0.5")?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Drive one arm's serving front end with open-loop Poisson traffic of
+/// Zipf-skewed requests and report (p50, p99, tokens/s). The batcher
+/// rebalances at its own quiet points, so the replicated arm's placement
+/// adapts mid-run exactly as a production service would.
+fn replication_serving(
+    cfg: &Config,
+    params: &Arc<ModelParams>,
+    seed: u64,
+) -> Result<(f64, f64, f64)> {
+    let (requests, rate) = (32usize, 300.0f64);
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(cfg));
+    let policy = BatchPolicy::from_config(cfg);
+    let service =
+        MoeService::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused, policy)?;
+    let (h, e) = (cfg.model.h, cfg.model.e);
+    let mut rng = Rng::new(seed ^ 0x7E97_5E47);
+    let arrivals = ArrivalProcess::Poisson { rate }.arrivals(requests, (8, 64), &mut rng)?;
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::with_capacity(requests);
+    for a in &arrivals {
+        let due = std::time::Duration::from_secs_f64(a.at);
+        if let Some(wait) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let tokens = skewed_tokens(&params.wg, h, e, a.tokens, Skew::Zipf, &mut rng);
+        handles.push(
+            service
+                .enqueue(tokens, RequestOpts::default())
+                .map_err(|e| anyhow::anyhow!("enqueue failed: {e}"))?,
+        );
+    }
+    let mut latencies = Vec::with_capacity(requests);
+    let mut tokens_served = 0usize;
+    for hdl in handles {
+        let res = hdl.wait()?;
+        tokens_served += res.rows;
+        latencies.push(res.latency_secs);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    service.shutdown();
+    let lat = summarize(&latencies);
+    Ok((lat.p50, lat.p99, if wall > 0.0 { tokens_served as f64 / wall } else { 0.0 }))
+}
+
+/// Static placement vs EWMA-driven hot-expert replication on **live
+/// engines**: same model params, same Zipf-skewed inputs through the real
+/// gate — only the [`ReplicationPolicy`](crate::config::ReplicationPolicy)
+/// changes. Per arm: warm passes feed the load tracker, one explicit
+/// [`MoeEngine::rebalance`] at the inter-pass quiet point, then measured
+/// passes. Asserted here (correctness, both arms): zero drops, outputs
+/// within the f32 conformance bound of the dense per-token reference,
+/// and the replicated arm's outputs **bitwise identical** to the static
+/// arm's — the deterministic gate-side splitter preserves the combine
+/// fold exactly. The replicated arm must actually replicate (rebalance
+/// returns true, replica rows observed). The hot-rank-busy-share and
+/// serving-p99 *improvement* claims are gated by the bench's PERF_SMOKE
+/// check, not here, so the CI gate stays a real check.
+pub fn replication_ab(seed: u64) -> Result<(String, Vec<ReplicationPoint>)> {
+    let (warm, passes) = (3usize, 4usize);
+    let base = replication_config(false)?;
+    // weights depend only on model dims + seed — shared by both arms
+    let params = Arc::new(ModelParams::generate(&base, seed));
+    let (h, e) = (base.model.h, base.model.e);
+    // Zipf-skewed tokens through the production gate, per rank,
+    // deterministic in (seed, rank) — identical for both arms
+    let inputs: Vec<Vec<f32>> = (0..base.system.ranks)
+        .map(|r| {
+            let mut rng = Rng::new(seed).fork(0x7E97_0000 + r as u64);
+            skewed_tokens(&params.wg, h, e, base.system.s_rank, Skew::Zipf, &mut rng)
+        })
+        .collect();
+
+    let mut points: Vec<ReplicationPoint> = Vec::new();
+    let mut reference: Option<Vec<Vec<f32>>> = None;
+    let mut t = Table::new(&[
+        "arm",
+        "p50 / pass",
+        "hot-rank busy share",
+        "imbalance",
+        "replica rows",
+        "installs",
+        "serving p50",
+        "serving p99",
+    ]);
+    for replicated in [false, true] {
+        let cfg = replication_config(replicated)?;
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+        let engine =
+            MoeEngine::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused)?;
+        // warm passes: converge the EWMA tracker (and the usual caches)
+        for _ in 0..warm {
+            engine.submit(&inputs)?.wait()?;
+        }
+        let changed = engine.rebalance()?;
+        anyhow::ensure!(
+            changed == replicated,
+            "rebalance under Zipf skew: expected changed={replicated}, got {changed}"
+        );
+        let mut walls = Vec::with_capacity(passes);
+        let mut last = None;
+        for _ in 0..passes {
+            let t0 = std::time::Instant::now();
+            let res = engine.submit(&inputs)?.wait()?;
+            walls.push(t0.elapsed().as_secs_f64());
+            last = Some(res);
+        }
+        let res = last.expect("at least one pass");
+        let m = &res.metrics;
+        anyhow::ensure!(m.total_dropped() == 0, "dropless arm dropped pairs");
+        if replicated {
+            anyhow::ensure!(
+                m.replica_hits() > 0,
+                "replicated arm served no rows from replica slots"
+            );
+            anyhow::ensure!(m.placement_version > 0, "measured passes ran pre-rebalance");
+        }
+        // conformance: both arms vs the dense f32 per-token oracle
+        let tol = cfg.system.wire.conformance_tol() as f64;
+        for (r, out) in res.outputs.iter().enumerate() {
+            let want = dense_reference_moe(&cfg, &params, &inputs[r]);
+            let diff = max_abs_diff(out, &want) as f64;
+            anyhow::ensure!(
+                diff < tol,
+                "{}: rank {r} err {diff} exceeds dense-reference tolerance {tol}",
+                if replicated { "replicated" } else { "static" }
+            );
+        }
+        // replication must not change a single output bit
+        match &reference {
+            None => reference = Some(res.outputs.clone()),
+            Some(want) => {
+                for (r, (a, b)) in want.iter().zip(&res.outputs).enumerate() {
+                    anyhow::ensure!(a.len() == b.len(), "rank {r}: output shape diverged");
+                    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                        anyhow::ensure!(
+                            x.to_bits() == y.to_bits(),
+                            "rank {r} elem {i}: static {x} != replicated {y} (bitwise)"
+                        );
+                    }
+                }
+            }
+        }
+        let em = engine.metrics();
+        engine.shutdown();
+        let (serving_p50, serving_p99, serving_throughput) =
+            replication_serving(&cfg, &params, seed)?;
+        let p = ReplicationPoint {
+            arm: if replicated { "replicated" } else { "static" },
+            wall_p50: summarize(&walls).p50,
+            hot_rank_busy_share: m.hot_rank_busy_share(),
+            imbalance: m.imbalance(),
+            replica_hits: m.replica_hits(),
+            placement_version: m.placement_version,
+            replica_installs: em.replica_installs,
+            install_bytes: em.install_bytes,
+            serving_p50,
+            serving_p99,
+            serving_throughput,
+        };
+        t.row(&[
+            p.arm.to_string(),
+            fmt_time(p.wall_p50),
+            format!("{:.1}%", p.hot_rank_busy_share * 100.0),
+            format!("{:.2}x", p.imbalance),
+            p.replica_hits.to_string(),
+            format!("{} ({})", p.replica_installs, fmt_bytes(p.install_bytes as f64)),
+            fmt_time(p.serving_p50),
+            fmt_time(p.serving_p99),
+        ]);
+        points.push(p);
+    }
+    Ok((
+        format!(
+            "## Replication A/B — EWMA hot-expert replication vs static placement (Zipf skew)\n\n{}",
+            t.render()
+        ),
+        points,
+    ))
+}
+
+/// JSON rows for [`replication_ab`] points (`BENCH_pr7_replication.json`).
+pub fn replication_json(points: &[ReplicationPoint]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                json::obj(vec![
+                    ("arm", json::s(p.arm)),
+                    ("wall_p50", json::num(p.wall_p50)),
+                    ("hot_rank_busy_share", json::num(p.hot_rank_busy_share)),
+                    ("imbalance", json::num(p.imbalance)),
+                    ("replica_hits", json::num(p.replica_hits as f64)),
+                    ("placement_version", json::num(p.placement_version as f64)),
+                    ("replica_installs", json::num(p.replica_installs as f64)),
+                    ("install_bytes", json::num(p.install_bytes as f64)),
+                    ("serving_p50", json::num(p.serving_p50)),
+                    ("serving_p99", json::num(p.serving_p99)),
+                    ("serving_throughput", json::num(p.serving_throughput)),
+                ])
+            })
+            .collect(),
+    )
 }
 
 // ---------------------------------------------------------------------------

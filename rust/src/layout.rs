@@ -29,7 +29,12 @@ pub const BUFFERS: usize = 2;
 pub struct LayoutDims {
     /// Expert-parallel world size P.
     pub p: usize,
-    /// Local experts E on this rank.
+    /// Local expert *slots* E on this rank: the owned experts plus any
+    /// replica slots reserved by the replication policy
+    /// (`Config::replica_slots`). Replica slots are addressed, sized,
+    /// flagged and validated exactly like owned slots; whether one is
+    /// *bound* to an expert in a given pass is the
+    /// `crate::placement::Placement`'s business, not the layout's.
     pub e_local: usize,
     /// Aligned per-(peer, expert) slot-region size C (multiple of bM).
     /// Under `RoutingPolicy::Capacity` this is the fixed expert capacity;
@@ -59,7 +64,10 @@ impl LayoutDims {
     pub fn from_config(cfg: &Config) -> Self {
         Self {
             p: cfg.system.ranks,
-            e_local: cfg.local_experts(),
+            // replica slots ride along in the expert dimension, so every
+            // downstream offset/flag/byte computation — and the
+            // write-validity rules — cover them with no special cases
+            e_local: cfg.local_experts() + cfg.replica_slots(),
             c: cfg.model.slot_capacity(cfg.system.s_rank),
             h: cfg.model.h,
             bm: cfg.model.bm,

@@ -152,6 +152,47 @@
 //! `BENCH_pr6_multinode.json`; the remaining gap to real hardware is an
 //! RDMA backend behind the same [`transport::Transport`] trait.
 //!
+//! ## Hot-expert replication: EWMA load-aware placement
+//!
+//! Routing skew is production reality: a hot expert serializes on its
+//! owner rank while the others idle. The replication subsystem
+//! (`crate::placement`; ROADMAP item 2, grounded in "Fast MoE Inference
+//! via Predictive Prefetching and Expert Replication") turns the static
+//! expert→rank map into a dynamic [`placement::Placement`]:
+//!
+//! * **Knobs** ([`config::ReplicationPolicy`], all through
+//!   [`config::Config::set`]): `replicate_top=R` reserves `R` spare
+//!   *replica slots* per rank and marks the top-R hottest experts
+//!   eligible (`0`, the default, disables everything at zero overhead);
+//!   `replicas` is the target copy count per hot expert;
+//!   `replication_hysteresis` and `ewma_alpha` shape the tracker.
+//! * **Tracking**: after every pass the engine folds the gate's
+//!   *offered* per-expert load (pre capacity clamp —
+//!   `PassMetrics::expert_offered`, which sums to `rows × k` even when
+//!   the kept load saturates at capacity) into an EWMA
+//!   ([`placement::LoadTracker`]).
+//! * **Install**: [`coordinator::MoeEngine::rebalance`] runs the
+//!   deterministic planner ([`placement::plan_replication`]) at a
+//!   caller-chosen quiet point; placement changes are **epoch-fenced** —
+//!   the engine blocks new submissions and waits for in-flight passes to
+//!   drain before swapping the map — so no pass ever observes a
+//!   placement change mid-flight. Packed-weight installs are cheap
+//!   (`ComputeBackend::prepare` packed every expert at start; installs
+//!   are accounted in `EngineMetrics::install_bytes`).
+//! * **Splitting**: the gate shards a replicated expert's tokens across
+//!   its serving locations by arrival index (`j % copies`), re-slotted
+//!   densely per shard, with tiles still grouped by ascending expert id
+//!   — so the plan-order combine fold is untouched and **replicated
+//!   outputs are bitwise identical to static placement** (and conformant
+//!   to the dense reference), asserted by `rust/tests/replication.rs`.
+//!
+//! `harness::replication_ab` drives live engines static-vs-replicated
+//! under Zipf-skewed routing and the Poisson serving load:
+//! `PassMetrics::hot_rank_busy_share` / `imbalance` quantify the balance
+//! win, `replica_hits` proves replicas absorbed load, and `cargo bench
+//! --bench table2_straggler` records the A/B into
+//! `BENCH_pr7_replication.json` with a CI perf-smoke gate.
+//!
 //! ## Quickstart — serving requests
 //!
 //! The serving front door: start a [`coordinator::MoeService`], enqueue
@@ -253,6 +294,7 @@ pub mod util {
 pub mod config;
 pub mod wire;
 pub mod gate;
+pub mod placement;
 pub mod layout;
 pub mod task;
 pub mod gemm;

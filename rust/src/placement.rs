@@ -1,0 +1,470 @@
+//! Dynamic expert placement: who serves which expert, and the EWMA
+//! load tracker + planner that decide it (ROADMAP item 2, grounded in
+//! "Fast MoE Inference via Predictive Prefetching and Expert
+//! Replication", PAPERS.md).
+//!
+//! The static mapping — expert `e` lives on rank `e / e_local`, slot
+//! `e % e_local` — is the [`Placement`] every engine starts with. A
+//! [`ReplicationPolicy`](crate::config::ReplicationPolicy) additionally
+//! reserves `replica_slots` expert slots per rank (heap regions, signal
+//! flags and announcement lanes sized at engine start, exactly like owned
+//! slots), and the planner may *bind* such a slot to a hot foreign expert
+//! between passes — after which the gate's dispatch plan shards that
+//! expert's tokens across its serving locations (see
+//! [`dispatch_plan`](crate::gate::dispatch_plan)).
+//!
+//! Determinism: every decision here is a pure function of the observed
+//! pass metrics and the policy (ties broken by id), so two engines fed
+//! the same pass sequence install identical replicas — which is what lets
+//! the replication conformance tests demand bitwise-identical outputs
+//! across restarts.
+
+use anyhow::{bail, Result};
+
+use crate::config::{Config, ReplicationPolicy};
+
+/// The expert→locations map consulted by the gate (`dispatch_plan`), the
+/// rank actors (announce / dispatch / combine / execute) and the
+/// bulk-synchronous baseline.
+///
+/// Slot addressing on a rank: slots `0..e_local` are the rank's *owned*
+/// experts (`slot s` ⇒ global expert `rank·e_local + s`, immutable);
+/// slots `e_local..e_local+replica_slots` are *replica* slots, unbound
+/// until the planner installs an expert into one. Each expert's location
+/// list starts with its primary owner and appends replicas in install
+/// order — the order the gate's splitter shards by, so it is part of the
+/// determinism contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    e: usize,
+    ranks: usize,
+    e_local: usize,
+    replica_slots: usize,
+    /// Serving locations per expert: `(rank, slot)`, primary first.
+    locations: Vec<Vec<(u32, u32)>>,
+    /// Per (rank, replica slot) bound global expert.
+    bound: Vec<Option<u32>>,
+    /// Bumped on every mutation; pass metrics stamp it for telemetry.
+    version: u64,
+}
+
+impl Placement {
+    /// The static block placement: expert `e` on rank `e / e_local`, no
+    /// replicas installed, `replica_slots` spare slots per rank.
+    pub fn balanced(e: usize, ranks: usize, replica_slots: usize) -> Self {
+        assert!(ranks >= 1 && e % ranks == 0, "E={e} must divide over {ranks} ranks");
+        let e_local = e / ranks;
+        let locations = (0..e)
+            .map(|ex| vec![((ex / e_local) as u32, (ex % e_local) as u32)])
+            .collect();
+        Self {
+            e,
+            ranks,
+            e_local,
+            replica_slots,
+            locations,
+            bound: vec![None; ranks * replica_slots],
+            version: 0,
+        }
+    }
+
+    /// Static placement for a config, with the policy's replica slots.
+    pub fn from_config(cfg: &Config) -> Self {
+        Self::balanced(cfg.model.e, cfg.system.ranks, cfg.replica_slots())
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.e
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    /// Owned expert slots per rank (excludes replica slots).
+    pub fn e_local(&self) -> usize {
+        self.e_local
+    }
+
+    /// Total addressable expert slots per rank: owned + replica. This is
+    /// the `E` dimension of the symmetric heap layout under replication.
+    pub fn e_slots(&self) -> usize {
+        self.e_local + self.replica_slots
+    }
+
+    pub fn replica_slots(&self) -> usize {
+        self.replica_slots
+    }
+
+    /// Primary owner of `expert` (the static `Config::owner_of`).
+    pub fn owner_of(&self, expert: usize) -> usize {
+        expert / self.e_local
+    }
+
+    /// Serving locations of `expert`: primary first, replicas in install
+    /// order. Never empty.
+    pub fn locations(&self, expert: usize) -> &[(u32, u32)] {
+        &self.locations[expert]
+    }
+
+    /// Global expert served from `slot` on `rank`: owned slots always
+    /// resolve; replica slots resolve only while bound.
+    pub fn expert_on(&self, rank: usize, slot: usize) -> Option<usize> {
+        if slot < self.e_local {
+            return Some(rank * self.e_local + slot);
+        }
+        let j = slot - self.e_local;
+        if j >= self.replica_slots {
+            return None;
+        }
+        self.bound[rank * self.replica_slots + j].map(|e| e as usize)
+    }
+
+    /// Slot serving `expert` on `rank`, if any.
+    pub fn slot_on(&self, rank: usize, expert: usize) -> Option<usize> {
+        self.locations[expert]
+            .iter()
+            .find(|(r, _)| *r as usize == rank)
+            .map(|(_, s)| *s as usize)
+    }
+
+    /// True iff any expert currently has more than one serving location.
+    pub fn has_replicas(&self) -> bool {
+        self.locations.iter().any(|l| l.len() > 1)
+    }
+
+    /// Experts with more than one serving location, ascending.
+    pub fn replicated_experts(&self) -> Vec<usize> {
+        (0..self.e).filter(|&ex| self.locations[ex].len() > 1).collect()
+    }
+
+    /// Mutation counter (0 for a fresh static placement).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// True when both placements serve every expert from the same
+    /// location list (version aside).
+    pub fn same_locations(&self, other: &Placement) -> bool {
+        self.locations == other.locations
+    }
+
+    /// Bind a replica of `expert` into the lowest free replica slot of
+    /// `rank`. Errors if the rank already serves the expert or has no
+    /// free slot. Returns the destination-local slot index.
+    pub fn add_replica(&mut self, expert: usize, rank: usize) -> Result<u32> {
+        if expert >= self.e || rank >= self.ranks {
+            bail!("replica target out of range: expert {expert}, rank {rank}");
+        }
+        if self.slot_on(rank, expert).is_some() {
+            bail!("rank {rank} already serves expert {expert}");
+        }
+        let base = rank * self.replica_slots;
+        let Some(j) = (0..self.replica_slots).find(|&j| self.bound[base + j].is_none()) else {
+            bail!("rank {rank} has no free replica slot (of {})", self.replica_slots);
+        };
+        self.bound[base + j] = Some(expert as u32);
+        let slot = (self.e_local + j) as u32;
+        self.locations[expert].push((rank as u32, slot));
+        self.version += 1;
+        Ok(slot)
+    }
+
+    /// Unbind the replica of `expert` on `rank` (primary locations are
+    /// immutable). Returns true if a replica was removed.
+    pub fn remove_replica(&mut self, expert: usize, rank: usize) -> bool {
+        let locs = &mut self.locations[expert];
+        let Some(i) = locs[1..]
+            .iter()
+            .position(|(r, _)| *r as usize == rank)
+            .map(|i| i + 1)
+        else {
+            return false;
+        };
+        let (_, slot) = locs.remove(i);
+        let j = slot as usize - self.e_local;
+        self.bound[rank * self.replica_slots + j] = None;
+        self.version += 1;
+        true
+    }
+
+    /// Remove every replica of `expert`.
+    pub fn drop_replicas(&mut self, expert: usize) {
+        while self.locations[expert].len() > 1 {
+            let (rank, _) = self.locations[expert][1];
+            self.remove_replica(expert, rank as usize);
+        }
+    }
+
+    /// Predicted load share landing on `rank` under this placement, given
+    /// per-expert EWMA loads: each expert's load divides evenly over its
+    /// serving locations (which is exactly what the `j % R` splitter
+    /// does).
+    pub fn rank_load(&self, expert_ewma: &[f64], rank: usize) -> f64 {
+        let mut acc = 0.0;
+        for (ex, locs) in self.locations.iter().enumerate() {
+            if locs.iter().any(|(r, _)| *r as usize == rank) {
+                acc += expert_ewma.get(ex).copied().unwrap_or(0.0) / locs.len() as f64;
+            }
+        }
+        acc
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EWMA load tracking
+// ---------------------------------------------------------------------------
+
+/// Exponentially-weighted moving averages of per-expert *offered* load
+/// (rows/pass, pre capacity clamp) and per-rank busy time, fed one
+/// [`PassMetrics`](crate::coordinator::PassMetrics) observation at a
+/// time. The first observation seeds the averages directly so a cold
+/// tracker converges in one pass.
+#[derive(Clone, Debug)]
+pub struct LoadTracker {
+    alpha: f64,
+    expert: Vec<f64>,
+    rank_busy: Vec<f64>,
+    passes: u64,
+}
+
+impl LoadTracker {
+    pub fn new(e: usize, ranks: usize, alpha: f64) -> Self {
+        let alpha = if alpha.is_finite() { alpha.clamp(1e-3, 1.0) } else { 0.3 };
+        Self { alpha, expert: vec![0.0; e], rank_busy: vec![0.0; ranks], passes: 0 }
+    }
+
+    /// Fold one pass's per-expert offered loads and per-rank busy seconds
+    /// into the averages.
+    pub fn observe(&mut self, offered: &[u64], busy_secs: &[f64]) {
+        debug_assert_eq!(offered.len(), self.expert.len());
+        let a = if self.passes == 0 { 1.0 } else { self.alpha };
+        for (ew, &x) in self.expert.iter_mut().zip(offered) {
+            *ew = a * x as f64 + (1.0 - a) * *ew;
+        }
+        for (rb, &x) in self.rank_busy.iter_mut().zip(busy_secs) {
+            *rb = a * x + (1.0 - a) * *rb;
+        }
+        self.passes += 1;
+    }
+
+    /// EWMA offered load per expert (rows/pass).
+    pub fn expert_load(&self) -> &[f64] {
+        &self.expert
+    }
+
+    /// EWMA busy seconds per rank.
+    pub fn rank_busy(&self) -> &[f64] {
+        &self.rank_busy
+    }
+
+    pub fn mean_load(&self) -> f64 {
+        if self.expert.is_empty() {
+            return 0.0;
+        }
+        self.expert.iter().sum::<f64>() / self.expert.len() as f64
+    }
+
+    pub fn passes(&self) -> u64 {
+        self.passes
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the planner
+// ---------------------------------------------------------------------------
+
+/// Compute the desired placement for the next pass: keep justified
+/// replicas, tear down stale ones, and replicate the top-R hottest
+/// experts onto the most underloaded ranks.
+///
+/// Thresholds form a hysteresis band: an expert *enters* replication at
+/// `EWMA ≥ hysteresis × mean` and *exits* only below `hysteresis/2 ×
+/// mean`, so borderline experts don't flap a replica in and out every
+/// pass. Target ranks are chosen by ascending predicted load
+/// ([`Placement::rank_load`]) with ties to the lower rank id — fully
+/// deterministic given the same observation stream.
+pub fn plan_replication(
+    policy: &ReplicationPolicy,
+    tracker: &LoadTracker,
+    current: &Placement,
+) -> Placement {
+    let mut next = current.clone();
+    if !policy.enabled() || tracker.passes() == 0 {
+        return next;
+    }
+    let ewma = tracker.expert_load();
+    let mean = tracker.mean_load();
+    if mean <= 0.0 {
+        return next;
+    }
+    let enter = policy.hysteresis * mean;
+    let exit = 0.5 * policy.hysteresis * mean;
+
+    // hottest eligible experts: load >= enter threshold, top_r of them
+    let mut hot: Vec<usize> = (0..next.num_experts()).filter(|&ex| ewma[ex] >= enter).collect();
+    hot.sort_by(|&a, &b| ewma[b].total_cmp(&ewma[a]).then(a.cmp(&b)));
+    hot.truncate(policy.top_r);
+
+    // tear down replicas that no longer pay for themselves
+    for ex in next.replicated_experts() {
+        if !hot.contains(&ex) && ewma[ex] < exit {
+            next.drop_replicas(ex);
+        }
+    }
+
+    // grow hot experts toward the target copy count, most-loaded first
+    let target = policy.replicas.min(next.ranks()).max(1);
+    for &ex in &hot {
+        while next.locations(ex).len() < target {
+            let candidate = (0..next.ranks())
+                .filter(|&r| next.slot_on(r, ex).is_none())
+                .filter(|&r| {
+                    // a free replica slot must exist on the candidate
+                    (next.e_local()..next.e_slots())
+                        .any(|s| next.expert_on(r, s).is_none())
+                })
+                .min_by(|&a, &b| {
+                    next.rank_load(ewma, a)
+                        .total_cmp(&next.rank_load(ewma, b))
+                        .then(a.cmp(&b))
+                });
+            let Some(rank) = candidate else { break };
+            if next.add_replica(ex, rank).is_err() {
+                break;
+            }
+        }
+    }
+    next
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_placement_matches_block_ownership() {
+        let p = Placement::balanced(8, 4, 0);
+        assert_eq!(p.e_local(), 2);
+        assert_eq!(p.e_slots(), 2);
+        for ex in 0..8 {
+            assert_eq!(p.owner_of(ex), ex / 2);
+            assert_eq!(p.locations(ex), &[((ex / 2) as u32, (ex % 2) as u32)]);
+        }
+        for r in 0..4 {
+            for s in 0..2 {
+                assert_eq!(p.expert_on(r, s), Some(r * 2 + s));
+            }
+            assert_eq!(p.expert_on(r, 2), None, "no replica slots configured");
+        }
+        assert!(!p.has_replicas());
+    }
+
+    #[test]
+    fn replicas_bind_resolve_and_unbind() {
+        let mut p = Placement::balanced(8, 4, 2);
+        assert_eq!(p.e_slots(), 4);
+        let v0 = p.version();
+        let slot = p.add_replica(0, 3).unwrap();
+        assert_eq!(slot, 2, "lowest free replica slot");
+        assert!(p.version() > v0);
+        assert_eq!(p.expert_on(3, 2), Some(0));
+        assert_eq!(p.slot_on(3, 0), Some(2));
+        assert_eq!(p.locations(0), &[(0, 0), (3, 2)]);
+        assert!(p.has_replicas());
+        assert_eq!(p.replicated_experts(), vec![0]);
+        // second replica on the same rank takes the next slot
+        let s2 = p.add_replica(5, 3).unwrap();
+        assert_eq!(s2, 3);
+        // duplicates and exhaustion refuse loudly
+        assert!(p.add_replica(0, 3).is_err(), "rank already serves expert 0");
+        assert!(p.add_replica(0, 0).is_err(), "owner already serves expert 0");
+        assert!(p.add_replica(1, 3).is_err(), "no free slot left on rank 3");
+        assert!(p.remove_replica(0, 3));
+        assert!(!p.remove_replica(0, 3), "already removed");
+        assert_eq!(p.expert_on(3, 2), None);
+        // freed slot is reusable
+        assert_eq!(p.add_replica(1, 3).unwrap(), 2);
+    }
+
+    #[test]
+    fn rank_load_splits_over_locations() {
+        let mut p = Placement::balanced(4, 2, 1);
+        let ewma = vec![10.0, 2.0, 1.0, 1.0];
+        assert_eq!(p.rank_load(&ewma, 0), 12.0);
+        assert_eq!(p.rank_load(&ewma, 1), 2.0);
+        p.add_replica(0, 1).unwrap();
+        assert_eq!(p.rank_load(&ewma, 0), 7.0, "hot expert halves over 2 copies");
+        assert_eq!(p.rank_load(&ewma, 1), 7.0);
+    }
+
+    #[test]
+    fn tracker_seeds_then_smooths() {
+        let mut t = LoadTracker::new(2, 1, 0.5);
+        t.observe(&[10, 0], &[1.0]);
+        assert_eq!(t.expert_load(), &[10.0, 0.0], "first observation seeds");
+        t.observe(&[0, 10], &[2.0]);
+        assert_eq!(t.expert_load(), &[5.0, 5.0]);
+        assert_eq!(t.rank_busy(), &[1.5]);
+        assert_eq!(t.mean_load(), 5.0);
+        assert_eq!(t.passes(), 2);
+    }
+
+    #[test]
+    fn planner_replicates_hot_and_tears_down_cold() {
+        let policy = ReplicationPolicy {
+            top_r: 1,
+            replicas: 2,
+            hysteresis: 1.5,
+            ewma_alpha: 1.0,
+        };
+        let mut tracker = LoadTracker::new(4, 2, policy.ewma_alpha);
+        let p0 = Placement::balanced(4, 2, 1);
+        // skewed: expert 0 takes most offered load
+        tracker.observe(&[90, 2, 4, 4], &[0.9, 0.1]);
+        let p1 = plan_replication(&policy, &tracker, &p0);
+        assert_eq!(p1.locations(0).len(), 2, "hot expert replicated");
+        let (rank, slot) = p1.locations(0)[1];
+        assert_eq!(rank, 1, "replica lands on the underloaded rank");
+        assert_eq!(slot as usize, p1.e_local());
+        // planner is deterministic and stable under unchanged load
+        let p1b = plan_replication(&policy, &tracker, &p0);
+        assert!(p1.same_locations(&p1b));
+        let p2 = plan_replication(&policy, &tracker, &p1);
+        assert!(p2.same_locations(&p1), "no churn when load is steady");
+        // load flattens far below the exit threshold -> replica removed
+        for _ in 0..3 {
+            tracker.observe(&[25, 25, 25, 25], &[0.5, 0.5]);
+        }
+        let p3 = plan_replication(&policy, &tracker, &p1);
+        assert!(!p3.has_replicas(), "cold expert torn down");
+        // disabled policy never mutates
+        let off = ReplicationPolicy::default();
+        assert!(!off.enabled());
+        let p4 = plan_replication(&off, &tracker, &p1);
+        assert!(p4.same_locations(&p1));
+    }
+
+    #[test]
+    fn planner_respects_hysteresis_band() {
+        let policy = ReplicationPolicy {
+            top_r: 1,
+            replicas: 2,
+            hysteresis: 1.5,
+            ewma_alpha: 1.0,
+        };
+        let mut tracker = LoadTracker::new(4, 2, 1.0);
+        // expert 0 hot: mean 25, enter = 37.5
+        tracker.observe(&[70, 10, 10, 10], &[0.0, 0.0]);
+        let p1 = plan_replication(&policy, &tracker, &Placement::balanced(4, 2, 1));
+        assert!(p1.has_replicas());
+        // cooled into the band (exit = 18.75 < 30 < 37.5): replica stays
+        tracker.observe(&[30, 23, 23, 24], &[0.0, 0.0]);
+        let p2 = plan_replication(&policy, &tracker, &p1);
+        assert!(p2.has_replicas(), "inside the band: no teardown");
+        // fully cold (below exit): torn down
+        tracker.observe(&[5, 31, 32, 32], &[0.0, 0.0]);
+        let p3 = plan_replication(&policy, &tracker, &p2);
+        assert!(!p3.has_replicas());
+    }
+}

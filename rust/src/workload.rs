@@ -16,6 +16,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{Config, ModelConfig};
 use crate::gate::{dispatch_plan, route_from_scores, DispatchPlan, Routing};
+use crate::placement::Placement;
 use crate::util::prng::Rng;
 
 /// Routing skew shape.
@@ -210,18 +211,71 @@ pub fn synth_routing(
     route_from_scores(scores, s_rank, model, capacity)
 }
 
-/// Build the full per-rank workload set for a config.
+/// Build the full per-rank workload set for a config, under the static
+/// block placement (no replication).
 pub fn cluster_workload(cfg: &Config, skew: Skew, seed: u64) -> Vec<RankWorkload> {
     let capacity = cfg.model.slot_capacity(cfg.system.s_rank);
+    let placement = Placement::from_config(cfg);
     let base = Rng::new(seed);
     (0..cfg.system.ranks)
         .map(|r| {
             let mut rng = base.fork(r as u64 + 0x50);
             let routing = synth_routing(&cfg.model, cfg.system.s_rank, capacity, skew, &mut rng);
-            let plan = dispatch_plan(&routing, cfg.model.bm, |e| cfg.owner_of(e));
+            let plan = dispatch_plan(&routing, cfg.model.bm, &placement);
             RankWorkload { routing, plan }
         })
         .collect()
+}
+
+/// Synthesize token *embeddings* whose gate scores under the model's real
+/// gate matrix `wg` (row-major (H, E)) are skewed toward `skew`-drawn
+/// favorite experts — the live-engine analogue of [`synth_routing`]:
+/// where that replays synthetic scores through the routing code, this
+/// builds inputs so the production gate GEMM itself produces the skew.
+/// Each token is small isotropic noise plus 2.5 × the unit-normalized
+/// `wg` column of its favorite expert, so `x · wg` peaks at the favorite
+/// with high probability. Deterministic in `rng`; returns `rows × h`.
+pub fn skewed_tokens(
+    wg: &[f32],
+    h: usize,
+    e: usize,
+    rows: usize,
+    skew: Skew,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    debug_assert_eq!(wg.len(), h * e);
+    // unit-normalize each gate column once (wg is row-major, columns strided)
+    let mut cols = vec![0.0f32; e * h];
+    for ex in 0..e {
+        let mut norm = 0.0f32;
+        for r in 0..h {
+            let v = wg[r * e + ex];
+            cols[ex * h + r] = v;
+            norm += v * v;
+        }
+        let inv = 1.0 / norm.sqrt().max(1e-6);
+        for v in &mut cols[ex * h..(ex + 1) * h] {
+            *v *= inv;
+        }
+    }
+    let mut out = vec![0.0f32; rows * h];
+    for row in out.chunks_mut(h) {
+        let fav = match skew {
+            Skew::Uniform => rng.below(e),
+            Skew::Zipf => rng.zipf(e, 1.1),
+            Skew::Hot => {
+                if rng.f64() < 0.7 {
+                    rng.below((e / 8).max(1))
+                } else {
+                    rng.below(e)
+                }
+            }
+        };
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = rng.normal_f32(0.0, 0.3) + 2.5 * cols[fav * h + j];
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -317,6 +371,45 @@ mod tests {
             let t = ArrivalProcess::Trace(p.to_str().unwrap().into());
             assert!(t.arrivals(1, (1, 1), &mut Rng::new(0)).is_err(), "{bad:?} must error");
         }
+    }
+
+    #[test]
+    fn skewed_tokens_skew_the_real_gate() {
+        use crate::expert::ModelParams;
+        let cfg = Config::preset("tiny").unwrap();
+        let params = ModelParams::generate(&cfg, 5);
+        let (h, e) = (cfg.model.h, cfg.model.e);
+        let rows = 256;
+        // score through the actual gate matmul + production routing
+        let route = |toks: &[f32]| {
+            let mut s = vec![0.0f32; rows * e];
+            for r in 0..rows {
+                for j in 0..e {
+                    let mut acc = 0.0f32;
+                    for x in 0..h {
+                        acc += toks[r * h + x] * params.wg[x * e + j];
+                    }
+                    s[r * e + j] = acc;
+                }
+            }
+            crate::gate::softmax_rows(&mut s, e);
+            route_from_scores(s, rows, &cfg.model, rows)
+        };
+        let zipf =
+            route(&skewed_tokens(&params.wg, h, e, rows, Skew::Zipf, &mut Rng::new(9)));
+        let uni =
+            route(&skewed_tokens(&params.wg, h, e, rows, Skew::Uniform, &mut Rng::new(9)));
+        let max_z = *zipf.offered_load.iter().max().unwrap();
+        let max_u = *uni.offered_load.iter().max().unwrap();
+        assert!(
+            max_z > max_u,
+            "zipf tokens should concentrate offered load through the real gate: {max_z} vs {max_u}"
+        );
+        // deterministic under the same seed
+        assert_eq!(
+            skewed_tokens(&params.wg, h, e, rows, Skew::Zipf, &mut Rng::new(9)),
+            skewed_tokens(&params.wg, h, e, rows, Skew::Zipf, &mut Rng::new(9)),
+        );
     }
 
     #[test]

@@ -8,13 +8,15 @@ use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 
 use flashdmoe::config::{
-    Config, CostModel, DispatchMode, ModelConfig, RoutingPolicy, SystemConfig, WirePrecision,
+    Config, CostModel, DispatchMode, ModelConfig, ReplicationPolicy, RoutingPolicy, SystemConfig,
+    WirePrecision,
 };
 use flashdmoe::coordinator::scheduler::TaskQueue;
 use flashdmoe::coordinator::{MoeEngine, TaskGraphMode};
 use flashdmoe::expert::{generate_tokens, ModelParams};
 use flashdmoe::gate::{dispatch_plan, route_from_scores};
 use flashdmoe::layout::{conflict_free, write_is_valid, Coord, LayoutDims, Write, BUFFERS, ROUNDS};
+use flashdmoe::placement::Placement;
 use flashdmoe::runtime::{ComputeBackend, NativeBackend};
 use flashdmoe::task::{Task, TaskBound, TaskType};
 use flashdmoe::util::check::{dense_reference_moe, forall, Gen};
@@ -183,7 +185,7 @@ fn dispatch_plan_partitions_routes() {
         |g| random_routing(g),
         |(model, s, scores, capacity)| {
             let r = route_from_scores(scores.clone(), *s, model, *capacity);
-            let plan = dispatch_plan(&r, model.bm, |e| e % 3);
+            let plan = dispatch_plan(&r, model.bm, &Placement::balanced(model.e, 2, 0));
             let covered: usize = plan.tiles.iter().map(|t| t.tokens.len()).sum();
             if covered != r.routes.len() {
                 return Err(format!("plan covers {covered}, routes {}", r.routes.len()));
@@ -198,6 +200,139 @@ fn dispatch_plan_partitions_routes() {
                 if t.tokens.len() != t.weights.len() {
                     return Err("tokens/weights arity mismatch".into());
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn offered_load_sums_to_s_times_k_under_both_policies() {
+    // The skew-telemetry contract: `offered_load` counts every (token,
+    // expert) pair *before* the capacity clamp, so it always sums to S·k
+    // and decomposes as kept + dropped per expert — under Capacity (where
+    // kept saturates) and Dropless (where offered == kept) alike.
+    forall(
+        0x0FFE,
+        300,
+        |g| {
+            let (model, s, scores, capacity) = random_routing(g);
+            let dropless = g.int(0, 1) == 1;
+            (model, s, scores, capacity, dropless)
+        },
+        |(model, s, scores, capacity, dropless)| {
+            let mut m = model.clone();
+            let cap = if *dropless {
+                m.policy = RoutingPolicy::Dropless;
+                m.slot_capacity(*s)
+            } else {
+                *capacity
+            };
+            let r = route_from_scores(scores.clone(), *s, &m, cap);
+            let offered: u64 = r.offered_load.iter().map(|&x| x as u64).sum();
+            if offered != (s * m.k) as u64 {
+                return Err(format!("offered sums to {offered}, want {}", s * m.k));
+            }
+            let kept: u64 = r.expert_load.iter().map(|&x| x as u64).sum();
+            if kept + r.dropped as u64 != offered {
+                return Err(format!(
+                    "kept {kept} + dropped {} != offered {offered}",
+                    r.dropped
+                ));
+            }
+            for e in 0..m.e {
+                if r.offered_load[e] < r.expert_load[e] {
+                    return Err(format!(
+                        "expert {e}: offered {} below kept {}",
+                        r.offered_load[e], r.expert_load[e]
+                    ));
+                }
+            }
+            if *dropless && r.offered_load != r.expert_load {
+                return Err("dropless: offered must equal kept".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn gate_survives_nan_and_inf_scores() {
+    // The NaN/Inf fuzz: arbitrary non-finite garbage in the raw gate
+    // logits must never panic (`topk_rows` used to die on
+    // `partial_cmp().unwrap()`), and routing must still offer every
+    // token's full top-k fan-out — non-finite rows fall back to uniform
+    // scores rather than vanishing.
+    forall(
+        0xFA7A1,
+        300,
+        |g| {
+            let e = g.choose(&[2usize, 4, 8]);
+            let k = 1 + g.int(0, e - 1);
+            let bm = g.choose(&[2usize, 4]);
+            let s = bm * g.int(1, 8);
+            let mut rng = Rng::new(g.int(0, u32::MAX as usize) as u64);
+            let mut logits = rng.normal_vec(s * e, 1.0);
+            // poison a random subset with the full non-finite menagerie
+            let n_poison = g.int(0, logits.len());
+            for _ in 0..n_poison {
+                let i = g.int(0, logits.len() - 1);
+                logits[i] = *g.choose(&[
+                    f32::NAN,
+                    f32::INFINITY,
+                    f32::NEG_INFINITY,
+                    -0.0,
+                    f32::MAX,
+                ]);
+            }
+            let model = ModelConfig {
+                h: 4,
+                d: 8,
+                e,
+                k,
+                bm,
+                bn: 4,
+                policy: RoutingPolicy::Dropless,
+            };
+            (model, s, logits)
+        },
+        |(model, s, logits)| {
+            // softmax_rows + route_from_scores is the engine's gate path;
+            // catch_unwind would mask the panic location, so just call it —
+            // a panic here fails the property outright.
+            let mut scores = logits.clone();
+            flashdmoe::gate::softmax_rows(&mut scores, model.e);
+            if scores.iter().any(|v| !v.is_finite()) {
+                return Err("softmax left non-finite scores".into());
+            }
+            let cap = model.slot_capacity(*s);
+            let r = route_from_scores(scores, *s, model, cap);
+            let offered: u64 = r.offered_load.iter().map(|&x| x as u64).sum();
+            if offered != (s * model.k) as u64 {
+                return Err(format!(
+                    "poisoned gate offered {offered}, want {} — rows went missing",
+                    s * model.k
+                ));
+            }
+            if r.dropped != 0 {
+                return Err(format!("dropless dropped {}", r.dropped));
+            }
+            // every token keeps its k routes with finite combine weights
+            let mut per_token = vec![0usize; *s];
+            for x in &r.routes {
+                per_token[x.token as usize] += 1;
+                if !x.combine_weight.is_finite() {
+                    return Err(format!("non-finite combine weight on token {}", x.token));
+                }
+            }
+            if per_token.iter().any(|&n| n != model.k) {
+                return Err("a token lost part of its top-k fan-out".into());
+            }
+            // and the dispatch plan still covers everything
+            let plan = dispatch_plan(&r, model.bm, &Placement::balanced(model.e, 1, 0));
+            let covered: usize = plan.tiles.iter().map(|t| t.tokens.len()).sum();
+            if covered != r.routes.len() {
+                return Err(format!("plan covers {covered} of {}", r.routes.len()));
             }
             Ok(())
         },
@@ -235,7 +370,7 @@ fn dropless_routing_keeps_every_pair_and_all_weight_mass() {
             }
             // the variable tile list covers every pair exactly once, full
             // tiles followed by one partially-filled tail per expert
-            let plan = dispatch_plan(&r, m.bm, |e| e % 2);
+            let plan = dispatch_plan(&r, m.bm, &Placement::balanced(m.e, 2, 0));
             let covered: usize = plan.tiles.iter().map(|t| t.tokens.len()).sum();
             if covered != r.routes.len() {
                 return Err(format!("plan covers {covered}, routes {}", r.routes.len()));
@@ -286,6 +421,7 @@ fn dropless_engine_matches_dense_reference_under_fuzzed_skew() {
                     packed: true,
                     wire: WirePrecision::F32,
                     dispatch: DispatchMode::Flat,
+                    replication: ReplicationPolicy::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             };

@@ -1,0 +1,204 @@
+//! Conformance tests for hot-expert replication: the EWMA-driven
+//! `MoeEngine::rebalance` path must never change what the layer
+//! computes — only where it computes it. Outputs of a replicated engine
+//! are asserted **bitwise identical** to the static-placement engine
+//! (the deterministic gate-side splitter preserves the combine fold),
+//! within the f32 conformance bound of the dense per-token reference
+//! under dropless routing, and bitwise reproducible across engine
+//! restarts — for every routing policy × dispatch mode combination.
+
+use std::sync::Arc;
+
+use flashdmoe::config::Config;
+use flashdmoe::coordinator::{baseline, MoeEngine, TaskGraphMode};
+use flashdmoe::expert::ModelParams;
+use flashdmoe::runtime::{ComputeBackend, NativeBackend};
+use flashdmoe::util::check::dense_reference_moe;
+use flashdmoe::util::prng::Rng;
+use flashdmoe::util::stats::max_abs_diff;
+use flashdmoe::workload::{skewed_tokens, Skew};
+
+/// 4 ranks over the tiny model (2 owned experts each). `replicated`
+/// turns on top-2 / 2-copy replication with a low enter threshold and a
+/// fast EWMA so a few warm passes trip the rebalance deterministically.
+fn rep_cfg(replicated: bool, policy: &str, dispatch: &str) -> Config {
+    let mut cfg = Config::preset("tiny").unwrap();
+    cfg.set("ranks", "4").unwrap();
+    cfg.set("tokens", "128").unwrap();
+    cfg.set("routing_policy", policy).unwrap();
+    if dispatch == "hierarchical" {
+        cfg.set("nodes", "2").unwrap();
+    }
+    cfg.set("dispatch", dispatch).unwrap();
+    if replicated {
+        cfg.set("replicate_top", "2").unwrap();
+        cfg.set("replicas", "2").unwrap();
+        cfg.set("replication_hysteresis", "1.2").unwrap();
+        cfg.set("ewma_alpha", "0.5").unwrap();
+    }
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// Zipf-skewed tokens through the production gate, per rank,
+/// deterministic in (seed, rank).
+fn zipf_inputs(cfg: &Config, params: &ModelParams, seed: u64) -> Vec<Vec<f32>> {
+    let (h, e) = (cfg.model.h, cfg.model.e);
+    (0..cfg.system.ranks)
+        .map(|r| {
+            let mut rng = Rng::new(seed).fork(0x7E97_0000 + r as u64);
+            skewed_tokens(&params.wg, h, e, cfg.system.s_rank, Skew::Zipf, &mut rng)
+        })
+        .collect()
+}
+
+struct Run {
+    outputs: Vec<Vec<f32>>,
+    replica_hits: u64,
+    placement_version: u64,
+    rebalanced: bool,
+}
+
+/// Warm passes feed the tracker, one explicit rebalance at the quiet
+/// point, then a measured pass.
+fn run_engine(cfg: &Config, params: &Arc<ModelParams>, inputs: &[Vec<f32>]) -> Run {
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(cfg));
+    let engine =
+        MoeEngine::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused).unwrap();
+    for _ in 0..3 {
+        engine.submit(inputs).unwrap().wait().unwrap();
+    }
+    let rebalanced = engine.rebalance().unwrap();
+    let res = engine.submit(inputs).unwrap().wait().unwrap();
+    engine.shutdown();
+    Run {
+        outputs: res.outputs,
+        replica_hits: res.metrics.replica_hits(),
+        placement_version: res.metrics.placement_version,
+        rebalanced,
+    }
+}
+
+fn assert_bitwise(a: &[Vec<f32>], b: &[Vec<f32>], what: &str) {
+    for (r, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.len(), y.len(), "{what}: rank {r} output shape diverged");
+        for (i, (p, q)) in x.iter().zip(y).enumerate() {
+            assert_eq!(
+                p.to_bits(),
+                q.to_bits(),
+                "{what}: rank {r} elem {i}: {p} != {q} (bitwise)"
+            );
+        }
+    }
+}
+
+#[test]
+fn replicated_engine_matches_dense_reference_and_static_bitwise() {
+    let seed = 42;
+    let stat_cfg = rep_cfg(false, "dropless", "flat");
+    let repl_cfg = rep_cfg(true, "dropless", "flat");
+    let params = Arc::new(ModelParams::generate(&stat_cfg, seed));
+    let inputs = zipf_inputs(&stat_cfg, &params, seed);
+
+    let stat = run_engine(&stat_cfg, &params, &inputs);
+    let repl = run_engine(&repl_cfg, &params, &inputs);
+
+    assert!(!stat.rebalanced, "disabled policy must never rebalance");
+    assert!(repl.rebalanced, "Zipf skew past the enter threshold must replicate");
+    assert!(repl.placement_version > 0, "measured pass ran pre-rebalance");
+    assert!(repl.replica_hits > 0, "no rows ever hit a replica slot");
+    assert_eq!(stat.replica_hits, 0, "static placement has no replica slots");
+
+    // replication must not change a single output bit
+    assert_bitwise(&stat.outputs, &repl.outputs, "static vs replicated");
+
+    // and both conform to the dense per-token oracle under dropless
+    for (r, out) in repl.outputs.iter().enumerate() {
+        let want = dense_reference_moe(&repl_cfg, &params, &inputs[r]);
+        let diff = max_abs_diff(out, &want);
+        assert!(diff < 1e-5, "rank {r}: replicated engine err {diff} vs dense reference");
+    }
+}
+
+#[test]
+fn replication_is_bitwise_reproducible_across_restarts() {
+    let seed = 7;
+    let cfg = rep_cfg(true, "dropless", "flat");
+    let params = Arc::new(ModelParams::generate(&cfg, seed));
+    let inputs = zipf_inputs(&cfg, &params, seed);
+
+    let a = run_engine(&cfg, &params, &inputs);
+    let b = run_engine(&cfg, &params, &inputs);
+
+    assert_eq!(a.rebalanced, b.rebalanced, "rebalance decision must be deterministic");
+    assert_eq!(a.placement_version, b.placement_version, "placement must be deterministic");
+    assert_eq!(a.replica_hits, b.replica_hits, "replica routing must be deterministic");
+    assert_bitwise(&a.outputs, &b.outputs, "restart A vs restart B");
+}
+
+#[test]
+fn replication_preserves_outputs_across_policies_and_dispatch_modes() {
+    let seed = 11;
+    // Routing (including capacity drops) is computed before the
+    // placement-aware splitter ever runs, so bitwise identity must hold
+    // under Capacity exactly as under Dropless, and the hierarchical
+    // proxy hop preserves logical sources, so it must hold there too.
+    for policy in ["capacity:1.0", "dropless"] {
+        for dispatch in ["flat", "hierarchical"] {
+            let stat_cfg = rep_cfg(false, policy, dispatch);
+            let repl_cfg = rep_cfg(true, policy, dispatch);
+            let params = Arc::new(ModelParams::generate(&stat_cfg, seed));
+            let inputs = zipf_inputs(&stat_cfg, &params, seed);
+
+            let stat = run_engine(&stat_cfg, &params, &inputs);
+            let repl = run_engine(&repl_cfg, &params, &inputs);
+
+            assert!(repl.rebalanced, "{policy}/{dispatch}: Zipf skew must replicate");
+            assert!(repl.replica_hits > 0, "{policy}/{dispatch}: no replica rows");
+            assert_bitwise(
+                &stat.outputs,
+                &repl.outputs,
+                &format!("static vs replicated ({policy}, {dispatch})"),
+            );
+        }
+    }
+}
+
+#[test]
+fn baseline_placed_agrees_with_replicated_engine() {
+    let seed = 13;
+    let cfg = rep_cfg(true, "dropless", "flat");
+    let params = Arc::new(ModelParams::generate(&cfg, seed));
+    let inputs = zipf_inputs(&cfg, &params, seed);
+
+    // drive the engine to a replicated placement, snapshot it, and run
+    // the bulk-synchronous baseline under that exact placement — a
+    // second, independently-scheduled witness for the splitter
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+    let engine =
+        MoeEngine::start(cfg.clone(), params.clone(), backend.clone(), TaskGraphMode::Fused)
+            .unwrap();
+    for _ in 0..3 {
+        engine.submit(&inputs).unwrap().wait().unwrap();
+    }
+    assert!(engine.rebalance().unwrap(), "Zipf skew must replicate");
+    let placement = engine.placement();
+    assert!(placement.has_replicas(), "rebalance installed no replicas");
+    let res = engine.submit(&inputs).unwrap().wait().unwrap();
+    engine.shutdown();
+
+    let placed =
+        baseline::forward_sequential_placed(&cfg, &params, &backend, &inputs, &placement).unwrap();
+    for (r, (e, b)) in res.outputs.iter().zip(&placed.outputs).enumerate() {
+        let diff = max_abs_diff(e, b);
+        assert!(diff < 1e-4, "rank {r}: engine vs placed baseline diverged by {diff}");
+    }
+
+    // the placed baseline under the *static* placement must equal the
+    // plain baseline bitwise (the delegation is exact)
+    let static_placement = flashdmoe::placement::Placement::from_config(&cfg);
+    let a = baseline::forward_sequential(&cfg, &params, &backend, &inputs).unwrap();
+    let b = baseline::forward_sequential_placed(&cfg, &params, &backend, &inputs, &static_placement)
+        .unwrap();
+    assert_bitwise(&a.outputs, &b.outputs, "baseline vs placed-static baseline");
+}
