@@ -1,0 +1,76 @@
+//! Chaos A/B — fault-tolerant serving, **measured on live engines**:
+//! the same open-loop Zipf serving workload with the deterministic fault
+//! schedule off ("clean") or on ("faulted": every transfer of pass
+//! epoch 2 fails transiently, rank 3 dies permanently at epoch 6).
+//! Correctness is asserted inside the harness (both arms serve every
+//! accepted request; the faulted arm actually injects, retries, and
+//! degrades); this bench reports the *cost* of surviving — availability,
+//! p50/p99/p99.9 request latency, retry and degraded-pass counts.
+//!
+//! Emits `BENCH_pr8_chaos.json` (section `chaos_ab`) for the CI artifact
+//! upload. With `PERF_SMOKE=1` the run FAILS unless the faulted arm
+//! (a) kept availability at 100% — retry plus degraded-capacity routing
+//! must hide the whole schedule from clients — and (b) actually paid for
+//! it (injected faults, at least one retry, at least one degraded pass),
+//! so the gate cannot pass vacuously on a schedule that never fired.
+//!
+//!     cargo bench --bench chaos_bench
+fn main() {
+    let (text, pts) = flashdmoe::harness::chaos_ab(42).unwrap();
+    println!("{text}");
+
+    flashdmoe::harness::update_bench_json(
+        "BENCH_pr8_chaos.json",
+        "chaos_ab",
+        flashdmoe::harness::chaos_json(&pts),
+    )
+    .unwrap();
+    println!("wrote BENCH_pr8_chaos.json (section chaos_ab)");
+
+    let perf_smoke = std::env::var("PERF_SMOKE").map(|v| v == "1").unwrap_or(false);
+    if perf_smoke {
+        let mut failed = false;
+        let clean = pts.iter().find(|p| p.arm == "clean");
+        let faulted = pts.iter().find(|p| p.arm == "faulted");
+        let (Some(clean), Some(faulted)) = (clean, faulted) else {
+            eprintln!("PERF_SMOKE FAIL: missing an arm in the chaos A/B");
+            std::process::exit(1);
+        };
+        for (arm, p) in [("clean", clean), ("faulted", faulted)] {
+            if p.availability < 1.0 {
+                eprintln!(
+                    "PERF_SMOKE FAIL: {arm} arm availability {:.3} < 1.0 \
+                     ({} served, {} failed, {} deadline misses)",
+                    p.availability, p.served, p.failed, p.deadline_misses
+                );
+                failed = true;
+            }
+        }
+        // the schedule must have actually fired — otherwise the
+        // availability check above is vacuous
+        if faulted.faults_injected == 0 || faulted.retries == 0 || faulted.degraded_passes == 0 {
+            eprintln!(
+                "PERF_SMOKE FAIL: fault schedule never fired (faults {}, retries {}, \
+                 degraded passes {})",
+                faulted.faults_injected, faulted.retries, faulted.degraded_passes
+            );
+            failed = true;
+        }
+        if !failed {
+            println!(
+                "PERF_SMOKE ok: faulted arm served {}/{} (p99 {:.1}x clean, p99.9 {:.1}x), \
+                 {} retries, {} degraded passes, {} faults injected",
+                faulted.served,
+                faulted.requests,
+                faulted.latency_p99 / clean.latency_p99.max(1e-9),
+                faulted.latency_p999 / clean.latency_p999.max(1e-9),
+                faulted.retries,
+                faulted.degraded_passes,
+                faulted.faults_injected
+            );
+        }
+        if failed {
+            std::process::exit(1);
+        }
+    }
+}

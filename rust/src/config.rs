@@ -75,6 +75,33 @@
 //!   down below half that, so borderline experts don't flap.
 //! * `ewma_alpha` — smoothing factor of the load tracker in `(0, 1]`.
 //!
+//! ## Fault-tolerance knobs
+//!
+//! The robustness layer (ROADMAP item 5) is governed from here; the
+//! deterministic injection schedule itself lives in [`FaultConfig`] /
+//! `crate::fault`, and the recovery machinery in the engine:
+//!
+//! * `watchdog_secs` — seconds without subscriber progress before a rank
+//!   declares the pass wedged and panics (default 120; chaos tests dial
+//!   it down so wedge detection runs at test scale).
+//! * `retry_limit` — how many times a failed pass is transparently
+//!   re-fenced and resubmitted by the engine before the error surfaces
+//!   to the caller (default 0: fail fast, the pre-existing behavior).
+//!   A transiently-faulted pass retried this way produces bitwise
+//!   identical output to a fault-free run.
+//! * `fault_seed` / `fault_transient_rate` / `fault_transient_from` /
+//!   `fault_transient_until` — seedable transient transfer faults,
+//!   decided per (src, dst, pass generation), optionally windowed to a
+//!   range of pass generations (`until = 0` means open-ended). A retried
+//!   pass runs under a fresh generation and re-rolls.
+//! * `fault_kill_rank` (`none` to clear) + `fault_kill_epoch` — a
+//!   permanent rank death: from that pass generation on, every transfer
+//!   touching the rank fails. The engine responds with an epoch-fenced
+//!   degraded `Placement` swap (replicas keep serving the dead rank's
+//!   replicated experts; un-replicated ones are accounted unavailable).
+//! * `fault_delay_rate` + `fault_delay_us` — injected NIC delay spikes
+//!   (per-transfer, same deterministic per-(src, dst, gen) decision).
+//!
 //! [`MoeService`]: crate::coordinator::MoeService
 //! [`BatchPolicy`]: crate::coordinator::BatchPolicy
 //! [`BatchPolicy::from_config`]: crate::coordinator::BatchPolicy::from_config
@@ -275,6 +302,96 @@ impl ReplicationPolicy {
     }
 }
 
+/// Deterministic fault-injection schedule (ROADMAP item 5; executed by
+/// `crate::fault::FaultPlan` at the `Transport` seam, so chaos runs need
+/// zero engine changes).
+///
+/// Every decision is a pure function of `(seed, src, dst, pass
+/// generation)`, so a schedule replays identically across runs — which is
+/// what lets the chaos tests assert that a transiently-faulted pass,
+/// retried by the engine, produces *bitwise identical* output to a
+/// fault-free run. Disabled by default (all rates zero, no rank killed):
+/// [`enabled`](Self::enabled) is false and `NodeFabric` builds no
+/// `FaultPlan` at all, keeping the non-chaos hot path untouched.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Seed of the deterministic per-transfer hash. Knob: `fault_seed`.
+    pub seed: u64,
+    /// Probability in `[0, 1]` that a given (src, dst, generation)
+    /// transfer fails transiently inside the window below. Knob:
+    /// `fault_transient_rate`.
+    pub transient_rate: f64,
+    /// First pass generation (inclusive) at which transient faults may
+    /// fire. Knob: `fault_transient_from`.
+    pub transient_from: u64,
+    /// Pass generation (exclusive) at which transient faults stop firing;
+    /// `0` means open-ended. Knob: `fault_transient_until`.
+    pub transient_until: u64,
+    /// Rank that dies permanently (every transfer touching it fails from
+    /// [`kill_epoch`](Self::kill_epoch) on). Knob: `fault_kill_rank`
+    /// (`none`/`off` clears).
+    pub kill_rank: Option<usize>,
+    /// First pass generation (inclusive) at which [`kill_rank`]
+    /// (Self::kill_rank) is dead. Knob: `fault_kill_epoch`.
+    pub kill_epoch: u64,
+    /// Probability in `[0, 1]` that a NIC-class transfer gets an injected
+    /// delay spike. Knob: `fault_delay_rate`.
+    pub delay_rate: f64,
+    /// Duration of one injected NIC delay spike, microseconds. Knob:
+    /// `fault_delay_us`.
+    pub delay_us: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            transient_rate: 0.0,
+            transient_from: 1,
+            transient_until: 0,
+            kill_rank: None,
+            kill_epoch: 1,
+            delay_rate: 0.0,
+            delay_us: 0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when any schedule entry can ever fire (a `FaultPlan` is only
+    /// constructed — and the transport only consults it — in that case).
+    pub fn enabled(&self) -> bool {
+        self.transient_rate > 0.0
+            || self.kill_rank.is_some()
+            || (self.delay_rate > 0.0 && self.delay_us > 0)
+    }
+
+    /// `ranks` is the world size the schedule will run against (a killed
+    /// rank must exist).
+    pub fn validate(&self, ranks: usize) -> Result<()> {
+        for (name, rate) in
+            [("fault_transient_rate", self.transient_rate), ("fault_delay_rate", self.delay_rate)]
+        {
+            if !(rate.is_finite() && (0.0..=1.0).contains(&rate)) {
+                bail!("{name} must be in [0, 1], got {rate}");
+            }
+        }
+        if self.transient_until != 0 && self.transient_until < self.transient_from {
+            bail!(
+                "fault_transient_until ({}) must be 0 (open-ended) or >= fault_transient_from ({})",
+                self.transient_until,
+                self.transient_from
+            );
+        }
+        if let Some(r) = self.kill_rank {
+            if r >= ranks {
+                bail!("fault_kill_rank {r} out of range for {ranks} ranks");
+            }
+        }
+        Ok(())
+    }
+}
+
 /// How the router treats per-expert load.
 ///
 /// * [`Capacity`](RoutingPolicy::Capacity) — the paper's §3.2.1 contract:
@@ -393,6 +510,18 @@ pub struct SystemConfig {
     /// Hot-expert replication policy (see [`ReplicationPolicy`]); the
     /// default disables replication and reserves no replica slots.
     pub replication: ReplicationPolicy,
+    /// Seconds without subscriber progress before a rank declares the
+    /// pass wedged and panics (watchdog; default 120). Chaos tests dial
+    /// it down so wedge detection runs at test scale. Knob:
+    /// `watchdog_secs`.
+    pub watchdog_secs: u64,
+    /// How many times the engine transparently re-fences and resubmits a
+    /// failed pass before surfacing the error (0 = fail fast, the
+    /// pre-retry behavior). Knob: `retry_limit`.
+    pub retry_limit: usize,
+    /// Deterministic fault-injection schedule (see [`FaultConfig`]);
+    /// disabled by default.
+    pub fault: FaultConfig,
 }
 
 /// Hardware cost model for the simulator, calibrated by `flashdmoe
@@ -614,6 +743,9 @@ impl Config {
                     wire: WirePrecision::F32,
                     dispatch: DispatchMode::Flat,
                     replication: ReplicationPolicy::default(),
+                    watchdog_secs: 120,
+                    retry_limit: 0,
+                    fault: FaultConfig::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -636,6 +768,9 @@ impl Config {
                     wire: WirePrecision::F32,
                     dispatch: DispatchMode::Flat,
                     replication: ReplicationPolicy::default(),
+                    watchdog_secs: 120,
+                    retry_limit: 0,
+                    fault: FaultConfig::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -658,6 +793,9 @@ impl Config {
                     wire: WirePrecision::F32,
                     dispatch: DispatchMode::Flat,
                     replication: ReplicationPolicy::default(),
+                    watchdog_secs: 120,
+                    retry_limit: 0,
+                    fault: FaultConfig::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -681,6 +819,9 @@ impl Config {
                     wire: WirePrecision::F32,
                     dispatch: DispatchMode::Flat,
                     replication: ReplicationPolicy::default(),
+                    watchdog_secs: 120,
+                    retry_limit: 0,
+                    fault: FaultConfig::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -704,6 +845,9 @@ impl Config {
                     wire: WirePrecision::F32,
                     dispatch: DispatchMode::Flat,
                     replication: ReplicationPolicy::default(),
+                    watchdog_secs: 120,
+                    retry_limit: 0,
+                    fault: FaultConfig::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -731,6 +875,9 @@ impl Config {
                     wire: WirePrecision::F32,
                     dispatch: DispatchMode::Hierarchical,
                     replication: ReplicationPolicy::default(),
+                    watchdog_secs: 120,
+                    retry_limit: 0,
+                    fault: FaultConfig::default(),
                 },
                 cost: CostModel { nic_buffer: 32.0 * 1024.0 * 1024.0, ..CostModel::h100_nvlink() },
             },
@@ -743,6 +890,10 @@ impl Config {
     pub fn validate(&self) -> Result<()> {
         self.system.validate()?;
         self.system.replication.validate()?;
+        self.system.fault.validate(self.system.ranks)?;
+        if self.system.watchdog_secs == 0 {
+            bail!("watchdog_secs must be >= 1 (the watchdog cannot be disabled)");
+        }
         let m = &self.model;
         m.policy.validate()?;
         if m.e % self.system.ranks != 0 {
@@ -835,6 +986,40 @@ impl Config {
                 self.system.replication.hysteresis = f()?
             }
             "ewma_alpha" => self.system.replication.ewma_alpha = f()?,
+            // Fault-tolerance knobs (see FaultConfig and `crate::fault`).
+            "watchdog_secs" => {
+                self.system.watchdog_secs =
+                    value.parse().with_context(|| format!("{key}={value}: not an integer"))?
+            }
+            "retry_limit" => self.system.retry_limit = u()?,
+            "fault_seed" => {
+                self.system.fault.seed =
+                    value.parse().with_context(|| format!("{key}={value}: not an integer"))?
+            }
+            "fault_transient_rate" => self.system.fault.transient_rate = f()?,
+            "fault_transient_from" => {
+                self.system.fault.transient_from =
+                    value.parse().with_context(|| format!("{key}={value}: not an integer"))?
+            }
+            "fault_transient_until" => {
+                self.system.fault.transient_until =
+                    value.parse().with_context(|| format!("{key}={value}: not an integer"))?
+            }
+            "fault_kill_rank" | "kill_rank" => {
+                self.system.fault.kill_rank = match value {
+                    "none" | "off" => None,
+                    _ => Some(u()?),
+                }
+            }
+            "fault_kill_epoch" | "kill_epoch" => {
+                self.system.fault.kill_epoch =
+                    value.parse().with_context(|| format!("{key}={value}: not an integer"))?
+            }
+            "fault_delay_rate" => self.system.fault.delay_rate = f()?,
+            "fault_delay_us" => {
+                self.system.fault.delay_us =
+                    value.parse().with_context(|| format!("{key}={value}: not an integer"))?
+            }
             "launch_overhead" => self.cost.launch_overhead = f()?,
             "flops_per_processor" => self.cost.flops_per_processor = f()?,
             "intra_bw" => self.cost.intra_bw = f()?,
@@ -1179,6 +1364,59 @@ mod tests {
             bad.set(k, v).unwrap();
             assert!(bad.validate().is_err(), "{k}={v} must fail validation");
         }
+    }
+
+    #[test]
+    fn fault_knobs_parse_and_default_off() {
+        let mut cfg = Config::preset("tiny").unwrap();
+        assert!(!cfg.system.fault.enabled(), "fault injection is opt-in");
+        assert_eq!(cfg.system.watchdog_secs, 120, "watchdog default matches the old constant");
+        assert_eq!(cfg.system.retry_limit, 0, "fail-fast is the default");
+        cfg.set("watchdog_secs", "5").unwrap();
+        assert_eq!(cfg.system.watchdog_secs, 5);
+        cfg.set("retry_limit", "3").unwrap();
+        assert_eq!(cfg.system.retry_limit, 3);
+        cfg.set("fault_seed", "42").unwrap();
+        assert!(!cfg.system.fault.enabled(), "a seed alone schedules nothing");
+        cfg.set("fault_transient_rate", "0.25").unwrap();
+        assert!(cfg.system.fault.enabled());
+        cfg.set("fault_transient_from", "2").unwrap();
+        cfg.set("fault_transient_until", "4").unwrap();
+        cfg.set("fault_delay_rate", "0.5").unwrap();
+        cfg.set("fault_delay_us", "100").unwrap();
+        cfg.set("fault_kill_rank", "1").unwrap();
+        cfg.set("fault_kill_epoch", "7").unwrap();
+        assert_eq!(cfg.system.fault.seed, 42);
+        assert_eq!(cfg.system.fault.transient_rate, 0.25);
+        assert_eq!(cfg.system.fault.transient_from, 2);
+        assert_eq!(cfg.system.fault.transient_until, 4);
+        assert_eq!(cfg.system.fault.kill_rank, Some(1));
+        assert_eq!(cfg.system.fault.kill_epoch, 7);
+        cfg.validate().unwrap();
+        // alias spellings, and "none" clears the kill
+        cfg.set("kill_rank", "none").unwrap();
+        assert_eq!(cfg.system.fault.kill_rank, None);
+        cfg.set("kill_epoch", "3").unwrap();
+        assert_eq!(cfg.system.fault.kill_epoch, 3);
+        // degenerate values are rejected by validate()
+        for (k, v) in [
+            ("fault_transient_rate", "1.5"),
+            ("fault_transient_rate", "-0.1"),
+            ("fault_delay_rate", "nan"),
+            ("fault_kill_rank", "9"),
+            ("watchdog_secs", "0"),
+        ] {
+            let mut bad = cfg.clone();
+            bad.set(k, v).unwrap();
+            assert!(bad.validate().is_err(), "{k}={v} must fail validation");
+        }
+        // an until below from is rejected (0 stays the open-ended marker)
+        let mut bad = cfg.clone();
+        bad.set("fault_transient_from", "5").unwrap();
+        bad.set("fault_transient_until", "2").unwrap();
+        assert!(bad.validate().is_err());
+        bad.set("fault_transient_until", "0").unwrap();
+        bad.validate().unwrap();
     }
 
     #[test]

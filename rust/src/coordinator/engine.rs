@@ -39,14 +39,16 @@
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::config::Config;
 use crate::expert::ModelParams;
 use crate::fabric::SymmetricHeap;
+use crate::fault;
 use crate::layout::LayoutDims;
 use crate::placement::{plan_replication, Placement};
 use crate::runtime::ComputeBackend;
@@ -119,13 +121,38 @@ struct SlotState {
     /// has been freed, which keeps same-slot installs in epoch order
     /// even with many concurrent submitters.
     freed: u64,
+    /// What the rank actors run on. Under a degraded placement these are
+    /// the *repacked* per-rank matrices: a failed rank's rows are moved
+    /// onto surviving ranks' spare capacity, so the corpse runs a
+    /// zero-row pass and performs no transfer at all.
     inputs: Option<Arc<Vec<Vec<f32>>>>,
+    /// The caller's original-shape inputs, retained so a poisoned pass
+    /// can be resubmitted (and repacked afresh against whatever
+    /// placement is live at retry time). Same `Arc` as `inputs` when no
+    /// repack happened.
+    orig: Option<Arc<Vec<Vec<f32>>>>,
+    /// Repack moves `(failed rank, [(survivor, rows moved)..])` in the
+    /// order rows were taken — `assemble` inverts them so the caller
+    /// gets outputs in the shape it submitted.
+    moves: Vec<(usize, Vec<(usize, usize)>)>,
+    /// The pass ran under a degraded (post-`fail_rank`) placement.
+    degraded: bool,
+    /// Experts with no serving location under the pass's placement.
+    experts_unavailable: usize,
     outputs: Vec<Option<Result<RankOutput>>>,
     deposited: usize,
     /// Placement version the occupying pass was submitted under —
     /// `rebalance` fences on drained slots, so this is also the version
     /// the pass *ran* under. Stamped into `PassMetrics`.
     placement_version: u64,
+}
+
+/// A completed pass displaced from its slot, awaiting its `wait()`:
+/// the result plus — for a failed pass — the original-shape inputs the
+/// retry loop resubmits.
+struct Parked {
+    result: Result<ForwardResult>,
+    retry: Option<Arc<Vec<Vec<f32>>>>,
 }
 
 struct Submission {
@@ -143,12 +170,20 @@ struct EngineInner {
     /// Wire element format, stamped into every pass's metrics (the byte
     /// counters are measured at this width).
     wire: crate::config::WirePrecision,
+    /// The rank actors' shared state. Held here (not only on
+    /// `MoeEngine`) so an outstanding [`PassHandle`] can retry a
+    /// poisoned pass — resubmission and the degraded-placement swap both
+    /// live behind the handle's `wait()`.
+    shared: Arc<EngineShared>,
+    /// Next epoch to assign; guards submission order (and, held across a
+    /// quiet fence, placement swaps).
+    next_epoch: Mutex<u64>,
     doorbell: Mutex<Submission>,
     doorbell_cv: Condvar,
     slots: [PassSlot; PASS_SLOTS],
     /// Completed passes displaced from their slot by a later submit,
     /// keyed by epoch, awaiting their `wait()`.
-    parked: Mutex<HashMap<u64, Result<ForwardResult>>>,
+    parked: Mutex<HashMap<u64, Parked>>,
     metrics: Mutex<EngineMetrics>,
 }
 
@@ -170,8 +205,6 @@ impl EngineInner {
 pub struct MoeEngine {
     shared: Arc<EngineShared>,
     inner: Arc<EngineInner>,
-    /// Next epoch to assign; guards submission order.
-    next_epoch: Mutex<u64>,
     rank_threads: Vec<JoinHandle<()>>,
 }
 
@@ -216,6 +249,8 @@ impl MoeEngine {
             ranks,
             s_rank,
             wire,
+            shared: shared.clone(),
+            next_epoch: Mutex::new(1),
             doorbell: Mutex::new(Submission { latest: 0, shutdown: false }),
             doorbell_cv: Condvar::new(),
             slots: std::array::from_fn(|_| PassSlot {
@@ -223,6 +258,10 @@ impl MoeEngine {
                     epoch: 0,
                     freed: 0,
                     inputs: None,
+                    orig: None,
+                    moves: Vec::new(),
+                    degraded: false,
+                    experts_unavailable: 0,
                     outputs: Vec::new(),
                     deposited: 0,
                     placement_version: 0,
@@ -243,7 +282,7 @@ impl MoeEngine {
                     .expect("spawn rank actor")
             })
             .collect();
-        Ok(Self { shared, inner, next_epoch: Mutex::new(1), rank_threads })
+        Ok(Self { shared, inner, rank_threads })
     }
 
     pub fn config(&self) -> &Config {
@@ -269,6 +308,9 @@ impl MoeEngine {
     pub fn metrics(&self) -> EngineMetrics {
         let mut m = self.inner.metrics.lock().unwrap().clone();
         m.threads_spawned = self.shared.threads_spawned.load(Ordering::Relaxed);
+        if let Some(fp) = self.shared.fabric.fault_plan() {
+            m.faults_injected = fp.faults_injected();
+        }
         m
     }
 
@@ -299,33 +341,9 @@ impl MoeEngine {
             return Ok(false);
         }
         // Hold the epoch lock for the whole swap: no new epoch can be
-        // assigned while we fence and swap. Then wait until every
-        // *assigned* epoch has fully deposited — per slot, the last
-        // assigned epoch must be freed, or occupying the slot with all
-        // rank outputs in. (Checking only "slot drained" would miss an
-        // epoch whose submitter is still waiting to install it; that
-        // pass would then run concurrently with the swap and its ranks
-        // could snapshot different placement versions.)
-        let turnstile = self.next_epoch.lock().unwrap();
-        let latest = *turnstile - 1;
-        for (i, slot) in self.inner.slots.iter().enumerate() {
-            if latest == 0 {
-                break; // nothing ever submitted
-            }
-            // greatest assigned epoch that maps to slot i (epochs are
-            // 1-based and strike slots round-robin by `epoch % SLOTS`)
-            let lag = (latest as usize + PASS_SLOTS - i) % PASS_SLOTS;
-            let last = latest - lag as u64;
-            if last == 0 {
-                continue;
-            }
-            let mut st = slot.state.lock().unwrap();
-            while !(st.freed == last
-                || (st.epoch == last && st.deposited >= self.inner.ranks))
-            {
-                st = slot.cv.wait(st).unwrap();
-            }
-        }
+        // assigned while we fence and swap (`quiet_fence` returns the
+        // held guard after every assigned epoch has fully deposited).
+        let _turnstile = quiet_fence(&self.inner);
         let current = self.shared.placement();
         let proposed = {
             let tracker = self.shared.tracker.lock().unwrap();
@@ -392,74 +410,7 @@ impl MoeEngine {
     /// wait happens on the slot's condvar with the epoch lock released,
     /// so one blocked submitter never serializes the others.
     pub fn submit_pass(&self, input: PassInput) -> Result<PassHandle> {
-        let cfg = &self.shared.cfg;
-        let h = cfg.model.h;
-        anyhow::ensure!(
-            input.per_rank.len() == cfg.system.ranks,
-            "need {} rank inputs, got {}",
-            cfg.system.ranks,
-            input.per_rank.len()
-        );
-        for (r, a) in input.per_rank.iter().enumerate() {
-            anyhow::ensure!(
-                a.len() % h == 0,
-                "rank {r}: input length {} is not a multiple of H = {h}",
-                a.len()
-            );
-            anyhow::ensure!(
-                a.len() / h <= cfg.system.s_rank,
-                "rank {r}: {} rows exceed s_rank = {}",
-                a.len() / h,
-                cfg.system.s_rank
-            );
-        }
-
-        // Epoch assignment is the only work under the epoch lock; all
-        // validation precedes it (an assigned epoch MUST reach its slot,
-        // or every later pass in the same slot would wedge).
-        let epoch = {
-            let mut next = self.next_epoch.lock().unwrap();
-            let e = *next;
-            *next += 1;
-            e
-        };
-        let slot = self.inner.slot_of(epoch);
-        let prev = epoch.saturating_sub(PASS_SLOTS as u64);
-        {
-            let mut st = slot.state.lock().unwrap();
-            loop {
-                if st.epoch == 0 && st.freed == prev {
-                    // Our predecessor in this slot was freed (collected
-                    // by a wait() or parked by us/another submitter):
-                    // our turn to install.
-                    break;
-                }
-                if st.epoch == prev && st.deposited >= self.inner.ranks {
-                    // Predecessor complete but uncollected: drain it into
-                    // the parking buffer for its eventual `wait()`.
-                    let result = assemble(&self.inner, &mut st);
-                    self.inner.parked.lock().unwrap().insert(prev, result);
-                    break;
-                }
-                // Predecessor still in flight (or not even installed yet,
-                // its submitter racing us): wait on the slot, not the
-                // epoch lock.
-                st = slot.cv.wait(st).unwrap();
-            }
-            st.epoch = epoch;
-            st.inputs = Some(Arc::new(input.per_rank));
-            st.outputs = (0..self.inner.ranks).map(|_| None).collect();
-            st.deposited = 0;
-            st.placement_version = self.shared.placement().version();
-            // wake rank actors (and same-slot submitters) waiting for the
-            // install
-            slot.cv.notify_all();
-        }
-
-        let mut bell = self.inner.doorbell.lock().unwrap();
-        bell.latest = bell.latest.max(epoch);
-        self.inner.doorbell_cv.notify_all();
-        drop(bell);
+        let epoch = submit_inner(&self.inner, input.per_rank)?;
         Ok(PassHandle { inner: self.inner.clone(), epoch, collected: false })
     }
 
@@ -502,9 +453,18 @@ impl PassHandle {
     /// Block until the pass completes and return its result. Outstanding
     /// handles stay valid across engine shutdown/drop for passes that
     /// were already submitted (the actors drain them before exiting).
+    ///
+    /// This is also where fault recovery lives: a pass that failed for a
+    /// *retryable* reason (injected transient fault, dead-rank endpoint,
+    /// incast overload, watchdog abandonment) is transparently
+    /// resubmitted — up to `SystemConfig::retry_limit` times, with
+    /// exponential backoff — from the caller's original-shape inputs. A
+    /// permanently dead rank additionally triggers the epoch-fenced
+    /// degraded-placement swap before the retry, so the resubmission
+    /// routes around the corpse via replicas.
     pub fn wait(mut self) -> Result<ForwardResult> {
         self.collected = true;
-        collect(&self.inner, self.epoch)
+        collect_retrying(&self.inner, self.epoch)
     }
 }
 
@@ -512,16 +472,185 @@ impl Drop for PassHandle {
     fn drop(&mut self) {
         if !self.collected {
             // Free the pass slot so later submits don't stall on an
-            // abandoned pass; the result is discarded.
-            let _ = collect(&self.inner, self.epoch);
+            // abandoned pass; the result is discarded (no retry — only
+            // an explicit `wait()` spends retry budget).
+            let _ = collect2(&self.inner, self.epoch);
         }
     }
 }
 
+/// Move a failed rank's rows onto surviving ranks' spare capacity so the
+/// corpse runs a zero-row pass. Returns the moves needed to invert the
+/// repack (`unpack_rows`), or an error when the surviving ranks cannot
+/// absorb the displaced rows — in which case `per_rank` must be discarded
+/// (it may be half-repacked) but no epoch has been consumed.
+fn repack_inputs(
+    per_rank: &mut Vec<Vec<f32>>,
+    placement: &Placement,
+    h: usize,
+    s_rank: usize,
+) -> Result<Vec<(usize, Vec<(usize, usize)>)>> {
+    let mut moves = Vec::new();
+    for dead in 0..per_rank.len() {
+        if !placement.is_failed(dead) || per_rank[dead].is_empty() {
+            continue;
+        }
+        let rows = per_rank[dead].len() / h;
+        let data = std::mem::take(&mut per_rank[dead]);
+        let mut segs = Vec::new();
+        let mut off = 0usize;
+        for s in 0..per_rank.len() {
+            if off == rows {
+                break;
+            }
+            if placement.is_failed(s) {
+                continue;
+            }
+            let spare = s_rank - per_rank[s].len() / h;
+            if spare == 0 {
+                continue;
+            }
+            let take = spare.min(rows - off);
+            per_rank[s].extend_from_slice(&data[off * h..(off + take) * h]);
+            segs.push((s, take));
+            off += take;
+        }
+        ensure!(
+            off == rows,
+            "degraded capacity: {} rows from failed rank {dead} exceed surviving spare capacity",
+            rows - off
+        );
+        moves.push((dead, segs));
+    }
+    Ok(moves)
+}
+
+/// Invert `repack_inputs` on the pass outputs: peel each survivor's
+/// borrowed rows back off (they were appended, so they sit at the tail,
+/// with the *last* repacked corpse's rows outermost) and reconstitute the
+/// failed ranks' output matrices in submission shape.
+fn unpack_rows(outputs: &mut [Vec<f32>], moves: &[(usize, Vec<(usize, usize)>)], h: usize) {
+    for (dead, segs) in moves.iter().rev() {
+        let mut restored: Vec<Vec<f32>> = Vec::with_capacity(segs.len());
+        for &(s, take) in segs.iter().rev() {
+            let keep = outputs[s].len() - take * h;
+            restored.push(outputs[s].split_off(keep));
+        }
+        restored.reverse();
+        outputs[*dead] = restored.concat();
+    }
+}
+
+/// Validate, epoch-stamp, and install one pass. Shared by the public
+/// submit path and the retry loop (which runs from a `PassHandle`, after
+/// the engine handle may already be gone). Returns the assigned epoch.
+fn submit_inner(inner: &Arc<EngineInner>, mut per_rank: Vec<Vec<f32>>) -> Result<u64> {
+    let cfg = &inner.shared.cfg;
+    let h = cfg.model.h;
+    ensure!(
+        per_rank.len() == cfg.system.ranks,
+        "need {} rank inputs, got {}",
+        cfg.system.ranks,
+        per_rank.len()
+    );
+    for (r, a) in per_rank.iter().enumerate() {
+        ensure!(
+            a.len() % h == 0,
+            "rank {r}: input length {} is not a multiple of H = {h}",
+            a.len()
+        );
+        ensure!(
+            a.len() / h <= cfg.system.s_rank,
+            "rank {r}: {} rows exceed s_rank = {}",
+            a.len() / h,
+            cfg.system.s_rank
+        );
+    }
+
+    // Epoch assignment happens under the doorbell lock, with the ring in
+    // the same critical section: either we observe shutdown and consume
+    // no epoch, or the rank actors are guaranteed to see (and drain) our
+    // epoch before they exit — the mutex totally orders us against the
+    // shutdown broadcast. All validation precedes assignment (an assigned
+    // epoch MUST reach its slot, or every later pass in the same slot
+    // would wedge); the install itself happens after the ring, which
+    // rank_main explicitly tolerates (it waits on the slot for `next`).
+    let (epoch, orig, moves, degraded, experts_unavailable, placement_version) = {
+        let mut bell = inner.doorbell.lock().unwrap();
+        if bell.shutdown {
+            bail!("engine is shut down");
+        }
+        let mut next = inner.next_epoch.lock().unwrap();
+        // Snapshot the placement inside the epoch critical section so the
+        // repack and the pass run against the same map (`rebalance` and
+        // the degrade swap both hold `next_epoch` across their fence).
+        let placement = inner.shared.placement();
+        let (orig, moves, degraded, experts_unavailable) = if placement.degraded() {
+            let orig = Arc::new(per_rank.clone());
+            let moves = repack_inputs(&mut per_rank, &placement, h, cfg.system.s_rank)?;
+            (orig, moves, true, placement.unavailable_experts().len())
+        } else {
+            (Arc::new(Vec::new()), Vec::new(), false, 0)
+        };
+        let epoch = *next;
+        *next += 1;
+        drop(next);
+        bell.latest = bell.latest.max(epoch);
+        inner.doorbell_cv.notify_all();
+        (epoch, orig, moves, degraded, experts_unavailable, placement.version())
+    };
+    let inputs = Arc::new(per_rank);
+    // Under a non-degraded placement the retry ticket IS the submitted
+    // buffer — no second copy.
+    let orig = if degraded { orig } else { inputs.clone() };
+
+    let slot = inner.slot_of(epoch);
+    let prev = epoch.saturating_sub(PASS_SLOTS as u64);
+    {
+        let mut st = slot.state.lock().unwrap();
+        loop {
+            if st.epoch == 0 && st.freed == prev {
+                // Our predecessor in this slot was freed (collected
+                // by a wait() or parked by us/another submitter):
+                // our turn to install.
+                break;
+            }
+            if st.epoch == prev && st.deposited >= inner.ranks {
+                // Predecessor complete but uncollected: drain it into
+                // the parking buffer for its eventual `wait()`.
+                let parked = assemble(inner, &mut st);
+                inner.parked.lock().unwrap().insert(prev, parked);
+                break;
+            }
+            // Predecessor still in flight (or not even installed yet,
+            // its submitter racing us): wait on the slot, not the
+            // epoch lock.
+            st = slot.cv.wait(st).unwrap();
+        }
+        st.epoch = epoch;
+        st.inputs = Some(inputs);
+        st.orig = Some(orig);
+        st.moves = moves;
+        st.degraded = degraded;
+        st.experts_unavailable = experts_unavailable;
+        st.outputs = (0..inner.ranks).map(|_| None).collect();
+        st.deposited = 0;
+        st.placement_version = placement_version;
+        // wake rank actors (and same-slot submitters) waiting for the
+        // install
+        slot.cv.notify_all();
+    }
+    Ok(epoch)
+}
+
 /// Collect the result for `epoch`: from the parking buffer if a later
 /// submit already drained it, otherwise from its slot (blocking until the
-/// actors deposit all rank outputs).
-fn collect(inner: &Arc<EngineInner>, epoch: u64) -> Result<ForwardResult> {
+/// actors deposit all rank outputs). Alongside the result, returns the
+/// retry ticket — the pass's original-shape inputs — when the pass failed.
+fn collect2(
+    inner: &Arc<EngineInner>,
+    epoch: u64,
+) -> (Result<ForwardResult>, Option<Arc<Vec<Vec<f32>>>>) {
     let slot = inner.slot_of(epoch);
     let mut st = slot.state.lock().unwrap();
     if st.epoch == epoch {
@@ -531,30 +660,40 @@ fn collect(inner: &Arc<EngineInner>, epoch: u64) -> Result<ForwardResult> {
             st = slot.cv.wait(st).unwrap();
         }
         if st.epoch == epoch {
-            return assemble(inner, &mut st);
+            let p = assemble(inner, &mut st);
+            return (p.result, p.retry);
         }
     }
+    drop(st);
     // Not in its slot: either parked by a later submit, or already taken.
     // (`parked` is only mutated under the slot lock, so this is race-free.)
-    inner
-        .parked
-        .lock()
-        .unwrap()
-        .remove(&epoch)
-        .ok_or_else(|| anyhow!("pass {epoch} was never submitted or already collected"))?
+    match inner.parked.lock().unwrap().remove(&epoch) {
+        Some(p) => (p.result, p.retry),
+        None => (
+            Err(anyhow!("pass {epoch} was never submitted or already collected")),
+            None,
+        ),
+    }
 }
 
-/// Assemble a completed slot into a `ForwardResult`, free the slot, and
+/// Assemble a completed slot into a parked result, free the slot, and
 /// fold the pass into the cumulative engine metrics. Caller holds the
 /// slot lock with all rank outputs deposited.
-fn assemble(inner: &Arc<EngineInner>, st: &mut SlotState) -> Result<ForwardResult> {
+fn assemble(inner: &Arc<EngineInner>, st: &mut SlotState) -> Parked {
     let epoch = st.epoch;
     let rank_outputs: Vec<Result<RankOutput>> =
         st.outputs.iter_mut().map(|o| o.take().expect("deposited output")).collect();
+    let orig = st.orig.take();
+    let moves = std::mem::take(&mut st.moves);
+    let degraded = st.degraded;
+    let experts_unavailable = st.experts_unavailable;
     st.epoch = 0;
     st.freed = epoch;
     st.inputs = None;
+    st.degraded = false;
+    st.experts_unavailable = 0;
     st.deposited = 0;
+    let placement_version = st.placement_version;
     // wake a submit that may be waiting to reuse this slot
     inner.slot_of(epoch).cv.notify_all();
 
@@ -563,26 +702,143 @@ fn assemble(inner: &Arc<EngineInner>, st: &mut SlotState) -> Result<ForwardResul
         epoch,
         rows_capacity: inner.ranks * inner.s_rank,
         wire: inner.wire,
-        placement_version: st.placement_version,
+        placement_version,
+        experts_unavailable,
         ..Default::default()
     };
     for (rank, ro) in rank_outputs.into_iter().enumerate() {
         let ro = match ro {
             Ok(ro) => ro,
-            Err(e) => return Err(e.context(format!("pass {epoch}, rank {rank}"))),
+            Err(e) => {
+                return Parked {
+                    result: Err(e.context(format!("pass {epoch}, rank {rank}"))),
+                    retry: orig,
+                }
+            }
         };
         metrics.wall_secs = metrics.wall_secs.max(ro.metrics.wall_secs);
         metrics.rows_submitted += ro.metrics.rows_in;
         metrics.ranks.push(ro.metrics);
         outputs.push(ro.out);
     }
+    unpack_rows(&mut outputs, &moves, inner.shared.cfg.model.h);
     {
         let mut em = inner.metrics.lock().unwrap();
         em.passes += 1;
         em.wall_secs += metrics.wall_secs;
         em.busy_secs += metrics.ranks.iter().map(|r| r.busy_secs).sum::<f64>();
+        if degraded {
+            em.degraded_passes += 1;
+        }
     }
-    Ok(ForwardResult { outputs, metrics })
+    Parked { result: Ok(ForwardResult { outputs, metrics }), retry: None }
+}
+
+/// Wait until every assigned epoch has fully deposited, holding the epoch
+/// lock so no new epoch can be assigned meanwhile. Returns the held guard:
+/// the caller performs its placement swap (or other between-passes
+/// mutation) and then releases it. Per slot, the last assigned epoch must
+/// be freed, or occupying the slot with all rank outputs in. (Checking
+/// only "slot drained" would miss an epoch whose submitter is still
+/// waiting to install it; that pass would then run concurrently with the
+/// swap and its ranks could snapshot different placement versions.)
+fn quiet_fence(inner: &Arc<EngineInner>) -> MutexGuard<'_, u64> {
+    let turnstile = inner.next_epoch.lock().unwrap();
+    let latest = *turnstile - 1;
+    for (i, slot) in inner.slots.iter().enumerate() {
+        if latest == 0 {
+            break; // nothing ever submitted
+        }
+        // greatest assigned epoch that maps to slot i (epochs are
+        // 1-based and strike slots round-robin by `epoch % SLOTS`)
+        let lag = (latest as usize + PASS_SLOTS - i) % PASS_SLOTS;
+        let last = latest - lag as u64;
+        if last == 0 {
+            continue;
+        }
+        let mut st = slot.state.lock().unwrap();
+        while !(st.freed == last || (st.epoch == last && st.deposited >= inner.ranks)) {
+            st = slot.cv.wait(st).unwrap();
+        }
+    }
+    turnstile
+}
+
+/// Epoch-fenced degraded-placement swap: evict a permanently dead rank's
+/// expert locations (replicas on surviving ranks keep those experts
+/// servable; un-replicated experts become explicitly unavailable). Runs
+/// strictly between passes, like `rebalance`.
+fn degrade_placement(inner: &Arc<EngineInner>, rank: usize) {
+    let fence = quiet_fence(inner);
+    // Another waiter may have degraded the same rank while we fenced.
+    if inner.shared.placement().is_failed(rank) {
+        return;
+    }
+    let mut next = (*inner.shared.placement()).clone();
+    next.fail_rank(rank);
+    inner.shared.set_placement(Arc::new(next));
+    drop(fence);
+}
+
+/// `collect2` plus the pass-level retry loop: classify the failure,
+/// degrade the placement when the fault plan says the rank is permanently
+/// dead, back off, and resubmit from the original-shape inputs — up to
+/// `SystemConfig::retry_limit` times. A transient fault therefore yields
+/// the same bitwise output as a fault-free run, one retry later.
+fn collect_retrying(inner: &Arc<EngineInner>, epoch: u64) -> Result<ForwardResult> {
+    let limit = inner.shared.cfg.system.retry_limit;
+    let mut tries = 0u32;
+    let mut cur_epoch = epoch;
+    let (mut result, mut retry) = collect2(inner, epoch);
+    loop {
+        let err = match result {
+            Ok(mut fr) => {
+                fr.metrics.retries = tries;
+                if tries > 0 {
+                    inner.metrics.lock().unwrap().retries += tries as u64;
+                }
+                return Ok(fr);
+            }
+            Err(e) => e,
+        };
+        let msg = format!("{err:#}");
+        // A permanent rank death degrades the placement regardless of
+        // retry budget — later passes must route around the corpse even
+        // if *this* pass is reported failed.
+        let dead = inner
+            .shared
+            .fabric
+            .fault_plan()
+            .and_then(|fp| fp.dead_rank(cur_epoch as u32));
+        if let Some(r) = dead {
+            if !inner.shared.placement().is_failed(r) {
+                degrade_placement(inner, r);
+            }
+        }
+        let retryable = dead.is_some()
+            || fault::is_transient(&msg)
+            || fault::is_dead_rank(&msg)
+            || msg.contains("incast")
+            || msg.contains("abandoning pass gen");
+        let Some(inputs) = retry.take() else { return Err(err) };
+        if !retryable || (tries as usize) >= limit {
+            return Err(err);
+        }
+        if inner.doorbell.lock().unwrap().shutdown {
+            return Err(err.context("engine shut down before the pass could be retried"));
+        }
+        std::thread::sleep(Duration::from_millis(1u64 << tries.min(6)));
+        tries += 1;
+        match submit_inner(inner, inputs.as_ref().clone()) {
+            Ok(e2) => {
+                cur_epoch = e2;
+                let (r2, t2) = collect2(inner, e2);
+                result = r2;
+                retry = t2;
+            }
+            Err(e) => return Err(e.context(format!("resubmission after: {msg}"))),
+        }
+    }
 }
 
 /// Fold one fully-deposited pass into the shared EWMA load tracker:
@@ -674,4 +930,19 @@ fn rank_main(shared: Arc<EngineShared>, inner: Arc<EngineInner>, rank: usize) {
         next += 1;
     }
     actor.shutdown();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::PASS_SLOTS;
+    use crate::coordinator::rank::PoisonLatch;
+
+    /// The per-slot poison latch must cover exactly the engine's pass
+    /// slots: a clear by pass N+`PASS_SLOTS` reuses pass N's stamp slot,
+    /// which is only safe because an epoch's stamp is consumed (or the
+    /// pass collected) before its slot's successor starts.
+    #[test]
+    fn poison_latch_covers_pass_slots() {
+        assert_eq!(PASS_SLOTS, PoisonLatch::SLOTS);
+    }
 }

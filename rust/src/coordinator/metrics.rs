@@ -92,6 +92,10 @@ pub struct RankMetrics {
     /// the placement rather than owned) — the replica-hit counter: > 0
     /// means replication actually absorbed load here.
     pub replica_rows: u64,
+    /// Routed rows this rank's gate had to skip because their expert has
+    /// no serving location (its rank failed un-replicated) — the
+    /// per-rank degraded-capacity loss, explicit instead of silent.
+    pub unavailable_rows: u64,
 }
 
 impl RankMetrics {
@@ -136,6 +140,14 @@ pub struct PassMetrics {
     /// ran under (0 = the static block placement; bumps on every replica
     /// install/teardown).
     pub placement_version: u64,
+    /// Times this pass was resubmitted after a poisoned attempt before
+    /// succeeding (0 on the common fault-free path). The *successful*
+    /// attempt's metrics are what the rest of this struct reports.
+    pub retries: u32,
+    /// Experts with no serving location during this pass (max over
+    /// ranks — every rank sees the same degraded placement). > 0 marks a
+    /// degraded pass: some routed rows were skipped, not computed.
+    pub experts_unavailable: usize,
     pub ranks: Vec<RankMetrics>,
 }
 
@@ -264,6 +276,14 @@ impl PassMetrics {
         self.ranks.iter().map(|r| r.replica_rows).sum()
     }
 
+    /// Routed rows skipped because their expert had no serving location
+    /// this pass, summed over ranks — the degraded-capacity loss
+    /// (`> 0` iff `experts_unavailable > 0` and demand actually hit an
+    /// orphaned expert).
+    pub fn unavailable_rows(&self) -> u64 {
+        self.ranks.iter().map(|r| r.unavailable_rows).sum()
+    }
+
     /// Intra-node (NVLink-class) bytes moved this pass, summed over ranks.
     pub fn intra_bytes(&self) -> u64 {
         self.ranks.iter().map(|r| r.bytes_in_local).sum()
@@ -333,6 +353,16 @@ pub struct EngineMetrics {
     /// packed expert size; the in-process backend shares one packed
     /// cache, so this counts what a multi-device install would ship).
     pub install_bytes: u64,
+    /// Pass resubmissions driven by the retry loop (transient faults and
+    /// freshly-detected rank deaths), summed over the engine's life.
+    pub retries: u64,
+    /// Passes that completed with at least one unavailable expert —
+    /// served under degraded capacity rather than failed.
+    pub degraded_passes: u64,
+    /// Faults the injection schedule actually fired (transient drops +
+    /// dead-endpoint rejections), mirrored from the transport's
+    /// [`FaultPlan`](crate::fault::FaultPlan) counter at snapshot time.
+    pub faults_injected: u64,
 }
 
 impl EngineMetrics {
@@ -388,6 +418,12 @@ pub struct ServiceMetrics {
     pub batch_fill_sum: f64,
     /// Peak depth of the bounded request queue.
     pub max_queue_depth: usize,
+    /// Requests shed because their [`RequestOpts::deadline`] expired
+    /// before their tokens were admitted into a pass (each also counts in
+    /// `requests_failed` — its handle observes the deadline error).
+    ///
+    /// [`RequestOpts::deadline`]: super::service::RequestOpts::deadline
+    pub deadline_misses: u64,
 }
 
 impl ServiceMetrics {

@@ -125,14 +125,16 @@ pub struct EngineShared {
     pub announced_tiles: Vec<AtomicU32>,
     /// Sources that have finished announcing in the current pass.
     pub announced: AtomicU32,
-    /// Pass-generation tag of a pass some rank failed mid-transfer (0 =
-    /// none): a rank whose dispatch or combine put fails — NIC incast
-    /// overflow being the expected case — stamps the generation here so
-    /// every peer's subscriber stops waiting for the packets that will
+    /// Per-slot pass-generation poison stamps (0 = none): a rank whose
+    /// dispatch or combine put fails — NIC incast overflow or an injected
+    /// fault being the expected cases — stamps its pass generation here
+    /// so every peer's subscriber stops waiting for the packets that will
     /// never arrive and fails its pass promptly instead of tripping the
-    /// 120 s watchdog. Cleared by rank 0 inside the pass-start barrier
-    /// pair (and self-invalidating anyway: the check is epoch-exact).
-    pub pass_poisoned: AtomicU32,
+    /// watchdog. Rank 0 clears only the *current* epoch's slot inside the
+    /// pass-start barrier pair, so with two passes pipelined a clear for
+    /// pass N+1 can never erase a still-unobserved stamp for pass N (the
+    /// other slot) — see [`PoisonLatch`].
+    pub pass_poisoned: PoisonLatch,
     /// The reusable pass-start barrier. Besides synchronizing the pass,
     /// it is the fence that orders pass n's heap readers before pass
     /// n+1's writers on the same cells (see `fabric.rs` safety notes).
@@ -183,7 +185,7 @@ impl EngineShared {
             expected_dispatch: (0..ranks).map(|_| AtomicU32::new(0)).collect(),
             announced_tiles: (0..ranks * ranks * e_slots).map(|_| AtomicU32::new(0)).collect(),
             announced: AtomicU32::new(0),
-            pass_poisoned: AtomicU32::new(0),
+            pass_poisoned: PoisonLatch::new(),
             start: Barrier::new(ranks),
             threads_spawned: AtomicU64::new(0),
             placement: Mutex::new(placement),
@@ -211,12 +213,71 @@ impl EngineShared {
     /// Mark pass generation `epoch32` as failed by this rank (a transfer
     /// error mid-pass); peers' subscribers observe it and bail out.
     pub fn poison(&self, epoch32: u32) {
-        self.pass_poisoned.store(epoch32, Ordering::Release);
+        self.pass_poisoned.poison(epoch32);
     }
 
     /// True if some rank failed pass generation `epoch32` mid-transfer.
     pub fn poisoned(&self, epoch32: u32) -> bool {
-        self.pass_poisoned.load(Ordering::Acquire) == epoch32
+        self.pass_poisoned.poisoned(epoch32)
+    }
+
+    /// The subscriber wedge watchdog, from `SystemConfig::watchdog_secs`
+    /// (validated non-zero). Chaos tests shrink it so an injected wedge
+    /// fails in seconds, not the production default's minutes.
+    pub fn watchdog(&self) -> std::time::Duration {
+        std::time::Duration::from_secs(self.cfg.system.watchdog_secs)
+    }
+}
+
+/// Per-pass-slot poison stamps for in-flight pass generations.
+///
+/// `SLOTS` must equal the engine's `PASS_SLOTS` (how many passes may be
+/// submitted and uncollected at once): stamps are indexed `epoch %
+/// SLOTS`, exactly like the engine's pass slots, so each in-flight epoch
+/// owns a distinct word. A single shared word had a hazard: rank 0's
+/// pass-start clear for epoch N+1 would wipe a concurrent, still
+/// unobserved poison stamp for epoch N. Per-slot stamps make the clear
+/// epoch-local — it can only ever erase a *stale* stamp from epoch
+/// N+1-SLOTS, whose pass is long finished.
+#[derive(Debug)]
+pub struct PoisonLatch {
+    slots: [AtomicU32; PoisonLatch::SLOTS],
+}
+
+impl PoisonLatch {
+    /// Must equal `engine::PASS_SLOTS` (asserted by the engine's tests).
+    pub const SLOTS: usize = 2;
+
+    pub fn new() -> Self {
+        Self { slots: std::array::from_fn(|_| AtomicU32::new(0)) }
+    }
+
+    fn slot(epoch32: u32) -> usize {
+        (epoch32 as usize) % Self::SLOTS
+    }
+
+    /// Stamp generation `epoch32` as poisoned.
+    pub fn poison(&self, epoch32: u32) {
+        self.slots[Self::slot(epoch32)].store(epoch32, Ordering::Release);
+    }
+
+    /// Is generation `epoch32` stamped? Epoch-exact: a stale stamp from
+    /// an earlier same-slot generation never matches.
+    pub fn poisoned(&self, epoch32: u32) -> bool {
+        self.slots[Self::slot(epoch32)].load(Ordering::Acquire) == epoch32
+    }
+
+    /// Clear generation `epoch32`'s slot (pass-start reset). Only touches
+    /// this epoch's slot — a poison for the *other* in-flight generation
+    /// survives.
+    pub fn clear(&self, epoch32: u32) {
+        self.slots[Self::slot(epoch32)].store(0, Ordering::Release);
+    }
+}
+
+impl Default for PoisonLatch {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -525,7 +586,9 @@ impl RankActor {
         // announce counters; the second wait publishes the clear.
         shared.start.wait();
         if rank == 0 {
-            shared.pass_poisoned.store(0, Ordering::Release);
+            // Clear only THIS epoch's poison slot: the other slot may
+            // hold a stamp for the previous, still-collecting pass.
+            shared.pass_poisoned.clear(epoch32);
             shared.announced.store(0, Ordering::Release);
             for d in &shared.expected_dispatch {
                 d.store(0, Ordering::Release);
@@ -716,9 +779,12 @@ impl RankActor {
                 } else {
                     std::thread::yield_now();
                 }
-                if spins % 4096 == 0 && t0.elapsed() > WATCHDOG {
+                if spins % 4096 == 0 && t0.elapsed() > shared.watchdog() {
                     panic!(
-                        "rank {rank} wedged waiting for announcements (pass gen {epoch32}): {}/{ranks_n} ranks announced",
+                        "rank {rank} wedged waiting for announcements (pass gen {epoch32}, \
+                         {:.1}s since pass start, watchdog {}s): {}/{ranks_n} ranks announced",
+                        t0.elapsed().as_secs_f64(),
+                        shared.cfg.system.watchdog_secs,
                         shared.announced.load(Ordering::Acquire),
                     );
                 }
@@ -855,6 +921,7 @@ impl RankActor {
             expert_offered: routing.offered_load.iter().map(|&v| v as u64).collect(),
             expert_kept: routing.expert_load.iter().map(|&v| v as u64).collect(),
             replica_rows: c.replica_rows.load(Ordering::Relaxed),
+            unavailable_rows: ctx.plan.unavailable_rows as u64,
         };
         Ok(RankOutput { out, metrics })
     }
@@ -930,11 +997,11 @@ fn worker_main(bell: Arc<ProcDoorbell>, slot: usize) {
 
 /// Subscriber actor (Alg. 4): sweep flags, decode packets into tasks, feed
 /// the scheduler, interrupt once the self-correcting bound is met.
-/// Watchdog: if no flag progress and no task completion for this long the
+/// Watchdog: if no flag progress and no task completion for
+/// `SystemConfig::watchdog_secs` (see [`EngineShared::watchdog`]) the
 /// pass is wedged (protocol bug / lost signal) — fail loudly with a
 /// progress diagnostic instead of hanging the process.
-const WATCHDOG: std::time::Duration = std::time::Duration::from_secs(120);
-
+///
 /// Idle sweeps before the subscriber turns thief (prioritizes decode:
 /// fresh flags beat lending a hand for the first few empty sweeps).
 const HELP_OUT_AFTER: u32 = 8;
@@ -953,11 +1020,12 @@ fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) -> Result<()> {
     // never need them): (scratch, tile_out, xbuf).
     let mut help: Option<(Vec<f32>, Vec<f32>, Vec<f32>)> = None;
     loop {
-        // Poison check: a peer whose put failed (NIC incast overflow)
-        // stamped this pass generation. Its announced tiles will never
-        // arrive, so waiting out the watchdog would wedge every rank for
-        // two minutes — abandon the pass promptly instead. Epoch-exact,
-        // so a stamp from an already-failed earlier pass is ignored.
+        // Poison check: a peer whose put failed (NIC incast overflow or
+        // an injected fault) stamped this pass generation. Its announced
+        // tiles will never arrive, so waiting out the watchdog would
+        // wedge every rank for `watchdog_secs` — abandon the pass
+        // promptly instead. Epoch-exact, so a stamp from an already-
+        // failed earlier same-slot pass never matches.
         if shared.poisoned(ctx.epoch32) {
             ctx.queue.stop_all();
             bail!(
@@ -1066,15 +1134,17 @@ fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) -> Result<()> {
             } else {
                 std::thread::yield_now();
             }
-            if idle_spins % 4096 == 0 && last_progress.elapsed() > WATCHDOG {
+            if idle_spins % 4096 == 0 && last_progress.elapsed() > shared.watchdog() {
                 let c = &ctx.counters;
                 ctx.queue.stop_all();
                 panic!(
-                    "rank {} wedged (watchdog {}s, pass gen {}): announced {}/{ranks}, \
+                    "rank {} wedged ({:.1}s since last progress, watchdog {}s, pass gen {}): \
+                     announced {}/{ranks}, \
                      dispatch {seen_dispatch}/{}, combine {seen_combine}/{my_expected_combine}, \
                      ffn {}/{}, combine-exec {}/{}",
                     ctx.rank,
-                    WATCHDOG.as_secs(),
+                    last_progress.elapsed().as_secs_f64(),
+                    shared.cfg.system.watchdog_secs,
                     ctx.epoch32,
                     shared.announced.load(Ordering::Acquire),
                     shared.expected_dispatch[ctx.rank].load(Ordering::Acquire),
@@ -1345,4 +1415,48 @@ fn execute_task(
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Regression for the single-word poison hazard: with two passes in
+    /// flight, pass N+1's start-clear must never erase pass N's stamp.
+    #[test]
+    fn poison_stamps_are_per_slot() {
+        let latch = PoisonLatch::new();
+        // two in-flight generations poison independently
+        latch.poison(5); // slot 1
+        latch.poison(6); // slot 0
+        assert!(latch.poisoned(5));
+        assert!(latch.poisoned(6));
+        // pass 7's start-clear (slot 1) erases only 5's stale stamp —
+        // the old single-word latch would have wiped 6's live stamp too
+        latch.clear(7);
+        assert!(!latch.poisoned(5));
+        assert!(latch.poisoned(6), "other slot's stamp survives the clear");
+        assert!(!latch.poisoned(7), "cleared slot reads clean for the new pass");
+        // epoch-exact: a same-slot stamp from an earlier generation never
+        // matches the current one
+        latch.poison(3);
+        assert!(!latch.poisoned(5));
+        assert!(latch.poisoned(3));
+    }
+
+    #[test]
+    fn poison_clear_is_slot_local_over_many_generations() {
+        let latch = PoisonLatch::new();
+        for epoch in 1..50u32 {
+            // pass `epoch` starts: clear its own slot only
+            latch.clear(epoch);
+            assert!(!latch.poisoned(epoch));
+            // the previous pass poisons late (still collecting)
+            if epoch > 1 {
+                latch.poison(epoch - 1);
+                assert!(latch.poisoned(epoch - 1), "gen {}", epoch - 1);
+                assert!(!latch.poisoned(epoch), "new pass unaffected");
+            }
+        }
+    }
 }

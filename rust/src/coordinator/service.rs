@@ -132,6 +132,15 @@ pub struct RequestOpts {
     /// Admission priority under [`QueueDiscipline::Priority`] (higher
     /// admits first); ignored under FIFO.
     pub priority: i32,
+    /// Client latency budget, measured from `enqueue`. A request whose
+    /// budget has already expired when the batcher would admit it is
+    /// failed ("deadline exceeded before admission") instead of being
+    /// packed into a pass — under degraded capacity (a dead rank, passes
+    /// retrying) this sheds doomed work so live requests keep their
+    /// budgets. Counted in
+    /// [`ServiceMetrics::deadline_misses`](super::metrics::ServiceMetrics::deadline_misses).
+    /// `None` (the default) means no deadline.
+    pub deadline: Option<Duration>,
 }
 
 /// Why `enqueue` refused a request. Everything here is a *client-side*
@@ -296,6 +305,9 @@ struct Chunk {
     /// Row offset of this chunk in its request's output.
     out_offset: usize,
     priority: i32,
+    /// Absolute admission deadline (`enqueued_at + RequestOpts::deadline`);
+    /// every chunk of a request carries the same instant.
+    deadline: Option<Instant>,
     /// Last chunk of its request (drives request-level queue accounting).
     last: bool,
 }
@@ -487,6 +499,7 @@ impl MoeService {
             }
         };
         let n_chunks = rows.div_ceil(policy.max_tokens);
+        let deadline = opts.deadline.map(|d| cell.enqueued_at + d);
         if n_chunks == 1 {
             let chunk = Chunk {
                 cell: cell.clone(),
@@ -494,6 +507,7 @@ impl MoeService {
                 rows,
                 out_offset: 0,
                 priority: opts.priority,
+                deadline,
                 last: true,
             };
             insert(&mut q, chunk);
@@ -507,6 +521,7 @@ impl MoeService {
                     rows: hi - lo,
                     out_offset: lo,
                     priority: opts.priority,
+                    deadline,
                     last: i + 1 == n_chunks,
                 };
                 insert(&mut q, chunk);
@@ -578,6 +593,29 @@ fn batcher_main(shared: Arc<ServiceShared>, engine: MoeEngine) {
         match admit(&shared, in_flight.is_some()) {
             Admission::Batch(chunks) => {
                 let admitted_at = Instant::now();
+                // Deadline-aware admission: a request whose client budget
+                // already expired is failed here, not packed — under
+                // degraded capacity this sheds doomed work so requests
+                // with live budgets keep theirs. (Cell locks are taken
+                // with the queue lock released, per the lock order.)
+                let (chunks, expired): (Vec<Chunk>, Vec<Chunk>) = chunks
+                    .into_iter()
+                    .partition(|c| c.deadline.map_or(true, |d| admitted_at < d));
+                if !expired.is_empty() {
+                    let missed = expired
+                        .iter()
+                        .filter(|c| {
+                            c.cell.fail("deadline exceeded before admission".into());
+                            c.cell.claim()
+                        })
+                        .count() as u64;
+                    let mut q = shared.queue.lock().unwrap();
+                    q.metrics.deadline_misses += missed;
+                    q.metrics.requests_failed += missed;
+                }
+                if chunks.is_empty() {
+                    continue;
+                }
                 let input = pack(&shared, &chunks);
                 match engine.submit_pass(input) {
                     Ok(handle) => {

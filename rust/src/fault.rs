@@ -1,0 +1,294 @@
+//! Deterministic fault injection for chaos testing (ROADMAP item 5).
+//!
+//! A [`FaultPlan`] turns the [`FaultConfig`] knobs into per-transfer
+//! decisions at the `Transport` seam: `NodeFabric` consults the plan on
+//! every `put_signal` / coalesced transfer, so chaos schedules exercise
+//! the *production* poison → retry → degrade machinery with zero engine
+//! changes (see the crate docs' fault-tolerance section).
+//!
+//! Three fault classes, all decided by a pure function of `(seed, src,
+//! dst, pass generation)` so a schedule replays identically run over run:
+//!
+//! * **Transient transfer faults** — a transfer inside the configured
+//!   generation window fails with probability `transient_rate`. A
+//!   retried pass runs under a *fresh* generation, so the same logical
+//!   transfer re-rolls — which is what makes `retry_limit` recover it.
+//! * **Permanent rank death** — from `kill_epoch` on, every transfer
+//!   touching `kill_rank` fails. Retrying cannot help; the engine instead
+//!   swaps in a degraded [`Placement`](crate::placement::Placement) that
+//!   routes around the corpse.
+//! * **NIC delay spikes** — an inter-node transfer sleeps `delay_us`
+//!   with probability `delay_rate`: injected stragglers for latency
+//!   benches, never an error.
+//!
+//! Injected errors carry stable marker phrases ([`TRANSIENT_MARKER`],
+//! [`DEAD_MARKER`]) so the engine's retry driver can classify a failed
+//! pass ([`is_transient`], [`is_dead_rank`]) without string-format
+//! coupling scattered across the codebase.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::config::FaultConfig;
+
+/// Stable phrase carried by every injected *transient* transfer error.
+pub const TRANSIENT_MARKER: &str = "injected transient fault";
+
+/// Stable phrase carried by every injected *permanent rank death* error.
+pub const DEAD_MARKER: &str = "permanently dead";
+
+/// True if an error string (typically `format!("{e:#}")` of an engine
+/// pass error) stems from an injected transient transfer fault.
+pub fn is_transient(msg: &str) -> bool {
+    msg.contains(TRANSIENT_MARKER)
+}
+
+/// True if an error string stems from a transfer touching a permanently
+/// dead rank.
+pub fn is_dead_rank(msg: &str) -> bool {
+    msg.contains(DEAD_MARKER)
+}
+
+/// A live fault schedule: [`FaultConfig`] plus injection counters.
+///
+/// Constructed once per `NodeFabric` (only when the config
+/// [`enabled`](FaultConfig::enabled) something) and shared by every rank
+/// actor; all methods take `&self` and are thread-safe.
+#[derive(Debug)]
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    injected: AtomicU64,
+    delays: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Build the plan, or `None` when the schedule can never fire (the
+    /// common case: the transport then skips the seam entirely).
+    pub fn from_config(cfg: &FaultConfig) -> Option<Arc<FaultPlan>> {
+        cfg.enabled().then(|| {
+            Arc::new(FaultPlan {
+                cfg: *cfg,
+                injected: AtomicU64::new(0),
+                delays: AtomicU64::new(0),
+            })
+        })
+    }
+
+    /// The schedule this plan executes.
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    /// Deterministic uniform draw in `[0, 1)` for one (src, dst,
+    /// generation) transfer, decorrelated across the two fault classes by
+    /// `salt`.
+    fn roll(&self, src: usize, dst: usize, epoch: u32, salt: u64) -> f64 {
+        let key = (src as u64) << 40 ^ (dst as u64) << 20 ^ epoch as u64;
+        let h = splitmix64(self.cfg.seed ^ salt ^ splitmix64(key));
+        // 53 high bits -> uniform double in [0, 1)
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Is `rank` permanently dead at pass generation `epoch`?
+    pub fn rank_dead(&self, rank: usize, epoch: u32) -> bool {
+        self.cfg.kill_rank == Some(rank) && epoch as u64 >= self.cfg.kill_epoch
+    }
+
+    /// The rank that is permanently dead at generation `epoch`, if any.
+    pub fn dead_rank(&self, epoch: u32) -> Option<usize> {
+        self.cfg.kill_rank.filter(|&r| self.rank_dead(r, epoch))
+    }
+
+    /// Would the (src, dst) transfer of generation `epoch` fail
+    /// transiently? Pure query — no counting, no error.
+    pub fn transient_fault(&self, src: usize, dst: usize, epoch: u32) -> bool {
+        let e = epoch as u64;
+        e >= self.cfg.transient_from
+            && (self.cfg.transient_until == 0 || e < self.cfg.transient_until)
+            && self.roll(src, dst, epoch, 0x7261_6e73) < self.cfg.transient_rate
+    }
+
+    /// Injected straggler delay for a NIC-class transfer, if one fires.
+    pub fn delay(&self, src: usize, dst: usize, epoch: u32) -> Option<Duration> {
+        (self.cfg.delay_us > 0
+            && self.roll(src, dst, epoch, 0x6465_6c61) < self.cfg.delay_rate)
+            .then(|| Duration::from_micros(self.cfg.delay_us))
+    }
+
+    /// Gate one transfer through the schedule: bail on a dead endpoint or
+    /// a transient fault (counting the injection), and — for NIC-class
+    /// transfers — sleep through any injected delay spike. Called by the
+    /// transport before the payload moves, so a faulted transfer is never
+    /// partially delivered.
+    pub fn admit(&self, src: usize, dst: usize, epoch: u32, nic: bool) -> Result<()> {
+        for r in [dst, src] {
+            if self.rank_dead(r, epoch) {
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                bail!(
+                    "injected fault: rank {r} is {DEAD_MARKER} since pass gen {} \
+                     (transfer {src} -> {dst}, pass gen {epoch})",
+                    self.cfg.kill_epoch
+                );
+            }
+        }
+        if self.transient_fault(src, dst, epoch) {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            bail!("{TRANSIENT_MARKER}: transfer {src} -> {dst} dropped (pass gen {epoch})");
+        }
+        if nic {
+            if let Some(d) = self.delay(src, dst, epoch) {
+                self.delays.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(d);
+            }
+        }
+        Ok(())
+    }
+
+    /// Total faults injected (transient + dead-endpoint rejections).
+    pub fn faults_injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Total NIC delay spikes injected.
+    pub fn delays_injected(&self) -> u64 {
+        self.delays.load(Ordering::Relaxed)
+    }
+}
+
+/// SplitMix64 finalizer: a cheap, well-mixed 64-bit hash.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(mutate: impl FnOnce(&mut FaultConfig)) -> Arc<FaultPlan> {
+        let mut cfg = FaultConfig::default();
+        mutate(&mut cfg);
+        FaultPlan::from_config(&cfg).expect("schedule should be enabled")
+    }
+
+    #[test]
+    fn disabled_config_builds_no_plan() {
+        assert!(FaultPlan::from_config(&FaultConfig::default()).is_none());
+        // a seed alone is not a schedule
+        let cfg = FaultConfig { seed: 7, ..FaultConfig::default() };
+        assert!(FaultPlan::from_config(&cfg).is_none());
+        // delay needs both a rate and a duration
+        let cfg = FaultConfig { delay_rate: 1.0, ..FaultConfig::default() };
+        assert!(FaultPlan::from_config(&cfg).is_none());
+    }
+
+    #[test]
+    fn transient_rolls_are_deterministic_and_windowed() {
+        let p = plan(|c| {
+            c.seed = 123;
+            c.transient_rate = 0.5;
+            c.transient_from = 2;
+            c.transient_until = 6;
+        });
+        let q = plan(|c| {
+            c.seed = 123;
+            c.transient_rate = 0.5;
+            c.transient_from = 2;
+            c.transient_until = 6;
+        });
+        let mut fired = 0;
+        for src in 0..4 {
+            for dst in 0..4 {
+                for epoch in 0..10u32 {
+                    let a = p.transient_fault(src, dst, epoch);
+                    assert_eq!(a, q.transient_fault(src, dst, epoch), "same seed, same rolls");
+                    if !(2..6).contains(&epoch) {
+                        assert!(!a, "fault outside window [2, 6)");
+                    }
+                    fired += a as usize;
+                }
+            }
+        }
+        assert!(fired > 0, "rate 0.5 over 64 in-window rolls must fire sometimes");
+        assert!(fired < 4 * 4 * 4, "...but not always");
+    }
+
+    #[test]
+    fn rate_extremes() {
+        let never = plan(|c| {
+            c.transient_rate = 0.0;
+            c.kill_rank = Some(0); // enable the plan without transients
+            c.kill_epoch = u64::MAX;
+        });
+        let always = plan(|c| c.transient_rate = 1.0);
+        for epoch in 1..20u32 {
+            assert!(!never.transient_fault(0, 1, epoch));
+            assert!(always.transient_fault(0, 1, epoch));
+        }
+    }
+
+    #[test]
+    fn open_ended_window() {
+        let p = plan(|c| {
+            c.transient_rate = 1.0;
+            c.transient_from = 3;
+            c.transient_until = 0;
+        });
+        assert!(!p.transient_fault(0, 1, 2));
+        assert!(p.transient_fault(0, 1, 3));
+        assert!(p.transient_fault(0, 1, 40_000));
+    }
+
+    #[test]
+    fn kill_semantics_and_markers() {
+        let p = plan(|c| {
+            c.kill_rank = Some(2);
+            c.kill_epoch = 5;
+        });
+        assert!(!p.rank_dead(2, 4), "alive before the kill epoch");
+        assert!(p.rank_dead(2, 5));
+        assert!(p.rank_dead(2, 9));
+        assert!(!p.rank_dead(1, 9), "only the configured rank dies");
+        assert_eq!(p.dead_rank(4), None);
+        assert_eq!(p.dead_rank(5), Some(2));
+        // admit classifies: dead endpoint (either side) vs clean transfer
+        p.admit(0, 1, 9, false).unwrap();
+        let e = p.admit(0, 2, 9, false).unwrap_err();
+        assert!(is_dead_rank(&format!("{e:#}")), "dst death is a dead-rank error: {e:#}");
+        let e = p.admit(2, 0, 9, true).unwrap_err();
+        assert!(is_dead_rank(&format!("{e:#}")), "src death too: {e:#}");
+        assert!(!is_transient(&format!("{e:#}")));
+        assert_eq!(p.faults_injected(), 2);
+    }
+
+    #[test]
+    fn transient_admit_counts_and_classifies() {
+        let p = plan(|c| c.transient_rate = 1.0);
+        let e = p.admit(1, 0, 3, false).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(is_transient(&msg), "{msg}");
+        assert!(!is_dead_rank(&msg));
+        assert_eq!(p.faults_injected(), 1);
+        assert_eq!(p.delays_injected(), 0);
+    }
+
+    #[test]
+    fn delay_spikes_only_on_nic_transfers() {
+        let p = plan(|c| {
+            c.delay_rate = 1.0;
+            c.delay_us = 1;
+        });
+        assert!(p.delay(0, 1, 1).is_some());
+        p.admit(0, 1, 1, false).unwrap();
+        assert_eq!(p.delays_injected(), 0, "intra-node transfers never sleep");
+        p.admit(0, 1, 1, true).unwrap();
+        assert_eq!(p.delays_injected(), 1);
+        assert_eq!(p.faults_injected(), 0, "a delay is not a fault");
+    }
+}

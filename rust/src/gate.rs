@@ -288,6 +288,13 @@ pub struct DispatchPlan {
     pub padded_rows: usize,
     /// Valid rows actually sent.
     pub sent_rows: usize,
+    /// Routed rows whose expert has **no** serving location (its primary
+    /// rank failed with no surviving replica — see
+    /// [`Placement::fail_rank`]). These rows are skipped, not shipped:
+    /// degraded capacity is explicit, never a silent wedge.
+    pub unavailable_rows: usize,
+    /// Distinct location-less experts this plan skipped rows for.
+    pub unavailable_experts: usize,
 }
 
 impl DispatchPlan {
@@ -333,6 +340,8 @@ pub fn dispatch_plan(routing: &Routing, bm: usize, placement: &Placement) -> Dis
     }
     let mut sent_rows = 0usize;
     let mut active_regions = 0usize;
+    let mut unavailable_rows = 0usize;
+    let mut unavailable_experts = 0usize;
     let mut shard: Vec<&Route> = Vec::new();
     for (ex, rs) in by_expert.iter().enumerate() {
         if rs.is_empty() {
@@ -340,7 +349,14 @@ pub fn dispatch_plan(routing: &Routing, bm: usize, placement: &Placement) -> Dis
         }
         let locs = placement.locations(ex);
         let n = locs.len();
-        debug_assert!(n >= 1, "every expert has a primary location");
+        if n == 0 {
+            // degraded placement: the expert's primary rank failed with
+            // no surviving replica. Its rows cannot be served anywhere —
+            // skip them and account the loss explicitly.
+            unavailable_rows += rs.len();
+            unavailable_experts += 1;
+            continue;
+        }
         for (li, &(dst, dslot)) in locs.iter().enumerate() {
             shard.clear();
             if n == 1 {
@@ -379,6 +395,8 @@ pub fn dispatch_plan(routing: &Routing, bm: usize, placement: &Placement) -> Dis
         // region of every active (expert, location) pair
         padded_rows: active_regions * routing.capacity,
         sent_rows,
+        unavailable_rows,
+        unavailable_experts,
     }
 }
 
@@ -559,6 +577,32 @@ mod tests {
         let plan = dispatch_plan(&routing, 4, &Placement::balanced(8, 2, 0));
         let covered: usize = plan.tiles.iter().map(|t| t.tokens.len()).sum();
         assert_eq!(covered, routing.routes.len());
+    }
+
+    #[test]
+    fn degraded_placement_accounts_unavailable_rows() {
+        let m = model(4, 1, 4);
+        // tokens 0..3 -> expert 2 (owner rank 1), token 4 -> expert 0
+        let mut scores = Vec::new();
+        for _ in 0..4 {
+            scores.extend([0.1f32, 0.1, 0.7, 0.1]);
+        }
+        scores.extend([0.7f32, 0.1, 0.1, 0.1]);
+        let routing = route_from_scores(scores, 5, &m, 8);
+        let mut p = Placement::balanced(4, 2, 0);
+        p.fail_rank(1); // experts 2, 3 lose their only location
+        let plan = dispatch_plan(&routing, 4, &p);
+        assert_eq!(plan.unavailable_rows, 4, "expert 2's rows skipped");
+        assert_eq!(plan.unavailable_experts, 1, "only active orphans count");
+        assert_eq!(plan.sent_rows, 1, "expert 0's row still travels");
+        assert!(plan.tiles.iter().all(|t| t.dst != 1), "no tile targets the corpse");
+        // a replica revives the expert: every row travels again
+        let mut p2 = Placement::balanced(4, 2, 1);
+        p2.add_replica(2, 0).unwrap();
+        p2.fail_rank(1);
+        let plan2 = dispatch_plan(&routing, 4, &p2);
+        assert_eq!(plan2.unavailable_rows, 0);
+        assert_eq!(plan2.sent_rows, 5);
     }
 
     #[test]

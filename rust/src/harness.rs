@@ -22,7 +22,7 @@ use crate::sim::straggler;
 use crate::util::check::dense_reference_moe;
 use crate::util::json::{self, Json};
 use crate::util::prng::Rng;
-use crate::util::stats::{fmt_bytes, fmt_time, max_abs_diff, summarize, Table};
+use crate::util::stats::{fmt_bytes, fmt_time, max_abs_diff, percentile, summarize, Table};
 use crate::workload::{cluster_workload, skewed_tokens, ArrivalProcess, Skew};
 
 /// Engines compared in the latency/throughput figures.
@@ -1521,6 +1521,247 @@ pub fn precision_json(points: &[PrecisionPoint]) -> Json {
                     ("max_abs_err", json::num(p.max_abs_err)),
                     ("tolerance", json::num(p.tolerance)),
                     ("heap_bytes_per_rank", json::num(p.heap_bytes)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// PR-8 chaos: fault injection, pass-level retry, degraded-capacity serving
+// ---------------------------------------------------------------------------
+
+/// One arm of the chaos A/B — the same open-loop serving workload with
+/// the deterministic fault schedule off (`"clean"`) or on (`"faulted"`).
+/// Every number is measured from a live `MoeService` run.
+#[derive(Clone, Debug)]
+pub struct ChaosPoint {
+    /// `"clean"` or `"faulted"`.
+    pub arm: &'static str,
+    pub requests: usize,
+    pub served: u64,
+    pub failed: u64,
+    pub deadline_misses: u64,
+    /// served / enqueued — the serving availability under the schedule.
+    pub availability: f64,
+    /// Request latency percentiles (enqueue → completion), seconds.
+    pub latency_p50: f64,
+    pub latency_p99: f64,
+    pub latency_p999: f64,
+    /// Pass resubmissions the engine performed transparently.
+    pub retries: u64,
+    /// Passes that ran under a degraded (dead-rank) placement.
+    pub degraded_passes: u64,
+    /// Faults the plan actually injected at the transport seam.
+    pub faults_injected: u64,
+    /// Tokens served per wall second.
+    pub throughput: f64,
+}
+
+/// CI-sized chaos config: the replication shape (`tiny`, 4 ranks,
+/// dropless, hot-expert replicas so a dead rank's hot experts survive
+/// elsewhere) plus a retry budget. The faulted arm adds the
+/// deterministic schedule: every cross-rank transfer of pass epoch 2
+/// fails transiently (the window `[2, 3)` at rate 1.0), and rank 3 dies
+/// permanently at epoch 6 — so one retry rides out the transient, and
+/// the permanent death exercises the epoch-fenced degraded-placement
+/// swap mid-run.
+pub fn chaos_config(faulted: bool) -> Result<Config> {
+    let mut cfg = replication_config(true)?;
+    cfg.set("retry_limit", "2")?;
+    if faulted {
+        cfg.set("fault_seed", "42")?;
+        cfg.set("fault_transient_rate", "1.0")?;
+        cfg.set("fault_transient_from", "2")?;
+        cfg.set("fault_transient_until", "3")?;
+        cfg.set("fault_kill_rank", "3")?;
+        cfg.set("fault_kill_epoch", "6")?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Drive one arm's serving front end with open-loop Poisson traffic and
+/// report (success latencies, wall seconds, tokens served, final report).
+/// Request failures are tolerated here (the A/B asserts on the counts),
+/// so a mid-run fault surfaces as accounting, not a harness error. Every
+/// request carries a generous deadline so the deadline-admission path is
+/// exercised without shedding under the test schedule.
+fn chaos_serving(
+    cfg: &Config,
+    params: &Arc<ModelParams>,
+    seed: u64,
+    requests: usize,
+    rate: f64,
+) -> Result<(Vec<f64>, f64, usize, crate::coordinator::ServiceReport)> {
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(cfg));
+    // Small passes (max_tokens 64 vs the 8..=64-row requests) so the run
+    // spans enough epochs to cross the kill epoch deterministically.
+    let mut policy = BatchPolicy::from_config(cfg);
+    policy.max_tokens = 64;
+    let service =
+        MoeService::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused, policy)?;
+    let (h, e) = (cfg.model.h, cfg.model.e);
+    let mut rng = Rng::new(seed ^ 0xC4A0_5E47);
+    let arrivals = ArrivalProcess::Poisson { rate }.arrivals(requests, (8, 64), &mut rng)?;
+    let opts = RequestOpts {
+        deadline: Some(std::time::Duration::from_secs(30)),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::with_capacity(requests);
+    for a in &arrivals {
+        let due = std::time::Duration::from_secs_f64(a.at);
+        if let Some(wait) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let tokens = skewed_tokens(&params.wg, h, e, a.tokens, Skew::Zipf, &mut rng);
+        handles.push(
+            service
+                .enqueue(tokens, opts)
+                .map_err(|e| anyhow::anyhow!("enqueue failed: {e}"))?,
+        );
+    }
+    let mut latencies = Vec::with_capacity(requests);
+    let mut tokens_served = 0usize;
+    for hdl in handles {
+        if let Ok(res) = hdl.wait() {
+            tokens_served += res.rows;
+            latencies.push(res.latency_secs);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let report = service.shutdown();
+    Ok((latencies, wall, tokens_served, report))
+}
+
+/// Clean vs faulted serving on **live engines**: the same params and
+/// Zipf traffic, only the [`FaultConfig`](crate::config::FaultConfig)
+/// schedule changes. Asserted here (both arms are correctness gates):
+/// the clean arm serves everything with zero retries and zero injected
+/// faults; the faulted arm *actually* injects faults, retries at least
+/// one pass, swaps to a degraded placement after the kill epoch, and —
+/// the availability claim — still serves every accepted request
+/// (`served == enqueued`: transparent retry plus replica routing, no
+/// wedge, no silent drop). The p99/p999-degradation-vs-clean numbers are
+/// reported for the bench's PERF_SMOKE gate, not asserted here.
+pub fn chaos_ab(seed: u64) -> Result<(String, Vec<ChaosPoint>)> {
+    let (requests, rate) = (40usize, 400.0f64);
+    let base = chaos_config(false)?;
+    // weights depend only on model dims + seed — shared by both arms
+    let params = Arc::new(ModelParams::generate(&base, seed));
+    let mut points = Vec::new();
+    let mut t = Table::new(&[
+        "arm",
+        "served",
+        "failed",
+        "availability",
+        "p50",
+        "p99",
+        "p99.9",
+        "retries",
+        "degraded passes",
+        "faults injected",
+    ]);
+    for faulted in [false, true] {
+        let cfg = chaos_config(faulted)?;
+        let (latencies, wall, tokens_served, report) =
+            chaos_serving(&cfg, &params, seed, requests, rate)?;
+        let s = &report.service;
+        let em = &report.engine;
+        anyhow::ensure!(em.launches == 1, "service lifetime must cost one launch");
+        anyhow::ensure!(
+            s.requests_enqueued == s.requests_served + s.requests_cancelled + s.requests_failed,
+            "accounting leak: {} enqueued != {} served + {} cancelled + {} failed",
+            s.requests_enqueued,
+            s.requests_served,
+            s.requests_cancelled,
+            s.requests_failed
+        );
+        if faulted {
+            anyhow::ensure!(em.faults_injected > 0, "faulted arm injected no faults");
+            anyhow::ensure!(em.retries > 0, "faulted arm performed no pass retries");
+            anyhow::ensure!(
+                em.degraded_passes > 0,
+                "faulted arm never ran a degraded pass after the kill epoch"
+            );
+        } else {
+            anyhow::ensure!(em.faults_injected == 0, "clean arm injected faults");
+            anyhow::ensure!(em.retries == 0, "clean arm retried passes");
+        }
+        anyhow::ensure!(
+            s.requests_served == s.requests_enqueued,
+            "{} arm dropped requests: served {} of {} (failed {}, deadline misses {})",
+            if faulted { "faulted" } else { "clean" },
+            s.requests_served,
+            s.requests_enqueued,
+            s.requests_failed,
+            s.deadline_misses
+        );
+        let mut sorted = latencies.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p = ChaosPoint {
+            arm: if faulted { "faulted" } else { "clean" },
+            requests,
+            served: s.requests_served,
+            failed: s.requests_failed,
+            deadline_misses: s.deadline_misses,
+            availability: if s.requests_enqueued > 0 {
+                s.requests_served as f64 / s.requests_enqueued as f64
+            } else {
+                0.0
+            },
+            latency_p50: percentile(&sorted, 0.50),
+            latency_p99: percentile(&sorted, 0.99),
+            latency_p999: percentile(&sorted, 0.999),
+            retries: em.retries,
+            degraded_passes: em.degraded_passes,
+            faults_injected: em.faults_injected,
+            throughput: if wall > 0.0 { tokens_served as f64 / wall } else { 0.0 },
+        };
+        t.row(&[
+            p.arm.to_string(),
+            p.served.to_string(),
+            p.failed.to_string(),
+            format!("{:.1}%", p.availability * 100.0),
+            fmt_time(p.latency_p50),
+            fmt_time(p.latency_p99),
+            fmt_time(p.latency_p999),
+            p.retries.to_string(),
+            p.degraded_passes.to_string(),
+            p.faults_injected.to_string(),
+        ]);
+        points.push(p);
+    }
+    Ok((
+        format!(
+            "## Chaos A/B — fault injection, transparent retry, degraded-capacity serving\n\n{}",
+            t.render()
+        ),
+        points,
+    ))
+}
+
+/// JSON rows for [`chaos_ab`] points (`BENCH_pr8_chaos.json`).
+pub fn chaos_json(points: &[ChaosPoint]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                json::obj(vec![
+                    ("arm", json::s(p.arm)),
+                    ("requests", json::num(p.requests as f64)),
+                    ("served", json::num(p.served as f64)),
+                    ("failed", json::num(p.failed as f64)),
+                    ("deadline_misses", json::num(p.deadline_misses as f64)),
+                    ("availability", json::num(p.availability)),
+                    ("latency_p50", json::num(p.latency_p50)),
+                    ("latency_p99", json::num(p.latency_p99)),
+                    ("latency_p999", json::num(p.latency_p999)),
+                    ("retries", json::num(p.retries as f64)),
+                    ("degraded_passes", json::num(p.degraded_passes as f64)),
+                    ("faults_injected", json::num(p.faults_injected as f64)),
+                    ("throughput_tokens_per_sec", json::num(p.throughput)),
                 ])
             })
             .collect(),

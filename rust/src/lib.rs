@@ -193,6 +193,52 @@
 //! --bench table2_straggler` records the A/B into
 //! `BENCH_pr7_replication.json` with a CI perf-smoke gate.
 //!
+//! ## Fault tolerance: poison → retry → degrade
+//!
+//! Production serving assumes failure (ROADMAP item 5). The robustness
+//! ladder has three rungs, each building on the one below:
+//!
+//! * **Poison** (PR 6): a failed transfer stamps the pass generation as
+//!   poisoned; every peer abandons the pass promptly instead of wedging,
+//!   and the engine surfaces one pass error. The stamp is per *slot*
+//!   (two epochs are in flight under double buffering), and the
+//!   subscriber watchdog — `cfg.set("watchdog_secs", s)`, default 120 —
+//!   bounds how long a wedged pass can survive undetected.
+//! * **Retry** (`cfg.set("retry_limit", n)`, default 0 = fail fast):
+//!   `PassHandle::wait` re-fences a poisoned pass at the epoch quiet
+//!   point and resubmits the retained inputs under a fresh generation,
+//!   with exponential backoff, transparently to [`coordinator::MoeService`]
+//!   callers. Because pass outputs are deterministic, a transiently
+//!   faulted pass that succeeds on retry is **bitwise identical** to a
+//!   fault-free run (asserted across Capacity/Dropless × flat/
+//!   hierarchical by `rust/tests/chaos.rs`). Retryable: injected
+//!   transient faults, NIC incast overflow, peer-abandoned passes.
+//! * **Degrade**: a *permanent* rank death (retrying cannot help) makes
+//!   the retry driver swap in a degraded [`placement::Placement`] at the
+//!   same quiet point: `fail_rank` reroutes every expert the corpse
+//!   served to its surviving replicas — hot experts replicated by the
+//!   subsystem above keep serving — and experts with no surviving copy
+//!   are **explicitly accounted** (`PassMetrics::experts_unavailable`,
+//!   their rows dropped with `RankMetrics::unavailable_rows`, never
+//!   silently wrong). Token rows bound for the dead rank are repacked
+//!   onto survivors' spare capacity for the pass and their outputs
+//!   restored to the caller's shape, so the service keeps answering at
+//!   reduced capacity instead of collapsing.
+//!
+//! Not recoverable: validation errors (they fail before an epoch is
+//! assigned), compute panics inside a rank actor (the actor is gone),
+//! and capacity exhaustion when the surviving ranks cannot hold a dead
+//! rank's rows. Chaos is driven by the deterministic `crate::fault`
+//! schedule (`fault_*` knobs) injected at the transport seam — zero
+//! engine changes between a chaos run and production. On the service
+//! side, [`coordinator::RequestOpts`]`::deadline` adds deadline-aware
+//! admission: a request whose deadline passes while queued is shed
+//! before it wastes a pass (`ServiceMetrics::deadline_misses`), with
+//! priority ordering shedding best-effort traffic first.
+//! `harness::chaos_ab` + `cargo bench --bench chaos_bench` record
+//! availability and tail latency under a live fault schedule into
+//! `BENCH_pr8_chaos.json` with a CI perf-smoke gate.
+//!
 //! ## Quickstart — serving requests
 //!
 //! The serving front door: start a [`coordinator::MoeService`], enqueue
@@ -300,6 +346,7 @@ pub mod task;
 pub mod gemm;
 pub mod expert;
 pub mod fabric;
+pub mod fault;
 pub mod transport;
 pub mod runtime;
 pub mod coordinator;

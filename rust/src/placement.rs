@@ -44,6 +44,9 @@ pub struct Placement {
     locations: Vec<Vec<(u32, u32)>>,
     /// Per (rank, replica slot) bound global expert.
     bound: Vec<Option<u32>>,
+    /// Ranks marked permanently failed by [`fail_rank`](Self::fail_rank):
+    /// they serve no locations and the planner never targets them.
+    failed: Vec<bool>,
     /// Bumped on every mutation; pass metrics stamp it for telemetry.
     version: u64,
 }
@@ -64,6 +67,7 @@ impl Placement {
             replica_slots,
             locations,
             bound: vec![None; ranks * replica_slots],
+            failed: vec![false; ranks],
             version: 0,
         }
     }
@@ -102,7 +106,10 @@ impl Placement {
     }
 
     /// Serving locations of `expert`: primary first, replicas in install
-    /// order. Never empty.
+    /// order. Never empty under healthy operation; empty exactly for an
+    /// expert whose primary rank [failed](Self::fail_rank) with no
+    /// surviving replica — such an expert is *unavailable* and the gate
+    /// accounts its rows instead of dispatching them.
     pub fn locations(&self, expert: usize) -> &[(u32, u32)] {
         &self.locations[expert]
     }
@@ -156,6 +163,9 @@ impl Placement {
         if expert >= self.e || rank >= self.ranks {
             bail!("replica target out of range: expert {expert}, rank {rank}");
         }
+        if self.failed[rank] {
+            bail!("rank {rank} is marked failed; it cannot host replicas");
+        }
         if self.slot_on(rank, expert).is_some() {
             bail!("rank {rank} already serves expert {expert}");
         }
@@ -194,6 +204,52 @@ impl Placement {
             let (rank, _) = self.locations[expert][1];
             self.remove_replica(expert, rank as usize);
         }
+    }
+
+    /// Mark `rank` permanently failed: every location it serves (primary
+    /// and replica) is removed, its replica-slot bindings are released,
+    /// and the planner will never target it again. Idempotent. Returns
+    /// the experts left with **no** serving location — the degraded
+    /// capacity the caller must account for (the engine surfaces it as
+    /// `PassMetrics::experts_unavailable`).
+    ///
+    /// This is the epoch-fenced half of failure handling: the engine only
+    /// installs the degraded placement between passes, exactly like a
+    /// replication rebalance.
+    pub fn fail_rank(&mut self, rank: usize) -> Vec<usize> {
+        if rank < self.ranks && !self.failed[rank] {
+            self.failed[rank] = true;
+            for locs in &mut self.locations {
+                locs.retain(|(r, _)| *r as usize != rank);
+            }
+            for j in 0..self.replica_slots {
+                self.bound[rank * self.replica_slots + j] = None;
+            }
+            self.version += 1;
+        }
+        self.unavailable_experts()
+    }
+
+    /// Has `rank` been marked permanently failed?
+    pub fn is_failed(&self, rank: usize) -> bool {
+        self.failed.get(rank).copied().unwrap_or(false)
+    }
+
+    /// True iff any rank has been marked failed (the placement routes
+    /// around at least one corpse).
+    pub fn degraded(&self) -> bool {
+        self.failed.iter().any(|&f| f)
+    }
+
+    /// Ranks marked failed, ascending.
+    pub fn failed_ranks(&self) -> Vec<usize> {
+        (0..self.ranks).filter(|&r| self.failed[r]).collect()
+    }
+
+    /// Experts with no serving location at all (primary dead, no replica
+    /// survived), ascending. Empty under healthy operation.
+    pub fn unavailable_experts(&self) -> Vec<usize> {
+        (0..self.e).filter(|&ex| self.locations[ex].is_empty()).collect()
     }
 
     /// Predicted load share landing on `rank` under this placement, given
@@ -318,6 +374,7 @@ pub fn plan_replication(
     for &ex in &hot {
         while next.locations(ex).len() < target {
             let candidate = (0..next.ranks())
+                .filter(|&r| !next.is_failed(r))
                 .filter(|&r| next.slot_on(r, ex).is_none())
                 .filter(|&r| {
                     // a free replica slot must exist on the candidate
@@ -443,6 +500,69 @@ mod tests {
         assert!(!off.enabled());
         let p4 = plan_replication(&off, &tracker, &p1);
         assert!(p4.same_locations(&p1));
+    }
+
+    #[test]
+    fn fail_rank_evicts_locations_and_reports_unavailable() {
+        let mut p = Placement::balanced(8, 4, 1);
+        // replicate expert 4 (owned by rank 2) onto rank 0, so rank 2's
+        // death leaves expert 4 served and expert 5 orphaned
+        p.add_replica(4, 0).unwrap();
+        let v0 = p.version();
+        assert!(!p.degraded());
+        let lost = p.fail_rank(2);
+        assert_eq!(lost, vec![5], "expert 5 had no replica");
+        assert!(p.is_failed(2) && p.degraded());
+        assert_eq!(p.failed_ranks(), vec![2]);
+        assert!(p.version() > v0);
+        assert_eq!(p.locations(4), &[(0, 2)], "replica survives as sole location");
+        assert!(p.locations(5).is_empty(), "orphaned expert serves nowhere");
+        assert_eq!(p.slot_on(2, 4), None);
+        assert_eq!(p.unavailable_experts(), vec![5]);
+        // idempotent: same report, no version churn
+        let v1 = p.version();
+        assert_eq!(p.fail_rank(2), vec![5]);
+        assert_eq!(p.version(), v1);
+        // a failed rank refuses new replicas
+        assert!(p.add_replica(0, 2).is_err());
+        // surviving ranks still accept them (revives the orphan)
+        p.add_replica(5, 1).unwrap();
+        assert!(p.unavailable_experts().is_empty());
+    }
+
+    #[test]
+    fn fail_rank_releases_replica_bindings() {
+        let mut p = Placement::balanced(4, 2, 1);
+        // rank 1 hosts a replica of expert 0; rank 1 then dies
+        p.add_replica(0, 1).unwrap();
+        assert_eq!(p.locations(0).len(), 2);
+        let lost = p.fail_rank(1);
+        assert_eq!(lost, vec![2, 3], "rank 1's owned experts orphan");
+        assert_eq!(p.locations(0), &[(0, 0)], "replica on the corpse is gone");
+        assert_eq!(p.expert_on(1, 2), None, "binding released");
+    }
+
+    #[test]
+    fn planner_never_targets_failed_ranks() {
+        let policy = ReplicationPolicy {
+            top_r: 1,
+            replicas: 3,
+            hysteresis: 1.5,
+            ewma_alpha: 1.0,
+        };
+        let mut tracker = LoadTracker::new(4, 2, 1.0);
+        tracker.observe(&[90, 2, 4, 4], &[0.9, 0.1]);
+        // kill the least-loaded rank: without the filter the planner
+        // would pick it as the first replica target
+        let mut p0 = Placement::balanced(4, 2, 1);
+        p0.fail_rank(1);
+        let p1 = plan_replication(&policy, &tracker, &p0);
+        assert!(
+            !p1.locations(0).iter().any(|(r, _)| *r == 1),
+            "no replica may land on the failed rank: {:?}",
+            p1.locations(0)
+        );
+        assert!(p1.is_failed(1), "failure state survives planning");
     }
 
     #[test]

@@ -50,14 +50,27 @@
 //! * **Accounting.** Bytes are counted per link class at the wire
 //!   element width, with no double counting: a byte crosses either the
 //!   NVLink class or the NIC class, exactly once.
+//! * **Fault injection.** When the config schedules faults
+//!   ([`FaultConfig`](crate::config::FaultConfig)), [`NodeFabric`] gates
+//!   every transfer through a deterministic
+//!   [`FaultPlan`](crate::fault::FaultPlan) *before* the payload moves:
+//!   an injected failure delivers nothing (no flag, no bytes), exactly
+//!   like a real NIC drop, and surfaces as an ordinary transfer error
+//!   that poisons the pass. Chaos runs therefore exercise the production
+//!   poison → retry → degrade machinery with zero engine changes. A dead
+//!   proxy rank is routed around (the coalesced transfer falls back to
+//!   the next alive rank on the destination node); the engine separately
+//!   swaps in a degraded placement so traffic stops targeting the
+//!   corpse.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::config::{Config, CostModel, WirePrecision};
 use crate::fabric::SymmetricHeap;
+use crate::fault::FaultPlan;
 use crate::layout::{Coord, LayoutDims};
 
 /// The two link classes of the hierarchical fabric (paper §F: NVLink
@@ -335,6 +348,9 @@ pub struct NodeFabric {
     heap: Arc<SymmetricHeap>,
     topo: Topology,
     link: InterNodeLink,
+    /// Deterministic chaos schedule; `None` (the default) costs the hot
+    /// path nothing but the branch.
+    fault: Option<Arc<FaultPlan>>,
 }
 
 impl NodeFabric {
@@ -346,7 +362,8 @@ impl NodeFabric {
             LinkParams::from_cost(&cfg.cost, LinkClass::Nic),
             cfg.cost.nic_delay,
         );
-        Self { heap, topo, link }
+        let fault = FaultPlan::from_config(&cfg.system.fault);
+        Self { heap, topo, link, fault }
     }
 
     pub fn topology(&self) -> &Topology {
@@ -355,6 +372,11 @@ impl NodeFabric {
 
     pub fn link(&self) -> &InterNodeLink {
         &self.link
+    }
+
+    /// The active fault-injection schedule, if the config enabled one.
+    pub fn fault_plan(&self) -> Option<&Arc<FaultPlan>> {
+        self.fault.as_ref()
     }
 
     /// The underlying symmetric heap (intra-node transport).
@@ -382,7 +404,24 @@ impl NodeFabric {
         epoch: u32,
         unique_bytes: u64,
     ) -> Result<CoalescedXfer<'_>> {
-        let proxy = self.topo.proxy_of(src, dst_node);
+        let mut proxy = self.topo.proxy_of(src, dst_node);
+        if let Some(fp) = &self.fault {
+            // A dead proxy is routed around: fall back to the first alive
+            // rank on the destination node (degraded placement keeps the
+            // *experts* off the corpse; the proxy role needs any live NIC
+            // endpoint there).
+            if fp.rank_dead(proxy, epoch) {
+                let rpn = self.topo.ranks_per_node;
+                proxy = (0..rpn)
+                    .map(|i| dst_node * rpn + i)
+                    .find(|&r| !fp.rank_dead(r, epoch))
+                    .ok_or_else(|| {
+                        anyhow!("coalesced transfer {src} -> node {dst_node}: node is all dead")
+                    })?;
+            }
+            fp.admit(src, proxy, epoch, true)
+                .map_err(|e| e.context(format!("coalesced transfer {src} -> node {dst_node}")))?;
+        }
         self.link
             .deliver(proxy, epoch, unique_bytes, true)
             .map_err(|e| e.context(format!("coalesced transfer {src} -> node {dst_node}")))?;
@@ -412,7 +451,13 @@ impl Transport for NodeFabric {
         payload: &[f32],
         epoch: u32,
     ) -> Result<()> {
-        if self.topo.link_class(src, dst) == LinkClass::Nic {
+        let nic = self.topo.link_class(src, dst) == LinkClass::Nic;
+        if let Some(fp) = &self.fault {
+            // Injected faults fire before anything moves: a failed
+            // transfer delivers no flag and counts no bytes, like a drop.
+            fp.admit(src, dst, epoch, nic)?;
+        }
+        if nic {
             let bytes = (payload.len() * self.heap.wire().bytes()) as u64;
             self.link.deliver(dst, epoch, bytes, false)?;
         }
@@ -465,6 +510,12 @@ impl CoalescedXfer<'_> {
                 "coalesced fan-out to rank {dst} off the proxy's node (proxy {})",
                 self.proxy
             );
+        }
+        if let Some(fp) = &self.fabric.fault {
+            // The intra-node fan-out hop rolls its own (src, dst) fault —
+            // a dead final destination fails here even when the proxy hop
+            // survived.
+            fp.admit(self.src, dst, self.epoch, false)?;
         }
         self.fabric.heap.put_signal_from(self.proxy, self.src, dst, coord, payload, self.epoch)
     }
@@ -641,6 +692,70 @@ mod tests {
         // direct NIC puts share the same window as coalesced arrivals
         let c2 = Coord { p: 0, r: 0, b: 1, e: 0, c: 0 };
         assert!(f.put_signal(0, 2, c2, &[0.0; 8], 1).is_err());
+    }
+
+    fn chaos_fabric(
+        ranks: usize,
+        nodes: usize,
+        knobs: &[(&str, &str)],
+    ) -> NodeFabric {
+        let mut cfg = Config::preset("tiny").unwrap();
+        cfg.set("ranks", &ranks.to_string()).unwrap();
+        cfg.set("nodes", &nodes.to_string()).unwrap();
+        for (k, v) in knobs {
+            cfg.set(k, v).unwrap();
+        }
+        let dims = LayoutDims { p: ranks, e_local: 1, c: 8, h: 4, bm: 4 };
+        let heap = Arc::new(SymmetricHeap::new(dims, cfg.system.ranks_per_node()));
+        NodeFabric::new(heap, &cfg)
+    }
+
+    #[test]
+    fn injected_transient_fault_delivers_nothing() {
+        let f = chaos_fabric(2, 1, &[("fault_transient_rate", "1.0")]);
+        assert!(f.fault_plan().is_some());
+        let c = Coord { p: 0, r: 0, b: 1, e: 0, c: 0 };
+        let err = f.put_signal(0, 1, c, &[1.0; 8], 1).unwrap_err();
+        assert!(crate::fault::is_transient(&format!("{err:#}")), "{err:#}");
+        // nothing moved: no flag, no bytes
+        let fidx = f.dims().flag_index(0, 0, 0, 0);
+        assert_eq!(f.poll_epoch(1, fidx, 1), None);
+        assert_eq!(f.bytes_in(1), (0, 0));
+        assert_eq!(f.fault_plan().unwrap().faults_injected(), 1);
+        // a default fabric builds no plan at all
+        assert!(fabric(2, 1).fault_plan().is_none());
+    }
+
+    #[test]
+    fn dead_rank_fails_transfers_both_ways_after_kill_epoch() {
+        let f = chaos_fabric(2, 1, &[("fault_kill_rank", "1"), ("fault_kill_epoch", "3")]);
+        let c = |p| Coord { p, r: 0, b: 1, e: 0, c: 0 };
+        // alive before the kill epoch
+        f.put_signal(0, 1, c(0), &[1.0; 8], 2).unwrap();
+        // dead from epoch 3 on: as destination and as source
+        let err = f.put_signal(0, 1, c(0), &[1.0; 8], 3).unwrap_err();
+        assert!(crate::fault::is_dead_rank(&format!("{err:#}")), "{err:#}");
+        let err = f.put_signal(1, 0, c(1), &[1.0; 8], 4).unwrap_err();
+        assert!(crate::fault::is_dead_rank(&format!("{err:#}")), "{err:#}");
+        // transfers not touching the corpse still work
+        f.put_signal(0, 0, c(0), &[1.0; 8], 4).unwrap();
+    }
+
+    #[test]
+    fn dead_proxy_falls_back_to_an_alive_rank() {
+        // 2 nodes x 2 ranks; src 0's natural proxy on node 1 is rank 2 —
+        // kill it and the coalesced transfer must land on rank 3 instead.
+        let f = chaos_fabric(4, 2, &[("fault_kill_rank", "2"), ("fault_kill_epoch", "1")]);
+        let x = f.coalesced(0, 1, 5, 64).unwrap();
+        assert_eq!(x.proxy(), 3, "fell back to the alive rank on node 1");
+        // fan-out to the live rank works; to the corpse it fails
+        let c0 = Coord { p: 0, r: 0, b: 1, e: 0, c: 0 };
+        x.put(3, c0, &[1.0; 4]).unwrap();
+        let err = x.put(2, c0, &[1.0; 4]).unwrap_err();
+        assert!(crate::fault::is_dead_rank(&format!("{err:#}")), "{err:#}");
+        // the NIC accounting followed the fallback proxy
+        assert_eq!(f.link().coalesced_bytes_in(3), 64);
+        assert_eq!(f.link().coalesced_bytes_in(2), 0);
     }
 
     #[test]

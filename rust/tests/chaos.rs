@@ -1,0 +1,354 @@
+//! Fault-tolerance conformance: deterministic fault injection at the
+//! transport seam, transparent epoch-fenced pass retry, and
+//! degraded-capacity operation after a permanent rank death.
+//!
+//! The headline contract: a pass that hits a *transient* injected fault
+//! and is retried must produce **bitwise identical** outputs to the same
+//! pass on a fault-free engine — the retry is a clean re-execution under
+//! a fresh epoch, never a partial resume — across routing policies and
+//! dispatch modes. A *permanent* rank death mid-run swaps in a degraded
+//! placement at an epoch quiet point; the engine keeps serving, with the
+//! dead rank's un-replicated experts explicitly accounted unavailable.
+//! At the service level, the request ledger
+//! (`enqueued == served + cancelled + failed`) must balance under
+//! injected pass failures, split requests, and deadline shedding.
+
+use std::sync::Arc;
+
+use flashdmoe::config::Config;
+use flashdmoe::coordinator::{BatchPolicy, MoeEngine, MoeService, RequestOpts, TaskGraphMode};
+use flashdmoe::expert::ModelParams;
+use flashdmoe::runtime::{ComputeBackend, NativeBackend};
+use flashdmoe::util::prng::Rng;
+use flashdmoe::workload::{skewed_tokens, Skew};
+
+/// Small live-engine config; `ranks` must divide the tiny model's expert
+/// count. `dispatch == "hierarchical"` splits the ranks over 2 nodes.
+fn chaos_cfg(ranks: usize, policy: &str, dispatch: &str) -> Config {
+    let mut cfg = Config::preset("tiny").unwrap();
+    cfg.set("ranks", &ranks.to_string()).unwrap();
+    cfg.set("tokens", "128").unwrap();
+    cfg.set("routing_policy", policy).unwrap();
+    if dispatch == "hierarchical" {
+        cfg.set("nodes", "2").unwrap();
+    }
+    cfg.set("dispatch", dispatch).unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// The deterministic transient schedule: every cross-rank transfer of
+/// pass epoch 2 fails, nothing else does; two retries of budget.
+fn add_transient_window(cfg: &mut Config) {
+    cfg.set("retry_limit", "2").unwrap();
+    cfg.set("fault_seed", "42").unwrap();
+    cfg.set("fault_transient_rate", "1.0").unwrap();
+    cfg.set("fault_transient_from", "2").unwrap();
+    cfg.set("fault_transient_until", "3").unwrap();
+    cfg.validate().unwrap();
+}
+
+fn zipf_inputs(cfg: &Config, params: &ModelParams, seed: u64) -> Vec<Vec<f32>> {
+    let (h, e) = (cfg.model.h, cfg.model.e);
+    (0..cfg.system.ranks)
+        .map(|r| {
+            let mut rng = Rng::new(seed).fork(0xC4A0_0000 + r as u64);
+            skewed_tokens(&params.wg, h, e, cfg.system.s_rank, Skew::Zipf, &mut rng)
+        })
+        .collect()
+}
+
+fn start(cfg: &Config, params: &Arc<ModelParams>) -> MoeEngine {
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(cfg));
+    MoeEngine::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused).unwrap()
+}
+
+fn assert_bitwise(a: &[Vec<f32>], b: &[Vec<f32>], what: &str) {
+    for (r, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.len(), y.len(), "{what}: rank {r} output shape diverged");
+        for (i, (p, q)) in x.iter().zip(y).enumerate() {
+            assert_eq!(
+                p.to_bits(),
+                q.to_bits(),
+                "{what}: rank {r} elem {i}: {p} != {q} (bitwise)"
+            );
+        }
+    }
+}
+
+/// A transiently-faulted pass, after its transparent retry, must be
+/// bitwise identical to the fault-free run — for every routing policy ×
+/// dispatch mode, and across flat rank counts.
+#[test]
+fn transient_fault_retry_is_bitwise_identical() {
+    let seed = 42;
+    let mut cases: Vec<(usize, &str, &str)> = vec![(2, "dropless", "flat")];
+    for policy in ["capacity:1.0", "dropless"] {
+        for dispatch in ["flat", "hierarchical"] {
+            cases.push((4, policy, dispatch));
+        }
+    }
+    for (ranks, policy, dispatch) in cases {
+        let clean_cfg = chaos_cfg(ranks, policy, dispatch);
+        let mut fault_cfg = chaos_cfg(ranks, policy, dispatch);
+        add_transient_window(&mut fault_cfg);
+        let params = Arc::new(ModelParams::generate(&clean_cfg, seed));
+        let inputs = zipf_inputs(&clean_cfg, &params, seed);
+        let what = format!("{ranks} ranks, {policy}, {dispatch}");
+
+        let clean = start(&clean_cfg, &params);
+        let mut clean_outs = Vec::new();
+        for _ in 0..3 {
+            clean_outs.push(clean.submit(&inputs).unwrap().wait().unwrap().outputs);
+        }
+        clean.shutdown();
+
+        let faulted = start(&fault_cfg, &params);
+        for (pass, want) in clean_outs.iter().enumerate() {
+            let res = faulted.submit(&inputs).unwrap().wait().unwrap_or_else(|e| {
+                panic!("{what}: pass {} not recovered: {e:#}", pass + 1)
+            });
+            if pass == 1 {
+                // epoch 2 is the faulted one; its wait() must have
+                // resubmitted exactly once (epoch 3, outside the window)
+                assert_eq!(res.metrics.retries, 1, "{what}: pass 2 retry count");
+            } else {
+                assert_eq!(res.metrics.retries, 0, "{what}: pass {} retried", pass + 1);
+            }
+            assert_bitwise(want, &res.outputs, &format!("{what}, pass {}", pass + 1));
+        }
+        let em = faulted.metrics();
+        assert!(em.faults_injected >= 1, "{what}: no faults actually injected");
+        assert_eq!(em.retries, 1, "{what}: engine retry ledger");
+        faulted.shutdown();
+    }
+}
+
+/// With the retry budget exhausted (or zero), the injected fault
+/// surfaces to the caller as a pass error naming the fault — never a
+/// wedge, never a silent wrong answer.
+#[test]
+fn retry_exhaustion_surfaces_the_fault() {
+    let seed = 7;
+    for limit in ["0", "2"] {
+        let mut cfg = chaos_cfg(4, "dropless", "flat");
+        cfg.set("retry_limit", limit).unwrap();
+        cfg.set("fault_seed", "7").unwrap();
+        cfg.set("fault_transient_rate", "1.0").unwrap();
+        cfg.set("fault_transient_from", "1").unwrap();
+        cfg.set("fault_transient_until", "0").unwrap(); // open-ended: every pass
+        cfg.validate().unwrap();
+        let params = Arc::new(ModelParams::generate(&cfg, seed));
+        let inputs = zipf_inputs(&cfg, &params, seed);
+        let engine = start(&cfg, &params);
+        let err = engine.submit(&inputs).unwrap().wait().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("injected transient fault"),
+            "retry_limit={limit}: error lost the fault cause: {msg}"
+        );
+        // the engine is still alive and answers shape-valid errors, not wedges
+        let err2 = engine.submit(&inputs).unwrap().wait().unwrap_err();
+        assert!(format!("{err2:#}").contains("injected transient fault"));
+        engine.shutdown();
+    }
+}
+
+/// A permanent rank death mid-run: the next `wait()` swaps in the
+/// degraded placement at the epoch quiet point and retries; replicas
+/// keep the dead rank's hot experts servable, un-replicated experts are
+/// explicitly accounted unavailable, the dead rank's submitted rows are
+/// transparently repacked onto survivors — and the engine keeps serving.
+#[test]
+fn permanent_death_degrades_capacity_and_keeps_serving() {
+    let seed = 42;
+    let mut cfg = chaos_cfg(4, "dropless", "flat");
+    // replicas so the dead rank's hot experts survive elsewhere
+    cfg.set("replicate_top", "2").unwrap();
+    cfg.set("replicas", "2").unwrap();
+    cfg.set("replication_hysteresis", "1.2").unwrap();
+    cfg.set("ewma_alpha", "0.5").unwrap();
+    cfg.set("retry_limit", "2").unwrap();
+    cfg.set("fault_seed", "42").unwrap();
+    cfg.set("fault_kill_rank", "3").unwrap();
+    cfg.set("fault_kill_epoch", "5").unwrap();
+    cfg.validate().unwrap();
+    let params = Arc::new(ModelParams::generate(&cfg, seed));
+    // Half-filled passes: the degraded retry repacks the dead rank's
+    // rows onto the survivors' *spare* capacity, so the pass must not
+    // arrive full (a full pass over a dead rank is a legitimate
+    // degraded-capacity error, tested implicitly by `repack_inputs`).
+    let (h, e) = (cfg.model.h, cfg.model.e);
+    let inputs: Vec<Vec<f32>> = (0..cfg.system.ranks)
+        .map(|r| {
+            let mut rng = Rng::new(seed).fork(0xC4A0_0000 + r as u64);
+            skewed_tokens(&params.wg, h, e, cfg.system.s_rank / 2, Skew::Zipf, &mut rng)
+        })
+        .collect();
+    let submit = |engine: &MoeEngine| {
+        engine.submit_pass(flashdmoe::coordinator::PassInput::new(inputs.clone())).unwrap()
+    };
+    let engine = start(&cfg, &params);
+
+    // epochs 1-3: warm the load tracker; rebalance installs replicas
+    for _ in 0..3 {
+        submit(&engine).wait().unwrap();
+    }
+    assert!(engine.rebalance().unwrap(), "Zipf skew must replicate");
+    // epoch 4: last healthy pass
+    submit(&engine).wait().unwrap();
+    assert!(!engine.placement().degraded());
+
+    // epoch 5: rank 3 is dead; wait() must degrade + retry transparently
+    let res = submit(&engine)
+        .wait()
+        .expect("pass over the kill epoch must recover via degrade + retry");
+    assert_eq!(res.metrics.retries, 1, "exactly one resubmission");
+    let placement = engine.placement();
+    assert!(placement.degraded(), "placement must be degraded after the kill");
+    assert_eq!(placement.failed_ranks(), vec![3], "rank 3 is the corpse");
+    assert_eq!(
+        res.metrics.experts_unavailable,
+        placement.unavailable_experts().len(),
+        "pass metrics must account the placement's unavailable experts"
+    );
+    // the dead rank's submitted rows came back in submission shape
+    assert_eq!(res.outputs[3].len(), inputs[3].len(), "repacked rows not restored");
+
+    // the engine keeps serving degraded passes, first try, no retries
+    for _ in 0..2 {
+        let r = submit(&engine).wait().unwrap();
+        assert_eq!(r.metrics.retries, 0, "degraded steady state must not retry");
+        assert_eq!(r.outputs[3].len(), inputs[3].len());
+    }
+    let em = engine.metrics();
+    assert!(em.degraded_passes >= 3, "retried + steady passes ran degraded");
+    assert!(em.faults_injected >= 1);
+    engine.shutdown();
+}
+
+/// Satellite (c): the request ledger balances under injected pass
+/// failures — `enqueued == served + cancelled + failed` — including a
+/// split request spanning a failing and succeeding pass, and an
+/// abandoned handle racing the failure.
+#[test]
+fn service_ledger_balances_under_pass_failures() {
+    let seed = 11;
+    let mut cfg = chaos_cfg(4, "dropless", "flat");
+    // pass epoch 2 fails, everything else succeeds; no retry budget, so
+    // the failure surfaces to the requests that rode in it
+    cfg.set("retry_limit", "0").unwrap();
+    cfg.set("fault_seed", "11").unwrap();
+    cfg.set("fault_transient_rate", "1.0").unwrap();
+    cfg.set("fault_transient_from", "2").unwrap();
+    cfg.set("fault_transient_until", "3").unwrap();
+    cfg.validate().unwrap();
+    let params = Arc::new(ModelParams::generate(&cfg, seed));
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+    let mut policy = BatchPolicy::from_config(&cfg);
+    // one 32-row chunk fills a pass exactly, so a 96-row request spans
+    // three passes — epochs 1, 2 (failing) and 3
+    policy.max_tokens = 32;
+    let service =
+        MoeService::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused, policy)
+            .unwrap();
+    let (h, e) = (cfg.model.h, cfg.model.e);
+    let mut rng = Rng::new(seed);
+
+    let split = service
+        .enqueue(skewed_tokens(&params.wg, h, e, 96, Skew::Zipf, &mut rng), RequestOpts::default())
+        .unwrap();
+    let err = format!("{:#}", split.wait().unwrap_err());
+    assert!(
+        err.contains("injected transient fault"),
+        "split request must fail with the injected fault, got: {err}"
+    );
+
+    // a later request rides a clean pass and is served
+    let ok = service
+        .enqueue(skewed_tokens(&params.wg, h, e, 8, Skew::Zipf, &mut rng), RequestOpts::default())
+        .unwrap();
+    assert_eq!(ok.wait().unwrap().rows, 8);
+
+    // an abandoned handle is cancelled (or failed), never double-counted
+    let abandoned = service
+        .enqueue(skewed_tokens(&params.wg, h, e, 8, Skew::Zipf, &mut rng), RequestOpts::default())
+        .unwrap();
+    drop(abandoned);
+
+    let report = service.shutdown();
+    let s = &report.service;
+    assert_eq!(s.requests_enqueued, 3);
+    assert_eq!(s.requests_failed, 1, "exactly the split request failed");
+    assert_eq!(
+        s.requests_enqueued,
+        s.requests_served + s.requests_cancelled + s.requests_failed,
+        "ledger leak: {} != {} + {} + {}",
+        s.requests_enqueued,
+        s.requests_served,
+        s.requests_cancelled,
+        s.requests_failed
+    );
+    assert!(s.passes_failed >= 1, "the failing pass must be counted");
+}
+
+/// Deadline-aware admission: a request whose budget expired before the
+/// batcher admits it is shed with a deadline error, counted once, and
+/// the ledger still balances.
+#[test]
+fn expired_deadline_is_shed_at_admission() {
+    let seed = 13;
+    let cfg = chaos_cfg(4, "dropless", "flat");
+    let params = Arc::new(ModelParams::generate(&cfg, seed));
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+    let service =
+        MoeService::with_defaults(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused)
+            .unwrap();
+    let (h, e) = (cfg.model.h, cfg.model.e);
+    let mut rng = Rng::new(seed);
+
+    let doomed = service
+        .enqueue(
+            skewed_tokens(&params.wg, h, e, 8, Skew::Zipf, &mut rng),
+            RequestOpts { deadline: Some(std::time::Duration::ZERO), ..Default::default() },
+        )
+        .unwrap();
+    let err = format!("{:#}", doomed.wait().unwrap_err());
+    assert!(err.contains("deadline exceeded"), "wrong shed error: {err}");
+
+    let fine = service
+        .enqueue(
+            skewed_tokens(&params.wg, h, e, 8, Skew::Zipf, &mut rng),
+            RequestOpts {
+                deadline: Some(std::time::Duration::from_secs(30)),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(fine.wait().unwrap().rows, 8, "a live budget must be served");
+
+    let report = service.shutdown();
+    let s = &report.service;
+    assert_eq!(s.deadline_misses, 1);
+    assert_eq!(s.requests_failed, 1, "the miss is also a failure, counted once");
+    assert_eq!(
+        s.requests_enqueued,
+        s.requests_served + s.requests_cancelled + s.requests_failed
+    );
+}
+
+/// Satellite (b): the watchdog is a config knob now — a short (but
+/// comfortably sufficient) budget serves passes normally at test scale.
+#[test]
+fn watchdog_knob_works_at_test_scale() {
+    let seed = 17;
+    let mut cfg = chaos_cfg(2, "dropless", "flat");
+    cfg.set("watchdog_secs", "30").unwrap();
+    cfg.validate().unwrap();
+    assert_eq!(cfg.system.watchdog_secs, 30);
+    let params = Arc::new(ModelParams::generate(&cfg, seed));
+    let inputs = zipf_inputs(&cfg, &params, seed);
+    let engine = start(&cfg, &params);
+    engine.submit(&inputs).unwrap().wait().unwrap();
+    engine.shutdown();
+}

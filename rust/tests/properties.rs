@@ -8,8 +8,8 @@ use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 
 use flashdmoe::config::{
-    Config, CostModel, DispatchMode, ModelConfig, ReplicationPolicy, RoutingPolicy, SystemConfig,
-    WirePrecision,
+    Config, CostModel, DispatchMode, FaultConfig, ModelConfig, ReplicationPolicy, RoutingPolicy,
+    SystemConfig, WirePrecision,
 };
 use flashdmoe::coordinator::scheduler::TaskQueue;
 use flashdmoe::coordinator::{MoeEngine, TaskGraphMode};
@@ -422,6 +422,9 @@ fn dropless_engine_matches_dense_reference_under_fuzzed_skew() {
                     wire: WirePrecision::F32,
                     dispatch: DispatchMode::Flat,
                     replication: ReplicationPolicy::default(),
+                    watchdog_secs: 120,
+                    retry_limit: 0,
+                    fault: FaultConfig::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             };

@@ -275,8 +275,10 @@ fn priority_discipline_admits_high_priority_first() {
     policy.max_delay = std::time::Duration::from_millis(100);
     let (svc, _) = start_service(&cfg, 41, policy);
     let h = cfg.model.h;
-    let low = svc.enqueue(vec![0.1; 8 * h], RequestOpts { priority: 0 }).unwrap();
-    let high = svc.enqueue(vec![0.9; 8 * h], RequestOpts { priority: 5 }).unwrap();
+    let lo_opts = RequestOpts { priority: 0, ..Default::default() };
+    let hi_opts = RequestOpts { priority: 5, ..Default::default() };
+    let low = svc.enqueue(vec![0.1; 8 * h], lo_opts).unwrap();
+    let high = svc.enqueue(vec![0.9; 8 * h], hi_opts).unwrap();
     let (rl, rh) = (low.wait().unwrap(), high.wait().unwrap());
     // both served correctly; the high-priority request never queues
     // longer than the low one that arrived first
