@@ -1,103 +1,112 @@
 //! End-to-end training driver: the paper's §5 future-work item
-//! (training support) built on this stack — the AOT-compiled
-//! `train_step` artifact (MoE layer + linear readout, MSE, SGD; lowered
-//! from JAX with its backward pass) is executed from Rust via PJRT for a
-//! few hundred steps on a synthetic regression workload, and the loss
-//! curve is logged (recorded in EXPERIMENTS.md §Training).
+//! (training support) running through the **persistent engine itself** —
+//! every step is one stashed forward pass plus one backward pass of
+//! Dgrad/Wgrad tile tasks through the same work-stealing scheduler and
+//! reverse-wire transfers, followed by an optimizer step installed at an
+//! epoch-fenced quiet point (`MoeEngine::update_params`).
 //!
-//!     make artifacts && cargo run --release --example train_loop
+//! Synthetic teacher–student regression: a frozen teacher MoE (different
+//! seed) produces the targets, and the student is trained with MSE to
+//! reproduce them. The smoothed loss curve must go down.
+//!
+//!     cargo run --release --example train_loop
+//!     STEPS=100 LR=1e-2 OPT=sgd PRESET=tiny cargo run --release --example train_loop
 
-use flashdmoe::runtime::{ArtifactStore, make_literal};
-use flashdmoe::util::prng::Rng;
+use std::sync::Arc;
+
+use flashdmoe::config::Config;
+use flashdmoe::coordinator::{MoeEngine, TaskGraphMode};
+use flashdmoe::expert::{generate_tokens, ModelParams};
+use flashdmoe::runtime::{ComputeBackend, NativeBackend};
+use flashdmoe::train::{Optimizer, Trainer};
+use flashdmoe::util::check::dense_reference_moe;
 use flashdmoe::util::stats::fmt_time;
 
 fn main() -> anyhow::Result<()> {
     let preset = std::env::var("PRESET").unwrap_or_else(|_| "tiny".to_string());
-    let steps: usize = std::env::var("STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(300);
-    let dir = ArtifactStore::default_dir();
-    anyhow::ensure!(
-        ArtifactStore::available(&dir),
-        "artifacts missing — run `make artifacts` first"
-    );
-    let store = ArtifactStore::load(&dir, &preset)?;
-    let cfg = &store.config;
+    let steps: usize = std::env::var("STEPS").ok().and_then(|v| v.parse().ok()).unwrap_or(40);
+    let lr: f32 = std::env::var("LR").ok().and_then(|v| v.parse().ok()).unwrap_or(5e-3);
+    let opt_name = std::env::var("OPT").unwrap_or_else(|_| "adam".to_string());
+
+    let mut cfg = Config::preset(&preset)?;
+    cfg.set("train", "on")?;
+    cfg.set("lr", &lr.to_string())?;
+    cfg.set("optimizer", &opt_name)?;
+    cfg.validate()?;
     let (h, d, e) = (cfg.model.h, cfg.model.d, cfg.model.e);
-    let bsz = cfg.system.s_rank;
-    println!("train_step artifact: H={h} D={d} E={e} batch={bsz} (lr baked at AOT time)");
+    println!(
+        "training through the persistent engine: H={h} D={d} E={e} k={} \
+         ranks={} tokens/rank={} optimizer={opt_name} lr={lr}",
+        cfg.model.k, cfg.system.ranks, cfg.system.s_rank
+    );
 
-    // ---- synthetic regression task: y = tanh(x · w_teacher) --------------
-    let mut rng = Rng::new(0x7EAC4);
-    let x = rng.normal_vec(bsz * h, 1.0);
-    let teacher = rng.normal_vec(h, 0.5);
-    let y: Vec<f32> = (0..bsz)
-        .map(|i| {
-            let dot: f32 = x[i * h..(i + 1) * h].iter().zip(&teacher).map(|(a, b)| a * b).sum();
-            dot.tanh()
-        })
-        .collect();
+    // ---- teacher–student regression -----------------------------------
+    // frozen teacher (seed 2) labels the batch; student (seed 1) learns it
+    let student = Arc::new(ModelParams::generate(&cfg, 1));
+    let teacher = ModelParams::generate(&cfg, 2);
+    let inputs: Vec<Vec<f32>> =
+        (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, 0x7EAC4, r)).collect();
+    let targets: Vec<Vec<f32>> =
+        inputs.iter().map(|x| dense_reference_moe(&cfg, &teacher, x)).collect();
 
-    // ---- parameter initialization (mirrors python train.init_params) ------
-    let mut p = rng.fork(1);
-    let mut params: Vec<(Vec<f32>, Vec<usize>)> = vec![
-        (p.normal_vec(h * e, 1.0), vec![h, e]),
-        (p.normal_vec(e * h * d, 0.1), vec![e, h, d]),
-        (vec![0.0; e * d], vec![e, d]),
-        (p.normal_vec(e * d * h, 0.1), vec![e, d, h]),
-        (vec![0.0; e * h], vec![e, h]),
-        (p.normal_vec(h, 0.1), vec![h, 1]),
-        (vec![0.0; 1], vec![1]),
-    ];
+    // ---- engine + trainer ----------------------------------------------
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+    let engine = MoeEngine::start(cfg.clone(), student, backend, TaskGraphMode::Fused)?;
+    let opt = match opt_name.as_str() {
+        "sgd" => Optimizer::sgd(lr),
+        _ => Optimizer::adam(lr),
+    };
+    let mut trainer = Trainer::new(engine, opt)?;
 
-    // ---- training loop: one PJRT execution per step ------------------------
-    let kernel = store.kernel("train_step")?;
-    let x_lit = make_literal(&x, &[bsz, h])?;
-    let y_lit = make_literal(&y, &[bsz, 1])?;
+    // ---- training loop: forward + backward engine passes per step -------
     let t0 = std::time::Instant::now();
-    let mut first_loss = f32::NAN;
-    let mut last_loss = f32::NAN;
-    let mut curve: Vec<(usize, f32)> = Vec::new();
+    let mut curve: Vec<(usize, f64, f64)> = Vec::new();
+    let mut smoothed = f64::NAN;
+    let mut first_smoothed = f64::NAN;
     for step in 0..steps {
-        let mut lits = Vec::with_capacity(9);
-        for (data, dims) in &params {
-            lits.push(make_literal(data, dims)?);
-        }
-        lits.push(x_lit.clone());
-        lits.push(y_lit.clone());
-        let outs = kernel.run_literals_tuple(&lits)?;
-        anyhow::ensure!(outs.len() == 8, "train_step returns loss + 7 params");
-        let loss = outs[0][0];
+        let report = trainer.train_step(&inputs, &targets)?;
+        anyhow::ensure!(report.loss.is_finite(), "loss diverged at step {step}");
+        smoothed = if smoothed.is_nan() {
+            report.loss
+        } else {
+            0.7 * smoothed + 0.3 * report.loss
+        };
         if step == 0 {
-            first_loss = loss;
+            first_smoothed = smoothed;
         }
-        last_loss = loss;
         if step % (steps / 15).max(1) == 0 || step + 1 == steps {
-            curve.push((step, loss));
+            curve.push((step, report.loss, report.grad_sq_norm.sqrt()));
         }
-        for (slot, new) in params.iter_mut().zip(&outs[1..]) {
-            slot.0.copy_from_slice(new);
-        }
-        anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");
     }
     let elapsed = t0.elapsed().as_secs_f64();
 
-    println!("\nstep   loss");
-    for (s, l) in &curve {
+    println!("\nstep   loss        |grad|");
+    let first_loss = curve.first().map(|&(_, l, _)| l).unwrap_or(f64::NAN);
+    for &(s, l, g) in &curve {
         let bar = "#".repeat(((l / first_loss).min(1.0) * 50.0) as usize);
-        println!("{s:>5}  {l:<10.5} {bar}");
+        println!("{s:>5}  {l:<10.6}  {g:<9.4} {bar}");
     }
+    let em = trainer.engine().metrics();
     println!(
-        "\n{} steps in {} ({}/step) — loss {:.4} -> {:.4} ({:.1}% reduction)",
+        "\n{} steps in {} ({}/step) — smoothed loss {:.6} -> {:.6} ({:.1}% reduction)",
         steps,
         fmt_time(elapsed),
         fmt_time(elapsed / steps as f64),
-        first_loss,
-        last_loss,
-        (1.0 - last_loss / first_loss) * 100.0
+        first_smoothed,
+        smoothed,
+        (1.0 - smoothed / first_smoothed) * 100.0
     );
+    println!(
+        "engine: {} forward + {} backward passes, {} updates, \
+         forward bytes {}, reverse bytes {}",
+        em.passes, em.backward_passes, trainer.updates, em.forward_bytes, em.reverse_bytes
+    );
+    anyhow::ensure!(em.backward_passes == steps as u64, "every step ran a backward pass");
+    anyhow::ensure!(em.reverse_bytes > 0, "backward passes moved gradient tiles over the wire");
     anyhow::ensure!(
-        last_loss < 0.7 * first_loss,
-        "training failed to reduce loss"
+        smoothed < first_smoothed,
+        "training failed to reduce the smoothed loss ({first_smoothed} -> {smoothed})"
     );
-    println!("train OK — backward pass + optimizer execute end-to-end from Rust");
+    println!("train OK — dgrad/wgrad tasks + optimizer execute end-to-end through the engine");
     Ok(())
 }

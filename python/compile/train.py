@@ -1,11 +1,15 @@
 """L2 extension: training support (the paper's §5 future-work item).
 
-FlashDMoE is inference-only; the paper names backward-pass fusion as future
-work. We provide the build-time half: a differentiable MoE formulation and
-an AOT-compiled ``train_step`` artifact (MoE layer + linear readout, MSE
-loss, SGD) that the Rust runtime executes for the end-to-end training
-example (`examples/train_loop.rs`), logging the loss curve recorded in
-EXPERIMENTS.md.
+STUB STATUS: this AOT path is *not* the training implementation anymore.
+PR 9 moved training into the Rust engine itself — ``rust/src/train/``
+(autograd tape, ``Optimizer``, ``Trainer``) runs Dgrad/Wgrad tile tasks
+through the persistent work-stealing scheduler with reverse-wire gradient
+transfers, and ``examples/train_loop.rs`` now drives that path natively
+(no PJRT artifact required). This module remains as the build-time
+cross-check half: a differentiable JAX MoE formulation whose gradients
+can be compared against ``util::check::dense_reference_moe_grad`` (the
+Rust oracle the engine is conformance-tested against), and an AOT
+``train_step`` artifact for environments with a real PJRT runtime.
 
 The differentiable graph uses the pure-jnp formulation (`moe_layer_jnp`)
 rather than the Pallas kernels: interpret-mode Pallas is not reliably

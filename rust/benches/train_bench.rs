@@ -1,0 +1,147 @@
+//! Training-step bench, measured on the live engine: forward-only pass
+//! time vs a full forward+backward training step (Dgrad/Wgrad tile tasks
+//! through the same work-stealing pool), and the reverse-wire gradient
+//! bytes per wire format.
+//!
+//! Emits `BENCH_pr9_training.json` (section `training`) for the CI
+//! artifact upload. With `PERF_SMOKE=1` the run FAILS unless the 16-bit
+//! wire measures < 0.6x the f32 wire's *reverse* (gradient) bytes — the
+//! live CI check that gradient traffic respects the wire-precision knob;
+//! the exact-2x assertion lives in `rust/tests/train.rs`.
+//!
+//!     PRESET=tiny PASSES=5 cargo bench --bench train_bench
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use flashdmoe::config::{Config, WirePrecision};
+use flashdmoe::coordinator::{MoeEngine, TaskGraphMode};
+use flashdmoe::expert::{generate_tokens, ModelParams};
+use flashdmoe::runtime::{ComputeBackend, NativeBackend};
+use flashdmoe::util::json::{self, Json};
+use flashdmoe::util::prng::Rng;
+use flashdmoe::util::stats::{fmt_bytes, fmt_time, percentile, Table};
+
+struct Arm {
+    wire: WirePrecision,
+    fwd_p50: f64,
+    step_p50: f64,
+    forward_bytes: u64,
+    reverse_bytes: u64,
+}
+
+fn run_arm(preset: &str, wire: WirePrecision, passes: usize) -> anyhow::Result<Arm> {
+    let mut cfg = Config::preset(preset)?;
+    cfg.set("train", "on")?;
+    cfg.set("routing_policy", "dropless")?; // identical routing across arms
+    cfg.set("wire_precision", wire.name())?;
+    cfg.validate()?;
+    let params = Arc::new(ModelParams::generate(&cfg, 42));
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+    let engine = MoeEngine::start(cfg.clone(), params, backend, TaskGraphMode::Fused)?;
+    let inputs: Vec<Vec<f32>> =
+        (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, 42, r)).collect();
+
+    // warmup + a dy shaped like the outputs
+    let warm = engine.submit(&inputs)?.wait()?;
+    let mut rng = Rng::new(7);
+    let dy: Vec<Vec<f32>> = warm.outputs.iter().map(|o| rng.normal_vec(o.len(), 1.0)).collect();
+    engine.backward(warm.metrics.epoch, &dy)?;
+
+    let mut fwd_times = Vec::with_capacity(passes);
+    let mut step_times = Vec::with_capacity(passes);
+    let mut forward_bytes = 0u64;
+    let mut reverse_bytes = 0u64;
+    for _ in 0..passes {
+        let t0 = Instant::now();
+        let fwd = engine.submit(&inputs)?.wait()?;
+        fwd_times.push(t0.elapsed().as_secs_f64());
+
+        let t1 = Instant::now();
+        let fwd2 = engine.submit(&inputs)?.wait()?;
+        let bwd = engine.backward(fwd2.metrics.epoch, &dy)?;
+        step_times.push(t1.elapsed().as_secs_f64());
+        forward_bytes = fwd.metrics.forward_bytes();
+        reverse_bytes = bwd.metrics.reverse_bytes();
+    }
+    fwd_times.sort_by(f64::total_cmp);
+    step_times.sort_by(f64::total_cmp);
+    Ok(Arm {
+        wire,
+        fwd_p50: percentile(&fwd_times, 0.50),
+        step_p50: percentile(&step_times, 0.50),
+        forward_bytes,
+        reverse_bytes,
+    })
+}
+
+fn main() {
+    let preset = std::env::var("PRESET").unwrap_or_else(|_| "tiny".to_string());
+    let passes = std::env::var("PASSES").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+
+    let arms: Vec<Arm> = [WirePrecision::F32, WirePrecision::Bf16]
+        .iter()
+        .map(|&w| run_arm(&preset, w, passes).unwrap())
+        .collect();
+
+    let mut table =
+        Table::new(&["wire", "fwd p50", "fwd+bwd p50", "bwd overhead", "fwd bytes", "rev bytes"]);
+    for a in &arms {
+        table.row(&[
+            a.wire.name().to_string(),
+            fmt_time(a.fwd_p50),
+            fmt_time(a.step_p50),
+            format!("{:.2}x", a.step_p50 / a.fwd_p50),
+            fmt_bytes(a.forward_bytes as f64),
+            fmt_bytes(a.reverse_bytes as f64),
+        ]);
+    }
+    println!("training step ({preset}, {passes} passes/arm)\n{}", table.render());
+
+    let rows = Json::Arr(
+        arms.iter()
+            .map(|a| {
+                json::obj(vec![
+                    ("wire", json::s(a.wire.name())),
+                    ("fwd_p50_s", json::num(a.fwd_p50)),
+                    ("step_p50_s", json::num(a.step_p50)),
+                    ("bwd_overhead", json::num(a.step_p50 / a.fwd_p50)),
+                    ("forward_bytes", json::num(a.forward_bytes as f64)),
+                    ("reverse_bytes", json::num(a.reverse_bytes as f64)),
+                ])
+            })
+            .collect(),
+    );
+    flashdmoe::harness::update_bench_json("BENCH_pr9_training.json", "training", rows).unwrap();
+    println!("wrote BENCH_pr9_training.json (section training)");
+
+    let perf_smoke = std::env::var("PERF_SMOKE").map(|v| v == "1").unwrap_or(false);
+    if perf_smoke {
+        let f32_rev = arms[0].reverse_bytes as f64;
+        let mut failed = f32_rev <= 0.0;
+        if failed {
+            eprintln!("PERF_SMOKE FAIL: f32 arm measured zero reverse bytes");
+        }
+        for a in arms.iter().filter(|a| a.wire.is_reduced()) {
+            let ratio = a.reverse_bytes as f64 / f32_rev;
+            if ratio >= 0.6 {
+                eprintln!(
+                    "PERF_SMOKE FAIL: {} wire moved {:.2}x the fp32 reverse bytes (must be < 0.6x)",
+                    a.wire.name(),
+                    ratio
+                );
+                failed = true;
+            } else {
+                println!(
+                    "PERF_SMOKE ok: {} reverse bytes {:.2}x fp32 — gradient traffic \
+                     respects the wire-precision knob",
+                    a.wire.name(),
+                    ratio
+                );
+            }
+        }
+        if failed {
+            std::process::exit(1);
+        }
+    }
+}

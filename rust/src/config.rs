@@ -392,6 +392,92 @@ impl FaultConfig {
     }
 }
 
+/// Training knobs (ROADMAP item 3; consumed by `crate::train` and the
+/// engine's backward path).
+///
+/// * `train` = `on|off` — master switch: forward passes stash their
+///   routing decisions, gate probabilities and per-tile activations
+///   inside the rank actors so `MoeEngine::backward` can be issued for
+///   any of the last `STASH_CAP` forward epochs; `Trainer` requires it.
+/// * `optimizer` = `sgd|adam` — which `train::Optimizer` example loops
+///   (`examples/train_loop.rs`, `flashdmoe train`) construct.
+/// * `lr` — learning rate for those loops (must be finite and positive).
+/// * `grad_accum_steps` — micro-batches folded into one optimizer step
+///   by `Trainer` (≥ 1; gradients are averaged over the window).
+/// * `stash_activations` — stash forwards *without* enabling the rest of
+///   the training path (e.g. to inspect backward conformance against a
+///   serving config); `train=on` implies it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrainConfig {
+    /// Master training switch. Knob: `train=on|off`.
+    pub enabled: bool,
+    /// Optimizer selection for the example loops. Knob: `optimizer`.
+    pub optimizer: OptimizerKind,
+    /// Learning rate. Knob: `lr`.
+    pub lr: f32,
+    /// Micro-batches per optimizer step. Knob: `grad_accum_steps`.
+    pub grad_accum_steps: usize,
+    /// Stash forward activations even with `enabled == false`. Knob:
+    /// `stash_activations`.
+    pub stash_activations: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            optimizer: OptimizerKind::Adam,
+            lr: 1e-3,
+            grad_accum_steps: 1,
+            stash_activations: false,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// True when forward passes must retain their activation stash — the
+    /// precondition for `MoeEngine::backward`.
+    pub fn stash(&self) -> bool {
+        self.enabled || self.stash_activations
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(self.lr.is_finite() && self.lr > 0.0) {
+            bail!("lr must be finite and positive, got {}", self.lr);
+        }
+        if self.grad_accum_steps == 0 {
+            bail!("grad_accum_steps must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Which optimizer the config-driven training loops construct (the
+/// `train::Optimizer` enum itself carries state; this is just the knob).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum OptimizerKind {
+    Sgd,
+    #[default]
+    Adam,
+}
+
+impl OptimizerKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            OptimizerKind::Sgd => "sgd",
+            OptimizerKind::Adam => "adam",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<OptimizerKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "sgd" => Some(OptimizerKind::Sgd),
+            "adam" => Some(OptimizerKind::Adam),
+            _ => None,
+        }
+    }
+}
+
 /// How the router treats per-expert load.
 ///
 /// * [`Capacity`](RoutingPolicy::Capacity) — the paper's §3.2.1 contract:
@@ -522,6 +608,9 @@ pub struct SystemConfig {
     /// Deterministic fault-injection schedule (see [`FaultConfig`]);
     /// disabled by default.
     pub fault: FaultConfig,
+    /// Training knobs (see [`TrainConfig`]); off by default — serving
+    /// engines stash nothing and pay nothing.
+    pub train: TrainConfig,
 }
 
 /// Hardware cost model for the simulator, calibrated by `flashdmoe
@@ -746,6 +835,7 @@ impl Config {
                     watchdog_secs: 120,
                     retry_limit: 0,
                     fault: FaultConfig::default(),
+                    train: TrainConfig::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -771,6 +861,7 @@ impl Config {
                     watchdog_secs: 120,
                     retry_limit: 0,
                     fault: FaultConfig::default(),
+                    train: TrainConfig::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -796,6 +887,7 @@ impl Config {
                     watchdog_secs: 120,
                     retry_limit: 0,
                     fault: FaultConfig::default(),
+                    train: TrainConfig::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -822,6 +914,7 @@ impl Config {
                     watchdog_secs: 120,
                     retry_limit: 0,
                     fault: FaultConfig::default(),
+                    train: TrainConfig::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -848,6 +941,7 @@ impl Config {
                     watchdog_secs: 120,
                     retry_limit: 0,
                     fault: FaultConfig::default(),
+                    train: TrainConfig::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -878,6 +972,7 @@ impl Config {
                     watchdog_secs: 120,
                     retry_limit: 0,
                     fault: FaultConfig::default(),
+                    train: TrainConfig::default(),
                 },
                 cost: CostModel { nic_buffer: 32.0 * 1024.0 * 1024.0, ..CostModel::h100_nvlink() },
             },
@@ -891,6 +986,7 @@ impl Config {
         self.system.validate()?;
         self.system.replication.validate()?;
         self.system.fault.validate(self.system.ranks)?;
+        self.system.train.validate()?;
         if self.system.watchdog_secs == 0 {
             bail!("watchdog_secs must be >= 1 (the watchdog cannot be disabled)");
         }
@@ -986,6 +1082,30 @@ impl Config {
                 self.system.replication.hysteresis = f()?
             }
             "ewma_alpha" => self.system.replication.ewma_alpha = f()?,
+            // Training knobs (see TrainConfig and `crate::train`).
+            "train" => {
+                self.system.train.enabled = match value {
+                    "1" | "true" | "on" => true,
+                    "0" | "false" | "off" => false,
+                    other => bail!("train={other}: expected true/false/1/0/on/off"),
+                }
+            }
+            "optimizer" => match OptimizerKind::parse(value) {
+                Some(o) => self.system.train.optimizer = o,
+                None => bail!("{key}={value}: expected 'sgd' or 'adam'"),
+            },
+            "lr" | "learning_rate" => {
+                self.system.train.lr =
+                    value.parse().with_context(|| format!("{key}={value}: not a number"))?
+            }
+            "grad_accum_steps" => self.system.train.grad_accum_steps = u()?,
+            "stash_activations" => {
+                self.system.train.stash_activations = match value {
+                    "1" | "true" | "on" => true,
+                    "0" | "false" | "off" => false,
+                    other => bail!("stash_activations={other}: expected true/false/1/0/on/off"),
+                }
+            }
             // Fault-tolerance knobs (see FaultConfig and `crate::fault`).
             "watchdog_secs" => {
                 self.system.watchdog_secs =
@@ -1175,6 +1295,39 @@ mod tests {
         cfg.set("policy", "capacity").unwrap();
         assert_eq!(cfg.model.policy, RoutingPolicy::Capacity(1.0));
         assert!(cfg.set("routing_policy", "nope").is_err());
+    }
+
+    #[test]
+    fn train_knobs_roundtrip_and_validate() {
+        let mut cfg = Config::preset("tiny").unwrap();
+        assert!(!cfg.system.train.enabled, "training is off by default");
+        assert!(!cfg.system.train.stash(), "no stash without train/stash_activations");
+        cfg.set("train", "on").unwrap();
+        cfg.set("optimizer", "sgd").unwrap();
+        cfg.set("lr", "0.05").unwrap();
+        cfg.set("grad_accum_steps", "4").unwrap();
+        cfg.validate().unwrap();
+        assert!(cfg.system.train.enabled && cfg.system.train.stash());
+        assert_eq!(cfg.system.train.optimizer, OptimizerKind::Sgd);
+        assert_eq!(cfg.system.train.optimizer.name(), "sgd");
+        assert_eq!(cfg.system.train.lr, 0.05);
+        assert_eq!(cfg.system.train.grad_accum_steps, 4);
+        // stash_activations turns on the stash without the training switch
+        cfg.set("train", "off").unwrap();
+        cfg.set("stash_activations", "on").unwrap();
+        assert!(!cfg.system.train.enabled && cfg.system.train.stash());
+        // degenerate values are rejected by validate()
+        cfg.set("lr", "0").unwrap();
+        assert!(cfg.validate().is_err(), "lr=0 must fail");
+        cfg.set("lr", "nan").unwrap();
+        assert!(cfg.validate().is_err(), "lr=nan must fail");
+        cfg.set("lr", "1e-3").unwrap();
+        cfg.set("grad_accum_steps", "0").unwrap();
+        assert!(cfg.validate().is_err(), "grad_accum_steps=0 must fail");
+        cfg.set("grad_accum_steps", "1").unwrap();
+        cfg.validate().unwrap();
+        assert!(cfg.set("optimizer", "lion").is_err());
+        assert!(cfg.set("train", "maybe").is_err());
     }
 
     #[test]

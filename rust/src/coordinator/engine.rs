@@ -52,10 +52,11 @@ use crate::fault;
 use crate::layout::LayoutDims;
 use crate::placement::{plan_replication, Placement};
 use crate::runtime::ComputeBackend;
+use crate::train::GradStore;
 use crate::transport::NodeFabric;
 
 use super::metrics::{EngineMetrics, PassMetrics};
-use super::rank::{EngineShared, RankActor, RankOutput, TaskGraphMode};
+use super::rank::{EngineShared, RankActor, RankOutput, TaskGraphMode, STASH_CAP};
 
 /// Result of one distributed forward pass.
 pub struct ForwardResult {
@@ -64,6 +65,30 @@ pub struct ForwardResult {
     /// on the fixed-shape path).
     pub outputs: Vec<Vec<f32>>,
     pub metrics: PassMetrics,
+    /// Parameter-gradient partials merged across ranks: `Some` for a
+    /// backward pass, `None` for forwards.
+    pub grads: Option<GradStore>,
+}
+
+/// Result of one distributed **backward** pass (training): see
+/// [`MoeEngine::backward`].
+pub struct BackwardResult {
+    /// Per-rank input gradients dL/dX, same shapes as the forward's
+    /// inputs (including the gate's contribution).
+    pub input_grads: Vec<Vec<f32>>,
+    /// Parameter gradients of this micro-batch, merged across ranks in a
+    /// fixed order — bitwise deterministic at any processor count.
+    pub grads: GradStore,
+    pub metrics: PassMetrics,
+}
+
+/// What a submitted pass computes. Backward passes ride the same slots,
+/// epochs, doorbells, retry and poison machinery as forwards; the rank
+/// actors dispatch on this tag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PassKind {
+    Forward,
+    Backward { fwd_epoch: u64 },
 }
 
 /// Variable-shape input for one engine pass: `per_rank[r]` is rank r's
@@ -114,6 +139,10 @@ struct PassSlot {
 struct SlotState {
     /// Epoch currently occupying the slot; 0 = free.
     epoch: u64,
+    /// Forward or backward — what the rank actors should run for this
+    /// epoch (backwards carry the stashed forward epoch to differentiate
+    /// against).
+    kind: PassKind,
     /// Epoch of the last pass freed (collected or parked) from this
     /// slot; 0 until the slot's first occupant completes. Together with
     /// `epoch == 0` this is the install turnstile: the submitter of
@@ -152,7 +181,10 @@ struct SlotState {
 /// retry loop resubmits.
 struct Parked {
     result: Result<ForwardResult>,
-    retry: Option<Arc<Vec<Vec<f32>>>>,
+    /// Original-shape inputs + pass kind, retained so a poisoned pass can
+    /// be resubmitted as the same kind (a backward retries as a backward
+    /// against the same stashed forward epoch).
+    retry: Option<(Arc<Vec<Vec<f32>>>, PassKind)>,
 }
 
 struct Submission {
@@ -256,6 +288,7 @@ impl MoeEngine {
             slots: std::array::from_fn(|_| PassSlot {
                 state: Mutex::new(SlotState {
                     epoch: 0,
+                    kind: PassKind::Forward,
                     freed: 0,
                     inputs: None,
                     orig: None,
@@ -289,8 +322,11 @@ impl MoeEngine {
         &self.shared.cfg
     }
 
-    pub fn params(&self) -> &ModelParams {
-        &self.shared.params
+    /// Snapshot of the engine's live parameters (training swaps them at
+    /// quiet points via [`update_params`](Self::update_params); in-flight
+    /// passes keep their own `Arc` snapshot).
+    pub fn params(&self) -> Arc<ModelParams> {
+        self.shared.params()
     }
 
     pub fn mode(&self) -> TaskGraphMode {
@@ -356,13 +392,14 @@ impl MoeEngine {
         // that is new in the proposed map is one expert-install onto
         // that rank; every pair that vanished is a removal.
         let (mut installs, mut removals, mut bytes) = (0u64, 0u64, 0u64);
+        let params = self.shared.params();
         for ex in 0..proposed.num_experts() {
             let old = current.locations(ex);
             let new = proposed.locations(ex);
             for &(r, _) in new {
                 if !old.iter().any(|&(or, _)| or == r) {
                     installs += 1;
-                    bytes += self.shared.params.experts[ex].size_bytes() as u64;
+                    bytes += params.experts[ex].size_bytes() as u64;
                 }
             }
             for &(r, _) in old {
@@ -410,13 +447,102 @@ impl MoeEngine {
     /// wait happens on the slot's condvar with the epoch lock released,
     /// so one blocked submitter never serializes the others.
     pub fn submit_pass(&self, input: PassInput) -> Result<PassHandle> {
-        let epoch = submit_inner(&self.inner, input.per_rank)?;
+        let epoch = submit_inner(&self.inner, input.per_rank, PassKind::Forward)?;
         Ok(PassHandle { inner: self.inner.clone(), epoch, collected: false })
     }
 
     /// Convenience: submit one pass and wait for it (no pipelining).
     pub fn forward(&self, inputs: &[Vec<f32>]) -> Result<ForwardResult> {
         self.submit(inputs)?.wait()
+    }
+
+    /// Run the backward pass for the stashed forward `fwd_epoch`:
+    /// `grad_out[r]` is rank r's dL/dY, the same (rows, H) shape the
+    /// forward returned. The gradients travel the *reverse* wire — output
+    /// grads scatter to the expert owners at the configured
+    /// `WirePrecision`, `Dgrad`/`Wgrad` tile tasks run on the same
+    /// resident work-stealing processors, input grads gather back over
+    /// the combine cells — and the same epoch/retry/poison machinery
+    /// covers them, so a transient fault retries bitwise-identically.
+    ///
+    /// Requires the forward to have run with activation stashing on
+    /// (`cfg.system.train` — see [`crate::train`]) in `Fused` mode, and
+    /// its stash to still be resident (the last `STASH_CAP` stashed
+    /// epochs per rank; older ones are evicted).
+    pub fn backward(&self, fwd_epoch: u64, grad_out: &[Vec<f32>]) -> Result<BackwardResult> {
+        let cfg = &self.shared.cfg;
+        ensure!(
+            cfg.system.train.stash(),
+            "backward requires activation stashing: set train=on (or stash_activations=on)"
+        );
+        ensure!(
+            self.shared.mode == TaskGraphMode::Fused,
+            "backward is only supported in Fused task-graph mode"
+        );
+        ensure!(
+            grad_out.len() == cfg.system.ranks,
+            "need {} rank grad buffers, got {}",
+            cfg.system.ranks,
+            grad_out.len()
+        );
+        for (r, g) in grad_out.iter().enumerate() {
+            let stash = self.shared.stash_for(r, fwd_epoch).ok_or_else(|| {
+                anyhow!(
+                    "rank {r} has no activation stash for forward epoch {fwd_epoch} \
+                     (evicted after {STASH_CAP} newer stashed passes, or the forward \
+                     predates train=on)"
+                )
+            })?;
+            ensure!(
+                g.len() == stash.s_rows * cfg.model.h,
+                "rank {r}: grad_out length {} != rows*H = {} stashed for epoch {fwd_epoch}",
+                g.len(),
+                stash.s_rows * cfg.model.h
+            );
+            ensure!(
+                stash.placement_version == self.shared.placement().version(),
+                "placement changed since forward epoch {fwd_epoch} \
+                 (stash v{}, live v{}): the reverse routes no longer match",
+                stash.placement_version,
+                self.shared.placement().version()
+            );
+        }
+        let epoch =
+            submit_inner(&self.inner, grad_out.to_vec(), PassKind::Backward { fwd_epoch })?;
+        let fr = collect_retrying(&self.inner, epoch)?;
+        let grads = fr.grads.expect("backward pass merges grads");
+        Ok(BackwardResult { input_grads: fr.outputs, grads, metrics: fr.metrics })
+    }
+
+    /// Install updated parameters at an epoch-fenced quiet point (no pass
+    /// in flight): the backend re-prepares its packed panels, then the
+    /// shared snapshot is swapped so the next pass runs on the new
+    /// weights. In-flight stashes keep their own parameter snapshots, so
+    /// a backward of an *older* forward still differentiates against the
+    /// weights that forward actually ran on.
+    pub fn update_params(&self, params: ModelParams) -> Result<()> {
+        ensure!(
+            self.shared.mode == TaskGraphMode::Fused,
+            "update_params is only supported in Fused task-graph mode"
+        );
+        let m = &self.shared.cfg.model;
+        ensure!(
+            params.h == m.h && params.d == m.d && params.experts.len() == m.e,
+            "parameter shape (h={}, d={}, e={}) does not match the engine config \
+             (h={}, d={}, e={})",
+            params.h,
+            params.d,
+            params.experts.len(),
+            m.h,
+            m.d,
+            m.e
+        );
+        let params = Arc::new(params);
+        let fence = quiet_fence(&self.inner);
+        self.shared.backend.refresh(&params)?;
+        self.shared.set_params(params);
+        drop(fence);
+        Ok(())
     }
 
     /// Stop the engine: broadcast shutdown, let the actors finish any
@@ -544,7 +670,11 @@ fn unpack_rows(outputs: &mut [Vec<f32>], moves: &[(usize, Vec<(usize, usize)>)],
 /// Validate, epoch-stamp, and install one pass. Shared by the public
 /// submit path and the retry loop (which runs from a `PassHandle`, after
 /// the engine handle may already be gone). Returns the assigned epoch.
-fn submit_inner(inner: &Arc<EngineInner>, mut per_rank: Vec<Vec<f32>>) -> Result<u64> {
+fn submit_inner(
+    inner: &Arc<EngineInner>,
+    mut per_rank: Vec<Vec<f32>>,
+    kind: PassKind,
+) -> Result<u64> {
     let cfg = &inner.shared.cfg;
     let h = cfg.model.h;
     ensure!(
@@ -586,6 +716,15 @@ fn submit_inner(inner: &Arc<EngineInner>, mut per_rank: Vec<Vec<f32>>) -> Result
         // the degrade swap both hold `next_epoch` across their fence).
         let placement = inner.shared.placement();
         let (orig, moves, degraded, experts_unavailable) = if placement.degraded() {
+            // A backward's grad rows must land on the exact ranks that
+            // stashed the forward — the row repack that keeps forwards
+            // serving under a degraded placement would break that
+            // correspondence, so refuse before consuming an epoch.
+            ensure!(
+                kind == PassKind::Forward,
+                "backward cannot run under a degraded placement: re-run the forward \
+                 against the degraded map first"
+            );
             let orig = Arc::new(per_rank.clone());
             let moves = repack_inputs(&mut per_rank, &placement, h, cfg.system.s_rank)?;
             (orig, moves, true, placement.unavailable_experts().len())
@@ -628,6 +767,7 @@ fn submit_inner(inner: &Arc<EngineInner>, mut per_rank: Vec<Vec<f32>>) -> Result
             st = slot.cv.wait(st).unwrap();
         }
         st.epoch = epoch;
+        st.kind = kind;
         st.inputs = Some(inputs);
         st.orig = Some(orig);
         st.moves = moves;
@@ -650,7 +790,7 @@ fn submit_inner(inner: &Arc<EngineInner>, mut per_rank: Vec<Vec<f32>>) -> Result
 fn collect2(
     inner: &Arc<EngineInner>,
     epoch: u64,
-) -> (Result<ForwardResult>, Option<Arc<Vec<Vec<f32>>>>) {
+) -> (Result<ForwardResult>, Option<(Arc<Vec<Vec<f32>>>, PassKind)>) {
     let slot = inner.slot_of(epoch);
     let mut st = slot.state.lock().unwrap();
     if st.epoch == epoch {
@@ -681,6 +821,7 @@ fn collect2(
 /// slot lock with all rank outputs deposited.
 fn assemble(inner: &Arc<EngineInner>, st: &mut SlotState) -> Parked {
     let epoch = st.epoch;
+    let kind = st.kind;
     let rank_outputs: Vec<Result<RankOutput>> =
         st.outputs.iter_mut().map(|o| o.take().expect("deposited output")).collect();
     let orig = st.orig.take();
@@ -688,6 +829,7 @@ fn assemble(inner: &Arc<EngineInner>, st: &mut SlotState) -> Parked {
     let degraded = st.degraded;
     let experts_unavailable = st.experts_unavailable;
     st.epoch = 0;
+    st.kind = PassKind::Forward;
     st.freed = epoch;
     st.inputs = None;
     st.degraded = false;
@@ -704,34 +846,54 @@ fn assemble(inner: &Arc<EngineInner>, st: &mut SlotState) -> Parked {
         wire: inner.wire,
         placement_version,
         experts_unavailable,
+        backward: kind != PassKind::Forward,
         ..Default::default()
     };
+    let mut grads: Option<GradStore> = None;
+    let m = &inner.shared.cfg.model;
     for (rank, ro) in rank_outputs.into_iter().enumerate() {
         let ro = match ro {
             Ok(ro) => ro,
             Err(e) => {
                 return Parked {
                     result: Err(e.context(format!("pass {epoch}, rank {rank}"))),
-                    retry: orig,
+                    retry: orig.map(|o| (o, kind)),
                 }
             }
         };
         metrics.wall_secs = metrics.wall_secs.max(ro.metrics.wall_secs);
         metrics.rows_submitted += ro.metrics.rows_in;
         metrics.ranks.push(ro.metrics);
+        // Merge per-rank gradient partials ranks-ascending — a fixed fold
+        // order, so the merged grads are bitwise deterministic.
+        if let Some(rg) = ro.grads {
+            let g = grads.get_or_insert_with(|| GradStore::zeros(m.h, m.d, m.e));
+            for (gv, &sv) in g.wg.iter_mut().zip(&rg.wg) {
+                *gv += sv;
+            }
+            for (ge, eg) in rg.experts {
+                g.experts[ge].add_assign(&eg);
+            }
+        }
         outputs.push(ro.out);
     }
     unpack_rows(&mut outputs, &moves, inner.shared.cfg.model.h);
     {
         let mut em = inner.metrics.lock().unwrap();
-        em.passes += 1;
         em.wall_secs += metrics.wall_secs;
         em.busy_secs += metrics.ranks.iter().map(|r| r.busy_secs).sum::<f64>();
+        if metrics.backward {
+            em.backward_passes += 1;
+            em.reverse_bytes += metrics.total_bytes();
+        } else {
+            em.passes += 1;
+            em.forward_bytes += metrics.total_bytes();
+        }
         if degraded {
             em.degraded_passes += 1;
         }
     }
-    Parked { result: Ok(ForwardResult { outputs, metrics }), retry: None }
+    Parked { result: Ok(ForwardResult { outputs, metrics, grads }), retry: None }
 }
 
 /// Wait until every assigned epoch has fully deposited, holding the epoch
@@ -820,7 +982,7 @@ fn collect_retrying(inner: &Arc<EngineInner>, epoch: u64) -> Result<ForwardResul
             || fault::is_dead_rank(&msg)
             || msg.contains("incast")
             || msg.contains("abandoning pass gen");
-        let Some(inputs) = retry.take() else { return Err(err) };
+        let Some((inputs, kind)) = retry.take() else { return Err(err) };
         if !retryable || (tries as usize) >= limit {
             return Err(err);
         }
@@ -829,7 +991,7 @@ fn collect_retrying(inner: &Arc<EngineInner>, epoch: u64) -> Result<ForwardResul
         }
         std::thread::sleep(Duration::from_millis(1u64 << tries.min(6)));
         tries += 1;
-        match submit_inner(inner, inputs.as_ref().clone()) {
+        match submit_inner(inner, inputs.as_ref().clone(), kind) {
             Ok(e2) => {
                 cur_epoch = e2;
                 let (r2, t2) = collect2(inner, e2);
@@ -847,6 +1009,12 @@ fn collect_retrying(inner: &Arc<EngineInner>, epoch: u64) -> Result<ForwardResul
 /// the slot lock; skipped entirely when replication is off.
 fn observe_pass(shared: &EngineShared, st: &SlotState) {
     if !shared.cfg.system.replication.enabled() {
+        return;
+    }
+    // Backward passes carry no offered-load signal (the routing already
+    // happened at the forward); folding their zeros in would decay the
+    // EWMA and skew replication decisions.
+    if st.kind != PassKind::Forward {
         return;
     }
     let e = shared.cfg.model.e;
@@ -885,7 +1053,7 @@ fn rank_main(shared: Arc<EngineShared>, inner: Arc<EngineInner>, rank: usize) {
             break;
         }
         let slot = inner.slot_of(next);
-        let inputs = {
+        let (inputs, kind) = {
             // The doorbell only guarantees *some* epoch >= `next` was
             // submitted; with concurrent submitters, epoch `next + 1`
             // (the other slot) may ring before `next` is installed here.
@@ -896,13 +1064,18 @@ fn rank_main(shared: Arc<EngineShared>, inner: Arc<EngineInner>, rank: usize) {
             while st.epoch != next {
                 st = slot.cv.wait(st).unwrap();
             }
-            st.inputs.as_ref().expect("submitted inputs").clone()
+            (st.inputs.as_ref().expect("submitted inputs").clone(), st.kind)
         };
         // A subscriber watchdog panic must not wedge `wait()`ers: convert
         // it into a deposited error instead of a dead slot. Before serving
         // another epoch, re-synchronize the rank's workers (the unwound
         // pass may have left them mid-drain on its queue).
-        let result = match catch_unwind(AssertUnwindSafe(|| actor.run_pass(next, &inputs[rank]))) {
+        let result = match catch_unwind(AssertUnwindSafe(|| match kind {
+            PassKind::Forward => actor.run_pass(next, &inputs[rank]),
+            PassKind::Backward { fwd_epoch } => {
+                actor.run_backward_pass(next, fwd_epoch, &inputs[rank])
+            }
+        })) {
             Ok(r) => r,
             Err(p) => {
                 let msg = p

@@ -53,6 +53,17 @@ pub struct RankMetrics {
     pub ffn_tasks: u32,
     pub gemm_tasks: u32,
     pub combine_tasks: u32,
+    /// Backward data-gradient tile tasks (`Dgrad0`/`Dgrad1`) executed on
+    /// this rank — 0 for a forward pass.
+    pub dgrad_tasks: u32,
+    /// Backward weight-gradient tile tasks (`Wgrad0`/`Wgrad1`) executed
+    /// on this rank — 0 for a forward pass.
+    pub wgrad_tasks: u32,
+    /// Mean per-token entropy (nats) of this rank's post-softmax gate
+    /// distribution, over the rows it routed — the load-balance health
+    /// signal a training loop watches for gate collapse. 0.0 for a rank
+    /// that routed nothing (and for backward passes, which do not gate).
+    pub gate_entropy: f64,
     /// Dispatch tiles this rank sent.
     pub tiles_sent: usize,
     /// Valid rows sent vs rows a padded implementation would send.
@@ -109,7 +120,7 @@ impl RankMetrics {
     }
 
     pub fn total_tasks(&self) -> u32 {
-        self.ffn_tasks + self.gemm_tasks + self.combine_tasks
+        self.ffn_tasks + self.gemm_tasks + self.combine_tasks + self.dgrad_tasks + self.wgrad_tasks
     }
 
     /// Fraction of padded dispatch traffic avoided, in *rows* (the
@@ -148,6 +159,12 @@ pub struct PassMetrics {
     /// ranks — every rank sees the same degraded placement). > 0 marks a
     /// degraded pass: some routed rows were skipped, not computed.
     pub experts_unavailable: usize,
+    /// This pass was a **backward** (gradient) pass: its byte counters
+    /// measure *reverse*-path traffic (output-grad scatter + input-grad
+    /// gather), not forward dispatch/combine — see
+    /// [`forward_bytes`](Self::forward_bytes) /
+    /// [`reverse_bytes`](Self::reverse_bytes).
+    pub backward: bool,
     pub ranks: Vec<RankMetrics>,
 }
 
@@ -183,6 +200,38 @@ impl PassMetrics {
     /// configured wire width (split by locality in the per-rank metrics).
     pub fn total_bytes(&self) -> u64 {
         self.ranks.iter().map(|r| r.bytes_in_local + r.bytes_in_remote).sum()
+    }
+
+    /// Forward-path bytes of this pass: [`total_bytes`](Self::total_bytes)
+    /// for a forward, 0 for a backward. Keeps Table 3-style forward
+    /// accounting truthful when training passes share the engine.
+    pub fn forward_bytes(&self) -> u64 {
+        if self.backward {
+            0
+        } else {
+            self.total_bytes()
+        }
+    }
+
+    /// Reverse-path (gradient) bytes of this pass: `total_bytes` for a
+    /// backward, 0 for a forward. A 16-bit wire halves these exactly like
+    /// the forward payload — asserted by the `train_bench` perf gate.
+    pub fn reverse_bytes(&self) -> u64 {
+        if self.backward {
+            self.total_bytes()
+        } else {
+            0
+        }
+    }
+
+    /// Row-weighted mean gate entropy (nats) across ranks (see
+    /// [`RankMetrics::gate_entropy`]); 0.0 when no rows were routed.
+    pub fn gate_entropy(&self) -> f64 {
+        let rows: usize = self.ranks.iter().map(|r| r.rows_in).sum();
+        if rows == 0 {
+            return 0.0;
+        }
+        self.ranks.iter().map(|r| r.gate_entropy * r.rows_in as f64).sum::<f64>() / rows as f64
     }
 
     /// [`total_bytes`](Self::total_bytes) under its wire-format name,
@@ -320,6 +369,11 @@ impl PassMetrics {
     /// policy's worst-case slot region, so savings read high exactly when
     /// the gate is balanced — and [`total_dropped`](Self::total_dropped)
     /// must read 0 regardless of skew (asserted by the conformance suite).
+    /// For a [`backward`](Self::backward) pass the same ratio describes
+    /// the reverse path (grad rows sent vs the padded baseline), so
+    /// forward Table 3 numbers stay untainted — aggregate via
+    /// [`forward_bytes`](Self::forward_bytes) /
+    /// [`reverse_bytes`](Self::reverse_bytes) when mixing pass kinds.
     pub fn payload_savings(&self) -> f64 {
         let sent: usize = self.ranks.iter().map(|r| r.sent_rows).sum();
         let padded: usize = self.ranks.iter().map(|r| r.padded_rows).sum();
@@ -336,6 +390,17 @@ pub struct EngineMetrics {
     pub launches: u64,
     /// Forward passes served (wait()-collected) so far.
     pub passes: u64,
+    /// Backward (gradient) passes served so far — training traffic rides
+    /// the same engine but is counted separately so forward-throughput
+    /// numbers stay comparable across serving and training runs.
+    pub backward_passes: u64,
+    /// Cumulative one-sided bytes moved by *forward* passes, at the wire
+    /// width (Table 3's measured traffic).
+    pub forward_bytes: u64,
+    /// Cumulative one-sided bytes moved by *backward* passes (output-grad
+    /// scatter + input-grad gather) — the reverse-wire volume, split out
+    /// so payload-efficiency figures never mix directions.
+    pub reverse_bytes: u64,
     /// OS threads ever spawned by this engine (rank actors + resident
     /// processors). Constant after `start`; a growing value would mean a
     /// pass is respawning workers, which the engine never does.
@@ -599,6 +664,47 @@ mod tests {
         assert_eq!(empty.imbalance(), 0.0);
         assert_eq!(empty.hot_rank_busy_share(), 0.0);
         assert_eq!(empty.replica_hits(), 0);
+    }
+
+    #[test]
+    fn backward_flag_splits_byte_directions() {
+        let fwd = PassMetrics {
+            ranks: vec![RankMetrics { bytes_in_local: 128, ..Default::default() }],
+            ..Default::default()
+        };
+        assert!(!fwd.backward);
+        assert_eq!(fwd.forward_bytes(), 128);
+        assert_eq!(fwd.reverse_bytes(), 0);
+        let bwd = PassMetrics { backward: true, ..fwd.clone() };
+        assert_eq!(bwd.forward_bytes(), 0);
+        assert_eq!(bwd.reverse_bytes(), 128);
+        assert_eq!(bwd.total_bytes(), fwd.total_bytes(), "direction split, same measure");
+    }
+
+    #[test]
+    fn gate_entropy_is_row_weighted() {
+        let p = PassMetrics {
+            ranks: vec![
+                RankMetrics { rows_in: 30, gate_entropy: 1.0, ..Default::default() },
+                RankMetrics { rows_in: 10, gate_entropy: 0.2, ..Default::default() },
+            ],
+            ..Default::default()
+        };
+        assert!((p.gate_entropy() - 0.8).abs() < 1e-12);
+        assert_eq!(PassMetrics::default().gate_entropy(), 0.0, "no rows, no entropy");
+    }
+
+    #[test]
+    fn total_tasks_counts_backward_kinds() {
+        let m = RankMetrics {
+            ffn_tasks: 2,
+            gemm_tasks: 3,
+            combine_tasks: 4,
+            dgrad_tasks: 5,
+            wgrad_tasks: 6,
+            ..Default::default()
+        };
+        assert_eq!(m.total_tasks(), 20);
     }
 
     #[test]

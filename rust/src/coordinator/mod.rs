@@ -66,7 +66,7 @@ pub mod scheduler;
 pub mod service;
 
 pub use baseline::{forward_sequential, forward_sequential_placed, BaselineResult};
-pub use engine::{ForwardResult, MoeEngine, PassHandle, PassInput};
+pub use engine::{BackwardResult, ForwardResult, MoeEngine, PassHandle, PassInput};
 pub use metrics::{EngineMetrics, PassMetrics, RankMetrics, ServiceMetrics};
 pub use moe::DistributedMoE;
 pub use rank::TaskGraphMode;

@@ -42,7 +42,7 @@ impl DistributedMoE {
         self.engine.config()
     }
 
-    pub fn params(&self) -> &ModelParams {
+    pub fn params(&self) -> Arc<ModelParams> {
         self.engine.params()
     }
 

@@ -59,9 +59,9 @@
 //! spinning into the watchdog waiting for tiles that will never arrive.
 
 use std::cell::UnsafeCell;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::sync::{Arc, Barrier, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -69,8 +69,10 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::Config;
 use crate::expert::ModelParams;
-use crate::gate::{dispatch_plan, route_from_scores, DispatchPlan};
+use crate::gate::{dispatch_plan, route_from_scores, DispatchPlan, DispatchTile};
+use crate::gemm;
 use crate::placement::{LoadTracker, Placement};
+use crate::train::grad::ExpertGrad;
 use crate::transport::{NodeFabric, Transport};
 use crate::layout::{Coord, LayoutDims};
 use crate::runtime::ComputeBackend;
@@ -97,7 +99,17 @@ pub struct EngineShared {
     /// `Dropless`. Only the announced tiles of a pass are ever touched.
     pub capacity: usize,
     pub dims: LayoutDims,
-    pub params: Arc<ModelParams>,
+    /// The live model parameters. Swapped whole-`Arc` by
+    /// `MoeEngine::update_params` *between* passes only (epoch-fenced,
+    /// like placement swaps), so every rank of a pass snapshots one
+    /// version at pass start (`PassCtx::params`) and a training update
+    /// never tears mid-pass.
+    params: RwLock<Arc<ModelParams>>,
+    /// Per-rank activation stashes for training backwards, keyed by
+    /// forward-pass epoch. Bounded by [`STASH_CAP`] (oldest evicted);
+    /// populated only when `cfg.system.train.stash()` is on and the
+    /// engine runs in `Fused` mode.
+    pub stashes: Vec<Mutex<BTreeMap<u64, Arc<RankStash>>>>,
     /// The node-aware transport every one-sided transfer goes through:
     /// the symmetric heap wrapped in the configured topology and NIC
     /// model (`crate::transport`). Intra-node puts hit the heap
@@ -178,7 +190,8 @@ impl EngineShared {
             cfg,
             capacity,
             dims,
-            params,
+            params: RwLock::new(params),
+            stashes: (0..ranks).map(|_| Mutex::new(BTreeMap::new())).collect(),
             fabric,
             backend,
             mode,
@@ -191,6 +204,22 @@ impl EngineShared {
             placement: Mutex::new(placement),
             tracker: Mutex::new(tracker),
         }
+    }
+
+    /// Snapshot the live parameters (cheap `Arc` clone).
+    pub fn params(&self) -> Arc<ModelParams> {
+        self.params.read().unwrap().clone()
+    }
+
+    /// Install new parameters. Callers must hold the engine's epoch
+    /// fence (no pass in flight) — see `MoeEngine::update_params`.
+    pub fn set_params(&self, p: Arc<ModelParams>) {
+        *self.params.write().unwrap() = p;
+    }
+
+    /// Look up rank `rank`'s activation stash for forward epoch `fwd`.
+    pub fn stash_for(&self, rank: usize, fwd: u64) -> Option<Arc<RankStash>> {
+        self.stashes[rank].lock().unwrap().get(&fwd).cloned()
     }
 
     /// Snapshot the current placement (cheap `Arc` clone).
@@ -328,11 +357,12 @@ impl WeightSlices {
         // this default path; the non-packed fallback pays full-table
         // weight copies, mirroring the backend's own global expert cache.
         let skip_weight_copies = shared.backend.packed_split_tiles();
+        let params = shared.params();
         let mut w1c = Vec::new();
         let mut b1c = Vec::new();
         let mut w2c = Vec::new();
         let mut b2c = Vec::new();
-        for ex in shared.params.experts.iter() {
+        for ex in params.experts.iter() {
             if skip_weight_copies {
                 w1c.push(vec![Vec::new(); m.d / m.bn]);
                 w2c.push(vec![Vec::new(); m.h / m.bn]);
@@ -398,6 +428,114 @@ impl Staging {
     }
 }
 
+/// How many forward stashes each rank retains; the oldest is evicted
+/// when a newer forward completes. Backward must be issued within this
+/// many forwards of its pass.
+pub const STASH_CAP: usize = 4;
+
+/// Per-pass activation stash for the training backward: everything the
+/// reverse pass needs to re-derive its tile set and gradients without
+/// any new announcement round — both sides of every transfer already
+/// know the forward plan, so the reverse tile set is implied.
+pub struct RankStash {
+    /// Forward pass epoch (the stash key).
+    pub epoch: u64,
+    /// Placement version the forward ran under; a backward refuses to
+    /// run against a different placement (its tile set would not match).
+    pub placement_version: u64,
+    /// Rows this rank submitted in the forward.
+    pub s_rows: usize,
+    /// Forward input copy (s_rows, H): the gate backward's left operand.
+    pub(crate) x: Vec<f32>,
+    /// Post-softmax gate probabilities (s_rows, E).
+    pub(crate) scores: Vec<f32>,
+    pub(crate) topk_idx: Vec<u32>,
+    pub(crate) topk_w: Vec<f32>,
+    /// The forward dispatch plan — the backward's reverse tile set.
+    pub(crate) plan: DispatchPlan,
+    /// Parameter snapshot the forward computed with: gradients are taken
+    /// w.r.t. *these* tensors even if `update_params` has since installed
+    /// newer ones (the tape closes over its own weights).
+    pub(crate) params: Arc<ModelParams>,
+    /// Placement snapshot of the forward (slot → expert resolution).
+    pub(crate) placement: Arc<Placement>,
+    /// Unweighted expert output per *plan* tile, written by the forward
+    /// combine at the T_phi ordinal: the gate backward's dc source.
+    pub(crate) y_stage: Staging,
+    /// Owner side: dispatched input rows per incoming block — the left
+    /// operand of the dW1 fold (and the mid-recompute fallback).
+    pub(crate) x_stash: Staging,
+    /// Owner side: post-ReLU FFN intermediate per incoming block,
+    /// captured from the backend's scratch when it honors the contract
+    /// ([`ComputeBackend::mid_in_scratch`]); otherwise `has_mid` is false
+    /// and the backward recomputes it from `x_stash`.
+    pub(crate) mid_stash: Staging,
+    pub(crate) has_mid: bool,
+    /// Valid rows per incoming block (owner side).
+    pub(crate) block_rows: Vec<AtomicU32>,
+    /// Forward bookkeeping copies: the backward's sweep bounds and block
+    /// ordinal bases, frozen so no re-announcement is needed.
+    pub(crate) incoming_tiles: Vec<u32>,
+    pub(crate) block_base: Vec<u32>,
+}
+
+/// One rank's parameter-gradient partials from a backward pass. The
+/// engine merges partials in a fixed order (ranks ascending, then each
+/// rank's slot order) into one `GradStore`, so the merged gradients are
+/// bitwise deterministic.
+pub struct RankGrads {
+    /// Gate-matrix gradient partial (H, E) from this rank's tokens.
+    pub wg: Vec<f32>,
+    /// Per served expert slot: (global expert id, FFN grad partial).
+    pub experts: Vec<(usize, ExpertGrad)>,
+}
+
+/// Ordinal table entry for the deterministic wgrad folds: which incoming
+/// block feeds fold position `ordinal` of a local expert slot.
+#[derive(Clone, Copy)]
+struct FoldSrc {
+    block: usize,
+    peer: usize,
+    tile: usize,
+    rows: usize,
+}
+
+/// One deterministic gradient fold. Ordinals are folded strictly in
+/// ascending (peer, tile) order: a wgrad task marks its ordinal ready
+/// under the lock and the current holder folds every consecutive ready
+/// prefix — so the f32 accumulation order is fixed under any work-
+/// stealing schedule or processor count (bitwise-reproducible wgrads,
+/// mirroring the forward's plan-order combine fold).
+struct WgradFold {
+    next: usize,
+    ready: Vec<bool>,
+    dw: Vec<f32>,
+    db: Vec<f32>,
+}
+
+impl WgradFold {
+    fn new(ordinals: usize, w_len: usize, b_len: usize) -> Self {
+        Self { next: 0, ready: vec![false; ordinals], dw: vec![0.0; w_len], db: vec![0.0; b_len] }
+    }
+}
+
+/// Backward-only pass state: the forward stash being differentiated,
+/// the dgrad staging, and the per-slot wgrad folds.
+struct BwdCtx {
+    stash: Arc<RankStash>,
+    /// dMid per incoming block (bM, D): written by Dgrad1, read by
+    /// Dgrad0 (the dX producer) and the Wgrad0 fold.
+    dmid_stage: Staging,
+    /// Per local slot: fold inputs in (peer asc, tile asc) order.
+    fold_src: Vec<Vec<FoldSrc>>,
+    /// This task's fold ordinal base per (peer, local slot).
+    ord_base: Vec<u32>,
+    /// dW1/db1 folds per local slot (xᵀ·dMid / column-sum of dMid).
+    fold0: Vec<Mutex<WgradFold>>,
+    /// dW2/db2 folds per local slot (midᵀ·dY' / column-sum of dY').
+    fold1: Vec<Mutex<WgradFold>>,
+}
+
 /// Pass-lifetime counters driving the self-correcting task bound.
 struct PassCounters {
     ffn_decoded: AtomicU32,
@@ -409,6 +547,13 @@ struct PassCounters {
     /// Token rows this rank received into *replica* slots (slot index
     /// `>= local_experts`) — the replication-effect signal.
     replica_rows: AtomicU64,
+    /// Backward bookkeeping: follow-up tasks spawned by Dgrad1 decode
+    /// (Wgrad1 + Wgrad0 + Dgrad0 per tile) vs completed — the backward
+    /// leg of the self-correcting task bound.
+    bwd_spawned: AtomicU32,
+    bwd_completed: AtomicU32,
+    dgrad_tasks: AtomicU32,
+    wgrad_tasks: AtomicU32,
 }
 
 impl PassCounters {
@@ -421,6 +566,10 @@ impl PassCounters {
             gemm_tasks: AtomicU32::new(0),
             busy_nanos: AtomicU64::new(0),
             replica_rows: AtomicU64::new(0),
+            bwd_spawned: AtomicU32::new(0),
+            bwd_completed: AtomicU32::new(0),
+            dgrad_tasks: AtomicU32::new(0),
+            wgrad_tasks: AtomicU32::new(0),
         }
     }
 }
@@ -474,6 +623,14 @@ struct PassCtx {
     /// Per-dispatched-tile combine staging (bM, H) blocks: tasks write
     /// disjoint blocks; the subscriber folds them in plan order.
     combine_stage: Staging,
+    /// The parameter snapshot this pass computes with (forward: the live
+    /// params at pass start; backward: the stashed forward's params).
+    params: Arc<ModelParams>,
+    /// Forward stashing target (`Some` when training stash is on):
+    /// FusedFfn/Combine tasks capture activations here as they run.
+    stash: Option<Arc<RankStash>>,
+    /// Backward-pass state; `Some` iff this pass is a backward.
+    bwd: Option<BwdCtx>,
 }
 
 impl PassCtx {
@@ -484,10 +641,13 @@ impl PassCtx {
     }
 }
 
-/// The result of one rank's forward pass.
+/// The result of one rank's pass. For a forward, `out` is the combined
+/// (s_r, H) layer output; for a backward, it is dL/dX of the same shape
+/// and `grads` carries this rank's parameter-gradient partials.
 pub struct RankOutput {
     pub out: Vec<f32>,
     pub metrics: RankMetrics,
+    pub grads: Option<RankGrads>,
 }
 
 /// Doorbell between a rank's subscriber thread and its resident
@@ -605,6 +765,9 @@ impl RankActor {
         // pair: rebalance only swaps the map with no pass in flight, so
         // every rank of this pass reads the same version.
         let placement = shared.placement();
+        // Parameter snapshot for this pass, taken with the placement:
+        // update_params swaps the Arc only with no pass in flight.
+        let params = shared.params();
         let e_slots = shared.dims.e_local;
 
         // ---- FusedGate (Alg. 1 line 1) ---------------------------------------
@@ -612,9 +775,10 @@ impl RankActor {
         // partially-filled rank routes (and pays for) only what it holds.
         let scores = shared
             .backend
-            .gate_scores(a, &shared.params.wg, s_rows)
+            .gate_scores(a, &params.wg, s_rows)
             .context("gate")?;
         let routing = route_from_scores(scores, s_rows, &cfg.model, shared.capacity);
+        let gate_entropy = routing.entropy();
         let dropped = routing.dropped;
         anyhow::ensure!(
             !cfg.model.policy.is_dropless() || dropped == 0,
@@ -830,6 +994,34 @@ impl RankActor {
         let blocks = blocks as usize;
         let my_expected_combine = plan.tiles.len() as u32;
         let split = shared.mode == TaskGraphMode::Split;
+
+        // ---- training tape (opt-in) ------------------------------------------
+        // Stash everything the backward needs: routing/plan on the source
+        // side, per-block inputs + post-ReLU intermediates on the owner
+        // side (filled by FusedFfn tasks as they run), and unweighted
+        // expert outputs (filled by Combine tasks). Fused mode only — the
+        // split GEMM chain has no mid-capture seam wired.
+        let stash = (shared.mode == TaskGraphMode::Fused && cfg.system.train.stash()).then(|| {
+            Arc::new(RankStash {
+                epoch,
+                placement_version: placement.version(),
+                s_rows,
+                x: a.to_vec(),
+                scores: routing.scores.clone(),
+                topk_idx: routing.topk_idx.clone(),
+                topk_w: routing.topk_w.clone(),
+                plan: plan.clone(),
+                params: params.clone(),
+                placement: placement.clone(),
+                y_stage: Staging::new(plan.tiles.len(), m.bm * h),
+                x_stash: Staging::new(blocks, m.bm * h),
+                mid_stash: Staging::new(blocks, m.bm * m.d),
+                has_mid: shared.backend.mid_in_scratch(),
+                block_rows: (0..blocks).map(|_| AtomicU32::new(0)).collect(),
+                incoming_tiles: incoming_tiles.clone(),
+                block_base: block_base.clone(),
+            })
+        });
         self.queue.reopen();
         let ctx = Arc::new(PassCtx {
             shared: self.shared.clone(),
@@ -851,6 +1043,9 @@ impl RankActor {
             combine_stage: Staging::new(plan.tiles.len(), m.bm * m.h),
             placement: placement.clone(),
             plan,
+            params,
+            stash: stash.clone(),
+            bwd: None,
         });
 
         // ---- wake the resident processors (doorbell, not spawn) --------------
@@ -922,8 +1117,333 @@ impl RankActor {
             expert_kept: routing.expert_load.iter().map(|&v| v as u64).collect(),
             replica_rows: c.replica_rows.load(Ordering::Relaxed),
             unavailable_rows: ctx.plan.unavailable_rows as u64,
+            dgrad_tasks: 0,
+            wgrad_tasks: 0,
+            gate_entropy,
         };
-        Ok(RankOutput { out, metrics })
+        // Publish the tape last: a pass that errored above never leaves a
+        // half-filled stash behind (the Arc just drops).
+        if let Some(stash) = stash {
+            let mut stashes = shared.stashes[rank].lock().unwrap();
+            stashes.insert(epoch, stash);
+            while stashes.len() > STASH_CAP {
+                let oldest = *stashes.keys().next().unwrap();
+                stashes.remove(&oldest);
+            }
+        }
+        Ok(RankOutput { out, metrics, grads: None })
+    }
+
+    /// Run one epoch-tagged **backward** pass for the stashed forward
+    /// `fwd_epoch`. Same persistent machinery as a forward — the
+    /// pass-start barrier pair, generation-tagged one-sided transfers at
+    /// the configured wire precision, the flag sweep feeding the
+    /// work-stealing pool, poison/retry semantics — but the tile flow is
+    /// reversed: this rank scatters combine-weight-scaled output-grads to
+    /// the forward plan's expert owners (round-0 cells), owners run
+    /// `Dgrad1 → {Wgrad1, Wgrad0, Dgrad0}` per tile and ship dX tiles
+    /// back over the round-1 cells, and the subscriber folds returning
+    /// tiles in plan order (unit weights — the scaling already happened
+    /// at the source) before adding the gate backward's dX term. No
+    /// announcement round exists in reverse: both sides derive the exact
+    /// tile set from the stashed forward plan.
+    pub fn run_backward_pass(&self, epoch: u64, fwd_epoch: u64, gy: &[f32]) -> Result<RankOutput> {
+        let shared = &self.shared;
+        let cfg = &shared.cfg;
+        let rank = self.rank;
+        let h = cfg.model.h;
+        anyhow::ensure!(
+            shared.mode == TaskGraphMode::Fused,
+            "rank {rank}: backward passes run in Fused task-graph mode only"
+        );
+        let stash = shared.stash_for(rank, fwd_epoch).ok_or_else(|| {
+            anyhow!("rank {rank}: no activation stash for forward pass {fwd_epoch}")
+        })?;
+        anyhow::ensure!(
+            gy.len() == stash.s_rows * h,
+            "rank {rank}: output-grad length {} != stashed rows {} x H",
+            gy.len(),
+            stash.s_rows
+        );
+        let epoch32 = epoch as u32;
+
+        // ---- pass-start doorbell (same barrier discipline as forward) --------
+        // The announce tables stay untouched: the reverse tile set is the
+        // stashed plan, which every receiver also stashed.
+        shared.start.wait();
+        if rank == 0 {
+            shared.pass_poisoned.clear(epoch32);
+        }
+        shared.start.wait();
+        let t0 = Instant::now();
+        let (bytes_local_0, bytes_remote_0) = shared.fabric.bytes_in(rank);
+        let steals_0 = self.queue.steals();
+        let m = &cfg.model;
+        let e_slots = shared.dims.e_local;
+        let ranks_n = cfg.system.ranks;
+
+        // ---- reverse dispatch: scatter scaled output-grads -------------------
+        // Per stashed plan tile, row r carries `weights[r] * gy[token_r]`:
+        // scaling at the source folds the combine weights into the
+        // payload, so owners consume dY' = c ⊙ dY directly and the
+        // returning dX tiles fold with *unit* weight. `put_signal`
+        // encodes to the configured wire precision, exactly like the
+        // forward — 16-bit wires halve reverse traffic too.
+        let wb = shared.fabric.wire().bytes() as u64;
+        let topo = *shared.fabric.topology();
+        let hier = cfg.system.dispatch.is_hierarchical() && topo.nodes() > 1;
+        let mut pack = vec![0.0f32; m.bm * h];
+        let mut announced_inter_bytes: u64 = 0;
+        for t in &stash.plan.tiles {
+            // dX gather for cross-node tiles comes back over the NIC
+            if !topo.same_node(rank, t.dst as usize) {
+                announced_inter_bytes += t.rows as u64 * h as u64 * wb;
+            }
+        }
+        let fill = |pack: &mut [f32], t: &DispatchTile| {
+            for (row, (&tok, &w)) in t.tokens.iter().zip(&t.weights).enumerate() {
+                let src = &gy[tok as usize * h..(tok as usize + 1) * h];
+                for (p, &g) in pack[row * h..(row + 1) * h].iter_mut().zip(src) {
+                    *p = w * g;
+                }
+            }
+        };
+        if hier {
+            let my_node = topo.node_of(rank);
+            for node in 0..topo.nodes() {
+                if node == my_node {
+                    continue;
+                }
+                // Unlike the forward, payloads are per-(tile, row) scaled,
+                // so a token shared by two tiles carries *different* rows
+                // — no dedup; the coalesced transfer still batches the
+                // node's tiles into one NIC admission.
+                let total: u64 = stash
+                    .plan
+                    .tiles
+                    .iter()
+                    .filter(|t| topo.node_of(t.dst as usize) == node)
+                    .map(|t| t.rows as u64 * h as u64 * wb)
+                    .sum();
+                if total == 0 {
+                    continue;
+                }
+                announced_inter_bytes += total;
+                let xfer = match shared.fabric.coalesced(rank, node, epoch32, total) {
+                    Ok(x) => x,
+                    Err(e) => {
+                        shared.poison(epoch32);
+                        return Err(e).context("coalesced backward dispatch");
+                    }
+                };
+                for t in stash.plan.tiles.iter().filter(|t| topo.node_of(t.dst as usize) == node)
+                {
+                    fill(&mut pack, t);
+                    let coord =
+                        Coord { p: rank, r: 0, b: 1, e: t.dslot as usize, c: t.tile as usize * m.bm };
+                    if let Err(e) = xfer.put(t.dst as usize, coord, &pack[..t.rows as usize * h])
+                    {
+                        shared.poison(epoch32);
+                        return Err(e).context("coalesced backward fan-out");
+                    }
+                }
+            }
+        }
+        for t in &stash.plan.tiles {
+            let dst = t.dst as usize;
+            if hier && !topo.same_node(rank, dst) {
+                continue; // already shipped via the coalesced path
+            }
+            if !topo.same_node(rank, dst) {
+                announced_inter_bytes += t.rows as u64 * h as u64 * wb;
+            }
+            fill(&mut pack, t);
+            let coord = Coord { p: rank, r: 0, b: 1, e: t.dslot as usize, c: t.tile as usize * m.bm };
+            if let Err(e) =
+                shared.fabric.put_signal(rank, dst, coord, &pack[..t.rows as usize * h], epoch32)
+            {
+                shared.poison(epoch32);
+                return Err(e).context("backward dispatch put");
+            }
+        }
+
+        // ---- pass bookkeeping from the stash (no announcement wait) ----------
+        let incoming_tiles = stash.incoming_tiles.clone();
+        let block_base = stash.block_base.clone();
+        let total_incoming: u32 = incoming_tiles.iter().sum();
+        let mut combine_tiles = vec![0u32; ranks_n * e_slots];
+        for t in &stash.plan.tiles {
+            let idx = t.dst as usize * e_slots + t.dslot as usize;
+            combine_tiles[idx] = combine_tiles[idx].max(t.tile + 1);
+        }
+        let mut tphi = HashMap::with_capacity(stash.plan.tiles.len());
+        for (i, t) in stash.plan.tiles.iter().enumerate() {
+            tphi.insert((t.dst, t.dslot, t.tile), i as u32);
+        }
+        let my_expected_combine = stash.plan.tiles.len() as u32;
+
+        // ---- wgrad fold ordinal tables ---------------------------------------
+        // Fixed fold order per local slot: (peer asc, tile asc). Tasks
+        // mark their ordinal ready; consecutive ready prefixes fold under
+        // the slot's lock — deterministic wgrads at any processor count.
+        let mut ord_base = vec![0u32; ranks_n * e_slots];
+        let mut fold_src: Vec<Vec<FoldSrc>> = (0..e_slots).map(|_| Vec::new()).collect();
+        for e_loc in 0..e_slots {
+            for peer in 0..ranks_n {
+                let pe = peer * e_slots + e_loc;
+                ord_base[pe] = fold_src[e_loc].len() as u32;
+                let base = block_base[pe] as usize;
+                for tile in 0..incoming_tiles[pe] as usize {
+                    let block = base + tile;
+                    let rows = stash.block_rows[block].load(Ordering::Acquire) as usize;
+                    fold_src[e_loc].push(FoldSrc { block, peer, tile, rows });
+                }
+            }
+        }
+        let blocks = total_incoming as usize;
+        let fold0 = (0..e_slots)
+            .map(|el| Mutex::new(WgradFold::new(fold_src[el].len(), m.h * m.d, m.d)))
+            .collect();
+        let fold1 = (0..e_slots)
+            .map(|el| Mutex::new(WgradFold::new(fold_src[el].len(), m.d * m.h, m.h)))
+            .collect();
+        let bwd = BwdCtx {
+            stash: stash.clone(),
+            dmid_stage: Staging::new(blocks, m.bm * m.d),
+            fold_src,
+            ord_base,
+            fold0,
+            fold1,
+        };
+
+        self.queue.reopen();
+        let ctx = Arc::new(PassCtx {
+            shared: self.shared.clone(),
+            rank,
+            epoch32,
+            queue: self.queue.clone(),
+            counters: PassCounters::new(),
+            tphi,
+            incoming_tiles,
+            combine_tiles,
+            block_base,
+            slices: self.slices.clone(),
+            x_stage: None,
+            mid: None,
+            out_stage: None,
+            g0_latch: None,
+            g1_latch: None,
+            block_rows: (0..blocks).map(|_| AtomicU32::new(0)).collect(),
+            combine_stage: Staging::new(stash.plan.tiles.len(), m.bm * h),
+            placement: stash.placement.clone(),
+            plan: stash.plan.clone(),
+            params: stash.params.clone(),
+            stash: None,
+            bwd: Some(bwd),
+        });
+
+        // ---- wake the resident processors (doorbell, not spawn) --------------
+        {
+            let mut st = self.bell.state.lock().unwrap();
+            st.ctx = Some(ctx.clone());
+            st.done = 0;
+            for r in st.results.iter_mut() {
+                *r = None;
+            }
+            st.epoch = epoch;
+            self.bell.cv.notify_all();
+        }
+
+        let sub_result = bwd_subscriber_loop(ctx.as_ref(), total_incoming, my_expected_combine);
+
+        let worker_results: Vec<Result<()>> = {
+            let mut st = self.bell.state.lock().unwrap();
+            while st.done < self.workers.len() {
+                st = self.bell.cv.wait(st).unwrap();
+            }
+            st.ctx = None;
+            st.results.iter_mut().map(|r| r.take().expect("worker result")).collect()
+        };
+        sub_result.with_context(|| format!("rank {rank} backward subscriber (pass {epoch})"))?;
+        for (i, r) in worker_results.into_iter().enumerate() {
+            r.with_context(|| format!("rank {rank} processor {i} (backward pass {epoch})"))?;
+        }
+
+        // ---- deterministic dX fold (plan order, unit weights) ----------------
+        let s_rows = stash.s_rows;
+        let mut dx = vec![0.0f32; s_rows * h];
+        for (i, t) in ctx.plan.tiles.iter().enumerate() {
+            let g = ctx.combine_stage.read_block(i);
+            for (row, &tok) in t.tokens.iter().enumerate() {
+                let dst = &mut dx[tok as usize * h..(tok as usize + 1) * h];
+                let src = &g[row * h..(row + 1) * h];
+                for (o, &v) in dst.iter_mut().zip(src) {
+                    *o += v;
+                }
+            }
+        }
+
+        // ---- gate backward (token order, single-threaded: deterministic) -----
+        let mut dwg = vec![0.0f32; h * m.e];
+        gate_backward(&stash, gy, &mut dx, &mut dwg, m.e, m.k, h);
+
+        // ---- per-slot expert-grad partials -----------------------------------
+        // Drained in ascending slot order; the engine merges ranks
+        // ascending, so the cross-rank accumulation order is fixed.
+        let bwdctx = ctx.bwd.as_ref().unwrap();
+        let mut experts: Vec<(usize, ExpertGrad)> = Vec::new();
+        for e_loc in 0..e_slots {
+            if bwdctx.fold_src[e_loc].is_empty() {
+                continue;
+            }
+            let Some(ge) = stash.placement.expert_on(rank, e_loc) else {
+                continue;
+            };
+            let mut f0 = bwdctx.fold0[e_loc].lock().unwrap();
+            let mut f1 = bwdctx.fold1[e_loc].lock().unwrap();
+            debug_assert_eq!(f0.next, bwdctx.fold_src[e_loc].len(), "fold0 fully drained");
+            debug_assert_eq!(f1.next, bwdctx.fold_src[e_loc].len(), "fold1 fully drained");
+            experts.push((
+                ge,
+                ExpertGrad {
+                    w1: std::mem::take(&mut f0.dw),
+                    b1: std::mem::take(&mut f0.db),
+                    w2: std::mem::take(&mut f1.dw),
+                    b2: std::mem::take(&mut f1.db),
+                },
+            ));
+        }
+
+        let wall = t0.elapsed().as_secs_f64();
+        let (bytes_local_1, bytes_remote_1) = shared.fabric.bytes_in(rank);
+        let c = &ctx.counters;
+        let metrics = RankMetrics {
+            busy_secs: c.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            wall_secs: wall,
+            processors: self.workers.len(),
+            rows_in: s_rows,
+            ffn_tasks: 0,
+            gemm_tasks: 0,
+            combine_tasks: c.combine_completed.load(Ordering::Relaxed),
+            tiles_sent: ctx.plan.tiles.len(),
+            sent_rows: ctx.plan.sent_rows,
+            padded_rows: ctx.plan.padded_rows,
+            dropped: 0,
+            bytes_in_local: bytes_local_1 - bytes_local_0,
+            bytes_in_remote: bytes_remote_1 - bytes_remote_0,
+            announced_inter_bytes,
+            max_queue_depth: self.queue.max_depth(),
+            steals: self.queue.steals() - steals_0,
+            expert_offered: Vec::new(),
+            expert_kept: Vec::new(),
+            replica_rows: 0,
+            unavailable_rows: 0,
+            dgrad_tasks: c.ffn_completed.load(Ordering::Relaxed)
+                + c.dgrad_tasks.load(Ordering::Relaxed),
+            wgrad_tasks: c.wgrad_tasks.load(Ordering::Relaxed),
+            gate_entropy: 0.0,
+        };
+        Ok(RankOutput { out: dx, metrics, grads: Some(RankGrads { wg: dwg, experts }) })
     }
 
     /// Post-panic cleanup: if `epoch` was already published to the
@@ -1163,6 +1683,227 @@ fn next_seq(seq: &mut u32) -> u32 {
     *seq
 }
 
+/// Subscriber for a backward pass. Identical flag protocol to the
+/// forward's — round-0 cells now carry scaled output-grad tiles for my
+/// experts, round-1 cells carry dX tiles returning for my tokens — but
+/// the sweep bounds come from the stash, not from announcements: the
+/// reverse tile set is the forward plan, which both sides kept. The
+/// task bound gains a backward leg: every decoded Dgrad1 spawns
+/// Wgrad1 + Wgrad0 + Dgrad0, all of which must complete.
+fn bwd_subscriber_loop(ctx: &PassCtx, total_incoming: u32, my_expected_combine: u32) -> Result<()> {
+    let shared = &*ctx.shared;
+    let dims = &shared.dims;
+    let ranks = shared.cfg.system.ranks;
+    let mut visited = vec![false; dims.num_flags()];
+    let mut seen_dispatch = 0u32;
+    let mut seen_combine = 0u32;
+    let mut seq = 0u32;
+    let mut idle_spins = 0u32;
+    let mut last_progress = Instant::now();
+    let mut help: Option<(Vec<f32>, Vec<f32>, Vec<f32>)> = None;
+    loop {
+        if shared.poisoned(ctx.epoch32) {
+            ctx.queue.stop_all();
+            bail!(
+                "rank {} abandoning pass gen {}: a peer failed mid-transfer \
+                 (e.g. NIC incast overflow)",
+                ctx.rank,
+                ctx.epoch32
+            );
+        }
+        let mut progressed = false;
+        for peer in 0..ranks {
+            for e_loc in 0..dims.e_local {
+                let pe = peer * dims.e_local + e_loc;
+                // round 0: scaled output-grad tiles for my experts
+                for tile in 0..ctx.incoming_tiles[pe] as usize {
+                    let f0 = dims.flag_index(peer, 0, e_loc, tile);
+                    if !visited[f0] {
+                        if let Some(rows) = shared.fabric.poll_epoch(ctx.rank, f0, ctx.epoch32) {
+                            visited[f0] = true;
+                            progressed = true;
+                            seen_dispatch += 1;
+                            ctx.counters.ffn_decoded.fetch_add(1, Ordering::Relaxed);
+                            ctx.queue.push(Task {
+                                task_type: TaskType::Dgrad1,
+                                peer: peer as u32,
+                                expert: e_loc as u32,
+                                tile: tile as u32,
+                                col: 0,
+                                rows: rows as u32,
+                                seq: next_seq(&mut seq),
+                            });
+                        }
+                    }
+                }
+                // round 1: dX tiles returning for my tokens
+                for tile in 0..ctx.combine_tiles[pe] as usize {
+                    let f1 = dims.flag_index(peer, 1, e_loc, tile);
+                    if !visited[f1] {
+                        if let Some(rows) = shared.fabric.poll_epoch(ctx.rank, f1, ctx.epoch32) {
+                            visited[f1] = true;
+                            progressed = true;
+                            seen_combine += 1;
+                            ctx.counters.combine_decoded.fetch_add(1, Ordering::Relaxed);
+                            ctx.queue.push(Task {
+                                task_type: TaskType::Combine,
+                                peer: peer as u32,
+                                expert: e_loc as u32,
+                                tile: tile as u32,
+                                col: 0,
+                                rows: rows as u32,
+                                seq: next_seq(&mut seq),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        // self-correcting bound, backward edition: every stashed inbound
+        // tile decoded and differentiated (Dgrad1), every spawned
+        // follow-up (Wgrad1/Wgrad0/Dgrad0) done, every dX tile applied.
+        let c = &ctx.counters;
+        if seen_dispatch == total_incoming
+            && seen_combine == my_expected_combine
+            && c.ffn_completed.load(Ordering::Acquire) == c.ffn_decoded.load(Ordering::Acquire)
+            && c.bwd_completed.load(Ordering::Acquire) == c.bwd_spawned.load(Ordering::Acquire)
+            && c.combine_completed.load(Ordering::Acquire)
+                == c.combine_decoded.load(Ordering::Acquire)
+        {
+            ctx.queue.stop_all();
+            return Ok(());
+        }
+        if progressed {
+            idle_spins = 0;
+            last_progress = Instant::now();
+        } else {
+            if idle_spins >= HELP_OUT_AFTER {
+                if let Some(task) = ctx.queue.steal() {
+                    let m = &shared.cfg.model;
+                    let (scratch, tile_out, xbuf) = help.get_or_insert_with(|| {
+                        let xbuf_len = if shared.fabric.zero_copy() { 0 } else { m.bm * m.h };
+                        (
+                            vec![0.0f32; m.bm * m.d.max(m.h)],
+                            vec![0.0f32; m.bm * m.h.max(m.bn)],
+                            vec![0.0f32; xbuf_len],
+                        )
+                    });
+                    if let Err(err) = execute_task(ctx, &task, None, scratch, tile_out, xbuf) {
+                        ctx.queue.stop_all();
+                        panic!(
+                            "rank {} backward subscriber help-out failed on {task:?}: {err:#}",
+                            ctx.rank
+                        );
+                    }
+                    idle_spins = 0;
+                    last_progress = Instant::now();
+                    continue;
+                }
+            }
+            idle_spins += 1;
+            if idle_spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+            if idle_spins % 4096 == 0 && last_progress.elapsed() > shared.watchdog() {
+                let c = &ctx.counters;
+                ctx.queue.stop_all();
+                panic!(
+                    "rank {} wedged in backward ({:.1}s since last progress, watchdog {}s, \
+                     pass gen {}): dispatch {seen_dispatch}/{total_incoming}, \
+                     combine {seen_combine}/{my_expected_combine}, dgrad {}/{}, \
+                     bwd {}/{}, combine-exec {}/{}",
+                    ctx.rank,
+                    last_progress.elapsed().as_secs_f64(),
+                    shared.cfg.system.watchdog_secs,
+                    ctx.epoch32,
+                    c.ffn_completed.load(Ordering::Acquire),
+                    c.ffn_decoded.load(Ordering::Acquire),
+                    c.bwd_completed.load(Ordering::Acquire),
+                    c.bwd_spawned.load(Ordering::Acquire),
+                    c.combine_completed.load(Ordering::Acquire),
+                    c.combine_decoded.load(Ordering::Acquire),
+                );
+            }
+        }
+    }
+}
+
+/// Gate backward for one rank's stashed forward, folded after the dX
+/// tiles: per routed (token, expert) pair, dc = ⟨dY, y_unweighted⟩ from
+/// the stashed y tiles; through the top-k renormalization
+/// (c_j = p_j / Σ p_topk) and the softmax Jacobian into dWg and the
+/// gate's dX term. Token-major and single-threaded — deterministic by
+/// construction. Dropped pairs contributed nothing forward, so their dc
+/// is correctly zero.
+fn gate_backward(
+    stash: &RankStash,
+    gy: &[f32],
+    dx: &mut [f32],
+    dwg: &mut [f32],
+    e: usize,
+    k: usize,
+    h: usize,
+) {
+    let s = stash.s_rows;
+    // dc[i*k + j] = <dY_i, y_{i, topk j}>: one sweep over the plan tiles,
+    // reading each row's unweighted expert output from the y stash.
+    let mut dc = vec![0.0f32; s * k];
+    for (ord, t) in stash.plan.tiles.iter().enumerate() {
+        let y = stash.y_stage.read_block(ord);
+        for (row, &tok) in t.tokens.iter().enumerate() {
+            let tok = tok as usize;
+            let dot: f32 = gy[tok * h..(tok + 1) * h]
+                .iter()
+                .zip(&y[row * h..(row + 1) * h])
+                .map(|(&a, &b)| a * b)
+                .sum();
+            for j in 0..k {
+                if stash.topk_idx[tok * k + j] == t.expert {
+                    dc[tok * k + j] += dot;
+                    break;
+                }
+            }
+        }
+    }
+    let wg = &stash.params.wg;
+    let mut dlogits = vec![0.0f32; e];
+    for i in 0..s {
+        let p_row = &stash.scores[i * e..(i + 1) * e];
+        let wrow = &stash.topk_w[i * k..(i + 1) * k];
+        let denom: f32 = wrow.iter().sum();
+        if denom <= 0.0 || !denom.is_finite() {
+            continue; // degenerate gate row: the forward clamped, skip
+        }
+        // combine weights c_j = w_j/denom; d/dw_j of Σ c_l dc_l
+        let gsum: f32 = (0..k).map(|j| (wrow[j] / denom) * dc[i * k + j]).sum();
+        dlogits.fill(0.0);
+        for j in 0..k {
+            let ex = stash.topk_idx[i * k + j] as usize;
+            dlogits[ex] = (dc[i * k + j] - gsum) / denom;
+        }
+        // softmax Jacobian: dlogit_v = p_v (dp_v − Σ_u dp_u p_u)
+        let dp_dot_p: f32 = dlogits.iter().zip(p_row).map(|(&dp, &p)| dp * p).sum();
+        for (dl, &p) in dlogits.iter_mut().zip(p_row) {
+            *dl = p * (*dl - dp_dot_p);
+        }
+        // dWg += x_iᵀ ⊗ dlogits;  dx_i += dlogits · Wgᵀ
+        let xi = &stash.x[i * h..(i + 1) * h];
+        let dxi = &mut dx[i * h..(i + 1) * h];
+        for (pdim, (&xv, dxv)) in xi.iter().zip(dxi.iter_mut()).enumerate() {
+            let wgrow = &wg[pdim * e..(pdim + 1) * e];
+            let dwgrow = &mut dwg[pdim * e..(pdim + 1) * e];
+            let mut acc = 0.0f32;
+            for jj in 0..e {
+                dwgrow[jj] += xv * dlogits[jj];
+                acc += dlogits[jj] * wgrow[jj];
+            }
+            *dxv += acc;
+        }
+    }
+}
+
 /// Decode one dispatch packet into task descriptors (Alg. 4 line 18).
 fn decode_dispatch(ctx: &PassCtx, peer: usize, e_loc: usize, tile: usize, rows: usize, seq: &mut u32) {
     let m = &ctx.shared.cfg.model;
@@ -1173,6 +1914,12 @@ fn decode_dispatch(ctx: &PassCtx, peer: usize, e_loc: usize, tile: usize, rows: 
     }
     match ctx.shared.mode {
         TaskGraphMode::Fused => {
+            // Training tape: record the block's valid rows so the
+            // backward can rebuild its fold tables without re-announcing.
+            if let Some(stash) = &ctx.stash {
+                stash.block_rows[ctx.block_id(peer, e_loc, tile)]
+                    .store(rows as u32, Ordering::Release);
+            }
             ctx.queue.push(Task {
                 task_type: TaskType::FusedFfn,
                 peer: peer as u32,
@@ -1279,11 +2026,23 @@ fn execute_task(
             let global_e = resolve(ctx.rank)?;
             shared.backend.ffn_tile(
                 x,
-                &shared.params.experts[global_e],
+                &ctx.params.experts[global_e],
                 global_e,
                 &mut tile_out[..bm * h],
                 scratch,
             )?;
+            // Training tape: capture this block's decoded inputs (dW1's
+            // left operand) and — when the backend leaves the post-ReLU
+            // intermediate in scratch — the mid block, so the backward
+            // needs no recompute.
+            if let Some(stash) = &ctx.stash {
+                let block = ctx.block_id(peer, e_loc, tile);
+                let rows = task.rows as usize;
+                stash.x_stash.write_stripe(block, rows, h, 0, h, &x[..rows * h]);
+                if stash.has_mid {
+                    stash.mid_stash.write_stripe(block, rows, m.d, 0, m.d, &scratch[..rows * m.d]);
+                }
+            }
             // one-sided combine write-back to the originating rank —
             // crosses the NIC directly for a cross-node peer, so a
             // receive-window overflow here poisons the pass for everyone
@@ -1399,6 +2158,20 @@ fn execute_task(
                 })? as usize;
             let t = &ctx.plan.tiles[ordinal];
             anyhow::ensure!(t.tokens.len() == rows, "combine row mismatch");
+            if ctx.bwd.is_some() {
+                // Backward: these are dX tiles already scaled at the
+                // source (the reverse dispatch folded the combine weights
+                // into the payload) — stage them unscaled; the subscriber
+                // folds in plan order with unit weight.
+                ctx.combine_stage.write_stripe(ordinal, rows, h, 0, h, &y[..rows * h]);
+                ctx.counters.combine_completed.fetch_add(1, Ordering::Release);
+                return Ok(());
+            }
+            // Training tape: the gate backward needs the *unweighted*
+            // expert outputs (dc = ⟨dY, y⟩); capture them before scaling.
+            if let Some(stash) = &ctx.stash {
+                stash.y_stage.write_stripe(ordinal, rows, h, 0, h, &y[..rows * h]);
+            }
             // Scale by the combine weights into this tile's private staging
             // block. The subscriber folds blocks in plan order after the
             // processors park, so the reduction order — and the output —
@@ -1412,6 +2185,146 @@ fn execute_task(
             }
             ctx.combine_stage.write_stripe(ordinal, rows, h, 0, h, &tile_out[..rows * h]);
             ctx.counters.combine_completed.fetch_add(1, Ordering::Release);
+        }
+        TaskType::Dgrad1 => {
+            // dMid = (dY'·W2ᵀ) ⊙ relu'(mid), into the dmid stage; then
+            // fan out this tile's remaining backward: both wgrad folds
+            // and the dX producer (owner-pushed, stealable).
+            let bwd = ctx.bwd.as_ref().ok_or_else(|| anyhow!("Dgrad1 outside a backward"))?;
+            let stash = &bwd.stash;
+            let rows = task.rows as usize;
+            let block = ctx.block_id(peer, e_loc, tile);
+            let d = m.d;
+            let coord = Coord { p: peer, r: 0, b: 1, e: e_loc, c: tile * bm };
+            let dyw: &[f32] = match shared.fabric.read_borrowed(ctx.rank, coord, rows) {
+                Some(g) => g,
+                None => {
+                    shared.fabric.read_into(ctx.rank, coord, rows, xbuf);
+                    &xbuf[..rows * h]
+                }
+            };
+            let ge = resolve(ctx.rank)?;
+            let ex = &stash.params.experts[ge];
+            let mid_buf;
+            let mid: &[f32] = if stash.has_mid {
+                &stash.mid_stash.read_block(block)[..rows * d]
+            } else {
+                // Backend didn't leave mid in scratch (see
+                // `ComputeBackend::mid_in_scratch`): replay GEMM0+ReLU
+                // from the stashed inputs.
+                let x = &stash.x_stash.read_block(block)[..rows * h];
+                let mut buf = vec![0.0f32; rows * d];
+                let relu = gemm::Epilogue::Relu;
+                gemm::gemm_bias(x, &ex.w1, Some(&ex.b1), &mut buf, rows, h, d, relu);
+                mid_buf = buf;
+                &mid_buf
+            };
+            gemm::gemm_a_bt(dyw, &ex.w2, &mut scratch[..rows * d], rows, h, d);
+            for (dv, &mv) in scratch[..rows * d].iter_mut().zip(mid) {
+                if mv <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+            bwd.dmid_stage.write_stripe(block, rows, d, 0, d, &scratch[..rows * d]);
+            ctx.counters.bwd_spawned.fetch_add(3, Ordering::Relaxed);
+            let tasks = vec![
+                Task { task_type: TaskType::Wgrad1, ..*task },
+                Task { task_type: TaskType::Wgrad0, ..*task },
+                Task { task_type: TaskType::Dgrad0, ..*task },
+            ];
+            match slot {
+                Some(s) => ctx.queue.push_batch_local(s, tasks),
+                None => ctx.queue.push_batch(tasks),
+            }
+            ctx.counters.ffn_completed.fetch_add(1, Ordering::Release);
+        }
+        TaskType::Dgrad0 => {
+            // dX = dMid·W1ᵀ, shipped back to the source over the combine
+            // round's cells (the reverse-wire gather), same generation tag
+            // and poison discipline as a forward combine write-back.
+            let bwd = ctx.bwd.as_ref().ok_or_else(|| anyhow!("Dgrad0 outside a backward"))?;
+            let rows = task.rows as usize;
+            let block = ctx.block_id(peer, e_loc, tile);
+            let d = m.d;
+            let ge = resolve(ctx.rank)?;
+            let ex = &bwd.stash.params.experts[ge];
+            let dmid = &bwd.dmid_stage.read_block(block)[..rows * d];
+            gemm::gemm_a_bt(dmid, &ex.w1, &mut tile_out[..rows * h], rows, d, h);
+            let back = Coord { p: ctx.rank, r: 1, b: 1, e: e_loc, c: tile * bm };
+            if let Err(e) =
+                shared.fabric.put_signal(ctx.rank, peer, back, &tile_out[..rows * h], ctx.epoch32)
+            {
+                shared.poison(ctx.epoch32);
+                return Err(e);
+            }
+            ctx.counters.dgrad_tasks.fetch_add(1, Ordering::Relaxed);
+            ctx.counters.bwd_completed.fetch_add(1, Ordering::Release);
+        }
+        TaskType::Wgrad0 | TaskType::Wgrad1 => {
+            // Deterministic weight-gradient fold: mark this tile's fold
+            // ordinal ready, then fold every consecutive ready ordinal
+            // while holding the slot's lock — the accumulation order is
+            // (peer asc, tile asc) under any steal schedule, mirroring
+            // the forward's plan-order combine fold.
+            let bwd = ctx.bwd.as_ref().ok_or_else(|| anyhow!("Wgrad outside a backward"))?;
+            let stash = &bwd.stash;
+            let d = m.d;
+            let ordinal =
+                (bwd.ord_base[peer * shared.dims.e_local + e_loc] + task.tile) as usize;
+            let is_w1 = task.task_type == TaskType::Wgrad0;
+            let fold = if is_w1 { &bwd.fold0[e_loc] } else { &bwd.fold1[e_loc] };
+            let mut f = fold.lock().unwrap();
+            f.ready[ordinal] = true;
+            while f.next < f.ready.len() && f.ready[f.next] {
+                let src = bwd.fold_src[e_loc][f.next];
+                let rows = src.rows;
+                if is_w1 {
+                    // dW1 += xᵀ·dMid;  db1 += column-sum(dMid)
+                    let x = &stash.x_stash.read_block(src.block)[..rows * h];
+                    let dmid = &bwd.dmid_stage.read_block(src.block)[..rows * d];
+                    gemm::gemm_at_b_acc(x, dmid, &mut f.dw, rows, h, d);
+                    gemm::colsum_acc(dmid, &mut f.db, rows, d);
+                } else {
+                    // dW2 += midᵀ·dY';  db2 += column-sum(dY')
+                    let coord =
+                        Coord { p: src.peer, r: 0, b: 1, e: e_loc, c: src.tile * bm };
+                    let dyw: &[f32] =
+                        match shared.fabric.read_borrowed(ctx.rank, coord, rows) {
+                            Some(g) => g,
+                            None => {
+                                shared.fabric.read_into(ctx.rank, coord, rows, xbuf);
+                                &xbuf[..rows * h]
+                            }
+                        };
+                    let mid_buf;
+                    let mid: &[f32] = if stash.has_mid {
+                        &stash.mid_stash.read_block(src.block)[..rows * d]
+                    } else {
+                        let x = &stash.x_stash.read_block(src.block)[..rows * h];
+                        let ge = resolve(ctx.rank)?;
+                        let ex = &stash.params.experts[ge];
+                        let mut buf = vec![0.0f32; rows * d];
+                        gemm::gemm_bias(
+                            x,
+                            &ex.w1,
+                            Some(&ex.b1),
+                            &mut buf,
+                            rows,
+                            h,
+                            d,
+                            gemm::Epilogue::Relu,
+                        );
+                        mid_buf = buf;
+                        &mid_buf
+                    };
+                    gemm::gemm_at_b_acc(mid, dyw, &mut f.dw, rows, d, h);
+                    gemm::colsum_acc(dyw, &mut f.db, rows, h);
+                }
+                f.next += 1;
+            }
+            drop(f);
+            ctx.counters.wgrad_tasks.fetch_add(1, Ordering::Relaxed);
+            ctx.counters.bwd_completed.fetch_add(1, Ordering::Release);
         }
     }
     Ok(())

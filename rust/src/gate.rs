@@ -101,6 +101,29 @@ pub struct Routing {
     pub capacity: usize,
 }
 
+impl Routing {
+    /// Mean per-token Shannon entropy (nats) of the post-softmax gate
+    /// distribution `scores` — the training loop's gate-collapse signal:
+    /// `ln E` for a perfectly uniform gate, → 0 as the gate concentrates
+    /// on single experts. 0.0 when no tokens were routed. Stamped into
+    /// `RankMetrics::gate_entropy` by every forward pass.
+    pub fn entropy(&self) -> f64 {
+        if self.s == 0 {
+            return 0.0;
+        }
+        let mut total = 0.0f64;
+        for row in self.scores.chunks(self.e) {
+            for &p in row {
+                let p = p as f64;
+                if p > 0.0 {
+                    total -= p * p.ln();
+                }
+            }
+        }
+        total / self.s as f64
+    }
+}
+
 /// Row softmax with max subtraction over logits (S, E), in place.
 ///
 /// Total over arbitrary input (module-header contract): a row whose
@@ -460,6 +483,23 @@ mod tests {
             assert_eq!(r.slot as usize, i);
             assert_eq!(r.token as usize, i, "first-come tokens keep slots");
         }
+    }
+
+    #[test]
+    fn entropy_spans_uniform_to_onehot() {
+        let m = model(4, 2, 64);
+        // uniform gate: entropy is exactly ln(E) per token
+        let uniform = route_from_scores(vec![0.25f32; 2 * 4], 2, &m, 64);
+        assert!((uniform.entropy() - (4.0f64).ln()).abs() < 1e-6);
+        // one-hot gate: zero entropy (0·ln 0 terms are skipped, not NaN)
+        let onehot = route_from_scores(vec![1.0f32, 0.0, 0.0, 0.0], 1, &m, 64);
+        assert_eq!(onehot.entropy(), 0.0);
+        // skewed sits strictly between
+        let skewed = route_from_scores(vec![0.7f32, 0.1, 0.1, 0.1], 1, &m, 64);
+        assert!(skewed.entropy() > 0.0 && skewed.entropy() < (4.0f64).ln());
+        // no tokens, no entropy
+        let empty = route_from_scores(Vec::new(), 0, &m, 64);
+        assert_eq!(empty.entropy(), 0.0);
     }
 
     #[test]

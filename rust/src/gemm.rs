@@ -454,6 +454,116 @@ pub fn gemm_naive(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: us
     }
 }
 
+// ---------------------------------------------------------------------------
+// Transposed kernels for the backward pass
+// ---------------------------------------------------------------------------
+//
+// The training subsystem (`crate::train`, `rank.rs` dgrad/wgrad tasks)
+// needs two transposed products:
+//
+// * `A·Bᵀ` — dgrad: grads flow back through a row-major weight matrix
+//   without materializing its transpose (`dMid = dY·W2ᵀ`, `dX = dMid·W1ᵀ`).
+// * `Aᵀ·B` accumulated — wgrad: `dW += Xᵀ·dMid` folded over tiles.
+//
+// Both keep the same bitwise contract as the forward kernels: per output
+// element, multiply-adds happen in one fixed order (ascending k for
+// `A·Bᵀ`; ascending row for the `Aᵀ·B` fold), so results are independent
+// of processor count and steal schedule, and each blocked kernel equals
+// its naive twin exactly. Wgrad determinism additionally relies on the
+// *caller* fixing the tile fold order (see `WgradFold` in `rank.rs`).
+
+/// Lane width of the `gemm_a_bt` j-block: JB independent scalar
+/// accumulators share one pass over A's row, each still summing its own
+/// element in ascending-k order (locality without reassociation).
+const JB: usize = 8;
+
+/// C(m, n) = A(m, k) · B(n, k)ᵀ, row-major, C overwritten. Note B is
+/// (n, k): its *rows* are the dot-product operands, so both operands of
+/// every dot are contiguous and no transpose copy is ever made.
+pub fn gemm_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let mut j = 0;
+        while j < n {
+            let jb = JB.min(n - j);
+            let mut acc = [0.0f32; JB];
+            for (p, &av) in arow.iter().enumerate() {
+                for (x, accx) in acc.iter_mut().enumerate().take(jb) {
+                    *accx += av * b[(j + x) * k + p];
+                }
+            }
+            c[i * n + j..i * n + j + jb].copy_from_slice(&acc[..jb]);
+            j += jb;
+        }
+    }
+}
+
+/// Naive twin of [`gemm_a_bt`]; identical per-element ascending-k order,
+/// so the pair must agree bitwise (asserted by the test suite).
+pub fn gemm_a_bt_naive(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += a[i * k + p] * b[j * k + p];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// C(ka, nb) += A(m, ka)ᵀ · B(m, nb), row-major, streamed row-ascending:
+/// row r of A and B contributes before row r+1, for every output element.
+/// This is the wgrad fold primitive — because the accumulation order per
+/// element is fixed (ascending r, on top of the incoming C), folding a
+/// tile sequence in a fixed order yields bitwise-identical gradients
+/// regardless of which processor ran which tile.
+pub fn gemm_at_b_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, ka: usize, nb: usize) {
+    debug_assert_eq!(a.len(), m * ka);
+    debug_assert_eq!(b.len(), m * nb);
+    debug_assert_eq!(c.len(), ka * nb);
+    for r in 0..m {
+        let brow = &b[r * nb..(r + 1) * nb];
+        for i in 0..ka {
+            let av = a[r * ka + i];
+            let crow = &mut c[i * nb..(i + 1) * nb];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// Naive twin of [`gemm_at_b_acc`]: same ascending-r per-element order,
+/// accumulated in a register instead of memory (bitwise-equal either way).
+pub fn gemm_at_b_acc_naive(a: &[f32], b: &[f32], c: &mut [f32], m: usize, ka: usize, nb: usize) {
+    for i in 0..ka {
+        for j in 0..nb {
+            let mut acc = c[i * nb + j];
+            for r in 0..m {
+                acc += a[r * ka + i] * b[r * nb + j];
+            }
+            c[i * nb + j] = acc;
+        }
+    }
+}
+
+/// acc(n) += column sums of X(rows, n), row-ascending — the bias-gradient
+/// fold (db += Σ_r dY[r, :]), same fixed-order contract as the wgrad fold.
+pub fn colsum_acc(x: &[f32], acc: &mut [f32], rows: usize, n: usize) {
+    debug_assert_eq!(x.len(), rows * n);
+    debug_assert_eq!(acc.len(), n);
+    for r in 0..rows {
+        let xrow = &x[r * n..(r + 1) * n];
+        for (av, &v) in acc.iter_mut().zip(xrow) {
+            *av += v;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -660,5 +770,92 @@ mod tests {
         let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
         combine_accumulate(&mut out, &x, &[2.0, 0.0], 2, 3);
         assert_eq!(out, vec![3.0, 5.0, 7.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn a_bt_matches_naive_bitwise_over_shapes() {
+        // the blocked A·Bᵀ must replay the naive per-element ascending-k
+        // order exactly (JB lanes are independent accumulators)
+        let mut rng = Rng::new(8);
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 5, 7),     // everything sub-lane
+            (8, 16, 16),   // exact lane multiples
+            (17, 33, 9),   // m- and n-edges
+            (65, 300, 31), // k crosses a KC chunk boundary
+            (128, 64, 96),
+        ] {
+            let a = rand_mat(&mut rng, m * k);
+            let b = rand_mat(&mut rng, n * k); // B is (n, k)
+            let mut want = vec![0.0; m * n];
+            gemm_a_bt_naive(&a, &b, &mut want, m, k, n);
+            // poison C: the kernel must fully overwrite it
+            let mut got = vec![f32::NAN; m * n];
+            gemm_a_bt(&a, &b, &mut got, m, k, n);
+            assert_eq!(got, want, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn a_bt_is_the_transpose_of_forward_gemm() {
+        // A·Bᵀ with B (n, k) must equal A·(Bᵀ) materialized through the
+        // forward kernel (to tolerance — the reduction orders differ)
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (13, 40, 27);
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, n * k);
+        let mut bt = vec![0.0; k * n];
+        for r in 0..n {
+            for p in 0..k {
+                bt[p * n + r] = b[r * k + p];
+            }
+        }
+        let mut want = vec![0.0; m * n];
+        gemm_naive(&a, &bt, &mut want, m, k, n);
+        let mut got = vec![f32::NAN; m * n];
+        gemm_a_bt(&a, &b, &mut got, m, k, n);
+        assert!(max_abs_diff(&got, &want) < 1e-3);
+    }
+
+    #[test]
+    fn at_b_acc_matches_naive_bitwise_and_accumulates() {
+        let mut rng = Rng::new(10);
+        for &(m, ka, nb) in &[(1, 1, 1), (3, 5, 7), (8, 16, 16), (17, 33, 9), (65, 30, 31)] {
+            let a = rand_mat(&mut rng, m * ka);
+            let b = rand_mat(&mut rng, m * nb);
+            let init = rand_mat(&mut rng, ka * nb); // += on top of prior grads
+            let mut want = init.clone();
+            gemm_at_b_acc_naive(&a, &b, &mut want, m, ka, nb);
+            let mut got = init.clone();
+            gemm_at_b_acc(&a, &b, &mut got, m, ka, nb);
+            assert_eq!(got, want, "({m},{ka},{nb})");
+        }
+    }
+
+    #[test]
+    fn at_b_acc_is_the_transposed_product() {
+        let mut rng = Rng::new(11);
+        let (m, ka, nb) = (19, 12, 23);
+        let a = rand_mat(&mut rng, m * ka);
+        let b = rand_mat(&mut rng, m * nb);
+        let mut at = vec![0.0; ka * m];
+        for r in 0..m {
+            for i in 0..ka {
+                at[i * m + r] = a[r * ka + i];
+            }
+        }
+        let mut want = vec![0.0; ka * nb];
+        gemm_naive(&at, &b, &mut want, ka, m, nb);
+        let mut got = vec![0.0; ka * nb];
+        gemm_at_b_acc(&a, &b, &mut got, m, ka, nb);
+        assert!(max_abs_diff(&got, &want) < 1e-3);
+    }
+
+    #[test]
+    fn colsum_accumulates_row_ascending() {
+        let x = vec![1.0, 2.0, 3.0, 10.0, 20.0, 30.0];
+        let mut acc = vec![0.5f32; 3];
+        colsum_acc(&x, &mut acc, 2, 3);
+        assert_eq!(acc, vec![11.5, 22.5, 33.5]);
     }
 }

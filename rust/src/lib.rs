@@ -323,6 +323,61 @@
 //! # }
 //! ```
 //!
+//! ## Training — backward through the same engine
+//!
+//! The persistent engine is **differentiable** (ROADMAP item 3): with
+//! `cfg.set("train", "on")`, every forward pass stashes its routing
+//! decisions, gate probabilities and per-tile activations inside the
+//! rank actors (the last few epochs; `coordinator::rank::STASH_CAP`),
+//! and [`coordinator::MoeEngine::backward`] can then be issued for any
+//! stashed forward **like any other pass**: output-gradients scatter to
+//! the expert owners over the same one-sided wire (at the configured
+//! [`config::WirePrecision`] — a 16-bit wire halves reverse bytes too),
+//! `Dgrad`/`Wgrad` tile tasks run through the same work-stealing
+//! scheduler, and input-gradients gather back through the combine cells,
+//! with the epoch/flag/poison/retry machinery riding along unchanged.
+//! Gradient folds happen in fixed plan order, so **wgrad is bitwise
+//! deterministic** across restarts, processor counts and steal schedules
+//! (asserted by `rust/tests/train.rs`); correctness is anchored to
+//! `util::check::dense_reference_moe_grad` (1e-4 on an f32 wire) plus a
+//! finite-difference suite across Capacity/Dropless × flat/hierarchical.
+//!
+//! The [`train`] module supplies the loop around it: [`train::GradStore`]
+//! accumulation, [`train::Optimizer`] (SGD/momentum/Adam), and
+//! [`train::Trainer`] — forward → backward → accumulate
+//! (`grad_accum_steps`) → step → [`coordinator::MoeEngine::update_params`]
+//! (an epoch-fenced weight swap; packed panels and XLA literals are
+//! re-prepared). Knobs: `train`, `optimizer`, `lr`, `grad_accum_steps`,
+//! `stash_activations` (see [`config::TrainConfig`]).
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use flashdmoe::config::Config;
+//! use flashdmoe::coordinator::{MoeEngine, TaskGraphMode};
+//! use flashdmoe::expert::{generate_tokens, ModelParams};
+//! use flashdmoe::runtime::{ComputeBackend, NativeBackend};
+//! use flashdmoe::train::{Optimizer, Trainer};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut cfg = Config::preset("tiny")?;
+//! cfg.set("train", "on")?;
+//! let params = Arc::new(ModelParams::generate(&cfg, 42));
+//! let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+//! let engine = MoeEngine::start(cfg.clone(), params, backend, TaskGraphMode::Fused)?;
+//! let mut trainer = Trainer::new(engine, Optimizer::adam(1e-3))?;
+//! let inputs: Vec<Vec<f32>> =
+//!     (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, 42, r)).collect();
+//! let targets = inputs.clone(); // toy regression: reproduce the input
+//! for step in 0..4 {
+//!     let report = trainer.train_step(&inputs, &targets)?;
+//!     println!("step {step}: loss {:.6} applied={}", report.loss, report.applied);
+//! }
+//! let trained = trainer.finish(); // shut down, keep the weights
+//! # let _ = trained;
+//! # Ok(())
+//! # }
+//! ```
+//!
 //! The multi-GPU fabric is simulated in-process (ranks = threads,
 //! NVSHMEM `putmem_signal` = memcpy + release-store flag) and the paper's
 //! evaluation figures are regenerated by a calibrated discrete-event
@@ -350,6 +405,7 @@ pub mod fault;
 pub mod transport;
 pub mod runtime;
 pub mod coordinator;
+pub mod train;
 pub mod sim;
 pub mod workload;
 pub mod harness;

@@ -235,12 +235,32 @@ pub trait ComputeBackend: Send + Sync {
         Ok(())
     }
 
+    /// Re-run weight preparation against **updated** parameters (a
+    /// training optimizer step installing new weights via
+    /// `MoeEngine::update_params`). Backends with derived weight state
+    /// must invalidate it first — stale packed panels would silently
+    /// serve the old weights. Default: delegate to
+    /// [`prepare`](Self::prepare) (correct for stateless backends).
+    fn refresh(&self, params: &ModelParams) -> Result<()> {
+        self.prepare(params)
+    }
+
     /// True when this backend serves split-mode column tiles from its own
     /// packed weight cache (filled by [`prepare`](Self::prepare)), making
     /// caller-side `w1c`/`w2c` column copies dead weight — callers may
     /// then pass empty weight slices (bias slices are still consumed).
     /// Default: false.
     fn packed_split_tiles(&self) -> bool {
+        false
+    }
+
+    /// True when [`ffn_tile`](Self::ffn_tile) leaves the post-activation
+    /// hidden tile `relu(x·W1 + b1)` in `scratch[..rows*d]` on return.
+    /// The training stash reads it straight out of scratch to avoid a
+    /// recompute per backward tile; backends that answer `false` make
+    /// the backward recompute the hidden tile from the stashed inputs
+    /// instead. Default: false (the conservative answer).
+    fn mid_in_scratch(&self) -> bool {
         false
     }
 
@@ -403,8 +423,26 @@ impl ComputeBackend for NativeBackend {
         Ok(())
     }
 
+    /// Drop every packed panel, then re-pack from the new weights. The
+    /// pack counter keeps counting (each refresh re-packs every expert) —
+    /// the "flat after prepare" audit only applies between weight swaps.
+    fn refresh(&self, params: &ModelParams) -> Result<()> {
+        {
+            let mut cache = self.cache.write().unwrap();
+            let len = cache.len();
+            *cache = vec![None; len.max(params.experts.len())];
+        }
+        self.prepare(params)
+    }
+
     fn packed_split_tiles(&self) -> bool {
         self.packed_cols_ok()
+    }
+
+    /// `gemm::ffn`/`ffn_packed` both compute the hidden tile into
+    /// `scratch[..rows*d]` and leave it there — the stash contract.
+    fn mid_in_scratch(&self) -> bool {
+        true
     }
 
     fn gate_scores(&self, a: &[f32], wg: &[f32], s: usize) -> Result<Vec<f32>> {
@@ -558,6 +596,13 @@ impl ComputeBackend for XlaBackend {
     /// Pre-upload every expert's weight literals (the XLA analog of
     /// packing): steady-state passes then only copy activations.
     fn prepare(&self, params: &ModelParams) -> Result<()> {
+        self.warm_weights(params)
+    }
+
+    /// Invalidate the uploaded weight literals before re-uploading —
+    /// stale literals would keep serving the pre-update weights.
+    fn refresh(&self, params: &ModelParams) -> Result<()> {
+        self.weight_cache.lock().unwrap().clear();
         self.warm_weights(params)
     }
 

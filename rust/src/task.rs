@@ -23,6 +23,17 @@ pub enum TaskType {
     Gemm1,
     FusedFfn,
     Combine,
+    /// Backward: dX tile = (dMid ⊙ relu')·W1ᵀ — gradient w.r.t. the
+    /// dispatched input rows, shipped back to the source peer.
+    Dgrad0,
+    /// Backward: dMid tile = dY·W2ᵀ ⊙ relu'(mid) — consumes the incoming
+    /// output-grad tile and the stashed forward activations.
+    Dgrad1,
+    /// Backward: dW1 += xᵀ·dMid, db1 += Σ dMid — folded per expert in
+    /// plan order (bitwise-deterministic accumulation).
+    Wgrad0,
+    /// Backward: dW2 += midᵀ·dY, db2 += Σ dY — same deterministic fold.
+    Wgrad1,
 }
 
 /// A tile-granular task descriptor (paper Fig 16, minus raw pointers: the
@@ -68,6 +79,13 @@ impl Task {
             TaskType::Gemm1 => 2.0 * rows * d as f64 * bn as f64,
             TaskType::FusedFfn => 2.0 * rows * h as f64 * d as f64 * 2.0,
             TaskType::Combine => 2.0 * rows * h as f64,
+            // Each backward tile task is one full (rows, h)×(h, d)-shaped
+            // GEMM (dgrad: against Wᵀ; wgrad: the Aᵀ·B fold), so the four
+            // together cost 8·rows·h·d — exactly 2× the fused forward
+            // tile, matching the classic fwd:bwd = 1:2 FLOP ratio.
+            TaskType::Dgrad0 | TaskType::Dgrad1 | TaskType::Wgrad0 | TaskType::Wgrad1 => {
+                2.0 * rows * h as f64 * d as f64
+            }
         }
     }
 }
@@ -181,6 +199,14 @@ mod tests {
         // fused == sum over all column tiles of split tasks
         let split_total = g0 * (d / bn) as f64 + g1 * (h / bn) as f64;
         assert_eq!(fused, split_total);
+        // backward: the four dgrad/wgrad tile tasks together cost exactly
+        // 2x the fused forward tile (fwd:bwd = 1:2 in MACs)
+        let bwd: f64 = [TaskType::Dgrad0, TaskType::Dgrad1, TaskType::Wgrad0, TaskType::Wgrad1]
+            .iter()
+            .map(|&ty| t(ty).flops(h, d, bm, bn))
+            .sum();
+        assert_eq!(bwd, 2.0 * fused, "dgrad+wgrad = 2x forward");
+        assert!(t(TaskType::Dgrad1).flops(h, d, bm, bn) > g0 + g1, "one bwd task spans all of D");
     }
 
     #[test]
@@ -200,7 +226,15 @@ mod tests {
         let full = mk(128).flops(h, d, bm, bn);
         let tail = mk(1).flops(h, d, bm, bn);
         assert_eq!(tail * 128.0, full, "cost is linear in valid rows");
-        for ty in [TaskType::Gemm0, TaskType::Gemm1, TaskType::Combine] {
+        for ty in [
+            TaskType::Gemm0,
+            TaskType::Gemm1,
+            TaskType::Combine,
+            TaskType::Dgrad0,
+            TaskType::Dgrad1,
+            TaskType::Wgrad0,
+            TaskType::Wgrad1,
+        ] {
             let t32 = Task { task_type: ty, ..mk(32) }.flops(h, d, bm, bn);
             let t128 = Task { task_type: ty, ..mk(128) }.flops(h, d, bm, bn);
             assert_eq!(t32 * 4.0, t128, "{ty:?} cost tracks rows");

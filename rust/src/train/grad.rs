@@ -1,0 +1,174 @@
+//! Gradient containers: per-expert and whole-model gradient stores with
+//! a fixed, documented tensor order so every fold over them (engine
+//! merge, accumulation across micro-batches, optimizer state updates)
+//! is deterministic by construction.
+
+use crate::expert::{ExpertParams, ModelParams};
+
+/// Gradients of one expert's FFN parameters; shapes mirror
+/// [`ExpertParams`] exactly (`w1`: (H, D) row-major, `b1`: (D,),
+/// `w2`: (D, H) row-major, `b2`: (H,)).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExpertGrad {
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+impl ExpertGrad {
+    pub fn zeros(h: usize, d: usize) -> Self {
+        Self { w1: vec![0.0; h * d], b1: vec![0.0; d], w2: vec![0.0; d * h], b2: vec![0.0; h] }
+    }
+
+    /// self += other, element-wise, in field order (w1, b1, w2, b2).
+    pub fn add_assign(&mut self, other: &ExpertGrad) {
+        add_into(&mut self.w1, &other.w1);
+        add_into(&mut self.b1, &other.b1);
+        add_into(&mut self.w2, &other.w2);
+        add_into(&mut self.b2, &other.b2);
+    }
+}
+
+fn add_into(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// Gradients of the whole MoE layer: the gate matrix plus every expert.
+/// Tensor traversal order is fixed — `wg` first, then experts ascending
+/// by global id, each in (w1, b1, w2, b2) field order — and shared by
+/// [`GradStore::tensors`], [`ModelParams`]' traversal in the optimizer,
+/// and the engine's per-rank merge, so parameter/gradient/optimizer-state
+/// triples always line up and accumulate in one deterministic order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GradStore {
+    /// d/dWg, (H, E) row-major — mirrors `ModelParams::wg`.
+    pub wg: Vec<f32>,
+    /// Per-global-expert FFN gradients, index == global expert id.
+    pub experts: Vec<ExpertGrad>,
+    pub h: usize,
+    pub d: usize,
+}
+
+impl GradStore {
+    pub fn zeros(h: usize, d: usize, e: usize) -> Self {
+        let experts = (0..e).map(|_| ExpertGrad::zeros(h, d)).collect();
+        Self { wg: vec![0.0; h * e], experts, h, d }
+    }
+
+    pub fn zeros_like(params: &ModelParams) -> Self {
+        Self::zeros(params.h, params.d, params.experts.len())
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.experts.len()
+    }
+
+    /// self += other (shapes must match), in the fixed tensor order.
+    pub fn add_assign(&mut self, other: &GradStore) {
+        debug_assert_eq!(self.experts.len(), other.experts.len());
+        add_into(&mut self.wg, &other.wg);
+        for (g, o) in self.experts.iter_mut().zip(&other.experts) {
+            g.add_assign(o);
+        }
+    }
+
+    /// Scale every gradient by `s` (e.g. 1/accum_steps averaging).
+    pub fn scale(&mut self, s: f32) {
+        for t in self.tensors_mut() {
+            for v in t.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+
+    /// Reset to zero in place (between accumulation windows).
+    pub fn zero(&mut self) {
+        for t in self.tensors_mut() {
+            t.fill(0.0);
+        }
+    }
+
+    /// Sum of squared elements (grad-norm diagnostics in the train loop).
+    pub fn sq_norm(&self) -> f64 {
+        self.tensors().iter().flat_map(|t| t.iter()).map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// All tensors in the fixed traversal order (see the type docs).
+    pub fn tensors(&self) -> Vec<&[f32]> {
+        let mut out: Vec<&[f32]> = vec![&self.wg];
+        for g in &self.experts {
+            out.push(&g.w1);
+            out.push(&g.b1);
+            out.push(&g.w2);
+            out.push(&g.b2);
+        }
+        out
+    }
+
+    /// Mutable counterpart of [`tensors`](Self::tensors), same order.
+    pub fn tensors_mut(&mut self) -> Vec<&mut Vec<f32>> {
+        let mut out: Vec<&mut Vec<f32>> = vec![&mut self.wg];
+        for g in &mut self.experts {
+            out.push(&mut g.w1);
+            out.push(&mut g.b1);
+            out.push(&mut g.w2);
+            out.push(&mut g.b2);
+        }
+        out
+    }
+}
+
+/// [`ModelParams`] tensors in the *same* traversal order as
+/// [`GradStore::tensors`] — the zip the optimizer steps over.
+pub fn param_tensors_mut(params: &mut ModelParams) -> Vec<&mut Vec<f32>> {
+    let mut out: Vec<&mut Vec<f32>> = vec![&mut params.wg];
+    for ex in &mut params.experts {
+        let ExpertParams { w1, b1, w2, b2 } = ex;
+        out.push(w1);
+        out.push(b1);
+        out.push(w2);
+        out.push(b2);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traversal_orders_line_up() {
+        let cfg = crate::config::Config::preset("tiny").unwrap();
+        let mut params = ModelParams::generate(&cfg, 1);
+        let g = GradStore::zeros_like(&params);
+        let gt = g.tensors();
+        let pt = param_tensors_mut(&mut params);
+        assert_eq!(gt.len(), pt.len());
+        assert_eq!(gt.len(), 1 + 4 * cfg.model.e);
+        for (a, b) in gt.iter().zip(&pt) {
+            assert_eq!(a.len(), b.len(), "shape mismatch in traversal");
+        }
+    }
+
+    #[test]
+    fn add_scale_zero_roundtrip() {
+        let mut a = GradStore::zeros(2, 3, 2);
+        let mut b = GradStore::zeros(2, 3, 2);
+        a.wg[0] = 1.0;
+        a.experts[1].b2[1] = 4.0;
+        b.wg[0] = 2.0;
+        b.experts[1].b2[1] = 0.5;
+        a.add_assign(&b);
+        assert_eq!(a.wg[0], 3.0);
+        assert_eq!(a.experts[1].b2[1], 4.5);
+        a.scale(2.0);
+        assert_eq!(a.wg[0], 6.0);
+        assert!(a.sq_norm() > 0.0);
+        a.zero();
+        assert_eq!(a.sq_norm(), 0.0);
+    }
+}

@@ -1,0 +1,211 @@
+//! Training subsystem: run the MoE backward pass through the *same*
+//! persistent engine that serves forwards, and step the parameters.
+//!
+//! The pieces:
+//!
+//! * the engine-side autograd tape — forward passes with
+//!   `cfg.system.train` enabled stash routing indices, gate
+//!   probabilities and per-tile activations inside the rank actors
+//!   (see `coordinator/rank.rs`), so a backward can be issued for any
+//!   recent forward epoch like any other pass:
+//!   [`MoeEngine::backward`](crate::coordinator::MoeEngine::backward)
+//!   scatters output-grads to expert owners over the same wire (at the
+//!   configured `WirePrecision`), runs `Dgrad/Wgrad` tile tasks through
+//!   the same work-stealing scheduler, and gathers input-grads back;
+//! * [`GradStore`] / [`ExpertGrad`] — gradient containers with a fixed
+//!   tensor traversal order (deterministic folds everywhere);
+//! * [`Optimizer`] — SGD (plain/momentum) and Adam over that traversal;
+//! * [`Trainer`] — owns the engine + a master parameter copy, folds
+//!   per-micro-batch gradients across `grad_accum_steps`, steps the
+//!   optimizer, and installs updated weights at an epoch-fenced quiet
+//!   point (`MoeEngine::update_params`).
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use flashdmoe::config::Config;
+//! use flashdmoe::coordinator::{MoeEngine, TaskGraphMode};
+//! use flashdmoe::expert::ModelParams;
+//! use flashdmoe::runtime::{ComputeBackend, NativeBackend};
+//! use flashdmoe::train::{Optimizer, Trainer};
+//!
+//! let mut cfg = Config::preset("tiny").unwrap();
+//! cfg.set("train", "on").unwrap();
+//! let params = Arc::new(ModelParams::generate(&cfg, 42));
+//! let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+//! let engine = MoeEngine::start(cfg.clone(), params, backend, TaskGraphMode::Fused).unwrap();
+//! let mut trainer = Trainer::new(engine, Optimizer::adam(1e-3)).unwrap();
+//! // inputs/targets: one (s_rank*h) row-major buffer per rank
+//! # let (inputs, targets): (Vec<Vec<f32>>, Vec<Vec<f32>>) = (vec![], vec![]);
+//! let report = trainer.train_step(&inputs, &targets).unwrap();
+//! println!("loss {:.6} applied={}", report.loss, report.applied);
+//! ```
+
+pub mod grad;
+pub mod optim;
+
+pub use grad::{param_tensors_mut, ExpertGrad, GradStore};
+pub use optim::Optimizer;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::{BackwardResult, MoeEngine, PassInput, PassMetrics};
+use crate::expert::ModelParams;
+
+/// The caller-side record of one stashed forward pass: enough to issue
+/// its backward ([`Trainer::backward`]) and to compute a loss against
+/// its outputs. The activation stash itself lives inside the rank
+/// actors, keyed by this epoch.
+pub struct MoeTape {
+    /// Engine epoch of the forward pass (the backward's stash key).
+    pub epoch: u64,
+    /// Per-rank (rows, H) row-major outputs of the forward.
+    pub outputs: Vec<Vec<f32>>,
+    pub metrics: PassMetrics,
+}
+
+/// One `train_step` outcome.
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    /// Mean-squared-error loss of this micro-batch.
+    pub loss: f64,
+    /// Whether this step crossed the accumulation window and applied an
+    /// optimizer update (params installed into the engine).
+    pub applied: bool,
+    /// Squared L2 norm of this micro-batch's gradients (diagnostics).
+    pub grad_sq_norm: f64,
+    /// Forward epoch of the micro-batch.
+    pub epoch: u64,
+}
+
+/// Owns a training engine plus the master parameter copy, and drives
+/// forward → backward → (accumulate) → optimizer step → install.
+pub struct Trainer {
+    engine: MoeEngine,
+    opt: Optimizer,
+    /// Master f32 parameters; the engine holds an immutable snapshot
+    /// that `update_params` swaps at a quiet point after each update.
+    params: ModelParams,
+    accum: GradStore,
+    /// Micro-batches folded into `accum` since the last apply.
+    pending: usize,
+    accum_target: usize,
+    /// Optimizer updates applied so far.
+    pub updates: u64,
+}
+
+impl Trainer {
+    /// Wrap a started engine. The engine must have been started with
+    /// training enabled (`cfg.system.train.enabled` — knob `train=on`),
+    /// which turns on the per-pass activation stash.
+    pub fn new(engine: MoeEngine, opt: Optimizer) -> Result<Self> {
+        let tc = &engine.config().system.train;
+        ensure!(
+            tc.stash(),
+            "Trainer requires activation stashing: start the engine with train=on \
+             (or stash_activations=on)"
+        );
+        let accum_target = tc.grad_accum_steps.max(1);
+        let params = engine.params().as_ref().clone();
+        let accum = GradStore::zeros_like(&params);
+        Ok(Self { engine, opt, params, accum, pending: 0, accum_target, updates: 0 })
+    }
+
+    pub fn engine(&self) -> &MoeEngine {
+        &self.engine
+    }
+
+    pub fn params(&self) -> &ModelParams {
+        &self.params
+    }
+
+    pub fn optimizer(&self) -> &Optimizer {
+        &self.opt
+    }
+
+    /// Shut the engine down, returning the trained parameters.
+    pub fn finish(self) -> ModelParams {
+        self.engine.shutdown();
+        self.params
+    }
+
+    /// Run one stashed forward pass (per-rank (rows, H) inputs).
+    pub fn forward(&self, inputs: &[Vec<f32>]) -> Result<MoeTape> {
+        let fr = self
+            .engine
+            .submit_pass(PassInput::new(inputs.to_vec()))?
+            .wait()
+            .context("training forward pass")?;
+        Ok(MoeTape { epoch: fr.metrics.epoch, outputs: fr.outputs, metrics: fr.metrics })
+    }
+
+    /// Issue the backward for a stashed forward, fold its parameter
+    /// gradients into the accumulation window, and — once
+    /// `grad_accum_steps` micro-batches are in — apply the optimizer
+    /// and install the updated weights. Returns the raw backward result
+    /// (input grads + this micro-batch's parameter grads) plus whether
+    /// an update was applied.
+    pub fn backward(
+        &mut self,
+        tape: &MoeTape,
+        grad_out: &[Vec<f32>],
+    ) -> Result<(BackwardResult, bool)> {
+        let bwd = self.engine.backward(tape.epoch, grad_out)?;
+        self.accum.add_assign(&bwd.grads);
+        self.pending += 1;
+        let applied = if self.pending >= self.accum_target {
+            self.apply_update()?;
+            true
+        } else {
+            false
+        };
+        Ok((bwd, applied))
+    }
+
+    /// Force the optimizer step on whatever is accumulated (end of an
+    /// epoch with a ragged final window). No-op when nothing is pending.
+    pub fn apply_update(&mut self) -> Result<()> {
+        if self.pending == 0 {
+            return Ok(());
+        }
+        // average over the window so lr is per-micro-batch-scale-free
+        self.accum.scale(1.0 / self.pending as f32);
+        self.opt.step(&mut self.params, &self.accum);
+        self.engine
+            .update_params(self.params.clone())
+            .context("installing updated parameters")?;
+        self.accum.zero();
+        self.pending = 0;
+        self.updates += 1;
+        Ok(())
+    }
+
+    /// Convenience: one MSE regression micro-batch. `targets` mirror the
+    /// per-rank shape of `inputs`' outputs; loss is the element-mean of
+    /// (out − target)², dLoss/dout = 2(out − target)/N.
+    pub fn train_step(&mut self, inputs: &[Vec<f32>], targets: &[Vec<f32>]) -> Result<StepReport> {
+        let tape = self.forward(inputs)?;
+        ensure!(
+            targets.len() == tape.outputs.len(),
+            "targets cover {} ranks, outputs {}",
+            targets.len(),
+            tape.outputs.len()
+        );
+        let n_total: usize = tape.outputs.iter().map(|o| o.len()).sum();
+        ensure!(n_total > 0, "empty training batch");
+        let mut loss = 0.0f64;
+        let mut dy = Vec::with_capacity(tape.outputs.len());
+        for (o, t) in tape.outputs.iter().zip(targets) {
+            ensure!(o.len() == t.len(), "target shape mismatch");
+            let mut g = vec![0.0f32; o.len()];
+            for ((gv, &ov), &tv) in g.iter_mut().zip(o).zip(t) {
+                let diff = ov - tv;
+                loss += (diff as f64) * (diff as f64);
+                *gv = 2.0 * diff / n_total as f32;
+            }
+            dy.push(g);
+        }
+        loss /= n_total as f64;
+        let (bwd, applied) = self.backward(&tape, &dy)?;
+        Ok(StepReport { loss, applied, grad_sq_norm: bwd.grads.sq_norm(), epoch: tape.epoch })
+    }
+}

@@ -1,0 +1,171 @@
+//! Optimizers over [`ModelParams`]: plain/momentum SGD and Adam, both
+//! stepping the fixed tensor traversal shared with [`GradStore`] so the
+//! update order (and therefore every parameter bit) is deterministic.
+
+use crate::expert::ModelParams;
+
+use super::grad::{param_tensors_mut, GradStore};
+
+/// First-order optimizer. State tensors (`vel`, `m`, `v`) are lazily
+/// allocated [`GradStore`]s on the first step, so constructing an
+/// optimizer is free and shape-agnostic.
+#[derive(Clone, Debug)]
+pub enum Optimizer {
+    Sgd {
+        lr: f32,
+        /// 0.0 = plain SGD; otherwise classical momentum.
+        momentum: f32,
+        vel: Option<GradStore>,
+    },
+    Adam {
+        lr: f32,
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        /// Step count for bias correction (increments per `step`).
+        t: u64,
+        m: Option<GradStore>,
+        v: Option<GradStore>,
+    },
+}
+
+impl Optimizer {
+    pub fn sgd(lr: f32) -> Self {
+        Optimizer::Sgd { lr, momentum: 0.0, vel: None }
+    }
+
+    pub fn sgd_momentum(lr: f32, momentum: f32) -> Self {
+        Optimizer::Sgd { lr, momentum, vel: None }
+    }
+
+    /// Adam with the conventional defaults (β1=0.9, β2=0.999, ε=1e-8).
+    pub fn adam(lr: f32) -> Self {
+        Optimizer::Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: None, v: None }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Optimizer::Sgd { .. } => "sgd",
+            Optimizer::Adam { .. } => "adam",
+        }
+    }
+
+    pub fn lr(&self) -> f32 {
+        match self {
+            Optimizer::Sgd { lr, .. } | Optimizer::Adam { lr, .. } => *lr,
+        }
+    }
+
+    /// Apply one update: `params -= f(grads)`. Panics (debug) on shape
+    /// mismatch; tensors are zipped in the shared traversal order.
+    pub fn step(&mut self, params: &mut ModelParams, grads: &GradStore) {
+        match self {
+            Optimizer::Sgd { lr, momentum, vel } => {
+                let lr = *lr;
+                let mu = *momentum;
+                if mu == 0.0 {
+                    for (p, g) in param_tensors_mut(params).into_iter().zip(grads.tensors()) {
+                        for (pv, &gv) in p.iter_mut().zip(g) {
+                            *pv -= lr * gv;
+                        }
+                    }
+                } else {
+                    let vel = vel.get_or_insert_with(|| GradStore::zeros_like(params));
+                    for ((p, g), v) in param_tensors_mut(params)
+                        .into_iter()
+                        .zip(grads.tensors())
+                        .zip(vel.tensors_mut())
+                    {
+                        for ((pv, &gv), vv) in p.iter_mut().zip(g).zip(v.iter_mut()) {
+                            *vv = mu * *vv + gv;
+                            *pv -= lr * *vv;
+                        }
+                    }
+                }
+            }
+            Optimizer::Adam { lr, beta1, beta2, eps, t, m, v } => {
+                let (lr, b1, b2, eps) = (*lr, *beta1, *beta2, *eps);
+                *t += 1;
+                let bc1 = 1.0 - b1.powi(*t as i32);
+                let bc2 = 1.0 - b2.powi(*t as i32);
+                let m = m.get_or_insert_with(|| GradStore::zeros_like(params));
+                let v = v.get_or_insert_with(|| GradStore::zeros_like(params));
+                for (((p, g), mt), vt) in param_tensors_mut(params)
+                    .into_iter()
+                    .zip(grads.tensors())
+                    .zip(m.tensors_mut())
+                    .zip(v.tensors_mut())
+                {
+                    for (((pv, &gv), mv), vv) in
+                        p.iter_mut().zip(g).zip(mt.iter_mut()).zip(vt.iter_mut())
+                    {
+                        *mv = b1 * *mv + (1.0 - b1) * gv;
+                        *vv = b2 * *vv + (1.0 - b2) * gv * gv;
+                        let mhat = *mv / bc1;
+                        let vhat = *vv / bc2;
+                        *pv -= lr * mhat / (vhat.sqrt() + eps);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_params() -> ModelParams {
+        let cfg = crate::config::Config::preset("tiny").unwrap();
+        ModelParams::generate(&cfg, 7)
+    }
+
+    #[test]
+    fn sgd_moves_against_the_gradient() {
+        let mut params = tiny_params();
+        let before = params.wg[0];
+        let mut g = GradStore::zeros_like(&params);
+        g.wg[0] = 2.0;
+        let mut opt = Optimizer::sgd(0.5);
+        opt.step(&mut params, &g);
+        assert_eq!(params.wg[0], before - 1.0);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut params = tiny_params();
+        let before = params.experts[0].b1[0];
+        let mut g = GradStore::zeros_like(&params);
+        g.experts[0].b1[0] = 1.0;
+        let mut opt = Optimizer::sgd_momentum(0.1, 0.9);
+        opt.step(&mut params, &g); // v=1.0, p -= 0.1
+        opt.step(&mut params, &g); // v=1.9, p -= 0.19
+        let moved = before - params.experts[0].b1[0];
+        assert!((moved - 0.29).abs() < 1e-6, "momentum compounding, moved {moved}");
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // with bias correction, step 1 moves ~lr·sign(g) regardless of |g|
+        let mut params = tiny_params();
+        let before = params.experts[1].b2[3];
+        let mut g = GradStore::zeros_like(&params);
+        g.experts[1].b2[3] = 1e-3;
+        let mut opt = Optimizer::adam(0.01);
+        opt.step(&mut params, &g);
+        let moved = before - params.experts[1].b2[3];
+        assert!((moved - 0.01).abs() < 1e-4, "bias-corrected first step, moved {moved}");
+        assert_eq!(opt.name(), "adam");
+        assert_eq!(opt.lr(), 0.01);
+    }
+
+    #[test]
+    fn zero_grad_is_a_noop_for_sgd() {
+        let mut params = tiny_params();
+        let snapshot = params.wg.clone();
+        let g = GradStore::zeros_like(&params);
+        let mut opt = Optimizer::sgd(1.0);
+        opt.step(&mut params, &g);
+        assert_eq!(params.wg, snapshot);
+    }
+}

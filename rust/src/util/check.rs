@@ -13,6 +13,7 @@
 
 use crate::config::Config;
 use crate::expert::ModelParams;
+use crate::train::GradStore;
 use crate::util::prng::Rng;
 
 /// Dense per-token reference MoE over one rank's (S, H) tokens: gate via
@@ -76,6 +77,155 @@ pub fn dense_reference_moe(cfg: &Config, params: &ModelParams, a: &[f32]) -> Vec
         }
     }
     out
+}
+
+/// Dense per-token reference MoE *backward* over one rank's (S, H)
+/// tokens: given upstream gradients `dy` (S, H) w.r.t. the layer output,
+/// returns the input gradients dX (S, H) and the parameter gradients
+/// accumulated into a fresh [`GradStore`]. Mirrors
+/// [`dense_reference_moe`]'s math exactly — same gate, same normalized
+/// combine weights c_j = w_j / Σw — and backpropagates through all of it,
+/// including the gate: gradients flow into the selected top-k
+/// probabilities (straight-through w.r.t. the non-differentiable
+/// selection itself, the standard MoE convention), then through the
+/// softmax into Wg and the input. Multi-rank callers invoke this once
+/// per rank and fold the stores with [`GradStore::add_assign`].
+pub fn dense_reference_moe_grad(
+    cfg: &Config,
+    params: &ModelParams,
+    a: &[f32],
+    dy: &[f32],
+) -> (Vec<f32>, GradStore) {
+    let m = &cfg.model;
+    let (h, d, e, k) = (m.h, m.d, m.e, m.k);
+    let s = a.len() / h;
+    debug_assert_eq!(a.len(), s * h);
+    debug_assert_eq!(dy.len(), s * h);
+    // forward gate replay (identical to dense_reference_moe)
+    let mut scores = vec![0.0f32; s * e];
+    for i in 0..s {
+        let ai = &a[i * h..(i + 1) * h];
+        for j in 0..e {
+            let mut acc = 0.0f32;
+            for (p, &av) in ai.iter().enumerate() {
+                acc += av * params.wg[p * e + j];
+            }
+            scores[i * e + j] = acc;
+        }
+    }
+    crate::gate::softmax_rows(&mut scores, e);
+    let (idx, w) = crate::gate::topk_rows(&scores, e, k);
+
+    let mut grads = GradStore::zeros_like(params);
+    let mut dx = vec![0.0f32; s * h];
+    let mut mid = vec![0.0f32; d];
+    let mut y = vec![0.0f32; h];
+    let mut dyt = vec![0.0f32; h];
+    let mut dmid = vec![0.0f32; d];
+    let mut dc = vec![0.0f32; k];
+    let mut dlogits = vec![0.0f32; e];
+    for i in 0..s {
+        let ai = &a[i * h..(i + 1) * h];
+        let dyi = &dy[i * h..(i + 1) * h];
+        let denom: f32 = w[i * k..(i + 1) * k].iter().sum();
+        for j in 0..k {
+            let ex_id = idx[i * k + j] as usize;
+            let ex = &params.experts[ex_id];
+            // forward expert replay: mid = relu(a_i·W1 + b1), y = mid·W2 + b2
+            for (c, mv) in mid.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (p, &av) in ai.iter().enumerate() {
+                    acc += av * ex.w1[p * d + c];
+                }
+                acc += ex.b1[c];
+                *mv = if acc < 0.0 { 0.0 } else { acc };
+            }
+            for (c, yv) in y.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (p, &mv) in mid.iter().enumerate() {
+                    acc += mv * ex.w2[p * h + c];
+                }
+                *yv = acc + ex.b2[c];
+            }
+            let cw = w[i * k + j] / denom;
+            // dL/dc_j = <dy_i, y_j> (combine weight grad, pre-normalization)
+            let mut acc = 0.0f32;
+            for (&dv, &yv) in dyi.iter().zip(&y) {
+                acc += dv * yv;
+            }
+            dc[j] = acc;
+            // grad into the expert output: dy_t = c_j · dy_i
+            for (t, &dv) in dyt.iter_mut().zip(dyi) {
+                *t = cw * dv;
+            }
+            // dmid = (dy_t·W2ᵀ) ⊙ relu'(mid);  dW2 += mid ⊗ dy_t;  db2 += dy_t
+            let g = &mut grads.experts[ex_id];
+            for (p, dmv) in dmid.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (c, &tv) in dyt.iter().enumerate() {
+                    acc += tv * ex.w2[p * h + c];
+                }
+                *dmv = if mid[p] > 0.0 { acc } else { 0.0 };
+            }
+            for (p, &mv) in mid.iter().enumerate() {
+                for (c, &tv) in dyt.iter().enumerate() {
+                    g.w2[p * h + c] += mv * tv;
+                }
+            }
+            for (bv, &tv) in g.b2.iter_mut().zip(&dyt) {
+                *bv += tv;
+            }
+            // dW1 += a_i ⊗ dmid;  db1 += dmid;  dx_i += dmid·W1ᵀ
+            for (p, &av) in ai.iter().enumerate() {
+                for (c, &dmv) in dmid.iter().enumerate() {
+                    g.w1[p * d + c] += av * dmv;
+                }
+            }
+            for (bv, &dmv) in g.b1.iter_mut().zip(&dmid) {
+                *bv += dmv;
+            }
+            for (p, xv) in dx[i * h..(i + 1) * h].iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (c, &dmv) in dmid.iter().enumerate() {
+                    acc += dmv * ex.w1[p * d + c];
+                }
+                *xv += acc;
+            }
+        }
+        // gate backward: c_j = w_j/S ⇒ dw_t = (dc_t − Σ_u c_u·dc_u)/S on
+        // the selected probs, then softmax backward over the full E row
+        let mut gsum = 0.0f32;
+        for j in 0..k {
+            gsum += (w[i * k + j] / denom) * dc[j];
+        }
+        dlogits.iter_mut().for_each(|v| *v = 0.0);
+        // dp (nonzero only on topk), folded straight into softmax backward:
+        // dlogit_v = p_v·(dp_v − Σ_u dp_u·p_u)
+        let mut dp_dot_p = 0.0f32;
+        for j in 0..k {
+            let dp = (dc[j] - gsum) / denom;
+            dlogits[idx[i * k + j] as usize] = dp;
+            dp_dot_p += dp * scores[i * e + idx[i * k + j] as usize];
+        }
+        for v in 0..e {
+            let pv = scores[i * e + v];
+            dlogits[v] = pv * (dlogits[v] - dp_dot_p);
+        }
+        // dWg += a_i ⊗ dlogits;  dx_i += dlogits·Wgᵀ
+        for (p, &av) in ai.iter().enumerate() {
+            for (j, &dl) in dlogits.iter().enumerate() {
+                grads.wg[p * e + j] += av * dl;
+            }
+        }
+        for (p, xv) in dx[i * h..(i + 1) * h].iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (j, &dl) in dlogits.iter().enumerate() {
+                acc += dl * params.wg[p * e + j];
+            }
+            *xv += acc;
+        }
+    }
+    (dx, grads)
 }
 
 /// Context handed to generators; `size` shrinks during failure minimization.

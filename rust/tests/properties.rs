@@ -9,7 +9,7 @@ use std::sync::Arc;
 
 use flashdmoe::config::{
     Config, CostModel, DispatchMode, FaultConfig, ModelConfig, ReplicationPolicy, RoutingPolicy,
-    SystemConfig, WirePrecision,
+    SystemConfig, TrainConfig, WirePrecision,
 };
 use flashdmoe::coordinator::scheduler::TaskQueue;
 use flashdmoe::coordinator::{MoeEngine, TaskGraphMode};
@@ -425,6 +425,7 @@ fn dropless_engine_matches_dense_reference_under_fuzzed_skew() {
                     watchdog_secs: 120,
                     retry_limit: 0,
                     fault: FaultConfig::default(),
+                    train: TrainConfig::default(),
                 },
                 cost: CostModel::h100_nvlink(),
             };

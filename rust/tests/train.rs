@@ -1,0 +1,462 @@
+//! Training conformance: the engine's backward pass (Dgrad/Wgrad tile
+//! tasks through the persistent scheduler, reverse-wire transfers)
+//! against the dense autograd oracle and central finite differences;
+//! bitwise wgrad determinism across restarts and processor counts;
+//! stash lifecycle errors; and the `Trainer` loop (accumulation windows,
+//! optimizer updates, loss-goes-down).
+
+use std::sync::Arc;
+
+use flashdmoe::config::{Config, RoutingPolicy, WirePrecision};
+use flashdmoe::coordinator::rank::STASH_CAP;
+use flashdmoe::coordinator::{BackwardResult, MoeEngine, TaskGraphMode};
+use flashdmoe::expert::{generate_tokens, ModelParams};
+use flashdmoe::harness::multinode_config;
+use flashdmoe::runtime::{ComputeBackend, NativeBackend};
+use flashdmoe::train::{GradStore, Optimizer, Trainer};
+use flashdmoe::util::check::{dense_reference_moe, dense_reference_moe_grad};
+use flashdmoe::util::prng::Rng;
+use flashdmoe::util::stats::max_abs_diff;
+
+fn train_cfg(preset: &str) -> Config {
+    let mut cfg = Config::preset(preset).unwrap();
+    cfg.set("train", "on").unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+fn start(cfg: &Config, params: &Arc<ModelParams>) -> MoeEngine {
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(cfg));
+    MoeEngine::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused).unwrap()
+}
+
+fn rank_inputs(cfg: &Config, seed: u64) -> Vec<Vec<f32>> {
+    (0..cfg.system.ranks).map(|r| generate_tokens(cfg, seed, r)).collect()
+}
+
+/// Deterministic pseudo output-gradients, one buffer per rank, shaped
+/// like the forward outputs.
+fn rank_grads(shapes: &[Vec<f32>], seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    shapes.iter().map(|o| rng.normal_vec(o.len(), 1.0)).collect()
+}
+
+/// Dense oracle over every rank: per-rank dX plus the summed GradStore
+/// (each rank gates and routes its own batch independently, so the
+/// whole-layer parameter gradient is the sum of per-rank contributions).
+fn dense_grads(
+    cfg: &Config,
+    params: &ModelParams,
+    inputs: &[Vec<f32>],
+    dy: &[Vec<f32>],
+) -> (Vec<Vec<f32>>, GradStore) {
+    let mut total = GradStore::zeros(cfg.model.h, cfg.model.d, cfg.model.e);
+    let mut dxs = Vec::with_capacity(inputs.len());
+    for (a, g) in inputs.iter().zip(dy) {
+        let (dx, gs) = dense_reference_moe_grad(cfg, params, a, g);
+        total.add_assign(&gs);
+        dxs.push(dx);
+    }
+    (dxs, total)
+}
+
+fn store_max_diff(a: &GradStore, b: &GradStore) -> f32 {
+    a.tensors()
+        .iter()
+        .zip(b.tensors())
+        .map(|(x, y)| max_abs_diff(x, y))
+        .fold(0.0f32, f32::max)
+}
+
+fn assert_store_bits_eq(a: &GradStore, b: &GradStore, what: &str) {
+    for (t, (x, y)) in a.tensors().iter().zip(b.tensors()).enumerate() {
+        assert_eq!(x.len(), y.len(), "{what}: tensor {t} length");
+        for (i, (u, v)) in x.iter().zip(y).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "{what}: tensor {t} element {i} bit pattern");
+        }
+    }
+}
+
+/// Run one stashed forward + backward on a fresh engine, returning the
+/// backward result and the seeded output-gradients it was driven with.
+fn fwd_bwd(
+    cfg: &Config,
+    params: &Arc<ModelParams>,
+    inputs: &[Vec<f32>],
+    dy_seed: u64,
+) -> (BackwardResult, Vec<Vec<f32>>) {
+    let engine = start(cfg, params);
+    let fwd = engine.submit(inputs).unwrap().wait().unwrap();
+    assert_eq!(fwd.metrics.total_dropped(), 0, "conformance runs must not drop");
+    let dy = rank_grads(&fwd.outputs, dy_seed);
+    let bwd = engine.backward(fwd.metrics.epoch, &dy).unwrap();
+    (bwd, dy)
+}
+
+#[test]
+fn backward_matches_dense_reference_across_policies() {
+    // acceptance: engine dX and GradStore equal the dense autograd
+    // oracle at 1e-4 on the exact f32 wire, under both routing policies
+    // (ample capacity so nothing drops and engine == dense).
+    for policy in [RoutingPolicy::Capacity(8.0), RoutingPolicy::Dropless] {
+        let mut cfg = train_cfg("tiny");
+        cfg.model.policy = policy;
+        cfg.validate().unwrap();
+        let params = Arc::new(ModelParams::generate(&cfg, 0x7A1));
+        let inputs = rank_inputs(&cfg, 0x7A1);
+        let engine = start(&cfg, &params);
+        let fwd = engine.submit(&inputs).unwrap().wait().unwrap();
+        assert_eq!(fwd.metrics.total_dropped(), 0, "{policy:?}: ample capacity dropped");
+        assert!(fwd.metrics.gate_entropy() > 0.0, "{policy:?}: gate entropy not stamped");
+        let dy = rank_grads(&fwd.outputs, 0x7A2);
+        let bwd = engine.backward(fwd.metrics.epoch, &dy).unwrap();
+
+        let (dx_ref, grads_ref) = dense_grads(&cfg, &params, &inputs, &dy);
+        for (r, (got, want)) in bwd.input_grads.iter().zip(&dx_ref).enumerate() {
+            let diff = max_abs_diff(got, want);
+            assert!(diff < 1e-4, "{policy:?} rank {r}: dX diff {diff} vs dense oracle");
+        }
+        let gdiff = store_max_diff(&bwd.grads, &grads_ref);
+        assert!(gdiff < 1e-4, "{policy:?}: GradStore diff {gdiff} vs dense oracle");
+
+        // direction split + task accounting: the backward pass reports
+        // its bytes as reverse traffic and ran Dgrad/Wgrad tile tasks
+        assert!(bwd.metrics.backward, "{policy:?}: backward flag");
+        assert!(bwd.metrics.reverse_bytes() > 0, "{policy:?}: reverse bytes");
+        assert_eq!(bwd.metrics.forward_bytes(), 0, "{policy:?}: forward bytes on a backward");
+        let dgrad: u32 = bwd.metrics.ranks.iter().map(|m| m.dgrad_tasks).sum();
+        let wgrad: u32 = bwd.metrics.ranks.iter().map(|m| m.wgrad_tasks).sum();
+        assert!(dgrad > 0 && wgrad > 0, "{policy:?}: dgrad={dgrad} wgrad={wgrad}");
+        let em = engine.metrics();
+        assert_eq!((em.passes, em.backward_passes), (1, 1), "{policy:?}: pass split");
+        assert_eq!(em.reverse_bytes, bwd.metrics.total_bytes(), "{policy:?}: reverse byte ledger");
+        assert!(em.forward_bytes > 0, "{policy:?}: lifetime forward bytes");
+    }
+}
+
+/// Compare an analytic gradient coordinate against central differences
+/// of `eval(shift)` = L(θ + shift·e_c). Because the gated loss is only
+/// piecewise smooth (top-k selection), a probe whose FD estimates at ε
+/// and ε/2 disagree sits on a routing boundary (or in f32 noise) and is
+/// skipped — the caller asserts a minimum number of checkable probes.
+/// Returns true when the coordinate was checkable.
+fn fd_probe(eval: &dyn Fn(f32) -> f64, analytic: f64, eps: f32, slack: f64, what: &str) -> bool {
+    let central = |e: f32| (eval(e) - eval(-e)) / (2.0 * e as f64);
+    let f1 = central(eps);
+    let f2 = central(eps / 2.0);
+    if (f1 - f2).abs() > 0.1 * f1.abs().max(f2.abs()).max(1.0) {
+        return false; // non-smooth neighborhood: top-k flip under the probe
+    }
+    let tol = 1e-2 * f2.abs().max(analytic.abs()) + slack;
+    assert!((f2 - analytic).abs() <= tol, "{what}: fd {f2} vs analytic {analytic}");
+    true
+}
+
+#[test]
+fn dense_oracle_matches_central_finite_differences_on_fuzzed_shapes() {
+    // validate the oracle itself: on small fuzzed shapes, sampled
+    // parameter and input coordinates of `dense_reference_moe_grad` must
+    // agree with central differences of L(θ) = Σ dy ⊙ out(θ).
+    for (case, &(h, d, e, k, s)) in
+        [(8usize, 16usize, 4usize, 2usize, 6usize), (12, 8, 6, 3, 5), (16, 16, 8, 1, 9)]
+            .iter()
+            .enumerate()
+    {
+        let mut cfg = Config::preset("tiny").unwrap();
+        cfg.set("h", &h.to_string()).unwrap();
+        cfg.set("d", &d.to_string()).unwrap();
+        cfg.set("e", &e.to_string()).unwrap();
+        cfg.set("k", &k.to_string()).unwrap();
+        cfg.set("routing_policy", "dropless").unwrap();
+        cfg.validate().unwrap();
+        let params = ModelParams::generate(&cfg, 0xFD0 + case as u64);
+        let mut rng = Rng::new(0xFD1 + case as u64);
+        let a = rng.normal_vec(s * h, 1.0);
+        let dy = rng.normal_vec(s * h, 1.0);
+        let (dx, grads) = dense_reference_moe_grad(&cfg, &params, &a, &dy);
+        let loss = |p: &ModelParams, x: &[f32]| -> f64 {
+            dense_reference_moe(&cfg, p, x)
+                .iter()
+                .zip(&dy)
+                .map(|(&o, &g)| (o as f64) * (g as f64))
+                .sum()
+        };
+        let (mut checked, mut probes) = (0usize, 0usize);
+        // parameter coordinates: a handful per tensor, fixed stride
+        let gt = grads.tensors();
+        for (t, g) in gt.iter().enumerate() {
+            let stride = (g.len() / 5).max(1);
+            for c in (0..g.len()).step_by(stride).take(5) {
+                let eval = |shift: f32| {
+                    let mut p = params.clone();
+                    flashdmoe::train::param_tensors_mut(&mut p)[t][c] += shift;
+                    loss(&p, &a)
+                };
+                probes += 1;
+                checked += usize::from(fd_probe(
+                    &eval,
+                    g[c] as f64,
+                    1e-2,
+                    1e-3,
+                    &format!("case {case} tensor {t}[{c}]"),
+                ));
+            }
+        }
+        // input coordinates
+        for c in (0..a.len()).step_by((a.len() / 7).max(1)).take(7) {
+            let eval = |shift: f32| {
+                let mut x = a.clone();
+                x[c] += shift;
+                loss(&params, &x)
+            };
+            probes += 1;
+            checked += usize::from(fd_probe(
+                &eval,
+                dx[c] as f64,
+                1e-2,
+                1e-3,
+                &format!("case {case} input[{c}]"),
+            ));
+        }
+        // the boundary skip must stay the exception, not the rule
+        assert!(
+            checked * 2 > probes,
+            "case {case}: only {checked}/{probes} probes were checkable"
+        );
+    }
+}
+
+#[test]
+fn engine_gradients_match_finite_differences_end_to_end() {
+    // probe the *live engine* with central differences: perturb an input
+    // coordinate (fresh pass) and a parameter coordinate (update_params
+    // round-trip) and compare dL against the engine's own backward.
+    let mut cfg = train_cfg("tiny");
+    cfg.set("routing_policy", "dropless").unwrap();
+    cfg.validate().unwrap();
+    let params = Arc::new(ModelParams::generate(&cfg, 0xE2E));
+    let inputs = rank_inputs(&cfg, 0xE2E);
+    let engine = start(&cfg, &params);
+    let fwd = engine.submit(&inputs).unwrap().wait().unwrap();
+    let dy = rank_grads(&fwd.outputs, 0xE2F);
+    let bwd = engine.backward(fwd.metrics.epoch, &dy).unwrap();
+    let loss = |outputs: &[Vec<f32>]| -> f64 {
+        outputs
+            .iter()
+            .zip(&dy)
+            .flat_map(|(o, g)| o.iter().zip(g))
+            .map(|(&o, &g)| (o as f64) * (g as f64))
+            .sum()
+    };
+    let (mut checked, mut probes) = (0usize, 0usize);
+    // input coordinates on two ranks (each eval is a fresh engine pass)
+    for (rank, coord) in [(0usize, 5usize), (1, 131)] {
+        let eval = |shift: f32| {
+            let mut x = inputs.clone();
+            x[rank][coord] += shift;
+            loss(&engine.submit(&x).unwrap().wait().unwrap().outputs)
+        };
+        probes += 1;
+        checked += usize::from(fd_probe(
+            &eval,
+            bwd.input_grads[rank][coord] as f64,
+            1e-2,
+            2e-2,
+            &format!("input rank {rank}[{coord}]"),
+        ));
+    }
+    // parameter coordinates through update_params (also exercises the
+    // epoch-fenced weight swap + backend refresh)
+    for (t, c, what) in
+        [(0usize, 3usize, "wg[3]"), (1, 17, "expert0.w1[17]"), (4, 2, "expert0.b2[2]")]
+    {
+        let eval = |shift: f32| {
+            let mut p = params.as_ref().clone();
+            flashdmoe::train::param_tensors_mut(&mut p)[t][c] += shift;
+            engine.update_params(p).unwrap();
+            loss(&engine.submit(&inputs).unwrap().wait().unwrap().outputs)
+        };
+        probes += 1;
+        checked += usize::from(fd_probe(&eval, bwd.grads.tensors()[t][c] as f64, 1e-2, 2e-2, what));
+        engine.update_params(params.as_ref().clone()).unwrap(); // restore
+    }
+    assert!(checked * 2 > probes, "only {checked}/{probes} engine probes were checkable");
+}
+
+#[test]
+fn wgrad_is_bitwise_identical_across_restarts_and_processor_counts() {
+    // acceptance: the ordinal-gated fold makes every gradient tensor —
+    // not just the outputs — bitwise reproducible whatever the worker
+    // count or steal schedule, and across engine restarts.
+    let mut cfg0 = train_cfg("tiny");
+    cfg0.set("routing_policy", "dropless").unwrap();
+    cfg0.validate().unwrap();
+    let params = Arc::new(ModelParams::generate(&cfg0, 0xB17));
+    let inputs = rank_inputs(&cfg0, 0xB17);
+    let mut golden: Option<BackwardResult> = None;
+    for processors in [1usize, 4, 8] {
+        let mut cfg = cfg0.clone();
+        cfg.set("processors", &processors.to_string()).unwrap();
+        for restart in 0..2 {
+            let (bwd, _) = fwd_bwd(&cfg, &params, &inputs, 0xB18);
+            match &golden {
+                None => golden = Some(bwd),
+                Some(g) => {
+                    let tag = format!("processors={processors} restart={restart}");
+                    assert_store_bits_eq(&g.grads, &bwd.grads, &tag);
+                    for (r, (x, y)) in g.input_grads.iter().zip(&bwd.input_grads).enumerate() {
+                        for (i, (u, v)) in x.iter().zip(y).enumerate() {
+                            assert_eq!(
+                                u.to_bits(),
+                                v.to_bits(),
+                                "{tag}: rank {r} dX[{i}] bit pattern"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hierarchical_backward_matches_flat_and_dense_reference() {
+    // the reverse scatter rides the node-coalesced transport too: on a
+    // 4-node topology, hierarchical backward must equal flat backward
+    // bit for bit, and both must match the dense oracle at 1e-4.
+    let mut cfg = multinode_config(48).unwrap();
+    cfg.set("train", "on").unwrap();
+    cfg.set("routing_policy", "dropless").unwrap();
+    cfg.validate().unwrap();
+    assert!(cfg.system.dispatch.is_hierarchical(), "preset default");
+    let params = Arc::new(ModelParams::generate(&cfg, 0x4E0D));
+    let inputs = rank_inputs(&cfg, 0x4E0D);
+    let mut flat_cfg = cfg.clone();
+    flat_cfg.set("dispatch", "flat").unwrap();
+    let (hier, dy) = fwd_bwd(&cfg, &params, &inputs, 0x4E0E);
+    let (flat, _) = fwd_bwd(&flat_cfg, &params, &inputs, 0x4E0E);
+    assert_store_bits_eq(&flat.grads, &hier.grads, "flat vs hierarchical wgrad");
+    for (r, (f, h)) in flat.input_grads.iter().zip(&hier.input_grads).enumerate() {
+        for (i, (u, v)) in f.iter().zip(h).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "rank {r} dX[{i}]: flat vs hierarchical");
+        }
+    }
+    let (dx_ref, grads_ref) = dense_grads(&cfg, &params, &inputs, &dy);
+    let gdiff = store_max_diff(&hier.grads, &grads_ref);
+    assert!(gdiff < 1e-4, "multi-node GradStore diff {gdiff} vs dense oracle");
+    for (r, (got, want)) in hier.input_grads.iter().zip(&dx_ref).enumerate() {
+        let diff = max_abs_diff(got, want);
+        assert!(diff < 1e-4, "multi-node rank {r}: dX diff {diff} vs dense oracle");
+    }
+}
+
+#[test]
+fn reduced_precision_wire_halves_reverse_bytes_and_stays_close() {
+    // the 16-bit wire applies to gradient traffic too: identical routing
+    // means the measured reverse bytes halve *exactly*, quantization
+    // genuinely happens, and the gradients stay close to the f32 arm
+    // in relative Frobenius norm.
+    let mut cfg = train_cfg("tiny");
+    cfg.set("routing_policy", "dropless").unwrap();
+    cfg.validate().unwrap();
+    let params = Arc::new(ModelParams::generate(&cfg, 0x16B));
+    let inputs = rank_inputs(&cfg, 0x16B);
+    let (exact, _) = fwd_bwd(&cfg, &params, &inputs, 0x16C);
+    for wire in [WirePrecision::Bf16, WirePrecision::F16] {
+        let mut cfg_w = cfg.clone();
+        cfg_w.set("wire_precision", wire.name()).unwrap();
+        let (got, _) = fwd_bwd(&cfg_w, &params, &inputs, 0x16C);
+        assert_eq!(
+            got.metrics.reverse_bytes() * 2,
+            exact.metrics.reverse_bytes(),
+            "{wire:?}: reverse bytes must halve for identical routing"
+        );
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        let mut any_diff = false;
+        for (x, y) in got.grads.tensors().iter().zip(exact.grads.tensors()) {
+            for (u, v) in x.iter().zip(y) {
+                num += ((u - v) as f64).powi(2);
+                den += (*v as f64).powi(2);
+                any_diff |= u.to_bits() != v.to_bits();
+            }
+        }
+        let rel = (num / den.max(1e-30)).sqrt();
+        assert!(rel < 0.05, "{wire:?}: wgrad relative error {rel} vs f32 wire");
+        assert!(any_diff, "{wire:?}: gradients identical to f32 — quantization is a no-op?");
+    }
+}
+
+#[test]
+fn stash_lifecycle_and_mode_errors() {
+    let cfg_plain = Config::preset("tiny").unwrap();
+    let params = Arc::new(ModelParams::generate(&cfg_plain, 0x5A5));
+    let inputs = rank_inputs(&cfg_plain, 0x5A5);
+    // no train=on: backward refused up front
+    let engine = start(&cfg_plain, &params);
+    let fwd = engine.submit(&inputs).unwrap().wait().unwrap();
+    let dy = rank_grads(&fwd.outputs, 1);
+    let err = engine.backward(fwd.metrics.epoch, &dy).unwrap_err().to_string();
+    assert!(err.contains("train=on"), "unexpected error: {err}");
+    engine.shutdown();
+
+    let cfg = train_cfg("tiny");
+    let engine = start(&cfg, &params);
+    // eviction: the stash keeps the last STASH_CAP passes only
+    let first = engine.submit(&inputs).unwrap().wait().unwrap();
+    for _ in 0..STASH_CAP {
+        engine.submit(&inputs).unwrap().wait().unwrap();
+    }
+    let err = engine.backward(first.metrics.epoch, &dy).unwrap_err().to_string();
+    assert!(err.contains("no activation stash"), "unexpected error: {err}");
+    // the newest pass is still differentiable
+    let latest = engine.submit(&inputs).unwrap().wait().unwrap();
+    engine.backward(latest.metrics.epoch, &dy).unwrap();
+    // wrong shape / wrong arity are rejected without wedging the engine
+    let bad_len: Vec<Vec<f32>> = (0..cfg.system.ranks).map(|_| vec![0.0f32; 3]).collect();
+    assert!(engine.backward(latest.metrics.epoch, &bad_len).is_err());
+    assert!(engine.backward(latest.metrics.epoch, &dy[..1]).is_err());
+    engine.backward(latest.metrics.epoch, &dy).unwrap();
+    engine.shutdown();
+
+    // Split mode: backward and update_params are refused
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+    let split =
+        MoeEngine::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Split).unwrap();
+    let fwd = split.submit(&inputs).unwrap().wait().unwrap();
+    assert!(split.backward(fwd.metrics.epoch, &dy).is_err());
+    assert!(split.update_params(params.as_ref().clone()).is_err());
+}
+
+#[test]
+fn trainer_accumulates_windows_and_loss_goes_down() {
+    // grad_accum_steps=2: the optimizer applies on every second
+    // micro-batch; and the smoothed MSE loss decreases over a short
+    // toy regression run (targets = 0, Adam).
+    let mut cfg = train_cfg("tiny");
+    cfg.set("grad_accum_steps", "2").unwrap();
+    cfg.validate().unwrap();
+    let params = Arc::new(ModelParams::generate(&cfg, 0x77));
+    let inputs = rank_inputs(&cfg, 0x77);
+    let targets: Vec<Vec<f32>> = inputs.iter().map(|x| vec![0.0f32; x.len()]).collect();
+    let engine = start(&cfg, &params);
+    let mut trainer = Trainer::new(engine, Optimizer::adam(5e-3)).unwrap();
+    let mut losses = Vec::new();
+    for step in 0..12 {
+        let report = trainer.train_step(&inputs, &targets).unwrap();
+        assert_eq!(report.applied, step % 2 == 1, "step {step}: accumulation window");
+        assert!(report.grad_sq_norm > 0.0, "step {step}: zero gradient");
+        assert!(report.loss.is_finite());
+        losses.push(report.loss);
+    }
+    assert_eq!(trainer.updates, 6);
+    let head: f64 = losses[..4].iter().sum::<f64>() / 4.0;
+    let tail: f64 = losses[8..].iter().sum::<f64>() / 4.0;
+    assert!(tail < head, "smoothed loss did not decrease: head {head} tail {tail}");
+    assert!(losses.last().unwrap() < losses.first().unwrap());
+    let em = trainer.engine().metrics();
+    assert_eq!(em.backward_passes, 12);
+    assert!(em.reverse_bytes > 0);
+    let trained = trainer.finish();
+    assert_eq!(trained.experts.len(), cfg.model.e);
+}
