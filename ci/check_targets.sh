@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Guard against silently-untested code: because sources live under
+# `rust/` (no Cargo auto-discovery for tests/benches), a test or bench
+# file that is not declared in Cargo.toml simply never runs — CI stays
+# green while the file rots. This script fails if any file under
+# `rust/tests/` or `rust/benches/` has no matching `path = "..."` entry
+# in Cargo.toml (examples live in the conventional top-level `examples/`
+# and ARE auto-discovered, so they need no declarations).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fail=0
+for f in rust/tests/*.rs rust/benches/*.rs; do
+  [ -e "$f" ] || continue
+  if ! grep -Fq "path = \"$f\"" Cargo.toml; then
+    echo "ERROR: $f is not declared in Cargo.toml — it will never run in CI" >&2
+    fail=1
+  fi
+done
+
+# The reverse direction: every declared target must exist on disk, or
+# `cargo build --all-targets` breaks for everyone.
+while IFS= read -r p; do
+  case "$p" in
+    rust/tests/*|rust/benches/*)
+      if [ ! -e "$p" ]; then
+        echo "ERROR: Cargo.toml declares $p but the file does not exist" >&2
+        fail=1
+      fi
+      ;;
+  esac
+done < <(sed -n 's/^path = "\(.*\)"$/\1/p' Cargo.toml)
+
+if [ "$fail" -ne 0 ]; then
+  exit 1
+fi
+echo "check_targets: every rust/tests and rust/benches file is declared in Cargo.toml"

@@ -1,0 +1,64 @@
+//! Multi-model residency — **measured on a live engine**: the anchor, an
+//! independent base, and a LoRA delta variant co-resident on one engine,
+//! served through the request front end under a Zipf-skewed multi-model
+//! trace (model 0 hottest, the multi-tenant shape). Correctness is
+//! asserted inside the harness (one launch, every request served, the
+//! shared packed cache audited); this bench reports the per-model
+//! latency cost of co-residency and the memory story — resident bytes of
+//! the one engine vs three dedicated engines.
+//!
+//! Emits `BENCH_pr10_multimodel.json` (section `multimodel_ab`) for the
+//! CI artifact upload. With `PERF_SMOKE=1` the run FAILS unless
+//! (a) the LoRA variant's incremental resident bytes are strictly below
+//! a full independent pack — the whole point of sharing the base's
+//! packed panels — and (b) co-residency actually undercuts N dedicated
+//! engines, so the gate cannot pass on a registry that quietly
+//! materializes every variant.
+//!
+//!     cargo bench --bench multi_model_bench
+fn main() {
+    let (text, pts, res) = flashdmoe::harness::multimodel_ab(42).unwrap();
+    println!("{text}");
+
+    flashdmoe::harness::update_bench_json(
+        "BENCH_pr10_multimodel.json",
+        "multimodel_ab",
+        flashdmoe::harness::multimodel_json(&pts, &res),
+    )
+    .unwrap();
+    println!("wrote BENCH_pr10_multimodel.json (section multimodel_ab)");
+
+    let perf_smoke = std::env::var("PERF_SMOKE").map(|v| v == "1").unwrap_or(false);
+    if perf_smoke {
+        let mut failed = false;
+        if res.lora_incremental_bytes >= res.full_pack_bytes {
+            eprintln!(
+                "PERF_SMOKE FAIL: LoRA increment {} >= a full independent pack {} — \
+                 the variant is not sharing its base's packed weights",
+                res.lora_incremental_bytes, res.full_pack_bytes
+            );
+            failed = true;
+        }
+        if res.co_resident_bytes >= res.dedicated_bytes {
+            eprintln!(
+                "PERF_SMOKE FAIL: co-resident {} >= {} for 3 dedicated engines",
+                res.co_resident_bytes, res.dedicated_bytes
+            );
+            failed = true;
+        }
+        if !failed {
+            println!(
+                "PERF_SMOKE ok: LoRA increment {} of a full pack ({:.1}%), \
+                 co-resident {} vs dedicated {} ({:.1}% saved)",
+                res.lora_incremental_bytes,
+                100.0 * res.lora_incremental_bytes as f64 / res.full_pack_bytes as f64,
+                res.co_resident_bytes,
+                res.dedicated_bytes,
+                100.0 * (1.0 - res.co_resident_bytes as f64 / res.dedicated_bytes as f64),
+            );
+        }
+        if failed {
+            std::process::exit(1);
+        }
+    }
+}

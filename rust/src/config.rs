@@ -102,6 +102,32 @@
 //! * `fault_delay_rate` + `fault_delay_us` — injected NIC delay spikes
 //!   (per-transfer, same deterministic per-(src, dst, gen) decision).
 //!
+//! ## Multi-model residency knobs
+//!
+//! One persistent engine can host several expert sets at once (the
+//! `crate::registry` subsystem; ROADMAP item 5):
+//!
+//! * `max_models` — how many models the engine reserves heap/flag
+//!   capacity for at start (default 1: the single-model layout is
+//!   byte-identical to before the knob existed). Every layout table's
+//!   expert-slot dimension is multiplied by this, partitioning the
+//!   symmetric heap into per-model slot bands; models are then
+//!   registered/evicted at epoch-fenced quiet points
+//!   (`MoeEngine::register_model` / `evict_model`) without restarting.
+//!   All resident models must share this config's architecture
+//!   (`h`/`d`/`e`/`k`); re-registering byte-identical weights dedups to
+//!   the already-packed cache entry, and LoRA-style deltas
+//!   (`MoeEngine::register_delta`) share the base model's packed panels
+//!   outright.
+//!
+//! ## Training-schedule knobs
+//!
+//! * `weight_decay` — decoupled (AdamW-style) weight decay applied by
+//!   `train::Optimizer` at each step (default 0: plain SGD/Adam).
+//! * `lr_schedule` = `const` | `step:<every>:<gamma>` |
+//!   `cosine:<total>` — learning-rate schedule the `Trainer` evaluates
+//!   per optimizer update ([`LrSchedule`]).
+//!
 //! [`MoeService`]: crate::coordinator::MoeService
 //! [`BatchPolicy`]: crate::coordinator::BatchPolicy
 //! [`BatchPolicy::from_config`]: crate::coordinator::BatchPolicy::from_config
@@ -402,6 +428,13 @@ impl FaultConfig {
 /// * `optimizer` = `sgd|adam` — which `train::Optimizer` example loops
 ///   (`examples/train_loop.rs`, `flashdmoe train`) construct.
 /// * `lr` — learning rate for those loops (must be finite and positive).
+/// * `weight_decay` — decoupled weight decay coefficient: the optimizer
+///   shrinks every parameter by `lr · weight_decay · θ` at each step,
+///   *outside* the gradient (AdamW-style, so Adam's moment estimates
+///   never see the decay term). `0` (default) disables it.
+/// * `lr_schedule` = `const` | `step:<every>:<gamma>` |
+///   `cosine:<total>` — per-update learning-rate schedule evaluated by
+///   `Trainer` ([`LrSchedule`]); `lr` is the base rate it scales.
 /// * `grad_accum_steps` — micro-batches folded into one optimizer step
 ///   by `Trainer` (≥ 1; gradients are averaged over the window).
 /// * `stash_activations` — stash forwards *without* enabling the rest of
@@ -415,6 +448,12 @@ pub struct TrainConfig {
     pub optimizer: OptimizerKind,
     /// Learning rate. Knob: `lr`.
     pub lr: f32,
+    /// Decoupled weight-decay coefficient (0 disables). Knob:
+    /// `weight_decay`.
+    pub weight_decay: f32,
+    /// Learning-rate schedule over optimizer updates. Knob:
+    /// `lr_schedule`.
+    pub lr_schedule: LrSchedule,
     /// Micro-batches per optimizer step. Knob: `grad_accum_steps`.
     pub grad_accum_steps: usize,
     /// Stash forward activations even with `enabled == false`. Knob:
@@ -428,6 +467,8 @@ impl Default for TrainConfig {
             enabled: false,
             optimizer: OptimizerKind::Adam,
             lr: 1e-3,
+            weight_decay: 0.0,
+            lr_schedule: LrSchedule::Const,
             grad_accum_steps: 1,
             stash_activations: false,
         }
@@ -445,8 +486,111 @@ impl TrainConfig {
         if !(self.lr.is_finite() && self.lr > 0.0) {
             bail!("lr must be finite and positive, got {}", self.lr);
         }
+        if !(self.weight_decay.is_finite() && self.weight_decay >= 0.0) {
+            bail!("weight_decay must be finite and >= 0, got {}", self.weight_decay);
+        }
+        self.lr_schedule.validate()?;
         if self.grad_accum_steps == 0 {
             bail!("grad_accum_steps must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Learning-rate schedule over *optimizer updates* (not micro-batches:
+/// with `grad_accum_steps > 1` an update covers a whole accumulation
+/// window). The schedule is a pure multiplier on the base `lr` —
+/// [`factor`](Self::factor) maps update index → scale in `[0, 1]` — so
+/// `Trainer` evaluates it right before each `Optimizer::step` and the
+/// optimizer state (momentum/Adam moments) is untouched by the knob.
+///
+/// Knob spellings ([`parse`](Self::parse)):
+///
+/// * `const` — factor 1 forever (the default; bitwise-identical to the
+///   pre-schedule `Trainer`).
+/// * `step:<every>:<gamma>` — multiply by `gamma` after every `every`
+///   updates (`factor(n) = gamma^(n / every)`).
+/// * `cosine:<total>` — cosine annealing from 1 to 0 over `total`
+///   updates (`factor(n) = (1 + cos(π·min(n, total)/total)) / 2`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrSchedule {
+    /// Constant base rate (factor 1).
+    Const,
+    /// Multiply the rate by `gamma` after every `every` updates.
+    Step {
+        /// Updates between decays (≥ 1).
+        every: u64,
+        /// Per-decay multiplier in `(0, 1]`.
+        gamma: f64,
+    },
+    /// Cosine annealing from the base rate to 0 across `total` updates
+    /// (clamped there: `factor(n >= total) == 0`).
+    Cosine {
+        /// Updates the annealing spans (≥ 1).
+        total: u64,
+    },
+}
+
+impl LrSchedule {
+    /// Scale applied to the base `lr` for optimizer update `step`
+    /// (0-indexed: the first update runs at `factor(0)`, which is 1 for
+    /// every variant).
+    pub fn factor(&self, step: u64) -> f64 {
+        match *self {
+            LrSchedule::Const => 1.0,
+            LrSchedule::Step { every, gamma } => gamma.powi((step / every.max(1)) as i32),
+            LrSchedule::Cosine { total } => {
+                let t = step.min(total) as f64 / total.max(1) as f64;
+                0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+        }
+    }
+
+    /// Canonical knob spelling (accepted by [`parse`](Self::parse)).
+    pub fn name(&self) -> String {
+        match *self {
+            LrSchedule::Const => "const".to_string(),
+            LrSchedule::Step { every, gamma } => format!("step:{every}:{gamma}"),
+            LrSchedule::Cosine { total } => format!("cosine:{total}"),
+        }
+    }
+
+    /// Parse a CLI/config-file value: `const`, `step:<every>:<gamma>` or
+    /// `cosine:<total>`.
+    pub fn parse(s: &str) -> Option<LrSchedule> {
+        let s = s.to_ascii_lowercase();
+        if s == "const" || s == "constant" {
+            return Some(LrSchedule::Const);
+        }
+        if let Some(rest) = s.strip_prefix("step:") {
+            let (every, gamma) = rest.split_once(':')?;
+            return Some(LrSchedule::Step {
+                every: every.parse().ok()?,
+                gamma: gamma.parse().ok()?,
+            });
+        }
+        if let Some(total) = s.strip_prefix("cosine:") {
+            return Some(LrSchedule::Cosine { total: total.parse().ok()? });
+        }
+        None
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            LrSchedule::Const => {}
+            LrSchedule::Step { every, gamma } => {
+                if every == 0 {
+                    bail!("lr_schedule step interval must be >= 1");
+                }
+                if !(gamma.is_finite() && gamma > 0.0 && gamma <= 1.0) {
+                    bail!("lr_schedule step gamma must be in (0, 1], got {gamma}");
+                }
+            }
+            LrSchedule::Cosine { total } => {
+                if total == 0 {
+                    bail!("lr_schedule cosine span must be >= 1");
+                }
+            }
         }
         Ok(())
     }
@@ -611,6 +755,15 @@ pub struct SystemConfig {
     /// Training knobs (see [`TrainConfig`]); off by default — serving
     /// engines stash nothing and pay nothing.
     pub train: TrainConfig,
+    /// How many models the engine reserves residency capacity for
+    /// (`crate::registry`): every layout/flag/announce table's
+    /// expert-slot dimension is multiplied by this, partitioning the
+    /// symmetric heap into per-model slot bands. Default 1 — the
+    /// single-model layout, byte-identical to an engine without the
+    /// knob. Models beyond slot 0 are installed/evicted at epoch-fenced
+    /// quiet points (`MoeEngine::register_model` / `evict_model`) and
+    /// must share this config's architecture. Knob: `max_models`.
+    pub max_models: usize,
 }
 
 /// Hardware cost model for the simulator, calibrated by `flashdmoe
@@ -804,6 +957,9 @@ impl SystemConfig {
         if self.processors == 0 {
             bail!("need at least one processor actor per rank");
         }
+        if self.max_models == 0 {
+            bail!("max_models must be >= 1 (slot 0 hosts the anchor model)");
+        }
         Ok(())
     }
 }
@@ -836,6 +992,7 @@ impl Config {
                     retry_limit: 0,
                     fault: FaultConfig::default(),
                     train: TrainConfig::default(),
+                    max_models: 1,
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -862,6 +1019,7 @@ impl Config {
                     retry_limit: 0,
                     fault: FaultConfig::default(),
                     train: TrainConfig::default(),
+                    max_models: 1,
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -888,6 +1046,7 @@ impl Config {
                     retry_limit: 0,
                     fault: FaultConfig::default(),
                     train: TrainConfig::default(),
+                    max_models: 1,
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -915,6 +1074,7 @@ impl Config {
                     retry_limit: 0,
                     fault: FaultConfig::default(),
                     train: TrainConfig::default(),
+                    max_models: 1,
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -942,6 +1102,7 @@ impl Config {
                     retry_limit: 0,
                     fault: FaultConfig::default(),
                     train: TrainConfig::default(),
+                    max_models: 1,
                 },
                 cost: CostModel::h100_nvlink(),
             },
@@ -973,6 +1134,7 @@ impl Config {
                     retry_limit: 0,
                     fault: FaultConfig::default(),
                     train: TrainConfig::default(),
+                    max_models: 1,
                 },
                 cost: CostModel { nic_buffer: 32.0 * 1024.0 * 1024.0, ..CostModel::h100_nvlink() },
             },
@@ -1098,6 +1260,16 @@ impl Config {
                 self.system.train.lr =
                     value.parse().with_context(|| format!("{key}={value}: not a number"))?
             }
+            "weight_decay" => {
+                self.system.train.weight_decay =
+                    value.parse().with_context(|| format!("{key}={value}: not a number"))?
+            }
+            "lr_schedule" => match LrSchedule::parse(value) {
+                Some(s) => self.system.train.lr_schedule = s,
+                None => bail!(
+                    "{key}={value}: expected 'const', 'step:<every>:<gamma>' or 'cosine:<total>'"
+                ),
+            },
             "grad_accum_steps" => self.system.train.grad_accum_steps = u()?,
             "stash_activations" => {
                 self.system.train.stash_activations = match value {
@@ -1112,6 +1284,8 @@ impl Config {
                     value.parse().with_context(|| format!("{key}={value}: not an integer"))?
             }
             "retry_limit" => self.system.retry_limit = u()?,
+            // Multi-model residency capacity (see `crate::registry`).
+            "max_models" => self.system.max_models = u()?,
             "fault_seed" => {
                 self.system.fault.seed =
                     value.parse().with_context(|| format!("{key}={value}: not an integer"))?
@@ -1328,6 +1502,69 @@ mod tests {
         cfg.validate().unwrap();
         assert!(cfg.set("optimizer", "lion").is_err());
         assert!(cfg.set("train", "maybe").is_err());
+    }
+
+    #[test]
+    fn max_models_knob_parses_and_defaults_to_one() {
+        let mut cfg = Config::preset("tiny").unwrap();
+        assert_eq!(cfg.system.max_models, 1, "single-model residency is the default");
+        cfg.set("max_models", "3").unwrap();
+        assert_eq!(cfg.system.max_models, 3);
+        cfg.validate().unwrap();
+        cfg.set("max_models", "0").unwrap();
+        assert!(cfg.validate().is_err(), "max_models=0 must fail");
+        assert!(cfg.set("max_models", "two").is_err());
+    }
+
+    #[test]
+    fn lr_schedule_and_weight_decay_knobs() {
+        let mut cfg = Config::preset("tiny").unwrap();
+        assert_eq!(cfg.system.train.lr_schedule, LrSchedule::Const);
+        assert_eq!(cfg.system.train.weight_decay, 0.0);
+        cfg.set("weight_decay", "0.01").unwrap();
+        assert_eq!(cfg.system.train.weight_decay, 0.01);
+        cfg.validate().unwrap();
+        cfg.set("lr_schedule", "step:10:0.5").unwrap();
+        assert_eq!(cfg.system.train.lr_schedule, LrSchedule::Step { every: 10, gamma: 0.5 });
+        cfg.validate().unwrap();
+        cfg.set("lr_schedule", "cosine:100").unwrap();
+        assert_eq!(cfg.system.train.lr_schedule, LrSchedule::Cosine { total: 100 });
+        cfg.set("lr_schedule", "const").unwrap();
+        assert_eq!(cfg.system.train.lr_schedule, LrSchedule::Const);
+        assert!(cfg.set("lr_schedule", "linear:10").is_err());
+        assert!(cfg.set("lr_schedule", "step:10").is_err(), "step needs a gamma");
+        // degenerate values are rejected by validate()
+        for (k, v) in [
+            ("weight_decay", "-0.1"),
+            ("weight_decay", "nan"),
+            ("lr_schedule", "step:0:0.5"),
+            ("lr_schedule", "step:5:1.5"),
+            ("lr_schedule", "cosine:0"),
+        ] {
+            let mut bad = cfg.clone();
+            bad.set(k, v).unwrap();
+            assert!(bad.validate().is_err(), "{k}={v} must fail validation");
+        }
+    }
+
+    #[test]
+    fn lr_schedule_factors() {
+        assert_eq!(LrSchedule::Const.factor(123), 1.0);
+        let s = LrSchedule::Step { every: 10, gamma: 0.5 };
+        assert_eq!(s.factor(0), 1.0);
+        assert_eq!(s.factor(9), 1.0);
+        assert_eq!(s.factor(10), 0.5);
+        assert_eq!(s.factor(25), 0.25);
+        let c = LrSchedule::Cosine { total: 100 };
+        assert_eq!(c.factor(0), 1.0);
+        assert!((c.factor(50) - 0.5).abs() < 1e-12);
+        assert!(c.factor(100) < 1e-12, "annealed to ~0 at the end");
+        assert!(c.factor(1000) < 1e-12, "clamped past total");
+        assert!(c.factor(25) > c.factor(75), "monotone decreasing");
+        // name() roundtrips through parse()
+        for s in [LrSchedule::Const, s, c] {
+            assert_eq!(LrSchedule::parse(&s.name()), Some(s));
+        }
     }
 
     #[test]

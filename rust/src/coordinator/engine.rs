@@ -51,6 +51,7 @@ use crate::fabric::SymmetricHeap;
 use crate::fault;
 use crate::layout::LayoutDims;
 use crate::placement::{plan_replication, Placement};
+use crate::registry::{DeltaSet, ModelHandle, ModelId};
 use crate::runtime::ComputeBackend;
 use crate::train::GradStore;
 use crate::transport::NodeFabric;
@@ -102,11 +103,22 @@ enum PassKind {
 pub struct PassInput {
     /// Per-rank token matrices, `per_rank[r]` of length `s_r * H`.
     pub per_rank: Vec<Vec<f32>>,
+    /// Which resident model the pass serves (0 = the anchor model the
+    /// engine was started with; ids ≥ 1 are registry models — see
+    /// [`MoeEngine::register_model`]). A pass never mixes models.
+    pub model: ModelId,
 }
 
 impl PassInput {
     pub fn new(per_rank: Vec<Vec<f32>>) -> Self {
-        Self { per_rank }
+        Self { per_rank, model: 0 }
+    }
+
+    /// A pass routed to resident model `model` (0 = anchor). Non-anchor
+    /// models must be registered and the engine must run in `Fused`
+    /// task-graph mode — validated at submit.
+    pub fn for_model(per_rank: Vec<Vec<f32>>, model: ModelId) -> Self {
+        Self { per_rank, model }
     }
 
     /// Per-rank row counts at embedding width `h`.
@@ -122,7 +134,7 @@ impl PassInput {
 
 impl From<&[Vec<f32>]> for PassInput {
     fn from(inputs: &[Vec<f32>]) -> Self {
-        Self { per_rank: inputs.to_vec() }
+        Self { per_rank: inputs.to_vec(), model: 0 }
     }
 }
 
@@ -143,6 +155,9 @@ struct SlotState {
     /// epoch (backwards carry the stashed forward epoch to differentiate
     /// against).
     kind: PassKind,
+    /// Resident model the occupying pass serves (0 = anchor; backwards
+    /// are always anchor passes).
+    model: ModelId,
     /// Epoch of the last pass freed (collected or parked) from this
     /// slot; 0 until the slot's first occupant completes. Together with
     /// `epoch == 0` this is the install turnstile: the submitter of
@@ -181,10 +196,11 @@ struct SlotState {
 /// retry loop resubmits.
 struct Parked {
     result: Result<ForwardResult>,
-    /// Original-shape inputs + pass kind, retained so a poisoned pass can
-    /// be resubmitted as the same kind (a backward retries as a backward
-    /// against the same stashed forward epoch).
-    retry: Option<(Arc<Vec<Vec<f32>>>, PassKind)>,
+    /// Original-shape inputs + pass kind + model, retained so a poisoned
+    /// pass can be resubmitted as the same kind for the same model (a
+    /// backward retries as a backward against the same stashed forward
+    /// epoch; a model-B retry never perturbs model A).
+    retry: Option<(Arc<Vec<Vec<f32>>>, PassKind, ModelId)>,
 }
 
 struct Submission {
@@ -289,6 +305,7 @@ impl MoeEngine {
                 state: Mutex::new(SlotState {
                     epoch: 0,
                     kind: PassKind::Forward,
+                    model: 0,
                     freed: 0,
                     inputs: None,
                     orig: None,
@@ -380,26 +397,57 @@ impl MoeEngine {
         // assigned while we fence and swap (`quiet_fence` returns the
         // held guard after every assigned epoch has fully deposited).
         let _turnstile = quiet_fence(&self.inner);
-        let current = self.shared.placement();
-        let proposed = {
-            let tracker = self.shared.tracker.lock().unwrap();
-            plan_replication(policy, &tracker, &current)
+        // Anchor model first (the legacy placement/tracker fields), then
+        // every registry model: replication decisions are per-model — a
+        // hot expert in model A says nothing about model B — so each
+        // model's EWMA tracker drives its own map.
+        let mut swapped = {
+            let current = self.shared.placement();
+            let proposed = {
+                let tracker = self.shared.tracker.lock().unwrap();
+                plan_replication(policy, &tracker, &current)
+            };
+            if proposed.same_locations(&current) {
+                false
+            } else {
+                self.book_replica_moves(&current, &proposed, &self.shared.params());
+                self.shared.set_placement(Arc::new(proposed));
+                true
+            }
         };
-        if proposed.same_locations(&current) {
-            return Ok(false);
+        for id in self.shared.registry.resident_models() {
+            if id == 0 {
+                continue;
+            }
+            let Some(entry) = self.shared.registry.entry(id) else { continue };
+            let current = entry.placement.lock().unwrap().clone();
+            let proposed = {
+                let tracker = entry.tracker.lock().unwrap();
+                plan_replication(policy, &tracker, &current)
+            };
+            if proposed.same_locations(&current) {
+                continue;
+            }
+            self.book_replica_moves(&current, &proposed, &entry.params);
+            *entry.placement.lock().unwrap() = Arc::new(proposed);
+            swapped = true;
         }
-        // Book the weight movement: every (expert, rank) serving pair
-        // that is new in the proposed map is one expert-install onto
-        // that rank; every pair that vanished is a removal.
+        Ok(swapped)
+    }
+
+    /// Book the weight movement of one placement swap: every
+    /// (expert, rank) serving pair that is new in the proposed map is one
+    /// expert-install onto that rank; every pair that vanished is a
+    /// removal.
+    fn book_replica_moves(&self, current: &Placement, proposed: &Placement, p: &ModelParams) {
         let (mut installs, mut removals, mut bytes) = (0u64, 0u64, 0u64);
-        let params = self.shared.params();
         for ex in 0..proposed.num_experts() {
             let old = current.locations(ex);
             let new = proposed.locations(ex);
             for &(r, _) in new {
                 if !old.iter().any(|&(or, _)| or == r) {
                     installs += 1;
-                    bytes += params.experts[ex].size_bytes() as u64;
+                    bytes += p.experts[ex].size_bytes() as u64;
                 }
             }
             for &(r, _) in old {
@@ -408,14 +456,100 @@ impl MoeEngine {
                 }
             }
         }
-        {
-            let mut em = self.inner.metrics.lock().unwrap();
-            em.replica_installs += installs;
-            em.replica_removals += removals;
-            em.install_bytes += bytes;
+        let mut em = self.inner.metrics.lock().unwrap();
+        em.replica_installs += installs;
+        em.replica_removals += removals;
+        em.install_bytes += bytes;
+    }
+
+    /// Register a full expert set as a new resident model, at the same
+    /// epoch-fenced quiet point a `rebalance` swap uses (no pass in
+    /// flight observes a half-registered model). The weights are
+    /// content-fingerprinted first: a match against any resident model
+    /// shares that model's packed-cache region (zero new packs — audit
+    /// with the backend's pack counter); fresh weights are packed once
+    /// into their own key region. The returned [`ModelHandle`] carries
+    /// the assigned id, the fingerprint, and what residency actually
+    /// cost. Requires `Fused` mode and a free slot
+    /// (`SystemConfig::max_models`, knob `max_models`).
+    pub fn register_model(&self, params: Arc<ModelParams>) -> Result<ModelHandle> {
+        ensure!(
+            self.shared.mode == TaskGraphMode::Fused,
+            "multi-model residency requires Fused task-graph mode"
+        );
+        let fence = quiet_fence(&self.inner);
+        let backend = self.shared.backend.clone();
+        let pack_params = params.clone();
+        let handle = self.shared.registry.register_base(&self.shared.cfg, params, |key_base| {
+            backend.prepare_model(&pack_params, key_base)
+        })?;
+        self.inherit_failed_ranks(handle.id);
+        self.inner.metrics.lock().unwrap().model_registrations += 1;
+        drop(fence);
+        Ok(handle)
+    }
+
+    /// Register a LoRA-style [`DeltaSet`] as a variant of resident model
+    /// `base` (epoch-fenced, like [`register_model`](Self::register_model)):
+    /// the variant shares the base's parameters and packed panels and
+    /// stores only the low-rank tensors, which the rank actors apply in
+    /// each FFN tile's epilogue — residency costs `DeltaSet::bytes()`,
+    /// never a repack.
+    pub fn register_delta(&self, base: ModelId, delta: Arc<DeltaSet>) -> Result<ModelHandle> {
+        ensure!(
+            self.shared.mode == TaskGraphMode::Fused,
+            "multi-model residency requires Fused task-graph mode"
+        );
+        let fence = quiet_fence(&self.inner);
+        let handle = self.shared.registry.register_delta(&self.shared.cfg, base, delta)?;
+        self.inherit_failed_ranks(handle.id);
+        self.inner.metrics.lock().unwrap().model_registrations += 1;
+        drop(fence);
+        Ok(handle)
+    }
+
+    /// A model registered after a permanent rank death must not route to
+    /// the corpse: copy the anchor placement's failed-rank set into the
+    /// fresh entry's map. Caller holds the quiet fence.
+    fn inherit_failed_ranks(&self, model: ModelId) {
+        let Some(entry) = self.shared.registry.entry(model) else { return };
+        let anchor = self.shared.placement();
+        if !anchor.degraded() {
+            return;
         }
-        self.shared.set_placement(Arc::new(proposed));
-        Ok(true)
+        let mut pl = entry.placement.lock().unwrap();
+        let mut next = (**pl).clone();
+        for r in 0..self.shared.cfg.system.ranks {
+            if anchor.is_failed(r) {
+                next.fail_rank(r);
+            }
+        }
+        *pl = Arc::new(next);
+    }
+
+    /// Evict a resident model at the epoch-fenced quiet point, freeing
+    /// its registry slot (its heap band simply goes quiet). The anchor
+    /// (id 0) and any model that other residents depend on — a delta's
+    /// base, or the pack-region owner of a deduped registration — refuse
+    /// eviction.
+    pub fn evict_model(&self, model: ModelId) -> Result<()> {
+        let fence = quiet_fence(&self.inner);
+        self.shared.registry.evict(model)?;
+        self.inner.metrics.lock().unwrap().model_evictions += 1;
+        drop(fence);
+        Ok(())
+    }
+
+    /// Resident model ids, ascending (always starts with the anchor, 0).
+    pub fn resident_models(&self) -> Vec<ModelId> {
+        self.shared.registry.resident_models()
+    }
+
+    /// Total resident weight bytes across all models, counting every
+    /// shared packed region once — the figure the multi-model bench
+    /// compares against N dedicated engines.
+    pub fn resident_bytes(&self) -> usize {
+        self.shared.registry.resident_bytes()
     }
 
     /// Submit one fixed-shape, epoch-tagged forward pass: `inputs[r]` is
@@ -447,7 +581,7 @@ impl MoeEngine {
     /// wait happens on the slot's condvar with the epoch lock released,
     /// so one blocked submitter never serializes the others.
     pub fn submit_pass(&self, input: PassInput) -> Result<PassHandle> {
-        let epoch = submit_inner(&self.inner, input.per_rank, PassKind::Forward)?;
+        let epoch = submit_inner(&self.inner, input.per_rank, PassKind::Forward, input.model)?;
         Ok(PassHandle { inner: self.inner.clone(), epoch, collected: false })
     }
 
@@ -508,7 +642,7 @@ impl MoeEngine {
             );
         }
         let epoch =
-            submit_inner(&self.inner, grad_out.to_vec(), PassKind::Backward { fwd_epoch })?;
+            submit_inner(&self.inner, grad_out.to_vec(), PassKind::Backward { fwd_epoch }, 0)?;
         let fr = collect_retrying(&self.inner, epoch)?;
         let grads = fr.grads.expect("backward pass merges grads");
         Ok(BackwardResult { input_grads: fr.outputs, grads, metrics: fr.metrics })
@@ -539,6 +673,25 @@ impl MoeEngine {
         );
         let params = Arc::new(params);
         let fence = quiet_fence(&self.inner);
+        // `refresh` rewrites the anchor's packed region (key base 0). A
+        // deduped registration or delta variant sharing that region would
+        // silently start serving the *new* panels against its *old*
+        // parameter snapshot — refuse until those models are evicted.
+        let dependents: Vec<ModelId> = self
+            .shared
+            .registry
+            .resident_models()
+            .into_iter()
+            .filter(|&id| {
+                id != 0
+                    && self.shared.registry.entry(id).is_some_and(|e| e.key_base == 0)
+            })
+            .collect();
+        ensure!(
+            dependents.is_empty(),
+            "update_params would invalidate resident models {dependents:?} that share \
+             the anchor's packed weights (dedup or delta variants): evict them first"
+        );
         self.shared.backend.refresh(&params)?;
         self.shared.set_params(params);
         drop(fence);
@@ -674,9 +827,20 @@ fn submit_inner(
     inner: &Arc<EngineInner>,
     mut per_rank: Vec<Vec<f32>>,
     kind: PassKind,
+    model: ModelId,
 ) -> Result<u64> {
     let cfg = &inner.shared.cfg;
     let h = cfg.model.h;
+    if model != 0 {
+        ensure!(
+            inner.shared.mode == TaskGraphMode::Fused,
+            "model {model}: non-anchor models serve in Fused task-graph mode only"
+        );
+        ensure!(
+            inner.shared.registry.is_resident(model),
+            "model {model} is not resident (register it first)"
+        );
+    }
     ensure!(
         per_rank.len() == cfg.system.ranks,
         "need {} rank inputs, got {}",
@@ -711,10 +875,24 @@ fn submit_inner(
             bail!("engine is shut down");
         }
         let mut next = inner.next_epoch.lock().unwrap();
-        // Snapshot the placement inside the epoch critical section so the
-        // repack and the pass run against the same map (`rebalance` and
-        // the degrade swap both hold `next_epoch` across their fence).
-        let placement = inner.shared.placement();
+        // Snapshot the *pass model's* placement inside the epoch critical
+        // section so the repack and the pass run against the same map
+        // (`rebalance`, the degrade swap, and model load/evict all hold
+        // `next_epoch` across their fence). Re-check residency under the
+        // lock: an evict may have raced the pre-lock validation.
+        let placement = if model == 0 {
+            inner.shared.placement()
+        } else {
+            inner
+                .shared
+                .registry
+                .entry(model)
+                .ok_or_else(|| anyhow!("model {model} was evicted before the pass started"))?
+                .placement
+                .lock()
+                .unwrap()
+                .clone()
+        };
         let (orig, moves, degraded, experts_unavailable) = if placement.degraded() {
             // A backward's grad rows must land on the exact ranks that
             // stashed the forward — the row repack that keeps forwards
@@ -768,6 +946,7 @@ fn submit_inner(
         }
         st.epoch = epoch;
         st.kind = kind;
+        st.model = model;
         st.inputs = Some(inputs);
         st.orig = Some(orig);
         st.moves = moves;
@@ -790,7 +969,7 @@ fn submit_inner(
 fn collect2(
     inner: &Arc<EngineInner>,
     epoch: u64,
-) -> (Result<ForwardResult>, Option<(Arc<Vec<Vec<f32>>>, PassKind)>) {
+) -> (Result<ForwardResult>, Option<(Arc<Vec<Vec<f32>>>, PassKind, ModelId)>) {
     let slot = inner.slot_of(epoch);
     let mut st = slot.state.lock().unwrap();
     if st.epoch == epoch {
@@ -822,6 +1001,7 @@ fn collect2(
 fn assemble(inner: &Arc<EngineInner>, st: &mut SlotState) -> Parked {
     let epoch = st.epoch;
     let kind = st.kind;
+    let model = st.model;
     let rank_outputs: Vec<Result<RankOutput>> =
         st.outputs.iter_mut().map(|o| o.take().expect("deposited output")).collect();
     let orig = st.orig.take();
@@ -830,6 +1010,7 @@ fn assemble(inner: &Arc<EngineInner>, st: &mut SlotState) -> Parked {
     let experts_unavailable = st.experts_unavailable;
     st.epoch = 0;
     st.kind = PassKind::Forward;
+    st.model = 0;
     st.freed = epoch;
     st.inputs = None;
     st.degraded = false;
@@ -847,6 +1028,7 @@ fn assemble(inner: &Arc<EngineInner>, st: &mut SlotState) -> Parked {
         placement_version,
         experts_unavailable,
         backward: kind != PassKind::Forward,
+        model,
         ..Default::default()
     };
     let mut grads: Option<GradStore> = None;
@@ -857,7 +1039,7 @@ fn assemble(inner: &Arc<EngineInner>, st: &mut SlotState) -> Parked {
             Err(e) => {
                 return Parked {
                     result: Err(e.context(format!("pass {epoch}, rank {rank}"))),
-                    retry: orig.map(|o| (o, kind)),
+                    retry: orig.map(|o| (o, kind, model)),
                 }
             }
         };
@@ -932,13 +1114,29 @@ fn quiet_fence(inner: &Arc<EngineInner>) -> MutexGuard<'_, u64> {
 /// strictly between passes, like `rebalance`.
 fn degrade_placement(inner: &Arc<EngineInner>, rank: usize) {
     let fence = quiet_fence(inner);
-    // Another waiter may have degraded the same rank while we fenced.
-    if inner.shared.placement().is_failed(rank) {
-        return;
+    // A dead rank is dead for every resident model, so fail it in the
+    // anchor map and in each registry model's map. Another waiter may
+    // have degraded the same rank while we fenced — each map checks
+    // independently (a model registered mid-degrade inherits the failed
+    // set at registration instead).
+    if !inner.shared.placement().is_failed(rank) {
+        let mut next = (*inner.shared.placement()).clone();
+        next.fail_rank(rank);
+        inner.shared.set_placement(Arc::new(next));
     }
-    let mut next = (*inner.shared.placement()).clone();
-    next.fail_rank(rank);
-    inner.shared.set_placement(Arc::new(next));
+    for id in inner.shared.registry.resident_models() {
+        if id == 0 {
+            continue;
+        }
+        let Some(entry) = inner.shared.registry.entry(id) else { continue };
+        let mut pl = entry.placement.lock().unwrap();
+        if pl.is_failed(rank) {
+            continue;
+        }
+        let mut next = (**pl).clone();
+        next.fail_rank(rank);
+        *pl = Arc::new(next);
+    }
     drop(fence);
 }
 
@@ -982,7 +1180,7 @@ fn collect_retrying(inner: &Arc<EngineInner>, epoch: u64) -> Result<ForwardResul
             || fault::is_dead_rank(&msg)
             || msg.contains("incast")
             || msg.contains("abandoning pass gen");
-        let Some((inputs, kind)) = retry.take() else { return Err(err) };
+        let Some((inputs, kind, model)) = retry.take() else { return Err(err) };
         if !retryable || (tries as usize) >= limit {
             return Err(err);
         }
@@ -991,7 +1189,7 @@ fn collect_retrying(inner: &Arc<EngineInner>, epoch: u64) -> Result<ForwardResul
         }
         std::thread::sleep(Duration::from_millis(1u64 << tries.min(6)));
         tries += 1;
-        match submit_inner(inner, inputs.as_ref().clone(), kind) {
+        match submit_inner(inner, inputs.as_ref().clone(), kind, model) {
             Ok(e2) => {
                 cur_epoch = e2;
                 let (r2, t2) = collect2(inner, e2);
@@ -1028,7 +1226,13 @@ fn observe_pass(shared: &EngineShared, st: &SlotState) {
             busy[rank] = ro.metrics.busy_secs;
         }
     }
-    shared.tracker.lock().unwrap().observe(&offered, &busy);
+    // Each model keeps its own EWMA: a hot expert in one model must not
+    // trigger replication (or mask a cold expert) in another.
+    if st.model == 0 {
+        shared.tracker.lock().unwrap().observe(&offered, &busy);
+    } else if let Some(entry) = shared.registry.entry(st.model) {
+        entry.tracker.lock().unwrap().observe(&offered, &busy);
+    }
 }
 
 /// A rank actor's main thread: spawn the resident worker group once, then
@@ -1053,7 +1257,7 @@ fn rank_main(shared: Arc<EngineShared>, inner: Arc<EngineInner>, rank: usize) {
             break;
         }
         let slot = inner.slot_of(next);
-        let (inputs, kind) = {
+        let (inputs, kind, model) = {
             // The doorbell only guarantees *some* epoch >= `next` was
             // submitted; with concurrent submitters, epoch `next + 1`
             // (the other slot) may ring before `next` is installed here.
@@ -1064,14 +1268,14 @@ fn rank_main(shared: Arc<EngineShared>, inner: Arc<EngineInner>, rank: usize) {
             while st.epoch != next {
                 st = slot.cv.wait(st).unwrap();
             }
-            (st.inputs.as_ref().expect("submitted inputs").clone(), st.kind)
+            (st.inputs.as_ref().expect("submitted inputs").clone(), st.kind, st.model)
         };
         // A subscriber watchdog panic must not wedge `wait()`ers: convert
         // it into a deposited error instead of a dead slot. Before serving
         // another epoch, re-synchronize the rank's workers (the unwound
         // pass may have left them mid-drain on its queue).
         let result = match catch_unwind(AssertUnwindSafe(|| match kind {
-            PassKind::Forward => actor.run_pass(next, &inputs[rank]),
+            PassKind::Forward => actor.run_pass(next, &inputs[rank], model),
             PassKind::Backward { fwd_epoch } => {
                 actor.run_backward_pass(next, fwd_epoch, &inputs[rank])
             }

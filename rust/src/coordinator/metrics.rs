@@ -138,6 +138,13 @@ pub struct PassMetrics {
     /// The pass epoch this result belongs to (1-based submission order;
     /// also the generation tag stamped into the symmetric heap's flags).
     pub epoch: u64,
+    /// Resident model the pass ran against (see
+    /// [`ModelRegistry`](crate::registry::ModelRegistry)): 0 is the
+    /// engine's anchor model; ids > 0 are models registered at runtime.
+    /// A pass never mixes models — every row of the pass belongs to this
+    /// one id, and its tiles lived in this model's band of the symmetric
+    /// heap.
+    pub model: usize,
     /// End-to-end wall time (max over ranks; the paper's forward latency).
     pub wall_secs: f64,
     /// Token rows actually submitted across ranks (Σ `rows_in`).
@@ -428,6 +435,14 @@ pub struct EngineMetrics {
     /// dead-endpoint rejections), mirrored from the transport's
     /// [`FaultPlan`](crate::fault::FaultPlan) counter at snapshot time.
     pub faults_injected: u64,
+    /// Models registered into the engine's
+    /// [`ModelRegistry`](crate::registry::ModelRegistry) over its life
+    /// (base registrations + delta registrations; each is epoch-fenced
+    /// like a rebalance). The anchor model the engine started with is
+    /// not counted.
+    pub model_registrations: u64,
+    /// Models evicted from the registry over the engine's life.
+    pub model_evictions: u64,
 }
 
 impl EngineMetrics {

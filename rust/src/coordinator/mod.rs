@@ -30,6 +30,17 @@
 //! engine.shutdown()  // or drop — actors drained, parked threads joined
 //! ```
 //!
+//! Multi-model residency: with `max_models > 1` one engine serves
+//! several models from the same resident actors and symmetric heap. The
+//! [`ModelRegistry`](crate::registry) fingerprints registered weights
+//! (content-identical models share one packed-cache region; LoRA-style
+//! [`DeltaSet`](crate::registry::DeltaSet) variants share their base's
+//! panels and cost only the delta bytes), each model owns a disjoint
+//! band of heap expert slots, and every pass — [`PassInput::model`],
+//! [`RequestOpts::model`] — serves exactly one model. Registration,
+//! eviction, replication rebalancing and degraded-placement swaps are
+//! all epoch-fenced per-model mutations at the same quiet points.
+//!
 //! Module map (mirrors Fig. 6, plus the serving front end):
 //! * [`service`]   — the request-level [`MoeService`]: a resident
 //!   continuous batcher over the engine — `enqueue` variable-length

@@ -8,7 +8,9 @@
 //! call sites (and any downstream embedder of the old API) keep working
 //! unchanged while inheriting the resident-actor fast path. Outputs are
 //! identical to the engine API by construction (same actors, same pass
-//! path, deterministic combine fold).
+//! path, deterministic combine fold). The shim always serves the anchor
+//! model (id 0); reach [`engine`](DistributedMoE::engine) for
+//! multi-model registration and per-model passes.
 
 use std::sync::Arc;
 

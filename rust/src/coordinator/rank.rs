@@ -72,6 +72,7 @@ use crate::expert::ModelParams;
 use crate::gate::{dispatch_plan, route_from_scores, DispatchPlan, DispatchTile};
 use crate::gemm;
 use crate::placement::{LoadTracker, Placement};
+use crate::registry::{DeltaSet, ModelRegistry};
 use crate::train::grad::ExpertGrad;
 use crate::transport::{NodeFabric, Transport};
 use crate::layout::{Coord, LayoutDims};
@@ -167,6 +168,14 @@ pub struct EngineShared {
     /// `rebalance` consumes it. Separate lock from `placement` — the
     /// tracker is written every pass, the placement only at rebalance.
     pub tracker: Mutex<LoadTracker>,
+    /// The model table for multi-model residency (ROADMAP item 5):
+    /// fingerprinted registration with packed-weight dedup, LoRA-style
+    /// delta variants, and per-model placement/tracker state for ids
+    /// `1..max_models`. The anchor model (id 0) keeps using the legacy
+    /// fields above — a `max_models = 1` engine is bitwise-identical to
+    /// a registry-free one. Mutated only at the engine's epoch-fenced
+    /// quiet point.
+    pub registry: Arc<ModelRegistry>,
 }
 
 impl EngineShared {
@@ -186,6 +195,7 @@ impl EngineShared {
         let placement = Arc::new(Placement::from_config(&cfg));
         let tracker =
             LoadTracker::new(cfg.model.e, ranks, cfg.system.replication.ewma_alpha);
+        let registry = Arc::new(ModelRegistry::new(&cfg, params.clone()));
         Self {
             cfg,
             capacity,
@@ -203,6 +213,7 @@ impl EngineShared {
             threads_spawned: AtomicU64::new(0),
             placement: Mutex::new(placement),
             tracker: Mutex::new(tracker),
+            registry,
         }
     }
 
@@ -626,6 +637,20 @@ struct PassCtx {
     /// The parameter snapshot this pass computes with (forward: the live
     /// params at pass start; backward: the stashed forward's params).
     params: Arc<ModelParams>,
+    /// Which resident model this pass serves (0 = anchor). A pass never
+    /// mixes models.
+    model: usize,
+    /// First expert slot of `model`'s heap band. Plan `dslot`s are
+    /// shifted band-absolute once after planning, so this offset is only
+    /// needed to map a slot back to its band-relative index — for
+    /// placement resolution and the replica-slot check.
+    e_base: usize,
+    /// Packed-weight cache region of this model's weights: global expert
+    /// `e` is served under backend cache key `key_base + e` (shared with
+    /// the base model for dedups and delta variants).
+    key_base: usize,
+    /// LoRA-style epilogue update, `Some` for delta-variant models.
+    delta: Option<Arc<DeltaSet>>,
     /// Forward stashing target (`Some` when training stash is on):
     /// FusedFfn/Combine tasks capture activations here as they run.
     stash: Option<Arc<RankStash>>,
@@ -719,12 +744,22 @@ impl RankActor {
     /// zero-row rank still sweeps and serves its experts for its peers.
     /// Steady-state: no allocation of threads, no heap reset — the pass
     /// barrier plus generation-tagged flags do all the cross-pass fencing.
-    pub fn run_pass(&self, epoch: u64, a: &[f32]) -> Result<RankOutput> {
+    ///
+    /// `model` selects which resident model the pass serves: 0 is the
+    /// anchor (the legacy engine fields), ids ≥ 1 resolve through the
+    /// [`ModelRegistry`]. Every rank of a pass runs the same model — the
+    /// engine stamps it into the pass ticket — and non-anchor models are
+    /// Fused-only (validated at submit).
+    pub fn run_pass(&self, epoch: u64, a: &[f32], model: usize) -> Result<RankOutput> {
         let shared = &self.shared;
         let cfg = &shared.cfg;
         let rank = self.rank;
         let (s_rank, h) = (cfg.system.s_rank, cfg.model.h);
         anyhow::ensure!(a.len() % h == 0, "rank {rank}: bad input length");
+        anyhow::ensure!(
+            model == 0 || shared.mode == TaskGraphMode::Fused,
+            "rank {rank}: non-anchor models serve in Fused task-graph mode only"
+        );
         let s_rows = a.len() / h;
         anyhow::ensure!(
             s_rows <= s_rank,
@@ -761,13 +796,30 @@ impl RankActor {
         let t0 = Instant::now();
         let (bytes_local_0, bytes_remote_0) = shared.fabric.bytes_in(rank);
         let steals_0 = self.queue.steals();
-        // Placement snapshot for this pass. Taken *after* the barrier
-        // pair: rebalance only swaps the map with no pass in flight, so
-        // every rank of this pass reads the same version.
-        let placement = shared.placement();
-        // Parameter snapshot for this pass, taken with the placement:
-        // update_params swaps the Arc only with no pass in flight.
-        let params = shared.params();
+        // Per-model pass state, snapshotted *after* the barrier pair:
+        // rebalance / update_params / model load+evict all mutate at the
+        // engine's epoch-fenced quiet point only, so every rank of this
+        // pass reads one consistent version. The anchor model (0) reads
+        // the legacy engine fields; registry models read their entry.
+        // `e_base` is the first slot of the model's private band in the
+        // (multiplied) expert-slot dimension; `key_base` shifts backend
+        // packed-cache keys the same way.
+        let (params, placement, delta, key_base, e_base) = if model == 0 {
+            (shared.params(), shared.placement(), None, 0usize, 0usize)
+        } else {
+            let entry = shared
+                .registry
+                .entry(model)
+                .ok_or_else(|| anyhow!("rank {rank}: model {model} is not resident"))?;
+            let placement = entry.placement.lock().unwrap().clone();
+            (
+                entry.params.clone(),
+                placement,
+                entry.delta.clone(),
+                entry.key_base,
+                shared.registry.e_base(model),
+            )
+        };
         let e_slots = shared.dims.e_local;
 
         // ---- FusedGate (Alg. 1 line 1) ---------------------------------------
@@ -784,7 +836,19 @@ impl RankActor {
             !cfg.model.policy.is_dropless() || dropped == 0,
             "rank {rank}: dropless routing dropped {dropped} pairs (slot region undersized)"
         );
-        let plan = dispatch_plan(&routing, cfg.model.bm, &placement);
+        let mut plan = dispatch_plan(&routing, cfg.model.bm, &placement);
+        // Shift every destination slot into this model's heap band: one
+        // mutation here makes the announcements, dispatch coordinates,
+        // T_phi keys, combine bookkeeping and the flag sweep all
+        // band-absolute, with no per-site offsetting downstream. The
+        // anchor's band starts at 0, so the single-model path is
+        // untouched.
+        if e_base > 0 {
+            for t in &mut plan.tiles {
+                t.dslot += e_base as u32;
+            }
+        }
+        let plan = plan;
 
         // ---- announce dispatch-tile counts (before dispatching) --------------
         // Per-destination totals drive the self-correcting task bound;
@@ -968,10 +1032,26 @@ impl RankActor {
             debug_assert_eq!(blocks, shared.expected_dispatch[rank].load(Ordering::Acquire));
             (incoming, base, blocks)
         } else {
+            // Region-masked static sizing: only this model's slot band
+            // can receive tiles this pass, so every other band gets zero
+            // incoming tiles (the flag sweep then skips it entirely).
+            // With max_models = 1 the band covers every slot and this
+            // reduces bitwise to the legacy `i * tpe` prefix table.
             let tpe = shared.dims.tiles_per_expert() as u32;
-            let incoming = vec![tpe; pe_slots];
-            let base = (0..pe_slots as u32).map(|i| i * tpe).collect();
-            (incoming, base, pe_slots as u32 * tpe)
+            let band_w = cfg.local_experts() + cfg.replica_slots();
+            let mut incoming = vec![0u32; pe_slots];
+            let mut base = vec![0u32; pe_slots];
+            let mut blocks = 0u32;
+            for peer in 0..ranks_n {
+                for el in 0..e_slots {
+                    base[peer * e_slots + el] = blocks;
+                    if el >= e_base && el < e_base + band_w {
+                        incoming[peer * e_slots + el] = tpe;
+                        blocks += tpe;
+                    }
+                }
+            }
+            (incoming, base, blocks)
         };
         // expected combine tiles per (serving rank, serving slot), from my
         // own plan: the server writes results back at the same tile index
@@ -1000,8 +1080,14 @@ impl RankActor {
         // side, per-block inputs + post-ReLU intermediates on the owner
         // side (filled by FusedFfn tasks as they run), and unweighted
         // expert outputs (filled by Combine tasks). Fused mode only — the
-        // split GEMM chain has no mid-capture seam wired.
-        let stash = (shared.mode == TaskGraphMode::Fused && cfg.system.train.stash()).then(|| {
+        // split GEMM chain has no mid-capture seam wired. Anchor-model
+        // passes only: training flows through model 0 (the Trainer's
+        // master params are the anchor's), so non-anchor passes never
+        // stash.
+        let stash = (shared.mode == TaskGraphMode::Fused
+            && cfg.system.train.stash()
+            && model == 0)
+            .then(|| {
             Arc::new(RankStash {
                 epoch,
                 placement_version: placement.version(),
@@ -1044,6 +1130,10 @@ impl RankActor {
             placement: placement.clone(),
             plan,
             params,
+            model,
+            e_base,
+            key_base,
+            delta,
             stash: stash.clone(),
             bwd: None,
         });
@@ -1338,6 +1428,10 @@ impl RankActor {
             placement: stash.placement.clone(),
             plan: stash.plan.clone(),
             params: stash.params.clone(),
+            model: 0,
+            e_base: 0,
+            key_base: 0,
+            delta: None,
             stash: None,
             bwd: Some(bwd),
         });
@@ -1549,10 +1643,11 @@ fn subscriber_loop(ctx: &PassCtx, my_expected_combine: u32) -> Result<()> {
         if shared.poisoned(ctx.epoch32) {
             ctx.queue.stop_all();
             bail!(
-                "rank {} abandoning pass gen {}: a peer failed mid-transfer \
+                "rank {} abandoning pass gen {} (model {}): a peer failed mid-transfer \
                  (e.g. NIC incast overflow)",
                 ctx.rank,
-                ctx.epoch32
+                ctx.epoch32,
+                ctx.model
             );
         }
         let mut progressed = false;
@@ -1908,7 +2003,9 @@ fn gate_backward(
 fn decode_dispatch(ctx: &PassCtx, peer: usize, e_loc: usize, tile: usize, rows: usize, seq: &mut u32) {
     let m = &ctx.shared.cfg.model;
     ctx.counters.ffn_decoded.fetch_add(1, Ordering::Relaxed);
-    if e_loc >= ctx.shared.cfg.local_experts() {
+    // `e_loc` is band-absolute; the replica slots sit at the tail of the
+    // pass model's own band.
+    if e_loc - ctx.e_base >= ctx.shared.cfg.local_experts() {
         // rows landing in a replica slot: traffic replication absorbed
         ctx.counters.replica_rows.fetch_add(rows as u64, Ordering::Relaxed);
     }
@@ -2003,13 +2100,14 @@ fn execute_task(
     let m = &shared.cfg.model;
     let (h, bm, bn) = (m.h, m.bm, m.bn);
     let (peer, e_loc, tile) = (task.peer as usize, task.expert as usize, task.tile as usize);
-    // `task.expert` is a *slot* on the serving rank. For compute tasks
-    // the serving rank is us — resolve the slot to the global expert it
-    // is bound to under this pass's placement snapshot (owned slots map
-    // statically; replica slots follow the dynamic binding).
+    // `task.expert` is a band-absolute *slot* on the serving rank. For
+    // compute tasks the serving rank is us — strip the pass model's band
+    // offset and resolve the slot to the global expert it is bound to
+    // under this pass's placement snapshot (owned slots map statically;
+    // replica slots follow the dynamic binding).
     let resolve = |r: usize| {
         ctx.placement
-            .expert_on(r, e_loc)
+            .expert_on(r, e_loc - ctx.e_base)
             .ok_or_else(|| anyhow!("rank {r} slot {e_loc}: no expert bound (task {task:?})"))
     };
     match task.task_type {
@@ -2024,13 +2122,44 @@ fn execute_task(
                 }
             };
             let global_e = resolve(ctx.rank)?;
+            // Cache key shifted into the pass model's packed region: a
+            // dedup or delta variant shares its base's `key_base`, so the
+            // same packed panels serve both models.
             shared.backend.ffn_tile(
                 x,
                 &ctx.params.experts[global_e],
-                global_e,
+                ctx.key_base + global_e,
                 &mut tile_out[..bm * h],
                 scratch,
             )?;
+            // Delta-variant epilogue (multi-model): the base's packed
+            // panels computed the main FFN; fold the low-rank update
+            // `(mid·A2)·B2 + db2` into the output rows before they ship.
+            // `mid` comes free from scratch when the backend honors the
+            // contract; otherwise replay GEMM0+ReLU for these rows.
+            if let Some(delta) = &ctx.delta {
+                let rows = task.rows as usize;
+                let mid_buf;
+                let mid: &[f32] = if shared.backend.mid_in_scratch() {
+                    &scratch[..rows * m.d]
+                } else {
+                    let ex = &ctx.params.experts[global_e];
+                    let mut buf = vec![0.0f32; rows * m.d];
+                    gemm::gemm_bias(
+                        x,
+                        &ex.w1,
+                        Some(&ex.b1),
+                        &mut buf,
+                        rows,
+                        h,
+                        m.d,
+                        gemm::Epilogue::Relu,
+                    );
+                    mid_buf = buf;
+                    &mid_buf
+                };
+                delta.apply_rows(global_e, mid, &mut tile_out[..rows * h], rows);
+            }
             // Training tape: capture this block's decoded inputs (dW1's
             // left operand) and — when the backend leaves the post-ReLU
             // intermediate in scratch — the mid block, so the backward

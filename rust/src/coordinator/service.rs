@@ -37,6 +37,14 @@
 //! expert placement to hot experts between passes — outputs are
 //! unaffected (the gate-side splitter keeps the combine fold identical).
 //!
+//! Multi-model: with `max_models > 1` the service front-end serves every
+//! resident model of the engine's [`ModelRegistry`](crate::registry) —
+//! [`MoeService::register_model`] / [`MoeService::register_delta`] add
+//! models while serving, and [`RequestOpts::model`] routes each request.
+//! The batcher stops coalescing at a model boundary (a pass never mixes
+//! models), so every request's output is bitwise what a dedicated
+//! single-model engine would produce.
+//!
 //! Shutdown ([`MoeService::shutdown`] or drop) stops admission
 //! (`enqueue` returns [`ServiceError::ShuttingDown`]), drains every
 //! already-queued and in-flight request, then shuts the engine down and
@@ -53,6 +61,7 @@ use anyhow::Result;
 
 use crate::config::Config;
 use crate::expert::ModelParams;
+use crate::registry::{DeltaSet, ModelHandle, ModelId};
 use crate::runtime::ComputeBackend;
 
 use super::engine::{MoeEngine, PassHandle, PassInput};
@@ -132,6 +141,16 @@ pub struct RequestOpts {
     /// Admission priority under [`QueueDiscipline::Priority`] (higher
     /// admits first); ignored under FIFO.
     pub priority: i32,
+    /// Which resident model serves this request (0 = the anchor model
+    /// the service was started with; ids ≥ 1 come from
+    /// [`MoeEngine::register_model`](super::engine::MoeEngine::register_model)
+    /// / `register_delta` on the underlying engine). The batcher never
+    /// mixes models in a pass: coalescing stops at a model boundary, so
+    /// co-resident models ride separate passes and each request's output
+    /// is bitwise what a dedicated single-model engine would produce. A
+    /// request naming a model that is not resident at admission fails at
+    /// submit, like any other engine refusal.
+    pub model: ModelId,
     /// Client latency budget, measured from `enqueue`. A request whose
     /// budget has already expired when the batcher would admit it is
     /// failed ("deadline exceeded before admission") instead of being
@@ -305,6 +324,9 @@ struct Chunk {
     /// Row offset of this chunk in its request's output.
     out_offset: usize,
     priority: i32,
+    /// Resident model serving this chunk — the batcher coalesces only
+    /// same-model chunks into a pass.
+    model: ModelId,
     /// Absolute admission deadline (`enqueued_at + RequestOpts::deadline`);
     /// every chunk of a request carries the same instant.
     deadline: Option<Instant>,
@@ -364,6 +386,12 @@ pub struct ServiceReport {
 /// ```
 pub struct MoeService {
     shared: Arc<ServiceShared>,
+    /// Shared with the batcher thread; the service handle uses it for
+    /// model registration (epoch-fenced on the engine side, so it is
+    /// safe concurrent with the batcher's passes). The engine shuts down
+    /// when the last `Arc` drops — after the batcher has exited and
+    /// published its final metrics.
+    engine: Arc<MoeEngine>,
     batcher: Option<JoinHandle<()>>,
 }
 
@@ -386,7 +414,7 @@ impl MoeService {
             cfg.system.max_batch_tokens()
         );
         anyhow::ensure!(policy.queue_requests > 0, "queue_requests must be positive");
-        let engine = MoeEngine::start(cfg.clone(), params, backend, mode)?;
+        let engine = Arc::new(MoeEngine::start(cfg.clone(), params, backend, mode)?);
         let shared = Arc::new(ServiceShared {
             h: cfg.model.h,
             ranks: cfg.system.ranks,
@@ -403,12 +431,13 @@ impl MoeService {
         });
         let batcher = {
             let shared = shared.clone();
+            let engine = engine.clone();
             std::thread::Builder::new()
                 .name("flash-batcher".into())
                 .spawn(move || batcher_main(shared, engine))
                 .expect("spawn service batcher")
         };
-        Ok(Self { shared, batcher: Some(batcher) })
+        Ok(Self { shared, engine, batcher: Some(batcher) })
     }
 
     /// Convenience: start with [`BatchPolicy::from_config`] defaults.
@@ -507,6 +536,7 @@ impl MoeService {
                 rows,
                 out_offset: 0,
                 priority: opts.priority,
+                model: opts.model,
                 deadline,
                 last: true,
             };
@@ -521,6 +551,7 @@ impl MoeService {
                     rows: hi - lo,
                     out_offset: lo,
                     priority: opts.priority,
+                    model: opts.model,
                     deadline,
                     last: i + 1 == n_chunks,
                 };
@@ -541,6 +572,32 @@ impl MoeService {
     /// Snapshot of the cumulative service metrics.
     pub fn metrics(&self) -> ServiceMetrics {
         self.shared.queue.lock().unwrap().metrics.clone()
+    }
+
+    /// Register a full expert set as an additional resident model on the
+    /// underlying engine (fingerprint-deduped against the shared packed
+    /// cache; epoch-fenced, so safe while the batcher serves). Requests
+    /// route to it via [`RequestOpts::model`].
+    pub fn register_model(&self, params: Arc<ModelParams>) -> Result<ModelHandle> {
+        self.engine.register_model(params)
+    }
+
+    /// Register a LoRA-style delta variant of resident model `base`: it
+    /// shares the base's packed weights and costs only the delta bytes.
+    pub fn register_delta(&self, base: ModelId, delta: Arc<DeltaSet>) -> Result<ModelHandle> {
+        self.engine.register_delta(base, delta)
+    }
+
+    /// Evict a resident model (the anchor and depended-on models refuse).
+    /// Queued requests naming the evicted model fail at submit.
+    pub fn evict_model(&self, model: ModelId) -> Result<()> {
+        self.engine.evict_model(model)
+    }
+
+    /// Total resident weight bytes across all models, shared packed
+    /// regions counted once.
+    pub fn resident_bytes(&self) -> usize {
+        self.engine.resident_bytes()
     }
 
     /// Stop admission, drain every queued and in-flight request, shut the
@@ -587,7 +644,7 @@ enum Admission {
     Exit,
 }
 
-fn batcher_main(shared: Arc<ServiceShared>, engine: MoeEngine) {
+fn batcher_main(shared: Arc<ServiceShared>, engine: Arc<MoeEngine>) {
     let mut in_flight: Option<InFlight> = None;
     loop {
         match admit(&shared, in_flight.is_some()) {
@@ -671,10 +728,11 @@ fn batcher_main(shared: Arc<ServiceShared>, engine: MoeEngine) {
             }
         }
     }
-    // Publish the engine's final accounting, then take it down (drop
-    // joins the rank actors).
+    // Publish the engine's final accounting; the engine itself shuts
+    // down (rank actors joined) when the service handle drops its
+    // remaining `Arc`.
     let em = engine.metrics();
-    engine.shutdown();
+    drop(engine);
     shared.queue.lock().unwrap().engine_metrics = Some(em);
 }
 
@@ -726,6 +784,10 @@ fn admit(shared: &ServiceShared, have_in_flight: bool) -> Admission {
 
         let mut batch: Vec<Chunk> = Vec::new();
         let mut rows = 0usize;
+        // A pass never mixes models: the batch's model is fixed by its
+        // first admitted chunk, and coalescing stops at a model boundary
+        // (the other model's chunks lead the *next* batch).
+        let batch_model = q.chunks.front().unwrap().model;
         // The coalescing window closes max_delay after the oldest queued
         // chunk's *enqueue* (not admission), so a request's time-to-pass
         // is bounded even when traffic trickles.
@@ -734,10 +796,15 @@ fn admit(shared: &ServiceShared, have_in_flight: bool) -> Admission {
             // admit everything that fits right now (chunks are
             // <= max_tokens by construction, so an empty batch always
             // admits the front chunk)
+            let mut model_boundary = false;
             while let Some(c) = q.chunks.front() {
                 if c.cell.cancelled.load(Ordering::Acquire) {
                     purge_cancelled(shared, &mut q);
                     continue;
+                }
+                if c.model != batch_model {
+                    model_boundary = true;
+                    break;
                 }
                 if rows + c.rows > policy.max_tokens {
                     break;
@@ -752,6 +819,9 @@ fn admit(shared: &ServiceShared, have_in_flight: bool) -> Admission {
             }
             if rows >= policy.max_tokens || !q.accepting {
                 break; // full, or shutting down: don't dawdle
+            }
+            if model_boundary && !batch.is_empty() {
+                break; // submit now; the next model's traffic must not wait on our window
             }
             let now = Instant::now();
             if now >= deadline {
@@ -801,7 +871,9 @@ fn pack(shared: &ServiceShared, batch: &[Chunk]) -> PassInput {
             v += 1;
         }
     }
-    PassInput::new(per_rank)
+    // `admit` never mixes models in a batch, so the first chunk's model
+    // is the batch's model.
+    PassInput::for_model(per_rank, batch.first().map_or(0, |c| c.model))
 }
 
 /// Collect one in-flight pass and scatter its outputs back to the

@@ -124,6 +124,16 @@ impl ModelParams {
                 .map(|e| e.w1.len() + e.b1.len() + e.w2.len() + e.b2.len())
                 .sum::<usize>()
     }
+
+    /// Resident bytes of the full parameter set at f32 — the unit of the
+    /// multi-model registry's footprint accounting
+    /// ([`ModelRegistry::resident_bytes`](crate::registry::ModelRegistry::resident_bytes)):
+    /// a fresh base model costs this, a fingerprint dedup costs 0, a
+    /// delta variant costs only
+    /// [`DeltaSet::bytes`](crate::registry::DeltaSet::bytes).
+    pub fn size_bytes(&self) -> usize {
+        self.num_params() * std::mem::size_of::<f32>()
+    }
 }
 
 /// Generate one rank's token matrix (S_r, H), keyed by rank so every rank

@@ -1767,3 +1767,215 @@ pub fn chaos_json(points: &[ChaosPoint]) -> Json {
             .collect(),
     )
 }
+
+// ---------------------------------------------------------------------------
+// PR 10: multi-model residency
+// ---------------------------------------------------------------------------
+
+/// Per-model serving measurement under a Zipf multi-model trace — one
+/// row per resident model.
+#[derive(Clone, Debug)]
+pub struct MultiModelPoint {
+    /// Resident model id (0 = anchor).
+    pub model: usize,
+    /// `"anchor"`, `"base"` (independent weights) or `"lora"` (delta
+    /// variant of model 0).
+    pub kind: &'static str,
+    /// Requests the trace routed to this model.
+    pub requests: usize,
+    pub served: u64,
+    /// Request latency percentiles (enqueue → completion), seconds.
+    pub latency_p50: f64,
+    pub latency_p99: f64,
+}
+
+/// Residency accounting for the co-resident engine vs N dedicated
+/// engines — the memory side of the multi-model claim.
+#[derive(Clone, Debug)]
+pub struct MultiModelResidency {
+    /// `resident_bytes()` of the one engine serving all three models.
+    pub co_resident_bytes: usize,
+    /// What three dedicated single-model engines would hold (the LoRA
+    /// variant materialized as a full independent model).
+    pub dedicated_bytes: usize,
+    /// Incremental bytes the LoRA registration actually added.
+    pub lora_incremental_bytes: usize,
+    /// Bytes of one full independent pack (a whole model's parameters) —
+    /// the figure the LoRA increment must beat.
+    pub full_pack_bytes: usize,
+}
+
+/// Serving config for the multi-model A/B: three resident-model slots,
+/// dropless routing (request outputs independent of pass co-travelers).
+pub fn multimodel_config() -> Result<Config> {
+    let mut cfg = Config::preset("tiny")?;
+    cfg.set("ranks", "4")?;
+    cfg.set("tokens", "256")?;
+    cfg.set("routing_policy", "dropless")?;
+    cfg.set("max_models", "3")?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Three models co-resident on **one live engine** — the anchor, an
+/// independent base, and a LoRA delta variant of the anchor — served
+/// through the request front end under a Zipf-skewed multi-model trace
+/// (model 0 hottest, the real multi-tenant shape). Asserted here: one
+/// launch for the whole run, every accepted request served, and the
+/// delta variant costs only its delta bytes (`resident_bytes` audits the
+/// shared packed cache). Per-model p50/p99 and the co-resident vs
+/// dedicated byte comparison are returned for the bench JSON; the bench's
+/// PERF_SMOKE gate fails if the LoRA increment reaches a full pack.
+pub fn multimodel_ab(
+    seed: u64,
+) -> Result<(String, Vec<MultiModelPoint>, MultiModelResidency)> {
+    let requests = 60usize;
+    let cfg = multimodel_config()?;
+    let params0 = Arc::new(ModelParams::generate(&cfg, seed));
+    let params1 = Arc::new(ModelParams::generate(&cfg, seed ^ 0xB45E));
+    let delta = Arc::new(crate::registry::DeltaSet::generate(&cfg, seed ^ 0x10A4, 2, 0.05));
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+    let policy = BatchPolicy::from_config(&cfg);
+    let service =
+        MoeService::start(cfg.clone(), params0.clone(), backend, TaskGraphMode::Fused, policy)?;
+    let hb = service.register_model(params1.clone())?;
+    anyhow::ensure!(hb.id == 1 && !hb.deduped, "independent base must pack fresh as model 1");
+    let hl = service.register_delta(0, delta.clone())?;
+    anyhow::ensure!(hl.id == 2, "delta variant must land in slot 2");
+    anyhow::ensure!(
+        hl.resident_bytes == delta.bytes(),
+        "delta residency must cost exactly the delta bytes"
+    );
+
+    // Zipf multi-model trace: write it out and replay it through the
+    // same trace machinery a CLI `trace:<path>` run uses.
+    let trace = crate::workload::zipf_model_trace(requests, 300.0, (8, 32), 3, 1.2, seed);
+    let path = std::env::temp_dir().join(format!("flashdmoe_multimodel_{seed}.trace"));
+    std::fs::write(&path, trace)?;
+    let mut rng = Rng::new(seed ^ 0x3D0E_15E4);
+    let arrivals = ArrivalProcess::Trace(path.display().to_string())
+        .arrivals(requests, (8, 32), &mut rng)?;
+    let _ = std::fs::remove_file(&path);
+
+    let h = cfg.model.h;
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::with_capacity(requests);
+    for a in &arrivals {
+        let due = std::time::Duration::from_secs_f64(a.at);
+        if let Some(wait) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let tokens = rng.normal_vec(a.tokens * h, 1.0);
+        let opts = RequestOpts { model: a.model, priority: a.priority, ..Default::default() };
+        handles.push((
+            a.model,
+            service
+                .enqueue(tokens, opts)
+                .map_err(|e| anyhow::anyhow!("enqueue failed: {e}"))?,
+        ));
+    }
+    let mut lat: Vec<Vec<f64>> = vec![Vec::new(); 3];
+    for (model, hdl) in handles {
+        let res = hdl.wait()?;
+        lat[model].push(res.latency_secs);
+    }
+    let co_resident_bytes = service.resident_bytes();
+    let report = service.shutdown();
+    anyhow::ensure!(
+        report.engine.launches == 1,
+        "three co-resident models must still cost one launch, saw {}",
+        report.engine.launches
+    );
+    anyhow::ensure!(
+        report.service.requests_served == requests as u64,
+        "dropped requests: served {} of {requests}",
+        report.service.requests_served
+    );
+    anyhow::ensure!(
+        report.engine.model_registrations == 2,
+        "expected 2 model registrations, saw {}",
+        report.engine.model_registrations
+    );
+
+    let full_pack_bytes = params0.num_params() * std::mem::size_of::<f32>();
+    anyhow::ensure!(
+        co_resident_bytes == 2 * full_pack_bytes + delta.bytes(),
+        "resident-bytes audit: engine reports {co_resident_bytes}, expected \
+         2 full packs + the delta ({})",
+        2 * full_pack_bytes + delta.bytes()
+    );
+    let residency = MultiModelResidency {
+        co_resident_bytes,
+        dedicated_bytes: 3 * full_pack_bytes,
+        lora_incremental_bytes: hl.resident_bytes,
+        full_pack_bytes,
+    };
+
+    let kinds = ["anchor", "base", "lora"];
+    let mut points = Vec::new();
+    let mut t = Table::new(&["model", "kind", "requests", "p50", "p99"]);
+    for (m, l) in lat.iter().enumerate() {
+        let mut sorted = l.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p = MultiModelPoint {
+            model: m,
+            kind: kinds[m],
+            requests: l.len(),
+            served: l.len() as u64,
+            latency_p50: if sorted.is_empty() { 0.0 } else { percentile(&sorted, 0.50) },
+            latency_p99: if sorted.is_empty() { 0.0 } else { percentile(&sorted, 0.99) },
+        };
+        t.row(&[
+            m.to_string(),
+            p.kind.to_string(),
+            p.requests.to_string(),
+            fmt_time(p.latency_p50),
+            fmt_time(p.latency_p99),
+        ]);
+        points.push(p);
+    }
+    // Zipf s=1.2 over 3 models: the anchor must dominate the trace.
+    anyhow::ensure!(
+        points[0].requests > points[1].requests + points[2].requests,
+        "Zipf trace should send most traffic to model 0"
+    );
+    let md = format!(
+        "## Multi-model residency — 3 models, one engine, Zipf trace\n\n{}\n\
+         Resident bytes: co-resident {} vs {} for 3 dedicated engines \
+         (LoRA increment {} vs full pack {}).\n",
+        t.render(),
+        fmt_bytes(residency.co_resident_bytes as f64),
+        fmt_bytes(residency.dedicated_bytes as f64),
+        fmt_bytes(residency.lora_incremental_bytes as f64),
+        fmt_bytes(residency.full_pack_bytes as f64),
+    );
+    Ok((md, points, residency))
+}
+
+/// JSON for [`multimodel_ab`] (`BENCH_pr10_multimodel.json`).
+pub fn multimodel_json(points: &[MultiModelPoint], res: &MultiModelResidency) -> Json {
+    json::obj(vec![
+        (
+            "models",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        json::obj(vec![
+                            ("model", json::num(p.model as f64)),
+                            ("kind", json::s(p.kind)),
+                            ("requests", json::num(p.requests as f64)),
+                            ("served", json::num(p.served as f64)),
+                            ("latency_p50", json::num(p.latency_p50)),
+                            ("latency_p99", json::num(p.latency_p99)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("co_resident_bytes", json::num(res.co_resident_bytes as f64)),
+        ("dedicated_bytes", json::num(res.dedicated_bytes as f64)),
+        ("lora_incremental_bytes", json::num(res.lora_incremental_bytes as f64)),
+        ("full_pack_bytes", json::num(res.full_pack_bytes as f64)),
+    ])
+}

@@ -66,8 +66,16 @@ impl LayoutDims {
             p: cfg.system.ranks,
             // replica slots ride along in the expert dimension, so every
             // downstream offset/flag/byte computation — and the
-            // write-validity rules — cover them with no special cases
-            e_local: cfg.local_experts() + cfg.replica_slots(),
+            // write-validity rules — cover them with no special cases.
+            // Multi-model residency (`max_models` > 1) partitions the
+            // expert dimension into per-model bands of
+            // `local_experts() + replica_slots()` slots each: model `m`
+            // owns slots `[m·band, (m+1)·band)`, so co-resident models
+            // share one symmetric heap without sharing any cell (the
+            // write-validity rules then isolate models for free). With
+            // the default `max_models == 1` this is byte-identical to
+            // the single-model layout.
+            e_local: (cfg.local_experts() + cfg.replica_slots()) * cfg.system.max_models,
             c: cfg.model.slot_capacity(cfg.system.s_rank),
             h: cfg.model.h,
             bm: cfg.model.bm,
@@ -343,6 +351,25 @@ mod tests {
             assert!(d.fits_source_rows(rows), "{rows} rows must fit c={}", d.c);
         }
         assert!(!d.fits_source_rows(s_rank + 31), "beyond s_rank may overflow");
+    }
+
+    #[test]
+    fn max_models_scales_the_expert_dimension() {
+        let mut cfg = crate::config::Config::preset("tiny").unwrap();
+        let one = LayoutDims::from_config(&cfg);
+        cfg.set("max_models", "3").unwrap();
+        let three = LayoutDims::from_config(&cfg);
+        let band = cfg.local_experts() + cfg.replica_slots();
+        assert_eq!(one.e_local, band, "max_models=1 is the legacy layout");
+        assert_eq!(three.e_local, 3 * band, "one band per resident model slot");
+        assert_eq!(three.elems(), 3 * one.elems());
+        // bands are disjoint: model m's slots are [m*band, (m+1)*band)
+        for m in 0..3 {
+            for e in 0..band {
+                assert!(three.in_bounds(Coord { p: 0, r: 0, b: 0, e: m * band + e, c: 0 }));
+            }
+        }
+        assert!(!three.in_bounds(Coord { p: 0, r: 0, b: 0, e: 3 * band, c: 0 }));
     }
 
     #[test]

@@ -323,6 +323,74 @@
 //! # }
 //! ```
 //!
+//! ## Multi-model residency — several expert sets, one launch
+//!
+//! A production deployment serves several models (or LoRA variants of
+//! one base) — and one engine per model would forfeit exactly the
+//! residency the paper buys. With `cfg.set("max_models", n)` the engine
+//! reserves `n` per-model expert-slot bands in the symmetric heap at
+//! start (default 1: byte-identical to the single-model layout), and the
+//! fingerprinted [`registry::ModelRegistry`] then installs additional
+//! expert sets at epoch-fenced quiet points — no restart, launches
+//! stays 1:
+//!
+//! * [`coordinator::MoeEngine::register_model`] — a full expert set.
+//!   Its content fingerprint (FNV-1a over every parameter bit) is
+//!   checked against the resident models first: identical weights dedup
+//!   to the already-packed cache entries (zero new packs, zero
+//!   incremental bytes — audited via the backend's `pack_count()`);
+//!   fresh weights are packed once into their own key region.
+//! * [`coordinator::MoeEngine::register_delta`] — a LoRA-style
+//!   [`registry::DeltaSet`] over a resident base: shares the base's
+//!   packed panels, stores only the low-rank tensors, and applies the
+//!   update in each FFN tile's *epilogue* — a resident variant costs
+//!   delta bytes, never a repack.
+//! * [`coordinator::MoeEngine::evict_model`] — frees the slot at the
+//!   same quiet point (the anchor model 0 and any model others depend
+//!   on are protected).
+//!
+//! Each model carries its own [`placement::Placement`] + EWMA
+//! [`placement::LoadTracker`] (replication decisions are per-model), and
+//! passes never mix models: [`coordinator::RequestOpts`]`::model` routes
+//! a request, the batcher coalesces only same-model chunks, and
+//! `PassMetrics::model` stamps the result. Cross-model isolation is
+//! bitwise: a model's outputs co-resident with others equal its
+//! dedicated single-model engine's exactly
+//! (`rust/tests/multimodel.rs`), and a fault injected into one model's
+//! pass retries without perturbing another's bits.
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use flashdmoe::config::Config;
+//! use flashdmoe::coordinator::{MoeEngine, PassInput, TaskGraphMode};
+//! use flashdmoe::expert::{generate_tokens, ModelParams};
+//! use flashdmoe::registry::DeltaSet;
+//! use flashdmoe::runtime::{ComputeBackend, NativeBackend};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut cfg = Config::preset("tiny")?;
+//! cfg.set("max_models", "3")?; // reserve two extra residency slots
+//! let base = Arc::new(ModelParams::generate(&cfg, 42));
+//! let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+//! let engine = MoeEngine::start(cfg.clone(), base, backend, TaskGraphMode::Fused)?;
+//!
+//! // a second full model (packed once) and a LoRA variant of the anchor
+//! let other = engine.register_model(Arc::new(ModelParams::generate(&cfg, 7)))?;
+//! let lora = engine.register_delta(0, Arc::new(DeltaSet::generate(&cfg, 9, 4, 0.05)))?;
+//! println!("resident bytes: {}", engine.resident_bytes());
+//!
+//! let inputs: Vec<Vec<f32>> =
+//!     (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, 1, r)).collect();
+//! let a = engine.submit_pass(PassInput::for_model(inputs.clone(), other.id))?;
+//! let b = engine.submit_pass(PassInput::for_model(inputs, lora.id))?; // pipelined
+//! let (ra, rb) = (a.wait()?, b.wait()?);
+//! assert_eq!((ra.metrics.model, rb.metrics.model), (other.id, lora.id));
+//! assert_eq!(engine.metrics().launches, 1); // still one launch
+//! engine.shutdown();
+//! # Ok(())
+//! # }
+//! ```
+//!
 //! ## Training — backward through the same engine
 //!
 //! The persistent engine is **differentiable** (ROADMAP item 3): with
@@ -395,6 +463,7 @@ pub mod util {
 pub mod config;
 pub mod wire;
 pub mod gate;
+pub mod registry;
 pub mod placement;
 pub mod layout;
 pub mod task;

@@ -18,6 +18,14 @@
 //! the same pass sequence install identical replicas — which is what lets
 //! the replication conformance tests demand bitwise-identical outputs
 //! across restarts.
+//!
+//! Multi-model residency (`max_models > 1`): each resident model owns its
+//! **own** `Placement` and EWMA tracker — the registry entry carries them
+//! (see [`crate::registry::ModelEntry`]) — because a hot expert in one
+//! model says nothing about another's load. Slot indices here stay
+//! model-relative (`0..e_local+replica_slots`); the rank actors shift a
+//! pass's dispatch plan by the model's heap band base, so this module
+//! never needs to know which band a model occupies.
 
 use anyhow::{bail, Result};
 

@@ -1,0 +1,702 @@
+//! Multi-model residency: the fingerprinted [`ModelRegistry`] that lets
+//! one persistent engine host several expert sets — full models and
+//! LoRA-style delta variants — sharing a single packed-weight cache
+//! (ROADMAP item 5, mirroring the pjrt-rs executable-lifecycle idioms:
+//! content fingerprints keying a serialized-program cache).
+//!
+//! The engine is started with one model (id **0**, the *anchor*: its
+//! parameters, placement and load tracker live where they always did, so
+//! the single-model path is bitwise-identical to a registry-free engine).
+//! Additional models occupy ids `1..max_models`
+//! (`SystemConfig::max_models`, knob `max_models`) and are installed or
+//! evicted only at the engine's epoch-fenced quiet point — exactly like a
+//! replication rebalance — so no in-flight pass ever observes a
+//! half-registered model.
+//!
+//! Three residency flavours, audited by the backend's `pack_count()`:
+//!
+//! * **fresh base** — a new expert set; packed once into its own key
+//!   region of the shared cache (`key_base = id × E`), costing a full
+//!   pack and full parameter bytes;
+//! * **deduped base** — re-registering weights whose content fingerprint
+//!   (FNV-1a over every parameter's bit pattern) matches an already
+//!   resident model; shares that model's packed entries — **zero** new
+//!   packs, zero incremental bytes;
+//! * **delta variant** — a [`DeltaSet`] of low-rank per-expert updates
+//!   over a resident base: the base's packed panels serve the main GEMMs
+//!   and the delta is applied in the **epilogue** of each FFN tile, so a
+//!   resident variant costs delta bytes, never a repack.
+//!
+//! Every model gets its *own* [`Placement`] + EWMA [`LoadTracker`]
+//! (replication decisions are per-model — a hot expert in model A says
+//! nothing about model B), while all models share the engine's symmetric
+//! heap: each model owns a contiguous band of expert slots
+//! (`e_base(id) .. e_base(id) + per-model slots`), so the write-validity
+//! rules, announcements and flag indexing carry over with a constant slot
+//! offset and **no** cross-model cell aliasing.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::Config;
+use crate::expert::ModelParams;
+use crate::placement::{LoadTracker, Placement};
+use crate::util::prng::Rng;
+
+/// Identifier of a resident model. Id 0 is the engine's anchor model
+/// (the parameters `MoeEngine::start` was given); ids `1..max_models`
+/// are registry slots.
+pub type ModelId = usize;
+
+/// What a registered model is, structurally.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// A full expert set with its own packed weights (or a fingerprint
+    /// dedup onto another resident base's packed weights).
+    Base,
+    /// A LoRA-style delta over a resident base model: shares the base's
+    /// packed weights, applies its low-rank update in the FFN epilogue.
+    Delta {
+        /// The resident base model the delta is relative to.
+        base: ModelId,
+    },
+}
+
+/// The caller's receipt for a registered model: identity, content
+/// fingerprint, and what residency actually cost.
+#[derive(Clone, Debug)]
+pub struct ModelHandle {
+    /// Registry slot the model occupies (`1..max_models`; the anchor
+    /// model's implicit handle has id 0).
+    pub id: ModelId,
+    /// FNV-1a content hash over every parameter bit pattern (shape
+    /// included). Two registrations with equal fingerprints share one
+    /// packed-cache region.
+    pub fingerprint: u64,
+    pub kind: ModelKind,
+    /// True iff registration found an already-resident model with the
+    /// same fingerprint and shared its packed weights (zero new packs).
+    pub deduped: bool,
+    /// Incremental bytes this registration added to the engine's
+    /// resident weight footprint: full parameter bytes for a fresh base,
+    /// 0 for a dedup, `DeltaSet::bytes()` for a delta variant.
+    pub resident_bytes: usize,
+}
+
+/// One expert's low-rank update in a [`DeltaSet`]: W2 gains the rank-`r`
+/// product `A2·B2` and b2 gains `db2`, so the expert's output row becomes
+/// `relu(x·W1 + b1)·(W2 + A2·B2) + (b2 + db2)` — computed as the base
+/// FFN plus an epilogue term `(mid·A2)·B2 + db2` on the already-resident
+/// packed base panels.
+#[derive(Clone, Debug)]
+pub struct ExpertDelta {
+    /// (D, r) row-major.
+    pub a2: Vec<f32>,
+    /// (r, H) row-major.
+    pub b2: Vec<f32>,
+    /// (H,) bias delta.
+    pub db2: Vec<f32>,
+}
+
+/// A LoRA-style low-rank delta over a full base model: one
+/// [`ExpertDelta`] per expert. No gate delta — a variant routes with its
+/// base's gate (per-expert output adaptation is the LoRA serving shape).
+#[derive(Clone, Debug)]
+pub struct DeltaSet {
+    /// Low-rank dimension r (≥ 1, typically ≪ D).
+    pub rank: usize,
+    /// One delta per global expert, length E.
+    pub experts: Vec<ExpertDelta>,
+    pub h: usize,
+    pub d: usize,
+}
+
+impl DeltaSet {
+    /// Deterministically generate a delta set from `seed` (independent of
+    /// the base-weight PRNG streams). `scale` sets the update magnitude.
+    pub fn generate(cfg: &Config, seed: u64, rank: usize, scale: f32) -> Self {
+        let (h, d, e) = (cfg.model.h, cfg.model.d, cfg.model.e);
+        let rank = rank.max(1);
+        let base = Rng::new(seed);
+        let experts = (0..e)
+            .map(|ex| {
+                let mut r = base.fork(0xDE17_A000 + ex as u64);
+                ExpertDelta {
+                    a2: r.normal_vec(d * rank, scale),
+                    b2: r.normal_vec(rank * h, scale),
+                    db2: r.normal_vec(h, scale),
+                }
+            })
+            .collect();
+        Self { rank, experts, h, d }
+    }
+
+    /// Resident footprint of the delta in bytes — what a variant costs
+    /// next to its base's shared packed weights.
+    pub fn bytes(&self) -> usize {
+        self.experts
+            .iter()
+            .map(|e| (e.a2.len() + e.b2.len() + e.db2.len()) * std::mem::size_of::<f32>())
+            .sum()
+    }
+
+    /// Apply `expert`'s delta to `rows` output rows in the FFN epilogue:
+    /// `out[row] += (mid[row]·A2)·B2 + db2`, with `mid` the (rows, D)
+    /// post-ReLU GEMM0 activations and `out` the (rows, H) tile output,
+    /// both row-major and contiguous.
+    pub fn apply_rows(&self, expert: usize, mid: &[f32], out: &mut [f32], rows: usize) {
+        let (h, d, r) = (self.h, self.d, self.rank);
+        debug_assert!(mid.len() >= rows * d && out.len() >= rows * h);
+        let ex = &self.experts[expert];
+        let mut tmp = vec![0.0f32; r];
+        for row in 0..rows {
+            let m = &mid[row * d..row * d + d];
+            for t in tmp.iter_mut() {
+                *t = 0.0;
+            }
+            for (dd, &mv) in m.iter().enumerate() {
+                if mv == 0.0 {
+                    continue; // post-ReLU activations are sparse
+                }
+                let a = &ex.a2[dd * r..dd * r + r];
+                for (t, &av) in tmp.iter_mut().zip(a) {
+                    *t += mv * av;
+                }
+            }
+            let o = &mut out[row * h..row * h + h];
+            for (j, &tv) in tmp.iter().enumerate() {
+                if tv == 0.0 {
+                    continue;
+                }
+                let b = &ex.b2[j * h..j * h + h];
+                for (ov, &bv) in o.iter_mut().zip(b) {
+                    *ov += tv * bv;
+                }
+            }
+            for (ov, &bv) in o.iter_mut().zip(&ex.db2) {
+                *ov += bv;
+            }
+        }
+    }
+
+    fn validate(&self, cfg: &Config) -> Result<()> {
+        let m = &cfg.model;
+        ensure!(
+            self.h == m.h && self.d == m.d && self.experts.len() == m.e,
+            "delta shape (h={}, d={}, e={}) does not match the engine config \
+             (h={}, d={}, e={})",
+            self.h,
+            self.d,
+            self.experts.len(),
+            m.h,
+            m.d,
+            m.e
+        );
+        ensure!(self.rank >= 1, "delta rank must be >= 1");
+        for (i, e) in self.experts.iter().enumerate() {
+            ensure!(
+                e.a2.len() == self.d * self.rank
+                    && e.b2.len() == self.rank * self.h
+                    && e.db2.len() == self.h,
+                "expert {i} delta tensors do not match (d={}, r={}, h={})",
+                self.d,
+                self.rank,
+                self.h
+            );
+        }
+        Ok(())
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a_bytes(mut acc: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        acc ^= b as u64;
+        acc = acc.wrapping_mul(FNV_PRIME);
+    }
+    acc
+}
+
+fn fnv1a_f32s(mut acc: u64, vals: &[f32]) -> u64 {
+    for &v in vals {
+        acc = fnv1a_bytes(acc, &v.to_bits().to_le_bytes());
+    }
+    acc
+}
+
+/// Content fingerprint of a full parameter set: FNV-1a over the shape and
+/// every weight's exact bit pattern (so `-0.0` vs `0.0` and NaN payloads
+/// all distinguish — the packed panels are bit-derived from these).
+pub fn fingerprint_params(p: &ModelParams) -> u64 {
+    let mut acc = FNV_OFFSET;
+    for dim in [p.h, p.d, p.experts.len()] {
+        acc = fnv1a_bytes(acc, &(dim as u64).to_le_bytes());
+    }
+    acc = fnv1a_f32s(acc, &p.wg);
+    for ex in &p.experts {
+        acc = fnv1a_f32s(acc, &ex.w1);
+        acc = fnv1a_f32s(acc, &ex.b1);
+        acc = fnv1a_f32s(acc, &ex.w2);
+        acc = fnv1a_f32s(acc, &ex.b2);
+    }
+    acc
+}
+
+fn params_bytes(p: &ModelParams) -> usize {
+    p.size_bytes()
+}
+
+/// One resident registry model (ids ≥ 1): the pass-time snapshot sources
+/// for gate/dispatch/compute plus the per-model replication state.
+pub struct ModelEntry {
+    pub handle: ModelHandle,
+    /// Full parameters the model gates and computes with. For a dedup or
+    /// delta registration this is the *base's* `Arc` — no copy.
+    pub params: Arc<ModelParams>,
+    /// The low-rank epilogue update, present only for delta variants.
+    pub delta: Option<Arc<DeltaSet>>,
+    /// Base offset into the shared packed-weight cache: expert `e` of
+    /// this model is served by cache key `key_base + e`. Equal to the
+    /// dedup/delta target's `key_base` when weights are shared.
+    pub key_base: usize,
+    /// This model's expert→location map (installed/swap-fenced by the
+    /// engine exactly like the anchor model's).
+    pub placement: Mutex<Arc<Placement>>,
+    /// This model's EWMA offered-load tracker.
+    pub tracker: Mutex<LoadTracker>,
+}
+
+/// The engine's model table: slot bookkeeping, fingerprint dedup, and
+/// per-model placement/tracker state for ids `1..max_models`. The anchor
+/// model (id 0) lives in the engine's legacy fields; the registry records
+/// only its fingerprint (for dedup) and parameter bytes (for footprint
+/// accounting). All mutation happens at the engine's epoch-fenced quiet
+/// point, so pass-time reads see a stable table.
+pub struct ModelRegistry {
+    max_models: usize,
+    e: usize,
+    ranks: usize,
+    replica_slots: usize,
+    ewma_alpha: f64,
+    /// Heap expert-slot band width of one model (owned + replica slots).
+    per_model_slots: usize,
+    anchor_fingerprint: u64,
+    anchor_bytes: usize,
+    anchor_params: Arc<ModelParams>,
+    /// `entries[id - 1]` for ids `1..max_models`.
+    entries: Mutex<Vec<Option<Arc<ModelEntry>>>>,
+}
+
+impl ModelRegistry {
+    /// Build the registry around the engine's anchor model (id 0).
+    pub fn new(cfg: &Config, anchor: Arc<ModelParams>) -> Self {
+        let max_models = cfg.system.max_models.max(1);
+        Self {
+            max_models,
+            e: cfg.model.e,
+            ranks: cfg.system.ranks,
+            replica_slots: cfg.replica_slots(),
+            ewma_alpha: cfg.system.replication.ewma_alpha,
+            per_model_slots: cfg.local_experts() + cfg.replica_slots(),
+            anchor_fingerprint: fingerprint_params(&anchor),
+            anchor_bytes: params_bytes(&anchor),
+            anchor_params: anchor,
+            entries: Mutex::new(vec![None; max_models.saturating_sub(1)]),
+        }
+    }
+
+    pub fn max_models(&self) -> usize {
+        self.max_models
+    }
+
+    /// First expert slot of `model`'s band in the symmetric heap's
+    /// (multiplied) expert dimension.
+    pub fn e_base(&self, model: ModelId) -> usize {
+        model * self.per_model_slots
+    }
+
+    /// Is `model` currently resident? (The anchor always is.)
+    pub fn is_resident(&self, model: ModelId) -> bool {
+        model == 0
+            || (model < self.max_models
+                && self.entries.lock().unwrap()[model - 1].is_some())
+    }
+
+    /// Resident model ids, ascending (always starts with 0).
+    pub fn resident_models(&self) -> Vec<ModelId> {
+        let entries = self.entries.lock().unwrap();
+        std::iter::once(0)
+            .chain(entries.iter().enumerate().filter_map(|(i, e)| e.as_ref().map(|_| i + 1)))
+            .collect()
+    }
+
+    /// The registry entry for a non-anchor resident model.
+    pub fn entry(&self, model: ModelId) -> Option<Arc<ModelEntry>> {
+        if model == 0 || model >= self.max_models {
+            return None;
+        }
+        self.entries.lock().unwrap()[model - 1].clone()
+    }
+
+    /// Register a full expert set. `pack(key_base)` is invoked — before
+    /// the entry becomes visible — exactly when fresh packed panels are
+    /// needed; a fingerprint match against the anchor or any resident
+    /// base instead shares that model's packed region (zero new packs).
+    /// Caller must hold the engine's quiet fence.
+    pub fn register_base<F>(
+        &self,
+        cfg: &Config,
+        params: Arc<ModelParams>,
+        pack: F,
+    ) -> Result<ModelHandle>
+    where
+        F: FnOnce(usize) -> Result<()>,
+    {
+        let m = &cfg.model;
+        ensure!(
+            params.h == m.h && params.d == m.d && params.experts.len() == m.e,
+            "model shape (h={}, d={}, e={}) does not match the engine config \
+             (h={}, d={}, e={}): all resident models share one architecture",
+            params.h,
+            params.d,
+            params.experts.len(),
+            m.h,
+            m.d,
+            m.e
+        );
+        let fingerprint = fingerprint_params(&params);
+        let mut entries = self.entries.lock().unwrap();
+        let Some(slot) = entries.iter().position(|e| e.is_none()) else {
+            bail!(
+                "model registry is full ({} of max_models={} slots resident): \
+                 evict a model or raise the max_models knob before engine start",
+                self.max_models,
+                self.max_models
+            );
+        };
+        let id = slot + 1;
+        // Fingerprint dedup: share the anchor's (or a resident base's)
+        // packed region and parameter Arc instead of packing again.
+        let dedup = if fingerprint == self.anchor_fingerprint {
+            Some((0usize, self.anchor_params.clone()))
+        } else {
+            entries.iter().flatten().find(|e| e.handle.fingerprint == fingerprint).map(|e| {
+                (e.key_base, e.params.clone())
+            })
+        };
+        let (key_base, params, deduped, resident_bytes) = match dedup {
+            Some((kb, shared)) => (kb, shared, true, 0),
+            None => {
+                let kb = id * self.e;
+                pack(kb)?;
+                let bytes = params_bytes(&params);
+                (kb, params, false, bytes)
+            }
+        };
+        let handle = ModelHandle {
+            id,
+            fingerprint,
+            kind: ModelKind::Base,
+            deduped,
+            resident_bytes,
+        };
+        entries[slot] = Some(Arc::new(ModelEntry {
+            handle: handle.clone(),
+            params,
+            delta: None,
+            key_base,
+            placement: Mutex::new(Arc::new(Placement::balanced(
+                self.e,
+                self.ranks,
+                self.replica_slots,
+            ))),
+            tracker: Mutex::new(LoadTracker::new(self.e, self.ranks, self.ewma_alpha)),
+        }));
+        Ok(handle)
+    }
+
+    /// Register a LoRA-style delta variant over resident base model
+    /// `base`: shares the base's parameters and packed weights, stores
+    /// only the delta (applied in the FFN epilogue at pass time). Caller
+    /// must hold the engine's quiet fence.
+    pub fn register_delta(
+        &self,
+        cfg: &Config,
+        base: ModelId,
+        delta: Arc<DeltaSet>,
+    ) -> Result<ModelHandle> {
+        delta.validate(cfg)?;
+        let mut entries = self.entries.lock().unwrap();
+        let (base_params, base_key) = if base == 0 {
+            (self.anchor_params.clone(), 0)
+        } else {
+            let e = entries
+                .get(base.wrapping_sub(1))
+                .and_then(|e| e.as_ref())
+                .ok_or_else(|| anyhow::anyhow!("delta base model {base} is not resident"))?;
+            ensure!(
+                e.delta.is_none(),
+                "delta base model {base} is itself a delta variant: stack onto its base instead"
+            );
+            (e.params.clone(), e.key_base)
+        };
+        let Some(slot) = entries.iter().position(|e| e.is_none()) else {
+            bail!(
+                "model registry is full ({} slots): evict a model before registering the delta",
+                self.max_models
+            );
+        };
+        let id = slot + 1;
+        let resident_bytes = delta.bytes();
+        // Fingerprint the *variant*: the base's content hash folded with
+        // the delta tensors, so two identical variants compare equal.
+        let mut fp = if base == 0 {
+            self.anchor_fingerprint
+        } else {
+            entries[base - 1].as_ref().unwrap().handle.fingerprint
+        };
+        fp = fnv1a_bytes(fp, &(delta.rank as u64).to_le_bytes());
+        for ex in &delta.experts {
+            fp = fnv1a_f32s(fp, &ex.a2);
+            fp = fnv1a_f32s(fp, &ex.b2);
+            fp = fnv1a_f32s(fp, &ex.db2);
+        }
+        let handle = ModelHandle {
+            id,
+            fingerprint: fp,
+            kind: ModelKind::Delta { base },
+            deduped: true, // shares the base's packed weights by construction
+            resident_bytes,
+        };
+        entries[slot] = Some(Arc::new(ModelEntry {
+            handle: handle.clone(),
+            params: base_params,
+            delta: Some(delta),
+            key_base: base_key,
+            placement: Mutex::new(Arc::new(Placement::balanced(
+                self.e,
+                self.ranks,
+                self.replica_slots,
+            ))),
+            tracker: Mutex::new(LoadTracker::new(self.e, self.ranks, self.ewma_alpha)),
+        }));
+        Ok(handle)
+    }
+
+    /// Evict a resident model, freeing its registry slot (its heap band
+    /// simply goes quiet). The anchor (id 0) is not evictable, and a
+    /// model other resident models depend on (a delta's base, or the
+    /// pack-region owner of a deduped registration) must outlive its
+    /// dependents. Caller must hold the engine's quiet fence.
+    pub fn evict(&self, model: ModelId) -> Result<()> {
+        ensure!(model != 0, "the anchor model (id 0) cannot be evicted");
+        let mut entries = self.entries.lock().unwrap();
+        let slot = model
+            .checked_sub(1)
+            .filter(|&s| s < entries.len())
+            .ok_or_else(|| anyhow::anyhow!("model id {model} out of range"))?;
+        let Some(victim) = entries[slot].as_ref() else {
+            bail!("model {model} is not resident");
+        };
+        let victim_key = victim.key_base;
+        for (i, e) in entries.iter().enumerate() {
+            let Some(e) = e.as_ref() else { continue };
+            if i == slot {
+                continue;
+            }
+            if e.handle.kind == (ModelKind::Delta { base: model }) {
+                bail!(
+                    "model {model} has a resident delta variant (model {}): evict it first",
+                    i + 1
+                );
+            }
+            if e.handle.deduped && e.key_base == victim_key && victim_key != 0 {
+                bail!(
+                    "model {} shares model {model}'s packed weights: evict it first",
+                    i + 1
+                );
+            }
+        }
+        entries[slot] = None;
+        Ok(())
+    }
+
+    /// Total resident weight bytes across all models, counting every
+    /// shared packed region once: anchor params + each fresh base's
+    /// params + each delta's tensors. This is the footprint the
+    /// multi-model bench compares against N dedicated engines.
+    pub fn resident_bytes(&self) -> usize {
+        let entries = self.entries.lock().unwrap();
+        self.anchor_bytes
+            + entries
+                .iter()
+                .flatten()
+                .map(|e| e.handle.resident_bytes)
+                .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn cfg_with_models(n: usize) -> Config {
+        let mut cfg = Config::preset("tiny").unwrap();
+        cfg.set("max_models", &n.to_string()).unwrap();
+        cfg
+    }
+
+    #[test]
+    fn fingerprints_are_content_addressed() {
+        let cfg = Config::preset("tiny").unwrap();
+        let a = ModelParams::generate(&cfg, 7);
+        let b = ModelParams::generate(&cfg, 7);
+        let c = ModelParams::generate(&cfg, 8);
+        assert_eq!(fingerprint_params(&a), fingerprint_params(&b));
+        assert_ne!(fingerprint_params(&a), fingerprint_params(&c));
+        // a single flipped bit changes the hash
+        let mut d = a.clone();
+        d.experts[0].w2[3] += 1.0;
+        assert_ne!(fingerprint_params(&a), fingerprint_params(&d));
+    }
+
+    #[test]
+    fn register_dedups_identical_weights_and_packs_fresh_ones() {
+        let cfg = cfg_with_models(4);
+        let anchor = Arc::new(ModelParams::generate(&cfg, 42));
+        let reg = ModelRegistry::new(&cfg, anchor.clone());
+        assert!(reg.is_resident(0));
+        assert_eq!(reg.resident_models(), vec![0]);
+
+        // identical weights: dedup onto the anchor, no pack callback
+        let same = Arc::new(ModelParams::generate(&cfg, 42));
+        let h1 = reg
+            .register_base(&cfg, same, |_| panic!("dedup must not pack"))
+            .unwrap();
+        assert_eq!(h1.id, 1);
+        assert!(h1.deduped);
+        assert_eq!(h1.resident_bytes, 0);
+        assert_eq!(reg.entry(1).unwrap().key_base, 0, "shares the anchor's region");
+
+        // fresh weights: packed once at its own key base
+        let fresh = Arc::new(ModelParams::generate(&cfg, 99));
+        let mut packed_at = None;
+        let h2 = reg
+            .register_base(&cfg, fresh.clone(), |kb| {
+                packed_at = Some(kb);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(h2.id, 2);
+        assert!(!h2.deduped);
+        assert_eq!(packed_at, Some(2 * cfg.model.e));
+        assert_eq!(h2.resident_bytes, fresh.num_params() * 4);
+        assert_eq!(reg.resident_models(), vec![0, 1, 2]);
+        assert_eq!(
+            reg.resident_bytes(),
+            anchor.num_params() * 4 + fresh.num_params() * 4,
+            "dedup adds zero resident bytes"
+        );
+
+        // re-registering the fresh model dedups onto *it*, not the anchor
+        let again = Arc::new(ModelParams::generate(&cfg, 99));
+        let h3 = reg
+            .register_base(&cfg, again, |_| panic!("dedup must not pack"))
+            .unwrap();
+        assert!(h3.deduped);
+        assert_eq!(reg.entry(3).unwrap().key_base, 2 * cfg.model.e);
+        // the registry is now full
+        let more = Arc::new(ModelParams::generate(&cfg, 123));
+        assert!(reg.register_base(&cfg, more, |_| Ok(())).is_err());
+    }
+
+    #[test]
+    fn delta_variants_cost_delta_bytes_and_guard_eviction() {
+        let cfg = cfg_with_models(3);
+        let anchor = Arc::new(ModelParams::generate(&cfg, 1));
+        let reg = ModelRegistry::new(&cfg, anchor.clone());
+        let delta = Arc::new(DeltaSet::generate(&cfg, 7, 2, 0.05));
+        let h = reg.register_delta(&cfg, 0, delta.clone()).unwrap();
+        assert_eq!(h.id, 1);
+        assert_eq!(h.kind, ModelKind::Delta { base: 0 });
+        assert_eq!(h.resident_bytes, delta.bytes());
+        assert!(
+            delta.bytes() < anchor.num_params() * 4,
+            "a delta must cost less than a full parameter set"
+        );
+        let entry = reg.entry(1).unwrap();
+        assert_eq!(entry.key_base, 0, "delta serves from the base's packed region");
+        assert!(entry.delta.is_some());
+
+        // a fresh base, then a delta over it: eviction order is enforced
+        let fresh = Arc::new(ModelParams::generate(&cfg, 2));
+        let hb = reg.register_base(&cfg, fresh, |_| Ok(())).unwrap();
+        // registry now holds anchor + delta(1) + base(2); it is full
+        assert!(reg.register_delta(&cfg, hb.id, delta.clone()).is_err(), "full");
+        assert!(reg.evict(0).is_err(), "anchor is not evictable");
+        reg.evict(hb.id).unwrap();
+        let hd2 = reg.register_delta(&cfg, 0, delta.clone()).unwrap();
+        assert_eq!(hd2.id, 2, "evicted slot is reused");
+        // base 0 has dependents but is the anchor; a registry base with a
+        // dependent delta refuses eviction
+        reg.evict(2).unwrap();
+        reg.evict(1).unwrap(); // free both slots for the base+delta pair
+        let hb2 = reg.register_base(&cfg, Arc::new(ModelParams::generate(&cfg, 3)), |_| Ok(()))
+            .unwrap();
+        let hd3 = reg.register_delta(&cfg, hb2.id, delta).unwrap();
+        assert!(reg.evict(hb2.id).is_err(), "delta depends on its base");
+        reg.evict(hd3.id).unwrap();
+        reg.evict(hb2.id).unwrap();
+        assert_eq!(reg.resident_models(), vec![0]);
+    }
+
+    #[test]
+    fn delta_epilogue_matches_materialized_weights() {
+        // out_base + epilogue == FFN with W2 + A2·B2 and b2 + db2
+        let cfg = Config::preset("tiny").unwrap();
+        let (h, d) = (cfg.model.h, cfg.model.d);
+        let params = ModelParams::generate(&cfg, 5);
+        let delta = DeltaSet::generate(&cfg, 9, 2, 0.1);
+        let ex = &params.experts[1];
+        let de = &delta.experts[1];
+        let rows = 3;
+        let mut rng = Rng::new(11);
+        let x = rng.normal_vec(rows * h, 1.0);
+        // base FFN (reference path) + captured mid
+        let mut mid = vec![0.0f32; rows * d];
+        let mut out = vec![0.0f32; rows * h];
+        crate::gemm::ffn(&x, &ex.w1, &ex.b1, &ex.w2, &ex.b2, &mut out, &mut mid, rows, h, d);
+        delta.apply_rows(1, &mid, &mut out, rows);
+        // materialized variant weights
+        let mut w2m = ex.w2.clone();
+        for dd in 0..d {
+            for hh in 0..h {
+                let mut acc = 0.0f32;
+                for j in 0..delta.rank {
+                    acc += de.a2[dd * delta.rank + j] * de.b2[j * h + hh];
+                }
+                w2m[dd * h + hh] += acc;
+            }
+        }
+        let b2m: Vec<f32> = ex.b2.iter().zip(&de.db2).map(|(a, b)| a + b).collect();
+        let mut want = vec![0.0f32; rows * h];
+        let mut scratch = vec![0.0f32; rows * d];
+        crate::gemm::ffn(&x, &ex.w1, &ex.b1, &w2m, &b2m, &mut want, &mut scratch, rows, h, d);
+        let diff = crate::util::stats::max_abs_diff(&out, &want);
+        assert!(diff < 1e-4, "epilogue diverged from materialized variant: {diff}");
+    }
+
+    #[test]
+    fn e_base_bands_do_not_overlap() {
+        let cfg = cfg_with_models(3);
+        let reg = ModelRegistry::new(&cfg, Arc::new(ModelParams::generate(&cfg, 1)));
+        let band = cfg.local_experts() + cfg.replica_slots();
+        for m in 0..3 {
+            assert_eq!(reg.e_base(m), m * band);
+        }
+    }
+}

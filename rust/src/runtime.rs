@@ -245,6 +245,28 @@ pub trait ComputeBackend: Send + Sync {
         self.prepare(params)
     }
 
+    /// Prepare an **additional** resident model's weights under a
+    /// disjoint key band: expert `i` of `params` is cached as backend
+    /// expert id `key_base + i`, so co-resident models never collide in
+    /// the derived-weight cache (the engine's
+    /// [`ModelRegistry`](crate::registry::ModelRegistry) assigns each
+    /// model a unique `key_base` and hands tasks the shifted ids).
+    /// Re-preparing an occupied band must *overwrite* it — an evicted
+    /// model's stale panels silently serving a new registrant is the
+    /// failure mode this contract exists to prevent. `key_base == 0` is
+    /// the anchor model and delegates to [`prepare`](Self::prepare);
+    /// backends without banded caches reject `key_base > 0`.
+    fn prepare_model(&self, params: &ModelParams, key_base: usize) -> Result<()> {
+        if key_base == 0 {
+            return self.prepare(params);
+        }
+        bail!(
+            "backend '{}' has no banded weight cache: cannot host a second \
+             resident model (key_base {key_base})",
+            self.name()
+        )
+    }
+
     /// True when this backend serves split-mode column tiles from its own
     /// packed weight cache (filled by [`prepare`](Self::prepare)), making
     /// caller-side `w1c`/`w2c` column copies dead weight — callers may
@@ -419,6 +441,28 @@ impl ComputeBackend for NativeBackend {
             for (ex_id, ex) in params.experts.iter().enumerate() {
                 let _ = self.packed_expert(ex_id, ex);
             }
+        }
+        Ok(())
+    }
+
+    /// Pack `params`' experts into the `[key_base, key_base + E)` band,
+    /// eagerly and overwriting: a band once occupied by an evicted model
+    /// must not leak its stale panels to a new registrant, so unlike
+    /// `prepare` this never trusts an existing cache entry. Deduplicated
+    /// registrations never reach here (the registry reuses the survivor's
+    /// band), so every call counts `params.experts.len()` fresh packs.
+    fn prepare_model(&self, params: &ModelParams, key_base: usize) -> Result<()> {
+        if !self.packed {
+            return Ok(()); // unpacked tiles read ExpertParams directly
+        }
+        let mut cache = self.cache.write().unwrap();
+        let want = key_base + params.experts.len();
+        if cache.len() < want {
+            cache.resize(want, None);
+        }
+        for (i, ex) in params.experts.iter().enumerate() {
+            cache[key_base + i] = Some(Arc::new(ex.pack(self.h, self.d)));
+            self.packs.fetch_add(1, Ordering::Relaxed);
         }
         Ok(())
     }
@@ -606,6 +650,22 @@ impl ComputeBackend for XlaBackend {
         self.warm_weights(params)
     }
 
+    /// Upload `params`' weight literals under the `[key_base, key_base+E)`
+    /// id band, overwriting any stale entries an evicted model left there.
+    fn prepare_model(&self, params: &ModelParams, key_base: usize) -> Result<()> {
+        let mut cache = self.weight_cache.lock().unwrap();
+        for (i, ex) in params.experts.iter().enumerate() {
+            let lits = std::sync::Arc::new(vec![
+                make_literal(&ex.w1, &[self.h, self.d])?,
+                make_literal(&ex.b1, &[self.d])?,
+                make_literal(&ex.w2, &[self.d, self.h])?,
+                make_literal(&ex.b2, &[self.h])?,
+            ]);
+            cache.insert(key_base + i, lits);
+        }
+        Ok(())
+    }
+
     fn gate_scores(&self, a: &[f32], wg: &[f32], s: usize) -> Result<Vec<f32>> {
         let k = self.store.kernel("gate")?;
         let expect = k.meta.inputs[0].1[0];
@@ -719,6 +779,41 @@ mod tests {
         assert_eq!(fresh.pack_count(), m.e as u64, "pack count == expert count");
         fresh.prepare(&params).unwrap();
         assert_eq!(fresh.pack_count(), m.e as u64, "prepare is idempotent");
+    }
+
+    #[test]
+    fn prepare_model_bands_are_disjoint_and_overwriting() {
+        let cfg = Config::preset("tiny").unwrap();
+        let m = cfg.model.clone();
+        let be = NativeBackend::with_packed(&cfg, true);
+        let a = crate::expert::ModelParams::generate(&cfg, 1);
+        let b = crate::expert::ModelParams::generate(&cfg, 2);
+        be.prepare(&a).unwrap();
+        be.prepare_model(&b, m.e).unwrap();
+        assert_eq!(be.pack_count(), 2 * m.e as u64, "both bands packed");
+        // tiles keyed into band 1 serve model B's weights, band 0 model A's
+        let mut rng = Rng::new(4);
+        let x = rng.normal_vec(m.bm * m.h, 1.0);
+        let mut scratch = vec![0.0; m.bm * m.d];
+        let (mut ya, mut yb, mut yref) =
+            (vec![0.0; m.bm * m.h], vec![0.0; m.bm * m.h], vec![0.0; m.bm * m.h]);
+        be.ffn_tile(&x, &a.experts[0], 0, &mut ya, &mut scratch).unwrap();
+        be.ffn_tile(&x, &b.experts[0], m.e, &mut yb, &mut scratch).unwrap();
+        let unpacked = NativeBackend::with_packed(&cfg, false);
+        unpacked.ffn_tile(&x, &b.experts[0], 0, &mut yref, &mut scratch).unwrap();
+        assert!(max_abs_diff(&yb, &yref) < 1e-3, "band 1 serves model B");
+        assert!(max_abs_diff(&ya, &yb) > 1e-3, "bands hold different weights");
+        // re-preparing an occupied band overwrites — no stale panels
+        let c = crate::expert::ModelParams::generate(&cfg, 9);
+        be.prepare_model(&c, m.e).unwrap();
+        let mut yc = vec![0.0; m.bm * m.h];
+        be.ffn_tile(&x, &c.experts[0], m.e, &mut yc, &mut scratch).unwrap();
+        let mut ycref = vec![0.0; m.bm * m.h];
+        unpacked.ffn_tile(&x, &c.experts[0], 0, &mut ycref, &mut scratch).unwrap();
+        assert!(max_abs_diff(&yc, &ycref) < 1e-3, "band 1 re-registration overwrote");
+        // unpacked backends accept any band as a no-op
+        unpacked.prepare_model(&c, m.e).unwrap();
+        assert_eq!(unpacked.pack_count(), 0);
     }
 
     #[test]

@@ -89,6 +89,11 @@ pub struct Trainer {
     /// Micro-batches folded into `accum` since the last apply.
     pending: usize,
     accum_target: usize,
+    /// The optimizer's construction-time rate — what the schedule scales.
+    base_lr: f32,
+    /// Per-update learning-rate schedule (knob `lr_schedule`): update N
+    /// runs at `base_lr × schedule.factor(N)`.
+    schedule: crate::config::LrSchedule,
     /// Optimizer updates applied so far.
     pub updates: u64,
 }
@@ -96,7 +101,9 @@ pub struct Trainer {
 impl Trainer {
     /// Wrap a started engine. The engine must have been started with
     /// training enabled (`cfg.system.train.enabled` — knob `train=on`),
-    /// which turns on the per-pass activation stash.
+    /// which turns on the per-pass activation stash. The engine config's
+    /// `lr_schedule` scales the optimizer's rate per update (its
+    /// construction-time `lr` is the base the schedule multiplies).
     pub fn new(engine: MoeEngine, opt: Optimizer) -> Result<Self> {
         let tc = &engine.config().system.train;
         ensure!(
@@ -105,9 +112,20 @@ impl Trainer {
              (or stash_activations=on)"
         );
         let accum_target = tc.grad_accum_steps.max(1);
+        let (base_lr, schedule) = (opt.lr(), tc.lr_schedule);
         let params = engine.params().as_ref().clone();
         let accum = GradStore::zeros_like(&params);
-        Ok(Self { engine, opt, params, accum, pending: 0, accum_target, updates: 0 })
+        Ok(Self {
+            engine,
+            opt,
+            params,
+            accum,
+            pending: 0,
+            accum_target,
+            base_lr,
+            schedule,
+            updates: 0,
+        })
     }
 
     pub fn engine(&self) -> &MoeEngine {
@@ -169,6 +187,9 @@ impl Trainer {
         }
         // average over the window so lr is per-micro-batch-scale-free
         self.accum.scale(1.0 / self.pending as f32);
+        // evaluate the schedule for *this* update (0-indexed; Const keeps
+        // the base rate, so the default path is bitwise-unchanged)
+        self.opt.set_lr(self.base_lr * self.schedule.factor(self.updates) as f32);
         self.opt.step(&mut self.params, &self.accum);
         self.engine
             .update_params(self.params.clone())
@@ -207,5 +228,40 @@ impl Trainer {
         loss /= n_total as f64;
         let (bwd, applied) = self.backward(&tape, &dy)?;
         Ok(StepReport { loss, applied, grad_sq_norm: bwd.grads.sq_norm(), epoch: tape.epoch })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    use crate::config::Config;
+    use crate::coordinator::TaskGraphMode;
+    use crate::expert::generate_tokens;
+    use crate::runtime::{ComputeBackend, NativeBackend};
+
+    #[test]
+    fn lr_schedule_decays_across_trainer_steps() {
+        let mut cfg = Config::preset("tiny").unwrap();
+        cfg.set("train", "on").unwrap();
+        cfg.set("lr_schedule", "step:1:0.5").unwrap();
+        let params = Arc::new(crate::expert::ModelParams::generate(&cfg, 42));
+        let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(&cfg));
+        let engine = MoeEngine::start(cfg.clone(), params, backend, TaskGraphMode::Fused).unwrap();
+        let mut trainer = Trainer::new(engine, Optimizer::sgd(0.8)).unwrap();
+        let inputs: Vec<Vec<f32>> =
+            (0..cfg.system.ranks).map(|r| generate_tokens(&cfg, 1, r)).collect();
+        let targets = inputs.clone();
+        // step:1:0.5 halves the rate every update: 0.8, 0.4, 0.2, ...
+        let mut seen = Vec::new();
+        for _ in 0..3 {
+            let report = trainer.train_step(&inputs, &targets).unwrap();
+            assert!(report.applied, "grad_accum_steps=1 applies every step");
+            seen.push(trainer.optimizer().lr());
+        }
+        assert_eq!(seen, vec![0.8, 0.4, 0.2], "schedule must decay across steps");
+        assert_eq!(trainer.updates, 3);
+        trainer.finish();
     }
 }

@@ -1,6 +1,14 @@
 //! Optimizers over [`ModelParams`]: plain/momentum SGD and Adam, both
 //! stepping the fixed tensor traversal shared with [`GradStore`] so the
 //! update order (and therefore every parameter bit) is deterministic.
+//!
+//! Both optimizers support *decoupled* weight decay (the AdamW recipe:
+//! `p ← p·(1 − lr·λ) − lr·update(g)`), configured via
+//! [`with_weight_decay`](Optimizer::with_weight_decay) or the
+//! `weight_decay` config knob — the decay term never flows through the
+//! momentum/moment state, so Adam's adaptive scaling cannot cancel it.
+//! [`set_lr`](Optimizer::set_lr) lets `Trainer` drive a
+//! [`LrSchedule`](crate::config::LrSchedule) over updates.
 
 use crate::expert::ModelParams;
 
@@ -15,6 +23,8 @@ pub enum Optimizer {
         lr: f32,
         /// 0.0 = plain SGD; otherwise classical momentum.
         momentum: f32,
+        /// Decoupled weight-decay coefficient (0 disables).
+        weight_decay: f32,
         vel: Option<GradStore>,
     },
     Adam {
@@ -22,6 +32,8 @@ pub enum Optimizer {
         beta1: f32,
         beta2: f32,
         eps: f32,
+        /// Decoupled (AdamW-style) weight-decay coefficient (0 disables).
+        weight_decay: f32,
         /// Step count for bias correction (increments per `step`).
         t: u64,
         m: Option<GradStore>,
@@ -31,16 +43,45 @@ pub enum Optimizer {
 
 impl Optimizer {
     pub fn sgd(lr: f32) -> Self {
-        Optimizer::Sgd { lr, momentum: 0.0, vel: None }
+        Optimizer::Sgd { lr, momentum: 0.0, weight_decay: 0.0, vel: None }
     }
 
     pub fn sgd_momentum(lr: f32, momentum: f32) -> Self {
-        Optimizer::Sgd { lr, momentum, vel: None }
+        Optimizer::Sgd { lr, momentum, weight_decay: 0.0, vel: None }
     }
 
     /// Adam with the conventional defaults (β1=0.9, β2=0.999, ε=1e-8).
     pub fn adam(lr: f32) -> Self {
-        Optimizer::Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: None, v: None }
+        Optimizer::Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            t: 0,
+            m: None,
+            v: None,
+        }
+    }
+
+    /// Builder: set the decoupled weight-decay coefficient.
+    pub fn with_weight_decay(mut self, wd: f32) -> Self {
+        match &mut self {
+            Optimizer::Sgd { weight_decay, .. } | Optimizer::Adam { weight_decay, .. } => {
+                *weight_decay = wd
+            }
+        }
+        self
+    }
+
+    /// Construct from the config's training knobs (`optimizer`, `lr`,
+    /// `weight_decay`).
+    pub fn from_config(tc: &crate::config::TrainConfig) -> Self {
+        let base = match tc.optimizer {
+            crate::config::OptimizerKind::Sgd => Optimizer::sgd(tc.lr),
+            crate::config::OptimizerKind::Adam => Optimizer::adam(tc.lr),
+        };
+        base.with_weight_decay(tc.weight_decay)
     }
 
     pub fn name(&self) -> &'static str {
@@ -56,11 +97,39 @@ impl Optimizer {
         }
     }
 
+    /// Override the learning rate (a schedule hook: `Trainer` calls this
+    /// with `base_lr × LrSchedule::factor(update)` before each step;
+    /// momentum/moment state is untouched).
+    pub fn set_lr(&mut self, new_lr: f32) {
+        match self {
+            Optimizer::Sgd { lr, .. } | Optimizer::Adam { lr, .. } => *lr = new_lr,
+        }
+    }
+
+    pub fn weight_decay(&self) -> f32 {
+        match self {
+            Optimizer::Sgd { weight_decay, .. } | Optimizer::Adam { weight_decay, .. } => {
+                *weight_decay
+            }
+        }
+    }
+
     /// Apply one update: `params -= f(grads)`. Panics (debug) on shape
     /// mismatch; tensors are zipped in the shared traversal order.
+    /// A non-zero `weight_decay` first shrinks every parameter by
+    /// `lr·λ·θ` (decoupled: the gradient transform below never sees it).
     pub fn step(&mut self, params: &mut ModelParams, grads: &GradStore) {
+        let (lr_now, wd) = (self.lr(), self.weight_decay());
+        if wd != 0.0 {
+            let shrink = 1.0 - lr_now * wd;
+            for p in param_tensors_mut(params) {
+                for pv in p.iter_mut() {
+                    *pv *= shrink;
+                }
+            }
+        }
         match self {
-            Optimizer::Sgd { lr, momentum, vel } => {
+            Optimizer::Sgd { lr, momentum, vel, .. } => {
                 let lr = *lr;
                 let mu = *momentum;
                 if mu == 0.0 {
@@ -83,7 +152,7 @@ impl Optimizer {
                     }
                 }
             }
-            Optimizer::Adam { lr, beta1, beta2, eps, t, m, v } => {
+            Optimizer::Adam { lr, beta1, beta2, eps, t, m, v, .. } => {
                 let (lr, b1, b2, eps) = (*lr, *beta1, *beta2, *eps);
                 *t += 1;
                 let bc1 = 1.0 - b1.powi(*t as i32);
@@ -167,5 +236,49 @@ mod tests {
         let mut opt = Optimizer::sgd(1.0);
         opt.step(&mut params, &g);
         assert_eq!(params.wg, snapshot);
+    }
+
+    #[test]
+    fn decoupled_weight_decay_shrinks_params() {
+        // zero grad: the only movement is the decoupled p *= (1 - lr·λ)
+        let mut params = tiny_params();
+        let before = params.wg[0];
+        let g = GradStore::zeros_like(&params);
+        let mut opt = Optimizer::sgd(0.1).with_weight_decay(0.5);
+        assert_eq!(opt.weight_decay(), 0.5);
+        opt.step(&mut params, &g);
+        assert_eq!(params.wg[0], before * (1.0 - 0.1 * 0.5));
+        // Adam with zero grad: moments stay 0, so decay is still the only
+        // movement (decoupled — decay never enters the m/v state)
+        let mut params = tiny_params();
+        let before = params.experts[0].w1[5];
+        let mut adam = Optimizer::adam(0.01).with_weight_decay(0.1);
+        adam.step(&mut params, &g);
+        assert_eq!(params.experts[0].w1[5], before * (1.0 - 0.01 * 0.1));
+    }
+
+    #[test]
+    fn set_lr_rescales_subsequent_steps() {
+        let mut params = tiny_params();
+        let before = params.wg[0];
+        let mut g = GradStore::zeros_like(&params);
+        g.wg[0] = 1.0;
+        let mut opt = Optimizer::sgd(0.5);
+        opt.set_lr(0.25);
+        assert_eq!(opt.lr(), 0.25);
+        opt.step(&mut params, &g);
+        assert_eq!(params.wg[0], before - 0.25);
+    }
+
+    #[test]
+    fn from_config_reads_the_training_knobs() {
+        let mut cfg = crate::config::Config::preset("tiny").unwrap();
+        cfg.set("optimizer", "sgd").unwrap();
+        cfg.set("lr", "0.125").unwrap();
+        cfg.set("weight_decay", "0.01").unwrap();
+        let opt = Optimizer::from_config(&cfg.system.train);
+        assert_eq!(opt.name(), "sgd");
+        assert_eq!(opt.lr(), 0.125);
+        assert_eq!(opt.weight_decay(), 0.01);
     }
 }

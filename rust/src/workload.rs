@@ -58,6 +58,13 @@ pub struct Arrival {
     pub at: f64,
     /// Token rows in the request.
     pub tokens: usize,
+    /// Resident model the request targets (`RequestOpts::model`); 0 — the
+    /// engine's anchor model — for synthetic processes and trace lines
+    /// without a model column.
+    pub model: usize,
+    /// Request priority (`RequestOpts::priority`); 0 for synthetic
+    /// processes and trace lines without a priority column.
+    pub priority: i32,
 }
 
 /// Request arrival process for serving benches (open-loop Poisson,
@@ -67,8 +74,11 @@ pub enum ArrivalProcess {
     /// Open loop: exponential interarrivals at `rate` requests/second;
     /// request sizes drawn uniformly from the driver's range.
     Poisson { rate: f64 },
-    /// Replay a trace file: one arrival per line, `<at_secs> <tokens>`
-    /// ('#' comments and blank lines allowed).
+    /// Replay a trace file: one arrival per line,
+    /// `<at_secs> <tokens> [model] [priority]` — the two trailing columns
+    /// are optional and default to model 0 / priority 0, so pre-existing
+    /// two-column traces replay unchanged ('#' comments and blank lines
+    /// allowed).
     Trace(String),
     /// Closed loop: `n` clients, each submitting its next request the
     /// moment the previous completes (arrival times are all zero; the
@@ -116,7 +126,7 @@ impl ArrivalProcess {
                         // exponential interarrival: -ln(U)/rate, U in (0,1]
                         let u = 1.0 - rng.f64();
                         t += -u.ln() / rate;
-                        Arrival { at: t, tokens: size(rng) }
+                        Arrival { at: t, tokens: size(rng), model: 0, priority: 0 }
                     })
                     .collect())
             }
@@ -148,7 +158,20 @@ impl ArrivalProcess {
                         "{path}:{}: arrival time {at} must be finite and non-negative",
                         ln + 1
                     );
-                    parsed.push(Arrival { at, tokens });
+                    // optional trailing columns: model id, then priority
+                    let model: usize = match it.next() {
+                        Some(v) => v.parse().with_context(|| {
+                            format!("{path}:{}: model column '{v}' is not an integer", ln + 1)
+                        })?,
+                        None => 0,
+                    };
+                    let priority: i32 = match it.next() {
+                        Some(v) => v.parse().with_context(|| {
+                            format!("{path}:{}: priority column '{v}' is not an integer", ln + 1)
+                        })?,
+                        None => 0,
+                    };
+                    parsed.push(Arrival { at, tokens, model, priority });
                 }
                 anyhow::ensure!(!parsed.is_empty(), "{path}: empty arrival trace");
                 parsed.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
@@ -158,12 +181,14 @@ impl ArrivalProcess {
                         // cycle the trace, shifting each lap by its span
                         let lap = i / parsed.len();
                         let a = parsed[i % parsed.len()];
-                        Arrival { at: a.at + lap as f64 * span, tokens: a.tokens }
+                        Arrival { at: a.at + lap as f64 * span, ..a }
                     })
                     .collect())
             }
             ArrivalProcess::Closed { .. } => {
-                Ok((0..count).map(|_| Arrival { at: 0.0, tokens: size(rng) }).collect())
+                Ok((0..count)
+                    .map(|_| Arrival { at: 0.0, tokens: size(rng), model: 0, priority: 0 })
+                    .collect())
             }
         }
     }
@@ -176,6 +201,39 @@ impl ArrivalProcess {
             _ => usize::MAX,
         }
     }
+}
+
+/// Generate a Zipf-skewed multi-model arrival trace in the text format
+/// [`ArrivalProcess::Trace`] replays (`<at> <tokens> <model> <priority>`
+/// per line): Poisson arrivals at `rate` requests/second, sizes uniform
+/// in the inclusive `tokens` range, and each arrival's model drawn
+/// Zipf(`s`) over `n_models` — model 0 is the hottest, matching real
+/// multi-tenant serving where one base model takes most traffic and
+/// variants trail off. Priorities are all 0 (the column is exercised, the
+/// ordering is not). Deterministic in `seed`; write the string to a file
+/// and replay it with `ArrivalProcess::parse("trace:<path>")`.
+pub fn zipf_model_trace(
+    count: usize,
+    rate: f64,
+    tokens: (usize, usize),
+    n_models: usize,
+    s: f64,
+    seed: u64,
+) -> String {
+    let lo = tokens.0.max(1);
+    let hi = tokens.1.max(lo);
+    let rate = if rate.is_finite() && rate > 0.0 { rate } else { 1.0 };
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut out = String::from("# at tokens model priority\n");
+    for _ in 0..count {
+        let u = 1.0 - rng.f64();
+        t += -u.ln() / rate;
+        let size = lo + rng.below(hi - lo + 1);
+        let model = if n_models > 1 { rng.zipf(n_models, s) } else { 0 };
+        out.push_str(&format!("{t:.6} {size} {model} 0\n"));
+    }
+    out
 }
 
 /// Synthesize gate *scores* (not tokens) with the requested skew, then
@@ -351,11 +409,11 @@ mod tests {
         std::fs::write(&path, "# at tokens\n0.0 8\n0.5 16\n1.0 32\n").unwrap();
         let p = ArrivalProcess::parse(&format!("trace:{}", path.display())).unwrap();
         let a = p.arrivals(5, (1, 1), &mut Rng::new(0)).unwrap();
-        assert_eq!(a[0], Arrival { at: 0.0, tokens: 8 });
-        assert_eq!(a[2], Arrival { at: 1.0, tokens: 32 });
+        assert_eq!(a[0], Arrival { at: 0.0, tokens: 8, model: 0, priority: 0 });
+        assert_eq!(a[2], Arrival { at: 1.0, tokens: 32, model: 0, priority: 0 });
         // cycles past the end, shifted by the trace span
-        assert_eq!(a[3], Arrival { at: 1.0, tokens: 8 });
-        assert_eq!(a[4], Arrival { at: 1.5, tokens: 16 });
+        assert_eq!(a[3], Arrival { at: 1.0, tokens: 8, model: 0, priority: 0 });
+        assert_eq!(a[4], Arrival { at: 1.5, tokens: 16, model: 0, priority: 0 });
         // bad inputs refuse loudly
         assert!(ArrivalProcess::parse("poisson:0").is_none());
         assert!(ArrivalProcess::parse("poisson:nan").is_none());
@@ -371,6 +429,59 @@ mod tests {
             let t = ArrivalProcess::Trace(p.to_str().unwrap().into());
             assert!(t.arrivals(1, (1, 1), &mut Rng::new(0)).is_err(), "{bad:?} must error");
         }
+    }
+
+    #[test]
+    fn trace_model_and_priority_columns_parse_with_defaults() {
+        let dir = std::env::temp_dir().join("flashdmoe_trace_cols_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cols.trace");
+        // 2-, 3-, and 4-column lines mixed in one trace
+        std::fs::write(&path, "# at tokens model priority\n0.0 8\n0.5 16 2\n1.0 32 1 -3\n")
+            .unwrap();
+        let p = ArrivalProcess::parse(&format!("trace:{}", path.display())).unwrap();
+        let a = p.arrivals(3, (1, 1), &mut Rng::new(0)).unwrap();
+        assert_eq!(a[0], Arrival { at: 0.0, tokens: 8, model: 0, priority: 0 });
+        assert_eq!(a[1], Arrival { at: 0.5, tokens: 16, model: 2, priority: 0 });
+        assert_eq!(a[2], Arrival { at: 1.0, tokens: 32, model: 1, priority: -3 });
+        // malformed extras error instead of silently dropping the column
+        for bad in ["0.0 8 x\n", "0.0 8 1 y\n"] {
+            let bp = dir.join("badcol.trace");
+            std::fs::write(&bp, bad).unwrap();
+            let t = ArrivalProcess::Trace(bp.to_str().unwrap().into());
+            assert!(t.arrivals(1, (1, 1), &mut Rng::new(0)).is_err(), "{bad:?} must error");
+        }
+    }
+
+    #[test]
+    fn zipf_model_trace_is_deterministic_and_skewed_toward_model_zero() {
+        let t1 = zipf_model_trace(400, 50.0, (8, 64), 4, 1.2, 17);
+        let t2 = zipf_model_trace(400, 50.0, (8, 64), 4, 1.2, 17);
+        assert_eq!(t1, t2, "generator must be deterministic in the seed");
+        // the string replays through the Trace arrival process
+        let dir = std::env::temp_dir().join("flashdmoe_zipf_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("zipf.trace");
+        std::fs::write(&path, &t1).unwrap();
+        let p = ArrivalProcess::parse(&format!("trace:{}", path.display())).unwrap();
+        let a = p.arrivals(400, (1, 1), &mut Rng::new(0)).unwrap();
+        assert_eq!(a.len(), 400);
+        assert!(a.windows(2).all(|w| w[0].at <= w[1].at), "times monotone");
+        assert!(a.iter().all(|x| (8..=64).contains(&x.tokens)));
+        assert!(a.iter().all(|x| x.model < 4 && x.priority == 0));
+        // Zipf skew: model 0 dominates, but the tail is exercised too
+        let mut counts = [0usize; 4];
+        for x in &a {
+            counts[x.model] += 1;
+        }
+        assert!(
+            counts[0] > counts[1] && counts[1] > counts[3],
+            "zipf skew toward model 0: {counts:?}"
+        );
+        assert!(counts.iter().all(|&c| c > 0), "all models appear: {counts:?}");
+        // single-model traces pin the column to 0
+        let solo = zipf_model_trace(10, 50.0, (8, 8), 1, 1.2, 3);
+        assert!(solo.lines().skip(1).all(|l| l.split_whitespace().nth(2) == Some("0")));
     }
 
     #[test]

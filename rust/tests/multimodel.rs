@@ -1,0 +1,344 @@
+//! Multi-model residency conformance: one engine serving several models
+//! must be **invisible** to each of them.
+//!
+//! The headline contract: a model's outputs on a co-resident engine are
+//! bitwise identical to a dedicated single-model engine fed the same
+//! inputs — across routing policies (capacity/dropless) and dispatch
+//! modes (flat/hierarchical), under replication, and through injected
+//! faults in *another* model's pass. The shared packed-weight cache is
+//! audited through the backend's pack counter (a fingerprint dedup packs
+//! nothing; a LoRA delta packs nothing and costs only its delta bytes),
+//! and registration/eviction respect the registry's dependency guards.
+
+use std::sync::Arc;
+
+use flashdmoe::config::Config;
+use flashdmoe::coordinator::{MoeEngine, PassInput, TaskGraphMode};
+use flashdmoe::expert::ModelParams;
+use flashdmoe::registry::DeltaSet;
+use flashdmoe::runtime::{ComputeBackend, NativeBackend};
+use flashdmoe::util::prng::Rng;
+use flashdmoe::util::stats::max_abs_diff;
+use flashdmoe::workload::{skewed_tokens, Skew};
+
+/// 4 ranks over the tiny model; `max_models` resident-model slots.
+fn mm_cfg(max_models: usize, policy: &str, dispatch: &str) -> Config {
+    let mut cfg = Config::preset("tiny").unwrap();
+    cfg.set("ranks", "4").unwrap();
+    cfg.set("tokens", "128").unwrap();
+    cfg.set("routing_policy", policy).unwrap();
+    if dispatch == "hierarchical" {
+        cfg.set("nodes", "2").unwrap();
+    }
+    cfg.set("dispatch", dispatch).unwrap();
+    cfg.set("max_models", &max_models.to_string()).unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// Zipf-skewed tokens through `params`' gate, deterministic in
+/// (seed, rank) — so model A and model B get *different* routing.
+fn zipf_inputs(cfg: &Config, params: &ModelParams, seed: u64) -> Vec<Vec<f32>> {
+    let (h, e) = (cfg.model.h, cfg.model.e);
+    (0..cfg.system.ranks)
+        .map(|r| {
+            let mut rng = Rng::new(seed).fork(0x10DE_0000 + r as u64);
+            skewed_tokens(&params.wg, h, e, cfg.system.s_rank, Skew::Zipf, &mut rng)
+        })
+        .collect()
+}
+
+fn start(cfg: &Config, params: &Arc<ModelParams>) -> MoeEngine {
+    let backend: Arc<dyn ComputeBackend> = Arc::new(NativeBackend::from_config(cfg));
+    MoeEngine::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused).unwrap()
+}
+
+/// The tentpole contract: two co-resident models, each bitwise identical
+/// to its own dedicated engine, for every routing policy × dispatch mode
+/// — and the whole co-resident run costs exactly one launch.
+#[test]
+fn co_resident_models_are_bitwise_identical_to_dedicated_engines() {
+    for policy in ["capacity", "dropless"] {
+        for dispatch in ["flat", "hierarchical"] {
+            let cfg = mm_cfg(2, policy, dispatch);
+            let params_a = Arc::new(ModelParams::generate(&cfg, 71));
+            let params_b = Arc::new(ModelParams::generate(&cfg, 72));
+            let inputs_a = zipf_inputs(&cfg, &params_a, 301);
+            let inputs_b = zipf_inputs(&cfg, &params_b, 302);
+
+            // Dedicated single-model engines (the defaults: max_models=1).
+            let solo_cfg = mm_cfg(1, policy, dispatch);
+            let solo_a = start(&solo_cfg, &params_a);
+            let ref_a = solo_a.submit(&inputs_a).unwrap().wait().unwrap();
+            solo_a.shutdown();
+            let solo_b = start(&solo_cfg, &params_b);
+            let ref_b = solo_b.submit(&inputs_b).unwrap().wait().unwrap();
+            solo_b.shutdown();
+
+            // One engine, both models resident.
+            let engine = start(&cfg, &params_a);
+            let hb = engine.register_model(params_b.clone()).unwrap();
+            assert_eq!(hb.id, 1);
+            assert!(!hb.deduped, "independent weights must not dedup");
+            // Interleave models across passes — the pass slots and heap
+            // bands must keep them fully separate.
+            for round in 0..2 {
+                let ra = engine
+                    .submit_pass(PassInput::for_model(inputs_a.clone(), 0))
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+                let rb = engine
+                    .submit_pass(PassInput::for_model(inputs_b.clone(), 1))
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+                assert_eq!(ra.metrics.model, 0);
+                assert_eq!(rb.metrics.model, 1);
+                assert_eq!(
+                    ra.outputs, ref_a.outputs,
+                    "model A diverged from its dedicated engine \
+                     ({policy}/{dispatch}, round {round})"
+                );
+                assert_eq!(
+                    rb.outputs, ref_b.outputs,
+                    "model B diverged from its dedicated engine \
+                     ({policy}/{dispatch}, round {round})"
+                );
+            }
+            let em = engine.metrics();
+            assert_eq!(em.launches, 1, "co-residency must not relaunch");
+            assert_eq!(em.model_registrations, 1);
+            engine.shutdown();
+        }
+    }
+}
+
+/// Fingerprint dedup: registering content-identical weights packs
+/// nothing (audited via the backend's pack counter), costs zero resident
+/// bytes, and the deduped model's outputs are bitwise the anchor's.
+#[test]
+fn dedup_registration_shares_the_packed_cache() {
+    let cfg = mm_cfg(2, "dropless", "flat");
+    let params = Arc::new(ModelParams::generate(&cfg, 73));
+    // Same content, separate allocation — the fingerprint must match.
+    let clone = Arc::new((*params).clone());
+    let native = Arc::new(NativeBackend::from_config(&cfg));
+    let backend: Arc<dyn ComputeBackend> = native.clone();
+    let engine =
+        MoeEngine::start(cfg.clone(), params.clone(), backend, TaskGraphMode::Fused).unwrap();
+    let packs_after_start = native.pack_count();
+    assert_eq!(packs_after_start, cfg.model.e as u64);
+    let bytes_before = engine.resident_bytes();
+
+    let h = engine.register_model(clone).unwrap();
+    assert!(h.deduped, "identical weights must fingerprint-dedup");
+    assert_eq!(h.resident_bytes, 0, "a dedup adds no resident bytes");
+    assert_eq!(
+        native.pack_count(),
+        packs_after_start,
+        "a dedup registration must not touch the packed cache"
+    );
+    assert_eq!(engine.resident_bytes(), bytes_before);
+
+    let inputs = zipf_inputs(&cfg, &params, 303);
+    let r0 = engine.submit_pass(PassInput::for_model(inputs.clone(), 0)).unwrap().wait().unwrap();
+    let r1 = engine.submit_pass(PassInput::for_model(inputs, 1)).unwrap().wait().unwrap();
+    assert_eq!(r0.outputs, r1.outputs, "dedup serves the same function");
+    engine.shutdown();
+}
+
+/// LoRA delta variant: packs nothing, costs only the delta bytes, and
+/// matches a dedicated engine running the *materialized* weights
+/// (W2 + A2·B2, b2 + db2) within f32 tolerance — while actually changing
+/// the function relative to its base.
+#[test]
+fn delta_variant_matches_materialized_dedicated_engine() {
+    let cfg = mm_cfg(2, "dropless", "flat");
+    let base = Arc::new(ModelParams::generate(&cfg, 74));
+    let delta = Arc::new(DeltaSet::generate(&cfg, 75, 2, 0.05));
+    let inputs = zipf_inputs(&cfg, &base, 304);
+
+    // Materialize base + delta into plain ModelParams: W2 += A2·B2
+    // (A2 is (D, r), B2 is (r, H)), b2 += db2. Gate unchanged, so the
+    // routing — and therefore the pass structure — is the base's.
+    let (h, d) = (cfg.model.h, cfg.model.d);
+    let mut mat = (*base).clone();
+    for (ex, de) in mat.experts.iter_mut().zip(&delta.experts) {
+        let r = delta.rank;
+        for i in 0..d {
+            for j in 0..h {
+                let mut acc = 0.0f32;
+                for k in 0..r {
+                    acc += de.a2[i * r + k] * de.b2[k * h + j];
+                }
+                ex.w2[i * h + j] += acc;
+            }
+        }
+        for (b, db) in ex.b2.iter_mut().zip(&de.db2) {
+            *b += db;
+        }
+    }
+    let solo = start(&mm_cfg(1, "dropless", "flat"), &Arc::new(mat));
+    let reference = solo.submit(&inputs).unwrap().wait().unwrap();
+    solo.shutdown();
+
+    let native = Arc::new(NativeBackend::from_config(&cfg));
+    let backend: Arc<dyn ComputeBackend> = native.clone();
+    let engine =
+        MoeEngine::start(cfg.clone(), base.clone(), backend, TaskGraphMode::Fused).unwrap();
+    let packs = native.pack_count();
+    let bytes_before = engine.resident_bytes();
+    let hl = engine.register_delta(0, delta.clone()).unwrap();
+    assert_eq!(hl.resident_bytes, delta.bytes());
+    assert_eq!(native.pack_count(), packs, "a delta variant never repacks");
+    assert_eq!(engine.resident_bytes(), bytes_before + delta.bytes());
+
+    let rb = engine.submit_pass(PassInput::for_model(inputs.clone(), 0)).unwrap().wait().unwrap();
+    let rl = engine.submit_pass(PassInput::for_model(inputs, 1)).unwrap().wait().unwrap();
+    let drift = rl
+        .outputs
+        .iter()
+        .zip(&reference.outputs)
+        .map(|(a, b)| max_abs_diff(a, b))
+        .fold(0.0f32, f32::max);
+    assert!(
+        drift <= 2e-4,
+        "delta epilogue drifted {drift} from materialized weights"
+    );
+    let base_delta_gap = rl
+        .outputs
+        .iter()
+        .zip(&rb.outputs)
+        .map(|(a, b)| max_abs_diff(a, b))
+        .fold(0.0f32, f32::max);
+    assert!(base_delta_gap > 1e-3, "the delta must actually change the function");
+    engine.shutdown();
+}
+
+/// Cross-model fault isolation: a transient fault injected into model
+/// B's pass retries transparently — and model A's outputs, before and
+/// after, are bitwise what a fault-free co-resident engine produces.
+#[test]
+fn fault_in_model_b_pass_retries_without_perturbing_model_a() {
+    let mk = |faulted: bool| {
+        let mut cfg = mm_cfg(2, "dropless", "flat");
+        if faulted {
+            // Every cross-rank transfer of pass epoch 2 fails; epoch 2
+            // will be model B's first pass below.
+            cfg.set("retry_limit", "2").unwrap();
+            cfg.set("fault_seed", "42").unwrap();
+            cfg.set("fault_transient_rate", "1.0").unwrap();
+            cfg.set("fault_transient_from", "2").unwrap();
+            cfg.set("fault_transient_until", "3").unwrap();
+            cfg.validate().unwrap();
+        }
+        cfg
+    };
+    let cfg = mk(false);
+    let params_a = Arc::new(ModelParams::generate(&cfg, 76));
+    let params_b = Arc::new(ModelParams::generate(&cfg, 77));
+    let inputs_a = zipf_inputs(&cfg, &params_a, 305);
+    let inputs_b = zipf_inputs(&cfg, &params_b, 306);
+
+    let run = |cfg: &Config| {
+        let engine = start(cfg, &params_a);
+        engine.register_model(params_b.clone()).unwrap();
+        // epoch 1: A — epoch 2: B (faulted in the faulted arm, retried
+        // under a fresh epoch) — then A again.
+        let a1 = engine.submit_pass(PassInput::for_model(inputs_a.clone(), 0)).unwrap().wait();
+        let b = engine.submit_pass(PassInput::for_model(inputs_b.clone(), 1)).unwrap().wait();
+        let a2 = engine.submit_pass(PassInput::for_model(inputs_a.clone(), 0)).unwrap().wait();
+        let em = engine.metrics();
+        engine.shutdown();
+        (a1.unwrap(), b.unwrap(), a2.unwrap(), em)
+    };
+    let (ca1, cb, ca2, cem) = run(&mk(false));
+    let (fa1, fb, fa2, fem) = run(&mk(true));
+    assert_eq!(cem.retries, 0, "clean arm must not retry");
+    assert!(fem.retries > 0, "faulted arm must have retried B's pass");
+    assert!(fem.faults_injected > 0, "fault plan must actually fire");
+    assert_eq!(fb.outputs, cb.outputs, "B's retried pass must be bitwise clean");
+    assert_eq!(fb.metrics.model, 1);
+    assert_eq!(fa1.outputs, ca1.outputs, "A before the fault must be untouched");
+    assert_eq!(fa2.outputs, ca2.outputs, "A after B's retry must be untouched");
+    assert_eq!(ca1.outputs, ca2.outputs, "A is deterministic across passes");
+}
+
+/// Registration/eviction lifecycle: capacity limits, dependency guards
+/// (anchor, delta base), slot reuse, and submit-after-evict refusal.
+#[test]
+fn registration_lifecycle_enforces_guards_and_reuses_slots() {
+    let cfg = mm_cfg(3, "dropless", "flat");
+    let params_a = Arc::new(ModelParams::generate(&cfg, 78));
+    let params_b = Arc::new(ModelParams::generate(&cfg, 79));
+    let params_c = Arc::new(ModelParams::generate(&cfg, 80));
+    let delta = Arc::new(DeltaSet::generate(&cfg, 81, 2, 0.05));
+    let engine = start(&cfg, &params_a);
+
+    let hb = engine.register_model(params_b.clone()).unwrap();
+    let hl = engine.register_delta(0, delta.clone()).unwrap();
+    assert_eq!((hb.id, hl.id), (1, 2));
+    // Capacity: 3 slots, all taken (anchor + 2).
+    assert!(engine.register_model(params_c.clone()).is_err(), "no free slot");
+    // Guards: the anchor is not evictable, and it is the delta's base.
+    assert!(engine.evict_model(0).is_err());
+    // Evict the delta, then its slot is reusable.
+    engine.evict_model(hl.id).unwrap();
+    assert!(
+        engine
+            .submit_pass(PassInput::for_model(zipf_inputs(&cfg, &params_a, 307), hl.id))
+            .is_err(),
+        "submitting to an evicted model must refuse"
+    );
+    let hc = engine.register_model(params_c).unwrap();
+    assert_eq!(hc.id, 2, "freed slot is reused");
+    assert_eq!(engine.resident_models(), vec![0, 1, 2]);
+    let em = engine.metrics();
+    assert_eq!(em.model_registrations, 3);
+    assert_eq!(em.model_evictions, 1);
+    engine.shutdown();
+}
+
+/// Per-model replication: a hot expert in model B replicates from B's
+/// own tracker without touching model A's placement — and outputs stay
+/// bitwise identical through the swap (the splitter contract, per model).
+#[test]
+fn rebalance_is_per_model_and_bitwise_transparent() {
+    let mut cfg = mm_cfg(2, "dropless", "flat");
+    cfg.set("replicate_top", "2").unwrap();
+    cfg.set("replicas", "2").unwrap();
+    cfg.set("replication_hysteresis", "1.2").unwrap();
+    cfg.set("ewma_alpha", "0.5").unwrap();
+    cfg.validate().unwrap();
+    let params_a = Arc::new(ModelParams::generate(&cfg, 82));
+    let params_b = Arc::new(ModelParams::generate(&cfg, 83));
+    let inputs_b = zipf_inputs(&cfg, &params_b, 308);
+
+    let engine = start(&cfg, &params_a);
+    engine.register_model(params_b.clone()).unwrap();
+    let placement_a_before = engine.placement();
+    // Warm only model B: its tracker sees Zipf-hot experts, A's sees
+    // nothing.
+    let mut before = None;
+    for _ in 0..3 {
+        let r =
+            engine.submit_pass(PassInput::for_model(inputs_b.clone(), 1)).unwrap().wait().unwrap();
+        before.get_or_insert(r.outputs);
+    }
+    let swapped = engine.rebalance().unwrap();
+    assert!(swapped, "Zipf-hot model B must trip a replication swap");
+    assert!(
+        engine.placement().same_locations(&placement_a_before),
+        "model A's placement must not move on B's load"
+    );
+    let after =
+        engine.submit_pass(PassInput::for_model(inputs_b.clone(), 1)).unwrap().wait().unwrap();
+    assert_eq!(
+        after.outputs,
+        before.unwrap(),
+        "B's outputs must be bitwise identical through its replication swap"
+    );
+    assert!(after.metrics.replica_hits() > 0, "replicas must actually serve");
+    engine.shutdown();
+}
